@@ -1,0 +1,60 @@
+//! Regenerate the paper's Figure 1: auto-vectorized (un-annotated
+//! baseline) vs autotuned kernel across input vector sizes, with the
+//! XLA reference as the vendor comparator column.
+//!
+//! Run: `cargo run --release --example fig1 [-- --quick] [-- --kernels axpy]`
+//! Writes `fig1.csv` with the plotted series.
+
+use portatune::coordinator::measure::MeasureConfig;
+use portatune::coordinator::search::Exhaustive;
+use portatune::coordinator::tuner::Tuner;
+use portatune::report::{Fig1Report, Fig1Row};
+use portatune::runtime::{Registry, Runtime};
+use portatune::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let kernels = args.get_or("kernels", "axpy,dot,triad");
+    let quick = args.get_bool("quick");
+    args.finish()?;
+
+    let runtime = Runtime::cpu()?;
+    let registry = Registry::open(runtime, "artifacts")?;
+    let mut tuner = Tuner::new(&registry);
+    if quick {
+        tuner.measure_cfg = MeasureConfig::quick();
+    }
+
+    let mut csv = String::new();
+    for kname in kernels.split(',').filter(|s| !s.is_empty()) {
+        let entry = registry
+            .manifest()
+            .kernel(kname)
+            .ok_or_else(|| anyhow::anyhow!("unknown kernel {kname}"))?
+            .clone();
+        let mut report = Fig1Report::new(kname);
+        for w in &entry.workloads {
+            let mut strategy = Exhaustive::new();
+            let outcome = tuner.tune(kname, &w.tag, &mut strategy, usize::MAX)?;
+            report.push(Fig1Row {
+                size: w.tag.clone(),
+                baseline_s: outcome.baseline_time(),
+                reference_s: outcome.reference.cost(),
+                tuned_s: outcome.best_time(),
+                best_id: outcome
+                    .best
+                    .as_ref()
+                    .map(|b| b.config_id.clone())
+                    .unwrap_or_else(|| "baseline".into()),
+                evaluations: outcome.evaluations(),
+            });
+            eprint!(".");
+        }
+        eprintln!();
+        println!("{}", report.render());
+        csv.push_str(&report.to_csv());
+    }
+    std::fs::write("fig1.csv", &csv)?;
+    println!("series written to fig1.csv");
+    Ok(())
+}

@@ -1,0 +1,172 @@
+//! End-to-end validation driver: a 2-D heat-diffusion (Jacobi) solver
+//! built on the autotuning system, proving all three layers compose:
+//!
+//!   1. tune the `jacobi` sweep artifact (L1 Pallas schedule space,
+//!      lowered AOT by L2, searched by the L3 coordinator),
+//!   2. persist the winner to the performance DB,
+//!   3. run the *deployed* solver — hundreds of sweeps through the PJRT
+//!      runtime with zero Python — with the un-annotated default
+//!      schedule vs the autotuned one, and report wall-clock + physics
+//!      (mean distance to the analytic steady state must shrink, and
+//!      both schedules must agree bitwise-tolerably).
+//!
+//! Run: `cargo run --release --example jacobi_e2e [-- --sweeps 500] [-- --quick]`
+
+use std::time::Instant;
+
+use portatune::coordinator::measure::MeasureConfig;
+use portatune::coordinator::perfdb::PerfDb;
+use portatune::coordinator::search::Exhaustive;
+use portatune::coordinator::tuner::Tuner;
+use portatune::runtime::registry::untupled_path;
+use portatune::runtime::{Registry, Runtime, TensorData};
+use portatune::util::cli::Args;
+use portatune::workload::stencil;
+
+const M: usize = 256;
+const N: usize = 256;
+
+/// Run `sweeps` Jacobi iterations from the hot-boundary start state.
+fn solve(
+    exe: &portatune::runtime::Executable,
+    sweeps: usize,
+) -> anyhow::Result<(Vec<f32>, f64)> {
+    let mut grid = stencil::hot_boundary_grid(M, N, 1.0);
+    let t0 = Instant::now();
+    for _ in 0..sweeps {
+        let out = exe.run(&[grid])?;
+        grid = TensorData::f32(vec![M + 2, N + 2], out);
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    Ok((grid.as_f32().unwrap().to_vec(), dt))
+}
+
+/// Device-resident solve: upload once, feed the output buffer back as
+/// the next input, download once at the end.  Requires the untupled
+/// (`.nt.hlo.txt`) artifact.  This is the optimized hot path recorded in
+/// EXPERIMENTS.md §Perf.
+fn solve_device_resident(
+    registry: &Registry,
+    exe: &portatune::runtime::Executable,
+    sweeps: usize,
+) -> anyhow::Result<(Vec<f32>, f64)> {
+    let grid = stencil::hot_boundary_grid(M, N, 1.0);
+    let t0 = Instant::now();
+    let mut buf = registry
+        .runtime()
+        .buffer_from_f32(grid.as_f32().unwrap(), &[M + 2, N + 2])?;
+    for _ in 0..sweeps {
+        buf = exe.run_buffers(&[&buf])?;
+    }
+    let lit = buf.to_literal_sync()?;
+    let out = lit.to_vec::<f32>()?;
+    let dt = t0.elapsed().as_secs_f64();
+    Ok((out, dt))
+}
+
+fn mean_dist(g: &[f32]) -> f64 {
+    let cols = N + 2;
+    let mut acc = 0.0f64;
+    for i in 1..=M {
+        for j in 1..=N {
+            acc += (g[i * cols + j] - 1.0).abs() as f64;
+        }
+    }
+    acc / (M * N) as f64
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let sweeps = args.get_parsed::<usize>("sweeps", 500)?;
+    let quick = args.get_bool("quick");
+    args.finish()?;
+
+    let runtime = Runtime::cpu()?;
+    let registry = Registry::open(runtime, "artifacts")?;
+
+    // --- Phase 1: tune ---------------------------------------------------
+    let mut tuner = Tuner::new(&registry);
+    if quick {
+        tuner.measure_cfg = MeasureConfig::quick();
+    }
+    let mut strategy = Exhaustive::new();
+    println!("[tune] searching the jacobi tile space (m256_n256)...");
+    let outcome = tuner.tune("jacobi", "m256_n256", &mut strategy, usize::MAX)?;
+    let best = outcome.best.as_ref().expect("a correct variant");
+    println!(
+        "[tune] best tile {} ({:.3} ms/sweep) vs default {:.3} ms/sweep -> {:.2}x",
+        best.config_id,
+        outcome.best_time() * 1e3,
+        outcome.baseline_time() * 1e3,
+        outcome.speedup()
+    );
+
+    // --- Phase 2: persist + deploy ---------------------------------------
+    let db_path = std::env::temp_dir().join("portatune-e2e-db.json");
+    let mut db = PerfDb::open(&db_path)?;
+    tuner.record(&mut db, &outcome);
+    db.save()?;
+    let deployed_path = tuner.deployed_artifact(&db, "jacobi", "m256_n256")?;
+    println!("[deploy] platform {} runs {}", outcome.platform.key(), deployed_path);
+
+    // --- Phase 3: run the solver end to end ------------------------------
+    let (_, wl) = registry.find("jacobi", "m256_n256")?;
+    let default_id = wl.default.clone().expect("default schedule");
+    let default_exe = registry.load(&wl.variant(&default_id).unwrap().path)?;
+    let tuned_exe = registry.load(&deployed_path)?;
+
+    println!("[solve] {sweeps} sweeps on a {M}x{N} grid, hot Dirichlet boundary");
+    let (g_default, t_default) = solve(&default_exe, sweeps)?;
+    let (g_tuned, t_tuned) = solve(&tuned_exe, sweeps)?;
+
+    // Optimized path: untupled artifact + device-resident iteration
+    // (no host<->device transfer per sweep).
+    let tuned_nt_exe = registry.load(&untupled_path(&deployed_path))?;
+    let (g_fast, t_fast) = solve_device_resident(&registry, &tuned_nt_exe, sweeps)?;
+
+    // Physics check: diffusion progressed toward the steady state.
+    let d_start = 1.0; // cold interior, all-hot steady state
+    let d_end = mean_dist(&g_tuned);
+    anyhow::ensure!(d_end < d_start * 0.9, "no diffusion progress: {d_end}");
+
+    // Semantics check: all three paths computed the same field.
+    let max_dev = g_default
+        .iter()
+        .zip(&g_tuned)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    anyhow::ensure!(max_dev < 1e-4, "schedules disagree by {max_dev}");
+    let max_dev_fast = g_tuned
+        .iter()
+        .zip(&g_fast)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    anyhow::ensure!(max_dev_fast < 1e-5, "device-resident path diverged by {max_dev_fast}");
+
+    println!("\n== end-to-end result ==");
+    println!(
+        "  default schedule ({default_id}): {:.3} s  ({:.3} ms/sweep)",
+        t_default,
+        t_default / sweeps as f64 * 1e3
+    );
+    println!(
+        "  autotuned        ({}): {:.3} s  ({:.3} ms/sweep)",
+        best.config_id,
+        t_tuned,
+        t_tuned / sweeps as f64 * 1e3
+    );
+    println!(
+        "  autotuned + device-resident loop:   {:.3} s  ({:.3} ms/sweep)",
+        t_fast,
+        t_fast / sweeps as f64 * 1e3
+    );
+    println!(
+        "  end-to-end speedup: {:.2}x tuned, {:.2}x tuned+resident   (outputs agree, max dev {max_dev:.1e})",
+        t_default / t_tuned,
+        t_default / t_fast
+    );
+    println!(
+        "  physics: mean distance to steady state {d_start:.3} -> {d_end:.3} after {sweeps} sweeps"
+    );
+    Ok(())
+}

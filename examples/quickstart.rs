@@ -1,0 +1,51 @@
+//! Quickstart: tune one kernel on one workload and print the paper's
+//! three series (baseline schedule / autotuned / XLA reference).
+//!
+//! Run: `cargo run --release --example quickstart` (after `make artifacts`).
+
+use portatune::coordinator::measure::MeasureConfig;
+use portatune::coordinator::search::Exhaustive;
+use portatune::coordinator::tuner::Tuner;
+use portatune::runtime::{Registry, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let runtime = Runtime::cpu()?;
+    println!("platform: {}", runtime.platform_name());
+    let registry = Registry::open(runtime, "artifacts")?;
+
+    let tuner = Tuner::new(&registry).with_measure_cfg(MeasureConfig::default());
+    let mut strategy = Exhaustive::new();
+    let outcome = tuner.tune("axpy", "n65536", &mut strategy, usize::MAX)?;
+
+    println!(
+        "kernel axpy/n65536 — {} variants evaluated with {}",
+        outcome.evaluations(),
+        outcome.strategy
+    );
+    println!(
+        "  baseline (default schedule b1024_u1): {:8.3} ms",
+        outcome.baseline_time() * 1e3
+    );
+    if let Some(best) = &outcome.best {
+        println!(
+            "  autotuned ({:>12}):               {:8.3} ms",
+            best.config_id,
+            best.cost * 1e3
+        );
+    }
+    println!(
+        "  xla reference:                         {:8.3} ms",
+        outcome.reference.cost() * 1e3
+    );
+    println!(
+        "\nspeedup over un-annotated baseline: {:.2}x ({:.1}% time reduction)",
+        outcome.speedup(),
+        outcome.time_reduction_pct()
+    );
+    println!(
+        "autotuned vs vendor-grade XLA path: {:.2}x of reference time",
+        outcome.vs_reference()
+    );
+    println!("\nplatform fingerprint: {}", outcome.platform.key());
+    Ok(())
+}

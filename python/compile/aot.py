@@ -1,0 +1,181 @@
+"""AOT driver: expand every kernel family's variant grid to HLO artifacts.
+
+This is the Orio "code transformation" stage of the paper's pipeline: for
+each (family, workload) it lowers
+
+  * one **baseline** artifact — the pure-jnp reference program, XLA's
+    default auto-vectorization (the paper's un-annotated `icc -O3` code),
+  * one artifact **per valid parameter point** — the Pallas-scheduled
+    specialization (the paper's pragma-expanded variants),
+
+into ``artifacts/<family>/<workload>/<variant>.hlo.txt``, plus a
+``manifest.json`` the rust coordinator consumes.  HLO *text* is the
+interchange format (xla_extension 0.5.1 rejects jax>=0.5 serialized
+protos).
+
+Incremental: an artifact whose file already exists is skipped unless
+``--force``; the manifest is always rewritten (it is cheap and must stay
+in sync with the variant grids defined in model.py).
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+        [--families axpy,dot] [--quick] [--force]
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+
+from . import model
+
+
+def _dtype_str(dt) -> str:
+    import jax.numpy as jnp
+
+    return {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32"}[jnp.dtype(dt)]
+
+
+def _workload_entry(fam: model.Family, dims, out_root: str, force: bool, quick: bool):
+    """Lower baseline + all variants for one workload; return manifest node."""
+    tag = fam.tag(dims)
+    wdir = os.path.join(out_root, fam.name, tag)
+    os.makedirs(wdir, exist_ok=True)
+
+    specs = fam.input_specs(dims)
+    shape_specs = [s for _, s in specs]
+
+    # Families whose artifacts are iterated output-as-next-input get a
+    # second, *untupled* lowering per variant (suffix .nt.hlo.txt): PJRT
+    # then yields a plain array buffer the rust solver feeds straight
+    # back without a host round-trip per step.
+    untupled = fam.name in ("jacobi",)
+
+    def emit(rel: str, make_fn, return_tuple: bool = True) -> str:
+        path = os.path.join(out_root, rel)
+        if force or not os.path.exists(path):
+            text = model.lower_to_hlo_text(make_fn(), shape_specs, return_tuple)
+            tmp = path + ".tmp"
+            with open(tmp, "w") as f:
+                f.write(text)
+            os.replace(tmp, path)
+        return rel
+
+    base_rel = emit(f"{fam.name}/{tag}/base.hlo.txt", lambda: fam.baseline(dims))
+    if untupled:
+        emit(
+            f"{fam.name}/{tag}/base.nt.hlo.txt",
+            lambda: fam.baseline(dims),
+            return_tuple=False,
+        )
+
+    default = fam.default_params(dims)
+    default_id = fam.variant_id(default)
+
+    grid = fam.grid(dims)
+    if quick:
+        # --quick keeps the extreme corners + one mid point per workload so
+        # tests exercise the full pipeline without the full expansion.
+        # The default (un-annotated) schedule always survives pruning.
+        keep = {0, len(grid) // 2, len(grid) - 1}
+        grid = [g for i, g in enumerate(grid) if i in keep or g == default]
+
+    variants = []
+    for params in grid:
+        vid = fam.variant_id(params)
+        rel = emit(
+            f"{fam.name}/{tag}/{vid}.hlo.txt",
+            lambda params=params: fam.tuned(dims, params),
+        )
+        if untupled:
+            emit(
+                f"{fam.name}/{tag}/{vid}.nt.hlo.txt",
+                lambda params=params: fam.tuned(dims, params),
+                return_tuple=False,
+            )
+        variants.append({"id": vid, "params": params, "path": rel})
+
+    # Compute the output spec by tracing the baseline's avals.
+    import jax
+
+    out_aval = jax.eval_shape(fam.baseline(dims), *shape_specs)[0]
+
+    return {
+        "tag": tag,
+        "dims": dims,
+        "inputs": [
+            {"name": name, "dtype": _dtype_str(s.dtype), "shape": list(s.shape)}
+            for name, s in specs
+        ],
+        "output": {
+            "dtype": _dtype_str(out_aval.dtype),
+            "shape": list(out_aval.shape),
+        },
+        "flops": fam.flops(dims),
+        "bytes": fam.bytes_moved(dims),
+        "baseline": base_rel,
+        "default": default_id,
+        "untupled": untupled,
+        "variants": variants,
+    }
+
+
+def generate(out_root: str, families=None, quick: bool = False, force: bool = False):
+    """Generate artifacts + manifest; returns the manifest dict."""
+    selected = families or sorted(model.FAMILIES)
+    manifest = {"version": 1, "generated_by": "compile.aot", "kernels": []}
+    t0 = time.time()
+    count = 0
+    for name in selected:
+        fam = model.get_family(name)
+        workloads = []
+        for dims in fam.workloads:
+            entry = _workload_entry(fam, dims, out_root, force, quick)
+            workloads.append(entry)
+            count += 1 + len(entry["variants"])
+            print(
+                f"[aot] {fam.name}/{entry['tag']}: "
+                f"{len(entry['variants'])} variants + baseline",
+                flush=True,
+            )
+        manifest["kernels"].append(
+            {
+                "name": fam.name,
+                "params": [
+                    {"name": p.name, "abbrev": p.abbrev, "values": list(p.values)}
+                    for p in fam.params
+                ],
+                "constraints": list(fam.constraints),
+                "workloads": workloads,
+            }
+        )
+    mpath = os.path.join(out_root, "manifest.json")
+    tmp = mpath + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    os.replace(tmp, mpath)
+    print(f"[aot] {count} artifacts in {time.time() - t0:.1f}s -> {mpath}")
+    return manifest
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact output root")
+    ap.add_argument(
+        "--families",
+        default="",
+        help="comma-separated family subset (default: all)",
+    )
+    ap.add_argument(
+        "--quick", action="store_true", help="corner variants only (for tests)"
+    )
+    ap.add_argument("--force", action="store_true", help="re-lower existing files")
+    args = ap.parse_args(argv)
+    fams = [f for f in args.families.split(",") if f] or None
+    os.makedirs(args.out, exist_ok=True)
+    generate(args.out, families=fams, quick=args.quick, force=args.force)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

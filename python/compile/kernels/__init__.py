@@ -1,0 +1,27 @@
+# L1: parameterized Pallas kernels (build-time only; lowered AOT to HLO).
+#
+# Every kernel family exposes
+#   make_<name>(params, dims) -> a jax-traceable callable over concrete
+#   shapes, whose hot loop is a pallas_call specialized to `params`.
+# The pure-jnp oracles live in ref.py; python/tests/ asserts allclose.
+#
+# Pallas is always invoked with interpret=True: the CPU PJRT plugin cannot
+# execute Mosaic custom-calls, and interpret mode lowers the *schedule*
+# (grid, blocking, unrolled straight-line bodies) into plain HLO, which
+# XLA:CPU then compiles to native code — so per-variant performance
+# differences measured by the rust tuner are real compiled-code
+# differences.
+
+from .vector import make_axpy, make_dot, make_triad
+from .stencil import make_stencil2d
+from .spmv import make_spmv_ell
+from .matmul import make_matmul
+
+__all__ = [
+    "make_axpy",
+    "make_dot",
+    "make_triad",
+    "make_stencil2d",
+    "make_spmv_ell",
+    "make_matmul",
+]

@@ -1,0 +1,52 @@
+"""Blocked GEMM kernel — the dense MXU-mapping study.
+
+Classic three-level tiling: grid (m/tm, n/tn, k/tk); the k axis is the
+innermost (sequential) grid dimension and the output block accumulates
+across k steps (the output index_map ignores the k index, so Pallas keeps
+the block resident — the TPU VMEM accumulation idiom replacing the GPU
+papers' shared-memory tiles).
+
+On a real TPU tm = tn = tk = 128 matches the MXU systolic array exactly;
+the tuner discovers the best CPU tiling empirically, which is the paper's
+point — the optimum is platform-dependent.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def make_matmul(m: int, n: int, k: int, tile_m: int, tile_n: int, tile_k: int):
+    """C = A @ B with A f32[m,k], B f32[k,n]."""
+    if m % tile_m != 0:
+        raise ValueError(f"m {m} not divisible by tile_m {tile_m}")
+    if n % tile_n != 0:
+        raise ValueError(f"n {n} not divisible by tile_n {tile_n}")
+    if k % tile_k != 0:
+        raise ValueError(f"k {k} not divisible by tile_k {tile_k}")
+    grid = (m // tile_m, n // tile_n, k // tile_k)
+
+    def kernel(a_ref, b_ref, o_ref):
+        @pl.when(pl.program_id(2) == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        o_ref[...] += jnp.dot(
+            a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+        )
+
+    a_spec = pl.BlockSpec((tile_m, tile_k), lambda i, j, kk: (i, kk))
+    b_spec = pl.BlockSpec((tile_k, tile_n), lambda i, j, kk: (kk, j))
+    o_spec = pl.BlockSpec((tile_m, tile_n), lambda i, j, kk: (i, j))
+
+    def run(a, b):
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[a_spec, b_spec],
+            out_specs=o_spec,
+            out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+            interpret=True,
+        )(a, b)
+
+    return run

@@ -1,0 +1,60 @@
+# Pure-jnp correctness oracles for every kernel family.
+#
+# These are the paper's "reference implementation": the un-annotated
+# program whose outputs every tuned variant must reproduce.  They are
+# also the "auto-vectorized -O3 baseline" — model.py lowers exactly these
+# expressions (no Pallas schedule imposed) as the baseline artifacts, so
+# correctness oracle and performance baseline are the same code, as in
+# the paper.
+
+import jax.numpy as jnp
+
+
+def axpy(a, x, y):
+    """y_out = a * x + y; a is f32[1] (broadcast scalar)."""
+    return a[0] * x + y
+
+
+def triad(a, b, x, y):
+    """z = a * x + b * y."""
+    return a[0] * x + b[0] * y
+
+
+def dot(x, y):
+    """Scalar dot product as f32[1] (rank-1 so tuple layouts match)."""
+    return jnp.sum(x * y).reshape((1,))
+
+
+def dot_partials(x, y, block_size):
+    """Per-block partial sums — oracle for the kernel's raw output."""
+    n = x.shape[0]
+    assert n % block_size == 0
+    prod = (x * y).reshape((n // block_size, block_size))
+    return jnp.sum(prod, axis=1)
+
+
+def stencil2d(grid):
+    """One interior Jacobi sweep over f32[m+2, n+2]; returns f32[m, n].
+
+    out[i, j] = 0.25 * (g[i-1,j] + g[i+1,j] + g[i,j-1] + g[i,j+1])
+    for the interior (1..m, 1..n) of the padded grid.
+    """
+    north = grid[:-2, 1:-1]
+    south = grid[2:, 1:-1]
+    west = grid[1:-1, :-2]
+    east = grid[1:-1, 2:]
+    return 0.25 * (north + south + west + east)
+
+
+def spmv_ell(values, col_idx, x):
+    """ELLPACK SpMV: y[i] = sum_j values[i, j] * x[col_idx[i, j]].
+
+    Padding entries carry value 0.0 (their column index is arbitrary but
+    in-range), so they contribute nothing.
+    """
+    return jnp.sum(values * x[col_idx], axis=1)
+
+
+def matmul(a, b):
+    """Dense C = A @ B in f32."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)

@@ -1,0 +1,61 @@
+"""ELLPACK SpMV kernel (the ref-[1] cuSPARSE/CUSP comparison workload).
+
+ELL stores a sparse matrix as two dense (nrows, k) arrays — values and
+column indices — padding short rows; its regular layout is what made it
+the GPU format of choice in the CUSP comparison, and the same regularity
+maps onto Pallas block tiles.
+
+The irregular gather ``x[col_idx]`` is performed in the L2 graph (XLA
+gather); the tuned region is the dense rowwise multiply-reduce over the
+gathered operand, blocked by
+
+  * ``row_block`` — rows per grid step (the VMEM-resident row tile), and
+  * ``col_chunk`` — the padded width is consumed in chunks of this size
+    with independent accumulators (ILP over the reduction, the analog of
+    the GPU papers' per-thread accumulate unrolling).
+
+Requires nrows % row_block == 0 and k % col_chunk == 0 (the L2 wrapper
+pads; the manifest declares the constraints for the tuner).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def make_spmv_ell(nrows: int, k: int, row_block: int, col_chunk: int):
+    """y[i] = sum_j values[i, j] * xg[i, j] over f32[nrows, k] operands."""
+    if nrows % row_block != 0:
+        raise ValueError(f"nrows {nrows} not divisible by row_block {row_block}")
+    if k % col_chunk != 0:
+        raise ValueError(f"k {k} not divisible by col_chunk {col_chunk}")
+    grid = (nrows // row_block,)
+    nchunks = k // col_chunk
+
+    def kernel(v_ref, xg_ref, o_ref):
+        if nchunks == 1:
+            o_ref[...] = jnp.sum(v_ref[...] * xg_ref[...], axis=1)
+            return
+        acc = []
+        for c in range(nchunks):
+            sl = pl.dslice(c * col_chunk, col_chunk)
+            acc.append(jnp.sum(v_ref[:, sl] * xg_ref[:, sl], axis=1))
+        total = acc[0]
+        for a in acc[1:]:
+            total = total + a
+        o_ref[...] = total
+
+    blk2 = pl.BlockSpec((row_block, k), lambda i: (i, 0))
+    out = pl.BlockSpec((row_block,), lambda i: (i,))
+
+    def run(values, x_gathered):
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[blk2, blk2],
+            out_specs=out,
+            out_shape=jax.ShapeDtypeStruct((nrows,), jnp.float32),
+            interpret=True,
+        )(values, x_gathered)
+
+    return run

@@ -1,0 +1,42 @@
+"""5-point Jacobi stencil kernel (the refs-[1][2] stencil workload).
+
+The GPU papers tiled the grid into threadblocks; the TPU/Pallas analog is
+a 2-D BlockSpec tile (``tile_m`` x ``tile_n``) — the HBM<->VMEM schedule.
+Halo handling: pallas BlockSpec blocks cannot overlap, so the L2 wrapper
+materializes the four shifted neighbor views (north/south/west/east) with
+XLA slices and the kernel consumes five aligned refs.  The shifts are
+identical work in the baseline, so the tuned-vs-baseline comparison is
+apples-to-apples on the weighted-sum hot loop.
+
+out = 0.25 * (north + south + west + east)   (interior Jacobi sweep)
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def make_stencil2d(m: int, n: int, tile_m: int, tile_n: int):
+    """Jacobi weighted sum over five aligned f32[m, n] operands."""
+    if m % tile_m != 0:
+        raise ValueError(f"m {m} not divisible by tile_m {tile_m}")
+    if n % tile_n != 0:
+        raise ValueError(f"n {n} not divisible by tile_n {tile_n}")
+    grid = (m // tile_m, n // tile_n)
+
+    def kernel(nn_ref, ss_ref, ww_ref, ee_ref, o_ref):
+        o_ref[...] = 0.25 * (nn_ref[...] + ss_ref[...] + ww_ref[...] + ee_ref[...])
+
+    blk = pl.BlockSpec((tile_m, tile_n), lambda i, j: (i, j))
+
+    def run(north, south, west, east):
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[blk, blk, blk, blk],
+            out_specs=blk,
+            out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+            interpret=True,
+        )(north, south, west, east)
+
+    return run

@@ -1,0 +1,148 @@
+"""SIMD vector-loop kernel family (the Figure-1 workload class).
+
+The paper's current-work experiment autotunes SIMD pragma variants of
+vectorizable loops under ICC.  Here the analogous schedule space is:
+
+  * ``block_size`` — elements processed per grid step (the Pallas
+    BlockSpec block; on TPU this is the VMEM-resident tile, on the
+    XLA:CPU backend we measure on it controls cache blocking and the
+    LLVM vectorizer's trip count).
+  * ``unroll`` — the block is split into ``unroll`` straight-line
+    sub-chunks inside the kernel body (register-level ILP; the analog of
+    ``#pragma unroll(k)``).
+
+All kernels require ``n % block_size == 0`` and
+``block_size % unroll == 0`` — the L2 wrapper (model.py) pads inputs so
+any logical size is accepted; the constraint set is still declared in the
+manifest so the rust tuner prunes invalid points.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _unrolled_map(body, block_size: int, unroll: int, o_ref, *in_refs):
+    """Apply ``body`` over ``unroll`` equal sub-chunks of the block.
+
+    ``body`` maps a tuple of input sub-arrays to the output sub-array.
+    With unroll == 1 this is a single full-block statement; otherwise the
+    python loop emits straight-line code for each chunk (distinct HLO per
+    unroll factor — exactly how a pragma-unrolled C loop differs).
+    """
+    if block_size % unroll != 0:
+        raise ValueError(f"block_size {block_size} not divisible by unroll {unroll}")
+    chunk = block_size // unroll
+    if unroll == 1:
+        o_ref[...] = body(*(r[...] for r in in_refs))
+        return
+    for u in range(unroll):
+        sl = pl.dslice(u * chunk, chunk)
+        o_ref[sl] = body(*(r[sl] for r in in_refs))
+
+
+def make_axpy(n: int, block_size: int, unroll: int):
+    """y_out = a * x + y over f32[n]; a is a rank-1 broadcast scalar."""
+    if n % block_size != 0:
+        raise ValueError(f"n {n} not divisible by block_size {block_size}")
+    if block_size % unroll != 0:
+        raise ValueError(f"block_size {block_size} not divisible by unroll {unroll}")
+    grid = (n // block_size,)
+
+    def kernel(a_ref, x_ref, y_ref, o_ref):
+        a = a_ref[0]
+        _unrolled_map(lambda x, y: a * x + y, block_size, unroll, o_ref, x_ref, y_ref)
+
+    blk = pl.BlockSpec((block_size,), lambda i: (i,))
+    scalar = pl.BlockSpec((1,), lambda i: (0,))
+
+    @functools.wraps(kernel)
+    def run(a, x, y):
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[scalar, blk, blk],
+            out_specs=blk,
+            out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+            interpret=True,
+        )(a, x, y)
+
+    return run
+
+
+def make_triad(n: int, block_size: int, unroll: int):
+    """z = a * x + b * y over f32[n] (STREAM triad with two scales)."""
+    if n % block_size != 0:
+        raise ValueError(f"n {n} not divisible by block_size {block_size}")
+    if block_size % unroll != 0:
+        raise ValueError(f"block_size {block_size} not divisible by unroll {unroll}")
+    grid = (n // block_size,)
+
+    def kernel(a_ref, b_ref, x_ref, y_ref, o_ref):
+        a = a_ref[0]
+        b = b_ref[0]
+        _unrolled_map(
+            lambda x, y: a * x + b * y, block_size, unroll, o_ref, x_ref, y_ref
+        )
+
+    blk = pl.BlockSpec((block_size,), lambda i: (i,))
+    scalar = pl.BlockSpec((1,), lambda i: (0,))
+
+    def run(a, b, x, y):
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[scalar, scalar, blk, blk],
+            out_specs=blk,
+            out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+            interpret=True,
+        )(a, b, x, y)
+
+    return run
+
+
+def make_dot(n: int, block_size: int, unroll: int):
+    """Blocked reduction: returns per-block partial sums f32[n//block_size].
+
+    The final (short) reduction over partials happens in the L2 graph —
+    the tuned region is the streaming multiply-accumulate.  ``unroll``
+    keeps independent accumulators per sub-chunk and combines them at the
+    end of the block (breaking the reduction dependence chain, the SIMD
+    reduction idiom the paper's pragma search targets).
+    """
+    if n % block_size != 0:
+        raise ValueError(f"n {n} not divisible by block_size {block_size}")
+    if block_size % unroll != 0:
+        raise ValueError(f"block_size {block_size} not divisible by unroll {unroll}")
+    nblocks = n // block_size
+    chunk = block_size // unroll
+
+    def kernel(x_ref, y_ref, o_ref):
+        if unroll == 1:
+            o_ref[0] = jnp.sum(x_ref[...] * y_ref[...])
+            return
+        acc = []
+        for u in range(unroll):
+            sl = pl.dslice(u * chunk, chunk)
+            acc.append(jnp.sum(x_ref[sl] * y_ref[sl]))
+        total = acc[0]
+        for a in acc[1:]:
+            total = total + a
+        o_ref[0] = total
+
+    blk = pl.BlockSpec((block_size,), lambda i: (i,))
+    out = pl.BlockSpec((1,), lambda i: (i,))
+
+    def run(x, y):
+        return pl.pallas_call(
+            kernel,
+            grid=(nblocks,),
+            in_specs=[blk, blk],
+            out_specs=out,
+            out_shape=jax.ShapeDtypeStruct((nblocks,), jnp.float32),
+            interpret=True,
+        )(x, y)
+
+    return run

@@ -1,0 +1,448 @@
+"""L2: the tunable compute graphs (kernel families).
+
+A *family* bundles everything the autotuner needs to know about one
+tunable computation:
+
+  * ``baseline(dims)``   — the pure-jnp reference program (the paper's
+    un-annotated, `icc -O3`-autovectorized analog),
+  * ``tuned(dims, params)`` — the same computation with its hot loop
+    routed through the parameterized Pallas kernel,
+  * the parameter space and constraint strings (the machine-readable
+    form of the paper's annotation directives),
+  * the AOT workload list (concrete shapes) and per-workload flops/bytes
+    for roofline reporting.
+
+Both callables return a 1-tuple (lowered with ``return_tuple=True``) so
+the rust runtime unwraps uniformly with ``to_tuple1``.
+
+The constraint grammar is shared with the rust evaluator
+(rust/src/coordinator/constraint.rs): integer arithmetic
+(+ - * / %), comparisons (== != <= >= < >), && and ||, parentheses;
+identifiers resolve to dims or params.  Python evaluates the same
+strings here (with &&/|| rewritten) so the two layers can never skew.
+"""
+
+import dataclasses
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    make_axpy,
+    make_dot,
+    make_matmul,
+    make_spmv_ell,
+    make_stencil2d,
+    make_triad,
+)
+from .kernels import ref
+
+f32 = jnp.float32
+i32 = jnp.int32
+
+
+@dataclasses.dataclass(frozen=True)
+class Param:
+    """One tuning knob: a name, its abbreviation (variant ids), domain."""
+
+    name: str
+    abbrev: str
+    values: Tuple[int, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Family:
+    """A tunable kernel family (see module docstring).
+
+    ``default_params(dims)`` is the **un-annotated schedule**: the tile /
+    unroll choice a programmer writes down without tuning (the paper's
+    pragma-free baseline).  ``baseline(dims)`` is the pure-jnp *reference
+    program* — the semantics oracle and the vendor-library-grade
+    comparator (XLA's own fused lowering; the cuSPARSE/CUSP analog of
+    the paper's refs [1][2]).
+    """
+
+    name: str
+    params: Tuple[Param, ...]
+    constraints: Tuple[str, ...]
+    workloads: Tuple[Dict[str, int], ...]
+    input_specs: Callable[[Dict[str, int]], List[Tuple[str, jax.ShapeDtypeStruct]]]
+    baseline: Callable[[Dict[str, int]], Callable]
+    tuned: Callable[[Dict[str, int], Dict[str, int]], Callable]
+    flops: Callable[[Dict[str, int]], int]
+    bytes_moved: Callable[[Dict[str, int]], int]
+    default_params: Callable[[Dict[str, int]], Dict[str, int]] = None
+
+    def tag(self, dims: Dict[str, int]) -> str:
+        return "_".join(f"{k}{v}" for k, v in sorted(dims.items()))
+
+    def variant_id(self, params: Dict[str, int]) -> str:
+        return "_".join(f"{p.abbrev}{params[p.name]}" for p in self.params)
+
+    def check(self, params: Dict[str, int], dims: Dict[str, int]) -> bool:
+        """Evaluate the constraint strings over dims+params (build-time)."""
+        env = dict(dims)
+        env.update(params)
+        for c in self.constraints:
+            expr = c.replace("&&", " and ").replace("||", " or ")
+            if not eval(expr, {"__builtins__": {}}, env):  # noqa: S307
+                return False
+        return True
+
+    def grid(self, dims: Dict[str, int]):
+        """All valid parameter points for a workload, in declaration order."""
+        points = [{}]
+        for p in self.params:
+            points = [{**pt, p.name: v} for pt in points for v in p.values]
+        return [pt for pt in points if self.check(pt, dims)]
+
+
+# ---------------------------------------------------------------------------
+# Vector family (Figure 1 workload class): axpy / triad / dot
+# ---------------------------------------------------------------------------
+
+_VEC_SIZES = (4096, 16384, 65536, 262144, 1048576, 4194304)
+_VEC_PARAMS = (
+    Param("block_size", "b", (256, 1024, 4096, 16384)),
+    Param("unroll", "u", (1, 2, 4)),
+)
+_VEC_CONSTRAINTS = ("block_size <= n", "block_size % unroll == 0")
+
+
+def _vec_dims(n: int) -> Dict[str, int]:
+    return {"n": n}
+
+
+def _axpy_specs(dims):
+    n = dims["n"]
+    return [
+        ("a", jax.ShapeDtypeStruct((1,), f32)),
+        ("x", jax.ShapeDtypeStruct((n,), f32)),
+        ("y", jax.ShapeDtypeStruct((n,), f32)),
+    ]
+
+
+def _axpy_baseline(dims):
+    return lambda a, x, y: (ref.axpy(a, x, y),)
+
+
+def _axpy_tuned(dims, params):
+    fn = make_axpy(dims["n"], params["block_size"], params["unroll"])
+    return lambda a, x, y: (fn(a, x, y),)
+
+
+AXPY = Family(
+    name="axpy",
+    params=_VEC_PARAMS,
+    constraints=_VEC_CONSTRAINTS,
+    workloads=tuple(_vec_dims(n) for n in _VEC_SIZES),
+    input_specs=_axpy_specs,
+    baseline=_axpy_baseline,
+    tuned=_axpy_tuned,
+    flops=lambda d: 2 * d["n"],
+    bytes_moved=lambda d: 12 * d["n"],
+    default_params=lambda d: {"block_size": 1024 if d["n"] >= 1024 else 256, "unroll": 1},
+)
+
+
+def _triad_specs(dims):
+    n = dims["n"]
+    return [
+        ("a", jax.ShapeDtypeStruct((1,), f32)),
+        ("b", jax.ShapeDtypeStruct((1,), f32)),
+        ("x", jax.ShapeDtypeStruct((n,), f32)),
+        ("y", jax.ShapeDtypeStruct((n,), f32)),
+    ]
+
+
+def _triad_baseline(dims):
+    return lambda a, b, x, y: (ref.triad(a, b, x, y),)
+
+
+def _triad_tuned(dims, params):
+    fn = make_triad(dims["n"], params["block_size"], params["unroll"])
+    return lambda a, b, x, y: (fn(a, b, x, y),)
+
+
+TRIAD = Family(
+    name="triad",
+    params=_VEC_PARAMS,
+    constraints=_VEC_CONSTRAINTS,
+    workloads=tuple(_vec_dims(n) for n in _VEC_SIZES),
+    input_specs=_triad_specs,
+    baseline=_triad_baseline,
+    tuned=_triad_tuned,
+    flops=lambda d: 3 * d["n"],
+    bytes_moved=lambda d: 16 * d["n"],
+    default_params=lambda d: {"block_size": 1024 if d["n"] >= 1024 else 256, "unroll": 1},
+)
+
+
+def _dot_specs(dims):
+    n = dims["n"]
+    return [
+        ("x", jax.ShapeDtypeStruct((n,), f32)),
+        ("y", jax.ShapeDtypeStruct((n,), f32)),
+    ]
+
+
+def _dot_baseline(dims):
+    return lambda x, y: (ref.dot(x, y),)
+
+
+def _dot_tuned(dims, params):
+    fn = make_dot(dims["n"], params["block_size"], params["unroll"])
+    # Final short reduction over per-block partials stays in the graph.
+    return lambda x, y: (jnp.sum(fn(x, y)).reshape((1,)),)
+
+
+DOT = Family(
+    name="dot",
+    params=_VEC_PARAMS,
+    constraints=_VEC_CONSTRAINTS,
+    workloads=tuple(_vec_dims(n) for n in _VEC_SIZES),
+    input_specs=_dot_specs,
+    baseline=_dot_baseline,
+    tuned=_dot_tuned,
+    flops=lambda d: 2 * d["n"],
+    bytes_moved=lambda d: 8 * d["n"],
+    default_params=lambda d: {"block_size": 1024 if d["n"] >= 1024 else 256, "unroll": 1},
+)
+
+
+# ---------------------------------------------------------------------------
+# Stencil family (refs [1][2] analog): 5-point Jacobi sweep
+# ---------------------------------------------------------------------------
+
+_STENCIL_PARAMS = (
+    Param("tile_m", "tm", (8, 16, 32, 64, 128)),
+    Param("tile_n", "tn", (32, 64, 128, 256)),
+)
+_STENCIL_CONSTRAINTS = (
+    "tile_m <= m",
+    "tile_n <= n",
+    "m % tile_m == 0",
+    "n % tile_n == 0",
+)
+_STENCIL_SIZES = ((128, 128), (256, 256), (512, 512), (1024, 1024))
+
+
+def _stencil_specs(dims):
+    m, n = dims["m"], dims["n"]
+    return [("grid", jax.ShapeDtypeStruct((m + 2, n + 2), f32))]
+
+
+def _shifts(g):
+    return g[:-2, 1:-1], g[2:, 1:-1], g[1:-1, :-2], g[1:-1, 2:]
+
+
+def _stencil_baseline(dims):
+    return lambda g: (ref.stencil2d(g),)
+
+
+def _stencil_tuned(dims, params):
+    fn = make_stencil2d(dims["m"], dims["n"], params["tile_m"], params["tile_n"])
+
+    def run(g):
+        nn, ss, ww, ee = _shifts(g)
+        return (fn(nn, ss, ww, ee),)
+
+    return run
+
+
+STENCIL2D = Family(
+    name="stencil2d",
+    params=_STENCIL_PARAMS,
+    constraints=_STENCIL_CONSTRAINTS,
+    workloads=tuple({"m": m, "n": n} for m, n in _STENCIL_SIZES),
+    input_specs=_stencil_specs,
+    baseline=_stencil_baseline,
+    tuned=_stencil_tuned,
+    flops=lambda d: 4 * d["m"] * d["n"],
+    bytes_moved=lambda d: 8 * d["m"] * d["n"],
+    default_params=lambda d: {"tile_m": 32, "tile_n": 32},
+)
+
+
+# ---------------------------------------------------------------------------
+# Jacobi step family — the end-to-end driver's inner loop.  Same schedule
+# space as stencil2d but the artifact maps padded grid -> padded grid
+# (boundary preserved), so the rust solver can iterate it directly.
+# ---------------------------------------------------------------------------
+
+
+def _jacobi_specs(dims):
+    m, n = dims["m"], dims["n"]
+    return [("grid", jax.ShapeDtypeStruct((m + 2, n + 2), f32))]
+
+
+def _jacobi_baseline(dims):
+    def run(g):
+        return (g.at[1:-1, 1:-1].set(ref.stencil2d(g)),)
+
+    return run
+
+
+def _jacobi_tuned(dims, params):
+    fn = make_stencil2d(dims["m"], dims["n"], params["tile_m"], params["tile_n"])
+
+    def run(g):
+        nn, ss, ww, ee = _shifts(g)
+        return (g.at[1:-1, 1:-1].set(fn(nn, ss, ww, ee)),)
+
+    return run
+
+
+JACOBI = Family(
+    name="jacobi",
+    params=_STENCIL_PARAMS,
+    constraints=_STENCIL_CONSTRAINTS,
+    workloads=({"m": 256, "n": 256},),
+    input_specs=_jacobi_specs,
+    baseline=_jacobi_baseline,
+    tuned=_jacobi_tuned,
+    flops=lambda d: 4 * d["m"] * d["n"],
+    bytes_moved=lambda d: 8 * (d["m"] + 2) * (d["n"] + 2),
+    default_params=lambda d: {"tile_m": 32, "tile_n": 32},
+)
+
+
+# ---------------------------------------------------------------------------
+# SpMV family (ref [1] analog): ELLPACK with graph-side gather
+# ---------------------------------------------------------------------------
+
+_SPMV_PARAMS = (
+    Param("row_block", "rb", (64, 256, 1024, 4096)),
+    Param("col_chunk", "cc", (8, 16, 32)),
+)
+_SPMV_CONSTRAINTS = (
+    "row_block <= nrows",
+    "col_chunk <= k",
+    "nrows % row_block == 0",
+    "k % col_chunk == 0",
+)
+_SPMV_SIZES = ((4096, 32), (16384, 32), (65536, 32))
+
+
+def _spmv_specs(dims):
+    r, k = dims["nrows"], dims["k"]
+    return [
+        ("values", jax.ShapeDtypeStruct((r, k), f32)),
+        ("col_idx", jax.ShapeDtypeStruct((r, k), i32)),
+        ("x", jax.ShapeDtypeStruct((r,), f32)),
+    ]
+
+
+def _spmv_baseline(dims):
+    return lambda v, ci, x: (ref.spmv_ell(v, ci, x),)
+
+
+def _spmv_tuned(dims, params):
+    fn = make_spmv_ell(
+        dims["nrows"], dims["k"], params["row_block"], params["col_chunk"]
+    )
+
+    def run(v, ci, x):
+        return (fn(v, x[ci]),)
+
+    return run
+
+
+SPMV_ELL = Family(
+    name="spmv_ell",
+    params=_SPMV_PARAMS,
+    constraints=_SPMV_CONSTRAINTS,
+    workloads=tuple({"nrows": r, "k": k} for r, k in _SPMV_SIZES),
+    input_specs=_spmv_specs,
+    baseline=_spmv_baseline,
+    tuned=_spmv_tuned,
+    flops=lambda d: 2 * d["nrows"] * d["k"],
+    bytes_moved=lambda d: 8 * d["nrows"] * d["k"] + 8 * d["nrows"],
+    default_params=lambda d: {"row_block": 256, "col_chunk": 32},
+)
+
+
+# ---------------------------------------------------------------------------
+# Matmul family: blocked GEMM (MXU-mapping study)
+# ---------------------------------------------------------------------------
+
+_MM_PARAMS = (
+    Param("tile_m", "tm", (32, 64, 128)),
+    Param("tile_n", "tn", (32, 64, 128)),
+    Param("tile_k", "tk", (32, 64, 128, 256)),
+)
+_MM_CONSTRAINTS = (
+    "tile_m <= m",
+    "tile_n <= n",
+    "tile_k <= k",
+    "m % tile_m == 0",
+    "n % tile_n == 0",
+    "k % tile_k == 0",
+)
+_MM_SIZES = ((256, 256, 256), (512, 512, 512))
+
+
+def _mm_specs(dims):
+    m, n, k = dims["m"], dims["n"], dims["k"]
+    return [
+        ("a", jax.ShapeDtypeStruct((m, k), f32)),
+        ("b", jax.ShapeDtypeStruct((k, n), f32)),
+    ]
+
+
+def _mm_baseline(dims):
+    return lambda a, b: (ref.matmul(a, b),)
+
+
+def _mm_tuned(dims, params):
+    fn = make_matmul(
+        dims["m"], dims["n"], dims["k"],
+        params["tile_m"], params["tile_n"], params["tile_k"],
+    )
+    return lambda a, b: (fn(a, b),)
+
+
+MATMUL = Family(
+    name="matmul",
+    params=_MM_PARAMS,
+    constraints=_MM_CONSTRAINTS,
+    workloads=tuple({"m": m, "n": n, "k": k} for m, n, k in _MM_SIZES),
+    input_specs=_mm_specs,
+    baseline=_mm_baseline,
+    tuned=_mm_tuned,
+    flops=lambda d: 2 * d["m"] * d["n"] * d["k"],
+    bytes_moved=lambda d: 4 * (d["m"] * d["k"] + d["k"] * d["n"] + d["m"] * d["n"]),
+    default_params=lambda d: {"tile_m": 64, "tile_n": 64, "tile_k": 64},
+)
+
+
+FAMILIES: Dict[str, Family] = {
+    f.name: f for f in (AXPY, TRIAD, DOT, STENCIL2D, JACOBI, SPMV_ELL, MATMUL)
+}
+
+
+def get_family(name: str) -> Family:
+    return FAMILIES[name]
+
+
+def lower_to_hlo_text(fn, specs: Sequence[jax.ShapeDtypeStruct], return_tuple: bool = True) -> str:
+    """Lower a jax callable to HLO *text* — the rust-side interchange.
+
+    Text, not ``HloModuleProto.serialize()``: jax >= 0.5 emits protos with
+    64-bit instruction ids which xla_extension 0.5.1 (the version the
+    published ``xla`` crate binds) rejects; the text parser reassigns ids.
+
+    ``return_tuple=False`` produces an *untupled* single-output entry:
+    PJRT then returns a plain array buffer that can be fed straight back
+    as the next call's input — the device-resident iteration path the
+    Jacobi solver uses (no host transfer per sweep).
+    """
+    from jax._src.lib import xla_client as xc
+
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple
+    )
+    return comp.as_hlo_text()

@@ -1,0 +1,18 @@
+# Shared pytest fixtures: deterministic RNG and hypothesis profile tuned
+# for CI (kernel lowering is the slow part, keep example counts modest).
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, settings
+
+settings.register_profile(
+    "kernels",
+    max_examples=12,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+settings.load_profile("kernels")
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0xA07)

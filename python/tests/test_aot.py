@@ -1,0 +1,105 @@
+# AOT pipeline tests: --quick generation into a tmpdir, manifest schema
+# validation, incremental skip behavior, and artifact HLO parseability.
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def quick_artifacts(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    manifest = aot.generate(out, families=["axpy", "jacobi"], quick=True)
+    return out, manifest
+
+
+def test_manifest_schema(quick_artifacts):
+    out, manifest = quick_artifacts
+    assert manifest["version"] == 1
+    names = [k["name"] for k in manifest["kernels"]]
+    assert names == ["axpy", "jacobi"]
+    for kern in manifest["kernels"]:
+        assert kern["params"], kern["name"]
+        for p in kern["params"]:
+            assert set(p) == {"name", "abbrev", "values"}
+        for w in kern["workloads"]:
+            assert set(w) >= {
+                "tag", "dims", "inputs", "output", "flops", "bytes",
+                "baseline", "variants",
+            }
+            assert w["flops"] > 0 and w["bytes"] > 0
+            for inp in w["inputs"]:
+                assert inp["dtype"] in ("f32", "i32")
+                assert all(d > 0 for d in inp["shape"])
+
+
+def test_artifact_files_exist_and_parse(quick_artifacts):
+    out, manifest = quick_artifacts
+    for kern in manifest["kernels"]:
+        for w in kern["workloads"]:
+            paths = [w["baseline"]] + [v["path"] for v in w["variants"]]
+            for rel in paths:
+                path = os.path.join(out, rel)
+                assert os.path.exists(path), rel
+                with open(path) as f:
+                    head = f.read(4096)
+                assert "HloModule" in head, rel
+
+
+def test_quick_mode_prunes_grid(quick_artifacts):
+    out, manifest = quick_artifacts
+    axpy = manifest["kernels"][0]
+    fam = model.get_family("axpy")
+    for w in axpy["workloads"]:
+        full = len(fam.grid(w["dims"]))
+        # 3 pruning corners + (possibly) the default schedule.
+        assert 1 <= len(w["variants"]) <= min(4, full)
+
+
+def test_default_variant_present(quick_artifacts):
+    # The un-annotated (default-schedule) variant must always have an
+    # artifact — it is Figure 1's baseline series.
+    out, manifest = quick_artifacts
+    for kern in manifest["kernels"]:
+        fam = model.get_family(kern["name"])
+        for w in kern["workloads"]:
+            assert w["default"] == fam.variant_id(fam.default_params(w["dims"]))
+            ids = [v["id"] for v in w["variants"]]
+            assert w["default"] in ids, (kern["name"], w["tag"])
+
+
+def test_default_params_valid_everywhere():
+    for fam in model.FAMILIES.values():
+        for dims in fam.workloads:
+            dp = fam.default_params(dims)
+            assert fam.check(dp, dims)
+            assert dp in fam.grid(dims)
+
+
+def test_variant_params_valid(quick_artifacts):
+    out, manifest = quick_artifacts
+    for kern in manifest["kernels"]:
+        fam = model.get_family(kern["name"])
+        for w in kern["workloads"]:
+            for v in w["variants"]:
+                assert fam.check(v["params"], w["dims"]), v
+                assert v["id"] == fam.variant_id(v["params"])
+
+
+def test_incremental_skips_existing(quick_artifacts, capsys):
+    out, manifest = quick_artifacts
+    rel = manifest["kernels"][0]["workloads"][0]["baseline"]
+    path = os.path.join(out, rel)
+    mtime = os.path.getmtime(path)
+    aot.generate(out, families=["axpy"], quick=True)  # no --force
+    assert os.path.getmtime(path) == mtime
+
+
+def test_manifest_json_round_trips(quick_artifacts):
+    out, manifest = quick_artifacts
+    with open(os.path.join(out, "manifest.json")) as f:
+        loaded = json.load(f)
+    assert loaded["kernels"][0]["name"] == "axpy"
+    assert loaded["version"] == manifest["version"]

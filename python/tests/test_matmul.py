@@ -1,0 +1,76 @@
+# Blocked GEMM kernel vs oracle: tile corners, k-axis accumulation
+# (multiple sequential k steps), identity cases, hypothesis sweep.
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from compile.kernels import make_matmul, ref
+
+TILES = [
+    (16, 16, 16),
+    (32, 16, 64),   # k split into multiple accumulation steps
+    (16, 32, 16),
+    (64, 64, 32),
+]
+
+
+def _ops(rng, m, n, k):
+    a = jnp.asarray(rng.standard_normal((m, k), dtype=np.float32))
+    b = jnp.asarray(rng.standard_normal((k, n), dtype=np.float32))
+    return a, b
+
+
+@pytest.mark.parametrize("tm,tn,tk", TILES)
+def test_matmul_matches_ref(rng, tm, tn, tk):
+    m, n, k = 64, 64, 128
+    a, b = _ops(rng, m, n, k)
+    out = make_matmul(m, n, k, tm, tn, tk)(a, b)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.matmul(a, b)), rtol=2e-4, atol=1e-3
+    )
+
+
+def test_identity_right(rng):
+    m = n = k = 32
+    a, _ = _ops(rng, m, n, k)
+    eye = jnp.eye(k, dtype=jnp.float32)
+    out = make_matmul(m, n, k, 16, 16, 16)(a, eye)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(a), rtol=1e-6)
+
+
+def test_k_accumulation_order_insensitive(rng):
+    # Same product with tk=k (single step) vs tk=k/4 (four accumulation
+    # steps) must agree to fp tolerance.
+    m, n, k = 32, 32, 64
+    a, b = _ops(rng, m, n, k)
+    one = make_matmul(m, n, k, 16, 16, 64)(a, b)
+    four = make_matmul(m, n, k, 16, 16, 16)(a, b)
+    np.testing.assert_allclose(np.asarray(one), np.asarray(four), rtol=1e-4, atol=1e-4)
+
+
+def test_invalid_tiles_rejected():
+    with pytest.raises(ValueError):
+        make_matmul(100, 64, 64, 16, 16, 16)
+    with pytest.raises(ValueError):
+        make_matmul(64, 100, 64, 16, 16, 16)
+    with pytest.raises(ValueError):
+        make_matmul(64, 64, 100, 16, 16, 16)
+
+
+@given(
+    bm=st.integers(1, 3),
+    bn=st.integers(1, 3),
+    bk=st.integers(1, 3),
+    tile=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_hypothesis(bm, bn, bk, tile, seed):
+    m, n, k = bm * tile, bn * tile, bk * tile
+    r = np.random.default_rng(seed)
+    a = jnp.asarray(r.standard_normal((m, k), dtype=np.float32))
+    b = jnp.asarray(r.standard_normal((k, n), dtype=np.float32))
+    out = make_matmul(m, n, k, tile, tile, tile)(a, b)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(a @ b), rtol=2e-4, atol=1e-3
+    )

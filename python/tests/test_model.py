@@ -1,0 +1,139 @@
+# L2 family tests: constraint evaluation, grid expansion, variant ids,
+# baseline<->tuned semantic equality for every family (small workloads),
+# and lowering to parseable HLO text.
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+ALL_FAMILIES = sorted(model.FAMILIES)
+
+
+def test_family_registry_complete():
+    assert ALL_FAMILIES == [
+        "axpy",
+        "dot",
+        "jacobi",
+        "matmul",
+        "spmv_ell",
+        "stencil2d",
+        "triad",
+    ]
+
+
+@pytest.mark.parametrize("name", ALL_FAMILIES)
+def test_grid_points_satisfy_constraints(name):
+    fam = model.get_family(name)
+    for dims in fam.workloads:
+        grid = fam.grid(dims)
+        assert grid, f"empty grid for {name}/{fam.tag(dims)}"
+        for pt in grid:
+            assert fam.check(pt, dims)
+        # ids are unique within a workload
+        ids = [fam.variant_id(pt) for pt in grid]
+        assert len(set(ids)) == len(ids)
+
+
+def test_constraint_rejects_oversized_block():
+    fam = model.get_family("axpy")
+    assert not fam.check({"block_size": 16384, "unroll": 1}, {"n": 4096})
+    assert fam.check({"block_size": 4096, "unroll": 4}, {"n": 4096})
+    assert not fam.check({"block_size": 256, "unroll": 3}, {"n": 4096})
+
+
+def test_tag_and_variant_id_format():
+    fam = model.get_family("matmul")
+    assert fam.tag({"m": 256, "n": 256, "k": 512}) == "k512_m256_n256"
+    vid = fam.variant_id({"tile_m": 32, "tile_n": 64, "tile_k": 128})
+    assert vid == "tm32_tn64_tk128"
+
+
+def _small_dims(name):
+    # Small shapes (not in the AOT workload list) for fast equality runs.
+    return {
+        "axpy": {"n": 2048},
+        "triad": {"n": 2048},
+        "dot": {"n": 2048},
+        "stencil2d": {"m": 32, "n": 64},
+        "jacobi": {"m": 32, "n": 64},
+        "spmv_ell": {"nrows": 256, "k": 16},
+        "matmul": {"m": 64, "n": 64, "k": 64},
+    }[name]
+
+
+def _random_inputs(fam, dims, seed=7):
+    r = np.random.default_rng(seed)
+    out = []
+    for name, spec in fam.input_specs(dims):
+        if spec.dtype == jnp.int32:
+            hi = dims.get("nrows", dims.get("n", 16))
+            out.append(jnp.asarray(r.integers(0, hi, spec.shape).astype(np.int32)))
+        else:
+            out.append(jnp.asarray(r.standard_normal(spec.shape, dtype=np.float32)))
+    return out
+
+
+@pytest.mark.parametrize("name", ALL_FAMILIES)
+def test_tuned_equals_baseline(name):
+    fam = model.get_family(name)
+    dims = _small_dims(name)
+    inputs = _random_inputs(fam, dims)
+    base = fam.baseline(dims)(*inputs)[0]
+    # Exercise two parameter points: first and last of the valid grid.
+    grid = fam.grid(dims)
+    for pt in (grid[0], grid[-1]):
+        tuned = fam.tuned(dims, pt)(*inputs)[0]
+        np.testing.assert_allclose(
+            np.asarray(tuned), np.asarray(base), rtol=2e-4, atol=1e-3
+        )
+
+
+@pytest.mark.parametrize("name", ALL_FAMILIES)
+def test_output_shape_consistency(name):
+    fam = model.get_family(name)
+    dims = _small_dims(name)
+    specs = [s for _, s in fam.input_specs(dims)]
+    base_shape = jax.eval_shape(fam.baseline(dims), *specs)[0]
+    pt = fam.grid(dims)[0]
+    tuned_shape = jax.eval_shape(fam.tuned(dims, pt), *specs)[0]
+    assert base_shape.shape == tuned_shape.shape
+    assert base_shape.dtype == tuned_shape.dtype
+
+
+def test_jacobi_preserves_boundary():
+    fam = model.get_family("jacobi")
+    dims = {"m": 32, "n": 64}
+    (g,) = _random_inputs(fam, dims)
+    out = fam.baseline(dims)(g)[0]
+    np.testing.assert_array_equal(np.asarray(out[0, :]), np.asarray(g[0, :]))
+    np.testing.assert_array_equal(np.asarray(out[-1, :]), np.asarray(g[-1, :]))
+    np.testing.assert_array_equal(np.asarray(out[:, 0]), np.asarray(g[:, 0]))
+    np.testing.assert_array_equal(np.asarray(out[:, -1]), np.asarray(g[:, -1]))
+    pt = fam.grid(dims)[0]
+    out_t = fam.tuned(dims, pt)(g)[0]
+    np.testing.assert_allclose(np.asarray(out_t), np.asarray(out), rtol=1e-6)
+
+
+def test_lower_to_hlo_text_is_parseable_hlo():
+    fam = model.get_family("axpy")
+    dims = {"n": 2048}
+    specs = [s for _, s in fam.input_specs(dims)]
+    text = model.lower_to_hlo_text(fam.baseline(dims), specs)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # tuple return convention for rust's to_tuple1
+    assert "tuple" in text.lower()
+
+
+def test_lowered_tuned_contains_loop_schedule():
+    # A blocked kernel with >1 grid steps must lower to a while loop (the
+    # schedule is in the artifact, which is the whole point of AOT
+    # variant generation).
+    fam = model.get_family("axpy")
+    dims = {"n": 2048}
+    specs = [s for _, s in fam.input_specs(dims)]
+    text = model.lower_to_hlo_text(fam.tuned(dims, {"block_size": 256, "unroll": 2}), specs)
+    assert "while" in text

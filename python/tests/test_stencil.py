@@ -1,0 +1,74 @@
+# Stencil kernel vs oracle: fixed tile corners + hypothesis sweep over
+# grid/tile shapes, plus analytic cases (constant field is a fixed point
+# of the interior Jacobi sweep).
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from compile.kernels import make_stencil2d, ref
+
+TILES = [(8, 32), (16, 16), (32, 64), (64, 128)]
+
+
+def _padded(rng, m, n):
+    return jnp.asarray(rng.standard_normal((m + 2, n + 2), dtype=np.float32))
+
+
+def _shifts(g):
+    return g[:-2, 1:-1], g[2:, 1:-1], g[1:-1, :-2], g[1:-1, 2:]
+
+
+@pytest.mark.parametrize("tm,tn", TILES)
+def test_stencil_matches_ref(rng, tm, tn):
+    m, n = 64, 128
+    g = _padded(rng, m, n)
+    out = make_stencil2d(m, n, tm, tn)(*_shifts(g))
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.stencil2d(g)), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_constant_field_fixed_point():
+    m = n = 32
+    g = jnp.full((m + 2, n + 2), 3.25, jnp.float32)
+    out = make_stencil2d(m, n, 8, 32)(*_shifts(g))
+    np.testing.assert_array_equal(np.asarray(out), np.full((m, n), 3.25, np.float32))
+
+
+def test_linear_field_preserved(rng):
+    # The 4-neighbor average of a linear field equals the field itself
+    # (harmonic), so out[i,j] == g[i+1,j+1] on the interior.
+    m = n = 16
+    ii = np.arange(m + 2, dtype=np.float32)[:, None]
+    jj = np.arange(n + 2, dtype=np.float32)[None, :]
+    g = jnp.asarray(2.0 * ii + 0.5 * jj)
+    out = make_stencil2d(m, n, 8, 8)(*_shifts(g))
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(g[1:-1, 1:-1]), rtol=1e-6
+    )
+
+
+def test_invalid_tile_rejected():
+    with pytest.raises(ValueError):
+        make_stencil2d(100, 128, 16, 32)  # m not divisible
+    with pytest.raises(ValueError):
+        make_stencil2d(128, 100, 16, 32)  # n not divisible
+
+
+@given(
+    bm=st.integers(1, 4),
+    bn=st.integers(1, 4),
+    tm=st.sampled_from([4, 8, 16]),
+    tn=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_stencil_hypothesis(bm, bn, tm, tn, seed):
+    m, n = bm * tm, bn * tn
+    g = jnp.asarray(
+        np.random.default_rng(seed).standard_normal((m + 2, n + 2), dtype=np.float32)
+    )
+    out = make_stencil2d(m, n, tm, tn)(*_shifts(g))
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.stencil2d(g)), rtol=1e-5, atol=1e-6
+    )

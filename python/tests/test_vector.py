@@ -1,0 +1,117 @@
+# Kernel-vs-oracle tests for the vector (Figure-1) family: axpy, triad,
+# dot.  Fixed-point checks on representative parameter points plus
+# hypothesis sweeps over (n, block_size, unroll).
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from compile.kernels import make_axpy, make_dot, make_triad, ref
+
+# (block_size, unroll) corners exercised by the fixed tests.
+POINTS = [(64, 1), (64, 4), (256, 2), (1024, 4), (4096, 1)]
+
+
+def _vecs(rng, n):
+    x = rng.standard_normal(n, dtype=np.float32)
+    y = rng.standard_normal(n, dtype=np.float32)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+@pytest.mark.parametrize("block,unroll", POINTS)
+def test_axpy_matches_ref(rng, block, unroll):
+    n = 4096
+    x, y = _vecs(rng, n)
+    a = jnp.array([1.7], jnp.float32)
+    out = make_axpy(n, block, unroll)(a, x, y)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.axpy(a, x, y)), rtol=1e-5, atol=1e-6
+    )
+
+
+@pytest.mark.parametrize("block,unroll", POINTS)
+def test_triad_matches_ref(rng, block, unroll):
+    n = 4096
+    x, y = _vecs(rng, n)
+    a = jnp.array([0.3], jnp.float32)
+    b = jnp.array([-2.5], jnp.float32)
+    out = make_triad(n, block, unroll)(a, b, x, y)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.triad(a, b, x, y)), rtol=1e-5, atol=1e-6
+    )
+
+
+@pytest.mark.parametrize("block,unroll", POINTS)
+def test_dot_partials_match_ref(rng, block, unroll):
+    n = 4096
+    x, y = _vecs(rng, n)
+    partials = make_dot(n, block, unroll)(x, y)
+    expect = ref.dot_partials(x, y, block)
+    np.testing.assert_allclose(np.asarray(partials), np.asarray(expect), rtol=1e-4)
+
+
+@pytest.mark.parametrize("block,unroll", POINTS)
+def test_dot_total_matches_ref(rng, block, unroll):
+    n = 4096
+    x, y = _vecs(rng, n)
+    total = jnp.sum(make_dot(n, block, unroll)(x, y))
+    np.testing.assert_allclose(
+        float(total), float(ref.dot(x, y)[0]), rtol=1e-4
+    )
+
+
+def test_axpy_identity_scale(rng):
+    # a == 0 must return y exactly (bitwise: 0*x+y).
+    n = 512
+    x, y = _vecs(rng, n)
+    out = make_axpy(n, 128, 2)(jnp.array([0.0], jnp.float32), x, y)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(y))
+
+
+def test_invalid_block_rejected():
+    with pytest.raises(ValueError):
+        make_axpy(1000, 256, 1)  # n not divisible by block
+    with pytest.raises(ValueError):
+        make_axpy(1024, 256, 3)  # block not divisible by unroll
+    with pytest.raises(ValueError):
+        make_dot(1024, 256, 3)
+    with pytest.raises(ValueError):
+        make_triad(100, 64, 1)
+
+
+# Hypothesis sweep: any (nblocks, block=chunk*unroll) combination agrees
+# with the oracle.  Sizes stay small — interpret-mode execution is the
+# cost, the schedule space is what we want covered.
+@given(
+    nblocks=st.integers(1, 6),
+    chunk=st.sampled_from([8, 16, 32, 64]),
+    unroll=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 2**16),
+)
+def test_axpy_hypothesis(nblocks, chunk, unroll, seed):
+    block = chunk * unroll
+    n = nblocks * block
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.standard_normal(n, dtype=np.float32))
+    y = jnp.asarray(r.standard_normal(n, dtype=np.float32))
+    a = jnp.array([float(r.standard_normal())], jnp.float32)
+    out = make_axpy(n, block, unroll)(a, x, y)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.axpy(a, x, y)), rtol=1e-5, atol=1e-6
+    )
+
+
+@given(
+    nblocks=st.integers(1, 6),
+    chunk=st.sampled_from([8, 32, 64]),
+    unroll=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 2**16),
+)
+def test_dot_hypothesis(nblocks, chunk, unroll, seed):
+    block = chunk * unroll
+    n = nblocks * block
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.standard_normal(n, dtype=np.float32))
+    y = jnp.asarray(r.standard_normal(n, dtype=np.float32))
+    total = float(jnp.sum(make_dot(n, block, unroll)(x, y)))
+    np.testing.assert_allclose(total, float(np.dot(x, y)), rtol=1e-3, atol=1e-4)

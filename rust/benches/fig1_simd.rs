@@ -1,0 +1,57 @@
+//! E1 / Figure 1: auto-vectorized (un-annotated baseline) vs autotuned
+//! SIMD-loop kernels across input vector sizes.  Regenerates the paper's
+//! figure (time series + speedup bars) for axpy, dot, and triad, with
+//! the XLA reference as the vendor-comparator column.
+//!
+//! Run: `cargo bench --bench fig1_simd` (BENCH_QUICK=1 for a smoke run).
+
+use portatune::coordinator::measure::MeasureConfig;
+use portatune::coordinator::search::Exhaustive;
+use portatune::coordinator::tuner::Tuner;
+use portatune::report::{Fig1Report, Fig1Row};
+use portatune::runtime::{Registry, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let runtime = Runtime::cpu()?;
+    let registry = Registry::open(runtime, "artifacts")?;
+    let mut tuner = Tuner::new(&registry);
+    tuner.measure_cfg = if quick {
+        MeasureConfig::quick()
+    } else {
+        MeasureConfig { warmup: 1, reps: 3, target_rel_spread: 0.5, max_reps: 4, outlier_k: 5.0 }
+    };
+
+    println!("experiment E1 (paper Figure 1) — SIMD vector kernels");
+    println!("baseline = un-annotated default schedule (b1024_u1); autotuned = best");
+    println!("of the pre-lowered variant space; xla-ref = pure-XLA lowering\n");
+
+    for kernel in ["axpy", "dot", "triad"] {
+        let entry = registry.manifest().kernel(kernel).unwrap().clone();
+        let mut report = Fig1Report::new(kernel);
+        for w in &entry.workloads {
+            let cap = if quick { 262144 } else { 1048576 };
+            if w.dims["n"] > cap {
+                continue;
+            }
+            let mut strategy = Exhaustive::new();
+            let outcome = tuner.tune(kernel, &w.tag, &mut strategy, usize::MAX)?;
+            report.push(Fig1Row {
+                size: w.tag.clone(),
+                baseline_s: outcome.baseline_time(),
+                reference_s: outcome.reference.cost(),
+                tuned_s: outcome.best_time(),
+                best_id: outcome
+                    .best
+                    .as_ref()
+                    .map(|b| b.config_id.clone())
+                    .unwrap_or_else(|| "baseline".into()),
+                evaluations: outcome.evaluations(),
+            });
+            eprint!(".");
+        }
+        eprintln!();
+        println!("{}", report.render());
+    }
+    Ok(())
+}

@@ -1,0 +1,87 @@
+//! A2: tuning-overhead amortization — the paper's core-hours economics.
+//!
+//! The intro's motivation: supercomputing allocations pay for every
+//! un-tuned run.  This bench measures (a) the one-time cost of tuning a
+//! workload (wall clock, including every XLA variant compilation) and
+//! (b) the per-run saving of the tuned schedule vs the un-annotated
+//! default, and reports the break-even run count — how many production
+//! runs repay the tuning investment.  With the perf DB the investment is
+//! paid once per platform, not once per user (see examples/portability).
+//!
+//! Run: `cargo bench --bench overhead` (BENCH_QUICK=1 to shrink).
+
+use std::time::Instant;
+
+use portatune::coordinator::measure::MeasureConfig;
+use portatune::coordinator::search::{Anneal, Exhaustive, SearchStrategy};
+use portatune::coordinator::tuner::Tuner;
+use portatune::report::Table;
+use portatune::runtime::{Registry, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let runtime = Runtime::cpu()?;
+    let registry = Registry::open(runtime, "artifacts")?;
+    let mut tuner = Tuner::new(&registry);
+    tuner.measure_cfg = if quick {
+        MeasureConfig::quick()
+    } else {
+        MeasureConfig { warmup: 1, reps: 3, target_rel_spread: 0.5, max_reps: 3, outlier_k: 5.0 }
+    };
+
+    let cases: &[(&str, &str)] = if quick {
+        &[("axpy", "n262144")]
+    } else {
+        &[("axpy", "n262144"), ("jacobi", "m256_n256"), ("spmv_ell", "k32_nrows16384")]
+    };
+
+    println!("experiment A2 — tuning-cost amortization (core-hours argument)");
+    println!("tuning cost includes every variant's XLA compilation + measurement\n");
+
+    let mut t = Table::new(&[
+        "workload", "strategy", "tune cost", "compiles", "default/run",
+        "tuned/run", "saving/run", "break-even runs",
+    ]);
+    for (kernel, tag) in cases {
+        for (sname, mut strategy) in [
+            ("exhaustive", Box::new(Exhaustive::new()) as Box<dyn SearchStrategy>),
+            ("anneal", Box::new(Anneal::new(11)) as Box<dyn SearchStrategy>),
+        ] {
+            // Cold-start: drop the compile cache so the tuning cost is
+            // honest (first tune on a fresh platform).
+            registry.clear_cache();
+            let compiles_before = registry.compile_count();
+            let t0 = Instant::now();
+            let budget = if sname == "anneal" { 8 } else { usize::MAX };
+            let outcome = tuner.tune(kernel, tag, strategy.as_mut(), budget)?;
+            let tune_cost = t0.elapsed().as_secs_f64();
+            let compiles = registry.compile_count() - compiles_before;
+
+            let default_run = outcome.baseline_time();
+            let tuned_run = outcome.best_time();
+            let saving = default_run - tuned_run;
+            let break_even = if saving > 0.0 {
+                format!("{:.0}", (tune_cost / saving).ceil())
+            } else {
+                "-".to_string()
+            };
+            t.row(vec![
+                format!("{kernel}/{tag}"),
+                sname.to_string(),
+                format!("{:.2} s", tune_cost),
+                compiles.to_string(),
+                format!("{:.3} ms", default_run * 1e3),
+                format!("{:.3} ms", tuned_run * 1e3),
+                format!("{:.3} ms", saving * 1e3),
+                break_even,
+            ]);
+            eprint!(".");
+        }
+    }
+    eprintln!();
+    print!("{}", t.render());
+    println!("\nbreak-even = tuning cost / per-run saving: a long-running solver");
+    println!("(thousands of kernel invocations per job) repays tuning within its");
+    println!("first job; the perf DB then amortizes it across the whole fleet.");
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! A1: search-strategy ablation (the Orio strategy set).
+//!
+//! All five strategies search the same real variant space (axpy on a
+//! 1M-element workload, 12 valid points; stencil2d 512^2, 20 points)
+//! under shrinking budgets.  Reported per (strategy, budget): best-found
+//! cost relative to the exhaustive optimum, and unique evaluations
+//! spent.  Expected shape: exhaustive is optimal by construction;
+//! anneal/GA/hillclimb reach within a few percent on ~1/3 of the
+//! budget; random needs more.  Measurements reuse the compile cache, so
+//! each variant is compiled once across the whole ablation.
+//!
+//! Run: `cargo bench --bench search_ablation` (BENCH_QUICK=1 to shrink).
+
+use portatune::coordinator::measure::MeasureConfig;
+use portatune::coordinator::search::{
+    Anneal, Exhaustive, Genetic, HillClimb, RandomSearch, SearchStrategy,
+};
+use portatune::coordinator::tuner::Tuner;
+use portatune::report::Table;
+use portatune::runtime::{Registry, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let runtime = Runtime::cpu()?;
+    let registry = Registry::open(runtime, "artifacts")?;
+    let mut tuner = Tuner::new(&registry);
+    tuner.measure_cfg = MeasureConfig::quick(); // schedule ranking, not absolutes
+
+    let cases: &[(&str, &str)] = if quick {
+        &[("axpy", "n16384")]
+    } else {
+        // Sizes chosen so even the slowest variant runs in milliseconds:
+        // the ablation needs many tune() calls and measures *rankings*,
+        // not absolute times.
+        &[("axpy", "n65536"), ("stencil2d", "m256_n256")]
+    };
+
+    println!("experiment A1 — search strategy ablation (Orio strategy set)");
+    println!("quality = best-found / exhaustive optimum (1.00 = optimal)\n");
+
+    for (kernel, tag) in cases {
+        // Ground truth via exhaustive.
+        let mut ex = Exhaustive::new();
+        let truth = tuner.tune(kernel, tag, &mut ex, usize::MAX)?;
+        let optimum = truth.best.as_ref().unwrap().cost;
+        let space = truth.evaluations();
+        println!(
+            "{kernel}/{tag}: {space} valid variants, optimum {:.3} ms ({})",
+            optimum * 1e3,
+            truth.best.as_ref().unwrap().config_id
+        );
+
+        let budgets = [space / 4, space / 3, space / 2, space];
+        let mut t = Table::new(&["strategy", "budget", "evals", "best", "quality"]);
+        for &budget in &budgets {
+            let budget = budget.max(2);
+            let strategies: Vec<Box<dyn SearchStrategy>> = vec![
+                Box::new(Exhaustive::new()),
+                Box::new(RandomSearch::new(7)),
+                Box::new(HillClimb::new(7)),
+                Box::new(Anneal::new(7)),
+                Box::new(Genetic::new(7)),
+            ];
+            for mut s in strategies {
+                let outcome = tuner.tune(kernel, tag, s.as_mut(), budget)?;
+                // Exclude the forced default eval from the budget view.
+                let best = outcome.best.as_ref().unwrap().cost;
+                t.row(vec![
+                    s.name().to_string(),
+                    budget.to_string(),
+                    outcome.evaluations().to_string(),
+                    format!("{:.3} ms", best * 1e3),
+                    format!("{:.2}", best / optimum),
+                ]);
+            }
+            eprint!(".");
+        }
+        eprintln!();
+        print!("{}", t.render());
+        println!();
+    }
+    println!("note: every strategy also gets the forced default-schedule");
+    println!("evaluation (Figure 1's baseline), so `evals` can be budget+1.");
+    Ok(())
+}

@@ -1,0 +1,90 @@
+//! E3 (ref [1] analog): ELLPACK SpMV autotuning.  The GPU paper beat
+//! cuSPARSE/CUSP with autotuned stencil-aware kernels; here the tuned
+//! row-block x col-chunk schedule is compared against the un-annotated
+//! default and XLA's own lowering of the same ELL computation.
+//!
+//! Run: `cargo bench --bench spmv` (BENCH_QUICK=1 for a smoke run).
+
+use portatune::coordinator::measure::MeasureConfig;
+use portatune::coordinator::search::Exhaustive;
+use portatune::coordinator::tuner::Tuner;
+use portatune::report::Table;
+use portatune::runtime::{Registry, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let runtime = Runtime::cpu()?;
+    let registry = Registry::open(runtime, "artifacts")?;
+    let mut tuner = Tuner::new(&registry);
+    tuner.measure_cfg = if quick {
+        MeasureConfig::quick()
+    } else {
+        MeasureConfig { warmup: 1, reps: 3, target_rel_spread: 0.5, max_reps: 4, outlier_k: 5.0 }
+    };
+
+    println!("experiment E3 — ELLPACK SpMV (banded matrices, k=32 padded width)");
+    println!("baseline = default schedule rb256_cc32\n");
+
+    let entry = registry.manifest().kernel("spmv_ell").unwrap().clone();
+    let mut t = Table::new(&[
+        "matrix", "baseline", "autotuned", "best", "speedup", "xla-ref", "vs-ref",
+        "GiB/s",
+    ]);
+    for w in &entry.workloads {
+        if quick && w.dims["nrows"] > 16384 {
+            continue;
+        }
+        let mut strategy = Exhaustive::new();
+        let outcome = tuner.tune("spmv_ell", &w.tag, &mut strategy, usize::MAX)?;
+        let best = outcome.best.as_ref().unwrap();
+        t.row(vec![
+            w.tag.clone(),
+            format!("{:.3} ms", outcome.baseline_time() * 1e3),
+            format!("{:.3} ms", outcome.best_time() * 1e3),
+            best.config_id.clone(),
+            format!("{:.2}x", outcome.speedup()),
+            format!("{:.3} ms", outcome.reference.cost() * 1e3),
+            format!("{:.2}", outcome.vs_reference()),
+            format!(
+                "{:.2}",
+                best.measurement.as_ref().map(|m| m.gibps(outcome.bytes)).unwrap_or(0.0)
+            ),
+        ]);
+        eprint!(".");
+    }
+    eprintln!();
+    print!("{}", t.render());
+
+    // Matmul rides along as the dense-kernel counterpart (MXU study).
+    println!("\ndense counterpart — blocked GEMM tile autotuning");
+    let entry = registry.manifest().kernel("matmul").unwrap().clone();
+    let mut t = Table::new(&[
+        "size", "baseline", "autotuned", "best tile", "speedup", "xla-ref",
+        "vs-ref", "GFLOP/s",
+    ]);
+    for w in &entry.workloads {
+        if quick && w.dims["m"] > 256 {
+            continue;
+        }
+        let mut strategy = Exhaustive::new();
+        let outcome = tuner.tune("matmul", &w.tag, &mut strategy, usize::MAX)?;
+        let best = outcome.best.as_ref().unwrap();
+        t.row(vec![
+            w.tag.clone(),
+            format!("{:.3} ms", outcome.baseline_time() * 1e3),
+            format!("{:.3} ms", outcome.best_time() * 1e3),
+            best.config_id.clone(),
+            format!("{:.2}x", outcome.speedup()),
+            format!("{:.3} ms", outcome.reference.cost() * 1e3),
+            format!("{:.2}", outcome.vs_reference()),
+            format!(
+                "{:.2}",
+                best.measurement.as_ref().map(|m| m.gflops(outcome.flops)).unwrap_or(0.0)
+            ),
+        ]);
+        eprint!(".");
+    }
+    eprintln!();
+    print!("{}", t.render());
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! E2 (ref [2] analog): stencil tile autotuning across grid sizes.
+//! The GPU paper tuned threadblock shapes for iterative stencil solvers;
+//! here the 2-D Pallas tile space plays that role.
+//!
+//! Run: `cargo bench --bench stencil` (BENCH_QUICK=1 for a smoke run).
+
+use portatune::coordinator::measure::MeasureConfig;
+use portatune::coordinator::search::Exhaustive;
+use portatune::coordinator::tuner::Tuner;
+use portatune::report::Table;
+use portatune::runtime::{Registry, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let runtime = Runtime::cpu()?;
+    let registry = Registry::open(runtime, "artifacts")?;
+    let mut tuner = Tuner::new(&registry);
+    tuner.measure_cfg = if quick {
+        MeasureConfig::quick()
+    } else {
+        MeasureConfig { warmup: 1, reps: 3, target_rel_spread: 0.5, max_reps: 4, outlier_k: 5.0 }
+    };
+
+    println!("experiment E2 — stencil2d (5-point Jacobi) tile autotuning");
+    println!("baseline = default tile tm32_tn32; 16-20 valid tiles per size\n");
+
+    let entry = registry.manifest().kernel("stencil2d").unwrap().clone();
+    let mut t = Table::new(&[
+        "grid", "baseline", "autotuned", "best tile", "speedup", "xla-ref",
+        "vs-ref", "evals", "GiB/s",
+    ]);
+    for w in &entry.workloads {
+        let cap = if quick { 256 } else { 512 };
+        if w.dims["m"] > cap {
+            // 1024^2 with 8-wide tiles hits the un-aliased-loop pathology
+            // (DESIGN.md §8): tunable via the CLI, skipped in the sweep.
+            continue;
+        }
+        let mut strategy = Exhaustive::new();
+        let outcome = tuner.tune("stencil2d", &w.tag, &mut strategy, usize::MAX)?;
+        let best = outcome.best.as_ref().unwrap();
+        t.row(vec![
+            w.tag.clone(),
+            format!("{:.3} ms", outcome.baseline_time() * 1e3),
+            format!("{:.3} ms", outcome.best_time() * 1e3),
+            best.config_id.clone(),
+            format!("{:.2}x", outcome.speedup()),
+            format!("{:.3} ms", outcome.reference.cost() * 1e3),
+            format!("{:.2}", outcome.vs_reference()),
+            outcome.evaluations().to_string(),
+            format!(
+                "{:.2}",
+                best.measurement.as_ref().map(|m| m.gibps(outcome.bytes)).unwrap_or(0.0)
+            ),
+        ]);
+        eprint!(".");
+    }
+    eprintln!();
+    print!("{}", t.render());
+    Ok(())
+}

@@ -1,0 +1,315 @@
+//! Orio-style annotation language.
+//!
+//! The paper's §2: "Tuning is accomplished by annotating existing code
+//! with performance directives in the form of source code pragmas."  The
+//! annotation does not change program semantics — it *describes the
+//! variant space* and how to search it.  We keep the same shape: an
+//! annotation block embedded in any text file (C, rust, python, .tune
+//! files — the parser only looks at `/*@ ... @*/` spans):
+//!
+//! ```text
+//! /*@ tune kernel=axpy workload=n65536
+//!     param block_size as b [256, 1024, 4096, 16384]
+//!     param unroll as u [1, 2, 4]
+//!     constraint block_size <= n
+//!     constraint block_size % unroll == 0
+//!     search anneal budget=20 seed=42
+//! @*/
+//! ```
+//!
+//! `as <abbrev>` is optional (defaults to the name's first letter); the
+//! `search` line is optional (defaults to exhaustive with unlimited
+//! budget).  Constraint expressions use the shared grammar of
+//! [`super::constraint`].
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::runtime::registry::ParamDef;
+
+use super::constraint::Expr;
+use super::spec::TuningSpec;
+
+/// A parsed `tune` annotation block.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Annotation {
+    pub kernel: String,
+    /// Optional workload tag the block binds to (`None` = any workload).
+    pub workload: Option<String>,
+    pub params: Vec<ParamDef>,
+    pub constraints: Vec<String>,
+    /// Requested search strategy name (exhaustive/random/hillclimb/anneal/genetic).
+    pub search: Option<String>,
+    /// Free-form `key=value` options from the search line (budget, seed...).
+    pub options: BTreeMap<String, String>,
+}
+
+/// Find all `/*@ ... @*/` spans in a source file (content between the
+/// markers, exclusive).
+pub fn extract_blocks(source: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut rest = source;
+    while let Some(start) = rest.find("/*@") {
+        let after = &rest[start + 3..];
+        match after.find("@*/") {
+            Some(end) => {
+                out.push(after[..end].to_string());
+                rest = &after[end + 3..];
+            }
+            None => break,
+        }
+    }
+    out
+}
+
+impl Annotation {
+    /// Parse one annotation block (the text between `/*@` and `@*/`).
+    pub fn parse(block: &str) -> Result<Annotation> {
+        let mut lines = block
+            .lines()
+            .map(str::trim)
+            .filter(|l| !l.is_empty() && !l.starts_with('#'));
+        let head = lines
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("empty annotation block"))?;
+        let head_rest = head
+            .strip_prefix("tune")
+            .ok_or_else(|| anyhow::anyhow!("annotation must start with 'tune', got: {head}"))?;
+        let mut kernel = None;
+        let mut workload = None;
+        for kv in head_rest.split_whitespace() {
+            let (k, v) = kv
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("bad tune header item: {kv}"))?;
+            match k {
+                "kernel" => kernel = Some(v.to_string()),
+                "workload" => workload = Some(v.to_string()),
+                other => return Err(anyhow::anyhow!("unknown tune header key: {other}")),
+            }
+        }
+        let kernel = kernel.ok_or_else(|| anyhow::anyhow!("tune header missing kernel="))?;
+
+        let mut params = Vec::new();
+        let mut constraints = Vec::new();
+        let mut search = None;
+        let mut options = BTreeMap::new();
+
+        for line in lines {
+            if let Some(rest) = line.strip_prefix("param ") {
+                params.push(parse_param(rest)?);
+            } else if let Some(rest) = line.strip_prefix("constraint ") {
+                let src = rest.trim().to_string();
+                // Validate the expression grammar eagerly.
+                Expr::parse(&src).map_err(|e| anyhow::anyhow!("constraint `{src}`: {e}"))?;
+                constraints.push(src);
+            } else if let Some(rest) = line.strip_prefix("search ") {
+                let mut items = rest.split_whitespace();
+                search = items.next().map(str::to_string);
+                for kv in items {
+                    let (k, v) = kv
+                        .split_once('=')
+                        .ok_or_else(|| anyhow::anyhow!("bad search option: {kv}"))?;
+                    options.insert(k.to_string(), v.to_string());
+                }
+            } else {
+                return Err(anyhow::anyhow!("unknown annotation line: {line}"));
+            }
+        }
+        if params.is_empty() {
+            return Err(anyhow::anyhow!("annotation declares no params"));
+        }
+        // Reject duplicate param names/abbrevs (ambiguous variant ids).
+        let mut names: Vec<&str> = params.iter().map(|p| p.name.as_str()).collect();
+        names.sort();
+        names.dedup();
+        if names.len() != params.len() {
+            return Err(anyhow::anyhow!("duplicate param names in annotation"));
+        }
+        let mut abbrevs: Vec<&str> = params.iter().map(|p| p.abbrev.as_str()).collect();
+        abbrevs.sort();
+        abbrevs.dedup();
+        if abbrevs.len() != params.len() {
+            return Err(anyhow::anyhow!(
+                "duplicate param abbreviations; disambiguate with `param <name> as <abbrev>`"
+            ));
+        }
+        Ok(Annotation { kernel, workload, params, constraints, search, options })
+    }
+
+    /// Build the searchable spec, supplying workload dims.
+    pub fn to_spec(&self, tag: &str, dims: BTreeMap<String, i64>) -> Result<TuningSpec> {
+        TuningSpec::new(
+            self.kernel.clone(),
+            tag,
+            self.params.clone(),
+            &self.constraints,
+            dims,
+        )
+    }
+
+    /// Canonical rendering (parse → render → parse is identity).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str("/*@ tune kernel=");
+        out.push_str(&self.kernel);
+        if let Some(w) = &self.workload {
+            out.push_str(" workload=");
+            out.push_str(w);
+        }
+        out.push('\n');
+        for p in &self.params {
+            let vals: Vec<String> = p.values.iter().map(|v| v.to_string()).collect();
+            out.push_str(&format!(
+                "    param {} as {} [{}]\n",
+                p.name,
+                p.abbrev,
+                vals.join(", ")
+            ));
+        }
+        for c in &self.constraints {
+            out.push_str(&format!("    constraint {c}\n"));
+        }
+        if let Some(s) = &self.search {
+            out.push_str(&format!("    search {s}"));
+            for (k, v) in &self.options {
+                out.push_str(&format!(" {k}={v}"));
+            }
+            out.push('\n');
+        }
+        out.push_str("@*/\n");
+        out
+    }
+}
+
+/// `block_size as b [256, 1024]` or `unroll [1,2,4]`.
+fn parse_param(rest: &str) -> Result<ParamDef> {
+    let open = rest
+        .find('[')
+        .ok_or_else(|| anyhow::anyhow!("param missing value list: {rest}"))?;
+    let close = rest
+        .rfind(']')
+        .filter(|&c| c > open)
+        .ok_or_else(|| anyhow::anyhow!("param missing ']': {rest}"))?;
+    let header = rest[..open].trim();
+    let values = rest[open + 1..close]
+        .split(',')
+        .map(|v| {
+            v.trim()
+                .parse::<i64>()
+                .map_err(|_| anyhow::anyhow!("bad param value `{}` in: {rest}", v.trim()))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    if values.is_empty() {
+        return Err(anyhow::anyhow!("param has empty domain: {rest}"));
+    }
+    let (name, abbrev) = match header.split_once(" as ") {
+        Some((n, a)) => (n.trim().to_string(), a.trim().to_string()),
+        None => {
+            let name = header.to_string();
+            if name.is_empty() || name.contains(char::is_whitespace) {
+                return Err(anyhow::anyhow!("bad param name: {header}"));
+            }
+            let abbrev = name.chars().take(1).collect();
+            (name, abbrev)
+        }
+    };
+    Ok(ParamDef { name, abbrev, values })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+        some C code here...
+        /*@ tune kernel=axpy workload=n65536
+            param block_size as b [256, 1024, 4096, 16384]
+            param unroll as u [1, 2, 4]
+            constraint block_size <= n
+            constraint block_size % unroll == 0
+            search anneal budget=20 seed=42
+        @*/
+        more code...
+    "#;
+
+    #[test]
+    fn extracts_blocks() {
+        let blocks = extract_blocks(SAMPLE);
+        assert_eq!(blocks.len(), 1);
+        assert!(blocks[0].contains("tune kernel=axpy"));
+        assert!(extract_blocks("no annotations").is_empty());
+        assert_eq!(extract_blocks("/*@ a @*/ x /*@ b @*/").len(), 2);
+        // Unterminated block ignored.
+        assert!(extract_blocks("/*@ dangling").is_empty());
+    }
+
+    #[test]
+    fn parses_full_block() {
+        let ann = Annotation::parse(&extract_blocks(SAMPLE)[0]).unwrap();
+        assert_eq!(ann.kernel, "axpy");
+        assert_eq!(ann.workload.as_deref(), Some("n65536"));
+        assert_eq!(ann.params.len(), 2);
+        assert_eq!(ann.params[0].name, "block_size");
+        assert_eq!(ann.params[0].abbrev, "b");
+        assert_eq!(ann.params[0].values, vec![256, 1024, 4096, 16384]);
+        assert_eq!(ann.constraints.len(), 2);
+        assert_eq!(ann.search.as_deref(), Some("anneal"));
+        assert_eq!(ann.options["budget"], "20");
+        assert_eq!(ann.options["seed"], "42");
+    }
+
+    #[test]
+    fn default_abbrev_is_first_letter() {
+        let ann = Annotation::parse("tune kernel=k\nparam unroll [1, 2]").unwrap();
+        assert_eq!(ann.params[0].abbrev, "u");
+    }
+
+    #[test]
+    fn duplicate_abbrevs_rejected() {
+        let block = "tune kernel=k\nparam tile_m [8]\nparam tile_n [8]";
+        let err = Annotation::parse(block).unwrap_err();
+        assert!(err.to_string().contains("abbrev"));
+        let ok = "tune kernel=k\nparam tile_m as tm [8]\nparam tile_n as tn [8]";
+        assert!(Annotation::parse(ok).is_ok());
+    }
+
+    #[test]
+    fn rejects_malformed_blocks() {
+        assert!(Annotation::parse("").is_err());
+        assert!(Annotation::parse("tune").is_err()); // no kernel
+        assert!(Annotation::parse("tune kernel=k").is_err()); // no params
+        assert!(Annotation::parse("tune kernel=k\nparam p []").is_err());
+        assert!(Annotation::parse("tune kernel=k\nparam p [1,x]").is_err());
+        assert!(Annotation::parse("tune kernel=k\nparam p [1]\nbogus line").is_err());
+        assert!(Annotation::parse("tune kernel=k\nparam p [1]\nconstraint p <").is_err());
+        assert!(Annotation::parse("tune bogus=1 kernel=k\nparam p [1]").is_err());
+    }
+
+    #[test]
+    fn to_spec_builds_searchable_space() {
+        let ann = Annotation::parse(&extract_blocks(SAMPLE)[0]).unwrap();
+        let dims = [("n".to_string(), 65536i64)].into_iter().collect();
+        let spec = ann.to_spec("n65536", dims).unwrap();
+        let all = spec.enumerate();
+        assert_eq!(all.len(), 12); // all blocks <= 65536, all unrolls divide
+        assert_eq!(spec.config_id(&all[0]), "b256_u1");
+    }
+
+    #[test]
+    fn render_round_trips() {
+        let ann = Annotation::parse(&extract_blocks(SAMPLE)[0]).unwrap();
+        let text = ann.render();
+        let blocks = extract_blocks(&text);
+        assert_eq!(blocks.len(), 1);
+        let re = Annotation::parse(&blocks[0]).unwrap();
+        assert_eq!(re, ann);
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let block = "tune kernel=k\n\n# a comment\nparam p [1, 2]\n";
+        let ann = Annotation::parse(block).unwrap();
+        assert_eq!(ann.params.len(), 1);
+    }
+}

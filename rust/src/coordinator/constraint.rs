@@ -1,0 +1,506 @@
+//! Constraint expression evaluator.
+//!
+//! The annotation language (and `aot.py`'s manifest) declares parameter
+//! constraints as strings like `"block_size % unroll == 0"` or
+//! `"tile_m <= m && tile_n <= n"`.  The grammar is shared with the python
+//! side (model.py rewrites `&&`/`||` to `and`/`or` and evaluates the same
+//! strings), so the two layers can never disagree about validity.
+//!
+//! Grammar (C-style precedence):
+//! ```text
+//! expr  := or
+//! or    := and ("||" and)*
+//! and   := cmp ("&&" cmp)*
+//! cmp   := sum (("=="|"!="|"<="|">="|"<"|">") sum)?
+//! sum   := term (("+"|"-") term)*
+//! term  := unary (("*"|"/"|"%") unary)*
+//! unary := ("-"|"!") unary | atom
+//! atom  := integer | identifier | "(" expr ")"
+//! ```
+//! Semantics: 64-bit integer arithmetic; comparisons and logic produce
+//! 0/1; division/modulo by zero and unknown identifiers are runtime
+//! errors (never panics).
+
+use std::collections::BTreeMap;
+
+/// Evaluation environment: dims and parameter values by name.
+pub type Env = BTreeMap<String, i64>;
+
+/// Errors from parsing or evaluating a constraint.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ConstraintError {
+    Parse { offset: usize, message: String },
+    UnknownIdent(String),
+    DivByZero,
+    Overflow,
+}
+
+impl std::fmt::Display for ConstraintError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConstraintError::Parse { offset, message } => {
+                write!(f, "constraint parse error at {offset}: {message}")
+            }
+            ConstraintError::UnknownIdent(id) => write!(f, "unknown identifier: {id}"),
+            ConstraintError::DivByZero => write!(f, "division by zero"),
+            ConstraintError::Overflow => write!(f, "integer overflow"),
+        }
+    }
+}
+
+impl std::error::Error for ConstraintError {}
+
+/// A parsed constraint expression (reusable across evaluations).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Expr {
+    Int(i64),
+    Ident(String),
+    Unary(UnaryOp, Box<Expr>),
+    Binary(BinOp, Box<Expr>, Box<Expr>),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UnaryOp {
+    Neg,
+    Not,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Mod,
+    Eq,
+    Ne,
+    Le,
+    Ge,
+    Lt,
+    Gt,
+    And,
+    Or,
+}
+
+impl Expr {
+    /// Parse an expression string.
+    pub fn parse(src: &str) -> Result<Expr, ConstraintError> {
+        let tokens = tokenize(src)?;
+        let mut p = TokParser { tokens: &tokens, pos: 0, src_len: src.len() };
+        let e = p.or_expr()?;
+        if p.pos != p.tokens.len() {
+            return Err(ConstraintError::Parse {
+                offset: p.tokens[p.pos].1,
+                message: "trailing tokens".into(),
+            });
+        }
+        Ok(e)
+    }
+
+    /// Evaluate to an integer (booleans are 0/1).
+    pub fn eval(&self, env: &Env) -> Result<i64, ConstraintError> {
+        match self {
+            Expr::Int(v) => Ok(*v),
+            Expr::Ident(name) => env
+                .get(name)
+                .copied()
+                .ok_or_else(|| ConstraintError::UnknownIdent(name.clone())),
+            Expr::Unary(op, e) => {
+                let v = e.eval(env)?;
+                Ok(match op {
+                    UnaryOp::Neg => v.checked_neg().ok_or(ConstraintError::Overflow)?,
+                    UnaryOp::Not => (v == 0) as i64,
+                })
+            }
+            Expr::Binary(op, a, b) => {
+                // Short-circuit logic ops.
+                match op {
+                    BinOp::And => {
+                        return Ok(if a.eval(env)? != 0 && b.eval(env)? != 0 { 1 } else { 0 })
+                    }
+                    BinOp::Or => {
+                        return Ok(if a.eval(env)? != 0 || b.eval(env)? != 0 { 1 } else { 0 })
+                    }
+                    _ => {}
+                }
+                let x = a.eval(env)?;
+                let y = b.eval(env)?;
+                Ok(match op {
+                    BinOp::Add => x.checked_add(y).ok_or(ConstraintError::Overflow)?,
+                    BinOp::Sub => x.checked_sub(y).ok_or(ConstraintError::Overflow)?,
+                    BinOp::Mul => x.checked_mul(y).ok_or(ConstraintError::Overflow)?,
+                    BinOp::Div => {
+                        if y == 0 {
+                            return Err(ConstraintError::DivByZero);
+                        }
+                        x.checked_div(y).ok_or(ConstraintError::Overflow)?
+                    }
+                    BinOp::Mod => {
+                        if y == 0 {
+                            return Err(ConstraintError::DivByZero);
+                        }
+                        x.checked_rem(y).ok_or(ConstraintError::Overflow)?
+                    }
+                    BinOp::Eq => (x == y) as i64,
+                    BinOp::Ne => (x != y) as i64,
+                    BinOp::Le => (x <= y) as i64,
+                    BinOp::Ge => (x >= y) as i64,
+                    BinOp::Lt => (x < y) as i64,
+                    BinOp::Gt => (x > y) as i64,
+                    BinOp::And | BinOp::Or => unreachable!(),
+                })
+            }
+        }
+    }
+
+    /// Evaluate as a boolean (non-zero is true).
+    pub fn eval_bool(&self, env: &Env) -> Result<bool, ConstraintError> {
+        Ok(self.eval(env)? != 0)
+    }
+
+    /// All identifiers referenced by the expression.
+    pub fn idents(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        self.collect_idents(&mut out);
+        out.sort();
+        out.dedup();
+        out
+    }
+
+    fn collect_idents(&self, out: &mut Vec<String>) {
+        match self {
+            Expr::Int(_) => {}
+            Expr::Ident(n) => out.push(n.clone()),
+            Expr::Unary(_, e) => e.collect_idents(out),
+            Expr::Binary(_, a, b) => {
+                a.collect_idents(out);
+                b.collect_idents(out);
+            }
+        }
+    }
+}
+
+/// One-shot convenience: parse and evaluate as bool.
+pub fn check(src: &str, env: &Env) -> Result<bool, ConstraintError> {
+    Expr::parse(src)?.eval_bool(env)
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Tok {
+    Int(i64),
+    Ident(String),
+    Op(&'static str),
+    LParen,
+    RParen,
+}
+
+fn tokenize(src: &str) -> Result<Vec<(Tok, usize)>, ConstraintError> {
+    let bytes = src.as_bytes();
+    let mut toks = Vec::new();
+    let mut i = 0;
+    while i < bytes.len() {
+        let b = bytes[i];
+        match b {
+            b' ' | b'\t' | b'\n' | b'\r' => i += 1,
+            b'(' => {
+                toks.push((Tok::LParen, i));
+                i += 1;
+            }
+            b')' => {
+                toks.push((Tok::RParen, i));
+                i += 1;
+            }
+            b'0'..=b'9' => {
+                let start = i;
+                while i < bytes.len() && bytes[i].is_ascii_digit() {
+                    i += 1;
+                }
+                let text = &src[start..i];
+                let v = text.parse::<i64>().map_err(|_| ConstraintError::Parse {
+                    offset: start,
+                    message: "integer too large".into(),
+                })?;
+                toks.push((Tok::Int(v), start));
+            }
+            b'a'..=b'z' | b'A'..=b'Z' | b'_' => {
+                let start = i;
+                while i < bytes.len()
+                    && (bytes[i].is_ascii_alphanumeric() || bytes[i] == b'_')
+                {
+                    i += 1;
+                }
+                toks.push((Tok::Ident(src[start..i].to_string()), start));
+            }
+            _ => {
+                // Two-char operators first.
+                let two = if i + 1 < bytes.len() { &src[i..i + 2] } else { "" };
+                let op2 = match two {
+                    "==" => Some("=="),
+                    "!=" => Some("!="),
+                    "<=" => Some("<="),
+                    ">=" => Some(">="),
+                    "&&" => Some("&&"),
+                    "||" => Some("||"),
+                    _ => None,
+                };
+                if let Some(op) = op2 {
+                    toks.push((Tok::Op(op), i));
+                    i += 2;
+                    continue;
+                }
+                let op1 = match b {
+                    b'+' => Some("+"),
+                    b'-' => Some("-"),
+                    b'*' => Some("*"),
+                    b'/' => Some("/"),
+                    b'%' => Some("%"),
+                    b'<' => Some("<"),
+                    b'>' => Some(">"),
+                    b'!' => Some("!"),
+                    _ => None,
+                };
+                match op1 {
+                    Some(op) => {
+                        toks.push((Tok::Op(op), i));
+                        i += 1;
+                    }
+                    None => {
+                        return Err(ConstraintError::Parse {
+                            offset: i,
+                            message: format!("unexpected character '{}'", b as char),
+                        })
+                    }
+                }
+            }
+        }
+    }
+    Ok(toks)
+}
+
+struct TokParser<'a> {
+    tokens: &'a [(Tok, usize)],
+    pos: usize,
+    src_len: usize,
+}
+
+impl<'a> TokParser<'a> {
+    fn err(&self, message: &str) -> ConstraintError {
+        let offset = self
+            .tokens
+            .get(self.pos)
+            .map(|(_, o)| *o)
+            .unwrap_or(self.src_len);
+        ConstraintError::Parse { offset, message: message.into() }
+    }
+
+    fn peek_op(&self) -> Option<&'static str> {
+        match self.tokens.get(self.pos) {
+            Some((Tok::Op(op), _)) => Some(op),
+            _ => None,
+        }
+    }
+
+    fn take_op(&mut self, ops: &[&'static str]) -> Option<&'static str> {
+        if let Some(op) = self.peek_op() {
+            if ops.contains(&op) {
+                self.pos += 1;
+                return Some(op);
+            }
+        }
+        None
+    }
+
+    fn or_expr(&mut self) -> Result<Expr, ConstraintError> {
+        let mut lhs = self.and_expr()?;
+        while self.take_op(&["||"]).is_some() {
+            let rhs = self.and_expr()?;
+            lhs = Expr::Binary(BinOp::Or, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn and_expr(&mut self) -> Result<Expr, ConstraintError> {
+        let mut lhs = self.cmp_expr()?;
+        while self.take_op(&["&&"]).is_some() {
+            let rhs = self.cmp_expr()?;
+            lhs = Expr::Binary(BinOp::And, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn cmp_expr(&mut self) -> Result<Expr, ConstraintError> {
+        let lhs = self.sum_expr()?;
+        if let Some(op) = self.take_op(&["==", "!=", "<=", ">=", "<", ">"]) {
+            let rhs = self.sum_expr()?;
+            let bop = match op {
+                "==" => BinOp::Eq,
+                "!=" => BinOp::Ne,
+                "<=" => BinOp::Le,
+                ">=" => BinOp::Ge,
+                "<" => BinOp::Lt,
+                ">" => BinOp::Gt,
+                _ => unreachable!(),
+            };
+            return Ok(Expr::Binary(bop, Box::new(lhs), Box::new(rhs)));
+        }
+        Ok(lhs)
+    }
+
+    fn sum_expr(&mut self) -> Result<Expr, ConstraintError> {
+        let mut lhs = self.term_expr()?;
+        while let Some(op) = self.take_op(&["+", "-"]) {
+            let rhs = self.term_expr()?;
+            let bop = if op == "+" { BinOp::Add } else { BinOp::Sub };
+            lhs = Expr::Binary(bop, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn term_expr(&mut self) -> Result<Expr, ConstraintError> {
+        let mut lhs = self.unary_expr()?;
+        while let Some(op) = self.take_op(&["*", "/", "%"]) {
+            let rhs = self.unary_expr()?;
+            let bop = match op {
+                "*" => BinOp::Mul,
+                "/" => BinOp::Div,
+                _ => BinOp::Mod,
+            };
+            lhs = Expr::Binary(bop, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn unary_expr(&mut self) -> Result<Expr, ConstraintError> {
+        if self.take_op(&["-"]).is_some() {
+            return Ok(Expr::Unary(UnaryOp::Neg, Box::new(self.unary_expr()?)));
+        }
+        if self.take_op(&["!"]).is_some() {
+            return Ok(Expr::Unary(UnaryOp::Not, Box::new(self.unary_expr()?)));
+        }
+        self.atom()
+    }
+
+    fn atom(&mut self) -> Result<Expr, ConstraintError> {
+        match self.tokens.get(self.pos) {
+            Some((Tok::Int(v), _)) => {
+                self.pos += 1;
+                Ok(Expr::Int(*v))
+            }
+            Some((Tok::Ident(name), _)) => {
+                self.pos += 1;
+                Ok(Expr::Ident(name.clone()))
+            }
+            Some((Tok::LParen, _)) => {
+                self.pos += 1;
+                let e = self.or_expr()?;
+                match self.tokens.get(self.pos) {
+                    Some((Tok::RParen, _)) => {
+                        self.pos += 1;
+                        Ok(e)
+                    }
+                    _ => Err(self.err("expected ')'")),
+                }
+            }
+            _ => Err(self.err("expected integer, identifier, or '('")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env(pairs: &[(&str, i64)]) -> Env {
+        pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    #[test]
+    fn arithmetic_precedence() {
+        let e = env(&[]);
+        assert_eq!(Expr::parse("2 + 3 * 4").unwrap().eval(&e).unwrap(), 14);
+        assert_eq!(Expr::parse("(2 + 3) * 4").unwrap().eval(&e).unwrap(), 20);
+        assert_eq!(Expr::parse("10 - 4 - 3").unwrap().eval(&e).unwrap(), 3);
+        assert_eq!(Expr::parse("17 % 5").unwrap().eval(&e).unwrap(), 2);
+        assert_eq!(Expr::parse("17 / 5").unwrap().eval(&e).unwrap(), 3);
+        assert_eq!(Expr::parse("-3 + 1").unwrap().eval(&e).unwrap(), -2);
+    }
+
+    #[test]
+    fn comparisons_and_logic() {
+        let e = env(&[("n", 4096), ("block_size", 1024), ("unroll", 4)]);
+        assert!(check("block_size <= n", &e).unwrap());
+        assert!(check("block_size % unroll == 0", &e).unwrap());
+        assert!(!check("block_size > n", &e).unwrap());
+        assert!(check("block_size <= n && unroll != 3", &e).unwrap());
+        assert!(check("block_size > n || unroll == 4", &e).unwrap());
+        assert!(check("!(block_size > n)", &e).unwrap());
+    }
+
+    #[test]
+    fn manifest_constraints_evaluate() {
+        // The exact strings aot.py writes.
+        let good = env(&[("n", 65536), ("block_size", 4096), ("unroll", 2)]);
+        let bad = env(&[("n", 4096), ("block_size", 16384), ("unroll", 2)]);
+        for c in ["block_size <= n", "block_size % unroll == 0"] {
+            assert!(check(c, &good).unwrap(), "{c}");
+        }
+        assert!(!check("block_size <= n", &bad).unwrap());
+    }
+
+    #[test]
+    fn unknown_identifier_errors() {
+        let e = env(&[]);
+        assert_eq!(
+            check("missing == 1", &e),
+            Err(ConstraintError::UnknownIdent("missing".into()))
+        );
+    }
+
+    #[test]
+    fn division_by_zero_errors() {
+        let e = env(&[("z", 0)]);
+        assert_eq!(check("1 / z == 0", &e), Err(ConstraintError::DivByZero));
+        assert_eq!(check("1 % z == 0", &e), Err(ConstraintError::DivByZero));
+    }
+
+    #[test]
+    fn overflow_errors_not_panics() {
+        let e = env(&[]);
+        let big = format!("{} * 2", i64::MAX);
+        assert_eq!(check(&big, &e), Err(ConstraintError::Overflow));
+        let neg = format!("-({}) - 2", i64::MAX);
+        assert!(matches!(check(&neg, &e), Err(ConstraintError::Overflow)));
+    }
+
+    #[test]
+    fn parse_errors_carry_offsets() {
+        match Expr::parse("1 + ") {
+            Err(ConstraintError::Parse { offset, .. }) => assert_eq!(offset, 4),
+            other => panic!("{other:?}"),
+        }
+        assert!(Expr::parse("").is_err());
+        assert!(Expr::parse("(1").is_err());
+        assert!(Expr::parse("1 @ 2").is_err());
+        assert!(Expr::parse("1 2").is_err());
+    }
+
+    #[test]
+    fn short_circuit_avoids_rhs_errors() {
+        let e = env(&[("z", 0)]);
+        // RHS divides by zero but LHS decides.
+        assert!(check("1 == 1 || 1 / z == 0", &e).unwrap());
+        assert!(!check("1 == 0 && 1 / z == 0", &e).unwrap());
+    }
+
+    #[test]
+    fn idents_collected_sorted_unique() {
+        let e = Expr::parse("a + b * a <= c && b > 0").unwrap();
+        assert_eq!(e.idents(), vec!["a".to_string(), "b".into(), "c".into()]);
+    }
+
+    #[test]
+    fn chained_comparison_is_rejected() {
+        // cmp is non-associative by design: "a < b < c" must not parse.
+        assert!(Expr::parse("1 < 2 < 3").is_err());
+    }
+}

@@ -1,0 +1,162 @@
+//! Measurement harness: the paper's "compiled and executed to obtain its
+//! performance metrics" stage.
+//!
+//! Protocol per variant: warmup executions (JIT caches, branch
+//! predictors, page faults), then timed repetitions of
+//! execute-and-materialize, with optional adaptive extension until the
+//! relative spread (MAD/median) falls under a threshold or a hard cap is
+//! reached.  Inputs are converted to literals ONCE, outside the timed
+//! region — only execution + output materialization is timed.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::runtime::{Executable, TensorData};
+use crate::util::stats::{reject_outliers, Summary};
+
+/// Harness parameters.
+#[derive(Debug, Clone)]
+pub struct MeasureConfig {
+    /// Untimed executions before sampling.
+    pub warmup: usize,
+    /// Initial number of timed repetitions.
+    pub reps: usize,
+    /// Extend sampling (doubling) until `rel_spread` <= this or `max_reps`.
+    pub target_rel_spread: f64,
+    /// Hard cap on total timed repetitions.
+    pub max_reps: usize,
+    /// MAD multiplier for one-sided outlier rejection (0 = keep all).
+    pub outlier_k: f64,
+}
+
+impl Default for MeasureConfig {
+    fn default() -> Self {
+        MeasureConfig {
+            warmup: 2,
+            reps: 7,
+            target_rel_spread: 0.10,
+            max_reps: 28,
+            outlier_k: 5.0,
+        }
+    }
+}
+
+impl MeasureConfig {
+    /// Fast profile for tests and smoke runs.
+    pub fn quick() -> MeasureConfig {
+        MeasureConfig {
+            warmup: 1,
+            reps: 3,
+            target_rel_spread: 1.0,
+            max_reps: 3,
+            outlier_k: 0.0,
+        }
+    }
+}
+
+/// A completed measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    /// Robust summary over (outlier-filtered) samples, seconds.
+    pub summary: Summary,
+    /// Raw samples in collection order, seconds.
+    pub samples: Vec<f64>,
+}
+
+impl Measurement {
+    /// The scalar the tuner optimizes.
+    pub fn cost(&self) -> f64 {
+        self.summary.median
+    }
+
+    /// Effective GFLOP/s given the workload's flop count.
+    pub fn gflops(&self, flops: u64) -> f64 {
+        flops as f64 / self.summary.median / 1e9
+    }
+
+    /// Effective GiB/s given the workload's bytes-moved estimate.
+    pub fn gibps(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.summary.median / (1024.0 * 1024.0 * 1024.0)
+    }
+}
+
+/// Measure one executable over fixed inputs.
+pub fn measure(
+    exe: &Executable,
+    inputs: &[TensorData],
+    cfg: &MeasureConfig,
+) -> Result<Measurement> {
+    // Literal conversion happens once, outside the timed region.
+    let literals = inputs
+        .iter()
+        .map(|t| t.to_literal())
+        .collect::<Result<Vec<_>>>()?;
+
+    for _ in 0..cfg.warmup {
+        exe.run_literals(&literals)?;
+    }
+
+    let mut samples = Vec::with_capacity(cfg.reps);
+    let mut quota = cfg.reps.max(1);
+    loop {
+        while samples.len() < quota {
+            let t0 = Instant::now();
+            let out = exe.run_literals(&literals)?;
+            let dt = t0.elapsed().as_secs_f64();
+            std::hint::black_box(&out);
+            samples.push(dt);
+        }
+        let summary = Summary::from_samples(&samples)
+            .ok_or_else(|| anyhow::anyhow!("degenerate timing sample"))?;
+        if summary.rel_spread() <= cfg.target_rel_spread || quota >= cfg.max_reps {
+            break;
+        }
+        quota = (quota * 2).min(cfg.max_reps);
+    }
+
+    let filtered = if cfg.outlier_k > 0.0 {
+        reject_outliers(&samples, cfg.outlier_k)
+    } else {
+        samples.clone()
+    };
+    let summary = Summary::from_samples(&filtered)
+        .ok_or_else(|| anyhow::anyhow!("degenerate timing sample"))?;
+    Ok(Measurement { summary, samples })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_sane() {
+        let c = MeasureConfig::default();
+        assert!(c.warmup >= 1);
+        assert!(c.reps >= 3);
+        assert!(c.max_reps >= c.reps);
+        assert!(c.target_rel_spread > 0.0);
+    }
+
+    #[test]
+    fn quick_config_is_cheap() {
+        let c = MeasureConfig::quick();
+        assert!(c.warmup <= 1);
+        assert!(c.max_reps <= 5);
+    }
+
+    #[test]
+    fn measurement_derivations() {
+        let samples = vec![2e-3, 1e-3, 3e-3];
+        let m = Measurement {
+            summary: Summary::from_samples(&samples).unwrap(),
+            samples,
+        };
+        assert_eq!(m.cost(), 2e-3);
+        // 2 GFLOP in 2ms = 1000 GFLOP/s.
+        assert!((m.gflops(2_000_000_000) - 1000.0).abs() < 1e-9);
+        // 2 GiB in 2 ms = 1000 GiB/s.
+        let gib = m.gibps(2 * 1024 * 1024 * 1024);
+        assert!((gib - 1000.0).abs() < 1e-9);
+    }
+}

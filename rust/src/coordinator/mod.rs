@@ -1,0 +1,18 @@
+//! The autotuning coordinator — the paper's system contribution.
+//!
+//! Pipeline (paper §2): annotation → variant space ([`spec`], parsed
+//! from [`annotation`] blocks or the AOT manifest) → empirical search
+//! ([`search`]) with compiled-variant measurement ([`measure`]) and
+//! reference-output gating ([`selection`]) → platform-keyed persistence
+//! ([`perfdb`], [`platform`]) → deployment.  [`tuner`] wires the stages
+//! together over the [`crate::runtime`] layer.
+
+pub mod annotation;
+pub mod constraint;
+pub mod measure;
+pub mod perfdb;
+pub mod platform;
+pub mod search;
+pub mod selection;
+pub mod spec;
+pub mod tuner;

@@ -1,0 +1,346 @@
+//! Persistent performance database — what makes tuning *sustainable*.
+//!
+//! Every completed tuning run records (platform key, kernel, workload) →
+//! best configuration + timings.  On a known platform the deployment
+//! path skips search entirely; on a new platform, entries from other
+//! platforms seed the search (warm start), which the portability
+//! experiment (A3) shows reaches near-optimum in a handful of
+//! evaluations.  The paper: "specialization of programs to platforms ...
+//! across various systems and system changes."
+//!
+//! Format: a single JSON document, written atomically (tmp + rename).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::spec::Config;
+use crate::util::json::{self, Json};
+
+/// One tuning record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DbEntry {
+    pub platform_key: String,
+    pub kernel: String,
+    pub tag: String,
+    pub best_params: Config,
+    pub best_config_id: String,
+    /// Median seconds of the winning variant.
+    pub best_time_s: f64,
+    /// Median seconds of the un-annotated default schedule (Figure 1's
+    /// baseline) on the same inputs.
+    pub baseline_time_s: f64,
+    /// Median seconds of the pure-XLA reference artifact.
+    pub reference_time_s: f64,
+    /// Unique (compile+measure) evaluations the search spent.
+    pub evaluations: u64,
+    /// Strategy name that produced this entry.
+    pub strategy: String,
+    /// Unix seconds when recorded.
+    pub recorded_at: u64,
+}
+
+impl DbEntry {
+    pub fn speedup(&self) -> f64 {
+        if self.best_time_s > 0.0 {
+            self.baseline_time_s / self.best_time_s
+        } else {
+            0.0
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("platform_key", json::s(&self.platform_key)),
+            ("kernel", json::s(&self.kernel)),
+            ("tag", json::s(&self.tag)),
+            (
+                "best_params",
+                Json::Obj(
+                    self.best_params
+                        .iter()
+                        .map(|(k, v)| (k.clone(), json::int(*v)))
+                        .collect(),
+                ),
+            ),
+            ("best_config_id", json::s(&self.best_config_id)),
+            ("best_time_s", json::num(self.best_time_s)),
+            ("baseline_time_s", json::num(self.baseline_time_s)),
+            ("reference_time_s", json::num(self.reference_time_s)),
+            ("evaluations", json::int(self.evaluations as i64)),
+            ("strategy", json::s(&self.strategy)),
+            ("recorded_at", json::int(self.recorded_at as i64)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<DbEntry> {
+        let gs = |k: &str| -> Result<String> {
+            v.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| anyhow::anyhow!("perfdb entry missing {k}"))
+        };
+        let gn = |k: &str| -> Result<f64> {
+            v.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("perfdb entry missing {k}"))
+        };
+        let params = v
+            .get("best_params")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow::anyhow!("perfdb entry missing best_params"))?
+            .iter()
+            .map(|(k, val)| {
+                val.as_i64()
+                    .map(|x| (k.clone(), x))
+                    .ok_or_else(|| anyhow::anyhow!("non-int param {k}"))
+            })
+            .collect::<Result<BTreeMap<_, _>>>()?;
+        Ok(DbEntry {
+            platform_key: gs("platform_key")?,
+            kernel: gs("kernel")?,
+            tag: gs("tag")?,
+            best_params: params,
+            best_config_id: gs("best_config_id")?,
+            best_time_s: gn("best_time_s")?,
+            baseline_time_s: gn("baseline_time_s")?,
+            reference_time_s: v.get("reference_time_s").and_then(Json::as_f64).unwrap_or(0.0),
+            evaluations: gn("evaluations")? as u64,
+            strategy: gs("strategy")?,
+            recorded_at: gn("recorded_at")? as u64,
+        })
+    }
+}
+
+/// The database: in-memory entries + a backing file.
+#[derive(Debug)]
+pub struct PerfDb {
+    path: PathBuf,
+    entries: Vec<DbEntry>,
+}
+
+impl PerfDb {
+    /// Open (or create-on-save) a DB at `path`.
+    pub fn open(path: impl AsRef<Path>) -> Result<PerfDb> {
+        let path = path.as_ref().to_path_buf();
+        let entries = if path.exists() {
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("reading perf DB {path:?}"))?;
+            Self::parse(&text)?
+        } else {
+            Vec::new()
+        };
+        Ok(PerfDb { path, entries })
+    }
+
+    fn parse(text: &str) -> Result<Vec<DbEntry>> {
+        let root = json::parse(text).context("parsing perf DB json")?;
+        let version = root.get("version").and_then(Json::as_i64).unwrap_or(0);
+        if version != 1 {
+            return Err(anyhow::anyhow!("unsupported perf DB version {version}"));
+        }
+        root.get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("perf DB missing entries"))?
+            .iter()
+            .map(DbEntry::from_json)
+            .collect()
+    }
+
+    /// Serialize the whole DB.
+    pub fn to_json_text(&self) -> String {
+        json::obj(vec![
+            ("version", json::int(1)),
+            ("entries", Json::Arr(self.entries.iter().map(DbEntry::to_json).collect())),
+        ])
+        .pretty()
+    }
+
+    /// Atomic save (tmp + rename).
+    pub fn save(&self) -> Result<()> {
+        if let Some(parent) = self.path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent).context("creating perf DB dir")?;
+            }
+        }
+        let tmp = self.path.with_extension("json.tmp");
+        std::fs::write(&tmp, self.to_json_text()).context("writing perf DB tmp")?;
+        std::fs::rename(&tmp, &self.path).context("renaming perf DB")?;
+        Ok(())
+    }
+
+    pub fn entries(&self) -> &[DbEntry] {
+        &self.entries
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Exact lookup: tuned result for this platform+kernel+workload.
+    pub fn lookup(&self, platform_key: &str, kernel: &str, tag: &str) -> Option<&DbEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.platform_key == platform_key && e.kernel == kernel && e.tag == tag)
+            .max_by_key(|e| e.recorded_at)
+    }
+
+    /// Insert or replace (same platform+kernel+tag keeps newest only).
+    pub fn record(&mut self, entry: DbEntry) {
+        self.entries.retain(|e| {
+            !(e.platform_key == entry.platform_key
+                && e.kernel == entry.kernel
+                && e.tag == entry.tag)
+        });
+        self.entries.push(entry);
+    }
+
+    /// Warm-start candidates for a kernel+workload on an *unknown*
+    /// platform: best configs recorded on other platforms (deduped,
+    /// best-speedup first), then same-kernel other-workload configs —
+    /// the portability transfer set.
+    pub fn warm_start(&self, kernel: &str, tag: &str, exclude_platform: &str) -> Vec<Config> {
+        let mut scored: Vec<(&DbEntry, u8)> = self
+            .entries
+            .iter()
+            .filter(|e| e.kernel == kernel && e.platform_key != exclude_platform)
+            .map(|e| (e, if e.tag == tag { 0u8 } else { 1u8 }))
+            .collect();
+        scored.sort_by(|(a, ra), (b, rb)| {
+            ra.cmp(rb).then(b.speedup().total_cmp(&a.speedup()))
+        });
+        let mut seen = std::collections::HashSet::new();
+        scored
+            .into_iter()
+            .filter(|(e, _)| seen.insert(e.best_config_id.clone()))
+            .map(|(e, _)| e.best_params.clone())
+            .collect()
+    }
+}
+
+/// Current unix time in seconds.
+pub fn unix_now() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(platform: &str, kernel: &str, tag: &str, id: &str, speedup: f64) -> DbEntry {
+        DbEntry {
+            platform_key: platform.into(),
+            kernel: kernel.into(),
+            tag: tag.into(),
+            best_params: [("block_size".to_string(), 1024i64)].into_iter().collect(),
+            best_config_id: id.into(),
+            best_time_s: 1e-3,
+            baseline_time_s: 1e-3 * speedup,
+            reference_time_s: 9e-4,
+            evaluations: 9,
+            strategy: "exhaustive".into(),
+            recorded_at: 1_700_000_000,
+        }
+    }
+
+    #[test]
+    fn record_and_lookup() {
+        let mut db = PerfDb { path: PathBuf::from("/tmp/unused.json"), entries: vec![] };
+        db.record(entry("p1", "axpy", "n4096", "b1024_u1", 1.3));
+        assert_eq!(db.len(), 1);
+        let e = db.lookup("p1", "axpy", "n4096").unwrap();
+        assert_eq!(e.best_config_id, "b1024_u1");
+        assert!(db.lookup("p2", "axpy", "n4096").is_none());
+        assert!(db.lookup("p1", "dot", "n4096").is_none());
+    }
+
+    #[test]
+    fn record_replaces_same_key() {
+        let mut db = PerfDb { path: PathBuf::from("/tmp/unused.json"), entries: vec![] };
+        db.record(entry("p1", "axpy", "n4096", "old", 1.1));
+        db.record(entry("p1", "axpy", "n4096", "new", 1.5));
+        assert_eq!(db.len(), 1);
+        assert_eq!(db.lookup("p1", "axpy", "n4096").unwrap().best_config_id, "new");
+    }
+
+    #[test]
+    fn speedup_math() {
+        let e = entry("p", "k", "t", "c", 2.0);
+        assert!((e.speedup() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let mut db = PerfDb { path: PathBuf::from("/tmp/unused.json"), entries: vec![] };
+        db.record(entry("p1", "axpy", "n4096", "b1024_u1", 1.3));
+        db.record(entry("p2", "dot", "n65536", "b256_u4", 2.1));
+        let text = db.to_json_text();
+        let parsed = PerfDb::parse(&text).unwrap();
+        assert_eq!(parsed, db.entries);
+    }
+
+    #[test]
+    fn save_and_reopen() {
+        let dir = std::env::temp_dir().join(format!("portatune-dbtest-{}", std::process::id()));
+        let path = dir.join("perfdb.json");
+        let mut db = PerfDb { path: path.clone(), entries: vec![] };
+        db.record(entry("p1", "axpy", "n4096", "b1024_u1", 1.3));
+        db.save().unwrap();
+        let re = PerfDb::open(&path).unwrap();
+        assert_eq!(re.entries(), db.entries());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn open_missing_is_empty() {
+        let db = PerfDb::open("/nonexistent/dir/perfdb.json");
+        // Missing file is fine (created on save) ...
+        assert!(db.unwrap().is_empty());
+    }
+
+    #[test]
+    fn open_corrupt_errors() {
+        let dir = std::env::temp_dir().join(format!("portatune-dbbad-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.json");
+        std::fs::write(&path, "{not json").unwrap();
+        assert!(PerfDb::open(&path).is_err());
+        std::fs::write(&path, r#"{"version": 7, "entries": []}"#).unwrap();
+        assert!(PerfDb::open(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn warm_start_prefers_same_tag_and_dedupes() {
+        let mut db = PerfDb { path: PathBuf::from("/tmp/unused.json"), entries: vec![] };
+        db.record(entry("p1", "axpy", "n4096", "b256_u1", 1.2));
+        db.record(entry("p2", "axpy", "n4096", "b1024_u4", 2.0));
+        db.record(entry("p3", "axpy", "n65536", "b1024_u4", 3.0)); // dup config id
+        db.record(entry("p4", "axpy", "n65536", "b4096_u2", 1.8));
+        db.record(entry("p5", "dot", "n4096", "b64_u1", 9.9)); // wrong kernel
+        let cands = db.warm_start("axpy", "n4096", "local");
+        // Same-tag entries first (b1024_u4 speedup 2.0 > b256_u1 1.2),
+        // then other tags, deduped by config id.
+        assert_eq!(cands.len(), 3);
+        assert!(db
+            .entries()
+            .iter()
+            .filter(|e| e.kernel == "axpy")
+            .count() >= 3);
+    }
+
+    #[test]
+    fn warm_start_excludes_own_platform() {
+        let mut db = PerfDb { path: PathBuf::from("/tmp/unused.json"), entries: vec![] };
+        db.record(entry("local", "axpy", "n4096", "b256_u1", 1.2));
+        assert!(db.warm_start("axpy", "n4096", "local").is_empty());
+    }
+}

@@ -1,0 +1,232 @@
+//! Platform fingerprinting — the "given hardware platform" the paper
+//! specializes code for.
+//!
+//! The fingerprint keys the performance database: a tuned configuration
+//! is only reused on a platform whose fingerprint matches, which is
+//! exactly the paper's performance-portability story (re-tune on new
+//! hardware, reuse on known hardware).  Sources: /proc/cpuinfo for the
+//! model and ISA feature flags, sysfs for cache geometry.  All fields
+//! degrade gracefully to "unknown" off-Linux.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// A platform's identity for tuning purposes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Fingerprint {
+    pub cpu_model: String,
+    pub num_cpus: usize,
+    /// SIMD ISA levels present (subset of sse2/sse4_2/avx/avx2/avx512f).
+    pub simd: Vec<String>,
+    /// L1d/L2/L3 sizes in KiB (0 = unknown).
+    pub cache_l1d_kb: u64,
+    pub cache_l2_kb: u64,
+    pub cache_l3_kb: u64,
+    pub os: String,
+}
+
+impl Fingerprint {
+    /// Detect the current host.
+    pub fn detect() -> Fingerprint {
+        Self::detect_from(Path::new("/proc/cpuinfo"), Path::new("/sys/devices/system/cpu"))
+    }
+
+    /// Detection with injectable roots (unit tests use fixture files).
+    pub fn detect_from(cpuinfo_path: &Path, sysfs_cpu: &Path) -> Fingerprint {
+        let cpuinfo = std::fs::read_to_string(cpuinfo_path).unwrap_or_default();
+        let cpu_model = cpuinfo
+            .lines()
+            .find(|l| l.starts_with("model name"))
+            .and_then(|l| l.split(':').nth(1))
+            .map(|s| s.trim().to_string())
+            .unwrap_or_else(|| "unknown".to_string());
+        let num_cpus = cpuinfo
+            .lines()
+            .filter(|l| l.starts_with("processor"))
+            .count()
+            .max(1);
+        let flags_line = cpuinfo
+            .lines()
+            .find(|l| l.starts_with("flags"))
+            .and_then(|l| l.split(':').nth(1))
+            .unwrap_or("");
+        let interesting = ["sse2", "sse4_2", "avx", "avx2", "avx512f", "fma", "neon"];
+        let flagset: std::collections::HashSet<&str> =
+            flags_line.split_whitespace().collect();
+        let simd = interesting
+            .iter()
+            .filter(|f| flagset.contains(**f))
+            .map(|f| f.to_string())
+            .collect();
+
+        let cache = |index: usize| -> u64 {
+            let p = sysfs_cpu.join(format!("cpu0/cache/index{index}/size"));
+            std::fs::read_to_string(p)
+                .ok()
+                .and_then(|s| parse_cache_size_kb(s.trim()))
+                .unwrap_or(0)
+        };
+        // index0=L1d, index1=L1i, index2=L2, index3=L3 on common layouts;
+        // verify level files when present.
+        let level_of = |index: usize| -> u64 {
+            let p = sysfs_cpu.join(format!("cpu0/cache/index{index}/level"));
+            std::fs::read_to_string(p)
+                .ok()
+                .and_then(|s| s.trim().parse().ok())
+                .unwrap_or(0)
+        };
+        let type_of = |index: usize| -> String {
+            let p = sysfs_cpu.join(format!("cpu0/cache/index{index}/type"));
+            std::fs::read_to_string(p)
+                .map(|s| s.trim().to_string())
+                .unwrap_or_default()
+        };
+        let mut l1d = 0;
+        let mut l2 = 0;
+        let mut l3 = 0;
+        for i in 0..6 {
+            match (level_of(i), type_of(i).as_str()) {
+                (1, "Data") => l1d = cache(i),
+                (2, _) => l2 = cache(i),
+                (3, _) => l3 = cache(i),
+                _ => {}
+            }
+        }
+
+        Fingerprint {
+            cpu_model,
+            num_cpus,
+            simd,
+            cache_l1d_kb: l1d,
+            cache_l2_kb: l2,
+            cache_l3_kb: l3,
+            os: std::env::consts::OS.to_string(),
+        }
+    }
+
+    /// Stable short key for the perf DB (model + ISA + cache geometry).
+    pub fn key(&self) -> String {
+        let mut material = String::new();
+        let _ = write!(
+            material,
+            "{}|{}|{}|{}|{}|{}",
+            self.cpu_model,
+            self.simd.join("+"),
+            self.cache_l1d_kb,
+            self.cache_l2_kb,
+            self.cache_l3_kb,
+            self.os,
+        );
+        format!("{}-{:016x}", sanitize(&self.cpu_model), fnv1a(&material))
+    }
+
+    /// Human-oriented description block.
+    pub fn describe(&self) -> String {
+        format!(
+            "cpu: {}\ncores: {}\nsimd: {}\ncaches: L1d={} KiB, L2={} KiB, L3={} KiB\nos: {}\nkey: {}",
+            self.cpu_model,
+            self.num_cpus,
+            if self.simd.is_empty() { "(none detected)".to_string() } else { self.simd.join(", ") },
+            self.cache_l1d_kb,
+            self.cache_l2_kb,
+            self.cache_l3_kb,
+            self.os,
+            self.key(),
+        )
+    }
+}
+
+fn sanitize(s: &str) -> String {
+    let mut out: String = s
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c.to_ascii_lowercase() } else { '-' })
+        .collect();
+    out.truncate(32);
+    while out.contains("--") {
+        out = out.replace("--", "-");
+    }
+    out.trim_matches('-').to_string()
+}
+
+fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Parse "32K" / "1024K" / "8M" → KiB.
+fn parse_cache_size_kb(s: &str) -> Option<u64> {
+    if let Some(num) = s.strip_suffix(['K', 'k']) {
+        num.trim().parse().ok()
+    } else if let Some(num) = s.strip_suffix(['M', 'm']) {
+        num.trim().parse::<u64>().ok().map(|m| m * 1024)
+    } else {
+        s.parse().ok().map(|b: u64| b / 1024)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_cache_sizes() {
+        assert_eq!(parse_cache_size_kb("32K"), Some(32));
+        assert_eq!(parse_cache_size_kb("8M"), Some(8192));
+        assert_eq!(parse_cache_size_kb("49152"), Some(48));
+        assert_eq!(parse_cache_size_kb("junk"), None);
+    }
+
+    #[test]
+    fn detect_never_panics_on_missing_paths() {
+        let fp = Fingerprint::detect_from(
+            Path::new("/nonexistent/cpuinfo"),
+            Path::new("/nonexistent/sys"),
+        );
+        assert_eq!(fp.cpu_model, "unknown");
+        assert_eq!(fp.num_cpus, 1);
+        assert!(!fp.key().is_empty());
+    }
+
+    #[test]
+    fn detect_real_host() {
+        let fp = Fingerprint::detect();
+        assert!(fp.num_cpus >= 1);
+        assert!(!fp.key().is_empty());
+        assert!(fp.describe().contains("cpu:"));
+    }
+
+    #[test]
+    fn key_is_stable_and_discriminating() {
+        let a = Fingerprint {
+            cpu_model: "Intel(R) Xeon(R) @ 2.10GHz".into(),
+            num_cpus: 4,
+            simd: vec!["avx".into(), "avx2".into()],
+            cache_l1d_kb: 32,
+            cache_l2_kb: 1024,
+            cache_l3_kb: 33792,
+            os: "linux".into(),
+        };
+        assert_eq!(a.key(), a.key());
+        let mut b = a.clone();
+        b.simd = vec!["avx".into()];
+        assert_ne!(a.key(), b.key());
+        let mut c = a.clone();
+        c.cache_l2_kb = 512;
+        assert_ne!(a.key(), c.key());
+        // num_cpus intentionally NOT in the key: the schedule space is
+        // single-core; core count doesn't change the optimum.
+        let mut d = a.clone();
+        d.num_cpus = 64;
+        assert_eq!(a.key(), d.key());
+    }
+
+    #[test]
+    fn sanitize_produces_clean_slugs() {
+        assert_eq!(sanitize("Intel(R) Xeon(R) @ 2.10GHz"), "intel-r-xeon-r-2-10ghz");
+        assert_eq!(sanitize("!!!"), "");
+    }
+}

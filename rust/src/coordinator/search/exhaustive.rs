@@ -1,0 +1,81 @@
+//! Exhaustive sweep: evaluate every valid configuration (or as many as
+//! the budget allows), in deterministic enumeration order.
+//!
+//! This is the ground-truth strategy — Figure 1's "autotuned" series is
+//! produced with it, and the ablation bench scores every other strategy
+//! against its optimum.
+
+use super::{Budget, SearchResult, SearchStrategy};
+use crate::coordinator::spec::{Config, TuningSpec};
+
+#[derive(Debug, Default, Clone)]
+pub struct Exhaustive;
+
+impl Exhaustive {
+    pub fn new() -> Exhaustive {
+        Exhaustive
+    }
+}
+
+impl SearchStrategy for Exhaustive {
+    fn name(&self) -> &'static str {
+        "exhaustive"
+    }
+
+    fn run(
+        &mut self,
+        spec: &TuningSpec,
+        budget: usize,
+        eval: &mut dyn FnMut(&Config) -> f64,
+    ) -> SearchResult {
+        let mut b = Budget::new(spec, budget, eval);
+        for config in spec.enumerate() {
+            if b.eval(&config).is_none() {
+                break;
+            }
+        }
+        b.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::*;
+    use super::*;
+
+    #[test]
+    fn finds_global_optimum() {
+        let mut s = Exhaustive::new();
+        let r = run_on_bowl(&mut s, usize::MAX);
+        let (best, cost) = r.best.unwrap();
+        assert_eq!(best["block_size"], 1024);
+        assert_eq!(best["unroll"], 4);
+        assert_eq!(cost, 1.0);
+    }
+
+    #[test]
+    fn covers_entire_valid_space() {
+        let spec = bowl_spec();
+        let mut s = Exhaustive::new();
+        let r = run_on_bowl(&mut s, usize::MAX);
+        assert_eq!(r.evaluations(), spec.enumerate().len());
+    }
+
+    #[test]
+    fn respects_budget() {
+        let mut s = Exhaustive::new();
+        let r = run_on_bowl(&mut s, 5);
+        assert_eq!(r.evaluations(), 5);
+    }
+
+    #[test]
+    fn deterministic_history() {
+        let mut s1 = Exhaustive::new();
+        let mut s2 = Exhaustive::new();
+        let r1 = run_on_bowl(&mut s1, 10);
+        let r2 = run_on_bowl(&mut s2, 10);
+        let ids1: Vec<_> = r1.history.iter().map(|e| format!("{:?}", e.config)).collect();
+        let ids2: Vec<_> = r2.history.iter().map(|e| format!("{:?}", e.config)).collect();
+        assert_eq!(ids1, ids2);
+    }
+}

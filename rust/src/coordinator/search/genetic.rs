@@ -1,0 +1,197 @@
+//! Genetic algorithm over parameter index vectors.
+//!
+//! Individuals are per-parameter domain indices; tournament selection,
+//! uniform crossover, and per-gene mutation, with elitism.  Invalid
+//! children (constraint violations) are repaired by re-sampling the
+//! offending genes; irreparable ones are replaced by random valid
+//! configs so the population never collapses.
+
+use super::{Budget, SearchResult, SearchStrategy};
+use crate::coordinator::spec::{Config, TuningSpec};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct Genetic {
+    seed: u64,
+    pop_size: usize,
+    mutation_rate: f64,
+    tournament: usize,
+}
+
+impl Genetic {
+    pub fn new(seed: u64) -> Genetic {
+        Genetic { seed, pop_size: 8, mutation_rate: 0.25, tournament: 3 }
+    }
+
+    pub fn with_params(seed: u64, pop_size: usize, mutation_rate: f64) -> Genetic {
+        assert!(pop_size >= 2, "population must be >= 2");
+        assert!((0.0..=1.0).contains(&mutation_rate), "mutation_rate in [0,1]");
+        Genetic { seed, pop_size, mutation_rate, tournament: 3 }
+    }
+
+    fn random_individual(spec: &TuningSpec, rng: &mut Rng) -> Option<Vec<usize>> {
+        spec.random_config(rng, 256)
+            .and_then(|c| spec.index_of(&c))
+    }
+
+    fn repair(
+        spec: &TuningSpec,
+        rng: &mut Rng,
+        mut idx: Vec<usize>,
+    ) -> Option<Vec<usize>> {
+        for _ in 0..32 {
+            let config = spec.config_at(&idx);
+            if spec.is_valid(&config) {
+                return Some(idx);
+            }
+            // Re-sample one random gene.
+            let g = rng.gen_range(idx.len());
+            idx[g] = rng.gen_range(spec.params[g].values.len());
+        }
+        None
+    }
+}
+
+impl SearchStrategy for Genetic {
+    fn name(&self) -> &'static str {
+        "genetic"
+    }
+
+    fn run(
+        &mut self,
+        spec: &TuningSpec,
+        budget: usize,
+        eval: &mut dyn FnMut(&Config) -> f64,
+    ) -> SearchResult {
+        if spec.params.is_empty() {
+            return SearchResult { best: None, history: Vec::new() };
+        }
+        let mut rng = Rng::new(self.seed);
+        let total_valid = spec.enumerate().len();
+        let mut b = Budget::new(spec, budget, eval);
+
+        // Initial population.
+        let mut pop: Vec<(Vec<usize>, f64)> = Vec::new();
+        while pop.len() < self.pop_size {
+            let Some(ind) = Self::random_individual(spec, &mut rng) else { break };
+            let config = spec.config_at(&ind);
+            let Some(cost) = b.eval(&config) else { break };
+            pop.push((ind, cost));
+        }
+        if pop.is_empty() {
+            return b.finish();
+        }
+
+        while !b.exhausted() && !b.space_exhausted(total_valid) {
+            // Tournament selection of two parents.
+            let select = |rng: &mut Rng, pop: &[(Vec<usize>, f64)]| -> Vec<usize> {
+                let mut best: Option<(usize, f64)> = None;
+                for _ in 0..self.tournament {
+                    let i = rng.gen_range(pop.len());
+                    if best.map_or(true, |(_, c)| pop[i].1 < c) {
+                        best = Some((i, pop[i].1));
+                    }
+                }
+                pop[best.unwrap().0].0.clone()
+            };
+            let pa = select(&mut rng, &pop);
+            let pb = select(&mut rng, &pop);
+
+            // Uniform crossover + mutation.
+            let mut child: Vec<usize> = pa
+                .iter()
+                .zip(&pb)
+                .map(|(&x, &y)| if rng.next_f64() < 0.5 { x } else { y })
+                .collect();
+            for (g, p) in spec.params.iter().enumerate() {
+                if rng.next_f64() < self.mutation_rate {
+                    child[g] = rng.gen_range(p.values.len());
+                }
+            }
+
+            let Some(child) = Self::repair(spec, &mut rng, child)
+                .or_else(|| Self::random_individual(spec, &mut rng))
+            else {
+                break;
+            };
+            let config = spec.config_at(&child);
+            let Some(cost) = b.eval(&config) else { break };
+
+            // Steady-state replacement: replace the worst individual if
+            // the child is no worse (elitism is implicit — the best
+            // individual is never the replacement target unless the
+            // child beats it).
+            let worst = pop
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1 .1.total_cmp(&b.1 .1))
+                .map(|(i, _)| i)
+                .unwrap();
+            if cost <= pop[worst].1 {
+                pop[worst] = (child, cost);
+            }
+        }
+        b.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::*;
+    use super::*;
+
+    #[test]
+    fn finds_optimum_with_full_budget() {
+        let mut s = Genetic::new(13);
+        let r = run_on_bowl(&mut s, usize::MAX);
+        assert_eq!(r.best.unwrap().1, 1.0);
+    }
+
+    #[test]
+    fn near_optimal_with_half_budget() {
+        let spec = bowl_spec();
+        let full = spec.enumerate().len();
+        let mut s = Genetic::new(29);
+        let r = run_on_bowl(&mut s, full / 2);
+        let (_, cost) = r.best.unwrap();
+        assert!(cost <= 3.0, "genetic best {cost} too far from optimum");
+    }
+
+    #[test]
+    fn respects_budget() {
+        let mut s = Genetic::new(2);
+        let r = run_on_bowl(&mut s, 7);
+        assert!(r.evaluations() <= 7);
+    }
+
+    #[test]
+    fn children_always_valid() {
+        let spec = bowl_spec();
+        let mut s = Genetic::new(37);
+        let mut eval = {
+            let spec = spec.clone();
+            move |c: &Config| {
+                assert!(spec.is_valid(c), "GA evaluated invalid config {c:?}");
+                bowl_cost(&spec, c)
+            }
+        };
+        s.run(&spec, 40, &mut eval);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let spec = bowl_spec();
+        let ids = |r: &SearchResult| {
+            r.history.iter().map(|e| spec.config_id(&e.config)).collect::<Vec<_>>()
+        };
+        let r1 = run_on_bowl(&mut Genetic::new(19), 20);
+        let r2 = run_on_bowl(&mut Genetic::new(19), 20);
+        assert_eq!(ids(&r1), ids(&r2));
+    }
+
+    #[test]
+    #[should_panic]
+    fn tiny_population_panics() {
+        Genetic::with_params(1, 1, 0.2);
+    }
+}

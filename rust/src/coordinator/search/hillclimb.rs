@@ -1,0 +1,129 @@
+//! Greedy hill-climbing with random restarts.
+//!
+//! From a random valid start, evaluate all one-step neighbors (one
+//! parameter moved one position in its ordered domain) and move to the
+//! best strict improvement; a local optimum triggers a fresh random
+//! restart.  Schedule spaces like ours (block sizes / unroll factors in
+//! ordered power-of-two domains) are mostly unimodal along each axis, so
+//! coordinate-wise descent converges in a handful of evaluations —
+//! Orio's "simplex-like" local strategies exploit the same structure.
+
+use super::{Budget, SearchResult, SearchStrategy};
+use crate::coordinator::spec::{Config, TuningSpec};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct HillClimb {
+    seed: u64,
+    max_restarts: usize,
+}
+
+impl HillClimb {
+    pub fn new(seed: u64) -> HillClimb {
+        HillClimb { seed, max_restarts: 8 }
+    }
+
+    pub fn with_restarts(seed: u64, max_restarts: usize) -> HillClimb {
+        HillClimb { seed, max_restarts: max_restarts.max(1) }
+    }
+}
+
+impl SearchStrategy for HillClimb {
+    fn name(&self) -> &'static str {
+        "hillclimb"
+    }
+
+    fn run(
+        &mut self,
+        spec: &TuningSpec,
+        budget: usize,
+        eval: &mut dyn FnMut(&Config) -> f64,
+    ) -> SearchResult {
+        let mut rng = Rng::new(self.seed);
+        let mut b = Budget::new(spec, budget, eval);
+        'restarts: for _ in 0..self.max_restarts {
+            let Some(mut current) = spec.random_config(&mut rng, 256) else {
+                break;
+            };
+            let Some(mut current_cost) = b.eval(&current) else {
+                break;
+            };
+            loop {
+                let mut moved = false;
+                let mut neighbors = spec.neighbors(&current);
+                // Deterministic order, then shuffle to avoid axis bias
+                // between restarts.
+                rng.shuffle(&mut neighbors);
+                let mut best_n: Option<(Config, f64)> = None;
+                for n in neighbors {
+                    let Some(cost) = b.eval(&n) else {
+                        break 'restarts;
+                    };
+                    if cost < current_cost
+                        && best_n.as_ref().map_or(true, |(_, bc)| cost < *bc)
+                    {
+                        best_n = Some((n, cost));
+                    }
+                }
+                if let Some((n, cost)) = best_n {
+                    current = n;
+                    current_cost = cost;
+                    moved = true;
+                }
+                if !moved {
+                    break; // local optimum -> restart
+                }
+            }
+            if b.exhausted() {
+                break;
+            }
+        }
+        b.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::*;
+    use super::*;
+
+    #[test]
+    fn converges_on_unimodal_surface() {
+        let mut s = HillClimb::new(3);
+        let r = run_on_bowl(&mut s, usize::MAX);
+        let (_, cost) = r.best.unwrap();
+        assert_eq!(cost, 1.0, "bowl is unimodal; hillclimb must find the optimum");
+    }
+
+    #[test]
+    fn uses_fewer_evals_than_exhaustive() {
+        let spec = bowl_spec();
+        let full = spec.enumerate().len();
+        let mut s = HillClimb::with_restarts(3, 1);
+        let r = run_on_bowl(&mut s, usize::MAX);
+        assert!(
+            r.evaluations() < full,
+            "single-restart hillclimb ({}) should beat exhaustive ({full})",
+            r.evaluations()
+        );
+    }
+
+    #[test]
+    fn respects_budget() {
+        let mut s = HillClimb::new(1);
+        let r = run_on_bowl(&mut s, 4);
+        assert!(r.evaluations() <= 4);
+        assert!(r.best.is_some());
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let spec = bowl_spec();
+        let r1 = run_on_bowl(&mut HillClimb::new(9), 15);
+        let r2 = run_on_bowl(&mut HillClimb::new(9), 15);
+        let ids = |r: &SearchResult| {
+            r.history.iter().map(|e| spec.config_id(&e.config)).collect::<Vec<_>>()
+        };
+        assert_eq!(ids(&r1), ids(&r2));
+    }
+}

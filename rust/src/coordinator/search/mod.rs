@@ -1,0 +1,259 @@
+//! Empirical search strategies over the variant space.
+//!
+//! This is the strategy set Orio ships (the paper's §2 "depending on the
+//! number of parameter variations ... a number of resulting code variants
+//! are compared"): exhaustive sweep, uniform random sampling, greedy
+//! hill-climbing with restarts, simulated annealing, and a genetic
+//! algorithm.  Every strategy operates through [`Budget`], which dedupes
+//! repeated configurations (an evaluation = one compile+measure cycle, the
+//! expensive unit the budget must bound) and records the full history for
+//! the ablation benches.
+//!
+//! Costs are wall-clock seconds (lower is better); `f64::INFINITY` marks
+//! a variant that failed its correctness gate or crashed, which every
+//! strategy treats as "never select, never move to".
+
+mod anneal;
+mod exhaustive;
+mod genetic;
+mod hillclimb;
+mod random;
+mod simplex;
+
+pub use anneal::Anneal;
+pub use exhaustive::Exhaustive;
+pub use genetic::Genetic;
+pub use hillclimb::HillClimb;
+pub use random::RandomSearch;
+pub use simplex::NelderMead;
+
+use std::collections::HashMap;
+
+use super::spec::{Config, TuningSpec};
+
+/// One recorded (config, cost) evaluation, in evaluation order.
+#[derive(Debug, Clone)]
+pub struct Evaluation {
+    pub config: Config,
+    pub cost: f64,
+}
+
+/// Outcome of a search run.
+#[derive(Debug, Clone)]
+pub struct SearchResult {
+    /// Best finite-cost config found, if any.
+    pub best: Option<(Config, f64)>,
+    /// Unique evaluations in the order they were first performed.
+    pub history: Vec<Evaluation>,
+}
+
+impl SearchResult {
+    pub fn evaluations(&self) -> usize {
+        self.history.len()
+    }
+
+    /// Cost trajectory: best-so-far after each evaluation (for the
+    /// convergence series in the ablation bench).
+    pub fn best_so_far(&self) -> Vec<f64> {
+        let mut best = f64::INFINITY;
+        self.history
+            .iter()
+            .map(|e| {
+                if e.cost < best {
+                    best = e.cost;
+                }
+                best
+            })
+            .collect()
+    }
+}
+
+/// A search strategy: explore `spec` within `budget` unique evaluations.
+pub trait SearchStrategy {
+    fn name(&self) -> &'static str;
+
+    fn run(
+        &mut self,
+        spec: &TuningSpec,
+        budget: usize,
+        eval: &mut dyn FnMut(&Config) -> f64,
+    ) -> SearchResult;
+}
+
+/// Budget-enforcing, deduplicating evaluation wrapper shared by all
+/// strategies.
+pub(crate) struct Budget<'a, 'b> {
+    spec: &'a TuningSpec,
+    remaining: usize,
+    cache: HashMap<String, f64>,
+    history: Vec<Evaluation>,
+    best: Option<(Config, f64)>,
+    eval: &'a mut dyn FnMut(&Config) -> f64,
+    _marker: std::marker::PhantomData<&'b ()>,
+}
+
+impl<'a, 'b> Budget<'a, 'b> {
+    pub(crate) fn new(
+        spec: &'a TuningSpec,
+        budget: usize,
+        eval: &'a mut dyn FnMut(&Config) -> f64,
+    ) -> Self {
+        Budget {
+            spec,
+            remaining: budget,
+            cache: HashMap::new(),
+            history: Vec::new(),
+            best: None,
+            eval,
+            _marker: std::marker::PhantomData,
+        }
+    }
+
+    /// Evaluate a config.  Cached repeats are free; new evaluations
+    /// consume budget.  Returns `None` when the budget is exhausted.
+    pub(crate) fn eval(&mut self, config: &Config) -> Option<f64> {
+        let id = self.spec.config_id(config);
+        if let Some(&c) = self.cache.get(&id) {
+            return Some(c);
+        }
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        let cost = (self.eval)(config);
+        self.cache.insert(id, cost);
+        self.history.push(Evaluation { config: config.clone(), cost });
+        if cost.is_finite() {
+            match &self.best {
+                Some((_, b)) if *b <= cost => {}
+                _ => self.best = Some((config.clone(), cost)),
+            }
+        }
+        Some(cost)
+    }
+
+    pub(crate) fn exhausted(&self) -> bool {
+        self.remaining == 0
+    }
+
+    /// True once every valid config has been evaluated — iterative
+    /// strategies must stop then even with budget left, or they would
+    /// spin forever on cached repeats.
+    pub(crate) fn space_exhausted(&self, total_valid: usize) -> bool {
+        self.cache.len() >= total_valid
+    }
+
+    pub(crate) fn seen(&self, config: &Config) -> bool {
+        self.cache.contains_key(&self.spec.config_id(config))
+    }
+
+    #[cfg(test)]
+    pub(crate) fn unique_evals(&self) -> usize {
+        self.history.len()
+    }
+
+    pub(crate) fn finish(self) -> SearchResult {
+        SearchResult { best: self.best, history: self.history }
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::runtime::registry::ParamDef;
+
+    /// A deterministic synthetic cost surface: quadratic bowl over the
+    /// parameter indices with a known global optimum, so strategy tests
+    /// can assert quality without a PJRT runtime.
+    pub fn bowl_spec() -> TuningSpec {
+        TuningSpec::new(
+            "bowl",
+            "t",
+            vec![
+                ParamDef {
+                    name: "block_size".into(),
+                    abbrev: "b".into(),
+                    values: vec![64, 128, 256, 512, 1024, 2048, 4096, 8192],
+                },
+                ParamDef {
+                    name: "unroll".into(),
+                    abbrev: "u".into(),
+                    values: vec![1, 2, 4, 8],
+                },
+            ],
+            &["block_size % unroll == 0".to_string()],
+            [("n".to_string(), 1 << 20)].into_iter().collect(),
+        )
+        .unwrap()
+    }
+
+    /// Optimum at block_size=1024 (index 4), unroll=4 (index 2).
+    pub fn bowl_cost(spec: &TuningSpec, c: &Config) -> f64 {
+        let idx = spec.index_of(c).expect("in-domain");
+        let db = idx[0] as f64 - 4.0;
+        let du = idx[1] as f64 - 2.0;
+        1.0 + db * db + 0.5 * du * du
+    }
+
+    pub fn run_on_bowl(strategy: &mut dyn SearchStrategy, budget: usize) -> SearchResult {
+        let spec = bowl_spec();
+        let mut eval = {
+            let spec = spec.clone();
+            move |c: &Config| bowl_cost(&spec, c)
+        };
+        strategy.run(&spec, budget, &mut eval)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::*;
+    use super::*;
+
+    #[test]
+    fn budget_dedupes_and_bounds() {
+        let spec = bowl_spec();
+        let mut calls = 0usize;
+        let mut eval = |c: &Config| {
+            calls += 1;
+            bowl_cost(&bowl_spec(), c)
+        };
+        let mut b = Budget::new(&spec, 3, &mut eval);
+        let cfgs = spec.enumerate();
+        assert!(b.eval(&cfgs[0]).is_some());
+        assert!(b.eval(&cfgs[0]).is_some()); // cached, free
+        assert!(b.eval(&cfgs[1]).is_some());
+        assert!(b.eval(&cfgs[2]).is_some());
+        assert!(b.eval(&cfgs[3]).is_none()); // budget exhausted
+        let r = b.finish();
+        assert_eq!(calls, 3);
+        assert_eq!(r.evaluations(), 3);
+    }
+
+    #[test]
+    fn budget_tracks_best_finite_only() {
+        let spec = bowl_spec();
+        let mut eval = |c: &Config| {
+            if c["unroll"] == 1 {
+                f64::INFINITY
+            } else {
+                bowl_cost(&bowl_spec(), c)
+            }
+        };
+        let mut b = Budget::new(&spec, usize::MAX, &mut eval);
+        for c in spec.enumerate() {
+            b.eval(&c);
+        }
+        let r = b.finish();
+        let (best, _) = r.best.unwrap();
+        assert_ne!(best["unroll"], 1);
+    }
+
+    #[test]
+    fn best_so_far_is_monotone() {
+        let mut s = Exhaustive::new();
+        let r = run_on_bowl(&mut s, 20);
+        let traj = r.best_so_far();
+        assert!(traj.windows(2).all(|w| w[1] <= w[0]));
+    }
+}

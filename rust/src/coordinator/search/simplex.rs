@@ -1,0 +1,206 @@
+//! Nelder–Mead simplex search over the parameter index space — the
+//! remaining member of Orio's strategy set.
+//!
+//! The simplex operates on continuous coordinates in index space (one
+//! dimension per parameter); every probe is rounded and clamped to the
+//! nearest domain index and evaluated through the shared budget (so
+//! re-probing a rounded-to-same config is free).  Invalid (constraint-
+//! violating) probes cost +inf, which the standard reflect/expand/
+//! contract/shrink rules treat as "worst", steering the simplex back
+//! into the feasible region — the same trick Orio uses for its
+//! discrete-domain Nelder–Mead.
+
+use super::{Budget, SearchResult, SearchStrategy};
+use crate::coordinator::spec::{Config, TuningSpec};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct NelderMead {
+    seed: u64,
+    /// Reflection / expansion / contraction / shrink coefficients.
+    alpha: f64,
+    gamma: f64,
+    rho: f64,
+    sigma: f64,
+    max_restarts: usize,
+}
+
+impl NelderMead {
+    pub fn new(seed: u64) -> NelderMead {
+        NelderMead { seed, alpha: 1.0, gamma: 2.0, rho: 0.5, sigma: 0.5, max_restarts: 4 }
+    }
+
+    fn round_to_config(spec: &TuningSpec, point: &[f64]) -> Config {
+        let idx: Vec<usize> = spec
+            .params
+            .iter()
+            .zip(point)
+            .map(|(p, &x)| {
+                let max = (p.values.len() - 1) as f64;
+                x.clamp(0.0, max).round() as usize
+            })
+            .collect();
+        spec.config_at(&idx)
+    }
+}
+
+impl SearchStrategy for NelderMead {
+    fn name(&self) -> &'static str {
+        "neldermead"
+    }
+
+    fn run(
+        &mut self,
+        spec: &TuningSpec,
+        budget: usize,
+        eval: &mut dyn FnMut(&Config) -> f64,
+    ) -> SearchResult {
+        let dim = spec.params.len();
+        if dim == 0 {
+            return SearchResult { best: None, history: Vec::new() };
+        }
+        let total_valid = spec.enumerate().len();
+        let mut rng = Rng::new(self.seed);
+        let mut b = Budget::new(spec, budget, eval);
+
+        // Evaluate a continuous point (rounded); invalid configs -> +inf.
+        // Returns None only when the budget is gone.
+        let probe = |b: &mut Budget, point: &[f64]| -> Option<f64> {
+            let config = Self::round_to_config(spec, point);
+            if !spec.is_valid(&config) {
+                return Some(f64::INFINITY);
+            }
+            b.eval(&config)
+        };
+
+        'restarts: for _ in 0..self.max_restarts {
+            // Initial simplex: a random valid vertex + unit steps.
+            let Some(start) = spec.random_config(&mut rng, 256) else { break };
+            let start_idx: Vec<f64> = spec
+                .index_of(&start)
+                .unwrap()
+                .into_iter()
+                .map(|i| i as f64)
+                .collect();
+            let mut simplex: Vec<(Vec<f64>, f64)> = Vec::with_capacity(dim + 1);
+            let Some(c0) = probe(&mut b, &start_idx) else { break };
+            simplex.push((start_idx.clone(), c0));
+            for d in 0..dim {
+                let mut v = start_idx.clone();
+                let max = (spec.params[d].values.len() - 1) as f64;
+                v[d] = if v[d] + 1.0 <= max { v[d] + 1.0 } else { (v[d] - 1.0).max(0.0) };
+                let Some(c) = probe(&mut b, &v) else { break 'restarts };
+                simplex.push((v, c));
+            }
+
+            for _iter in 0..64 {
+                if b.exhausted() || b.space_exhausted(total_valid) {
+                    break 'restarts;
+                }
+                simplex.sort_by(|a, bb| a.1.total_cmp(&bb.1));
+                let worst = simplex[dim].clone();
+                let second_worst = simplex[dim - 1].1;
+                let best_cost = simplex[0].1;
+
+                // Centroid of all but the worst.
+                let centroid: Vec<f64> = (0..dim)
+                    .map(|d| simplex[..dim].iter().map(|(v, _)| v[d]).sum::<f64>() / dim as f64)
+                    .collect();
+
+                let lerp = |t: f64| -> Vec<f64> {
+                    (0..dim)
+                        .map(|d| centroid[d] + t * (centroid[d] - worst.0[d]))
+                        .collect()
+                };
+
+                // Reflect.
+                let xr = lerp(self.alpha);
+                let Some(cr) = probe(&mut b, &xr) else { break 'restarts };
+                if cr < best_cost {
+                    // Expand.
+                    let xe = lerp(self.gamma);
+                    let Some(ce) = probe(&mut b, &xe) else { break 'restarts };
+                    simplex[dim] = if ce < cr { (xe, ce) } else { (xr, cr) };
+                    continue;
+                }
+                if cr < second_worst {
+                    simplex[dim] = (xr, cr);
+                    continue;
+                }
+                // Contract (inside).
+                let xc = lerp(-self.rho);
+                let Some(cc) = probe(&mut b, &xc) else { break 'restarts };
+                if cc < worst.1 {
+                    simplex[dim] = (xc, cc);
+                    continue;
+                }
+                // Shrink toward the best vertex.
+                let best_v = simplex[0].0.clone();
+                let mut converged = true;
+                for item in simplex.iter_mut().skip(1) {
+                    let nv: Vec<f64> = (0..dim)
+                        .map(|d| best_v[d] + self.sigma * (item.0[d] - best_v[d]))
+                        .collect();
+                    if Self::round_to_config(spec, &nv) != Self::round_to_config(spec, &item.0) {
+                        converged = false;
+                    }
+                    let Some(nc) = probe(&mut b, &nv) else { break 'restarts };
+                    *item = (nv, nc);
+                }
+                if converged {
+                    break; // simplex collapsed to one cell -> restart
+                }
+            }
+        }
+        b.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::*;
+    use super::*;
+
+    #[test]
+    fn converges_on_bowl() {
+        let mut s = NelderMead::new(5);
+        let r = run_on_bowl(&mut s, usize::MAX);
+        let (_, cost) = r.best.unwrap();
+        // The bowl optimum is 1.0; NM on a 2-D discrete bowl should land
+        // on it (or the immediately adjacent cell at 1.5).
+        assert!(cost <= 1.5, "NM best {cost}");
+    }
+
+    #[test]
+    fn respects_budget() {
+        let mut s = NelderMead::new(9);
+        let r = run_on_bowl(&mut s, 6);
+        assert!(r.evaluations() <= 6);
+        assert!(r.best.is_some());
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let spec = bowl_spec();
+        let ids = |r: &SearchResult| {
+            r.history.iter().map(|e| spec.config_id(&e.config)).collect::<Vec<_>>()
+        };
+        let r1 = run_on_bowl(&mut NelderMead::new(3), 15);
+        let r2 = run_on_bowl(&mut NelderMead::new(3), 15);
+        assert_eq!(ids(&r1), ids(&r2));
+    }
+
+    #[test]
+    fn handles_infeasible_probes() {
+        // Constrain half the bowl away; NM must still return a valid best.
+        let spec = bowl_spec();
+        let mut eval = {
+            let spec = spec.clone();
+            move |c: &Config| bowl_cost(&spec, c)
+        };
+        let mut s = NelderMead::new(21);
+        let r = s.run(&spec, usize::MAX, &mut eval);
+        let (best, _) = r.best.unwrap();
+        assert!(spec.is_valid(&best));
+    }
+}

@@ -1,0 +1,205 @@
+//! Correctness gating and variant ranking — the paper's "outputs ...
+//! compared with reference results" stage.
+//!
+//! A variant that does not reproduce the reference outputs is discarded
+//! regardless of its speed (its cost becomes +inf for the search).  The
+//! tolerance is elementwise `|a - b| <= atol + rtol * |b|`, the numpy
+//! `allclose` convention the python layer uses, so both layers gate
+//! identically.
+
+use crate::coordinator::measure::Measurement;
+use crate::coordinator::spec::Config;
+
+/// Elementwise tolerance.
+#[derive(Debug, Clone, Copy)]
+pub struct Tolerance {
+    pub rtol: f64,
+    pub atol: f64,
+}
+
+impl Default for Tolerance {
+    fn default() -> Self {
+        // f32 kernels with re-associated reductions: 2e-4 relative
+        // matches the python test suite's gate.
+        Tolerance { rtol: 2e-4, atol: 1e-3 }
+    }
+}
+
+/// Outcome of comparing one variant's outputs against the reference.
+#[derive(Debug, Clone)]
+pub struct CorrectnessReport {
+    pub ok: bool,
+    pub max_abs_err: f64,
+    pub max_rel_err: f64,
+    /// Index of the worst element (for diagnostics).
+    pub worst_index: usize,
+    pub mismatched: usize,
+}
+
+/// Compare candidate vs reference outputs under a tolerance.
+pub fn check_outputs(candidate: &[f32], reference: &[f32], tol: Tolerance) -> CorrectnessReport {
+    if candidate.len() != reference.len() {
+        return CorrectnessReport {
+            ok: false,
+            max_abs_err: f64::INFINITY,
+            max_rel_err: f64::INFINITY,
+            worst_index: 0,
+            mismatched: candidate.len().max(reference.len()),
+        };
+    }
+    let mut max_abs = 0.0f64;
+    let mut max_rel = 0.0f64;
+    let mut worst = 0usize;
+    let mut mismatched = 0usize;
+    for (i, (&c, &r)) in candidate.iter().zip(reference).enumerate() {
+        let (c, r) = (c as f64, r as f64);
+        if c.is_nan() || r.is_nan() {
+            if c.is_nan() != r.is_nan() {
+                mismatched += 1;
+                max_abs = f64::INFINITY;
+                worst = i;
+            }
+            continue;
+        }
+        let abs = (c - r).abs();
+        let rel = if r != 0.0 { abs / r.abs() } else { 0.0 };
+        if abs > max_abs {
+            max_abs = abs;
+            worst = i;
+        }
+        if rel > max_rel {
+            max_rel = rel;
+        }
+        if abs > tol.atol + tol.rtol * r.abs() {
+            mismatched += 1;
+        }
+    }
+    CorrectnessReport {
+        ok: mismatched == 0,
+        max_abs_err: max_abs,
+        max_rel_err: max_rel,
+        worst_index: worst,
+        mismatched,
+    }
+}
+
+/// A fully evaluated variant: identity, timing, correctness.
+#[derive(Debug, Clone)]
+pub struct RankedVariant {
+    pub config: Config,
+    pub config_id: String,
+    pub measurement: Measurement,
+    pub correctness: CorrectnessReport,
+}
+
+impl RankedVariant {
+    /// Search cost: median seconds, or +inf when gated out.
+    pub fn cost(&self) -> f64 {
+        if self.correctness.ok {
+            self.measurement.cost()
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// Sort correct variants fastest-first; gated-out variants go last
+/// (stable within each class).
+pub fn rank(mut variants: Vec<RankedVariant>) -> Vec<RankedVariant> {
+    variants.sort_by(|a, b| a.cost().total_cmp(&b.cost()));
+    variants
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::Summary;
+
+    fn meas(median: f64) -> Measurement {
+        Measurement {
+            summary: Summary::from_samples(&[median, median, median]).unwrap(),
+            samples: vec![median; 3],
+        }
+    }
+
+    fn ok_report() -> CorrectnessReport {
+        check_outputs(&[1.0], &[1.0], Tolerance::default())
+    }
+
+    #[test]
+    fn exact_match_passes() {
+        let r = check_outputs(&[1.0, -2.0, 0.0], &[1.0, -2.0, 0.0], Tolerance::default());
+        assert!(r.ok);
+        assert_eq!(r.max_abs_err, 0.0);
+        assert_eq!(r.mismatched, 0);
+    }
+
+    #[test]
+    fn small_error_within_tolerance() {
+        let r = check_outputs(&[1.0001], &[1.0], Tolerance { rtol: 1e-3, atol: 0.0 });
+        assert!(r.ok);
+        assert!(r.max_rel_err > 0.0);
+    }
+
+    #[test]
+    fn large_error_fails_with_location() {
+        let r = check_outputs(
+            &[1.0, 5.0, 1.0],
+            &[1.0, 1.0, 1.0],
+            Tolerance { rtol: 1e-3, atol: 1e-6 },
+        );
+        assert!(!r.ok);
+        assert_eq!(r.worst_index, 1);
+        assert_eq!(r.mismatched, 1);
+        assert!((r.max_abs_err - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn length_mismatch_fails() {
+        let r = check_outputs(&[1.0, 2.0], &[1.0], Tolerance::default());
+        assert!(!r.ok);
+        assert_eq!(r.max_abs_err, f64::INFINITY);
+    }
+
+    #[test]
+    fn nan_disagreement_fails_nan_agreement_passes() {
+        let t = Tolerance::default();
+        assert!(!check_outputs(&[f32::NAN], &[1.0], t).ok);
+        assert!(!check_outputs(&[1.0], &[f32::NAN], t).ok);
+        assert!(check_outputs(&[f32::NAN], &[f32::NAN], t).ok);
+    }
+
+    #[test]
+    fn zero_reference_uses_atol() {
+        let t = Tolerance { rtol: 1e-6, atol: 1e-3 };
+        assert!(check_outputs(&[5e-4], &[0.0], t).ok);
+        assert!(!check_outputs(&[5e-2], &[0.0], t).ok);
+    }
+
+    #[test]
+    fn gated_variants_rank_last() {
+        let fast_wrong = RankedVariant {
+            config: Config::new(),
+            config_id: "fast_wrong".into(),
+            measurement: meas(1e-6),
+            correctness: check_outputs(&[9.0], &[1.0], Tolerance::default()),
+        };
+        let slow_right = RankedVariant {
+            config: Config::new(),
+            config_id: "slow_right".into(),
+            measurement: meas(1e-3),
+            correctness: ok_report(),
+        };
+        let fast_right = RankedVariant {
+            config: Config::new(),
+            config_id: "fast_right".into(),
+            measurement: meas(1e-5),
+            correctness: ok_report(),
+        };
+        let ranked = rank(vec![fast_wrong, slow_right, fast_right]);
+        assert_eq!(ranked[0].config_id, "fast_right");
+        assert_eq!(ranked[1].config_id, "slow_right");
+        assert_eq!(ranked[2].config_id, "fast_wrong");
+        assert_eq!(ranked[2].cost(), f64::INFINITY);
+    }
+}

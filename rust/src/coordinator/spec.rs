@@ -1,0 +1,334 @@
+//! Tuning specification: the parameter space a search strategy explores.
+//!
+//! A [`TuningSpec`] is the runtime form of the paper's annotation block:
+//! named parameters with finite value domains, plus constraint strings
+//! over parameters *and* workload dimensions.  It exposes the operations
+//! every search strategy needs: enumeration, validity checking, random
+//! sampling, index encoding, and neighborhood moves.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::runtime::registry::{KernelEntry, ParamDef, Workload};
+use crate::util::rng::Rng;
+
+use super::constraint::{Env, Expr};
+
+/// A concrete parameter assignment (param name → value).
+pub type Config = BTreeMap<String, i64>;
+
+/// The searchable space for one (kernel, workload) pair.
+#[derive(Debug, Clone)]
+pub struct TuningSpec {
+    pub kernel: String,
+    pub tag: String,
+    pub params: Vec<ParamDef>,
+    pub dims: BTreeMap<String, i64>,
+    constraints: Vec<(String, Expr)>,
+}
+
+impl TuningSpec {
+    /// Build from manifest entries (parses the constraint strings once).
+    pub fn from_manifest(kernel: &KernelEntry, workload: &Workload) -> Result<TuningSpec> {
+        let constraints = kernel
+            .constraints
+            .iter()
+            .map(|src| {
+                Expr::parse(src)
+                    .map(|e| (src.clone(), e))
+                    .map_err(|e| anyhow::anyhow!("constraint `{src}`: {e}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TuningSpec {
+            kernel: kernel.name.clone(),
+            tag: workload.tag.clone(),
+            params: kernel.params.clone(),
+            dims: workload.dims.clone(),
+            constraints,
+        })
+    }
+
+    /// Build directly (annotation parser, tests).
+    pub fn new(
+        kernel: impl Into<String>,
+        tag: impl Into<String>,
+        params: Vec<ParamDef>,
+        constraint_srcs: &[String],
+        dims: BTreeMap<String, i64>,
+    ) -> Result<TuningSpec> {
+        let constraints = constraint_srcs
+            .iter()
+            .map(|src| {
+                Expr::parse(src)
+                    .map(|e| (src.clone(), e))
+                    .map_err(|e| anyhow::anyhow!("constraint `{src}`: {e}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TuningSpec {
+            kernel: kernel.into(),
+            tag: tag.into(),
+            params,
+            dims,
+            constraints,
+        })
+    }
+
+    pub fn constraint_srcs(&self) -> Vec<&str> {
+        self.constraints.iter().map(|(s, _)| s.as_str()).collect()
+    }
+
+    /// Total size of the raw (unconstrained) cartesian space.
+    pub fn raw_space_size(&self) -> usize {
+        self.params.iter().map(|p| p.values.len().max(1)).product()
+    }
+
+    /// Is a config a complete, in-domain, constraint-satisfying point?
+    pub fn is_valid(&self, config: &Config) -> bool {
+        if config.len() != self.params.len() {
+            return false;
+        }
+        for p in &self.params {
+            match config.get(&p.name) {
+                Some(v) if p.values.contains(v) => {}
+                _ => return false,
+            }
+        }
+        let env = self.env_for(config);
+        self.constraints
+            .iter()
+            .all(|(_, e)| e.eval_bool(&env).unwrap_or(false))
+    }
+
+    fn env_for(&self, config: &Config) -> Env {
+        let mut env: Env = self.dims.clone();
+        for (k, v) in config {
+            env.insert(k.clone(), *v);
+        }
+        env
+    }
+
+    /// Enumerate all *valid* configs in deterministic (lexicographic by
+    /// declaration order) order — matches `model.Family.grid` in python.
+    pub fn enumerate(&self) -> Vec<Config> {
+        let mut out = Vec::new();
+        let mut idx = vec![0usize; self.params.len()];
+        if self.params.is_empty() {
+            return out;
+        }
+        loop {
+            let config = self.config_at(&idx);
+            if self.is_valid(&config) {
+                out.push(config);
+            }
+            // Odometer increment, last param fastest (python order).
+            let mut i = self.params.len();
+            loop {
+                if i == 0 {
+                    return out;
+                }
+                i -= 1;
+                idx[i] += 1;
+                if idx[i] < self.params[i].values.len() {
+                    break;
+                }
+                idx[i] = 0;
+            }
+        }
+    }
+
+    /// Config from a per-parameter index vector.
+    pub fn config_at(&self, idx: &[usize]) -> Config {
+        assert_eq!(idx.len(), self.params.len());
+        self.params
+            .iter()
+            .zip(idx)
+            .map(|(p, &i)| (p.name.clone(), p.values[i]))
+            .collect()
+    }
+
+    /// Index vector for a config (`None` if any value is out of domain).
+    pub fn index_of(&self, config: &Config) -> Option<Vec<usize>> {
+        self.params
+            .iter()
+            .map(|p| {
+                config
+                    .get(&p.name)
+                    .and_then(|v| p.values.iter().position(|x| x == v))
+            })
+            .collect()
+    }
+
+    /// Stable identifier matching `aot.py`'s variant ids (`b1024_u4`).
+    pub fn config_id(&self, config: &Config) -> String {
+        self.params
+            .iter()
+            .map(|p| format!("{}{}", p.abbrev, config.get(&p.name).copied().unwrap_or(-1)))
+            .collect::<Vec<_>>()
+            .join("_")
+    }
+
+    /// Uniform random *valid* config; `None` if none found within the
+    /// attempt budget (pathologically tight constraints).
+    pub fn random_config(&self, rng: &mut Rng, max_attempts: usize) -> Option<Config> {
+        for _ in 0..max_attempts {
+            let idx: Vec<usize> = self
+                .params
+                .iter()
+                .map(|p| rng.gen_range(p.values.len()))
+                .collect();
+            let config = self.config_at(&idx);
+            if self.is_valid(&config) {
+                return Some(config);
+            }
+        }
+        None
+    }
+
+    /// One-step neighbors: move each parameter one position up/down its
+    /// (ordered) domain, keeping the others fixed.  Only valid configs
+    /// are returned.  This is the move set for hill-climbing and
+    /// annealing — value domains are ordered (powers of two), so
+    /// adjacent indices are the natural "small step".
+    pub fn neighbors(&self, config: &Config) -> Vec<Config> {
+        let Some(idx) = self.index_of(config) else {
+            return Vec::new();
+        };
+        let mut out = Vec::new();
+        for (i, p) in self.params.iter().enumerate() {
+            for delta in [-1i64, 1] {
+                let j = idx[i] as i64 + delta;
+                if j < 0 || j as usize >= p.values.len() {
+                    continue;
+                }
+                let mut nidx = idx.clone();
+                nidx[i] = j as usize;
+                let cand = self.config_at(&nidx);
+                if self.is_valid(&cand) {
+                    out.push(cand);
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> TuningSpec {
+        TuningSpec::new(
+            "axpy",
+            "n4096",
+            vec![
+                ParamDef {
+                    name: "block_size".into(),
+                    abbrev: "b".into(),
+                    values: vec![256, 1024, 4096, 16384],
+                },
+                ParamDef { name: "unroll".into(), abbrev: "u".into(), values: vec![1, 2, 4] },
+            ],
+            &[
+                "block_size <= n".to_string(),
+                "block_size % unroll == 0".to_string(),
+            ],
+            [("n".to_string(), 4096i64)].into_iter().collect(),
+        )
+        .unwrap()
+    }
+
+    fn cfg(b: i64, u: i64) -> Config {
+        [("block_size".to_string(), b), ("unroll".to_string(), u)]
+            .into_iter()
+            .collect()
+    }
+
+    #[test]
+    fn enumerate_respects_constraints() {
+        let s = spec();
+        let all = s.enumerate();
+        // 4 blocks x 3 unrolls = 12 raw; block 16384 > n=4096 pruned -> 9.
+        assert_eq!(s.raw_space_size(), 12);
+        assert_eq!(all.len(), 9);
+        assert!(all.iter().all(|c| s.is_valid(c)));
+        assert!(!all.iter().any(|c| c["block_size"] == 16384));
+    }
+
+    #[test]
+    fn enumeration_order_is_declaration_order() {
+        let s = spec();
+        let all = s.enumerate();
+        assert_eq!(all[0], cfg(256, 1));
+        assert_eq!(all[1], cfg(256, 2));
+        assert_eq!(all[2], cfg(256, 4));
+        assert_eq!(all[3], cfg(1024, 1));
+    }
+
+    #[test]
+    fn validity_edges() {
+        let s = spec();
+        assert!(s.is_valid(&cfg(4096, 4)));
+        assert!(!s.is_valid(&cfg(16384, 1))); // violates block <= n
+        assert!(!s.is_valid(&cfg(512, 1))); // 512 not in domain
+        assert!(!s.is_valid(&cfg(256, 3))); // 3 not in domain
+        let mut incomplete = Config::new();
+        incomplete.insert("block_size".into(), 256);
+        assert!(!s.is_valid(&incomplete));
+        let mut extra = cfg(256, 1);
+        extra.insert("bogus".into(), 1);
+        assert!(!s.is_valid(&extra));
+    }
+
+    #[test]
+    fn config_id_matches_aot_format() {
+        let s = spec();
+        assert_eq!(s.config_id(&cfg(1024, 4)), "b1024_u4");
+    }
+
+    #[test]
+    fn index_round_trip() {
+        let s = spec();
+        for c in s.enumerate() {
+            let idx = s.index_of(&c).unwrap();
+            assert_eq!(s.config_at(&idx), c);
+        }
+        assert!(s.index_of(&cfg(512, 1)).is_none());
+    }
+
+    #[test]
+    fn random_config_always_valid() {
+        let s = spec();
+        let mut rng = Rng::new(3);
+        for _ in 0..100 {
+            let c = s.random_config(&mut rng, 100).unwrap();
+            assert!(s.is_valid(&c));
+        }
+    }
+
+    #[test]
+    fn neighbors_are_valid_one_step_moves() {
+        let s = spec();
+        let c = cfg(1024, 2);
+        let ns = s.neighbors(&c);
+        // block: 256 or 4096; unroll: 1 or 4 — all valid here.
+        assert_eq!(ns.len(), 4);
+        for n in &ns {
+            assert!(s.is_valid(n));
+            let differs = n
+                .iter()
+                .filter(|(k, v)| c.get(k.as_str()) != Some(v))
+                .count();
+            assert_eq!(differs, 1);
+        }
+    }
+
+    #[test]
+    fn neighbors_prune_invalid() {
+        let s = spec();
+        // 4096 is the top valid block; the up-neighbor 16384 violates
+        // block <= n and must be pruned.
+        let ns = s.neighbors(&cfg(4096, 1));
+        assert!(ns.iter().all(|n| n["block_size"] != 16384));
+    }
+}

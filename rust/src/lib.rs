@@ -1,0 +1,48 @@
+//! # portatune
+//!
+//! Annotation-based software autotuning for sustainable performance
+//! portability — a reproduction of Mametjanov & Norris (2013) as a
+//! three-layer Rust + JAX + Pallas system.
+//!
+//! - **Layer 1 (build time)**: parameterized Pallas kernels
+//!   (`python/compile/kernels/`) — the schedule space the paper expressed
+//!   as SIMD/CUDA pragmas.
+//! - **Layer 2 (build time)**: JAX compute graphs (`python/compile/model.py`)
+//!   lowered AOT to one HLO-text artifact per (kernel, workload, variant).
+//! - **Layer 3 (this crate)**: the autotuner — empirical search over the
+//!   pre-lowered variants with correctness gating against the reference
+//!   implementation, platform fingerprinting, and a persistent
+//!   performance database that makes the tuned configuration *portable*.
+//!
+//! ```no_run
+//! use portatune::prelude::*;
+//!
+//! let runtime = Runtime::cpu()?;
+//! let registry = Registry::open(runtime, "artifacts")?;
+//! let tuner = Tuner::new(&registry);
+//! let mut strategy = Exhaustive::new();
+//! let outcome = tuner.tune("axpy", "n65536", &mut strategy, usize::MAX)?;
+//! if let Some(best) = &outcome.best {
+//!     println!("best {} speedup {:.2}x", best.config_id, outcome.speedup());
+//! }
+//! # anyhow::Ok(())
+//! ```
+
+pub mod coordinator;
+pub mod report;
+pub mod runtime;
+pub mod util;
+pub mod workload;
+
+/// Everything a typical embedder needs.
+pub mod prelude {
+    pub use crate::coordinator::measure::{MeasureConfig, Measurement};
+    pub use crate::coordinator::perfdb::PerfDb;
+    pub use crate::coordinator::platform::Fingerprint;
+    pub use crate::coordinator::search::{
+        Anneal, Exhaustive, Genetic, HillClimb, RandomSearch, SearchStrategy,
+    };
+    pub use crate::coordinator::spec::{Config, TuningSpec};
+    pub use crate::coordinator::tuner::{TuneOutcome, Tuner, VariantResult};
+    pub use crate::runtime::{Executable, Registry, Runtime, TensorData};
+}

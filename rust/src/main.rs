@@ -1,0 +1,451 @@
+//! portatune CLI — the leader process of the autotuning system.
+//!
+//! Subcommands mirror the paper's workflow:
+//!
+//! ```text
+//! portatune platform                      print the fingerprint keying the perf DB
+//! portatune inspect                       summarize the artifact manifest
+//! portatune tune --kernel K --workload T  empirical search over pre-lowered variants
+//! portatune tune-all [--kernels a,b]      tune every workload of the listed kernels
+//! portatune report-fig1 [--kernels ...]   regenerate the paper's Figure 1
+//! portatune db-list                       show recorded tuning results
+//! portatune deploy --kernel K --workload T  artifact the current platform should run
+//! portatune annotate FILE                 parse /*@ tune ... @*/ blocks
+//! portatune tune-annotated FILE           run every tune block in FILE
+//! ```
+//!
+//! Global flags: `--artifacts DIR` (default `artifacts`), `--db PATH`
+//! (default `perfdb.json`).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use portatune::coordinator::annotation::{extract_blocks, Annotation};
+use portatune::coordinator::measure::MeasureConfig;
+use portatune::coordinator::perfdb::PerfDb;
+use portatune::coordinator::platform::Fingerprint;
+use portatune::coordinator::search::{
+    Anneal, Exhaustive, Genetic, HillClimb, NelderMead, RandomSearch, SearchStrategy,
+};
+use portatune::coordinator::tuner::Tuner;
+use portatune::report::{Fig1Report, Fig1Row, Table};
+use portatune::runtime::{Registry, Runtime};
+use portatune::util::cli::Args;
+
+const USAGE: &str = "usage: portatune <platform|inspect|tune|tune-all|report-fig1|db-list|deploy|annotate|tune-annotated> [flags]
+  global: --artifacts DIR (default artifacts), --db PATH (default perfdb.json)
+  tune:   --kernel K --workload T [--strategy exhaustive|random|hillclimb|anneal|genetic]
+          [--budget N] [--seed N] [--quick] [--warm-start] [--no-record]
+  tune-all:    [--kernels a,b,c] [--strategy S] [--budget N] [--seed N] [--quick]
+  report-fig1: [--kernels axpy,dot,triad] [--csv PATH] [--quick]
+  deploy: --kernel K --workload T
+  annotate: <file>
+  tune-annotated: <file> [--quick] — execute each /*@ tune @*/ block (kernel,
+          workload, strategy, budget, seed all come from the annotation)";
+
+pub fn make_strategy(name: &str, seed: u64) -> Result<Box<dyn SearchStrategy>> {
+    Ok(match name {
+        "exhaustive" => Box::new(Exhaustive::new()),
+        "random" => Box::new(RandomSearch::new(seed)),
+        "hillclimb" => Box::new(HillClimb::new(seed)),
+        "anneal" => Box::new(Anneal::new(seed)),
+        "genetic" => Box::new(Genetic::new(seed)),
+        "neldermead" => Box::new(NelderMead::new(seed)),
+        other => {
+            return Err(anyhow::anyhow!(
+                "unknown strategy {other}; expected exhaustive|random|hillclimb|anneal|genetic|neldermead"
+            ))
+        }
+    })
+}
+
+fn open_registry(artifacts: &Path) -> Result<Registry> {
+    let runtime = Runtime::cpu()?;
+    Registry::open(runtime, artifacts)
+}
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        eprintln!("{USAGE}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let db_path = PathBuf::from(args.get_or("db", "perfdb.json"));
+    match args.subcommand() {
+        Some("platform") => {
+            args.finish()?;
+            println!("{}", Fingerprint::detect().describe());
+            Ok(())
+        }
+        Some("inspect") => {
+            args.finish()?;
+            cmd_inspect(&artifacts)
+        }
+        Some("tune") => cmd_tune(args, &artifacts, &db_path),
+        Some("tune-all") => cmd_tune_all(args, &artifacts, &db_path),
+        Some("report-fig1") => cmd_report_fig1(args, &artifacts),
+        Some("db-list") => {
+            args.finish()?;
+            cmd_db_list(&db_path)
+        }
+        Some("deploy") => cmd_deploy(args, &artifacts, &db_path),
+        Some("annotate") => cmd_annotate(args),
+        Some("tune-annotated") => cmd_tune_annotated(args, &artifacts, &db_path),
+        _ => Err(anyhow::anyhow!("missing or unknown subcommand")),
+    }
+}
+
+fn cmd_inspect(artifacts: &Path) -> Result<()> {
+    let registry = open_registry(artifacts)?;
+    println!(
+        "platform: {} ({} devices)",
+        registry.runtime().platform_name(),
+        registry.runtime().device_count()
+    );
+    let mut t = Table::new(&["kernel", "workload", "dims", "variants", "flops", "bytes"]);
+    for k in &registry.manifest().kernels {
+        for w in &k.workloads {
+            let dims: Vec<String> = w.dims.iter().map(|(k, v)| format!("{k}={v}")).collect();
+            t.row(vec![
+                k.name.clone(),
+                w.tag.clone(),
+                dims.join(","),
+                w.variants.len().to_string(),
+                w.flops.to_string(),
+                w.bytes.to_string(),
+            ]);
+        }
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_tune(args: &Args, artifacts: &Path, db_path: &Path) -> Result<()> {
+    let kernel = args
+        .get("kernel")
+        .ok_or_else(|| anyhow::anyhow!("tune requires --kernel"))?
+        .to_string();
+    let workload = args
+        .get("workload")
+        .ok_or_else(|| anyhow::anyhow!("tune requires --workload"))?
+        .to_string();
+    let strategy_name = args.get_or("strategy", "exhaustive");
+    let budget = args.get_parsed::<usize>("budget", usize::MAX)?;
+    let seed = args.get_parsed::<u64>("seed", 42)?;
+    let quick = args.get_bool("quick");
+    let warm = args.get_bool("warm-start");
+    let no_record = args.get_bool("no-record");
+    args.finish()?;
+
+    let registry = open_registry(artifacts)?;
+    let mut db = PerfDb::open(db_path)?;
+    let mut tuner = Tuner::new(&registry);
+    if quick {
+        tuner.measure_cfg = MeasureConfig::quick();
+    }
+    if warm {
+        let key = Fingerprint::detect().key();
+        tuner.warm_start = db.warm_start(&kernel, &workload, &key);
+        println!("warm start: {} candidate(s) from the DB", tuner.warm_start.len());
+    }
+    let mut strategy = make_strategy(&strategy_name, seed)?;
+    let outcome = tuner.tune(&kernel, &workload, strategy.as_mut(), budget)?;
+
+    println!(
+        "tuned {kernel}/{workload} with {} ({} evaluations)",
+        outcome.strategy,
+        outcome.evaluations()
+    );
+    println!(
+        "  baseline (default schedule): {:.3} ms   xla reference: {:.3} ms ({:.2} GFLOP/s)",
+        outcome.baseline_time() * 1e3,
+        outcome.reference.cost() * 1e3,
+        outcome.reference.gflops(outcome.flops)
+    );
+    match &outcome.best {
+        Some(best) => println!(
+            "  best:     {:.3} ms ({}) -> {:.2}x speedup, {:.1}% time reduction",
+            best.cost * 1e3,
+            best.config_id,
+            outcome.speedup(),
+            outcome.time_reduction_pct()
+        ),
+        None => println!("  no variant beat the correctness gate; baseline retained"),
+    }
+    let mut ranked: Vec<_> = outcome.evaluated.iter().collect();
+    ranked.sort_by(|a, b| a.cost.total_cmp(&b.cost));
+    let mut t = Table::new(&["variant", "median", "status"]);
+    for v in ranked.iter().take(10) {
+        let status = match &v.correctness {
+            Some(c) if c.ok => "ok".to_string(),
+            Some(c) => format!("GATED (max abs err {:.2e})", c.max_abs_err),
+            None => "FAILED".to_string(),
+        };
+        let time = v
+            .measurement
+            .as_ref()
+            .map(|m| format!("{:.3} ms", m.cost() * 1e3))
+            .unwrap_or_else(|| "-".to_string());
+        t.row(vec![v.config_id.clone(), time, status]);
+    }
+    print!("{}", t.render());
+
+    if !no_record {
+        tuner.record(&mut db, &outcome);
+        db.save()?;
+        println!(
+            "recorded to {} (platform {})",
+            db_path.display(),
+            outcome.platform.key()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_tune_all(args: &Args, artifacts: &Path, db_path: &Path) -> Result<()> {
+    let kernels = args.get_or("kernels", "");
+    let strategy_name = args.get_or("strategy", "exhaustive");
+    let budget = args.get_parsed::<usize>("budget", usize::MAX)?;
+    let seed = args.get_parsed::<u64>("seed", 42)?;
+    let quick = args.get_bool("quick");
+    args.finish()?;
+
+    let registry = open_registry(artifacts)?;
+    let mut db = PerfDb::open(db_path)?;
+    let selected: Vec<String> = if kernels.is_empty() {
+        registry.manifest().kernels.iter().map(|k| k.name.clone()).collect()
+    } else {
+        kernels.split(',').map(str::to_string).collect()
+    };
+    let mut tuner = Tuner::new(&registry);
+    if quick {
+        tuner.measure_cfg = MeasureConfig::quick();
+    }
+    let mut t = Table::new(&["kernel", "workload", "best", "speedup", "evals"]);
+    for kname in &selected {
+        let entry = registry
+            .manifest()
+            .kernel(kname)
+            .ok_or_else(|| anyhow::anyhow!("unknown kernel {kname}"))?
+            .clone();
+        for w in &entry.workloads {
+            let mut strategy = make_strategy(&strategy_name, seed)?;
+            let outcome = tuner.tune(kname, &w.tag, strategy.as_mut(), budget)?;
+            t.row(vec![
+                kname.clone(),
+                w.tag.clone(),
+                outcome
+                    .best
+                    .as_ref()
+                    .map(|b| b.config_id.clone())
+                    .unwrap_or_else(|| "baseline".into()),
+                format!("{:.2}x", outcome.speedup()),
+                outcome.evaluations().to_string(),
+            ]);
+            tuner.record(&mut db, &outcome);
+            db.save()?;
+            eprint!(".");
+        }
+    }
+    eprintln!();
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_report_fig1(args: &Args, artifacts: &Path) -> Result<()> {
+    let kernels = args.get_or("kernels", "axpy,dot,triad");
+    let csv = args.get("csv").map(PathBuf::from);
+    let quick = args.get_bool("quick");
+    args.finish()?;
+
+    let registry = open_registry(artifacts)?;
+    let mut tuner = Tuner::new(&registry);
+    if quick {
+        tuner.measure_cfg = MeasureConfig::quick();
+    }
+    let mut all_csv = String::new();
+    for kname in kernels.split(',').filter(|s| !s.is_empty()) {
+        let entry = registry
+            .manifest()
+            .kernel(kname)
+            .ok_or_else(|| anyhow::anyhow!("unknown kernel {kname}"))?
+            .clone();
+        let mut report = Fig1Report::new(kname);
+        for w in &entry.workloads {
+            let mut strategy = Exhaustive::new();
+            let outcome = tuner.tune(kname, &w.tag, &mut strategy, usize::MAX)?;
+            report.push(Fig1Row {
+                size: w.tag.clone(),
+                baseline_s: outcome.baseline_time(),
+                reference_s: outcome.reference.cost(),
+                tuned_s: outcome.best_time(),
+                best_id: outcome
+                    .best
+                    .as_ref()
+                    .map(|b| b.config_id.clone())
+                    .unwrap_or_else(|| "baseline".into()),
+                evaluations: outcome.evaluations(),
+            });
+            eprint!(".");
+        }
+        eprintln!();
+        println!("{}", report.render());
+        all_csv.push_str(&report.to_csv());
+    }
+    if let Some(path) = csv {
+        std::fs::write(&path, &all_csv)?;
+        println!("csv written to {}", path.display());
+    }
+    Ok(())
+}
+
+fn cmd_db_list(db_path: &Path) -> Result<()> {
+    let db = PerfDb::open(db_path)?;
+    if db.is_empty() {
+        println!("(empty performance database at {})", db_path.display());
+        return Ok(());
+    }
+    let mut t = Table::new(&[
+        "platform", "kernel", "workload", "best", "time", "speedup", "strategy", "evals",
+    ]);
+    for e in db.entries() {
+        t.row(vec![
+            e.platform_key.chars().take(24).collect(),
+            e.kernel.clone(),
+            e.tag.clone(),
+            e.best_config_id.clone(),
+            format!("{:.3} ms", e.best_time_s * 1e3),
+            format!("{:.2}x", e.speedup()),
+            e.strategy.clone(),
+            e.evaluations.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_deploy(args: &Args, artifacts: &Path, db_path: &Path) -> Result<()> {
+    let kernel = args
+        .get("kernel")
+        .ok_or_else(|| anyhow::anyhow!("deploy requires --kernel"))?
+        .to_string();
+    let workload = args
+        .get("workload")
+        .ok_or_else(|| anyhow::anyhow!("deploy requires --workload"))?
+        .to_string();
+    args.finish()?;
+    let registry = open_registry(artifacts)?;
+    let db = PerfDb::open(db_path)?;
+    let tuner = Tuner::new(&registry);
+    println!("{}", tuner.deployed_artifact(&db, &kernel, &workload)?);
+    Ok(())
+}
+
+fn cmd_annotate(args: &Args) -> Result<()> {
+    let file = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("annotate requires a file argument"))?;
+    args.finish()?;
+    let source = std::fs::read_to_string(file)?;
+    let blocks = extract_blocks(&source);
+    if blocks.is_empty() {
+        println!("no /*@ tune ... @*/ blocks in {file}");
+        return Ok(());
+    }
+    for (i, block) in blocks.iter().enumerate() {
+        match Annotation::parse(block) {
+            Ok(ann) => {
+                println!("# block {} — kernel={} ok", i + 1, ann.kernel);
+                print!("{}", ann.render());
+            }
+            Err(e) => println!("# block {} — parse error: {e}", i + 1),
+        }
+    }
+    Ok(())
+}
+
+/// The paper's full annotation-driven workflow: every `/*@ tune @*/`
+/// block in the file selects its kernel, workload(s), strategy, budget,
+/// and seed; the tuner runs each and records the winners.
+fn cmd_tune_annotated(args: &Args, artifacts: &Path, db_path: &Path) -> Result<()> {
+    let file = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("tune-annotated requires a file argument"))?
+        .clone();
+    let quick = args.get_bool("quick");
+    args.finish()?;
+
+    let source = std::fs::read_to_string(&file)?;
+    let blocks = extract_blocks(&source);
+    anyhow::ensure!(!blocks.is_empty(), "no /*@ tune ... @*/ blocks in {file}");
+
+    let registry = open_registry(artifacts)?;
+    let mut db = PerfDb::open(db_path)?;
+    let mut tuner = Tuner::new(&registry);
+    if quick {
+        tuner.measure_cfg = MeasureConfig::quick();
+    }
+
+    let mut t = Table::new(&["kernel", "workload", "strategy", "best", "speedup", "evals"]);
+    for (i, block) in blocks.iter().enumerate() {
+        let ann = Annotation::parse(block)
+            .map_err(|e| anyhow::anyhow!("block {}: {e}", i + 1))?;
+        let entry = registry
+            .manifest()
+            .kernel(&ann.kernel)
+            .ok_or_else(|| anyhow::anyhow!("block {}: unknown kernel {}", i + 1, ann.kernel))?
+            .clone();
+        // A block may bind one workload or apply to all of the kernel's.
+        let tags: Vec<String> = match &ann.workload {
+            Some(w) => vec![w.clone()],
+            None => entry.workloads.iter().map(|w| w.tag.clone()).collect(),
+        };
+        let strategy_name = ann.search.clone().unwrap_or_else(|| "exhaustive".into());
+        let budget = ann
+            .options
+            .get("budget")
+            .map(|b| b.parse::<usize>())
+            .transpose()
+            .map_err(|_| anyhow::anyhow!("block {}: bad budget", i + 1))?
+            .unwrap_or(usize::MAX);
+        let seed = ann
+            .options
+            .get("seed")
+            .map(|s| s.parse::<u64>())
+            .transpose()
+            .map_err(|_| anyhow::anyhow!("block {}: bad seed", i + 1))?
+            .unwrap_or(42);
+
+        for tag in tags {
+            let mut strategy = make_strategy(&strategy_name, seed)?;
+            let outcome = tuner.tune(&ann.kernel, &tag, strategy.as_mut(), budget)?;
+            t.row(vec![
+                ann.kernel.clone(),
+                tag.clone(),
+                strategy_name.clone(),
+                outcome
+                    .best
+                    .as_ref()
+                    .map(|b| b.config_id.clone())
+                    .unwrap_or_else(|| "baseline".into()),
+                format!("{:.2}x", outcome.speedup()),
+                outcome.evaluations().to_string(),
+            ]);
+            tuner.record(&mut db, &outcome);
+            eprint!(".");
+        }
+    }
+    eprintln!();
+    db.save()?;
+    print!("{}", t.render());
+    println!("recorded to {}", db_path.display());
+    Ok(())
+}

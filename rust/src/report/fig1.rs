@@ -1,0 +1,209 @@
+//! Figure-1 renderer: "auto-vectorized (baseline) vs autotuned kernel's
+//! performance" — per input size, absolute execution times (the paper's
+//! lines, left axis) and the relative speedup of the autotuned variant
+//! (the paper's bars, right axis).
+
+use super::table::{bar, fmt_time, Table};
+
+/// One size point of the figure.
+#[derive(Debug, Clone)]
+pub struct Fig1Row {
+    /// Size label, e.g. "n65536".
+    pub size: String,
+    /// Baseline (un-annotated default schedule) median seconds.
+    pub baseline_s: f64,
+    /// Pure-XLA reference artifact median seconds (vendor comparator).
+    pub reference_s: f64,
+    /// Autotuned best-variant median seconds.
+    pub tuned_s: f64,
+    /// Winning variant id (or "baseline").
+    pub best_id: String,
+    /// Evaluations the search spent.
+    pub evaluations: usize,
+}
+
+impl Fig1Row {
+    /// Paper's bar value: relative speedup of autotuned over baseline
+    /// in percent time reduction.
+    pub fn reduction_pct(&self) -> f64 {
+        if self.baseline_s <= 0.0 {
+            return 0.0;
+        }
+        (1.0 - self.tuned_s / self.baseline_s) * 100.0
+    }
+
+    pub fn speedup(&self) -> f64 {
+        if self.tuned_s > 0.0 {
+            self.baseline_s / self.tuned_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Autotuned time / XLA-reference time (the vendor-comparator ratio).
+    pub fn vs_reference(&self) -> f64 {
+        if self.reference_s > 0.0 {
+            self.tuned_s / self.reference_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// The full figure for one kernel.
+#[derive(Debug, Clone)]
+pub struct Fig1Report {
+    pub kernel: String,
+    pub rows: Vec<Fig1Row>,
+}
+
+impl Fig1Report {
+    pub fn new(kernel: impl Into<String>) -> Fig1Report {
+        Fig1Report { kernel: kernel.into(), rows: Vec::new() }
+    }
+
+    pub fn push(&mut self, row: Fig1Row) {
+        self.rows.push(row);
+    }
+
+    /// Headline: maximum speedup across sizes (the paper reports
+    /// "up to 43% or 2.3x").
+    pub fn max_speedup(&self) -> f64 {
+        self.rows.iter().map(Fig1Row::speedup).fold(1.0, f64::max)
+    }
+
+    pub fn max_reduction_pct(&self) -> f64 {
+        self.rows.iter().map(Fig1Row::reduction_pct).fold(0.0, f64::max)
+    }
+
+    /// ASCII rendering: the table plus speedup bars (right axis).
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&[
+            "size", "baseline", "autotuned", "xla-ref", "best variant", "evals",
+            "speedup", "reduction", "vs-ref",
+        ]);
+        for r in &self.rows {
+            t.row(vec![
+                r.size.clone(),
+                fmt_time(r.baseline_s),
+                fmt_time(r.tuned_s),
+                fmt_time(r.reference_s),
+                r.best_id.clone(),
+                r.evaluations.to_string(),
+                format!("{:.2}x", r.speedup()),
+                format!("{:+.1}%", r.reduction_pct()),
+                format!("{:.2}", r.vs_reference()),
+            ]);
+        }
+        let mut out = format!(
+            "Figure 1 [{}]: auto-vectorized (baseline) vs autotuned\n\n",
+            self.kernel
+        );
+        out.push_str(&t.render());
+        out.push('\n');
+        // Bars: relative speedup per size (the figure's right axis).
+        let max_pct = self.max_reduction_pct().max(1.0);
+        for r in &self.rows {
+            out.push_str(&format!(
+                "  {:>10}  |{:<40}| {:+.1}%\n",
+                r.size,
+                bar(r.reduction_pct().max(0.0), max_pct, 40),
+                r.reduction_pct()
+            ));
+        }
+        out.push_str(&format!(
+            "\nautotuning delivers up to {:.0}% time reduction ({:.2}x speedup)\n",
+            self.max_reduction_pct(),
+            self.max_speedup()
+        ));
+        out
+    }
+
+    /// CSV with the exact series the figure plots.
+    pub fn to_csv(&self) -> String {
+        let mut t = Table::new(&[
+            "kernel", "size", "baseline_s", "tuned_s", "reference_s", "best_id",
+            "evaluations", "speedup", "reduction_pct", "vs_reference",
+        ]);
+        for r in &self.rows {
+            t.row(vec![
+                self.kernel.clone(),
+                r.size.clone(),
+                format!("{:.9}", r.baseline_s),
+                format!("{:.9}", r.tuned_s),
+                format!("{:.9}", r.reference_s),
+                r.best_id.clone(),
+                r.evaluations.to_string(),
+                format!("{:.4}", r.speedup()),
+                format!("{:.2}", r.reduction_pct()),
+                format!("{:.4}", r.vs_reference()),
+            ]);
+        }
+        t.to_csv()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> Fig1Report {
+        let mut r = Fig1Report::new("axpy");
+        r.push(Fig1Row {
+            size: "n4096".into(),
+            baseline_s: 10e-6,
+            tuned_s: 8e-6,
+            reference_s: 9e-6,
+            best_id: "b1024_u2".into(),
+            evaluations: 9,
+        });
+        r.push(Fig1Row {
+            size: "n65536".into(),
+            baseline_s: 100e-6,
+            tuned_s: 43.5e-6,
+            reference_s: 50e-6,
+            best_id: "b4096_u4".into(),
+            evaluations: 12,
+        });
+        r
+    }
+
+    #[test]
+    fn reduction_and_speedup_math() {
+        let r = report();
+        assert!((r.rows[0].reduction_pct() - 20.0).abs() < 1e-9);
+        assert!((r.rows[1].speedup() - 2.2988).abs() < 1e-3);
+        assert!((r.max_speedup() - 100.0 / 43.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn render_contains_series_and_headline() {
+        let s = report().render();
+        assert!(s.contains("n4096"));
+        assert!(s.contains("b4096_u4"));
+        assert!(s.contains("speedup"));
+        assert!(s.contains("up to"));
+        assert!(s.contains('#')); // bars present
+    }
+
+    #[test]
+    fn csv_has_one_line_per_row_plus_header() {
+        let csv = report().to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.starts_with("kernel,size,"));
+    }
+
+    #[test]
+    fn degenerate_rows_do_not_panic() {
+        let row = Fig1Row {
+            size: "z".into(),
+            baseline_s: 0.0,
+            tuned_s: 0.0,
+            reference_s: 0.0,
+            best_id: "baseline".into(),
+            evaluations: 0,
+        };
+        assert_eq!(row.reduction_pct(), 0.0);
+        assert_eq!(row.speedup(), 0.0);
+    }
+}

@@ -1,0 +1,8 @@
+//! Report renderers: regenerate the paper's figure/table formats from
+//! tuning outcomes (ASCII for the terminal, CSV for plotting).
+
+pub mod fig1;
+pub mod table;
+
+pub use fig1::{Fig1Report, Fig1Row};
+pub use table::Table;

@@ -1,0 +1,92 @@
+//! PJRT client wrapper: one process-wide CPU client, compile HLO text
+//! artifacts into [`Executable`]s.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::executable::Executable;
+
+/// Owns the PJRT client.  Cheap to clone via `Arc` inside [`crate::runtime::Registry`];
+/// typically constructed once per process (client startup is ~100ms).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Arc<Runtime>> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Arc::new(Runtime { client }))
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn platform_version(&self) -> String {
+        self.client.platform_version()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Compile an HLO-text artifact file into an executable.
+    ///
+    /// HLO *text* is the interchange format: jax >= 0.5 serializes protos
+    /// with 64-bit instruction ids which xla_extension 0.5.1 rejects; the
+    /// text parser reassigns ids and round-trips cleanly.
+    pub fn compile_file(&self, path: &Path) -> Result<Executable> {
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| anyhow::anyhow!("non-utf8 artifact path: {path:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .with_context(|| format!("parsing HLO text {path_str}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("XLA-compiling {path_str}"))?;
+        let name = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "artifact".to_string());
+        Ok(Executable::new(exe, name))
+    }
+
+    /// Upload an f32 host tensor to a device buffer (device-resident
+    /// pipelines upload once and iterate on-device).
+    pub fn buffer_from_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .context("uploading f32 buffer")
+    }
+
+    /// Compile HLO text held in memory (used by tests and the annotation
+    /// round-trip tooling).
+    pub fn compile_text(&self, hlo_text: &str, name: &str) -> Result<Executable> {
+        // The xla crate only exposes file-based text parsing; stage via a
+        // temp file.  Compilation dominates, the file write is noise.
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!(
+            "portatune-hlo-{}-{}.txt",
+            std::process::id(),
+            name.replace(|c: char| !c.is_alphanumeric(), "_")
+        ));
+        std::fs::write(&path, hlo_text).context("staging HLO text")?;
+        let result = self.compile_file(&path);
+        let _ = std::fs::remove_file(&path);
+        result
+    }
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime")
+            .field("platform", &self.platform_name())
+            .field("devices", &self.device_count())
+            .finish()
+    }
+}

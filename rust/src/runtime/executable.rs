@@ -1,0 +1,84 @@
+//! A compiled variant: typed execution over [`TensorData`] inputs with
+//! output materialization (the unit the measurement harness times).
+
+use anyhow::{Context, Result};
+
+use super::literal::TensorData;
+
+/// A PJRT-compiled artifact ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl Executable {
+    pub(crate) fn new(exe: xla::PjRtLoadedExecutable, name: String) -> Executable {
+        Executable { exe, name }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with pre-built literals and materialize the single output.
+    ///
+    /// Includes host transfer (`to_literal_sync`) so the timed unit is
+    /// "results available to the coordinator", matching how the paper
+    /// times kernels (wall clock around the kernel call).
+    pub fn run_literals(&self, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let buffers = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let out = buffers[0][0]
+            .to_literal_sync()
+            .context("materializing output")?;
+        // Artifacts are lowered with return_tuple=True: unwrap the 1-tuple.
+        out.to_tuple1().context("unwrapping output tuple")
+    }
+
+    /// Execute with typed tensors; returns the flat f32 output.
+    pub fn run(&self, inputs: &[TensorData]) -> Result<Vec<f32>> {
+        let literals = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        let out = self.run_literals(&literals)?;
+        out.to_vec::<f32>().context("reading f32 output")
+    }
+
+    /// Execute and return the raw output literal (for chained pipelines
+    /// like the Jacobi solver that feed outputs back as inputs).
+    pub fn run_to_literal(&self, inputs: &[TensorData]) -> Result<xla::Literal> {
+        let literals = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        self.run_literals(&literals)
+    }
+
+    /// Device-resident execution: run over device buffers and return the
+    /// raw output buffer WITHOUT host materialization.
+    ///
+    /// Only valid for *untupled* artifacts (`.nt.hlo.txt`, lowered with
+    /// `return_tuple=False`) — their single output is a plain array
+    /// buffer that can be fed straight back as the next call's input.
+    /// This is the solver hot loop's fast path: no host<->device copy per
+    /// iteration (see EXPERIMENTS.md §Perf).
+    pub fn run_buffers(&self, inputs: &[&xla::PjRtBuffer]) -> Result<xla::PjRtBuffer> {
+        let out = self
+            .exe
+            .execute_b(inputs)
+            .with_context(|| format!("executing {} over buffers", self.name))?;
+        out.into_iter()
+            .next()
+            .and_then(|per_device| per_device.into_iter().next())
+            .ok_or_else(|| anyhow::anyhow!("empty output from {}", self.name))
+    }
+}
+
+impl std::fmt::Debug for Executable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Executable").field("name", &self.name).finish()
+    }
+}

@@ -1,0 +1,162 @@
+//! Typed host tensors and their conversion to `xla::Literal`.
+//!
+//! The manifest declares every artifact's input signature as
+//! (name, dtype, shape); the workload generators produce matching
+//! [`TensorData`]; this module is the only place the dtype/shape ⇄
+//! Literal mapping lives.
+
+use anyhow::{Context, Result};
+
+/// Element types exchanged with artifacts (matches `aot.py::_dtype_str`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => Err(anyhow::anyhow!("unknown dtype in manifest: {other}")),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        4
+    }
+}
+
+/// An input slot declared by the manifest.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// A concrete host tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl TensorData {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> TensorData {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        TensorData::F32 { shape, data }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> TensorData {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        TensorData::I32 { shape, data }
+    }
+
+    /// Scalar-as-rank-1 convenience (the kernels take f32[1] scalars).
+    pub fn scalar_f32(v: f32) -> TensorData {
+        TensorData::f32(vec![1], vec![v])
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            TensorData::F32 { shape, .. } | TensorData::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            TensorData::F32 { .. } => DType::F32,
+            TensorData::I32 { .. } => DType::I32,
+        }
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            TensorData::F32 { data, .. } => Some(data),
+            _ => None,
+        }
+    }
+
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match self {
+            TensorData::I32 { data, .. } => Some(data),
+            _ => None,
+        }
+    }
+
+    /// Does this tensor match a manifest slot?
+    pub fn matches(&self, spec: &TensorSpec) -> bool {
+        self.dtype() == spec.dtype && self.shape() == spec.shape.as_slice()
+    }
+
+    /// Convert to an `xla::Literal` (rank-1 upload + reshape; the literal
+    /// layout is dense row-major either way).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            TensorData::F32 { data, .. } => xla::Literal::vec1(data),
+            TensorData::I32 { data, .. } => xla::Literal::vec1(data),
+        };
+        if dims.len() == 1 {
+            Ok(lit)
+        } else {
+            lit.reshape(&dims).context("reshaping literal")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_parses() {
+        assert_eq!(DType::parse("f32").unwrap(), DType::F32);
+        assert_eq!(DType::parse("i32").unwrap(), DType::I32);
+        assert!(DType::parse("f64").is_err());
+        assert_eq!(DType::F32.as_str(), "f32");
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        TensorData::f32(vec![3], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn spec_matching() {
+        let spec = TensorSpec { name: "x".into(), dtype: DType::F32, shape: vec![2, 3] };
+        let t = TensorData::f32(vec![2, 3], vec![0.0; 6]);
+        assert!(t.matches(&spec));
+        let wrong_shape = TensorData::f32(vec![3, 2], vec![0.0; 6]);
+        assert!(!wrong_shape.matches(&spec));
+        let wrong_dtype = TensorData::i32(vec![2, 3], vec![0; 6]);
+        assert!(!wrong_dtype.matches(&spec));
+    }
+
+    #[test]
+    fn element_counts() {
+        let spec = TensorSpec { name: "v".into(), dtype: DType::I32, shape: vec![4, 8] };
+        assert_eq!(spec.element_count(), 32);
+        assert_eq!(TensorData::scalar_f32(1.0).element_count(), 1);
+    }
+}

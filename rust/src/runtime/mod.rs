@@ -1,0 +1,20 @@
+//! Runtime: load AOT artifacts (HLO text emitted by `python/compile/aot.py`)
+//! and execute them on the PJRT CPU client via the `xla` crate.
+//!
+//! Python never runs here — the coordinator's entire hot path (variant
+//! compilation, measurement, deployment) goes through this module.
+//!
+//! Flow: `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute` (see /opt/xla-example/load_hlo for the
+//! reference wiring).  Artifacts are lowered with `return_tuple=True`, so
+//! every execution unwraps a 1-tuple.
+
+pub mod client;
+pub mod executable;
+pub mod literal;
+pub mod registry;
+
+pub use client::Runtime;
+pub use executable::Executable;
+pub use literal::{DType, TensorData, TensorSpec};
+pub use registry::{KernelEntry, Manifest, ParamDef, Registry, Variant, Workload};

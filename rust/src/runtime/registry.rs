@@ -1,0 +1,401 @@
+//! Artifact registry: the typed view of `artifacts/manifest.json` plus a
+//! lazy compile cache.
+//!
+//! The manifest is the contract between the build-time python layer and
+//! the runtime: kernel families, their parameter schemas and constraint
+//! strings, and per-workload artifact paths.  The registry compiles
+//! artifacts on first use and memoizes the executables — the tuner's
+//! search strategies may revisit configurations, and benches re-measure
+//! winners, so compile-once matters (XLA compilation is 10–300 ms per
+//! artifact).
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Json};
+
+use super::client::Runtime;
+use super::executable::Executable;
+use super::literal::{DType, TensorSpec};
+
+/// One tuning parameter's schema (name, id abbreviation, domain).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParamDef {
+    pub name: String,
+    pub abbrev: String,
+    pub values: Vec<i64>,
+}
+
+/// One pre-lowered variant of a workload.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Variant {
+    pub id: String,
+    pub params: BTreeMap<String, i64>,
+    pub path: String,
+}
+
+/// One concrete workload (fixed shapes) of a kernel family.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Workload {
+    pub tag: String,
+    pub dims: BTreeMap<String, i64>,
+    pub inputs: Vec<TensorSpec>,
+    pub output: TensorSpec,
+    pub flops: u64,
+    pub bytes: u64,
+    /// Pure-XLA reference artifact (semantics oracle + vendor-library
+    /// comparator).
+    pub baseline: String,
+    /// Variant id of the un-annotated default schedule (Figure 1's
+    /// "no pragmas" series); `None` for pre-default manifests.
+    pub default: Option<String>,
+    /// Whether untupled twins (`*.nt.hlo.txt`) exist for device-resident
+    /// iteration (output buffer feeds back as the next input).
+    pub untupled: bool,
+    pub variants: Vec<Variant>,
+}
+
+/// Path of the untupled twin of an artifact (`x.hlo.txt` → `x.nt.hlo.txt`).
+pub fn untupled_path(path: &str) -> String {
+    match path.strip_suffix(".hlo.txt") {
+        Some(stem) => format!("{stem}.nt.hlo.txt"),
+        None => format!("{path}.nt"),
+    }
+}
+
+impl Workload {
+    pub fn variant(&self, id: &str) -> Option<&Variant> {
+        self.variants.iter().find(|v| v.id == id)
+    }
+}
+
+/// One kernel family as declared by the manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelEntry {
+    pub name: String,
+    pub params: Vec<ParamDef>,
+    pub constraints: Vec<String>,
+    pub workloads: Vec<Workload>,
+}
+
+impl KernelEntry {
+    pub fn workload(&self, tag: &str) -> Option<&Workload> {
+        self.workloads.iter().find(|w| w.tag == tag)
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub version: i64,
+    pub kernels: Vec<KernelEntry>,
+}
+
+impl Manifest {
+    pub fn kernel(&self, name: &str) -> Option<&KernelEntry> {
+        self.kernels.iter().find(|k| k.name == name)
+    }
+
+    /// Parse from JSON text (schema written by `aot.py`).
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let root = json::parse(text).context("parsing manifest.json")?;
+        let version = root
+            .get("version")
+            .and_then(Json::as_i64)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing version"))?;
+        if version != 1 {
+            return Err(anyhow::anyhow!("unsupported manifest version {version}"));
+        }
+        let kernels = root
+            .get("kernels")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing kernels array"))?
+            .iter()
+            .map(parse_kernel)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest { version, kernels })
+    }
+}
+
+fn req<'a>(v: &'a Json, key: &str) -> Result<&'a Json> {
+    v.get(key).ok_or_else(|| anyhow::anyhow!("manifest field missing: {key}"))
+}
+
+fn req_str(v: &Json, key: &str) -> Result<String> {
+    req(v, key)?
+        .as_str()
+        .map(str::to_string)
+        .ok_or_else(|| anyhow::anyhow!("manifest field not a string: {key}"))
+}
+
+fn parse_kernel(v: &Json) -> Result<KernelEntry> {
+    let name = req_str(v, "name")?;
+    let params = req(v, "params")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("params not an array"))?
+        .iter()
+        .map(|p| {
+            Ok(ParamDef {
+                name: req_str(p, "name")?,
+                abbrev: req_str(p, "abbrev")?,
+                values: req(p, "values")?
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("param values not an array"))?
+                    .iter()
+                    .map(|x| x.as_i64().ok_or_else(|| anyhow::anyhow!("non-int param value")))
+                    .collect::<Result<Vec<_>>>()?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let constraints = req(v, "constraints")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("constraints not an array"))?
+        .iter()
+        .map(|c| {
+            c.as_str()
+                .map(str::to_string)
+                .ok_or_else(|| anyhow::anyhow!("constraint not a string"))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let workloads = req(v, "workloads")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("workloads not an array"))?
+        .iter()
+        .map(parse_workload)
+        .collect::<Result<Vec<_>>>()?;
+    Ok(KernelEntry { name, params, constraints, workloads })
+}
+
+fn parse_tensor_spec(v: &Json, default_name: &str) -> Result<TensorSpec> {
+    let name = v
+        .get("name")
+        .and_then(Json::as_str)
+        .unwrap_or(default_name)
+        .to_string();
+    let dtype = DType::parse(&req_str(v, "dtype")?)?;
+    let shape = req(v, "shape")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("shape not an array"))?
+        .iter()
+        .map(|d| {
+            d.as_u64()
+                .map(|x| x as usize)
+                .ok_or_else(|| anyhow::anyhow!("non-int shape dim"))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(TensorSpec { name, dtype, shape })
+}
+
+fn parse_dims(v: &Json) -> Result<BTreeMap<String, i64>> {
+    v.as_obj()
+        .ok_or_else(|| anyhow::anyhow!("dims not an object"))?
+        .iter()
+        .map(|(k, d)| {
+            d.as_i64()
+                .map(|x| (k.clone(), x))
+                .ok_or_else(|| anyhow::anyhow!("non-int dim {k}"))
+        })
+        .collect()
+}
+
+fn parse_workload(v: &Json) -> Result<Workload> {
+    let variants = req(v, "variants")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("variants not an array"))?
+        .iter()
+        .map(|t| {
+            Ok(Variant {
+                id: req_str(t, "id")?,
+                params: parse_dims(req(t, "params")?)?,
+                path: req_str(t, "path")?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(Workload {
+        tag: req_str(v, "tag")?,
+        dims: parse_dims(req(v, "dims")?)?,
+        inputs: req(v, "inputs")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("inputs not an array"))?
+            .iter()
+            .enumerate()
+            .map(|(i, t)| parse_tensor_spec(t, &format!("arg{i}")))
+            .collect::<Result<Vec<_>>>()?,
+        output: parse_tensor_spec(req(v, "output")?, "out")?,
+        flops: req(v, "flops")?
+            .as_u64()
+            .ok_or_else(|| anyhow::anyhow!("flops not a non-negative int"))?,
+        bytes: req(v, "bytes")?
+            .as_u64()
+            .ok_or_else(|| anyhow::anyhow!("bytes not a non-negative int"))?,
+        baseline: req_str(v, "baseline")?,
+        default: v.get("default").and_then(Json::as_str).map(str::to_string),
+        untupled: v.get("untupled").and_then(Json::as_bool).unwrap_or(false),
+        variants,
+    })
+}
+
+/// Artifact root + manifest + compile cache.
+pub struct Registry {
+    runtime: Arc<Runtime>,
+    root: PathBuf,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+    compiles: Mutex<u64>,
+}
+
+impl Registry {
+    /// Open an artifact directory (must contain `manifest.json`).
+    pub fn open(runtime: Arc<Runtime>, root: impl AsRef<Path>) -> Result<Registry> {
+        let root = root.as_ref().to_path_buf();
+        let mpath = root.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("reading {mpath:?} — run `make artifacts` first"))?;
+        let manifest = Manifest::parse(&text)?;
+        Ok(Registry {
+            runtime,
+            root,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            compiles: Mutex::new(0),
+        })
+    }
+
+    pub fn runtime(&self) -> &Arc<Runtime> {
+        &self.runtime
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Number of XLA compilations performed (cache misses) — used by the
+    /// overhead bench to attribute tuning cost.
+    pub fn compile_count(&self) -> u64 {
+        *self.compiles.lock().unwrap()
+    }
+
+    /// Compile (or fetch from cache) the artifact at a manifest-relative
+    /// path.
+    pub fn load(&self, rel_path: &str) -> Result<Arc<Executable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(rel_path) {
+            return Ok(exe.clone());
+        }
+        let full = self.root.join(rel_path);
+        let exe = Arc::new(self.runtime.compile_file(&full)?);
+        *self.compiles.lock().unwrap() += 1;
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(rel_path.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Drop all cached executables (used by the overhead bench to model
+    /// cold-start tuning).
+    pub fn clear_cache(&self) {
+        self.cache.lock().unwrap().clear();
+    }
+
+    /// Find (kernel, workload) or error with the available options.
+    pub fn find(&self, kernel: &str, tag: &str) -> Result<(&KernelEntry, &Workload)> {
+        let entry = self.manifest.kernel(kernel).ok_or_else(|| {
+            let names: Vec<_> = self.manifest.kernels.iter().map(|k| k.name.as_str()).collect();
+            anyhow::anyhow!("unknown kernel {kernel}; available: {names:?}")
+        })?;
+        let workload = entry.workload(tag).ok_or_else(|| {
+            let tags: Vec<_> = entry.workloads.iter().map(|w| w.tag.as_str()).collect();
+            anyhow::anyhow!("unknown workload {tag} for {kernel}; available: {tags:?}")
+        })?;
+        Ok((entry, workload))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "generated_by": "compile.aot",
+      "kernels": [
+        {
+          "name": "axpy",
+          "params": [
+            {"name": "block_size", "abbrev": "b", "values": [256, 1024]},
+            {"name": "unroll", "abbrev": "u", "values": [1, 2]}
+          ],
+          "constraints": ["block_size <= n", "block_size % unroll == 0"],
+          "workloads": [
+            {
+              "tag": "n4096",
+              "dims": {"n": 4096},
+              "inputs": [
+                {"name": "a", "dtype": "f32", "shape": [1]},
+                {"name": "x", "dtype": "f32", "shape": [4096]},
+                {"name": "y", "dtype": "f32", "shape": [4096]}
+              ],
+              "output": {"dtype": "f32", "shape": [4096]},
+              "flops": 8192,
+              "bytes": 49152,
+              "baseline": "axpy/n4096/base.hlo.txt",
+              "default": "b256_u1",
+              "variants": [
+                {"id": "b256_u1", "params": {"block_size": 256, "unroll": 1},
+                 "path": "axpy/n4096/b256_u1.hlo.txt"}
+              ]
+            }
+          ]
+        }
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample_manifest() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.version, 1);
+        assert_eq!(m.kernels.len(), 1);
+        let k = m.kernel("axpy").unwrap();
+        assert_eq!(k.params.len(), 2);
+        assert_eq!(k.params[0].values, vec![256, 1024]);
+        assert_eq!(k.constraints.len(), 2);
+        let w = k.workload("n4096").unwrap();
+        assert_eq!(w.dims["n"], 4096);
+        assert_eq!(w.inputs.len(), 3);
+        assert_eq!(w.inputs[1].shape, vec![4096]);
+        assert_eq!(w.output.dtype, DType::F32);
+        assert_eq!(w.flops, 8192);
+        assert_eq!(w.default.as_deref(), Some("b256_u1"));
+        assert_eq!(w.variants[0].params["block_size"], 256);
+        assert!(w.variant("b256_u1").is_some());
+        assert!(w.variant("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let bad = SAMPLE.replace("\"version\": 1", "\"version\": 9");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"version": 1}"#).is_err());
+        let noname = SAMPLE.replace("\"name\": \"axpy\",", "");
+        assert!(Manifest::parse(&noname).is_err());
+    }
+
+    #[test]
+    fn kernel_lookup_misses() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.kernel("nope").is_none());
+        assert!(m.kernel("axpy").unwrap().workload("nope").is_none());
+    }
+}

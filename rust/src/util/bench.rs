@@ -1,0 +1,160 @@
+//! Micro-benchmark harness for the `cargo bench` targets (the offline
+//! dependency set has no criterion; this provides the subset the paper's
+//! experiment benches need: named timed sections, warmup + repetition
+//! with robust stats, and aligned text output).
+//!
+//! Benches built on this run as `harness = false` binaries; `cargo bench`
+//! executes them sequentially and their stdout is the experiment record
+//! (EXPERIMENTS.md is assembled from it).
+
+use std::time::Instant;
+
+use super::stats::Summary;
+
+/// One benchmark runner with shared settings.
+pub struct Bench {
+    name: String,
+    warmup: usize,
+    reps: usize,
+    results: Vec<BenchResult>,
+}
+
+/// One named measurement.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub id: String,
+    pub summary: Summary,
+    /// Optional derived metric (e.g. GFLOP/s) with its unit.
+    pub metric: Option<(f64, String)>,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Bench {
+        // BENCH_QUICK=1 shrinks budgets (used by `make test` smoke runs).
+        let quick = std::env::var("BENCH_QUICK").is_ok();
+        Bench {
+            name: name.to_string(),
+            warmup: if quick { 1 } else { 2 },
+            reps: if quick { 3 } else { 10 },
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_reps(mut self, warmup: usize, reps: usize) -> Bench {
+        self.warmup = warmup;
+        self.reps = reps.max(1);
+        self
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Time a closure `reps` times (after warmup); records and returns
+    /// the summary.
+    pub fn run<F: FnMut()>(&mut self, id: &str, mut f: F) -> Summary {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.reps);
+        for _ in 0..self.reps {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let summary = Summary::from_samples(&samples).expect("non-empty samples");
+        self.results.push(BenchResult { id: id.to_string(), summary: summary.clone(), metric: None });
+        summary
+    }
+
+    /// Record an externally produced timing (e.g. a tuner outcome).
+    pub fn record(&mut self, id: &str, summary: Summary) {
+        self.results.push(BenchResult { id: id.to_string(), summary, metric: None });
+    }
+
+    /// Attach a derived metric to the most recent result.
+    pub fn metric(&mut self, value: f64, unit: &str) {
+        if let Some(last) = self.results.last_mut() {
+            last.metric = Some((value, unit.to_string()));
+        }
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Render the standard report block.
+    pub fn report(&self) -> String {
+        let mut out = format!("== bench: {} ==\n", self.name);
+        let wid = self
+            .results
+            .iter()
+            .map(|r| r.id.len())
+            .max()
+            .unwrap_or(4)
+            .max(4);
+        for r in &self.results {
+            out.push_str(&format!(
+                "{:<w$}  median {:>12}  min {:>12}  mad {:>10}",
+                r.id,
+                format_secs(r.summary.median),
+                format_secs(r.summary.min),
+                format_secs(r.summary.mad),
+                w = wid
+            ));
+            if let Some((v, unit)) = &r.metric {
+                out.push_str(&format!("  {v:.2} {unit}"));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Seconds with auto-scaled unit, fixed width friendly.
+pub fn format_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports() {
+        let mut b = Bench::new("demo").with_reps(1, 3);
+        let s = b.run("spin", || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(s.n, 3);
+        b.metric(12.5, "GFLOP/s");
+        let rep = b.report();
+        assert!(rep.contains("== bench: demo =="));
+        assert!(rep.contains("spin"));
+        assert!(rep.contains("GFLOP/s"));
+    }
+
+    #[test]
+    fn format_units() {
+        assert!(format_secs(5e-9).ends_with("ns"));
+        assert!(format_secs(5e-6).ends_with("µs"));
+        assert!(format_secs(5e-3).ends_with("ms"));
+        assert!(format_secs(5.0).ends_with("s"));
+    }
+
+    #[test]
+    fn record_external() {
+        let mut b = Bench::new("x");
+        b.record("ext", Summary::from_samples(&[1.0, 2.0, 3.0]).unwrap());
+        assert_eq!(b.results().len(), 1);
+        assert_eq!(b.results()[0].summary.median, 2.0);
+    }
+}

@@ -1,0 +1,158 @@
+//! Minimal command-line argument parser (the offline dependency set has
+//! no clap; this covers the subcommand + `--flag [value]` surface the
+//! binary and benches need).
+//!
+//! Conventions: the first non-flag token is the subcommand; `--key value`
+//! and `--key=value` both bind values; a `--key` followed by another
+//! flag (or end of args) is boolean true.  Unknown flags are collected
+//! and reported by [`Args::finish`] so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// Positional tokens (subcommand first).
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, Vec<String>>,
+    consumed: std::cell::RefCell<std::collections::BTreeSet<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (not including argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Args {
+        let tokens: Vec<String> = tokens.into_iter().collect();
+        let mut positional = Vec::new();
+        let mut flags: BTreeMap<String, Vec<String>> = BTreeMap::new();
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if let Some(name) = t.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    flags.entry(k.to_string()).or_default().push(v.to_string());
+                } else if i + 1 < tokens.len() && !tokens[i + 1].starts_with("--") {
+                    flags
+                        .entry(name.to_string())
+                        .or_default()
+                        .push(tokens[i + 1].clone());
+                    i += 1;
+                } else {
+                    flags.entry(name.to_string()).or_default().push(String::new());
+                }
+            } else {
+                positional.push(t.clone());
+            }
+            i += 1;
+        }
+        Args { positional, flags, consumed: Default::default() }
+    }
+
+    /// Parse the process's own args.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// The subcommand (first positional), if any.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(String::as_str)
+    }
+
+    /// String flag.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.consumed.borrow_mut().insert(key.to_string());
+        self.flags.get(key).and_then(|v| v.last()).map(String::as_str)
+    }
+
+    /// String flag with default.
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).map(str::to_string).unwrap_or_else(|| default.to_string())
+    }
+
+    /// Boolean flag (present, possibly valueless).
+    pub fn get_bool(&self, key: &str) -> bool {
+        self.consumed.borrow_mut().insert(key.to_string());
+        match self.flags.get(key).and_then(|v| v.last()) {
+            Some(v) => v.is_empty() || v == "true" || v == "1",
+            None => false,
+        }
+    }
+
+    /// Typed flag parse with default; invalid values error.
+    pub fn get_parsed<T: std::str::FromStr>(&self, key: &str, default: T) -> anyhow::Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|_| anyhow::anyhow!("invalid value for --{key}: {v}")),
+        }
+    }
+
+    /// Error on unconsumed (unknown) flags — call after all gets.
+    pub fn finish(&self) -> anyhow::Result<()> {
+        let consumed = self.consumed.borrow();
+        let unknown: Vec<&String> =
+            self.flags.keys().filter(|k| !consumed.contains(*k)).collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(anyhow::anyhow!("unknown flag(s): {unknown:?}"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string))
+    }
+
+    #[test]
+    fn positional_and_subcommand() {
+        let a = args("tune extra");
+        assert_eq!(a.subcommand(), Some("tune"));
+        assert_eq!(a.positional, vec!["tune", "extra"]);
+        assert_eq!(args("").subcommand(), None);
+    }
+
+    #[test]
+    fn flag_forms() {
+        let a = args("cmd --kernel axpy --budget=20 --quick --seed 7");
+        assert_eq!(a.get("kernel"), Some("axpy"));
+        assert_eq!(a.get("budget"), Some("20"));
+        assert!(a.get_bool("quick"));
+        assert!(!a.get_bool("missing"));
+        assert_eq!(a.get_parsed::<u64>("seed", 0).unwrap(), 7);
+    }
+
+    #[test]
+    fn parsed_defaults_and_errors() {
+        let a = args("cmd --n bogus");
+        assert_eq!(a.get_parsed::<usize>("m", 5).unwrap(), 5);
+        assert!(a.get_parsed::<usize>("n", 5).is_err());
+    }
+
+    #[test]
+    fn boolean_before_flag() {
+        let a = args("cmd --quick --kernel axpy");
+        assert!(a.get_bool("quick"));
+        assert_eq!(a.get("kernel"), Some("axpy"));
+    }
+
+    #[test]
+    fn repeated_flag_takes_last() {
+        let a = args("cmd --k 1 --k 2");
+        assert_eq!(a.get("k"), Some("2"));
+    }
+
+    #[test]
+    fn finish_flags_unknown() {
+        let a = args("cmd --known 1 --typo 2");
+        let _ = a.get("known");
+        assert!(a.finish().is_err());
+        let b = args("cmd --known 1");
+        let _ = b.get("known");
+        assert!(b.finish().is_ok());
+    }
+}

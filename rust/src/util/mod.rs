@@ -1,0 +1,10 @@
+//! Shared substrates: hand-rolled JSON, measurement statistics, and a
+//! deterministic RNG.  These are deliberately dependency-free (the pinned
+//! crate set has no serde/rand) — they are part of the "build every
+//! substrate" surface of the reproduction.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,155 @@
+//! Measurement statistics for the empirical-evaluation stage.
+//!
+//! Autotuning decisions key off the **median** of repeated timings —
+//! robust against the one-sided noise (scheduler preemption, cache
+//! pollution) that wall-clock measurement on a shared host suffers.  MAD
+//! (median absolute deviation) is the matching robust spread estimate,
+//! used by the measurement harness to decide whether more repetitions
+//! are needed and by the reports to print error bars.
+
+/// Summary statistics over a sample of timings (seconds).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub min: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub median: f64,
+    /// Median absolute deviation (unscaled).
+    pub mad: f64,
+    pub stddev: f64,
+}
+
+impl Summary {
+    /// Compute a summary; returns `None` on an empty or non-finite sample.
+    pub fn from_samples(samples: &[f64]) -> Option<Summary> {
+        if samples.is_empty() || samples.iter().any(|x| !x.is_finite()) {
+            return None;
+        }
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = sorted.len();
+        let min = sorted[0];
+        let max = sorted[n - 1];
+        let mean = sorted.iter().sum::<f64>() / n as f64;
+        let median = median_of_sorted(&sorted);
+        let mut devs: Vec<f64> = sorted.iter().map(|x| (x - median).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mad = median_of_sorted(&devs);
+        let var = sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / if n > 1 { (n - 1) as f64 } else { 1.0 };
+        let stddev = var.sqrt();
+        Some(Summary { n, min, max, mean, median, mad, stddev })
+    }
+
+    /// Relative spread: MAD / median (0 when median is 0).
+    pub fn rel_spread(&self) -> f64 {
+        if self.median == 0.0 {
+            0.0
+        } else {
+            self.mad / self.median
+        }
+    }
+}
+
+fn median_of_sorted(sorted: &[f64]) -> f64 {
+    let n = sorted.len();
+    if n % 2 == 1 {
+        sorted[n / 2]
+    } else {
+        0.5 * (sorted[n / 2 - 1] + sorted[n / 2])
+    }
+}
+
+/// Median of an unsorted sample (`None` if empty/non-finite).
+pub fn median(samples: &[f64]) -> Option<f64> {
+    Summary::from_samples(samples).map(|s| s.median)
+}
+
+/// Percentile (0..=100) by nearest-rank on a copy of the sample.
+pub fn percentile(samples: &[f64], p: f64) -> Option<f64> {
+    if samples.is_empty() || !(0.0..=100.0).contains(&p) {
+        return None;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    Some(sorted[rank])
+}
+
+/// Drop samples more than `k` MADs above the median (one-sided: timing
+/// noise only ever adds time).  Returns the filtered sample; keeps the
+/// original when fewer than 4 samples or when MAD is zero.
+pub fn reject_outliers(samples: &[f64], k: f64) -> Vec<f64> {
+    let summary = match Summary::from_samples(samples) {
+        Some(s) if s.n >= 4 && s.mad > 0.0 => s,
+        _ => return samples.to_vec(),
+    };
+    let cut = summary.median + k * summary.mad;
+    samples.iter().copied().filter(|&x| x <= cut).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::from_samples(&[3.0, 1.0, 2.0]).unwrap();
+        assert_eq!(s.n, 3);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert_eq!(s.median, 2.0);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.mad, 1.0);
+    }
+
+    #[test]
+    fn summary_even_length_interpolates() {
+        let s = Summary::from_samples(&[1.0, 2.0, 3.0, 10.0]).unwrap();
+        assert_eq!(s.median, 2.5);
+    }
+
+    #[test]
+    fn summary_rejects_empty_and_nan() {
+        assert!(Summary::from_samples(&[]).is_none());
+        assert!(Summary::from_samples(&[1.0, f64::NAN]).is_none());
+        assert!(Summary::from_samples(&[f64::INFINITY]).is_none());
+    }
+
+    #[test]
+    fn median_is_robust_to_one_spike() {
+        let m = median(&[1.0, 1.0, 1.0, 1.0, 100.0]).unwrap();
+        assert_eq!(m, 1.0);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs = [10.0, 20.0, 30.0, 40.0, 50.0];
+        assert_eq!(percentile(&xs, 0.0), Some(10.0));
+        assert_eq!(percentile(&xs, 50.0), Some(30.0));
+        assert_eq!(percentile(&xs, 100.0), Some(50.0));
+        assert_eq!(percentile(&[], 50.0), None);
+        assert_eq!(percentile(&xs, 150.0), None);
+    }
+
+    #[test]
+    fn outlier_rejection_drops_spike_only() {
+        let xs = [1.0, 1.01, 0.99, 1.02, 0.98, 9.0];
+        let kept = reject_outliers(&xs, 5.0);
+        assert_eq!(kept.len(), 5);
+        assert!(kept.iter().all(|&x| x < 2.0));
+    }
+
+    #[test]
+    fn outlier_rejection_small_sample_passthrough() {
+        let xs = [1.0, 9.0, 2.0];
+        assert_eq!(reject_outliers(&xs, 5.0), xs.to_vec());
+    }
+
+    #[test]
+    fn rel_spread_zero_for_constant() {
+        let s = Summary::from_samples(&[2.0, 2.0, 2.0, 2.0]).unwrap();
+        assert_eq!(s.rel_spread(), 0.0);
+    }
+}

@@ -1,0 +1,207 @@
+//! Workload generators: deterministic inputs for every kernel family.
+//!
+//! The paper's evaluation sweeps input sizes for fixed synthetic
+//! workloads; these generators are the rust-side source of those inputs
+//! (the python hypothesis tests mirror the same constructions).  All
+//! generation is seeded (xorshift) so tuning, tests, and benches see
+//! identical data run-to-run.
+
+pub mod spmv;
+pub mod stencil;
+pub mod vectors;
+
+use anyhow::Result;
+
+use crate::runtime::registry::Workload;
+use crate::runtime::TensorData;
+use crate::util::rng::Rng;
+
+/// Generate the input tensors for a (kernel, workload) pair, in the
+/// manifest's declared order, validated against the declared specs.
+pub fn inputs_for(kernel: &str, wl: &Workload, seed: u64) -> Result<Vec<TensorData>> {
+    let mut rng = Rng::new(seed ^ fxhash(kernel) ^ fxhash(&wl.tag));
+    let dim = |name: &str| -> Result<usize> {
+        wl.dims
+            .get(name)
+            .map(|&v| v as usize)
+            .ok_or_else(|| anyhow::anyhow!("workload {} missing dim {name}", wl.tag))
+    };
+
+    let inputs: Vec<TensorData> = match kernel {
+        "axpy" => {
+            let n = dim("n")?;
+            vec![
+                TensorData::scalar_f32(1.0 + rng.gauss() as f32 * 0.5),
+                vectors::gauss(&mut rng, n),
+                vectors::gauss(&mut rng, n),
+            ]
+        }
+        "triad" => {
+            let n = dim("n")?;
+            vec![
+                TensorData::scalar_f32(1.0 + rng.gauss() as f32 * 0.5),
+                TensorData::scalar_f32(-0.5 + rng.gauss() as f32 * 0.5),
+                vectors::gauss(&mut rng, n),
+                vectors::gauss(&mut rng, n),
+            ]
+        }
+        "dot" => {
+            let n = dim("n")?;
+            vec![vectors::gauss(&mut rng, n), vectors::gauss(&mut rng, n)]
+        }
+        "stencil2d" => {
+            let (m, n) = (dim("m")?, dim("n")?);
+            vec![stencil::random_padded_grid(&mut rng, m, n)]
+        }
+        "jacobi" => {
+            let (m, n) = (dim("m")?, dim("n")?);
+            // Physically meaningful start: hot Dirichlet boundary, cold
+            // interior — the E2E solver diffuses heat inward.
+            vec![stencil::hot_boundary_grid(m, n, 1.0)]
+        }
+        "spmv_ell" => {
+            let (nrows, k) = (dim("nrows")?, dim("k")?);
+            let (values, col_idx) = spmv::banded_ell(&mut rng, nrows, k);
+            let x = vectors::gauss(&mut rng, nrows);
+            vec![values, col_idx, x]
+        }
+        "matmul" => {
+            let (m, n, k) = (dim("m")?, dim("n")?, dim("k")?);
+            vec![
+                TensorData::f32(vec![m, k], rng.gauss_vec_f32(m * k)),
+                TensorData::f32(vec![k, n], rng.gauss_vec_f32(k * n)),
+            ]
+        }
+        other => return Err(anyhow::anyhow!("no workload generator for kernel {other}")),
+    };
+
+    // Validate against the manifest's declared signature.
+    if inputs.len() != wl.inputs.len() {
+        return Err(anyhow::anyhow!(
+            "{kernel}/{}: generated {} inputs, manifest declares {}",
+            wl.tag,
+            inputs.len(),
+            wl.inputs.len()
+        ));
+    }
+    for (t, spec) in inputs.iter().zip(&wl.inputs) {
+        if !t.matches(spec) {
+            return Err(anyhow::anyhow!(
+                "{kernel}/{}: input `{}` mismatch: generated {:?}/{:?}, declared {:?}/{}",
+                wl.tag,
+                spec.name,
+                t.dtype(),
+                t.shape(),
+                spec.shape,
+                spec.dtype.as_str(),
+            ));
+        }
+    }
+    Ok(inputs)
+}
+
+fn fxhash(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::literal::{DType, TensorSpec};
+    use std::collections::BTreeMap;
+
+    fn wl(kernel: &str) -> Workload {
+        let (dims, inputs): (Vec<(&str, i64)>, Vec<(&str, DType, Vec<usize>)>) = match kernel {
+            "axpy" => (
+                vec![("n", 64)],
+                vec![
+                    ("a", DType::F32, vec![1]),
+                    ("x", DType::F32, vec![64]),
+                    ("y", DType::F32, vec![64]),
+                ],
+            ),
+            "dot" => (
+                vec![("n", 64)],
+                vec![("x", DType::F32, vec![64]), ("y", DType::F32, vec![64])],
+            ),
+            "spmv_ell" => (
+                vec![("nrows", 32), ("k", 8)],
+                vec![
+                    ("values", DType::F32, vec![32, 8]),
+                    ("col_idx", DType::I32, vec![32, 8]),
+                    ("x", DType::F32, vec![32]),
+                ],
+            ),
+            "jacobi" => (
+                vec![("m", 8), ("n", 16)],
+                vec![("grid", DType::F32, vec![10, 18])],
+            ),
+            _ => panic!("unsupported test kernel"),
+        };
+        Workload {
+            tag: "test".into(),
+            dims: dims.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>(),
+            inputs: inputs
+                .into_iter()
+                .map(|(n, d, s)| TensorSpec { name: n.into(), dtype: d, shape: s })
+                .collect(),
+            output: TensorSpec { name: "out".into(), dtype: DType::F32, shape: vec![1] },
+            flops: 1,
+            bytes: 1,
+            baseline: "x".into(),
+            default: None,
+            untupled: false,
+            variants: vec![],
+        }
+    }
+
+    #[test]
+    fn generates_matching_signatures() {
+        for kernel in ["axpy", "dot", "spmv_ell", "jacobi"] {
+            let w = wl(kernel);
+            let inputs = inputs_for(kernel, &w, 1).unwrap();
+            assert_eq!(inputs.len(), w.inputs.len(), "{kernel}");
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let w = wl("axpy");
+        let a = inputs_for("axpy", &w, 7).unwrap();
+        let b = inputs_for("axpy", &w, 7).unwrap();
+        assert_eq!(a, b);
+        let c = inputs_for("axpy", &w, 8).unwrap();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn spmv_col_indices_in_range() {
+        let w = wl("spmv_ell");
+        let inputs = inputs_for("spmv_ell", &w, 3).unwrap();
+        let ci = inputs[1].as_i32().unwrap();
+        assert!(ci.iter().all(|&c| (0..32).contains(&c)));
+    }
+
+    #[test]
+    fn unknown_kernel_errors() {
+        let w = wl("axpy");
+        assert!(inputs_for("nonesuch", &w, 1).is_err());
+    }
+
+    #[test]
+    fn jacobi_grid_has_hot_boundary_cold_interior() {
+        let w = wl("jacobi");
+        let inputs = inputs_for("jacobi", &w, 1).unwrap();
+        let g = inputs[0].as_f32().unwrap();
+        let (rows, cols) = (10, 18);
+        assert_eq!(g[0], 1.0); // corner
+        assert_eq!(g[cols - 1], 1.0);
+        assert_eq!(g[(rows - 1) * cols], 1.0);
+        assert_eq!(g[cols + 1], 0.0); // first interior cell
+    }
+}

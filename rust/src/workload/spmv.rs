@@ -1,0 +1,128 @@
+//! ELLPACK sparse-matrix inputs (the ref-[1] SpMV study).
+//!
+//! Two generators matching the python test suite's constructions:
+//! banded (the well-conditioned, cache-friendly case — stencil-like
+//! matrices from PDE discretizations) and uniform-random columns (the
+//! gather-hostile case).  Padding entries carry value 0.0 and column 0,
+//! so they contribute nothing regardless of x.
+
+use crate::runtime::TensorData;
+use crate::util::rng::Rng;
+
+/// Banded ELL matrix: row i has up to `k` entries centered on the
+/// diagonal.  Returns (values f32[nrows,k], col_idx i32[nrows,k]).
+pub fn banded_ell(rng: &mut Rng, nrows: usize, k: usize) -> (TensorData, TensorData) {
+    let mut values = vec![0.0f32; nrows * k];
+    let mut cols = vec![0i32; nrows * k];
+    for i in 0..nrows {
+        let lo = i.saturating_sub(k / 2);
+        let hi = (lo + k).min(nrows);
+        let width = hi - lo;
+        for (slot, col) in (lo..hi).enumerate() {
+            values[i * k + slot] = rng.gauss() as f32;
+            cols[i * k + slot] = col as i32;
+        }
+        debug_assert!(width <= k);
+    }
+    (
+        TensorData::f32(vec![nrows, k], values),
+        TensorData::i32(vec![nrows, k], cols),
+    )
+}
+
+/// Uniform-random-column ELL matrix (every slot filled).
+pub fn random_ell(rng: &mut Rng, nrows: usize, k: usize) -> (TensorData, TensorData) {
+    let values: Vec<f32> = (0..nrows * k).map(|_| rng.gauss() as f32).collect();
+    let cols: Vec<i32> = (0..nrows * k)
+        .map(|_| rng.gen_range(nrows) as i32)
+        .collect();
+    (
+        TensorData::f32(vec![nrows, k], values),
+        TensorData::i32(vec![nrows, k], cols),
+    )
+}
+
+/// Identity matrix in ELL form (analytic checks: y == x).
+pub fn identity_ell(nrows: usize, k: usize) -> (TensorData, TensorData) {
+    assert!(k >= 1);
+    let mut values = vec![0.0f32; nrows * k];
+    let mut cols = vec![0i32; nrows * k];
+    for i in 0..nrows {
+        values[i * k] = 1.0;
+        cols[i * k] = i as i32;
+    }
+    (
+        TensorData::f32(vec![nrows, k], values),
+        TensorData::i32(vec![nrows, k], cols),
+    )
+}
+
+/// Host-side ELL SpMV oracle (validates artifacts in integration tests).
+pub fn spmv_reference(values: &[f32], col_idx: &[i32], x: &[f32], nrows: usize, k: usize) -> Vec<f32> {
+    let mut y = vec![0.0f32; nrows];
+    for i in 0..nrows {
+        let mut acc = 0.0f32;
+        for j in 0..k {
+            acc += values[i * k + j] * x[col_idx[i * k + j] as usize];
+        }
+        y[i] = acc;
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn banded_indices_in_range_and_sorted_per_row() {
+        let mut rng = Rng::new(6);
+        let (_, ci) = banded_ell(&mut rng, 64, 8);
+        let cols = ci.as_i32().unwrap();
+        assert!(cols.iter().all(|&c| (0..64).contains(&c)));
+        // Filled prefix of each row is strictly increasing.
+        for i in 0..64 {
+            let row = &cols[i * 8..(i + 1) * 8];
+            for w in row.windows(2) {
+                if w[1] != 0 {
+                    // within the filled prefix
+                    assert!(w[1] > w[0] || w[1] == 0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn random_indices_in_range() {
+        let mut rng = Rng::new(8);
+        let (_, ci) = random_ell(&mut rng, 32, 4);
+        assert!(ci.as_i32().unwrap().iter().all(|&c| (0..32).contains(&c)));
+    }
+
+    #[test]
+    fn identity_spmv_is_identity() {
+        let (v, ci) = identity_ell(16, 4);
+        let x: Vec<f32> = (0..16).map(|i| i as f32 * 0.5).collect();
+        let y = spmv_reference(
+            v.as_f32().unwrap(),
+            ci.as_i32().unwrap(),
+            &x,
+            16,
+            4,
+        );
+        assert_eq!(y, x);
+    }
+
+    #[test]
+    fn padding_contributes_nothing() {
+        // Row with a single entry: the k-1 padding slots (value 0, col 0)
+        // must not perturb the result even when x[0] is huge.
+        let mut values = vec![0.0f32; 4];
+        let mut cols = vec![0i32; 4];
+        values[0] = 2.0;
+        cols[0] = 1;
+        let x = vec![1e9, 3.0];
+        let y = spmv_reference(&values, &cols, &x, 1, 4);
+        assert_eq!(y, vec![6.0]);
+    }
+}

@@ -1,0 +1,111 @@
+//! Grid inputs for the stencil / Jacobi kernel families.
+//!
+//! Grids are stored padded: shape (m+2, n+2) whose outer ring is the
+//! Dirichlet boundary and whose interior the sweep updates.
+
+use crate::runtime::TensorData;
+use crate::util::rng::Rng;
+
+/// Random padded grid (tuning workloads — exercises all value paths).
+pub fn random_padded_grid(rng: &mut Rng, m: usize, n: usize) -> TensorData {
+    TensorData::f32(vec![m + 2, n + 2], rng.gauss_vec_f32((m + 2) * (n + 2)))
+}
+
+/// Hot-boundary/cold-interior grid: boundary = `boundary_temp`,
+/// interior = 0.  The heat-diffusion start state of the E2E solver.
+pub fn hot_boundary_grid(m: usize, n: usize, boundary_temp: f32) -> TensorData {
+    let (rows, cols) = (m + 2, n + 2);
+    let mut data = vec![0.0f32; rows * cols];
+    for j in 0..cols {
+        data[j] = boundary_temp;
+        data[(rows - 1) * cols + j] = boundary_temp;
+    }
+    for i in 0..rows {
+        data[i * cols] = boundary_temp;
+        data[i * cols + cols - 1] = boundary_temp;
+    }
+    TensorData::f32(vec![rows, cols], data)
+}
+
+/// Residual between two padded grids (max-abs over the interior) — the
+/// solver's convergence metric, computed host-side.
+pub fn interior_residual(a: &[f32], b: &[f32], m: usize, n: usize) -> f32 {
+    let cols = n + 2;
+    let mut worst = 0.0f32;
+    for i in 1..=m {
+        for j in 1..=n {
+            let d = (a[i * cols + j] - b[i * cols + j]).abs();
+            if d > worst {
+                worst = d;
+            }
+        }
+    }
+    worst
+}
+
+/// Analytic steady state of the hot-boundary problem is uniform
+/// `boundary_temp`; distance from it measures solver progress.
+pub fn distance_from_steady_state(grid: &[f32], m: usize, n: usize, temp: f32) -> f32 {
+    let cols = n + 2;
+    let mut worst = 0.0f32;
+    for i in 1..=m {
+        for j in 1..=n {
+            let d = (grid[i * cols + j] - temp).abs();
+            if d > worst {
+                worst = d;
+            }
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hot_boundary_layout() {
+        let t = hot_boundary_grid(3, 4, 2.0);
+        assert_eq!(t.shape(), &[5, 6]);
+        let g = t.as_f32().unwrap();
+        // Boundary ring all 2.0.
+        for j in 0..6 {
+            assert_eq!(g[j], 2.0);
+            assert_eq!(g[4 * 6 + j], 2.0);
+        }
+        for i in 0..5 {
+            assert_eq!(g[i * 6], 2.0);
+            assert_eq!(g[i * 6 + 5], 2.0);
+        }
+        // Interior all 0.
+        for i in 1..4 {
+            for j in 1..5 {
+                assert_eq!(g[i * 6 + j], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn residual_detects_interior_change_only() {
+        let a = hot_boundary_grid(3, 3, 1.0);
+        let mut b_data = a.as_f32().unwrap().to_vec();
+        b_data[0] = 99.0; // boundary corner — must be ignored
+        assert_eq!(interior_residual(a.as_f32().unwrap(), &b_data, 3, 3), 0.0);
+        b_data[1 * 5 + 2] += 0.25; // interior cell
+        assert_eq!(interior_residual(a.as_f32().unwrap(), &b_data, 3, 3), 0.25);
+    }
+
+    #[test]
+    fn steady_state_distance() {
+        let t = hot_boundary_grid(2, 2, 1.0);
+        // Cold interior is distance 1.0 from the all-1.0 steady state.
+        assert_eq!(distance_from_steady_state(t.as_f32().unwrap(), 2, 2, 1.0), 1.0);
+    }
+
+    #[test]
+    fn random_grid_shape() {
+        let mut rng = Rng::new(2);
+        let t = random_padded_grid(&mut rng, 8, 16);
+        assert_eq!(t.shape(), &[10, 18]);
+    }
+}

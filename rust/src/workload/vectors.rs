@@ -1,0 +1,57 @@
+//! Dense vector inputs for the Figure-1 (SIMD loop) kernel family.
+
+use crate::runtime::TensorData;
+use crate::util::rng::Rng;
+
+/// Standard-normal f32 vector.
+pub fn gauss(rng: &mut Rng, n: usize) -> TensorData {
+    TensorData::f32(vec![n], rng.gauss_vec_f32(n))
+}
+
+/// Linearly spaced vector in [lo, hi] (analytic-check workloads).
+pub fn linspace(lo: f32, hi: f32, n: usize) -> TensorData {
+    assert!(n >= 2, "linspace needs n >= 2");
+    let step = (hi - lo) / (n - 1) as f32;
+    TensorData::f32(vec![n], (0..n).map(|i| lo + step * i as f32).collect())
+}
+
+/// Constant vector.
+pub fn constant(v: f32, n: usize) -> TensorData {
+    TensorData::f32(vec![n], vec![v; n])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gauss_shape_and_determinism() {
+        let mut r1 = Rng::new(4);
+        let mut r2 = Rng::new(4);
+        let a = gauss(&mut r1, 128);
+        let b = gauss(&mut r2, 128);
+        assert_eq!(a.shape(), &[128]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn linspace_endpoints() {
+        let t = linspace(-1.0, 1.0, 5);
+        let d = t.as_f32().unwrap();
+        assert_eq!(d[0], -1.0);
+        assert_eq!(d[4], 1.0);
+        assert_eq!(d[2], 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn linspace_n1_panics() {
+        linspace(0.0, 1.0, 1);
+    }
+
+    #[test]
+    fn constant_fill() {
+        let t = constant(2.5, 16);
+        assert!(t.as_f32().unwrap().iter().all(|&x| x == 2.5));
+    }
+}

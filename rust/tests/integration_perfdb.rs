@@ -1,0 +1,116 @@
+//! Persistence integration: tune → record → save → reopen → deploy, and
+//! the cross-platform warm-start transfer path.
+
+use std::sync::Arc;
+
+use portatune::coordinator::measure::MeasureConfig;
+use portatune::coordinator::perfdb::{unix_now, DbEntry, PerfDb};
+use portatune::coordinator::platform::Fingerprint;
+use portatune::coordinator::search::Exhaustive;
+use portatune::coordinator::tuner::Tuner;
+use portatune::runtime::{Registry, Runtime};
+
+fn registry() -> Arc<Registry> {
+    let runtime = Runtime::cpu().expect("PJRT CPU client");
+    Arc::new(Registry::open(runtime, "artifacts").expect("artifacts/"))
+}
+
+fn tmp_db(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("portatune-it-{}-{name}.json", std::process::id()))
+}
+
+#[test]
+fn tune_record_save_reopen_deploy() {
+    let reg = registry();
+    let tuner = Tuner::new(&reg).with_measure_cfg(MeasureConfig::quick());
+    let mut strategy = Exhaustive::new();
+    let outcome = tuner.tune("axpy", "n4096", &mut strategy, usize::MAX).unwrap();
+
+    let path = tmp_db("roundtrip");
+    let mut db = PerfDb::open(&path).unwrap();
+    tuner.record(&mut db, &outcome);
+    db.save().unwrap();
+
+    // Reopen from disk and verify the record survived.
+    let db2 = PerfDb::open(&path).unwrap();
+    let key = Fingerprint::detect().key();
+    let entry = db2.lookup(&key, "axpy", "n4096").expect("recorded entry");
+    assert_eq!(entry.best_config_id, outcome.best.as_ref().unwrap().config_id);
+    assert!(entry.best_time_s > 0.0);
+    assert!(entry.baseline_time_s > 0.0);
+    assert!(entry.reference_time_s > 0.0);
+    assert!(entry.speedup() >= 1.0 - 1e-9);
+
+    // Deploy path resolves to the tuned variant's artifact.
+    let deployed = tuner.deployed_artifact(&db2, "axpy", "n4096").unwrap();
+    let (_, wl) = reg.find("axpy", "n4096").unwrap();
+    let expected = &wl.variant(&entry.best_config_id).unwrap().path;
+    assert_eq!(&deployed, expected);
+
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn deploy_falls_back_to_reference_without_record() {
+    let reg = registry();
+    let tuner = Tuner::new(&reg);
+    let db = PerfDb::open(tmp_db("empty")).unwrap();
+    let deployed = tuner.deployed_artifact(&db, "axpy", "n65536").unwrap();
+    let (_, wl) = reg.find("axpy", "n65536").unwrap();
+    assert_eq!(deployed, wl.baseline);
+}
+
+#[test]
+fn warm_start_transfers_config_across_platforms() {
+    // Simulate a record from a *different* platform, then warm-start a
+    // local tune from it with budget 0: the transferred config must be
+    // evaluated and (being the true optimum recorded elsewhere) usable.
+    let reg = registry();
+    let tuner = Tuner::new(&reg).with_measure_cfg(MeasureConfig::quick());
+
+    // First find the local optimum exhaustively (ground truth).
+    let mut ex = Exhaustive::new();
+    let truth = tuner.tune("axpy", "n4096", &mut ex, usize::MAX).unwrap();
+    let best_cfg = truth.best.as_ref().unwrap().config.clone();
+    let best_id = truth.best.as_ref().unwrap().config_id.clone();
+
+    let mut db = PerfDb::open(tmp_db("xfer")).unwrap();
+    db.record(DbEntry {
+        platform_key: "other-machine-0123456789abcdef".into(),
+        kernel: "axpy".into(),
+        tag: "n4096".into(),
+        best_params: best_cfg.clone(),
+        best_config_id: best_id.clone(),
+        best_time_s: 1e-3,
+        baseline_time_s: 2e-3,
+        reference_time_s: 9e-4,
+        evaluations: 9,
+        strategy: "exhaustive".into(),
+        recorded_at: unix_now(),
+    });
+
+    let local_key = Fingerprint::detect().key();
+    let candidates = db.warm_start("axpy", "n4096", &local_key);
+    assert_eq!(candidates.len(), 1);
+    assert_eq!(candidates[0], best_cfg);
+
+    let warm_tuner = Tuner::new(&reg)
+        .with_measure_cfg(MeasureConfig::quick())
+        .with_warm_start(candidates);
+    let mut ex2 = Exhaustive::new();
+    // Budget 0: only default + warm-start evaluations run.
+    let outcome = warm_tuner.tune("axpy", "n4096", &mut ex2, 0).unwrap();
+    assert!(outcome.evaluations() <= 2);
+    assert!(outcome
+        .evaluated
+        .iter()
+        .any(|v| v.config_id == best_id), "warm-start config was not evaluated");
+}
+
+#[test]
+fn corrupt_db_is_rejected_not_swallowed() {
+    let path = tmp_db("corrupt");
+    std::fs::write(&path, "{definitely not json").unwrap();
+    assert!(PerfDb::open(&path).is_err());
+    std::fs::remove_file(&path).ok();
+}

@@ -1,0 +1,222 @@
+//! Integration tests over real AOT artifacts: manifest → PJRT compile →
+//! execute → numerics vs host oracles.  Requires `make artifacts`.
+
+use std::sync::Arc;
+
+use portatune::runtime::{Registry, Runtime, TensorData};
+use portatune::util::rng::Rng;
+use portatune::workload::{self, spmv, stencil};
+
+fn registry() -> Arc<Registry> {
+    let runtime = Runtime::cpu().expect("PJRT CPU client");
+    Arc::new(Registry::open(runtime, "artifacts").expect("artifacts/ (run `make artifacts`)"))
+}
+
+#[test]
+fn manifest_covers_all_families() {
+    let reg = registry();
+    let names: Vec<&str> = reg.manifest().kernels.iter().map(|k| k.name.as_str()).collect();
+    for expected in ["axpy", "dot", "triad", "stencil2d", "jacobi", "spmv_ell", "matmul"] {
+        assert!(names.contains(&expected), "missing kernel {expected}");
+    }
+    // Every workload declares a default variant with an artifact.
+    for k in &reg.manifest().kernels {
+        for w in &k.workloads {
+            let d = w.default.as_deref().expect("default declared");
+            assert!(w.variant(d).is_some(), "{}/{} default {d} has no artifact", k.name, w.tag);
+        }
+    }
+}
+
+#[test]
+fn axpy_baseline_matches_host_oracle() {
+    let reg = registry();
+    let (_, wl) = reg.find("axpy", "n4096").unwrap();
+    let inputs = workload::inputs_for("axpy", wl, 7).unwrap();
+    let exe = reg.load(&wl.baseline).unwrap();
+    let out = exe.run(&inputs).unwrap();
+
+    let a = inputs[0].as_f32().unwrap()[0];
+    let x = inputs[1].as_f32().unwrap();
+    let y = inputs[2].as_f32().unwrap();
+    assert_eq!(out.len(), 4096);
+    for i in 0..4096 {
+        let expect = a * x[i] + y[i];
+        assert!((out[i] - expect).abs() < 1e-5, "i={i}: {} vs {expect}", out[i]);
+    }
+}
+
+#[test]
+fn axpy_variants_match_baseline() {
+    let reg = registry();
+    let (_, wl) = reg.find("axpy", "n4096").unwrap();
+    let inputs = workload::inputs_for("axpy", wl, 13).unwrap();
+    let reference = reg.load(&wl.baseline).unwrap().run(&inputs).unwrap();
+    for v in &wl.variants {
+        let out = reg.load(&v.path).unwrap().run(&inputs).unwrap();
+        assert_eq!(out.len(), reference.len(), "{}", v.id);
+        for i in 0..out.len() {
+            assert!(
+                (out[i] - reference[i]).abs() < 1e-4,
+                "variant {} diverges at {i}",
+                v.id
+            );
+        }
+    }
+}
+
+#[test]
+fn dot_artifact_is_scalar_and_correct() {
+    let reg = registry();
+    let (_, wl) = reg.find("dot", "n4096").unwrap();
+    let inputs = workload::inputs_for("dot", wl, 3).unwrap();
+    let out = reg.load(&wl.baseline).unwrap().run(&inputs).unwrap();
+    assert_eq!(out.len(), 1);
+    let x = inputs[0].as_f32().unwrap();
+    let y = inputs[1].as_f32().unwrap();
+    let expect: f64 = x.iter().zip(y).map(|(&a, &b)| a as f64 * b as f64).sum();
+    assert!(
+        (out[0] as f64 - expect).abs() < 1e-2 * expect.abs().max(1.0),
+        "{} vs {expect}",
+        out[0]
+    );
+}
+
+#[test]
+fn spmv_artifact_matches_host_reference() {
+    let reg = registry();
+    let (_, wl) = reg.find("spmv_ell", "k32_nrows4096").unwrap();
+    let inputs = workload::inputs_for("spmv_ell", wl, 21).unwrap();
+    let out = reg.load(&wl.baseline).unwrap().run(&inputs).unwrap();
+    let v = inputs[0].as_f32().unwrap();
+    let ci = inputs[1].as_i32().unwrap();
+    let x = inputs[2].as_f32().unwrap();
+    let expect = spmv::spmv_reference(v, ci, x, 4096, 32);
+    for i in 0..4096 {
+        assert!((out[i] - expect[i]).abs() < 1e-3, "row {i}");
+    }
+    // A tuned variant agrees too.
+    let var = &wl.variants[0];
+    let out2 = reg.load(&var.path).unwrap().run(&inputs).unwrap();
+    for i in 0..4096 {
+        assert!((out2[i] - expect[i]).abs() < 1e-3, "variant row {i}");
+    }
+}
+
+#[test]
+fn jacobi_step_preserves_boundary_and_diffuses() {
+    let reg = registry();
+    let (_, wl) = reg.find("jacobi", "m256_n256").unwrap();
+    let grid = stencil::hot_boundary_grid(256, 256, 1.0);
+    let exe = reg.load(&wl.baseline).unwrap();
+    let out = exe.run(&[grid.clone()]).unwrap();
+    let g0 = grid.as_f32().unwrap();
+    let cols = 258;
+    // Boundary unchanged.
+    for j in 0..cols {
+        assert_eq!(out[j], g0[j]);
+        assert_eq!(out[257 * cols + j], g0[257 * cols + j]);
+    }
+    // First interior ring received heat; deep interior still cold after
+    // one sweep.
+    assert!(out[cols + 1] > 0.0);
+    assert_eq!(out[129 * cols + 129], 0.0);
+    // Mean distance to the all-hot steady state must shrink over sweeps
+    // (max-norm stays 1.0 until the front reaches the center, so use the
+    // mean).
+    let mean_dist = |g: &[f32]| -> f64 {
+        let mut acc = 0.0f64;
+        for i in 1..=256 {
+            for j in 1..=256 {
+                acc += (g[i * cols + j] - 1.0).abs() as f64;
+            }
+        }
+        acc / (256.0 * 256.0)
+    };
+    let d0 = mean_dist(g0);
+    let mut cur: TensorData = TensorData::f32(vec![258, 258], out);
+    for _ in 0..9 {
+        let next = exe.run(&[cur.clone()]).unwrap();
+        cur = TensorData::f32(vec![258, 258], next);
+    }
+    let d10 = mean_dist(cur.as_f32().unwrap());
+    assert!(d10 < d0, "no diffusion progress: {d10} !< {d0}");
+}
+
+#[test]
+fn matmul_artifact_matches_host_oracle() {
+    let reg = registry();
+    let (_, wl) = reg.find("matmul", "k256_m256_n256").unwrap();
+    let inputs = workload::inputs_for("matmul", wl, 5).unwrap();
+    let out = reg.load(&wl.baseline).unwrap().run(&inputs).unwrap();
+    let a = inputs[0].as_f32().unwrap();
+    let b = inputs[1].as_f32().unwrap();
+    // Spot-check a scattered sample of entries.
+    let mut rng = Rng::new(99);
+    for _ in 0..64 {
+        let i = rng.gen_range(256);
+        let j = rng.gen_range(256);
+        let mut acc = 0.0f64;
+        for k in 0..256 {
+            acc += a[i * 256 + k] as f64 * b[k * 256 + j] as f64;
+        }
+        let got = out[i * 256 + j] as f64;
+        assert!(
+            (got - acc).abs() < 1e-2 * acc.abs().max(1.0),
+            "C[{i},{j}] = {got} vs {acc}"
+        );
+    }
+}
+
+#[test]
+fn compile_cache_hits_do_not_recompile() {
+    let reg = registry();
+    let (_, wl) = reg.find("axpy", "n4096").unwrap();
+    let before = reg.compile_count();
+    let _ = reg.load(&wl.baseline).unwrap();
+    let mid = reg.compile_count();
+    let _ = reg.load(&wl.baseline).unwrap();
+    let after = reg.compile_count();
+    assert_eq!(mid, before + 1);
+    assert_eq!(after, mid, "second load must hit the cache");
+}
+
+#[test]
+fn missing_artifact_errors_cleanly() {
+    let reg = registry();
+    assert!(reg.load("nonexistent/path.hlo.txt").is_err());
+    assert!(reg.find("axpy", "bogus").is_err());
+    assert!(reg.find("bogus", "n4096").is_err());
+}
+
+#[test]
+fn untupled_jacobi_twin_agrees_with_tupled() {
+    use portatune::runtime::registry::untupled_path;
+    let reg = registry();
+    let (_, wl) = reg.find("jacobi", "m256_n256").unwrap();
+    assert!(wl.untupled, "jacobi must declare untupled twins");
+    let grid = stencil::hot_boundary_grid(256, 256, 1.0);
+
+    let tupled = reg.load(&wl.baseline).unwrap().run(&[grid.clone()]).unwrap();
+
+    // Device-resident path: upload, run over buffers, download.
+    let nt = reg.load(&untupled_path(&wl.baseline)).unwrap();
+    let buf = reg
+        .runtime()
+        .buffer_from_f32(grid.as_f32().unwrap(), &[258, 258])
+        .unwrap();
+    let out_buf = nt.run_buffers(&[&buf]).unwrap();
+    let out = out_buf.to_literal_sync().unwrap().to_vec::<f32>().unwrap();
+
+    assert_eq!(out.len(), tupled.len());
+    for (a, b) in out.iter().zip(&tupled) {
+        assert_eq!(a, b, "untupled twin must be bit-identical");
+    }
+}
+
+#[test]
+fn untupled_path_convention() {
+    use portatune::runtime::registry::untupled_path;
+    assert_eq!(untupled_path("jacobi/m256_n256/base.hlo.txt"), "jacobi/m256_n256/base.nt.hlo.txt");
+    assert_eq!(untupled_path("weird"), "weird.nt");
+}

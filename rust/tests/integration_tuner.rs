@@ -1,0 +1,196 @@
+//! End-to-end tuner integration: the full paper pipeline over real
+//! artifacts, plus annotation-driven spec construction.
+
+use std::sync::Arc;
+
+use portatune::coordinator::annotation::{extract_blocks, Annotation};
+use portatune::coordinator::measure::MeasureConfig;
+use portatune::coordinator::search::{Anneal, Exhaustive, HillClimb, RandomSearch};
+use portatune::coordinator::spec::TuningSpec;
+use portatune::coordinator::tuner::Tuner;
+use portatune::runtime::{Registry, Runtime};
+
+fn registry() -> Arc<Registry> {
+    let runtime = Runtime::cpu().expect("PJRT CPU client");
+    Arc::new(Registry::open(runtime, "artifacts").expect("artifacts/"))
+}
+
+fn quick_tuner(reg: &Registry) -> Tuner<'_> {
+    Tuner::new(reg).with_measure_cfg(MeasureConfig::quick())
+}
+
+#[test]
+fn exhaustive_tune_axpy_small() {
+    let reg = registry();
+    let tuner = quick_tuner(&reg);
+    let mut strategy = Exhaustive::new();
+    let outcome = tuner.tune("axpy", "n4096", &mut strategy, usize::MAX).unwrap();
+
+    // Space: blocks {256,1024,4096} x unrolls {1,2,4} = 9 valid points.
+    assert_eq!(outcome.evaluations(), 9);
+    // Every variant passed the correctness gate (they all compute axpy).
+    for v in &outcome.evaluated {
+        let c = v.correctness.as_ref().expect("evaluated");
+        assert!(c.ok, "variant {} failed gate: {c:?}", v.config_id);
+        assert!(v.cost.is_finite());
+    }
+    // The default schedule was evaluated and reported.
+    let d = outcome.default.as_ref().expect("default evaluated");
+    assert_eq!(d.config_id, "b1024_u1");
+    // Autotuned never loses to the un-annotated baseline.
+    assert!(outcome.speedup() >= 1.0 - 1e-9);
+    assert!(outcome.best_time() <= outcome.baseline_time() + 1e-12);
+    // Sanity on the comparator ratio.
+    assert!(outcome.vs_reference() > 0.0);
+}
+
+#[test]
+fn budgeted_strategies_respect_budget_and_find_valid_best() {
+    let reg = registry();
+    let tuner = quick_tuner(&reg);
+    let spec = tuner.spec("axpy", "n4096").unwrap();
+
+    let mut anneal = Anneal::new(7);
+    let outcome = tuner.tune("axpy", "n4096", &mut anneal, 4).unwrap();
+    // 4 search evals + 1 forced default eval (deduped if revisited).
+    assert!(outcome.evaluations() <= 5, "evals {}", outcome.evaluations());
+    let best = outcome.best.as_ref().unwrap();
+    assert!(spec.is_valid(&best.config));
+
+    let mut hc = HillClimb::new(3);
+    let outcome = tuner.tune("axpy", "n4096", &mut hc, 4).unwrap();
+    assert!(outcome.evaluations() <= 5);
+
+    let mut rnd = RandomSearch::new(11);
+    let outcome = tuner.tune("axpy", "n4096", &mut rnd, 3).unwrap();
+    assert!(outcome.evaluations() <= 4);
+}
+
+#[test]
+fn warm_start_candidates_are_evaluated_first() {
+    let reg = registry();
+    let mut tuner = quick_tuner(&reg);
+    let spec = tuner.spec("axpy", "n4096").unwrap();
+    let cfg = spec.enumerate().into_iter().last().unwrap();
+    tuner.warm_start = vec![cfg.clone()];
+    // Budget 0: only the forced default + warm-start evals happen.
+    let mut strategy = Exhaustive::new();
+    let outcome = tuner.tune("axpy", "n4096", &mut strategy, 0).unwrap();
+    assert_eq!(outcome.evaluations(), 2);
+    assert!(outcome.evaluated.iter().any(|v| v.config == cfg));
+}
+
+#[test]
+fn spec_matches_manifest_grid() {
+    let reg = registry();
+    let tuner = quick_tuner(&reg);
+    let spec = tuner.spec("stencil2d", "m128_n128").unwrap();
+    let (_, wl) = reg.find("stencil2d", "m128_n128").unwrap();
+    // Every enumerated config has a pre-lowered artifact, and vice versa.
+    let ids: Vec<String> = spec.enumerate().iter().map(|c| spec.config_id(c)).collect();
+    let manifest_ids: Vec<&str> = wl.variants.iter().map(|v| v.id.as_str()).collect();
+    assert_eq!(ids.len(), manifest_ids.len());
+    for id in &ids {
+        assert!(manifest_ids.contains(&id.as_str()), "{id} missing artifact");
+    }
+}
+
+#[test]
+fn annotation_spec_round_trips_against_manifest() {
+    // An annotation block equivalent to the axpy manifest entry must
+    // produce the same search space.
+    let source = r#"
+        /*@ tune kernel=axpy workload=n4096
+            param block_size as b [256, 1024, 4096, 16384]
+            param unroll as u [1, 2, 4]
+            constraint block_size <= n
+            constraint block_size % unroll == 0
+        @*/
+    "#;
+    let ann = Annotation::parse(&extract_blocks(source)[0]).unwrap();
+    let dims = [("n".to_string(), 4096i64)].into_iter().collect();
+    let from_ann: TuningSpec = ann.to_spec("n4096", dims).unwrap();
+
+    let reg = registry();
+    let tuner = quick_tuner(&reg);
+    let from_manifest = tuner.spec("axpy", "n4096").unwrap();
+
+    let a: Vec<String> =
+        from_ann.enumerate().iter().map(|c| from_ann.config_id(c)).collect();
+    let b: Vec<String> = from_manifest
+        .enumerate()
+        .iter()
+        .map(|c| from_manifest.config_id(c))
+        .collect();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn tuned_outputs_match_reference_everywhere() {
+    // The correctness gate's own integrity: take the best variant, rerun
+    // it, compare raw outputs to the baseline artifact.
+    let reg = registry();
+    let tuner = quick_tuner(&reg);
+    let mut strategy = Exhaustive::new();
+    let outcome = tuner.tune("dot", "n4096", &mut strategy, usize::MAX).unwrap();
+    let best = outcome.best.as_ref().unwrap();
+
+    let (_, wl) = reg.find("dot", "n4096").unwrap();
+    let inputs = tuner.inputs("dot", "n4096").unwrap();
+    let reference = reg.load(&wl.baseline).unwrap().run(&inputs).unwrap();
+    let variant = wl.variant(&best.config_id).unwrap();
+    let out = reg.load(&variant.path).unwrap().run(&inputs).unwrap();
+    assert_eq!(out.len(), reference.len());
+    for (o, r) in out.iter().zip(&reference) {
+        assert!((o - r).abs() <= 1e-3 + 2e-4 * r.abs());
+    }
+}
+
+#[test]
+fn zero_tolerance_gates_reassociated_variants_gracefully() {
+    // dot variants re-associate the reduction, so with a zero tolerance
+    // most (often all) variants fail the gate.  The tuner must degrade
+    // gracefully: gated variants get infinite cost, and if nothing
+    // passes, the outcome falls back to the reference (speedup 1.0).
+    let reg = registry();
+    let mut tuner = quick_tuner(&reg);
+    tuner.tolerance = portatune::coordinator::selection::Tolerance { rtol: 0.0, atol: 0.0 };
+    let mut strategy = Exhaustive::new();
+    let outcome = tuner.tune("dot", "n4096", &mut strategy, usize::MAX).unwrap();
+    for v in &outcome.evaluated {
+        let c = v.correctness.as_ref().unwrap();
+        if !c.ok {
+            assert!(v.cost.is_infinite(), "{} gated but finite cost", v.config_id);
+        }
+    }
+    // Whatever happens, reported times are well-defined and positive.
+    assert!(outcome.baseline_time() > 0.0);
+    assert!(outcome.best_time() > 0.0);
+    assert!(outcome.speedup() >= 0.99);
+}
+
+#[test]
+fn corrupt_artifact_fails_cleanly_not_fatally() {
+    // A variant whose artifact is garbage must surface as a failed
+    // evaluation (infinite cost), not a crash of the whole tune.
+    let reg = registry();
+    let err = reg
+        .runtime()
+        .compile_text("definitely not HLO text {", "garbage")
+        .err()
+        .expect("garbage HLO must not compile");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("garbage") || !msg.is_empty());
+}
+
+#[test]
+fn neldermead_tunes_real_space() {
+    use portatune::coordinator::search::NelderMead;
+    let reg = registry();
+    let tuner = quick_tuner(&reg);
+    let mut nm = NelderMead::new(17);
+    let outcome = tuner.tune("stencil2d", "m128_n128", &mut nm, 8).unwrap();
+    assert!(outcome.evaluations() <= 9); // budget + forced default
+    let spec = tuner.spec("stencil2d", "m128_n128").unwrap();
+    assert!(spec.is_valid(&outcome.best.as_ref().unwrap().config));
+}

