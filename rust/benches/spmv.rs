@@ -19,7 +19,7 @@ fn main() -> anyhow::Result<()> {
     tuner.measure_cfg = if quick {
         MeasureConfig::quick()
     } else {
-        MeasureConfig { warmup: 1, reps: 3, target_rel_spread: 0.5, max_reps: 4, outlier_k: 5.0 }
+        MeasureConfig { warmup: 1, reps: 3, target_rel_spread: 0.5, max_reps: 4, outlier_k: 5.0, ..MeasureConfig::default() }
     };
 
     println!("experiment E3 — ELLPACK SpMV (banded matrices, k=32 padded width)");

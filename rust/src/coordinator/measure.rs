@@ -7,10 +7,25 @@
 //! relative spread (MAD/median) falls under a threshold or a hard cap is
 //! reached.  Inputs are converted to literals ONCE, outside the timed
 //! region — only execution + output materialization is timed.
+//!
+//! Two entry points share that protocol:
+//! * [`measure`] — one executable, full sampling (the serial pipeline);
+//! * [`race`] — a batch of executables with interleaved repetitions and
+//!   successive-halving early termination: every candidate gets a
+//!   guaranteed floor of repetitions ([`MeasureConfig::race_min_reps`]),
+//!   after which any candidate whose most optimistic achievable median
+//!   (its fastest sample so far) is already slower than the incumbent
+//!   best median stops being measured.  On a noise-free cost surface the
+//!   race provably selects the same winner as full measurement (the
+//!   winner's own samples define the bar and can never exceed it); the
+//!   property tests in `tests/prop_coordinator.rs` pin this down.
 
 use std::time::Instant;
 
 use anyhow::Result;
+
+#[cfg(not(feature = "xla-runtime"))]
+use crate::xla;
 
 use crate::runtime::{Executable, TensorData};
 use crate::util::stats::{reject_outliers, Summary};
@@ -28,6 +43,10 @@ pub struct MeasureConfig {
     pub max_reps: usize,
     /// MAD multiplier for one-sided outlier rejection (0 = keep all).
     pub outlier_k: f64,
+    /// Racing floor: repetitions every raced candidate is guaranteed
+    /// before the early-termination cutoff may prune it.  Lower = more
+    /// aggressive saving, higher = more robust to timing noise.
+    pub race_min_reps: usize,
 }
 
 impl Default for MeasureConfig {
@@ -38,6 +57,7 @@ impl Default for MeasureConfig {
             target_rel_spread: 0.10,
             max_reps: 28,
             outlier_k: 5.0,
+            race_min_reps: 3,
         }
     }
 }
@@ -51,6 +71,7 @@ impl MeasureConfig {
             target_rel_spread: 1.0,
             max_reps: 3,
             outlier_k: 0.0,
+            race_min_reps: 2,
         }
     }
 }
@@ -81,6 +102,52 @@ impl Measurement {
     }
 }
 
+/// Robust summary over samples with the configured outlier rejection.
+fn summarize(samples: Vec<f64>, cfg: &MeasureConfig) -> Result<Measurement> {
+    let filtered = if cfg.outlier_k > 0.0 {
+        reject_outliers(&samples, cfg.outlier_k)
+    } else {
+        samples.clone()
+    };
+    let summary = Summary::from_samples(&filtered)
+        .ok_or_else(|| anyhow::anyhow!("degenerate timing sample"))?;
+    Ok(Measurement { summary, samples })
+}
+
+/// Is a sample set complete under the adaptive-extension rule?
+fn sampling_done(samples: &[f64], cfg: &MeasureConfig) -> bool {
+    if samples.len() >= cfg.max_reps {
+        return true;
+    }
+    if samples.len() < cfg.reps.max(1) {
+        return false;
+    }
+    match Summary::from_samples(samples) {
+        Some(s) => s.rel_spread() <= cfg.target_rel_spread,
+        None => true,
+    }
+}
+
+/// The timing protocol: repeat execute-and-materialize until the
+/// adaptive-extension rule is satisfied.  The single place a timed
+/// repetition is defined — `measure`, `measure_with_outputs`, and the
+/// racing samplers all route through the same shape.
+fn timed_samples(
+    exe: &Executable,
+    literals: &[xla::Literal],
+    cfg: &MeasureConfig,
+) -> Result<Vec<f64>> {
+    let mut samples = Vec::with_capacity(cfg.reps);
+    while !sampling_done(&samples, cfg) {
+        let t0 = Instant::now();
+        let out = exe.run_literals(literals)?;
+        let dt = t0.elapsed().as_secs_f64();
+        std::hint::black_box(&out);
+        samples.push(dt);
+    }
+    Ok(samples)
+}
+
 /// Measure one executable over fixed inputs.
 pub fn measure(
     exe: &Executable,
@@ -96,33 +163,196 @@ pub fn measure(
     for _ in 0..cfg.warmup {
         exe.run_literals(&literals)?;
     }
+    summarize(timed_samples(exe, &literals, cfg)?, cfg)
+}
 
-    let mut samples = Vec::with_capacity(cfg.reps);
-    let mut quota = cfg.reps.max(1);
+/// Measure one executable AND capture its outputs, reusing the first
+/// warmup execution as the output run — the artifact is never executed
+/// redundantly just to read its results (the baseline used to pay one
+/// full extra execution per tune for exactly this).
+pub fn measure_with_outputs(
+    exe: &Executable,
+    inputs: &[TensorData],
+    cfg: &MeasureConfig,
+) -> Result<(Measurement, Vec<f32>)> {
+    let literals = inputs
+        .iter()
+        .map(|t| t.to_literal())
+        .collect::<Result<Vec<_>>>()?;
+
+    // First execution doubles as warmup #1 and the output capture; it
+    // always runs even with warmup = 0 (outputs have to come from
+    // somewhere), it just stays untimed.
+    let first = exe.run_literals(&literals)?;
+    let outputs = first.to_vec::<f32>()?;
+    for _ in 1..cfg.warmup {
+        exe.run_literals(&literals)?;
+    }
+    Ok((summarize(timed_samples(exe, &literals, cfg)?, cfg)?, outputs))
+}
+
+/// One candidate's record from a [`race`].
+#[derive(Debug, Clone)]
+pub struct Lane {
+    /// Raw samples collected before completion or cutoff.
+    pub samples: Vec<f64>,
+    /// Round-robin round at which the cutoff pruned this lane
+    /// (`None` = ran to normal completion).
+    pub cut_at: Option<usize>,
+    /// The lane's sampler errored mid-race (its partial samples remain).
+    pub errored: bool,
+}
+
+/// Result of racing a batch of candidates.
+#[derive(Debug)]
+pub struct RaceOutcome {
+    /// Per-lane summaries, input order; `None` when a lane produced no
+    /// usable samples (sampler error before its first repetition).
+    pub measurements: Vec<Option<Measurement>>,
+    pub lanes: Vec<Lane>,
+    /// Lane index with the smallest final median, if any lane finished.
+    pub winner: Option<usize>,
+    /// Timed repetitions actually executed across all lanes.
+    pub reps_timed: u64,
+    /// Lower bound on repetitions avoided vs the serial harness, which
+    /// gives every candidate at least `cfg.reps` (savings from skipped
+    /// adaptive extensions are real but not counted here).
+    pub reps_saved: u64,
+    /// Lanes stopped early by the cutoff.
+    pub pruned: u64,
+}
+
+/// Race a set of cost samplers with interleaved repetitions and
+/// successive-halving early termination.  `incumbent` is an externally
+/// known best median (e.g. the best variant of previous batches): lanes
+/// that cannot beat it stop at the repetition floor.
+///
+/// This is the testable core of [`race`]; each closure returns one timed
+/// repetition's cost in seconds.
+pub fn race_samplers(
+    samplers: &mut [Box<dyn FnMut() -> Result<f64> + '_>],
+    cfg: &MeasureConfig,
+    incumbent: Option<f64>,
+) -> Result<RaceOutcome> {
+    let n = samplers.len();
+    let min_reps = cfg.race_min_reps.clamp(1, cfg.max_reps.max(1));
+    let mut lanes: Vec<Lane> = (0..n)
+        .map(|_| Lane { samples: Vec::new(), cut_at: None, errored: false })
+        .collect();
+    let mut reps_timed = 0u64;
+    let mut round = 0usize;
+
     loop {
-        while samples.len() < quota {
-            let t0 = Instant::now();
-            let out = exe.run_literals(&literals)?;
-            let dt = t0.elapsed().as_secs_f64();
-            std::hint::black_box(&out);
-            samples.push(dt);
+        round += 1;
+        let mut any_progress = false;
+        for (lane, sampler) in lanes.iter_mut().zip(samplers.iter_mut()) {
+            if lane.cut_at.is_some() || lane.errored || sampling_done(&lane.samples, cfg) {
+                continue;
+            }
+            match sampler() {
+                Ok(dt) => {
+                    lane.samples.push(dt);
+                    reps_timed += 1;
+                    any_progress = true;
+                }
+                Err(_) => {
+                    lane.errored = true;
+                    lane.cut_at = Some(round);
+                }
+            }
         }
-        let summary = Summary::from_samples(&samples)
-            .ok_or_else(|| anyhow::anyhow!("degenerate timing sample"))?;
-        if summary.rel_spread() <= cfg.target_rel_spread || quota >= cfg.max_reps {
+        if !any_progress {
             break;
         }
-        quota = (quota * 2).min(cfg.max_reps);
+
+        // Cutoff pass.  The bar is the most credible median known so
+        // far: the best current median among lanes that reached the
+        // repetition floor, tightened by the external incumbent.
+        let best_median = lanes
+            .iter()
+            .filter(|l| !l.errored && l.samples.len() >= min_reps)
+            .filter_map(|l| Summary::from_samples(&l.samples))
+            .map(|s| s.median)
+            .fold(f64::INFINITY, f64::min);
+        let bar = best_median.min(incumbent.unwrap_or(f64::INFINITY));
+        if bar.is_finite() {
+            for lane in lanes.iter_mut() {
+                if lane.cut_at.is_some()
+                    || lane.errored
+                    || lane.samples.len() < min_reps
+                    || sampling_done(&lane.samples, cfg)
+                {
+                    continue;
+                }
+                // Most optimistic median this lane can still achieve is
+                // bounded below by its fastest observation; strictly
+                // above the bar ⇒ it can never win ⇒ stop paying for it.
+                let optimistic = lane.samples.iter().copied().fold(f64::INFINITY, f64::min);
+                if optimistic > bar {
+                    lane.cut_at = Some(round);
+                }
+            }
+        }
     }
 
-    let filtered = if cfg.outlier_k > 0.0 {
-        reject_outliers(&samples, cfg.outlier_k)
-    } else {
-        samples.clone()
-    };
-    let summary = Summary::from_samples(&filtered)
-        .ok_or_else(|| anyhow::anyhow!("degenerate timing sample"))?;
-    Ok(Measurement { summary, samples })
+    let measurements: Vec<Option<Measurement>> = lanes
+        .iter()
+        .map(|l| {
+            if l.samples.is_empty() {
+                None
+            } else {
+                summarize(l.samples.clone(), cfg).ok()
+            }
+        })
+        .collect();
+    let winner = measurements
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| !lanes[*i].errored)
+        .filter_map(|(i, m)| m.as_ref().map(|m| (i, m.cost())))
+        .min_by(|a, b| a.1.total_cmp(&b.1))
+        .map(|(i, _)| i);
+    let reps_saved = lanes
+        .iter()
+        .map(|l| cfg.reps.saturating_sub(l.samples.len()) as u64)
+        .sum();
+    let pruned = lanes.iter().filter(|l| l.cut_at.is_some() && !l.errored).count() as u64;
+    Ok(RaceOutcome { measurements, lanes, winner, reps_timed, reps_saved, pruned })
+}
+
+/// Race a batch of compiled variants over fixed inputs (see module docs).
+/// Timing stays on the calling thread; repetitions are interleaved
+/// across candidates so the cutoff always compares contemporaneous
+/// samples (a system-wide slowdown hits every lane equally).
+pub fn race(
+    exes: &[&Executable],
+    inputs: &[TensorData],
+    cfg: &MeasureConfig,
+    incumbent: Option<f64>,
+) -> Result<RaceOutcome> {
+    let literals = inputs
+        .iter()
+        .map(|t| t.to_literal())
+        .collect::<Result<Vec<_>>>()?;
+    for exe in exes {
+        for _ in 0..cfg.warmup {
+            exe.run_literals(&literals)?;
+        }
+    }
+    let mut samplers: Vec<Box<dyn FnMut() -> Result<f64> + '_>> = exes
+        .iter()
+        .map(|exe| {
+            let literals = &literals;
+            Box::new(move || {
+                let t0 = Instant::now();
+                let out = exe.run_literals(literals)?;
+                let dt = t0.elapsed().as_secs_f64();
+                std::hint::black_box(&out);
+                Ok(dt)
+            }) as Box<dyn FnMut() -> Result<f64> + '_>
+        })
+        .collect();
+    race_samplers(&mut samplers, cfg, incumbent)
 }
 
 #[cfg(test)]
@@ -136,6 +366,7 @@ mod tests {
         assert!(c.reps >= 3);
         assert!(c.max_reps >= c.reps);
         assert!(c.target_rel_spread > 0.0);
+        assert!(c.race_min_reps >= 1 && c.race_min_reps <= c.reps);
     }
 
     #[test]
@@ -158,5 +389,123 @@ mod tests {
         // 2 GiB in 2 ms = 1000 GiB/s.
         let gib = m.gibps(2 * 1024 * 1024 * 1024);
         assert!((gib - 1000.0).abs() < 1e-9);
+    }
+
+    fn constant_lanes(costs: &[f64]) -> Vec<Box<dyn FnMut() -> Result<f64> + '_>> {
+        costs
+            .iter()
+            .map(|&c| Box::new(move || Ok(c)) as Box<dyn FnMut() -> Result<f64> + '_>)
+            .collect()
+    }
+
+    fn cfg() -> MeasureConfig {
+        MeasureConfig {
+            warmup: 0,
+            reps: 7,
+            target_rel_spread: 0.10,
+            max_reps: 28,
+            outlier_k: 0.0,
+            race_min_reps: 3,
+        }
+    }
+
+    #[test]
+    fn race_picks_true_winner_on_constant_costs() {
+        let costs = [4e-3, 1e-3, 2e-3, 8e-3];
+        let mut lanes = constant_lanes(&costs);
+        let out = race_samplers(&mut lanes, &cfg(), None).unwrap();
+        assert_eq!(out.winner, Some(1));
+        let m = out.measurements[1].as_ref().unwrap();
+        assert!((m.cost() - 1e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn race_prunes_losers_at_the_floor() {
+        let costs = [4e-3, 1e-3, 2e-3, 8e-3];
+        let mut lanes = constant_lanes(&costs);
+        let c = cfg();
+        let out = race_samplers(&mut lanes, &c, None).unwrap();
+        // Constant samples ⇒ spread 0 ⇒ the winner stops at `reps`;
+        // every loser is cut at the floor.
+        assert_eq!(out.pruned, 3);
+        for (i, lane) in out.lanes.iter().enumerate() {
+            if i == 1 {
+                assert_eq!(lane.samples.len(), c.reps);
+                assert!(lane.cut_at.is_none());
+            } else {
+                assert_eq!(lane.samples.len(), c.race_min_reps);
+                assert!(lane.cut_at.is_some());
+            }
+        }
+        // ≥ 30% fewer timed reps than serial full measurement.
+        let serial = (costs.len() * c.reps) as u64;
+        assert!(
+            out.reps_timed as f64 <= 0.7 * serial as f64,
+            "race spent {} of serial {serial}",
+            out.reps_timed
+        );
+        assert_eq!(out.reps_saved, serial - out.reps_timed);
+    }
+
+    #[test]
+    fn race_incumbent_prunes_everything_slower() {
+        let costs = [4e-3, 2e-3];
+        let mut lanes = constant_lanes(&costs);
+        let c = cfg();
+        let out = race_samplers(&mut lanes, &c, Some(1e-3)).unwrap();
+        // Both lanes lose to the incumbent: both stop at the floor.
+        assert_eq!(out.pruned, 2);
+        assert!(out.lanes.iter().all(|l| l.samples.len() == c.race_min_reps));
+        // Winner is still reported (relative order preserved).
+        assert_eq!(out.winner, Some(1));
+    }
+
+    #[test]
+    fn race_tolerates_a_failing_lane() {
+        let mut n = 0usize;
+        let mut lanes: Vec<Box<dyn FnMut() -> Result<f64> + '_>> = vec![
+            Box::new(|| Ok(2e-3)),
+            Box::new(move || {
+                n += 1;
+                if n > 1 {
+                    Err(anyhow::anyhow!("lane died"))
+                } else {
+                    Ok(1e-3)
+                }
+            }),
+        ];
+        let out = race_samplers(&mut lanes, &cfg(), None).unwrap();
+        assert!(out.lanes[1].errored);
+        // The healthy lane still completes and wins — errored lanes are
+        // never eligible even when their partial median looks fast.
+        assert_eq!(out.lanes[0].cut_at, None);
+        assert!(out.measurements[0].is_some());
+        assert_eq!(out.winner, Some(0));
+    }
+
+    #[test]
+    fn race_never_cuts_below_the_floor() {
+        // Noisy-ish deterministic lanes: alternating samples.
+        let mut flip = false;
+        let mut lanes: Vec<Box<dyn FnMut() -> Result<f64> + '_>> = vec![
+            Box::new(|| Ok(1e-3)),
+            Box::new(move || {
+                flip = !flip;
+                Ok(if flip { 5e-3 } else { 6e-3 })
+            }),
+        ];
+        let c = cfg();
+        let out = race_samplers(&mut lanes, &c, None).unwrap();
+        for lane in &out.lanes {
+            assert!(lane.samples.len() >= c.race_min_reps);
+        }
+    }
+
+    #[test]
+    fn race_on_empty_batch_is_empty() {
+        let mut lanes: Vec<Box<dyn FnMut() -> Result<f64> + '_>> = Vec::new();
+        let out = race_samplers(&mut lanes, &cfg(), None).unwrap();
+        assert!(out.winner.is_none());
+        assert_eq!(out.reps_timed, 0);
     }
 }

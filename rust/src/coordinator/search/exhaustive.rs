@@ -9,11 +9,15 @@ use super::{Budget, SearchResult, SearchStrategy};
 use crate::coordinator::spec::{Config, TuningSpec};
 
 #[derive(Debug, Default, Clone)]
-pub struct Exhaustive;
+pub struct Exhaustive {
+    /// Batch-mode state: the enumeration, materialized once.
+    plan: Option<Vec<Config>>,
+    cursor: usize,
+}
 
 impl Exhaustive {
     pub fn new() -> Exhaustive {
-        Exhaustive
+        Exhaustive::default()
     }
 }
 
@@ -35,6 +39,25 @@ impl SearchStrategy for Exhaustive {
             }
         }
         b.finish()
+    }
+
+    fn supports_batch(&self) -> bool {
+        true
+    }
+
+    /// The next `k` configs in enumeration order — the whole sweep
+    /// surfaces as ready-made batches for compile prefetch and racing.
+    fn suggest(
+        &mut self,
+        spec: &TuningSpec,
+        k: usize,
+        _seen: &dyn Fn(&Config) -> bool,
+    ) -> Vec<Config> {
+        let plan = self.plan.get_or_insert_with(|| spec.enumerate());
+        let batch: Vec<Config> =
+            plan.iter().skip(self.cursor).take(k.max(1)).cloned().collect();
+        self.cursor += batch.len();
+        batch
     }
 }
 
@@ -66,6 +89,28 @@ mod tests {
         let mut s = Exhaustive::new();
         let r = run_on_bowl(&mut s, 5);
         assert_eq!(r.evaluations(), 5);
+    }
+
+    #[test]
+    fn batch_suggestions_walk_enumeration_order() {
+        let spec = bowl_spec();
+        let all = spec.enumerate();
+        let mut s = Exhaustive::new();
+        assert!(s.supports_batch());
+        let b1 = s.suggest(&spec, 4, &|_| false);
+        let b2 = s.suggest(&spec, 4, &|_| false);
+        assert_eq!(b1.as_slice(), &all[0..4]);
+        assert_eq!(b2.as_slice(), &all[4..8]);
+        // Drains to empty at the end of the space.
+        let mut total = b1.len() + b2.len();
+        loop {
+            let b = s.suggest(&spec, 64, &|_| false);
+            if b.is_empty() {
+                break;
+            }
+            total += b.len();
+        }
+        assert_eq!(total, all.len());
     }
 
     #[test]

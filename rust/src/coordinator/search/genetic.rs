@@ -16,17 +16,51 @@ pub struct Genetic {
     pop_size: usize,
     mutation_rate: f64,
     tournament: usize,
+    // Batch-mode (ask/tell) state: whole generations surface as batches.
+    rng: Option<Rng>,
+    pop: Vec<(Vec<usize>, f64)>,
+    round: Vec<(Config, f64)>,
 }
 
 impl Genetic {
     pub fn new(seed: u64) -> Genetic {
-        Genetic { seed, pop_size: 8, mutation_rate: 0.25, tournament: 3 }
+        Genetic::with_params(seed, 8, 0.25)
     }
 
     pub fn with_params(seed: u64, pop_size: usize, mutation_rate: f64) -> Genetic {
         assert!(pop_size >= 2, "population must be >= 2");
         assert!((0.0..=1.0).contains(&mutation_rate), "mutation_rate in [0,1]");
-        Genetic { seed, pop_size, mutation_rate, tournament: 3 }
+        Genetic {
+            seed,
+            pop_size,
+            mutation_rate,
+            tournament: 3,
+            rng: None,
+            pop: Vec::new(),
+            round: Vec::new(),
+        }
+    }
+
+    /// Fold the last round's observations into the population
+    /// (steady-state replacement, same rule as sequential mode).
+    fn absorb_round(&mut self, spec: &TuningSpec) {
+        for (config, cost) in std::mem::take(&mut self.round) {
+            let Some(idx) = spec.index_of(&config) else { continue };
+            if self.pop.len() < self.pop_size {
+                self.pop.push((idx, cost));
+                continue;
+            }
+            let worst = self
+                .pop
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1 .1.total_cmp(&b.1 .1))
+                .map(|(i, _)| i)
+                .unwrap();
+            if cost <= self.pop[worst].1 {
+                self.pop[worst] = (idx, cost);
+            }
+        }
     }
 
     fn random_individual(spec: &TuningSpec, rng: &mut Rng) -> Option<Vec<usize>> {
@@ -133,6 +167,81 @@ impl SearchStrategy for Genetic {
         }
         b.finish()
     }
+
+    fn supports_batch(&self) -> bool {
+        true
+    }
+
+    /// One generation per call: `k` random individuals while the
+    /// population is filling, then `k` bred children (tournament
+    /// selection, uniform crossover, mutation, constraint repair).
+    fn suggest(
+        &mut self,
+        spec: &TuningSpec,
+        k: usize,
+        _seen: &dyn Fn(&Config) -> bool,
+    ) -> Vec<Config> {
+        if spec.params.is_empty() {
+            return Vec::new();
+        }
+        let seed = self.seed;
+        let mut rng = self.rng.take().unwrap_or_else(|| Rng::new(seed));
+        self.absorb_round(spec);
+        let want = k.max(1);
+        let mut out: Vec<Config> = Vec::new();
+
+        if self.pop.len() < self.pop_size {
+            let mut ids: Vec<String> = Vec::new();
+            for _ in 0..want * 16 {
+                if out.len() >= want {
+                    break;
+                }
+                let Some(ind) = Self::random_individual(spec, &mut rng) else { break };
+                let config = spec.config_at(&ind);
+                let id = spec.config_id(&config);
+                if !ids.contains(&id) {
+                    ids.push(id);
+                    out.push(config);
+                }
+            }
+        } else {
+            for _ in 0..want {
+                let select = |rng: &mut Rng, pop: &[(Vec<usize>, f64)]| -> Vec<usize> {
+                    let mut best: Option<(usize, f64)> = None;
+                    for _ in 0..self.tournament {
+                        let i = rng.gen_range(pop.len());
+                        if best.map_or(true, |(_, c)| pop[i].1 < c) {
+                            best = Some((i, pop[i].1));
+                        }
+                    }
+                    pop[best.unwrap().0].0.clone()
+                };
+                let pa = select(&mut rng, &self.pop);
+                let pb = select(&mut rng, &self.pop);
+                let mut child: Vec<usize> = pa
+                    .iter()
+                    .zip(&pb)
+                    .map(|(&x, &y)| if rng.next_f64() < 0.5 { x } else { y })
+                    .collect();
+                for (g, p) in spec.params.iter().enumerate() {
+                    if rng.next_f64() < self.mutation_rate {
+                        child[g] = rng.gen_range(p.values.len());
+                    }
+                }
+                if let Some(child) = Self::repair(spec, &mut rng, child)
+                    .or_else(|| Self::random_individual(spec, &mut rng))
+                {
+                    out.push(spec.config_at(&child));
+                }
+            }
+        }
+        self.rng = Some(rng);
+        out
+    }
+
+    fn observe(&mut self, _spec: &TuningSpec, config: &Config, cost: f64) {
+        self.round.push((config.clone(), cost));
+    }
 }
 
 #[cfg(test)]
@@ -193,5 +302,25 @@ mod tests {
     #[should_panic]
     fn tiny_population_panics() {
         Genetic::with_params(1, 1, 0.2);
+    }
+
+    #[test]
+    fn batch_mode_respects_budget_and_validity() {
+        use super::super::drive_batched;
+        let spec = bowl_spec();
+        let mut s = Genetic::new(13);
+        let mut eval = |batch: &[Config]| -> Vec<f64> {
+            let spec = bowl_spec();
+            batch
+                .iter()
+                .map(|c| {
+                    assert!(spec.is_valid(c), "GA suggested invalid config {c:?}");
+                    bowl_cost(&spec, c)
+                })
+                .collect()
+        };
+        let r = drive_batched(&mut s, &spec, 20, 8, &[], &mut eval);
+        assert!(r.evaluations() <= 20);
+        assert!(r.best.is_some());
     }
 }

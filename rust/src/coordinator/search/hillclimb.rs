@@ -16,15 +16,58 @@ use crate::util::rng::Rng;
 pub struct HillClimb {
     seed: u64,
     max_restarts: usize,
+    // Batch-mode (ask/tell) state: the climb advances one neighborhood
+    // per suggest/observe round instead of one neighbor per eval.
+    rng: Option<Rng>,
+    current: Option<(Config, f64)>,
+    round: Vec<(Config, f64)>,
+    restarts_done: usize,
+    finished: bool,
 }
 
 impl HillClimb {
     pub fn new(seed: u64) -> HillClimb {
-        HillClimb { seed, max_restarts: 8 }
+        HillClimb::with_restarts(seed, 8)
     }
 
     pub fn with_restarts(seed: u64, max_restarts: usize) -> HillClimb {
-        HillClimb { seed, max_restarts: max_restarts.max(1) }
+        HillClimb {
+            seed,
+            max_restarts: max_restarts.max(1),
+            rng: None,
+            current: None,
+            round: Vec::new(),
+            restarts_done: 0,
+            finished: false,
+        }
+    }
+
+    /// Fold the last round's observations into the climb state: move to
+    /// the best strict improvement, or count a restart at a local
+    /// optimum.
+    fn absorb_round(&mut self) {
+        if self.round.is_empty() {
+            return;
+        }
+        let best_round = self
+            .round
+            .iter()
+            .filter(|(_, cost)| cost.is_finite())
+            .min_by(|a, b| a.1.total_cmp(&b.1))
+            .cloned();
+        match (self.current.take(), best_round) {
+            // Starts round: adopt the best start as the climb origin.
+            (None, Some(b)) => self.current = Some(b),
+            // All starts failed: burn a restart.
+            (None, None) => self.restarts_done += 1,
+            // Neighborhood round with a strict improvement: move.
+            (Some((_, cc)), Some((bc, bcost))) if bcost < cc => {
+                self.current = Some((bc, bcost));
+            }
+            // Local optimum: restart from scratch (current stays None).
+            (Some(_), _) => self.restarts_done += 1,
+        }
+        self.round.clear();
     }
 }
 
@@ -80,6 +123,76 @@ impl SearchStrategy for HillClimb {
         }
         b.finish()
     }
+
+    fn supports_batch(&self) -> bool {
+        true
+    }
+
+    /// One climb round per call: either `k` random starts (after a
+    /// restart) or the FULL one-step neighborhood of the current point —
+    /// neighborhoods are at most `2 · #params` configs and truncating
+    /// them could hide the only improving direction, so they may exceed
+    /// `k`.
+    fn suggest(
+        &mut self,
+        spec: &TuningSpec,
+        k: usize,
+        seen: &dyn Fn(&Config) -> bool,
+    ) -> Vec<Config> {
+        if self.finished {
+            return Vec::new();
+        }
+        self.absorb_round();
+        if self.current.is_none() && self.restarts_done >= self.max_restarts {
+            self.finished = true;
+            return Vec::new();
+        }
+        let seed = self.seed;
+        let rng = self.rng.get_or_insert_with(|| Rng::new(seed));
+
+        if let Some((c, _)) = &self.current {
+            let mut neighbors = spec.neighbors(c);
+            rng.shuffle(&mut neighbors);
+            if !neighbors.is_empty() {
+                return neighbors;
+            }
+            // Isolated point: force a restart below.
+            self.current = None;
+            self.restarts_done += 1;
+            if self.restarts_done >= self.max_restarts {
+                self.finished = true;
+                return Vec::new();
+            }
+        }
+
+        // Fresh starts: up to k distinct valid configs, preferring ones
+        // the driver hasn't evaluated (falls back to a seen config so
+        // the climb can resume from cached costs in tiny spaces).
+        let want = k.max(1);
+        let mut starts: Vec<Config> = Vec::new();
+        let mut ids: Vec<String> = Vec::new();
+        for _ in 0..want * 16 {
+            if starts.len() >= want {
+                break;
+            }
+            let Some(c) = spec.random_config(rng, 64) else { break };
+            let id = spec.config_id(&c);
+            if !ids.contains(&id) && !seen(&c) {
+                ids.push(id);
+                starts.push(c);
+            }
+        }
+        if starts.is_empty() {
+            if let Some(c) = spec.random_config(rng, 64) {
+                starts.push(c);
+            }
+        }
+        starts
+    }
+
+    fn observe(&mut self, _spec: &TuningSpec, config: &Config, cost: f64) {
+        self.round.push((config.clone(), cost));
+    }
 }
 
 #[cfg(test)]
@@ -114,6 +227,23 @@ mod tests {
         let r = run_on_bowl(&mut s, 4);
         assert!(r.evaluations() <= 4);
         assert!(r.best.is_some());
+    }
+
+    #[test]
+    fn batch_mode_converges_on_bowl() {
+        use super::super::drive_batched;
+        let spec = bowl_spec();
+        let mut s = HillClimb::new(3);
+        let mut eval = |batch: &[Config]| -> Vec<f64> {
+            let spec = bowl_spec();
+            batch.iter().map(|c| bowl_cost(&spec, c)).collect()
+        };
+        let r = drive_batched(&mut s, &spec, usize::MAX, 4, &[], &mut eval);
+        assert_eq!(
+            r.best.unwrap().1,
+            1.0,
+            "bowl is unimodal; batched neighborhood climbing must find the optimum"
+        );
     }
 
     #[test]

@@ -69,6 +69,22 @@ impl SearchResult {
 }
 
 /// A search strategy: explore `spec` within `budget` unique evaluations.
+///
+/// Two driving modes:
+/// * **Sequential** ([`run`](SearchStrategy::run)) — the strategy owns
+///   the loop and calls `eval` one configuration at a time.  Every
+///   strategy implements this.
+/// * **Batched** ([`suggest`](SearchStrategy::suggest) /
+///   [`observe`](SearchStrategy::observe)) — the *driver* owns the loop:
+///   it asks for a batch of candidates, evaluates them together
+///   (overlapping compilation, racing measurements), and tells the
+///   strategy every observed cost.  Strategies whose structure is
+///   naturally generational (exhaustive order, random plans, GA
+///   generations, hill-climb neighborhoods) override these and report
+///   [`supports_batch`](SearchStrategy::supports_batch) = true;
+///   inherently sequential strategies (annealing, Nelder–Mead) keep the
+///   default single-candidate implementation and are driven through
+///   `run` instead.
 pub trait SearchStrategy {
     fn name(&self) -> &'static str;
 
@@ -78,6 +94,141 @@ pub trait SearchStrategy {
         budget: usize,
         eval: &mut dyn FnMut(&Config) -> f64,
     ) -> SearchResult;
+
+    /// Does this strategy surface meaningful multi-candidate batches?
+    /// The batched tuning pipeline only engages when this is true —
+    /// sequential strategies would silently degrade to enumeration
+    /// order under the default `suggest`.
+    fn supports_batch(&self) -> bool {
+        false
+    }
+
+    /// Propose up to `k` candidates for the next evaluation round.
+    /// `seen` answers "has the driver already evaluated this config?"
+    /// so stateless implementations can avoid re-proposing.  Returning
+    /// an empty batch ends the search.
+    ///
+    /// Default: the next single unseen configuration in deterministic
+    /// enumeration order (correct for any strategy, sequential in
+    /// spirit).
+    fn suggest(
+        &mut self,
+        spec: &TuningSpec,
+        k: usize,
+        seen: &dyn Fn(&Config) -> bool,
+    ) -> Vec<Config> {
+        let _ = k;
+        spec.enumerate().into_iter().find(|c| !seen(c)).into_iter().collect()
+    }
+
+    /// Feed one observed cost back (ask/tell).  Called for every member
+    /// of a suggested batch — freshly measured, served from the
+    /// driver's cache, or `f64::INFINITY` for invalid/failed configs.
+    fn observe(&mut self, spec: &TuningSpec, config: &Config, cost: f64) {
+        let _ = (spec, config, cost);
+    }
+}
+
+/// Rounds with zero fresh evaluations the batched driver tolerates
+/// before concluding the strategy is spinning on seen configs.  Cached
+/// rounds can be legitimate progress (a hill-climb walking through
+/// territory a previous restart already measured), so the cap is
+/// generous; it exists to bound strategies that cycle forever on the
+/// same proposals.
+const MAX_STALE_ROUNDS: usize = 8;
+
+/// Drive a strategy through its batch-proposal interface.
+///
+/// The driver owns dedupe and budget accounting: every *unique* config
+/// evaluated through `eval_batch` consumes budget; re-proposals are
+/// served from the cache (and still `observe`d, so stateful strategies
+/// keep advancing).  `preseeded` carries evaluations performed outside
+/// the strategy's budget — the tuner's forced default and warm-start
+/// candidates — so the strategy never pays for them.
+///
+/// `eval_batch` receives a deduplicated, valid, unseen batch and must
+/// return one cost per config (`f64::INFINITY` for failures).  This is
+/// where the tuner hangs compile prefetch + gate + racing; tests pass a
+/// synthetic surface.
+pub fn drive_batched(
+    strategy: &mut dyn SearchStrategy,
+    spec: &TuningSpec,
+    budget: usize,
+    batch: usize,
+    preseeded: &[(Config, f64)],
+    eval_batch: &mut dyn FnMut(&[Config]) -> Vec<f64>,
+) -> SearchResult {
+    let batch = batch.max(1);
+    let total_valid = spec.enumerate().len();
+    let mut cache: HashMap<String, f64> = preseeded
+        .iter()
+        .map(|(c, cost)| (spec.config_id(c), *cost))
+        .collect();
+    let mut history: Vec<Evaluation> = Vec::new();
+    let mut best: Option<(Config, f64)> = None;
+    let mut remaining = budget;
+    let mut stale = 0usize;
+
+    while remaining > 0 && cache.len() < total_valid && stale < MAX_STALE_ROUNDS {
+        let proposal = {
+            let seen = |c: &Config| cache.contains_key(&spec.config_id(c));
+            strategy.suggest(spec, batch, &seen)
+        };
+        if proposal.is_empty() {
+            break;
+        }
+
+        // Split the proposal: fresh valid configs (bounded by remaining
+        // budget) get evaluated; the rest are answered from the cache.
+        let mut fresh: Vec<Config> = Vec::new();
+        let mut fresh_ids: Vec<String> = Vec::new();
+        for c in &proposal {
+            let id = spec.config_id(c);
+            if spec.is_valid(c)
+                && !cache.contains_key(&id)
+                && !fresh_ids.contains(&id)
+                && fresh.len() < remaining
+            {
+                fresh.push(c.clone());
+                fresh_ids.push(id);
+            }
+        }
+
+        if fresh.is_empty() {
+            stale += 1;
+        } else {
+            stale = 0;
+            let costs = eval_batch(&fresh);
+            debug_assert_eq!(costs.len(), fresh.len());
+            remaining -= fresh.len();
+            for (c, &cost) in fresh.iter().zip(&costs) {
+                cache.insert(spec.config_id(c), cost);
+                history.push(Evaluation { config: c.clone(), cost });
+                if cost.is_finite() {
+                    match &best {
+                        Some((_, b)) if *b <= cost => {}
+                        _ => best = Some((c.clone(), cost)),
+                    }
+                }
+            }
+        }
+
+        // Tell the strategy about every proposed config, in proposal
+        // order — fresh results, cached repeats, and invalid configs
+        // (infinite cost) alike.  Valid configs that were never
+        // evaluated (budget truncation on the final round) are NOT
+        // observed: reporting them as failures would poison the
+        // strategy's state with phantom infinities.
+        for c in &proposal {
+            if !spec.is_valid(c) {
+                strategy.observe(spec, c, f64::INFINITY);
+            } else if let Some(&cost) = cache.get(&spec.config_id(c)) {
+                strategy.observe(spec, c, cost);
+            }
+        }
+    }
+
+    SearchResult { best, history }
 }
 
 /// Budget-enforcing, deduplicating evaluation wrapper shared by all
@@ -255,5 +406,114 @@ mod tests {
         let r = run_on_bowl(&mut s, 20);
         let traj = r.best_so_far();
         assert!(traj.windows(2).all(|w| w[1] <= w[0]));
+    }
+
+    /// A strategy that only implements the sequential interface.
+    struct DefaultOnly;
+
+    impl SearchStrategy for DefaultOnly {
+        fn name(&self) -> &'static str {
+            "default-only"
+        }
+
+        fn run(
+            &mut self,
+            spec: &TuningSpec,
+            budget: usize,
+            eval: &mut dyn FnMut(&Config) -> f64,
+        ) -> SearchResult {
+            let mut b = Budget::new(spec, budget, eval);
+            for c in spec.enumerate() {
+                if b.eval(&c).is_none() {
+                    break;
+                }
+            }
+            b.finish()
+        }
+    }
+
+    #[test]
+    fn default_suggest_is_single_unseen_candidate() {
+        let spec = bowl_spec();
+        let mut s = DefaultOnly;
+        assert!(!s.supports_batch());
+        let all = spec.enumerate();
+        let first = s.suggest(&spec, 5, &|_| false);
+        assert_eq!(first, vec![all[0].clone()]);
+        let head = all[0].clone();
+        let second = s.suggest(&spec, 5, &move |c: &Config| *c == head);
+        assert_eq!(second, vec![all[1].clone()]);
+    }
+
+    fn bowl_eval_batch(batch: &[Config]) -> Vec<f64> {
+        let spec = bowl_spec();
+        batch.iter().map(|c| bowl_cost(&spec, c)).collect()
+    }
+
+    #[test]
+    fn drive_batched_budget_dedupe_and_preseed() {
+        let spec = bowl_spec();
+        let all = spec.enumerate();
+        let pre = vec![(all[0].clone(), bowl_cost(&spec, &all[0]))];
+        let mut s = Exhaustive::new();
+        let mut calls = 0usize;
+        let mut eval = |batch: &[Config]| {
+            calls += batch.len();
+            bowl_eval_batch(batch)
+        };
+        let r = drive_batched(&mut s, &spec, 6, 4, &pre, &mut eval);
+        assert_eq!(r.evaluations(), 6);
+        assert_eq!(calls, 6, "budget counts only fresh evaluations");
+        // The preseeded config is never re-evaluated.
+        assert!(r.history.iter().all(|e| e.config != all[0]));
+        let mut ids: Vec<String> =
+            r.history.iter().map(|e| spec.config_id(&e.config)).collect();
+        let n = ids.len();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), n, "batched history must stay deduplicated");
+    }
+
+    #[test]
+    fn drive_batched_full_budget_finds_optimum() {
+        let spec = bowl_spec();
+        let mut s = Exhaustive::new();
+        let r = drive_batched(&mut s, &spec, usize::MAX, 4, &[], &mut bowl_eval_batch);
+        assert_eq!(r.evaluations(), spec.enumerate().len());
+        assert_eq!(r.best.unwrap().1, 1.0);
+    }
+
+    #[test]
+    fn drive_batched_stops_on_stale_proposals() {
+        /// Pathological strategy proposing the same config forever.
+        struct Stuck;
+        impl SearchStrategy for Stuck {
+            fn name(&self) -> &'static str {
+                "stuck"
+            }
+            fn run(
+                &mut self,
+                _spec: &TuningSpec,
+                _budget: usize,
+                _eval: &mut dyn FnMut(&Config) -> f64,
+            ) -> SearchResult {
+                SearchResult { best: None, history: Vec::new() }
+            }
+            fn supports_batch(&self) -> bool {
+                true
+            }
+            fn suggest(
+                &mut self,
+                spec: &TuningSpec,
+                _k: usize,
+                _seen: &dyn Fn(&Config) -> bool,
+            ) -> Vec<Config> {
+                vec![spec.enumerate()[0].clone()]
+            }
+        }
+        let spec = bowl_spec();
+        let mut s = Stuck;
+        let r = drive_batched(&mut s, &spec, usize::MAX, 2, &[], &mut bowl_eval_batch);
+        assert_eq!(r.evaluations(), 1, "stale proposals must terminate the drive");
     }
 }

@@ -13,11 +13,14 @@ use crate::util::rng::Rng;
 #[derive(Debug, Clone)]
 pub struct RandomSearch {
     seed: u64,
+    /// Batch-mode state: the seeded shuffle, materialized once.
+    plan: Option<Vec<Config>>,
+    cursor: usize,
 }
 
 impl RandomSearch {
     pub fn new(seed: u64) -> RandomSearch {
-        RandomSearch { seed }
+        RandomSearch { seed, plan: None, cursor: 0 }
     }
 }
 
@@ -42,6 +45,29 @@ impl SearchStrategy for RandomSearch {
             }
         }
         b.finish()
+    }
+
+    fn supports_batch(&self) -> bool {
+        true
+    }
+
+    /// The next `k` configs of the seeded without-replacement shuffle —
+    /// identical sampling plan as `run`, surfaced batch-wise.
+    fn suggest(
+        &mut self,
+        spec: &TuningSpec,
+        k: usize,
+        _seen: &dyn Fn(&Config) -> bool,
+    ) -> Vec<Config> {
+        let plan = self.plan.get_or_insert_with(|| {
+            let mut rng = Rng::new(self.seed);
+            let mut configs = spec.enumerate();
+            rng.shuffle(&mut configs);
+            configs
+        });
+        let batch: Vec<Config> = plan.iter().skip(self.cursor).take(k.max(1)).cloned().collect();
+        self.cursor += batch.len();
+        batch
     }
 }
 
@@ -80,6 +106,24 @@ mod tests {
             r.history.iter().map(|e| spec.config_id(&e.config)).collect::<Vec<_>>()
         };
         assert_eq!(ids(&r1), ids(&r2));
+    }
+
+    #[test]
+    fn batch_plan_matches_sequential_order() {
+        let spec = bowl_spec();
+        let r = run_on_bowl(&mut RandomSearch::new(5), usize::MAX);
+        let seq: Vec<String> =
+            r.history.iter().map(|e| spec.config_id(&e.config)).collect();
+        let mut s = RandomSearch::new(5);
+        let mut bat: Vec<String> = Vec::new();
+        loop {
+            let b = s.suggest(&spec, 7, &|_| false);
+            if b.is_empty() {
+                break;
+            }
+            bat.extend(b.iter().map(|c| spec.config_id(c)));
+        }
+        assert_eq!(seq, bat, "batch mode must replay the same sampling plan");
     }
 
     #[test]

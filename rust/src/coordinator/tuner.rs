@@ -3,12 +3,27 @@
 //! For one (kernel, workload):
 //!   1. generate deterministic inputs (workload module),
 //!   2. compile + measure the **baseline** artifact (the un-annotated
-//!      reference program) and capture its outputs as reference results,
+//!      reference program); its first warmup execution doubles as the
+//!      reference-output capture (no redundant run),
 //!   3. drive a search strategy over the variant space; each evaluation
 //!      compiles the pre-lowered variant artifact, checks its outputs
 //!      against the reference (gate), and measures it,
 //!   4. select the best correct variant; optionally persist to the
 //!      performance DB keyed by the platform fingerprint.
+//!
+//! Two drive modes share steps 1–2 and 4:
+//! * **serial** (`batch` = 1, the default): the strategy calls back one
+//!   config at a time — compile, gate, measure, repeat.
+//! * **batched** (`batch` > 1 and the strategy
+//!   [`supports_batch`](crate::coordinator::search::SearchStrategy::supports_batch)):
+//!   the strategy surfaces whole candidate batches; the batch's
+//!   artifacts compile on background threads while the main thread
+//!   gates candidates in order, then all gate-passing variants
+//!   [`race`](crate::coordinator::measure::race) with interleaved
+//!   repetitions and early termination.  Timing stays single-threaded —
+//!   only compilation overlaps.  On a stable machine both modes select
+//!   the same winner; the batched mode just pays far fewer timed
+//!   repetitions ([`TuneStats`] records how many).
 //!
 //! The tuned result never regresses below baseline: if every variant
 //! loses, the baseline itself is reported as the winner (speedup 1.0) —
@@ -16,16 +31,21 @@
 //! the reference implementation is always available.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::measure::{measure, MeasureConfig, Measurement};
+use crate::coordinator::measure::{
+    measure, measure_with_outputs, race, MeasureConfig, Measurement,
+};
 use crate::coordinator::perfdb::{unix_now, DbEntry, PerfDb};
 use crate::coordinator::platform::Fingerprint;
-use crate::coordinator::search::{SearchResult, SearchStrategy};
+use crate::coordinator::search::{drive_batched, SearchStrategy};
 use crate::coordinator::selection::{check_outputs, CorrectnessReport, Tolerance};
 use crate::coordinator::spec::{Config, TuningSpec};
-use crate::runtime::{Registry, TensorData};
+use crate::runtime::{Executable, Registry, TensorData};
+use crate::util::stats::Summary;
 use crate::workload;
 
 /// One evaluated variant, as reported in a [`TuneOutcome`].
@@ -37,6 +57,55 @@ pub struct VariantResult {
     pub correctness: Option<CorrectnessReport>,
     /// Cost seen by the search (median seconds; +inf if gated/failed).
     pub cost: f64,
+}
+
+/// Cost accounting for one tuning run — what the tuning investment was
+/// actually spent on.  Threaded into the CLI and the overhead bench so
+/// the batched pipeline's savings are visible, not anecdotal.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TuneStats {
+    /// Wall-clock spent in XLA compilation for this tune, summed across
+    /// threads.  Under prefetch this can exceed the elapsed tuning time
+    /// — that surplus is exactly the overlap won by background
+    /// compilation.
+    pub compile_ms: f64,
+    /// Wall-clock spent inside the timed measurement harness.
+    pub measure_ms: f64,
+    /// Timed repetitions executed (baseline + variants).
+    pub reps_timed: u64,
+    /// Repetitions avoided: racing cutoffs plus gate-failure skips
+    /// (lower bound — skipped adaptive extensions are not counted).
+    pub reps_saved: u64,
+    /// XLA compilations performed on behalf of this tune.
+    pub compiles: u64,
+    /// Executable loads served from the compile cache.
+    pub cache_hits: u64,
+    /// Candidate batches evaluated (0 in serial mode).
+    pub batches: u64,
+    /// Race lanes stopped early by the cutoff.
+    pub pruned: u64,
+    /// Variants rejected by the correctness gate; they cost one gate
+    /// execution each, never a full measurement.
+    pub gated: u64,
+}
+
+impl TuneStats {
+    /// One-line human rendering for the CLI.
+    pub fn render(&self) -> String {
+        format!(
+            "compile {:.1} ms ({} compiles, {} cache hits) | measure {:.1} ms | \
+             reps {} timed, {} saved | {} batches, {} pruned, {} gated",
+            self.compile_ms,
+            self.compiles,
+            self.cache_hits,
+            self.measure_ms,
+            self.reps_timed,
+            self.reps_saved,
+            self.batches,
+            self.pruned,
+            self.gated
+        )
+    }
 }
 
 /// The result of tuning one (kernel, workload).
@@ -64,6 +133,8 @@ pub struct TuneOutcome {
     pub best: Option<VariantResult>,
     /// Every unique evaluation, in search order.
     pub evaluated: Vec<VariantResult>,
+    /// Where the tuning time went (compile/measure/reps accounting).
+    pub stats: TuneStats,
     /// flops/bytes of the workload (for roofline reporting).
     pub flops: u64,
     pub bytes: u64,
@@ -131,6 +202,11 @@ pub struct Tuner<'a> {
     /// Optional fixed candidate list evaluated before the strategy runs
     /// (perf-DB warm start).
     pub warm_start: Vec<Config>,
+    /// Candidates proposed/evaluated per round.  1 = serial pipeline
+    /// (strategy-driven, full measurement per variant); > 1 engages the
+    /// batched pipeline — overlapped compilation + raced measurement —
+    /// for strategies that support batch proposal.
+    pub batch: usize,
 }
 
 impl<'a> Tuner<'a> {
@@ -141,6 +217,7 @@ impl<'a> Tuner<'a> {
             tolerance: Tolerance::default(),
             input_seed: 0x5EED,
             warm_start: Vec::new(),
+            batch: 1,
         }
     }
 
@@ -151,6 +228,11 @@ impl<'a> Tuner<'a> {
 
     pub fn with_warm_start(mut self, candidates: Vec<Config>) -> Self {
         self.warm_start = candidates;
+        self
+    }
+
+    pub fn with_batch(mut self, batch: usize) -> Self {
+        self.batch = batch.max(1);
         self
     }
 
@@ -166,7 +248,9 @@ impl<'a> Tuner<'a> {
         workload::inputs_for(kernel, wl, self.input_seed)
     }
 
-    /// Measure the baseline artifact and capture reference outputs.
+    /// Measure the baseline artifact and capture reference outputs from
+    /// its first warmup execution (the baseline used to pay one full
+    /// extra untimed execution per tune just to read its outputs).
     pub fn measure_baseline(
         &self,
         kernel: &str,
@@ -175,9 +259,7 @@ impl<'a> Tuner<'a> {
     ) -> Result<(Measurement, Vec<f32>)> {
         let (_, wl) = self.registry.find(kernel, tag)?;
         let exe = self.registry.load(&wl.baseline)?;
-        let reference = exe.run(inputs).context("running baseline")?;
-        let m = measure(&exe, inputs, &self.measure_cfg)?;
-        Ok((m, reference))
+        measure_with_outputs(&exe, inputs, &self.measure_cfg).context("measuring baseline")
     }
 
     /// Full tuning pipeline (see module docs).
@@ -191,67 +273,59 @@ impl<'a> Tuner<'a> {
         let (entry, wl) = self.registry.find(kernel, tag)?;
         let spec = TuningSpec::from_manifest(entry, wl)?;
         let inputs = workload::inputs_for(kernel, wl, self.input_seed)?;
-        let (reference, ref_outputs) = self.measure_baseline(kernel, tag, &inputs)?;
 
-        // Variant path lookup by config id.
-        let paths: BTreeMap<&str, &str> = wl
+        // Registry-level counters are deltas over the whole tune so
+        // prefetch-thread compilation is attributed correctly.
+        let compiles0 = self.registry.compile_count();
+        let compile_ms0 = self.registry.compile_ms();
+        let hits0 = self.registry.cache_hits();
+
+        let mut stats = TuneStats::default();
+        let baseline_exe = self.registry.load(&wl.baseline)?;
+        let t0 = Instant::now();
+        let (reference, ref_outputs) =
+            measure_with_outputs(&baseline_exe, &inputs, &self.measure_cfg)
+                .context("measuring baseline")?;
+        stats.measure_ms += t0.elapsed().as_secs_f64() * 1e3;
+        stats.reps_timed += reference.samples.len() as u64;
+        drop(baseline_exe);
+
+        // Variant path lookup keyed by the id derived from the config —
+        // manifest variant ids pass through `spec.config_id` on the
+        // python side, so both sides agree by construction.
+        let paths: BTreeMap<String, String> = wl
             .variants
             .iter()
-            .map(|v| (v.id.as_str(), v.path.as_str()))
+            .map(|v| (v.id.clone(), v.path.clone()))
             .collect();
 
-        // Tuner-level dedupe: the forced default / warm-start evals run
-        // outside the strategy's own budget cache, so repeats must be
-        // served from here — `evaluated` holds unique measurements only.
-        let mut seen: BTreeMap<String, f64> = BTreeMap::new();
-        let mut evaluated: Vec<VariantResult> = Vec::new();
-        let mut eval = |config: &Config| -> f64 {
-            let config_id = spec.config_id(config);
-            if let Some(&cost) = seen.get(&config_id) {
-                return cost;
-            }
-            let result = self.evaluate_variant(
-                &config_id,
-                &paths,
-                &inputs,
-                &ref_outputs,
-            );
-            let vr = match result {
-                Ok((m, c)) => {
-                    let cost = if c.ok { m.cost() } else { f64::INFINITY };
-                    VariantResult {
-                        config: config.clone(),
-                        config_id,
-                        measurement: Some(m),
-                        correctness: Some(c),
-                        cost,
-                    }
-                }
-                Err(_) => VariantResult {
-                    config: config.clone(),
-                    config_id,
-                    measurement: None,
-                    correctness: None,
-                    cost: f64::INFINITY,
-                },
-            };
-            let cost = vr.cost;
-            seen.insert(vr.config_id.clone(), cost);
-            evaluated.push(vr);
-            cost
+        let mut state = EvalState {
+            tuner: self,
+            spec: &spec,
+            paths,
+            inputs: &inputs,
+            ref_outputs: &ref_outputs,
+            seen: BTreeMap::new(),
+            evaluated: Vec::new(),
+            incumbent: None,
+            stats,
         };
 
         // The un-annotated default schedule is always evaluated first —
         // it is Figure 1's baseline series and must appear in every
-        // outcome regardless of where the search wanders.
+        // outcome regardless of where the search wanders.  Its identity
+        // is DERIVED from its parameters (`spec.config_id`), not read
+        // from the manifest id string, so a manifest id drift can't
+        // silently drop the baseline series.
         let default_config = wl
             .default
             .as_deref()
             .and_then(|id| wl.variant(id))
             .map(|v| v.params.clone());
+        let default_id = default_config.as_ref().map(|c| spec.config_id(c));
         if let Some(cfg) = &default_config {
             if spec.is_valid(cfg) {
-                eval(cfg);
+                state.eval_one(cfg);
             }
         }
 
@@ -259,17 +333,41 @@ impl<'a> Tuner<'a> {
         // outside the strategy's budget accounting but inside ours.
         for cand in &self.warm_start {
             if spec.is_valid(cand) {
-                eval(cand);
+                state.eval_one(cand);
             }
         }
 
-        let result: SearchResult = strategy.run(&spec, budget, &mut eval);
-        drop(eval);
-        let _ = result; // history retained via `evaluated`
+        // Drive the search: batched when both sides can, serial
+        // otherwise.  Result history is retained via `evaluated`.
+        if self.batch > 1 && strategy.supports_batch() {
+            let preseeded: Vec<(Config, f64)> = state
+                .evaluated
+                .iter()
+                .map(|v| (v.config.clone(), v.cost))
+                .collect();
+            let state_ref = &mut state;
+            let mut eval_batch = |batch: &[Config]| state_ref.eval_batch(batch);
+            let _ = drive_batched(
+                strategy,
+                &spec,
+                budget,
+                self.batch,
+                &preseeded,
+                &mut eval_batch,
+            );
+        } else {
+            let state_ref = &mut state;
+            let mut eval = |config: &Config| state_ref.eval_one(config);
+            let _ = strategy.run(&spec, budget, &mut eval);
+        }
 
-        let default = wl.default.as_deref().and_then(|id| {
-            evaluated.iter().find(|v| v.config_id == id).cloned()
-        });
+        let EvalState { evaluated, mut stats, .. } = state;
+        stats.compiles = self.registry.compile_count() - compiles0;
+        stats.compile_ms = self.registry.compile_ms() - compile_ms0;
+        stats.cache_hits = self.registry.cache_hits() - hits0;
+
+        let default = default_id
+            .and_then(|id| evaluated.iter().find(|v| v.config_id == id).cloned());
 
         // Pick the best correct evaluation across default + warm start +
         // search.
@@ -288,28 +386,10 @@ impl<'a> Tuner<'a> {
             default,
             best,
             evaluated,
+            stats,
             flops: wl.flops,
             bytes: wl.bytes,
         })
-    }
-
-    fn evaluate_variant(
-        &self,
-        config_id: &str,
-        paths: &BTreeMap<&str, &str>,
-        inputs: &[TensorData],
-        reference: &[f32],
-    ) -> Result<(Measurement, CorrectnessReport)> {
-        let path = paths
-            .get(config_id)
-            .ok_or_else(|| anyhow::anyhow!("no pre-lowered artifact for variant {config_id}"))?;
-        let exe = self.registry.load(path)?;
-        let outputs = exe.run(inputs)?;
-        let correctness = check_outputs(&outputs, reference, self.tolerance);
-        // Measure even gated variants (cheap at quick profiles; the
-        // report shows *why* a fast-but-wrong variant was rejected).
-        let measurement = measure(&exe, inputs, &self.measure_cfg)?;
-        Ok((measurement, correctness))
     }
 
     /// Persist an outcome into a performance database.
@@ -353,5 +433,216 @@ impl<'a> Tuner<'a> {
                 }),
             _ => Ok(wl.baseline.clone()),
         }
+    }
+}
+
+/// One candidate's gate outcome inside a batch.
+struct Gated {
+    batch_index: usize,
+    exe: Arc<Executable>,
+    correctness: CorrectnessReport,
+}
+
+/// Mutable evaluation context shared by the serial and batched drives:
+/// tuner-level dedupe (forced default / warm-start evals run outside
+/// the strategy's own accounting, so repeats must be served from here),
+/// the evaluation log, the racing incumbent, and cost accounting.
+struct EvalState<'b, 'a> {
+    tuner: &'b Tuner<'a>,
+    spec: &'b TuningSpec,
+    /// config id → artifact path.
+    paths: BTreeMap<String, String>,
+    inputs: &'b [TensorData],
+    ref_outputs: &'b [f32],
+    seen: BTreeMap<String, f64>,
+    evaluated: Vec<VariantResult>,
+    /// Best finite cost so far — the racing cutoff's external bar.
+    incumbent: Option<f64>,
+    stats: TuneStats,
+}
+
+impl EvalState<'_, '_> {
+    fn record(&mut self, vr: VariantResult) -> f64 {
+        let cost = vr.cost;
+        if cost.is_finite() {
+            self.incumbent = Some(self.incumbent.map_or(cost, |b| b.min(cost)));
+        }
+        self.seen.insert(vr.config_id.clone(), cost);
+        self.evaluated.push(vr);
+        cost
+    }
+
+    fn failed(config: &Config, config_id: String) -> VariantResult {
+        VariantResult {
+            config: config.clone(),
+            config_id,
+            measurement: None,
+            correctness: None,
+            cost: f64::INFINITY,
+        }
+    }
+
+    /// Load + execute-for-outputs + gate one variant.  The gate
+    /// execution is timed so rejected variants still show how fast the
+    /// wrong answer was, and doubles as warmup #1 for measurement.
+    fn gate(&mut self, config_id: &str) -> Result<(Arc<Executable>, CorrectnessReport, f64)> {
+        let path = self
+            .paths
+            .get(config_id)
+            .ok_or_else(|| anyhow::anyhow!("no pre-lowered artifact for variant {config_id}"))?
+            .clone();
+        let exe = self.tuner.registry.load(&path)?;
+        let t0 = Instant::now();
+        let outputs = exe.run(self.inputs)?;
+        let gate_dt = t0.elapsed().as_secs_f64();
+        let correctness = check_outputs(&outputs, self.ref_outputs, self.tuner.tolerance);
+        Ok((exe, correctness, gate_dt))
+    }
+
+    /// Gate-failure result: one timed gate sample, infinite cost, and
+    /// the full measurement the seed pipeline would have paid is
+    /// recorded as saved.
+    fn gated_result(
+        &mut self,
+        config: &Config,
+        config_id: String,
+        correctness: CorrectnessReport,
+        gate_dt: f64,
+    ) -> VariantResult {
+        self.stats.gated += 1;
+        self.stats.reps_saved += self.tuner.measure_cfg.reps as u64;
+        let summary = Summary::from_samples(&[gate_dt]).expect("single gate sample");
+        VariantResult {
+            config: config.clone(),
+            config_id,
+            measurement: Some(Measurement { summary, samples: vec![gate_dt] }),
+            correctness: Some(correctness),
+            cost: f64::INFINITY,
+        }
+    }
+
+    /// Measurement config for post-gate sampling: the gate execution
+    /// already served as warmup #1.
+    fn post_gate_cfg(&self) -> MeasureConfig {
+        let mut cfg = self.tuner.measure_cfg.clone();
+        cfg.warmup = cfg.warmup.saturating_sub(1);
+        cfg
+    }
+
+    /// Serial evaluation of one config (compile → gate → full measure).
+    fn eval_one(&mut self, config: &Config) -> f64 {
+        let config_id = self.spec.config_id(config);
+        if let Some(&cost) = self.seen.get(&config_id) {
+            return cost;
+        }
+        let vr = match self.gate(&config_id) {
+            Ok((exe, correctness, gate_dt)) => {
+                if !correctness.ok {
+                    self.gated_result(config, config_id, correctness, gate_dt)
+                } else {
+                    let cfg = self.post_gate_cfg();
+                    let t0 = Instant::now();
+                    match measure(&exe, self.inputs, &cfg) {
+                        Ok(m) => {
+                            self.stats.measure_ms += t0.elapsed().as_secs_f64() * 1e3;
+                            self.stats.reps_timed += m.samples.len() as u64;
+                            VariantResult {
+                                config: config.clone(),
+                                config_id,
+                                measurement: Some(m.clone()),
+                                correctness: Some(correctness),
+                                cost: m.cost(),
+                            }
+                        }
+                        Err(_) => Self::failed(config, config_id),
+                    }
+                }
+            }
+            Err(_) => Self::failed(config, config_id),
+        };
+        self.record(vr)
+    }
+
+    /// Batched evaluation: prefetch the batch's artifacts on background
+    /// threads, gate candidates in order on the main thread (overlapping
+    /// the later candidates' compilation), then race every gate-passing
+    /// variant with interleaved timing and early termination.
+    fn eval_batch(&mut self, batch: &[Config]) -> Vec<f64> {
+        self.stats.batches += 1;
+        let ids: Vec<String> = batch.iter().map(|c| self.spec.config_id(c)).collect();
+        let fetch: Vec<String> =
+            ids.iter().filter_map(|id| self.paths.get(id).cloned()).collect();
+        let prefetch = self.tuner.registry.prefetch(&fetch);
+
+        // Gate pass: each `load` waits only for its own artifact while
+        // the pool keeps compiling the rest behind it.
+        let mut results: Vec<Option<VariantResult>> = vec![None; batch.len()];
+        let mut racers: Vec<Gated> = Vec::new();
+        for (i, (config, config_id)) in batch.iter().zip(&ids).enumerate() {
+            match self.gate(config_id) {
+                Ok((exe, correctness, gate_dt)) => {
+                    if !correctness.ok {
+                        results[i] = Some(self.gated_result(
+                            config,
+                            config_id.clone(),
+                            correctness,
+                            gate_dt,
+                        ));
+                    } else {
+                        racers.push(Gated { batch_index: i, exe, correctness });
+                    }
+                }
+                Err(_) => results[i] = Some(Self::failed(config, config_id.clone())),
+            }
+        }
+        // Quiesce the pool before timing anything: racing against live
+        // compile threads would corrupt the measurements.
+        prefetch.wait();
+
+        if !racers.is_empty() {
+            let cfg = self.post_gate_cfg();
+            let exe_refs: Vec<&Executable> =
+                racers.iter().map(|g| g.exe.as_ref()).collect();
+            let t0 = Instant::now();
+            match race(&exe_refs, self.inputs, &cfg, self.incumbent) {
+                Ok(out) => {
+                    self.stats.measure_ms += t0.elapsed().as_secs_f64() * 1e3;
+                    self.stats.reps_timed += out.reps_timed;
+                    self.stats.reps_saved += out.reps_saved;
+                    self.stats.pruned += out.pruned;
+                    for (lane, g) in racers.iter().enumerate() {
+                        let i = g.batch_index;
+                        let errored = out.lanes[lane].errored;
+                        let m = out.measurements[lane].clone();
+                        let cost = match (&m, errored) {
+                            (Some(m), false) => m.cost(),
+                            _ => f64::INFINITY,
+                        };
+                        results[i] = Some(VariantResult {
+                            config: batch[i].clone(),
+                            config_id: ids[i].clone(),
+                            measurement: m,
+                            correctness: Some(g.correctness.clone()),
+                            cost,
+                        });
+                    }
+                }
+                Err(_) => {
+                    for g in &racers {
+                        let i = g.batch_index;
+                        results[i] = Some(Self::failed(&batch[i], ids[i].clone()));
+                    }
+                }
+            }
+        }
+
+        results
+            .into_iter()
+            .enumerate()
+            .map(|(i, vr)| {
+                let vr = vr.unwrap_or_else(|| Self::failed(&batch[i], ids[i].clone()));
+                self.record(vr)
+            })
+            .collect()
     }
 }

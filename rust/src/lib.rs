@@ -34,6 +34,22 @@ pub mod runtime;
 pub mod util;
 pub mod workload;
 
+// Without the `xla-runtime` feature the real `xla` crate (which needs the
+// xla_extension native library) is replaced by an API-compatible stub;
+// runtime modules import `crate::xla` under the same cfg so either
+// resolution compiles unchanged.
+#[cfg(not(feature = "xla-runtime"))]
+#[path = "runtime/xla_stub.rs"]
+pub mod xla;
+
+// With the feature on, the real bindings must be supplied by the user.
+// If the next line fails to resolve, add
+//   xla = { git = "https://github.com/LaurentMazare/xla-rs" }
+// to rust/Cargo.toml — its comment explains why the dependency is not
+// pre-declared.
+#[cfg(feature = "xla-runtime")]
+extern crate xla;
+
 /// Everything a typical embedder needs.
 pub mod prelude {
     pub use crate::coordinator::measure::{MeasureConfig, Measurement};
@@ -43,6 +59,6 @@ pub mod prelude {
         Anneal, Exhaustive, Genetic, HillClimb, RandomSearch, SearchStrategy,
     };
     pub use crate::coordinator::spec::{Config, TuningSpec};
-    pub use crate::coordinator::tuner::{TuneOutcome, Tuner, VariantResult};
+    pub use crate::coordinator::tuner::{TuneOutcome, TuneStats, Tuner, VariantResult};
     pub use crate::runtime::{Executable, Registry, Runtime, TensorData};
 }

@@ -37,7 +37,10 @@ const USAGE: &str = "usage: portatune <platform|inspect|tune|tune-all|report-fig
   global: --artifacts DIR (default artifacts), --db PATH (default perfdb.json)
   tune:   --kernel K --workload T [--strategy exhaustive|random|hillclimb|anneal|genetic]
           [--budget N] [--seed N] [--quick] [--warm-start] [--no-record]
-  tune-all:    [--kernels a,b,c] [--strategy S] [--budget N] [--seed N] [--quick]
+          [--batch N]  batch size > 1 overlaps variant compilation on a
+          background pool and races measurements with early termination
+          (strategies without batch proposal fall back to serial)
+  tune-all:    [--kernels a,b,c] [--strategy S] [--budget N] [--seed N] [--quick] [--batch N]
   report-fig1: [--kernels axpy,dot,triad] [--csv PATH] [--quick]
   deploy: --kernel K --workload T
   annotate: <file>
@@ -138,6 +141,7 @@ fn cmd_tune(args: &Args, artifacts: &Path, db_path: &Path) -> Result<()> {
     let strategy_name = args.get_or("strategy", "exhaustive");
     let budget = args.get_parsed::<usize>("budget", usize::MAX)?;
     let seed = args.get_parsed::<u64>("seed", 42)?;
+    let batch = args.get_parsed::<usize>("batch", 1)?;
     let quick = args.get_bool("quick");
     let warm = args.get_bool("warm-start");
     let no_record = args.get_bool("no-record");
@@ -146,6 +150,7 @@ fn cmd_tune(args: &Args, artifacts: &Path, db_path: &Path) -> Result<()> {
     let registry = open_registry(artifacts)?;
     let mut db = PerfDb::open(db_path)?;
     let mut tuner = Tuner::new(&registry);
+    tuner.batch = batch.max(1);
     if quick {
         tuner.measure_cfg = MeasureConfig::quick();
     }
@@ -195,6 +200,7 @@ fn cmd_tune(args: &Args, artifacts: &Path, db_path: &Path) -> Result<()> {
         t.row(vec![v.config_id.clone(), time, status]);
     }
     print!("{}", t.render());
+    println!("  stats: {}", outcome.stats.render());
 
     if !no_record {
         tuner.record(&mut db, &outcome);
@@ -213,6 +219,7 @@ fn cmd_tune_all(args: &Args, artifacts: &Path, db_path: &Path) -> Result<()> {
     let strategy_name = args.get_or("strategy", "exhaustive");
     let budget = args.get_parsed::<usize>("budget", usize::MAX)?;
     let seed = args.get_parsed::<u64>("seed", 42)?;
+    let batch = args.get_parsed::<usize>("batch", 1)?;
     let quick = args.get_bool("quick");
     args.finish()?;
 
@@ -224,10 +231,11 @@ fn cmd_tune_all(args: &Args, artifacts: &Path, db_path: &Path) -> Result<()> {
         kernels.split(',').map(str::to_string).collect()
     };
     let mut tuner = Tuner::new(&registry);
+    tuner.batch = batch.max(1);
     if quick {
         tuner.measure_cfg = MeasureConfig::quick();
     }
-    let mut t = Table::new(&["kernel", "workload", "best", "speedup", "evals"]);
+    let mut t = Table::new(&["kernel", "workload", "best", "speedup", "evals", "reps saved"]);
     for kname in &selected {
         let entry = registry
             .manifest()
@@ -247,6 +255,7 @@ fn cmd_tune_all(args: &Args, artifacts: &Path, db_path: &Path) -> Result<()> {
                     .unwrap_or_else(|| "baseline".into()),
                 format!("{:.2}x", outcome.speedup()),
                 outcome.evaluations().to_string(),
+                outcome.stats.reps_saved.to_string(),
             ]);
             tuner.record(&mut db, &outcome);
             db.save()?;

@@ -2,7 +2,9 @@
 //! tuning outcomes (ASCII for the terminal, CSV for plotting).
 
 pub mod fig1;
+pub mod stats;
 pub mod table;
 
 pub use fig1::{Fig1Report, Fig1Row};
+pub use stats::{outcome_json, stats_json};
 pub use table::Table;

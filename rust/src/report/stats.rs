@@ -1,0 +1,98 @@
+//! TuneStats rendering: the cost-accounting side of the reports.
+//!
+//! The overhead bench and the CLI both need to show *where tuning time
+//! went* (compile vs measure, repetitions spent vs saved); this module
+//! owns the serialization so the JSON schema lives in exactly one
+//! place and the bench trajectory stays machine-readable run-to-run.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::tuner::{TuneOutcome, TuneStats};
+use crate::util::json::Json;
+
+fn num(x: f64) -> Json {
+    Json::Num(x)
+}
+
+fn int(x: u64) -> Json {
+    Json::Num(x as f64)
+}
+
+/// JSON view of a [`TuneStats`].
+pub fn stats_json(stats: &TuneStats) -> Json {
+    let fields: BTreeMap<String, Json> = [
+        ("compile_ms".to_string(), num(stats.compile_ms)),
+        ("measure_ms".to_string(), num(stats.measure_ms)),
+        ("reps_timed".to_string(), int(stats.reps_timed)),
+        ("reps_saved".to_string(), int(stats.reps_saved)),
+        ("compiles".to_string(), int(stats.compiles)),
+        ("cache_hits".to_string(), int(stats.cache_hits)),
+        ("batches".to_string(), int(stats.batches)),
+        ("pruned".to_string(), int(stats.pruned)),
+        ("gated".to_string(), int(stats.gated)),
+    ]
+    .into_iter()
+    .collect();
+    Json::Obj(fields)
+}
+
+/// JSON view of a whole tuning outcome (the bench-trajectory record).
+pub fn outcome_json(outcome: &TuneOutcome) -> Json {
+    let fields: BTreeMap<String, Json> = [
+        ("kernel".to_string(), Json::Str(outcome.kernel.clone())),
+        ("tag".to_string(), Json::Str(outcome.tag.clone())),
+        ("strategy".to_string(), Json::Str(outcome.strategy.clone())),
+        ("baseline_ms".to_string(), num(outcome.baseline_time() * 1e3)),
+        ("tuned_ms".to_string(), num(outcome.best_time() * 1e3)),
+        ("reference_ms".to_string(), num(outcome.reference.cost() * 1e3)),
+        ("speedup".to_string(), num(outcome.speedup())),
+        ("evaluations".to_string(), int(outcome.evaluations() as u64)),
+        (
+            "best".to_string(),
+            outcome
+                .best
+                .as_ref()
+                .map(|b| Json::Str(b.config_id.clone()))
+                .unwrap_or(Json::Null),
+        ),
+        ("stats".to_string(), stats_json(&outcome.stats)),
+    ]
+    .into_iter()
+    .collect();
+    Json::Obj(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn stats_json_round_trips() {
+        let stats = TuneStats {
+            compile_ms: 123.5,
+            measure_ms: 45.25,
+            reps_timed: 87,
+            reps_saved: 41,
+            compiles: 9,
+            cache_hits: 3,
+            batches: 4,
+            pruned: 6,
+            gated: 1,
+        };
+        let j = stats_json(&stats);
+        let parsed = json::parse(&j.compact()).unwrap();
+        assert_eq!(parsed.get("reps_timed").and_then(Json::as_u64), Some(87));
+        assert_eq!(parsed.get("reps_saved").and_then(Json::as_u64), Some(41));
+        assert_eq!(parsed.get("compile_ms").and_then(Json::as_f64), Some(123.5));
+        assert_eq!(parsed.get("batches").and_then(Json::as_u64), Some(4));
+    }
+
+    #[test]
+    fn stats_render_mentions_the_headline_numbers() {
+        let stats = TuneStats { reps_timed: 87, reps_saved: 41, ..TuneStats::default() };
+        let line = stats.render();
+        assert!(line.contains("87 timed"));
+        assert!(line.contains("41 saved"));
+    }
+}

@@ -6,6 +6,9 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
+#[cfg(not(feature = "xla-runtime"))]
+use crate::xla;
+
 use super::executable::Executable;
 
 /// Owns the PJRT client.  Cheap to clone via `Arc` inside [`crate::runtime::Registry`];

@@ -3,6 +3,9 @@
 
 use anyhow::{Context, Result};
 
+#[cfg(not(feature = "xla-runtime"))]
+use crate::xla;
+
 use super::literal::TensorData;
 
 /// A PJRT-compiled artifact ready to execute.

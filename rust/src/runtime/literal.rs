@@ -7,6 +7,9 @@
 
 use anyhow::{Context, Result};
 
+#[cfg(not(feature = "xla-runtime"))]
+use crate::xla;
+
 /// Element types exchanged with artifacts (matches `aot.py::_dtype_str`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum DType {

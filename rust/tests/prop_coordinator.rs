@@ -11,8 +11,9 @@
 use std::collections::BTreeMap;
 
 use portatune::coordinator::constraint::{check, Expr};
+use portatune::coordinator::measure::{race_samplers, MeasureConfig};
 use portatune::coordinator::search::{
-    Anneal, Exhaustive, Genetic, HillClimb, RandomSearch, SearchStrategy,
+    drive_batched, Anneal, Exhaustive, Genetic, HillClimb, RandomSearch, SearchStrategy,
 };
 use portatune::coordinator::spec::{Config, TuningSpec};
 use portatune::runtime::registry::ParamDef;
@@ -283,6 +284,159 @@ fn prop_stats_invariants() {
         let kept = reject_outliers(&samples, 5.0);
         assert!(!kept.is_empty());
         assert!(kept.iter().all(|x| samples.contains(x)));
+    }
+}
+
+fn race_cfg() -> MeasureConfig {
+    MeasureConfig {
+        warmup: 0,
+        reps: 7,
+        target_rel_spread: 0.10,
+        max_reps: 28,
+        outlier_k: 0.0,
+        race_min_reps: 3,
+    }
+}
+
+fn constant_lanes(costs: &[f64]) -> Vec<Box<dyn FnMut() -> anyhow::Result<f64> + '_>> {
+    costs
+        .iter()
+        .map(|&c| Box::new(move || Ok(c)) as Box<dyn FnMut() -> anyhow::Result<f64> + '_>)
+        .collect()
+}
+
+#[test]
+fn prop_race_matches_full_measure_winner() {
+    // On deterministic cost surfaces the racing harness must select the
+    // exact variant that full per-candidate measurement would — early
+    // termination may only cut candidates that provably cannot win.
+    let mut rng = Rng::new(0xEC);
+    for case in 0..100 {
+        let n = 2 + rng.gen_range(10);
+        let costs: Vec<f64> = (0..n).map(|_| 1e-4 + rng.next_f64() * 1e-2).collect();
+        let mut lanes = constant_lanes(&costs);
+        let out = race_samplers(&mut lanes, &race_cfg(), None).unwrap();
+        let argmin = costs
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i);
+        assert_eq!(out.winner, argmin, "case {case}: race winner diverged");
+        let w = out.winner.unwrap();
+        let measured = out.measurements[w].as_ref().unwrap().cost();
+        assert!(
+            (measured - costs[w]).abs() < 1e-12,
+            "case {case}: winner cost {measured} != true {}",
+            costs[w]
+        );
+    }
+}
+
+#[test]
+fn prop_race_saves_at_least_30pct_reps() {
+    // The acceptance bar: on batches of ≥ 4 distinct candidates the
+    // cutoff spends ≤ 70% of the serial pipeline's timed repetitions.
+    let mut rng = Rng::new(0xED);
+    for case in 0..50 {
+        let n = 4 + rng.gen_range(8);
+        let costs: Vec<f64> = (0..n).map(|_| 1e-4 + rng.next_f64() * 1e-2).collect();
+        let mut lanes = constant_lanes(&costs);
+        let cfg = race_cfg();
+        let out = race_samplers(&mut lanes, &cfg, None).unwrap();
+        let serial = (n * cfg.reps) as u64;
+        assert!(
+            out.reps_timed as f64 <= 0.7 * serial as f64,
+            "case {case}: race spent {} of serial {serial} reps",
+            out.reps_timed
+        );
+        assert_eq!(out.reps_timed + out.reps_saved, serial, "case {case}");
+        assert_eq!(out.pruned as usize, n - 1, "case {case}: all losers cut");
+    }
+}
+
+#[test]
+fn prop_batched_drive_matches_serial_exhaustive_winner() {
+    // drive_batched over exhaustive with full budget must reproduce the
+    // sequential sweep exactly: same coverage, same winner.
+    let mut master = Rng::new(0xEE);
+    for case in 0..25u64 {
+        let spec = random_spec(&mut master);
+        if spec.enumerate().is_empty() {
+            continue;
+        }
+        let spec2 = spec.clone();
+        let mut eval = move |c: &Config| synthetic_cost(&spec2, c, case);
+        let mut serial_strategy = Exhaustive::new();
+        let serial = serial_strategy.run(&spec, usize::MAX, &mut eval);
+
+        for batch in [2usize, 4, 7] {
+            let spec3 = spec.clone();
+            let mut eval_batch =
+                move |b: &[Config]| -> Vec<f64> {
+                    b.iter().map(|c| synthetic_cost(&spec3, c, case)).collect()
+                };
+            let mut s = Exhaustive::new();
+            let r = drive_batched(&mut s, &spec, usize::MAX, batch, &[], &mut eval_batch);
+            assert_eq!(
+                r.best.as_ref().map(|(c, _)| spec.config_id(c)),
+                serial.best.as_ref().map(|(c, _)| spec.config_id(c)),
+                "case {case} batch {batch}: winner diverged"
+            );
+            assert_eq!(r.evaluations(), serial.evaluations(), "case {case} batch {batch}");
+        }
+    }
+}
+
+#[test]
+fn prop_batch_proposal_respects_budget_dedupe_and_validity() {
+    // The batched driver's dedupe must bound unique evaluations by the
+    // budget for every batch-capable strategy, with valid-only configs
+    // and a best that matches the history minimum.
+    let mut master = Rng::new(0xEF);
+    for case in 0..20u64 {
+        let spec = random_spec(&mut master);
+        let space = spec.enumerate().len();
+        if space == 0 {
+            continue;
+        }
+        let budget = 1 + (case as usize % (space + 3));
+        for batch in [1usize, 3, 5] {
+            let strategies: Vec<Box<dyn SearchStrategy>> = vec![
+                Box::new(Exhaustive::new()),
+                Box::new(RandomSearch::new(case + 1)),
+                Box::new(HillClimb::new(case + 1)),
+                Box::new(Genetic::new(case + 1)),
+            ];
+            for mut s in strategies {
+                assert!(s.supports_batch(), "{} must support batching", s.name());
+                let spec2 = spec.clone();
+                let mut eval_batch = move |b: &[Config]| -> Vec<f64> {
+                    b.iter()
+                        .map(|c| {
+                            assert!(spec2.is_valid(c), "batched eval got invalid config");
+                            synthetic_cost(&spec2, c, case)
+                        })
+                        .collect()
+                };
+                let r = drive_batched(&mut *s, &spec, budget, batch, &[], &mut eval_batch);
+                assert!(
+                    r.evaluations() <= budget,
+                    "{} batch {batch} exceeded budget: {} > {budget}",
+                    s.name(),
+                    r.evaluations()
+                );
+                let mut ids: Vec<String> =
+                    r.history.iter().map(|e| spec.config_id(&e.config)).collect();
+                let n = ids.len();
+                ids.sort();
+                ids.dedup();
+                assert_eq!(ids.len(), n, "{} repeated evaluations under batching", s.name());
+                if let Some((_, best)) = &r.best {
+                    let min = r.history.iter().map(|e| e.cost).fold(f64::INFINITY, f64::min);
+                    assert_eq!(*best, min, "{}", s.name());
+                }
+            }
+        }
     }
 }
 
