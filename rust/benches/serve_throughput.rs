@@ -1,0 +1,202 @@
+//! Serve-path throughput: what a deploy lookup costs on each of the
+//! daemon's three paths.
+//!
+//! * **cold shard** — decision cache disabled (`lru_cap = 0`): every
+//!   lookup reads and parses the platform's shard file.  This is the
+//!   v1 `deploy` experience, per request.
+//! * **warm LRU** — normal cache: after the first touch, lookups are a
+//!   hash-map hit.  The acceptance bar is ≥ 10× over cold (in practice
+//!   it is orders of magnitude).
+//! * **transfer miss** — deploy for a never-seen platform: reads every
+//!   shard, scores fingerprint similarity, ranks candidates.  The
+//!   slowest path by design; it exists so a fresh platform gets a
+//!   warm start instead of nothing.
+//!
+//! Fully hermetic (no XLA, no artifacts): the store is synthesized into
+//! a temp dir.  Machine-readable tail line: `JSON: {...}` with
+//! lookups/sec per path.
+//!
+//! Run: `cargo bench --bench serve_throughput` (BENCH_QUICK=1 to shrink).
+
+use std::time::Instant;
+
+use portatune::coordinator::perfdb::{unix_now, DbEntry, ShardedDb};
+use portatune::coordinator::platform::Fingerprint;
+use portatune::report::Table;
+use portatune::service::{Request, ServeOpts, Server};
+use portatune::util::json::{self, Json};
+
+/// Synthetic platform fleet: distinct SIMD sets and cache geometries so
+/// the transfer ranking has real work to do.
+fn synth_fingerprint(i: usize) -> Fingerprint {
+    let isa_tiers: &[&[&str]] = &[
+        &["sse2"],
+        &["sse2", "sse4_2"],
+        &["sse2", "sse4_2", "avx"],
+        &["sse2", "sse4_2", "avx", "avx2", "fma"],
+        &["sse2", "sse4_2", "avx", "avx2", "avx512f", "fma"],
+        &["neon"],
+    ];
+    let simd = isa_tiers[i % isa_tiers.len()];
+    Fingerprint {
+        cpu_model: format!("Synth CPU {i}"),
+        num_cpus: 1 << (i % 6),
+        simd: simd.iter().map(|s| s.to_string()).collect(),
+        cache_l1d_kb: 32 << (i % 2),
+        cache_l2_kb: 256 << (i % 4),
+        cache_l3_kb: if i % 5 == 0 { 0 } else { 4096 << (i % 3) },
+        os: "linux".to_string(),
+    }
+}
+
+fn synth_entry(platform_key: &str, kernel: &str, tag: &str, i: usize) -> DbEntry {
+    DbEntry {
+        platform_key: platform_key.to_string(),
+        kernel: kernel.to_string(),
+        tag: tag.to_string(),
+        best_params: [
+            ("block_size".to_string(), 1i64 << (6 + i % 5)),
+            ("unroll".to_string(), 1i64 << (i % 3)),
+        ]
+        .into_iter()
+        .collect(),
+        best_config_id: format!("b{}_u{}", 1 << (6 + i % 5), 1 << (i % 3)),
+        best_time_s: 1e-3 / (1.0 + i as f64 * 0.1),
+        baseline_time_s: 2e-3,
+        reference_time_s: 9e-4,
+        evaluations: 16,
+        strategy: "exhaustive".to_string(),
+        recorded_at: unix_now(),
+    }
+}
+
+/// Time `n` calls of `f`; returns calls/sec.
+fn rate(n: usize, mut f: impl FnMut(usize)) -> f64 {
+    let t0 = Instant::now();
+    for i in 0..n {
+        f(i);
+    }
+    n as f64 / t0.elapsed().as_secs_f64().max(1e-9)
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let (platforms, cold_n, warm_n, transfer_n) =
+        if quick { (8, 500, 20_000, 50) } else { (24, 2_000, 200_000, 300) };
+    let kernels: &[(&str, &str)] =
+        &[("axpy", "n4096"), ("axpy", "n65536"), ("dot", "n4096"), ("spmv_ell", "k32")];
+
+    let dir = std::env::temp_dir()
+        .join(format!("portatune-servebench-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let db = ShardedDb::open(&dir)?;
+    let mut keys = Vec::new();
+    for i in 0..platforms {
+        let fp = synth_fingerprint(i);
+        let key = fp.key();
+        for (j, (kernel, tag)) in kernels.iter().enumerate() {
+            db.record(Some(&fp), synth_entry(&key, kernel, tag, i + j))?;
+        }
+        keys.push(key);
+    }
+    println!(
+        "serve-throughput bench — {} platforms x {} keys, shards in {}",
+        platforms,
+        kernels.len(),
+        dir.display()
+    );
+
+    let host = Fingerprint::detect();
+    let lookup_req = |platform: &str, i: usize| {
+        let (kernel, tag) = kernels[i % kernels.len()];
+        Request::Lookup {
+            platform: Some(platform.to_string()),
+            kernel: kernel.to_string(),
+            workload: tag.to_string(),
+        }
+    };
+
+    // Cold: cache disabled, every lookup re-reads its shard file.
+    let cold_opts = ServeOpts { lru_cap: 0, ..ServeOpts::default() };
+    let cold_srv = Server::new(db.clone(), host.clone(), cold_opts);
+    let cold_per_s = rate(cold_n, |i| {
+        let reply = cold_srv.handle_request(&lookup_req(&keys[i % keys.len()], i));
+        assert_eq!(reply.get("found").and_then(Json::as_bool), Some(true));
+    });
+
+    // Warm: same traffic through the decision cache.
+    let warm_srv = Server::new(db.clone(), host.clone(), ServeOpts::default());
+    for i in 0..keys.len() * kernels.len() {
+        let _ = warm_srv.handle_request(&lookup_req(&keys[i % keys.len()], i));
+    }
+    let warm_per_s = rate(warm_n, |i| {
+        let reply = warm_srv.handle_request(&lookup_req(&keys[i % keys.len()], i));
+        assert_eq!(reply.get("found").and_then(Json::as_bool), Some(true));
+    });
+
+    // Transfer miss: a platform the store has never seen, full
+    // similarity ranking over every shard.
+    let fresh = Fingerprint {
+        cpu_model: "Never Seen CPU".to_string(),
+        num_cpus: 12,
+        simd: vec!["sse2".into(), "avx".into(), "avx2".into()],
+        cache_l1d_kb: 48,
+        cache_l2_kb: 2048,
+        cache_l3_kb: 30720,
+        os: "linux".to_string(),
+    };
+    let transfer_per_s = rate(transfer_n, |i| {
+        let (kernel, tag) = kernels[i % kernels.len()];
+        let reply = warm_srv.handle_request(&Request::Deploy {
+            platform: Some("fresh-platform-under-test".to_string()),
+            kernel: kernel.to_string(),
+            workload: tag.to_string(),
+            fingerprint: Some(fresh.clone()),
+        });
+        assert_eq!(reply.get("source").and_then(Json::as_str), Some("transfer"));
+        assert!(
+            reply.get("count").and_then(Json::as_i64).unwrap_or(0) > 0,
+            "a fresh platform must get transfer candidates, not an empty miss"
+        );
+    });
+
+    let mut t = Table::new(&["path", "lookups/sec", "vs cold"]);
+    for (name, per_s) in
+        [("cold shard", cold_per_s), ("warm LRU", warm_per_s), ("transfer miss", transfer_per_s)]
+    {
+        t.row(vec![
+            name.to_string(),
+            format!("{per_s:.0}"),
+            format!("{:.1}x", per_s / cold_per_s),
+        ]);
+    }
+    print!("{}", t.render());
+
+    let speedup = warm_per_s / cold_per_s;
+    let acceptance_failed = speedup < 10.0;
+    if acceptance_failed {
+        println!("FAIL: warm LRU only {speedup:.1}x over cold shard (acceptance bar: >= 10x)");
+    }
+    let stats = warm_srv.stats();
+    println!(
+        "warm-server counters: {} lookups, {} lru hits, {} shard reads, {} transfer misses",
+        stats.lookups, stats.lru_hits, stats.shard_reads, stats.transfer_misses
+    );
+
+    let record = json::obj(vec![
+        ("cold_per_s", json::num(cold_per_s)),
+        ("warm_lru_per_s", json::num(warm_per_s)),
+        ("transfer_miss_per_s", json::num(transfer_per_s)),
+        ("warm_over_cold", json::num(speedup)),
+        ("platforms", json::int(platforms as i64)),
+    ]);
+    println!("JSON: {}", record.compact());
+
+    std::fs::remove_dir_all(&dir).ok();
+    // The 10x warm-over-cold ratio is an acceptance criterion, not a
+    // suggestion: exit non-zero so CI fails when it regresses.
+    if acceptance_failed {
+        std::process::exit(1);
+    }
+    Ok(())
+}

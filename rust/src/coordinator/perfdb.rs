@@ -8,13 +8,29 @@
 //! evaluations.  The paper: "specialization of programs to platforms ...
 //! across various systems and system changes."
 //!
-//! Format: a single JSON document, written atomically (tmp + rename).
+//! Two storage formats coexist:
+//!
+//! * **v1 (legacy)** — [`PerfDb`]: a single JSON document, written
+//!   atomically (tmp + rename).  Saves now *merge* with the on-disk
+//!   document under a lock file instead of last-writer-wins, so two
+//!   processes tuning concurrently cannot erase each other's records.
+//! * **v2 (sharded)** — [`ShardedDb`]: one shard file per platform key
+//!   in a directory, each holding the platform's [`Fingerprint`] (for
+//!   the transfer engine) and the full per-(kernel, workload) *history*
+//!   of entries rather than only the newest.  Writes are
+//!   lock-file-guarded read-merge-rename, so any number of concurrent
+//!   writers (threads or processes) lose nothing.  `portatune serve`
+//!   is backed by this store; `ShardedDb::import_legacy` migrates a v1
+//!   file into shards.
 
 use std::collections::BTreeMap;
+use std::io::Write as _;
 use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::coordinator::platform::Fingerprint;
 use crate::coordinator::spec::Config;
 use crate::util::json::{self, Json};
 
@@ -50,7 +66,29 @@ impl DbEntry {
         }
     }
 
-    fn to_json(&self) -> Json {
+    /// The replacement key for v1 semantics (newest per triple wins).
+    pub fn triple_key(&self) -> String {
+        joined_key(&[&self.platform_key, &self.kernel, &self.tag])
+    }
+
+    /// Identity inside a shard's history: two entries are the same
+    /// observation iff platform, kernel, workload, winning config,
+    /// strategy, and timestamp all coincide.  History merges dedupe on
+    /// this, never on the triple alone.
+    pub fn identity(&self) -> String {
+        let ts = self.recorded_at.to_string();
+        joined_key(&[
+            &self.platform_key,
+            &self.kernel,
+            &self.tag,
+            &self.best_config_id,
+            &self.strategy,
+            &ts,
+        ])
+    }
+
+    /// JSON view (also the wire form used by the serve protocol).
+    pub fn to_json(&self) -> Json {
         json::obj(vec![
             ("platform_key", json::s(&self.platform_key)),
             ("kernel", json::s(&self.kernel)),
@@ -74,7 +112,8 @@ impl DbEntry {
         ])
     }
 
-    fn from_json(v: &Json) -> Result<DbEntry> {
+    /// Parse the [`to_json`](Self::to_json) form.
+    pub fn from_json(v: &Json) -> Result<DbEntry> {
         let gs = |k: &str| -> Result<String> {
             v.get(k)
                 .and_then(Json::as_str)
@@ -157,17 +196,46 @@ impl PerfDb {
         .pretty()
     }
 
-    /// Atomic save (tmp + rename).
+    /// Atomic save: lock, reload the on-disk document, merge (newest
+    /// `recorded_at` per (platform, kernel, workload) wins, in-memory
+    /// wins ties), tmp + rename.  Two processes tuning concurrently
+    /// both keep their records; the old implementation let the last
+    /// writer silently erase the first's.
     pub fn save(&self) -> Result<()> {
         if let Some(parent) = self.path.parent() {
             if !parent.as_os_str().is_empty() {
                 std::fs::create_dir_all(parent).context("creating perf DB dir")?;
             }
         }
-        let tmp = self.path.with_extension("json.tmp");
-        std::fs::write(&tmp, self.to_json_text()).context("writing perf DB tmp")?;
-        std::fs::rename(&tmp, &self.path).context("renaming perf DB")?;
-        Ok(())
+        locked_commit(&self.path, self.path.with_extension("json.lock"), || {
+            let mut merged: BTreeMap<String, DbEntry> = BTreeMap::new();
+            // Best-effort reload: a corrupt on-disk document cannot hold
+            // the save hostage (the pre-merge behavior overwrote it
+            // anyway).
+            if let Ok(text) = std::fs::read_to_string(&self.path) {
+                if let Ok(disk) = Self::parse(&text) {
+                    for e in disk {
+                        merged.insert(e.triple_key(), e);
+                    }
+                }
+            }
+            for e in &self.entries {
+                match merged.get(&e.triple_key()) {
+                    Some(existing) if existing.recorded_at > e.recorded_at => {}
+                    _ => {
+                        merged.insert(e.triple_key(), e.clone());
+                    }
+                }
+            }
+            Ok(json::obj(vec![
+                ("version", json::int(1)),
+                (
+                    "entries",
+                    Json::Arr(merged.values().map(DbEntry::to_json).collect()),
+                ),
+            ])
+            .pretty())
+        })
     }
 
     pub fn entries(&self) -> &[DbEntry] {
@@ -220,6 +288,431 @@ impl PerfDb {
             .filter(|(e, _)| seen.insert(e.best_config_id.clone()))
             .map(|(e, _)| e.best_params.clone())
             .collect()
+    }
+}
+
+/// Collision-proof join for map keys built from wire-supplied strings:
+/// each segment is length-prefixed, so a `|` *inside* a segment cannot
+/// make two distinct tuples produce the same key (e.g. kernel
+/// `axpy|n4096` + tag `x` vs kernel `axpy` + tag `n4096|x`).
+fn joined_key(parts: &[&str]) -> String {
+    parts
+        .iter()
+        .map(|p| format!("{}:{p}", p.len()))
+        .collect::<Vec<String>>()
+        .join("|")
+}
+
+/// A per-writer-unique sibling tmp path for atomic rename commits.  A
+/// shared tmp name would let a stolen-from lock loser's cleanup delete
+/// the thief's freshly written tmp between its write and rename.
+fn unique_tmp(path: &Path) -> PathBuf {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    path.with_extension(format!(
+        "tmp.{}.{}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+/// The steal-safe commit protocol shared by the legacy single-file DB
+/// and the shard store: lock, `build` the merged document (the closure
+/// re-reads on-disk state, so each retry merges fresh), write a
+/// per-writer tmp, re-check lock ownership, atomic rename.  Retries
+/// the whole cycle when the lock was stolen mid-merge (a holder that
+/// stalled past [`STALE_LOCK`]): committing a pre-steal merge would
+/// erase whatever the thief wrote.
+fn locked_commit(
+    path: &Path,
+    lock_path: PathBuf,
+    mut build: impl FnMut() -> Result<String>,
+) -> Result<()> {
+    for _attempt in 0..3 {
+        let lock = FileLock::acquire(lock_path.clone())?;
+        let doc = build()?;
+        let tmp = unique_tmp(path);
+        std::fs::write(&tmp, doc)
+            .with_context(|| format!("writing tmp for {}", path.display()))?;
+        if !lock.still_owned() {
+            let _ = std::fs::remove_file(&tmp);
+            continue;
+        }
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming {}", path.display()))?;
+        return Ok(());
+    }
+    Err(anyhow::anyhow!(
+        "write to {} repeatedly lost its lock; giving up",
+        path.display()
+    ))
+}
+
+/// A cooperative advisory lock: a sibling file created with
+/// `create_new` (O_EXCL), removed on drop.  Waiters spin with a short
+/// sleep; a lock older than [`STALE_LOCK`] is presumed abandoned by a
+/// crashed holder and stolen.  This is the only coordination the shard
+/// store needs — writes themselves stay atomic via tmp + rename, the
+/// lock only serializes the read-merge-write cycle.
+struct FileLock {
+    path: PathBuf,
+}
+
+/// How long a lock file may exist before waiters treat it as abandoned.
+const STALE_LOCK: Duration = Duration::from_secs(10);
+
+/// How long `acquire` waits before giving up.
+const LOCK_TIMEOUT: Duration = Duration::from_secs(10);
+
+impl FileLock {
+    /// The lock file's content: the owner's token.  Checked by `Drop`
+    /// so a holder whose lock was stolen (after `STALE_LOCK`) cannot
+    /// delete the thief's fresh lock.
+    fn token() -> String {
+        format!("{}:{:?}", std::process::id(), std::thread::current().id())
+    }
+
+    fn acquire(path: PathBuf) -> Result<FileLock> {
+        let deadline = Instant::now() + LOCK_TIMEOUT;
+        loop {
+            match std::fs::OpenOptions::new().write(true).create_new(true).open(&path) {
+                Ok(mut f) => {
+                    let _ = write!(f, "{}", Self::token());
+                    let _ = f.sync_all();
+                    return Ok(FileLock { path });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    let stale = std::fs::metadata(&path)
+                        .and_then(|m| m.modified())
+                        .ok()
+                        .and_then(|t| t.elapsed().ok())
+                        .map(|age| age > STALE_LOCK)
+                        .unwrap_or(false);
+                    if stale {
+                        // Steal via rename: atomic, so exactly one racer
+                        // moves the abandoned file aside; the losers'
+                        // renames fail (source gone) and they go back to
+                        // waiting on create_new.  Plain remove_file here
+                        // would let a loser delete the winner's *fresh*
+                        // lock.
+                        let aside = path.with_extension(format!(
+                            "stale.{}",
+                            std::process::id()
+                        ));
+                        if std::fs::rename(&path, &aside).is_ok() {
+                            let _ = std::fs::remove_file(&aside);
+                        }
+                        continue;
+                    }
+                    if Instant::now() >= deadline {
+                        return Err(anyhow::anyhow!(
+                            "timed out waiting for lock {}",
+                            path.display()
+                        ));
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(e) => {
+                    return Err(e).with_context(|| format!("creating lock {}", path.display()))
+                }
+            }
+        }
+    }
+}
+
+impl FileLock {
+    /// Whether the lock file still names us as owner.  A holder that
+    /// stalled past [`STALE_LOCK`] may have been stolen from; writers
+    /// re-check this immediately before their commit rename and redo
+    /// the merge cycle if ownership was lost, so a resumed pre-steal
+    /// merge cannot overwrite the thief's records.  (Best-effort: the
+    /// check-to-rename window is microseconds against a multi-second
+    /// stall scenario; closing it entirely needs OS advisory locks the
+    /// pinned std-only dependency set does not expose.)
+    fn still_owned(&self) -> bool {
+        std::fs::read_to_string(&self.path)
+            .map(|content| content == Self::token())
+            .unwrap_or(false)
+    }
+}
+
+impl Drop for FileLock {
+    fn drop(&mut self) {
+        // Only delete the lock if it is still ours: after a steal the
+        // path names someone else's live lock.
+        if self.still_owned() {
+            let _ = std::fs::remove_file(&self.path);
+        }
+    }
+}
+
+/// One platform's slice of the v2 store: its fingerprint (when known)
+/// plus the full history of tuning records made on it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Shard {
+    pub platform_key: String,
+    /// Recorded by the daemon / tuner when the platform was live;
+    /// `None` for entries imported from a v1 file (the fingerprint was
+    /// never stored there — such shards are excluded from similarity
+    /// ranking but still serve exact lookups).
+    pub fingerprint: Option<Fingerprint>,
+    /// Every record ever made, not just the newest per key.
+    pub entries: Vec<DbEntry>,
+}
+
+impl Shard {
+    fn new(platform_key: &str) -> Shard {
+        Shard { platform_key: platform_key.to_string(), fingerprint: None, entries: Vec::new() }
+    }
+
+    /// Newest entry for a (kernel, workload).
+    pub fn latest(&self, kernel: &str, tag: &str) -> Option<&DbEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.kernel == kernel && e.tag == tag)
+            .max_by_key(|e| e.recorded_at)
+    }
+
+    /// Full history for a (kernel, workload), newest first.
+    pub fn history(&self, kernel: &str, tag: &str) -> Vec<&DbEntry> {
+        let mut hist: Vec<&DbEntry> = self
+            .entries
+            .iter()
+            .filter(|e| e.kernel == kernel && e.tag == tag)
+            .collect();
+        hist.sort_by(|a, b| b.recorded_at.cmp(&a.recorded_at));
+        hist
+    }
+
+    /// Newest entry per (kernel, workload) — the shard's deployable
+    /// frontier (what v1 stored as its only view).  Ties on
+    /// `recorded_at` keep the later list element, matching
+    /// [`latest`](Self::latest)'s `max_by_key` (last maximal), so every
+    /// view of the store names the same current entry.
+    pub fn frontier(&self) -> Vec<&DbEntry> {
+        let mut best: BTreeMap<(String, String), &DbEntry> = BTreeMap::new();
+        for e in &self.entries {
+            let k = (e.kernel.clone(), e.tag.clone());
+            match best.get(&k) {
+                Some(cur) if cur.recorded_at > e.recorded_at => {}
+                _ => {
+                    best.insert(k, e);
+                }
+            }
+        }
+        best.into_values().collect()
+    }
+
+    fn to_json_text(&self) -> String {
+        json::obj(vec![
+            ("version", json::int(2)),
+            ("platform_key", json::s(&self.platform_key)),
+            (
+                "fingerprint",
+                self.fingerprint.as_ref().map(Fingerprint::to_json).unwrap_or(Json::Null),
+            ),
+            ("entries", Json::Arr(self.entries.iter().map(DbEntry::to_json).collect())),
+        ])
+        .pretty()
+    }
+
+    fn parse(text: &str) -> Result<Shard> {
+        let root = json::parse(text).context("parsing shard json")?;
+        let version = root.get("version").and_then(Json::as_i64).unwrap_or(0);
+        if version != 2 {
+            return Err(anyhow::anyhow!("unsupported shard version {version}"));
+        }
+        let platform_key = root
+            .get("platform_key")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("shard missing platform_key"))?
+            .to_string();
+        let fingerprint = match root.get("fingerprint") {
+            Some(Json::Null) | None => None,
+            Some(v) => Some(
+                Fingerprint::from_json(v)
+                    .ok_or_else(|| anyhow::anyhow!("shard fingerprint malformed"))?,
+            ),
+        };
+        let entries = root
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("shard missing entries"))?
+            .iter()
+            .map(DbEntry::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Shard { platform_key, fingerprint, entries })
+    }
+}
+
+/// PerfDb v2: one shard file per platform key under a directory.
+///
+/// The handle is stateless — every operation reads and/or writes shard
+/// files directly, so any number of `ShardedDb` values (across threads
+/// and processes) may point at the same directory.  Caching is the
+/// daemon's job ([`crate::service::server::Server`] layers an LRU over
+/// this), not the store's.
+#[derive(Debug, Clone)]
+pub struct ShardedDb {
+    dir: PathBuf,
+}
+
+impl ShardedDb {
+    /// Open (creating the directory if needed).
+    pub fn open(dir: impl AsRef<Path>) -> Result<ShardedDb> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating shard dir {}", dir.display()))?;
+        Ok(ShardedDb { dir })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Platform key → shard file.  The filename is a sanitized slug
+    /// *plus a hash of the raw key*: keys arrive over the wire as
+    /// arbitrary strings, and sanitization alone would map distinct
+    /// keys (e.g. `p.1` / `p:1`) onto one file, cross-contaminating
+    /// platforms.
+    fn shard_path(&self, platform_key: &str) -> PathBuf {
+        let mut safe: String = platform_key
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' { c } else { '-' })
+            .collect();
+        safe.truncate(64);
+        let hash = crate::coordinator::platform::fnv1a(platform_key);
+        self.dir.join(format!("{safe}.{hash:016x}.shard.json"))
+    }
+
+    /// Load one platform's shard (None if it has no records yet).
+    pub fn load(&self, platform_key: &str) -> Result<Option<Shard>> {
+        let path = self.shard_path(platform_key);
+        if !path.exists() {
+            return Ok(None);
+        }
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading shard {}", path.display()))?;
+        let shard = Shard::parse(&text)?;
+        anyhow::ensure!(
+            shard.platform_key == platform_key,
+            "shard {} belongs to platform {:?}, not {:?}",
+            path.display(),
+            shard.platform_key,
+            platform_key
+        );
+        Ok(Some(shard))
+    }
+
+    /// Every shard in the store (the transfer engine's candidate pool).
+    ///
+    /// Whole-store scans degrade instead of failing: an unreadable or
+    /// corrupt shard file (ENOSPC truncation, foreign tool, hand edit)
+    /// is skipped with a warning, so one bad platform cannot take down
+    /// every deploy miss, staleness scan, and warm start.  Targeted
+    /// operations on the bad shard itself ([`load`](Self::load),
+    /// [`record`](Self::record)) still error loudly.
+    pub fn all_shards(&self) -> Result<Vec<Shard>> {
+        let mut shards = Vec::new();
+        for entry in std::fs::read_dir(&self.dir).context("listing shard dir")? {
+            let path = entry?.path();
+            if path.file_name().and_then(|n| n.to_str()).is_some_and(|n| {
+                n.ends_with(".shard.json")
+            }) {
+                let parsed = std::fs::read_to_string(&path)
+                    .map_err(anyhow::Error::from)
+                    .and_then(|text| Shard::parse(&text));
+                match parsed {
+                    Ok(shard) => shards.push(shard),
+                    Err(e) => {
+                        eprintln!("warning: skipping corrupt shard {}: {e:#}", path.display());
+                    }
+                }
+            }
+        }
+        shards.sort_by(|a, b| a.platform_key.cmp(&b.platform_key));
+        Ok(shards)
+    }
+
+    /// Recorded platform keys, sorted.
+    pub fn platforms(&self) -> Result<Vec<String>> {
+        Ok(self.all_shards()?.into_iter().map(|s| s.platform_key).collect())
+    }
+
+    /// Append one record to its platform's shard: lock, reload the
+    /// on-disk shard, union histories (dedupe by [`DbEntry::identity`]),
+    /// tmp + rename.  Concurrent writers each re-merge, so no entry is
+    /// ever lost.
+    pub fn record(&self, fingerprint: Option<&Fingerprint>, entry: DbEntry) -> Result<()> {
+        let key = entry.platform_key.clone();
+        self.record_many(&key, fingerprint, vec![entry])
+    }
+
+    /// Append a batch of same-platform records under one lock and one
+    /// read-merge-rename cycle (the migration path's bulk write; per-
+    /// entry `record` would rewrite the shard once per entry).
+    pub fn record_many(
+        &self,
+        platform_key: &str,
+        fingerprint: Option<&Fingerprint>,
+        entries: Vec<DbEntry>,
+    ) -> Result<()> {
+        anyhow::ensure!(
+            entries.iter().all(|e| e.platform_key == platform_key),
+            "record_many entries must all belong to platform {platform_key:?}"
+        );
+        let path = self.shard_path(platform_key);
+        locked_commit(&path, path.with_extension("lock"), || {
+            let mut shard = if path.exists() {
+                let text = std::fs::read_to_string(&path)
+                    .with_context(|| format!("reading shard {}", path.display()))?;
+                let shard = Shard::parse(&text)?;
+                anyhow::ensure!(
+                    shard.platform_key == platform_key,
+                    "shard {} belongs to platform {:?}, not {:?}",
+                    path.display(),
+                    shard.platform_key,
+                    platform_key
+                );
+                shard
+            } else {
+                Shard::new(platform_key)
+            };
+            if let Some(fp) = fingerprint {
+                shard.fingerprint = Some(fp.clone());
+            }
+            let mut known: std::collections::HashSet<String> =
+                shard.entries.iter().map(DbEntry::identity).collect();
+            for entry in &entries {
+                if known.insert(entry.identity()) {
+                    shard.entries.push(entry.clone());
+                }
+            }
+            Ok(shard.to_json_text())
+        })
+    }
+
+    /// Exact lookup: newest record for (platform, kernel, workload).
+    pub fn lookup(&self, platform_key: &str, kernel: &str, tag: &str) -> Result<Option<DbEntry>> {
+        Ok(self.load(platform_key)?.and_then(|s| s.latest(kernel, tag).cloned()))
+    }
+
+    /// Migrate a v1 single-file DB into shards: one locked bulk write
+    /// per platform (linear in the legacy file, not quadratic).
+    /// Idempotent (identity dedupe) and additive (existing shard
+    /// history is kept).  Returns the number of entries processed.
+    pub fn import_legacy(&self, path: impl AsRef<Path>) -> Result<usize> {
+        let legacy = PerfDb::open(path)?;
+        let mut by_platform: BTreeMap<String, Vec<DbEntry>> = BTreeMap::new();
+        for e in legacy.entries() {
+            by_platform.entry(e.platform_key.clone()).or_default().push(e.clone());
+        }
+        let mut n = 0;
+        for (key, entries) in by_platform {
+            n += entries.len();
+            self.record_many(&key, None, entries)?;
+        }
+        Ok(n)
     }
 }
 
@@ -342,5 +835,170 @@ mod tests {
         let mut db = PerfDb { path: PathBuf::from("/tmp/unused.json"), entries: vec![] };
         db.record(entry("local", "axpy", "n4096", "b256_u1", 1.2));
         assert!(db.warm_start("axpy", "n4096", "local").is_empty());
+    }
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("portatune-shards-{name}-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        dir
+    }
+
+    #[test]
+    fn shard_record_keeps_history_and_latest_wins() {
+        let dir = tmp_dir("hist");
+        let db = ShardedDb::open(&dir).unwrap();
+        let mut old = entry("p1", "axpy", "n4096", "b256_u1", 1.1);
+        old.recorded_at = 100;
+        let mut new = entry("p1", "axpy", "n4096", "b1024_u4", 1.9);
+        new.recorded_at = 200;
+        db.record(None, old).unwrap();
+        db.record(None, new).unwrap();
+        let shard = db.load("p1").unwrap().unwrap();
+        assert_eq!(shard.entries.len(), 2, "history is kept, not last-write-wins");
+        assert_eq!(shard.latest("axpy", "n4096").unwrap().best_config_id, "b1024_u4");
+        let hist = shard.history("axpy", "n4096");
+        assert_eq!(hist.len(), 2);
+        assert!(hist[0].recorded_at >= hist[1].recorded_at);
+        assert_eq!(db.lookup("p1", "axpy", "n4096").unwrap().unwrap().best_config_id, "b1024_u4");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shard_record_is_idempotent_on_identity() {
+        let dir = tmp_dir("idem");
+        let db = ShardedDb::open(&dir).unwrap();
+        let e = entry("p1", "axpy", "n4096", "b256_u1", 1.1);
+        db.record(None, e.clone()).unwrap();
+        db.record(None, e).unwrap();
+        assert_eq!(db.load("p1").unwrap().unwrap().entries.len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shard_stores_fingerprint_and_lists_platforms() {
+        let dir = tmp_dir("fp");
+        let db = ShardedDb::open(&dir).unwrap();
+        let fp = Fingerprint {
+            cpu_model: "Test CPU".into(),
+            num_cpus: 4,
+            simd: vec!["avx2".into()],
+            cache_l1d_kb: 32,
+            cache_l2_kb: 1024,
+            cache_l3_kb: 8192,
+            os: "linux".into(),
+        };
+        db.record(Some(&fp), entry("p1", "axpy", "n4096", "a", 1.0)).unwrap();
+        db.record(None, entry("p2", "axpy", "n4096", "b", 1.0)).unwrap();
+        assert_eq!(db.platforms().unwrap(), vec!["p1".to_string(), "p2".to_string()]);
+        let shards = db.all_shards().unwrap();
+        assert_eq!(shards.len(), 2);
+        assert_eq!(shards[0].fingerprint.as_ref().unwrap(), &fp);
+        assert!(shards[1].fingerprint.is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shard_frontier_is_newest_per_key() {
+        let mut shard = Shard::new("p1");
+        let mut a = entry("p1", "axpy", "n4096", "old", 1.0);
+        a.recorded_at = 1;
+        let mut b = entry("p1", "axpy", "n4096", "new", 1.5);
+        b.recorded_at = 2;
+        let c = entry("p1", "dot", "n4096", "other", 1.2);
+        shard.entries = vec![a, b, c];
+        let frontier = shard.frontier();
+        assert_eq!(frontier.len(), 2);
+        assert!(frontier.iter().any(|e| e.best_config_id == "new"));
+        assert!(!frontier.iter().any(|e| e.best_config_id == "old"));
+    }
+
+    #[test]
+    fn import_legacy_migrates_v1_file() {
+        let dir = tmp_dir("migrate");
+        std::fs::create_dir_all(&dir).unwrap();
+        let legacy_path = dir.join("perfdb.json");
+        let mut legacy = PerfDb { path: legacy_path.clone(), entries: vec![] };
+        legacy.record(entry("p1", "axpy", "n4096", "a", 1.3));
+        legacy.record(entry("p2", "dot", "n65536", "b", 2.1));
+        legacy.save().unwrap();
+
+        let db = ShardedDb::open(dir.join("shards")).unwrap();
+        assert_eq!(db.import_legacy(&legacy_path).unwrap(), 2);
+        // Idempotent: re-import adds nothing.
+        assert_eq!(db.import_legacy(&legacy_path).unwrap(), 2);
+        assert_eq!(db.platforms().unwrap().len(), 2);
+        assert_eq!(db.lookup("p1", "axpy", "n4096").unwrap().unwrap().best_config_id, "a");
+        assert_eq!(db.load("p1").unwrap().unwrap().entries.len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn legacy_save_merges_instead_of_clobbering() {
+        let dir = tmp_dir("merge");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("perfdb.json");
+        // Two writers open the same (empty) path, record different
+        // platforms, and save in sequence: both records must survive.
+        let mut w1 = PerfDb::open(&path).unwrap();
+        let mut w2 = PerfDb::open(&path).unwrap();
+        w1.record(entry("p1", "axpy", "n4096", "a", 1.3));
+        w2.record(entry("p2", "axpy", "n4096", "b", 1.4));
+        w1.save().unwrap();
+        w2.save().unwrap();
+        let merged = PerfDb::open(&path).unwrap();
+        assert_eq!(merged.len(), 2, "second save must not erase the first writer's entry");
+        assert!(merged.lookup("p1", "axpy", "n4096").is_some());
+        assert!(merged.lookup("p2", "axpy", "n4096").is_some());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn legacy_save_same_key_newest_recorded_at_wins() {
+        let dir = tmp_dir("newest");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("perfdb.json");
+        let mut newer = entry("p1", "axpy", "n4096", "newer", 1.5);
+        newer.recorded_at = 2_000_000_000;
+        let mut w1 = PerfDb::open(&path).unwrap();
+        w1.record(newer);
+        w1.save().unwrap();
+        // A second writer holding an older observation of the same key
+        // must not roll the on-disk record back.
+        let mut older = entry("p1", "axpy", "n4096", "older", 1.2);
+        older.recorded_at = 1_000_000_000;
+        let mut w2 = PerfDb::open(std::path::Path::new("/nonexistent/none.json")).unwrap();
+        w2.record(older);
+        let w2 = PerfDb { path: path.clone(), entries: w2.entries().to_vec() };
+        w2.save().unwrap();
+        let on_disk = PerfDb::open(&path).unwrap();
+        assert_eq!(on_disk.lookup("p1", "axpy", "n4096").unwrap().best_config_id, "newer");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn joined_key_is_collision_proof_across_segment_boundaries() {
+        assert_ne!(joined_key(&["axpy|n4096", "x"]), joined_key(&["axpy", "n4096|x"]));
+        assert_eq!(joined_key(&["a", "b"]), joined_key(&["a", "b"]));
+        let mut a = entry("p", "axpy|n4096", "x", "c", 1.0);
+        let b = entry("p", "axpy", "n4096|x", "c", 1.0);
+        a.recorded_at = b.recorded_at;
+        assert_ne!(a.triple_key(), b.triple_key());
+        assert_ne!(a.identity(), b.identity());
+    }
+
+    #[test]
+    fn file_lock_excludes_and_releases() {
+        let dir = tmp_dir("lock");
+        std::fs::create_dir_all(&dir).unwrap();
+        let lock_path = dir.join("x.lock");
+        {
+            let _held = FileLock::acquire(lock_path.clone()).unwrap();
+            assert!(lock_path.exists());
+        }
+        assert!(!lock_path.exists(), "lock is released on drop");
+        // Re-acquirable after release.
+        let _again = FileLock::acquire(lock_path.clone()).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

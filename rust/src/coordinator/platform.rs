@@ -11,6 +11,8 @@
 use std::fmt::Write as _;
 use std::path::Path;
 
+use crate::util::json::{self, Json};
+
 /// A platform's identity for tuning purposes.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Fingerprint {
@@ -45,14 +47,19 @@ impl Fingerprint {
             .filter(|l| l.starts_with("processor"))
             .count()
             .max(1);
+        // x86 /proc/cpuinfo lists ISA extensions on a `flags` line; ARM
+        // uses `Features` (arm64 calls NEON `asimd`, arm32 says `neon`).
         let flags_line = cpuinfo
             .lines()
-            .find(|l| l.starts_with("flags"))
+            .find(|l| l.starts_with("flags") || l.starts_with("Features"))
             .and_then(|l| l.split(':').nth(1))
             .unwrap_or("");
-        let interesting = ["sse2", "sse4_2", "avx", "avx2", "avx512f", "fma", "neon"];
-        let flagset: std::collections::HashSet<&str> =
+        let interesting = ["sse2", "sse4_2", "avx", "avx2", "avx512f", "fma", "neon", "sve"];
+        let mut flagset: std::collections::HashSet<&str> =
             flags_line.split_whitespace().collect();
+        if flagset.contains("asimd") {
+            flagset.insert("neon");
+        }
         let simd = interesting
             .iter()
             .filter(|f| flagset.contains(**f))
@@ -120,6 +127,66 @@ impl Fingerprint {
         format!("{}-{:016x}", sanitize(&self.cpu_model), fnv1a(&material))
     }
 
+    /// Similarity to another platform in [0, 1] — the transfer engine's
+    /// core metric.  A weighted mean of four symmetric components:
+    ///
+    /// * SIMD ISA overlap (Jaccard index of the feature sets) — weight 5,
+    /// * cache geometry (per-level min/max size ratio, L1d/L2/L3) — weight 3,
+    /// * core count (min/max ratio) — weight 1,
+    /// * OS equality — weight 1.
+    ///
+    /// Every component is exactly 1.0 when the fingerprints are equal,
+    /// so `a.similarity(&a) == 1.0` and [`distance`](Self::distance) is
+    /// exactly 0.0; every component is order-independent, so the metric
+    /// is symmetric.
+    pub fn similarity(&self, other: &Fingerprint) -> f64 {
+        let simd = jaccard(&self.simd, &other.simd);
+        let cache = (ratio_sim(self.cache_l1d_kb, other.cache_l1d_kb)
+            + ratio_sim(self.cache_l2_kb, other.cache_l2_kb)
+            + ratio_sim(self.cache_l3_kb, other.cache_l3_kb))
+            / 3.0;
+        let cores = ratio_sim(self.num_cpus.max(1) as u64, other.num_cpus.max(1) as u64);
+        let os = if self.os == other.os { 1.0 } else { 0.0 };
+        (5.0 * simd + 3.0 * cache + cores + os) / 10.0
+    }
+
+    /// Distance = 1 − similarity (0 for identical fingerprints).
+    pub fn distance(&self, other: &Fingerprint) -> f64 {
+        1.0 - self.similarity(other)
+    }
+
+    /// JSON view, stored in perf-DB shards so the transfer engine can
+    /// score similarity against platforms it has never seen live.
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("cpu_model", json::s(&self.cpu_model)),
+            ("num_cpus", json::int(self.num_cpus as i64)),
+            ("simd", Json::Arr(self.simd.iter().map(|f| json::s(f)).collect())),
+            ("cache_l1d_kb", json::int(self.cache_l1d_kb as i64)),
+            ("cache_l2_kb", json::int(self.cache_l2_kb as i64)),
+            ("cache_l3_kb", json::int(self.cache_l3_kb as i64)),
+            ("os", json::s(&self.os)),
+        ])
+    }
+
+    /// Parse the [`to_json`](Self::to_json) form; `None` on shape errors.
+    pub fn from_json(v: &Json) -> Option<Fingerprint> {
+        Some(Fingerprint {
+            cpu_model: v.get("cpu_model")?.as_str()?.to_string(),
+            num_cpus: v.get("num_cpus")?.as_u64()? as usize,
+            simd: v
+                .get("simd")?
+                .as_arr()?
+                .iter()
+                .map(|f| f.as_str().map(str::to_string))
+                .collect::<Option<Vec<String>>>()?,
+            cache_l1d_kb: v.get("cache_l1d_kb")?.as_u64()?,
+            cache_l2_kb: v.get("cache_l2_kb")?.as_u64()?,
+            cache_l3_kb: v.get("cache_l3_kb")?.as_u64()?,
+            os: v.get("os")?.as_str()?.to_string(),
+        })
+    }
+
     /// Human-oriented description block.
     pub fn describe(&self) -> String {
         format!(
@@ -136,7 +203,33 @@ impl Fingerprint {
     }
 }
 
-fn sanitize(s: &str) -> String {
+/// Jaccard index of two feature lists (1.0 when both are empty: two
+/// platforms that report no SIMD at all are alike, not alien).
+fn jaccard(a: &[String], b: &[String]) -> f64 {
+    if a.is_empty() && b.is_empty() {
+        return 1.0;
+    }
+    let sa: std::collections::HashSet<&str> = a.iter().map(String::as_str).collect();
+    let sb: std::collections::HashSet<&str> = b.iter().map(String::as_str).collect();
+    let inter = sa.intersection(&sb).count() as f64;
+    let union = sa.union(&sb).count() as f64;
+    inter / union
+}
+
+/// min/max ratio in [0, 1]; both-unknown (0) is a perfect match, one
+/// unknown is a half match (we can't refute similarity, only not
+/// confirm it).
+fn ratio_sim(a: u64, b: u64) -> f64 {
+    match (a, b) {
+        (0, 0) => 1.0,
+        (0, _) | (_, 0) => 0.5,
+        (a, b) => a.min(b) as f64 / a.max(b) as f64,
+    }
+}
+
+/// Slug used as the prefix of derived platform keys (also consulted by
+/// the staleness scheduler to decide drift eligibility).
+pub(crate) fn sanitize(s: &str) -> String {
     let mut out: String = s
         .chars()
         .map(|c| if c.is_ascii_alphanumeric() { c.to_ascii_lowercase() } else { '-' })
@@ -148,7 +241,9 @@ fn sanitize(s: &str) -> String {
     out.trim_matches('-').to_string()
 }
 
-fn fnv1a(s: &str) -> u64 {
+/// FNV-1a: stable, dependency-free content hash (also used by the
+/// shard store to collision-proof shard filenames).
+pub(crate) fn fnv1a(s: &str) -> u64 {
     let mut h: u64 = 0xcbf29ce484222325;
     for b in s.bytes() {
         h ^= b as u64;
@@ -228,5 +323,85 @@ mod tests {
     fn sanitize_produces_clean_slugs() {
         assert_eq!(sanitize("Intel(R) Xeon(R) @ 2.10GHz"), "intel-r-xeon-r-2-10ghz");
         assert_eq!(sanitize("!!!"), "");
+    }
+
+    /// ARM /proc/cpuinfo fixture: `Features` line, `asimd` spelling.
+    #[test]
+    fn detects_arm_neon_from_features_line() {
+        let dir = std::env::temp_dir().join(format!("portatune-armfix-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let cpuinfo = dir.join("cpuinfo");
+        std::fs::write(
+            &cpuinfo,
+            "processor\t: 0\nBogoMIPS\t: 50.00\n\
+             Features\t: fp asimd evtstrm aes pmull sha1 sha2 crc32 atomics sve\n\
+             CPU implementer\t: 0x41\nCPU part\t: 0xd0c\n\
+             processor\t: 1\n\
+             Features\t: fp asimd evtstrm aes pmull sha1 sha2 crc32 atomics sve\n",
+        )
+        .unwrap();
+        let fp = Fingerprint::detect_from(&cpuinfo, Path::new("/nonexistent/sys"));
+        assert!(fp.simd.contains(&"neon".to_string()), "asimd must imply neon: {:?}", fp.simd);
+        assert!(fp.simd.contains(&"sve".to_string()));
+        assert_eq!(fp.num_cpus, 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn detects_arm32_neon_flag() {
+        let dir = std::env::temp_dir().join(format!("portatune-arm32-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let cpuinfo = dir.join("cpuinfo");
+        std::fs::write(
+            &cpuinfo,
+            "processor\t: 0\nmodel name\t: ARMv7 Processor rev 4 (v7l)\n\
+             Features\t: half thumb fastmult vfp edsp neon vfpv3\n",
+        )
+        .unwrap();
+        let fp = Fingerprint::detect_from(&cpuinfo, Path::new("/nonexistent/sys"));
+        assert!(fp.simd.contains(&"neon".to_string()));
+        assert_eq!(fp.cpu_model, "ARMv7 Processor rev 4 (v7l)");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    fn fp(simd: &[&str], l1: u64, l2: u64, l3: u64, cores: usize) -> Fingerprint {
+        Fingerprint {
+            cpu_model: "test".into(),
+            num_cpus: cores,
+            simd: simd.iter().map(|s| s.to_string()).collect(),
+            cache_l1d_kb: l1,
+            cache_l2_kb: l2,
+            cache_l3_kb: l3,
+            os: "linux".into(),
+        }
+    }
+
+    #[test]
+    fn similarity_identity_and_symmetry() {
+        let a = fp(&["avx", "avx2", "fma"], 32, 1024, 33792, 8);
+        let b = fp(&["neon"], 64, 512, 0, 4);
+        assert_eq!(a.similarity(&a), 1.0);
+        assert_eq!(a.distance(&a), 0.0);
+        assert_eq!(a.similarity(&b), b.similarity(&a));
+        assert!(a.similarity(&b) < 1.0);
+    }
+
+    #[test]
+    fn similarity_orders_near_before_far() {
+        let target = fp(&["sse2", "avx", "avx2"], 32, 1024, 33792, 8);
+        let near = fp(&["sse2", "avx", "avx2"], 32, 512, 33792, 8);
+        let far = fp(&["neon"], 128, 4096, 0, 64);
+        assert!(target.similarity(&near) > target.similarity(&far));
+    }
+
+    #[test]
+    fn fingerprint_json_round_trips() {
+        let a = fp(&["avx2", "fma"], 32, 1024, 33792, 8);
+        let text = a.to_json().compact();
+        let parsed = json::parse(&text).unwrap();
+        let back = Fingerprint::from_json(&parsed).unwrap();
+        assert_eq!(back, a);
+        assert_eq!(back.key(), a.key());
+        assert!(Fingerprint::from_json(&json::parse("{}").unwrap()).is_none());
     }
 }

@@ -392,15 +392,17 @@ impl<'a> Tuner<'a> {
         })
     }
 
-    /// Persist an outcome into a performance database.
-    pub fn record(&self, db: &mut PerfDb, outcome: &TuneOutcome) {
+    /// The DB entry an outcome persists as — shared by the legacy
+    /// single-file path ([`record`](Self::record)) and the daemon's
+    /// shard store (`ShardedDb::record` in the serve re-tune worker).
+    pub fn entry_for(&self, outcome: &TuneOutcome) -> DbEntry {
         let (config, config_id, best_time) = match &outcome.best {
             Some(b) if b.cost.is_finite() => {
                 (b.config.clone(), b.config_id.clone(), b.cost)
             }
             _ => (Config::new(), "baseline".to_string(), outcome.baseline_time()),
         };
-        db.record(DbEntry {
+        DbEntry {
             platform_key: outcome.platform.key(),
             kernel: outcome.kernel.clone(),
             tag: outcome.tag.clone(),
@@ -412,7 +414,35 @@ impl<'a> Tuner<'a> {
             evaluations: outcome.evaluations() as u64,
             strategy: outcome.strategy.clone(),
             recorded_at: unix_now(),
-        });
+        }
+    }
+
+    /// Persist an outcome into a performance database.
+    pub fn record(&self, db: &mut PerfDb, outcome: &TuneOutcome) {
+        db.record(self.entry_for(outcome));
+    }
+
+    /// Seed the warm start from transfer-ranked candidates (nearest
+    /// platform first — `service::transfer::rank_candidates` order).
+    /// Order is preserved, duplicate configs collapse, and the list is
+    /// capped: the warm start is a seeding heuristic, and evaluating an
+    /// unbounded transfer set would turn it back into a search.
+    pub fn seed_warm_start(
+        &mut self,
+        ranked: impl IntoIterator<Item = Config>,
+        cap: usize,
+    ) -> usize {
+        let mut seen = std::collections::BTreeSet::new();
+        self.warm_start = ranked
+            .into_iter()
+            .filter(|c| {
+                let key: Vec<(String, i64)> =
+                    c.iter().map(|(k, v)| (k.clone(), *v)).collect();
+                seen.insert(key)
+            })
+            .take(cap)
+            .collect();
+        self.warm_start.len()
     }
 
     /// Deploy path: answer "which artifact should production run?" from

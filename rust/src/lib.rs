@@ -31,6 +31,7 @@
 pub mod coordinator;
 pub mod report;
 pub mod runtime;
+pub mod service;
 pub mod util;
 pub mod workload;
 
@@ -53,7 +54,7 @@ extern crate xla;
 /// Everything a typical embedder needs.
 pub mod prelude {
     pub use crate::coordinator::measure::{MeasureConfig, Measurement};
-    pub use crate::coordinator::perfdb::PerfDb;
+    pub use crate::coordinator::perfdb::{PerfDb, Shard, ShardedDb};
     pub use crate::coordinator::platform::Fingerprint;
     pub use crate::coordinator::search::{
         Anneal, Exhaustive, Genetic, HillClimb, RandomSearch, SearchStrategy,
@@ -61,4 +62,5 @@ pub mod prelude {
     pub use crate::coordinator::spec::{Config, TuningSpec};
     pub use crate::coordinator::tuner::{TuneOutcome, TuneStats, Tuner, VariantResult};
     pub use crate::runtime::{Executable, Registry, Runtime, TensorData};
+    pub use crate::service::{Client, Request, ServeOpts, Server};
 }

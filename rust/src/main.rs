@@ -12,18 +12,23 @@
 //! portatune deploy --kernel K --workload T  artifact the current platform should run
 //! portatune annotate FILE                 parse /*@ tune ... @*/ blocks
 //! portatune tune-annotated FILE           run every tune block in FILE
+//! portatune serve                         tuning-as-a-service daemon (shard store)
+//! portatune query --op deploy ...         ask a running daemon
+//! portatune db-migrate                    import a v1 perfdb.json into shards
 //! ```
 //!
 //! Global flags: `--artifacts DIR` (default `artifacts`), `--db PATH`
-//! (default `perfdb.json`).
+//! (default `perfdb.json`), `--shards DIR` (default `perfdb.d`).
 
 use std::path::{Path, PathBuf};
 
-use anyhow::Result;
+use anyhow::{Context, Result};
+
+use std::sync::Arc;
 
 use portatune::coordinator::annotation::{extract_blocks, Annotation};
 use portatune::coordinator::measure::MeasureConfig;
-use portatune::coordinator::perfdb::PerfDb;
+use portatune::coordinator::perfdb::{PerfDb, ShardedDb};
 use portatune::coordinator::platform::Fingerprint;
 use portatune::coordinator::search::{
     Anneal, Exhaustive, Genetic, HillClimb, NelderMead, RandomSearch, SearchStrategy,
@@ -31,21 +36,36 @@ use portatune::coordinator::search::{
 use portatune::coordinator::tuner::Tuner;
 use portatune::report::{Fig1Report, Fig1Row, Table};
 use portatune::runtime::{Registry, Runtime};
+use portatune::service::{transfer, Client, Request, ServeOpts, Server};
 use portatune::util::cli::Args;
 
-const USAGE: &str = "usage: portatune <platform|inspect|tune|tune-all|report-fig1|db-list|deploy|annotate|tune-annotated> [flags]
-  global: --artifacts DIR (default artifacts), --db PATH (default perfdb.json)
+const USAGE: &str = "usage: portatune <platform|inspect|tune|tune-all|report-fig1|db-list|deploy|annotate|tune-annotated|serve|query|db-migrate> [flags]
+  global: --artifacts DIR (default artifacts), --db PATH (default perfdb.json),
+          --shards DIR (default perfdb.d)
   tune:   --kernel K --workload T [--strategy exhaustive|random|hillclimb|anneal|genetic]
           [--budget N] [--seed N] [--quick] [--warm-start] [--no-record]
           [--batch N]  batch size > 1 overlaps variant compilation on a
           background pool and races measurements with early termination
           (strategies without batch proposal fall back to serial)
+          --warm-start seeds from the shard store's transfer ranking when
+          --shards exists, else from the legacy --db file
   tune-all:    [--kernels a,b,c] [--strategy S] [--budget N] [--seed N] [--quick] [--batch N]
   report-fig1: [--kernels axpy,dot,triad] [--csv PATH] [--quick]
   deploy: --kernel K --workload T
   annotate: <file>
   tune-annotated: <file> [--quick] — execute each /*@ tune @*/ block (kernel,
-          workload, strategy, budget, seed all come from the annotation)";
+          workload, strategy, budget, seed all come from the annotation)
+  serve:  [--listen ADDR (default 127.0.0.1:7171)] [--socket PATH (unix)]
+          [--ttl-days N (default 30)] [--lru N (default 1024)]
+          [--scan-secs N (default 60)] [--retune [--batch N]]
+          imports --db into the shard store at startup when it exists;
+          --retune re-tunes stale entries through the batched tuner when
+          the artifact registry is available
+  query:  --op ping|lookup|deploy|stats|retune-next|shutdown
+          [--addr ADDR (default 127.0.0.1:7171) | --socket PATH]
+          [--kernel K --workload T] [--platform KEY] — deploy sends the
+          local fingerprint so misses come back transfer-ranked
+  db-migrate: import --db (v1 json) into --shards (v2 shard files)";
 
 pub fn make_strategy(name: &str, seed: u64) -> Result<Box<dyn SearchStrategy>> {
     Ok(match name {
@@ -80,6 +100,7 @@ fn main() {
 fn dispatch(args: &Args) -> Result<()> {
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let db_path = PathBuf::from(args.get_or("db", "perfdb.json"));
+    let shards_dir = PathBuf::from(args.get_or("shards", "perfdb.d"));
     match args.subcommand() {
         Some("platform") => {
             args.finish()?;
@@ -90,7 +111,7 @@ fn dispatch(args: &Args) -> Result<()> {
             args.finish()?;
             cmd_inspect(&artifacts)
         }
-        Some("tune") => cmd_tune(args, &artifacts, &db_path),
+        Some("tune") => cmd_tune(args, &artifacts, &db_path, &shards_dir),
         Some("tune-all") => cmd_tune_all(args, &artifacts, &db_path),
         Some("report-fig1") => cmd_report_fig1(args, &artifacts),
         Some("db-list") => {
@@ -100,8 +121,126 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("deploy") => cmd_deploy(args, &artifacts, &db_path),
         Some("annotate") => cmd_annotate(args),
         Some("tune-annotated") => cmd_tune_annotated(args, &artifacts, &db_path),
+        Some("serve") => cmd_serve(args, &artifacts, &db_path, &shards_dir),
+        Some("query") => cmd_query(args),
+        Some("db-migrate") => cmd_db_migrate(args, &db_path, &shards_dir),
         _ => Err(anyhow::anyhow!("missing or unknown subcommand")),
     }
+}
+
+/// Run the tuning-as-a-service daemon against the shard store.
+fn cmd_serve(args: &Args, artifacts: &Path, db_path: &Path, shards_dir: &Path) -> Result<()> {
+    let listen = args.get_or("listen", "127.0.0.1:7171");
+    let socket = args.get("socket").map(PathBuf::from);
+    let ttl_days = args.get_parsed::<u64>("ttl-days", 30)?;
+    let lru_cap = args.get_parsed::<usize>("lru", 1024)?;
+    let scan_secs = args.get_parsed::<u64>("scan-secs", 60)?;
+    let retune = args.get_bool("retune");
+    let batch = args.get_parsed::<usize>("batch", 4)?;
+    args.finish()?;
+
+    let db = ShardedDb::open(shards_dir)?;
+    if db_path.exists() {
+        let imported = db.import_legacy(db_path)?;
+        println!("imported {imported} entr(ies) from {}", db_path.display());
+    }
+    let host = Fingerprint::detect();
+    println!("platform: {}", host.key());
+    let opts = ServeOpts { ttl_s: ttl_days * 24 * 3600, lru_cap };
+    let server = Arc::new(Server::new(db, host, opts));
+    let _scan =
+        Arc::clone(&server).spawn_scan(std::time::Duration::from_secs(scan_secs.max(1)));
+    if retune {
+        // The re-tune worker builds its registry inside its own thread
+        // (backend types are not Send); without real artifacts +
+        // runtime it logs and exits — the daemon still serves, it just
+        // cannot re-measure.
+        let artifacts_dir = artifacts.to_path_buf();
+        let _worker = Arc::clone(&server)
+            .spawn_retune_worker(move || open_registry(&artifacts_dir), batch);
+        println!("re-tune worker: on (batch {batch})");
+    }
+
+    match socket {
+        #[cfg(unix)]
+        Some(path) => {
+            let _ = std::fs::remove_file(&path);
+            let listener = std::os::unix::net::UnixListener::bind(&path)
+                .with_context(|| format!("binding unix socket {}", path.display()))?;
+            println!("serving on unix:{} (shards: {})", path.display(), shards_dir.display());
+            let result = server.run_unix(listener);
+            let _ = std::fs::remove_file(&path);
+            result
+        }
+        #[cfg(not(unix))]
+        Some(_) => Err(anyhow::anyhow!("--socket requires a unix platform; use --listen")),
+        None => {
+            let listener = std::net::TcpListener::bind(&listen)
+                .with_context(|| format!("binding {listen}"))?;
+            println!("serving on {listen} (shards: {})", shards_dir.display());
+            server.run_tcp(listener)
+        }
+    }
+}
+
+/// Ask a running daemon; prints the JSON reply on stdout.
+fn cmd_query(args: &Args) -> Result<()> {
+    let op = args.get_or("op", "deploy");
+    let addr = args.get_or("addr", "127.0.0.1:7171");
+    let socket = args.get("socket").map(PathBuf::from);
+    let kernel = args.get("kernel").map(str::to_string);
+    let workload = args.get("workload").map(str::to_string);
+    let platform = args.get("platform").map(str::to_string);
+    args.finish()?;
+
+    let need = |v: Option<String>, flag: &str| {
+        v.ok_or_else(|| anyhow::anyhow!("query --op {op} requires --{flag}"))
+    };
+    let request = match op.as_str() {
+        "ping" => Request::Ping,
+        "lookup" => Request::Lookup {
+            platform,
+            kernel: need(kernel, "kernel")?,
+            workload: need(workload, "workload")?,
+        },
+        "deploy" => Request::Deploy {
+            platform,
+            kernel: need(kernel, "kernel")?,
+            workload: need(workload, "workload")?,
+            fingerprint: Some(Fingerprint::detect()),
+        },
+        "stats" => Request::Stats,
+        "retune-next" => Request::RetuneNext,
+        "shutdown" => Request::Shutdown,
+        other => {
+            return Err(anyhow::anyhow!(
+                "unknown query op {other}; expected ping|lookup|deploy|stats|retune-next|shutdown"
+            ))
+        }
+    };
+    let client = match socket {
+        #[cfg(unix)]
+        Some(path) => Client::unix(path),
+        #[cfg(not(unix))]
+        Some(_) => return Err(anyhow::anyhow!("--socket requires a unix platform; use --addr")),
+        None => Client::tcp(addr),
+    };
+    println!("{}", client.call(&request)?.compact());
+    Ok(())
+}
+
+/// One-shot migration: v1 single-file DB → v2 shard store.
+fn cmd_db_migrate(args: &Args, db_path: &Path, shards_dir: &Path) -> Result<()> {
+    args.finish()?;
+    let db = ShardedDb::open(shards_dir)?;
+    let imported = db.import_legacy(db_path)?;
+    println!(
+        "imported {imported} entr(ies) from {} into {} ({} platform shard(s))",
+        db_path.display(),
+        shards_dir.display(),
+        db.platforms()?.len()
+    );
+    Ok(())
 }
 
 fn cmd_inspect(artifacts: &Path) -> Result<()> {
@@ -129,7 +268,7 @@ fn cmd_inspect(artifacts: &Path) -> Result<()> {
     Ok(())
 }
 
-fn cmd_tune(args: &Args, artifacts: &Path, db_path: &Path) -> Result<()> {
+fn cmd_tune(args: &Args, artifacts: &Path, db_path: &Path, shards_dir: &Path) -> Result<()> {
     let kernel = args
         .get("kernel")
         .ok_or_else(|| anyhow::anyhow!("tune requires --kernel"))?
@@ -155,9 +294,29 @@ fn cmd_tune(args: &Args, artifacts: &Path, db_path: &Path) -> Result<()> {
         tuner.measure_cfg = MeasureConfig::quick();
     }
     if warm {
-        let key = Fingerprint::detect().key();
-        tuner.warm_start = db.warm_start(&kernel, &workload, &key);
-        println!("warm start: {} candidate(s) from the DB", tuner.warm_start.len());
+        let host = Fingerprint::detect();
+        // Prefer the shard store's fingerprint-similarity ranking
+        // (nearest platform first); fall back to the legacy file's
+        // exclude-only heuristic when the shard store is absent *or has
+        // nothing to offer* (an empty perfdb.d left behind by a prior
+        // serve/migrate run must not shadow a populated --db file).
+        let mut configs = Vec::new();
+        if shards_dir.is_dir() {
+            let sharded = ShardedDb::open(shards_dir)?;
+            let ranked = transfer::rank_candidates(
+                &sharded.all_shards()?,
+                &host,
+                &kernel,
+                &workload,
+                &host.key(),
+            );
+            configs = transfer::warm_start_configs(&ranked, usize::MAX);
+        }
+        if configs.is_empty() {
+            configs = db.warm_start(&kernel, &workload, &host.key());
+        }
+        let seeded = tuner.seed_warm_start(configs, 8);
+        println!("warm start: {seeded} candidate(s)");
     }
     let mut strategy = make_strategy(&strategy_name, seed)?;
     let outcome = tuner.tune(&kernel, &workload, strategy.as_mut(), budget)?;

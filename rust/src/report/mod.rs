@@ -6,5 +6,5 @@ pub mod stats;
 pub mod table;
 
 pub use fig1::{Fig1Report, Fig1Row};
-pub use stats::{outcome_json, stats_json};
+pub use stats::{outcome_json, serve_stats_json, stats_json};
 pub use table::Table;

@@ -8,6 +8,7 @@
 use std::collections::BTreeMap;
 
 use crate::coordinator::tuner::{TuneOutcome, TuneStats};
+use crate::service::server::ServeStats;
 use crate::util::json::Json;
 
 fn num(x: f64) -> Json {
@@ -62,6 +63,28 @@ pub fn outcome_json(outcome: &TuneOutcome) -> Json {
     Json::Obj(fields)
 }
 
+/// JSON view of the daemon's counters — the serve-side analogue of
+/// [`stats_json`], consumed by the `stats` op, the smoke test, and the
+/// serve-throughput bench.
+pub fn serve_stats_json(stats: &ServeStats) -> Json {
+    let fields: BTreeMap<String, Json> = [
+        ("lookups".to_string(), int(stats.lookups)),
+        ("deploys".to_string(), int(stats.deploys)),
+        ("lru_hits".to_string(), int(stats.lru_hits)),
+        ("shard_reads".to_string(), int(stats.shard_reads)),
+        ("records".to_string(), int(stats.records)),
+        ("transfer_misses".to_string(), int(stats.transfer_misses)),
+        ("retune_queued".to_string(), int(stats.retune_queued)),
+        ("retunes".to_string(), int(stats.retunes)),
+        ("errors".to_string(), int(stats.errors)),
+        ("retune_queue_depth".to_string(), int(stats.retune_queue_depth)),
+        ("lru_len".to_string(), int(stats.lru_len)),
+    ]
+    .into_iter()
+    .collect();
+    Json::Obj(fields)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -94,5 +117,26 @@ mod tests {
         let line = stats.render();
         assert!(line.contains("87 timed"));
         assert!(line.contains("41 saved"));
+    }
+
+    #[test]
+    fn serve_stats_json_round_trips() {
+        let stats = ServeStats {
+            lookups: 100,
+            deploys: 7,
+            lru_hits: 90,
+            shard_reads: 10,
+            records: 3,
+            transfer_misses: 2,
+            retune_queued: 4,
+            retunes: 1,
+            errors: 0,
+            retune_queue_depth: 3,
+            lru_len: 12,
+        };
+        let parsed = json::parse(&serve_stats_json(&stats).compact()).unwrap();
+        assert_eq!(parsed.get("lookups").and_then(Json::as_u64), Some(100));
+        assert_eq!(parsed.get("lru_hits").and_then(Json::as_u64), Some(90));
+        assert_eq!(parsed.get("retune_queue_depth").and_then(Json::as_u64), Some(3));
     }
 }

@@ -1,0 +1,85 @@
+//! Client side of the serve protocol — what `portatune query` (and any
+//! embedder that wants tuned configurations without running a search)
+//! speaks.
+//!
+//! One connection per call: requests are rare (deploy-time lookups),
+//! so connection reuse buys nothing and a stateless client cannot leak
+//! sockets.  Both endpoints the daemon listens on are supported.
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::service::protocol::Request;
+use crate::util::json::{self, Json};
+
+/// Where the daemon listens.
+#[derive(Debug, Clone)]
+pub enum Endpoint {
+    /// `host:port`.
+    Tcp(String),
+    /// Unix-domain socket path.
+    #[cfg(unix)]
+    Unix(PathBuf),
+}
+
+/// A stateless protocol client.
+#[derive(Debug, Clone)]
+pub struct Client {
+    endpoint: Endpoint,
+}
+
+impl Client {
+    pub fn tcp(addr: impl Into<String>) -> Client {
+        Client { endpoint: Endpoint::Tcp(addr.into()) }
+    }
+
+    #[cfg(unix)]
+    pub fn unix(path: impl Into<PathBuf>) -> Client {
+        Client { endpoint: Endpoint::Unix(path.into()) }
+    }
+
+    /// Send one request, return the parsed reply object.
+    pub fn call(&self, req: &Request) -> Result<Json> {
+        match &self.endpoint {
+            Endpoint::Tcp(addr) => {
+                let stream = std::net::TcpStream::connect(addr)
+                    .with_context(|| format!("connecting to portatune daemon at {addr}"))?;
+                let _ = stream.set_nodelay(true);
+                Self::exchange(req, &stream, &stream)
+            }
+            #[cfg(unix)]
+            Endpoint::Unix(path) => {
+                let stream = std::os::unix::net::UnixStream::connect(path).with_context(|| {
+                    format!("connecting to portatune daemon at {}", path.display())
+                })?;
+                Self::exchange(req, &stream, &stream)
+            }
+        }
+    }
+
+    fn exchange(
+        req: &Request,
+        mut writer: impl Write,
+        reader: impl std::io::Read,
+    ) -> Result<Json> {
+        writer
+            .write_all(req.to_line().as_bytes())
+            .and_then(|_| writer.write_all(b"\n"))
+            .and_then(|_| writer.flush())
+            .context("sending request")?;
+        let mut line = String::new();
+        BufReader::new(reader).read_line(&mut line).context("reading reply")?;
+        anyhow::ensure!(!line.trim().is_empty(), "daemon closed the connection without a reply");
+        let reply = json::parse(line.trim()).context("parsing reply json")?;
+        if reply.get("ok").and_then(Json::as_bool) != Some(true) {
+            let msg = reply
+                .get("error")
+                .and_then(Json::as_str)
+                .unwrap_or("daemon reported failure without a message");
+            return Err(anyhow::anyhow!("daemon error: {msg}"));
+        }
+        Ok(reply)
+    }
+}

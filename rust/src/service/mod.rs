@@ -1,0 +1,41 @@
+//! Tuning-as-a-service: the deployment path of the paper, run as a
+//! long-lived daemon instead of a one-shot CLI lookup.
+//!
+//! Mametjanov & Norris's sustainability argument is that empirical
+//! tuning pays for itself because its results persist — "specialization
+//! of programs to platforms ... across various systems and system
+//! changes."  The seed repo realized that as `portatune deploy`: open a
+//! JSON file, look up a key, print an artifact path.  That shape cannot
+//! serve production traffic (per-process whole-file reads, last-writer
+//! -wins saves, and an unknown platform gets nothing at all).  This
+//! module is the production shape:
+//!
+//! * [`server`] — `portatune serve`: a daemon answering
+//!   lookup/deploy/record over a line-delimited JSON protocol (TCP or
+//!   Unix socket), layering an LRU decision cache over the sharded
+//!   store ([`crate::coordinator::perfdb::ShardedDb`], one
+//!   lock-file-merged shard per platform) and running a background
+//!   staleness scan + re-tune worker;
+//! * [`protocol`] — the wire format (std-only, reuses
+//!   [`crate::util::json`]);
+//! * [`client`] — what `portatune query` and embedders speak;
+//! * [`transfer`] — fingerprint-similarity ranking, so a deploy miss on
+//!   a never-seen platform answers with the nearest platforms' tuned
+//!   configurations (the cross-device transfer result of "A Few Fit
+//!   Most", Hochgraf & Pai 2025) instead of an empty miss;
+//! * [`scheduler`] — the staleness queue feeding re-tunes through the
+//!   batched [`crate::coordinator::tuner::Tuner`] (the persistent
+//!   runtime-service shape of Kernel Tuning Toolkit, Petrovič et al.
+//!   2019).
+
+pub mod client;
+pub mod protocol;
+pub mod scheduler;
+pub mod server;
+pub mod transfer;
+
+pub use client::{Client, Endpoint};
+pub use protocol::{reply_err, reply_ok, Request};
+pub use scheduler::{RetuneTask, Scheduler, StaleReason};
+pub use server::{Lru, ServeOpts, ServeStats, Server};
+pub use transfer::{rank_candidates, warm_start_configs, TransferCandidate};

@@ -1,0 +1,217 @@
+//! The serve wire protocol: one JSON object per line, both directions.
+//!
+//! Chosen for the same reason the perf DB is hand-rolled JSON: the
+//! pinned dependency set has no serde/tokio, the documents are small
+//! and schema-stable, and line-delimited framing works identically over
+//! TCP and Unix sockets with nothing but `BufRead::read_line`.
+//!
+//! Requests (`op` selects the verb):
+//!
+//! ```text
+//! {"op":"ping"}
+//! {"op":"lookup","kernel":"axpy","workload":"n4096","platform":KEY?}
+//! {"op":"deploy","kernel":"axpy","workload":"n4096","platform":KEY?,"fingerprint":{..}?}
+//! {"op":"record","entry":{..DbEntry..},"fingerprint":{..}?}
+//! {"op":"stats"}
+//! {"op":"retune-next"}
+//! {"op":"shutdown"}
+//! ```
+//!
+//! `platform` defaults to the daemon host's own key.  Replies are
+//! `{"ok":true,...}` or `{"ok":false,"error":"..."}`; `deploy` misses
+//! answer with transfer-ranked candidates instead of an empty result
+//! (see [`crate::service::server`]).
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::perfdb::DbEntry;
+use crate::coordinator::platform::Fingerprint;
+use crate::util::json::{self, Json};
+
+/// A parsed client request.
+#[derive(Debug, Clone)]
+pub enum Request {
+    Ping,
+    Lookup { platform: Option<String>, kernel: String, workload: String },
+    Deploy {
+        platform: Option<String>,
+        kernel: String,
+        workload: String,
+        /// The requesting platform's fingerprint — feeds the transfer
+        /// engine on a miss.  Defaults to the daemon host's own.
+        fingerprint: Option<Fingerprint>,
+    },
+    Record { entry: Box<DbEntry>, fingerprint: Option<Fingerprint> },
+    Stats,
+    RetuneNext,
+    Shutdown,
+}
+
+impl Request {
+    /// Parse one request line.
+    pub fn parse_line(line: &str) -> Result<Request> {
+        let v = json::parse(line.trim()).context("parsing request json")?;
+        let op = v
+            .get("op")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("request missing op"))?;
+        let gs = |k: &str| -> Result<String> {
+            v.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| anyhow::anyhow!("{op} request missing {k}"))
+        };
+        let opt = |k: &str| v.get(k).and_then(Json::as_str).map(str::to_string);
+        let fp = || match v.get("fingerprint") {
+            Some(Json::Null) | None => Ok(None),
+            Some(f) => Fingerprint::from_json(f)
+                .map(Some)
+                .ok_or_else(|| anyhow::anyhow!("malformed fingerprint")),
+        };
+        match op {
+            "ping" => Ok(Request::Ping),
+            "lookup" => Ok(Request::Lookup {
+                platform: opt("platform"),
+                kernel: gs("kernel")?,
+                workload: gs("workload")?,
+            }),
+            "deploy" => Ok(Request::Deploy {
+                platform: opt("platform"),
+                kernel: gs("kernel")?,
+                workload: gs("workload")?,
+                fingerprint: fp()?,
+            }),
+            "record" => {
+                let entry = v
+                    .get("entry")
+                    .ok_or_else(|| anyhow::anyhow!("record request missing entry"))?;
+                Ok(Request::Record {
+                    entry: Box::new(DbEntry::from_json(entry)?),
+                    fingerprint: fp()?,
+                })
+            }
+            "stats" => Ok(Request::Stats),
+            "retune-next" => Ok(Request::RetuneNext),
+            "shutdown" => Ok(Request::Shutdown),
+            other => Err(anyhow::anyhow!("unknown op {other}")),
+        }
+    }
+
+    /// Serialize to one compact wire line (no trailing newline).
+    pub fn to_line(&self) -> String {
+        let mut fields: Vec<(&str, Json)> = Vec::new();
+        match self {
+            Request::Ping => fields.push(("op", json::s("ping"))),
+            Request::Lookup { platform, kernel, workload } => {
+                fields.push(("op", json::s("lookup")));
+                fields.push(("kernel", json::s(kernel)));
+                fields.push(("workload", json::s(workload)));
+                if let Some(p) = platform {
+                    fields.push(("platform", json::s(p)));
+                }
+            }
+            Request::Deploy { platform, kernel, workload, fingerprint } => {
+                fields.push(("op", json::s("deploy")));
+                fields.push(("kernel", json::s(kernel)));
+                fields.push(("workload", json::s(workload)));
+                if let Some(p) = platform {
+                    fields.push(("platform", json::s(p)));
+                }
+                if let Some(fp) = fingerprint {
+                    fields.push(("fingerprint", fp.to_json()));
+                }
+            }
+            Request::Record { entry, fingerprint } => {
+                fields.push(("op", json::s("record")));
+                fields.push(("entry", entry.to_json()));
+                if let Some(fp) = fingerprint {
+                    fields.push(("fingerprint", fp.to_json()));
+                }
+            }
+            Request::Stats => fields.push(("op", json::s("stats"))),
+            Request::RetuneNext => fields.push(("op", json::s("retune-next"))),
+            Request::Shutdown => fields.push(("op", json::s("shutdown"))),
+        }
+        json::obj(fields).compact()
+    }
+}
+
+/// `{"ok":true, ...}` reply body.
+pub fn reply_ok(mut fields: Vec<(&str, Json)>) -> Json {
+    fields.insert(0, ("ok", Json::Bool(true)));
+    json::obj(fields)
+}
+
+/// `{"ok":false,"error":...}` reply body.
+pub fn reply_err(message: &str) -> Json {
+    json::obj(vec![("ok", Json::Bool(false)), ("error", json::s(message))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_lines_round_trip() {
+        let reqs = vec![
+            Request::Ping,
+            Request::Lookup {
+                platform: Some("p1".into()),
+                kernel: "axpy".into(),
+                workload: "n4096".into(),
+            },
+            Request::Stats,
+            Request::RetuneNext,
+            Request::Shutdown,
+        ];
+        for req in reqs {
+            let line = req.to_line();
+            assert!(!line.contains('\n'), "wire lines must be single-line");
+            let back = Request::parse_line(&line).unwrap();
+            assert_eq!(back.to_line(), line);
+        }
+    }
+
+    #[test]
+    fn deploy_carries_fingerprint() {
+        let fp = Fingerprint {
+            cpu_model: "Test".into(),
+            num_cpus: 8,
+            simd: vec!["avx2".into()],
+            cache_l1d_kb: 32,
+            cache_l2_kb: 1024,
+            cache_l3_kb: 8192,
+            os: "linux".into(),
+        };
+        let req = Request::Deploy {
+            platform: None,
+            kernel: "axpy".into(),
+            workload: "n4096".into(),
+            fingerprint: Some(fp.clone()),
+        };
+        let line = req.to_line();
+        match Request::parse_line(&line).unwrap() {
+            Request::Deploy { fingerprint: Some(back), .. } => assert_eq!(back, fp),
+            other => panic!("parsed {other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_requests_error_not_panic() {
+        assert!(Request::parse_line("").is_err());
+        assert!(Request::parse_line("{}").is_err());
+        assert!(Request::parse_line(r#"{"op":"warp"}"#).is_err());
+        assert!(Request::parse_line(r#"{"op":"lookup"}"#).is_err());
+        assert!(Request::parse_line(r#"{"op":"record","entry":{}}"#).is_err());
+        assert!(Request::parse_line("not json at all").is_err());
+    }
+
+    #[test]
+    fn replies_have_ok_discriminant() {
+        let ok = reply_ok(vec![("x", json::int(1))]);
+        assert_eq!(ok.get("ok").and_then(Json::as_bool), Some(true));
+        let err = reply_err("boom");
+        assert_eq!(err.get("ok").and_then(Json::as_bool), Some(false));
+        assert_eq!(err.get("error").and_then(Json::as_str), Some("boom"));
+    }
+}

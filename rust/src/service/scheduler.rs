@@ -1,0 +1,365 @@
+//! Staleness-aware re-tune queue.
+//!
+//! Tuned configurations rot: hardware drifts (microcode, cache
+//! partitioning, a new machine inheriting an old shard) and entries
+//! age past usefulness.  The scheduler scans the shard store and queues
+//! re-tune tasks for (platform, kernel, workload) frontiers that are
+//! stale, so the daemon (or an operator popping `retune-next`) can push
+//! them back through the existing batched [`Tuner`].
+//!
+//! Two staleness signals, checked per frontier entry:
+//!
+//! * **fingerprint drift** — the shard's stored fingerprint no longer
+//!   hashes to the shard's own platform key: the machine kept recording
+//!   under a pinned/cached key while its hardware changed underneath.
+//!   Only keys in [`Fingerprint::key`]'s derived `slug-hex16` shape
+//!   whose slug matches the stored fingerprint's CPU-model are eligible
+//!   — clients may record under arbitrary wire-supplied names
+//!   ("remote-box"), and those can never re-hash to themselves, so
+//!   treating them as drifted would re-queue them forever.  Known
+//!   limitation: a hardware change that replaces the CPU *model* (the
+//!   slug no longer matches either way) is undecidable from shard
+//!   contents alone and is left to TTL expiry;
+//! * **TTL expiry** — `recorded_at` is older than the configured TTL.
+//!
+//! Scans are idempotent: a (platform, kernel, workload) already queued
+//! is never queued twice, and popping a task releases its slot so a
+//! later scan can re-queue it if it is still stale.
+//!
+//! [`Tuner`]: crate::coordinator::tuner::Tuner
+
+use std::collections::{HashSet, VecDeque};
+
+use crate::coordinator::perfdb::Shard;
+use crate::coordinator::platform::Fingerprint;
+use crate::util::json::{self, Json};
+
+/// Why a task was queued.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StaleReason {
+    /// Entry older than the TTL (age in seconds at scan time).
+    TtlExpired { age_s: u64 },
+    /// The platform under this key no longer matches its stored
+    /// fingerprint.
+    FingerprintDrift,
+}
+
+impl StaleReason {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            StaleReason::TtlExpired { .. } => "ttl-expired",
+            StaleReason::FingerprintDrift => "fingerprint-drift",
+        }
+    }
+}
+
+/// One queued re-tune unit.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RetuneTask {
+    pub platform_key: String,
+    pub kernel: String,
+    pub tag: String,
+    pub reason: StaleReason,
+}
+
+impl RetuneTask {
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("platform", json::s(&self.platform_key)),
+            ("kernel", json::s(&self.kernel)),
+            ("workload", json::s(&self.tag)),
+            ("reason", json::s(self.reason.as_str())),
+        ])
+    }
+}
+
+/// Whether a platform key has [`Fingerprint::key`]'s derived shape
+/// (`<slug>-<16 lowercase hex>`); only such keys can meaningfully be
+/// checked for drift by re-hashing their stored fingerprint.
+fn is_derived_key(key: &str) -> bool {
+    let bytes = key.as_bytes();
+    bytes.len() > 17
+        && bytes[bytes.len() - 17] == b'-'
+        && bytes[bytes.len() - 16..]
+            .iter()
+            .all(|b| b.is_ascii_digit() || (b'a'..=b'f').contains(b))
+}
+
+/// Whether `key` plausibly *was derived from* `fp`: derived shape AND
+/// the slug prefix matches the fingerprint's sanitized CPU model.  A
+/// wire-supplied name that merely looks hash-shaped (e.g.
+/// `gpu-node-00a1b2c3d4e5f601`) fails the model-prefix check, so it is
+/// never flagged as drifted.  (Byte comparison — `key` is an arbitrary
+/// wire string, so no char-boundary slicing.)
+fn key_derived_from(key: &str, fp: &Fingerprint) -> bool {
+    if !is_derived_key(key) {
+        return false;
+    }
+    let slug = crate::coordinator::platform::sanitize(&fp.cpu_model);
+    key.as_bytes()[..key.len() - 17] == *slug.as_bytes()
+}
+
+/// FIFO of stale frontiers with membership dedupe.
+#[derive(Debug)]
+pub struct Scheduler {
+    ttl_s: u64,
+    queue: VecDeque<RetuneTask>,
+    queued: HashSet<(String, String, String)>,
+    /// Drift tasks ever queued.  Unlike TTL tasks — which re-recording
+    /// resolves (fresh `recorded_at`) — a drifted shard is a historical
+    /// inconsistency no re-tune can repair (the fresh record lands
+    /// under the machine's *new* key), so each is delivered at most
+    /// once per scheduler lifetime instead of re-queuing after every
+    /// pop forever.
+    drift_notified: HashSet<(String, String, String)>,
+}
+
+impl Scheduler {
+    pub fn new(ttl_s: u64) -> Scheduler {
+        Scheduler {
+            ttl_s,
+            queue: VecDeque::new(),
+            queued: HashSet::new(),
+            drift_notified: HashSet::new(),
+        }
+    }
+
+    pub fn ttl_s(&self) -> u64 {
+        self.ttl_s
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Scan shards against the daemon host's live fingerprint at time
+    /// `now`; queue every newly-stale frontier entry.  Returns how many
+    /// tasks were added.  (`host` reserved for lineage-aware drift
+    /// rules; the current rule needs only shard-internal consistency.)
+    pub fn scan(&mut self, shards: &[Shard], _host: &Fingerprint, now: u64) -> usize {
+        let mut added = 0;
+        for shard in shards {
+            let drifted = match &shard.fingerprint {
+                // A *derived* key that its own stored fingerprint no
+                // longer hashes to: the machine changed while records
+                // kept landing under the old key.  Arbitrary
+                // wire-supplied keys are exempt (see module docs).
+                Some(fp) => {
+                    key_derived_from(&shard.platform_key, fp)
+                        && fp.key() != shard.platform_key
+                }
+                None => false,
+            };
+            for entry in shard.frontier() {
+                let key =
+                    (shard.platform_key.clone(), entry.kernel.clone(), entry.tag.clone());
+                // Drift outranks TTL but is delivered once; an
+                // already-notified drifted shard still gets ordinary
+                // TTL staleness checks (its entries keep aging).
+                let reason = if drifted && !self.drift_notified.contains(&key) {
+                    StaleReason::FingerprintDrift
+                } else {
+                    let age_s = now.saturating_sub(entry.recorded_at);
+                    if age_s <= self.ttl_s {
+                        continue;
+                    }
+                    StaleReason::TtlExpired { age_s }
+                };
+                if self.queued.insert(key.clone()) {
+                    if matches!(reason, StaleReason::FingerprintDrift) {
+                        self.drift_notified.insert(key);
+                    }
+                    self.queue.push_back(RetuneTask {
+                        platform_key: shard.platform_key.clone(),
+                        kernel: entry.kernel.clone(),
+                        tag: entry.tag.clone(),
+                        reason,
+                    });
+                    added += 1;
+                }
+            }
+        }
+        added
+    }
+
+    /// Pop the next task (releases its dedupe slot).
+    pub fn pop(&mut self) -> Option<RetuneTask> {
+        let task = self.queue.pop_front()?;
+        self.queued.remove(&(
+            task.platform_key.clone(),
+            task.kernel.clone(),
+            task.tag.clone(),
+        ));
+        Some(task)
+    }
+
+    /// Pop the first task belonging to `platform_key`, leaving other
+    /// platforms' tasks queued.  The daemon's local re-tune worker uses
+    /// this: it can only re-measure the host, and popping a foreign
+    /// task would either waste a tune (the foreign shard stays stale
+    /// and re-queues) or starve the external workers that poll
+    /// `retune-next` for exactly those tasks.
+    pub fn pop_for(&mut self, platform_key: &str) -> Option<RetuneTask> {
+        let idx = self.queue.iter().position(|t| t.platform_key == platform_key)?;
+        let task = self.queue.remove(idx)?;
+        self.queued.remove(&(
+            task.platform_key.clone(),
+            task.kernel.clone(),
+            task.tag.clone(),
+        ));
+        Some(task)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::perfdb::DbEntry;
+
+    fn fp(l2: u64) -> Fingerprint {
+        Fingerprint {
+            cpu_model: "Test CPU".into(),
+            num_cpus: 8,
+            simd: vec!["avx2".into()],
+            cache_l1d_kb: 32,
+            cache_l2_kb: l2,
+            cache_l3_kb: 8192,
+            os: "linux".into(),
+        }
+    }
+
+    fn entry(platform: &str, kernel: &str, tag: &str, recorded_at: u64) -> DbEntry {
+        DbEntry {
+            platform_key: platform.into(),
+            kernel: kernel.into(),
+            tag: tag.into(),
+            best_params: Default::default(),
+            best_config_id: "cfg".into(),
+            best_time_s: 1e-3,
+            baseline_time_s: 2e-3,
+            reference_time_s: 9e-4,
+            evaluations: 9,
+            strategy: "exhaustive".into(),
+            recorded_at,
+        }
+    }
+
+    #[test]
+    fn queues_ttl_expired_only_once() {
+        let host = fp(1024);
+        let key = host.key();
+        let shard = Shard {
+            platform_key: key.clone(),
+            fingerprint: Some(host.clone()),
+            entries: vec![entry(&key, "axpy", "n4096", 1000)],
+        };
+        let mut sched = Scheduler::new(3600);
+        // Within TTL: nothing queued.
+        assert_eq!(sched.scan(std::slice::from_ref(&shard), &host, 2000), 0);
+        // Past TTL: queued exactly once across repeated scans.
+        assert_eq!(sched.scan(std::slice::from_ref(&shard), &host, 10_000), 1);
+        assert_eq!(sched.scan(std::slice::from_ref(&shard), &host, 10_000), 0);
+        let task = sched.pop().unwrap();
+        assert_eq!(task.kernel, "axpy");
+        assert_eq!(task.reason, StaleReason::TtlExpired { age_s: 9_000 });
+        assert!(sched.pop().is_none());
+        // Popped slot is free again: still-stale entries re-queue.
+        assert_eq!(sched.scan(&[shard], &host, 10_000), 1);
+    }
+
+    #[test]
+    fn queues_drifted_fingerprint_regardless_of_age() {
+        let host = fp(1024);
+        let drifted_fp = fp(512); // hardware changed; key() differs
+        let shard = Shard {
+            // Shard still filed under the *old* key.
+            platform_key: fp(1024).key(),
+            fingerprint: Some(drifted_fp),
+            entries: vec![entry("x", "axpy", "n4096", u64::MAX / 2)],
+        };
+        let mut sched = Scheduler::new(u64::MAX);
+        assert_eq!(sched.scan(std::slice::from_ref(&shard), &host, u64::MAX / 2), 1);
+        assert_eq!(sched.pop().unwrap().reason, StaleReason::FingerprintDrift);
+        // Drift is unfixable by re-tuning (fresh records land under the
+        // new key), so it is delivered once — not re-queued every scan.
+        assert_eq!(sched.scan(&[shard], &host, u64::MAX / 2), 0);
+        assert!(sched.is_empty());
+    }
+
+    #[test]
+    fn wire_supplied_keys_are_never_drift_flagged() {
+        // A client recorded under an arbitrary name with its fingerprint
+        // attached: the name can never re-hash to itself, but that is
+        // not drift — flagging it would re-queue the entry forever.
+        let host = fp(1024);
+        let shard = Shard {
+            platform_key: "remote-box".into(),
+            fingerprint: Some(fp(512)),
+            entries: vec![entry("remote-box", "axpy", "n4096", 5000)],
+        };
+        let mut sched = Scheduler::new(u64::MAX);
+        assert_eq!(sched.scan(&[shard], &host, 6000), 0);
+        assert!(!is_derived_key("remote-box"));
+        assert!(is_derived_key(&host.key()));
+        assert!(!is_derived_key("ends-with-UPPER-0123456789ABCDEF"));
+        // Hash-shaped wire names still fail the model-prefix check.
+        assert!(is_derived_key("gpu-node-00a1b2c3d4e5f601"));
+        assert!(!key_derived_from("gpu-node-00a1b2c3d4e5f601", &fp(512)));
+        assert!(key_derived_from(&host.key(), &host));
+    }
+
+    #[test]
+    fn fresh_matching_shards_queue_nothing() {
+        let host = fp(1024);
+        let key = host.key();
+        let shard = Shard {
+            platform_key: key.clone(),
+            fingerprint: Some(host.clone()),
+            entries: vec![entry(&key, "axpy", "n4096", 5000)],
+        };
+        let mut sched = Scheduler::new(3600);
+        assert_eq!(sched.scan(&[shard], &host, 5100), 0);
+        assert!(sched.is_empty());
+    }
+
+    #[test]
+    fn pop_for_skips_foreign_platforms() {
+        let host = fp(1024);
+        let mut sched = Scheduler::new(3600);
+        let foreign = Shard {
+            platform_key: "other-box".into(),
+            fingerprint: None,
+            entries: vec![entry("other-box", "axpy", "n4096", 100)],
+        };
+        let mine = Shard {
+            platform_key: host.key(),
+            fingerprint: Some(host.clone()),
+            entries: vec![entry(&host.key(), "dot", "n4096", 100)],
+        };
+        assert_eq!(sched.scan(&[foreign, mine], &host, 1_000_000), 2);
+        // The host worker pops only its own task...
+        let task = sched.pop_for(&host.key()).unwrap();
+        assert_eq!(task.kernel, "dot");
+        assert!(sched.pop_for(&host.key()).is_none());
+        // ...and the foreign task stays queued for retune-next.
+        assert_eq!(sched.len(), 1);
+        assert_eq!(sched.pop().unwrap().platform_key, "other-box");
+    }
+
+    #[test]
+    fn task_json_is_machine_readable() {
+        let task = RetuneTask {
+            platform_key: "p1".into(),
+            kernel: "axpy".into(),
+            tag: "n4096".into(),
+            reason: StaleReason::FingerprintDrift,
+        };
+        let j = task.to_json();
+        assert_eq!(j.get("reason").and_then(Json::as_str), Some("fingerprint-drift"));
+        assert_eq!(j.get("kernel").and_then(Json::as_str), Some("axpy"));
+    }
+}

@@ -1,0 +1,907 @@
+//! The `portatune serve` daemon core.
+//!
+//! A [`Server`] owns a [`ShardedDb`], the host [`Fingerprint`], an
+//! in-memory LRU decision cache over the shards, per-op counters, and
+//! the staleness [`Scheduler`].  Request handling is a pure function
+//! from [`Request`] to a JSON reply ([`Server::handle_request`]), so
+//! the same core serves TCP, Unix sockets, in-process tests, and the
+//! throughput bench without touching a socket.
+//!
+//! Threading model: `std` only.  The accept loop is non-blocking and
+//! polls a shutdown flag; each connection gets a thread (clients are
+//! tuner processes and operators, not the open internet); shared state
+//! is `Mutex`/atomics.  Background threads: a periodic staleness scan,
+//! and — when the daemon was started with a usable artifact registry —
+//! a re-tune worker that drains the queue through the batched
+//! [`Tuner`].
+
+use std::collections::HashMap;
+use std::hash::Hash;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::coordinator::perfdb::{unix_now, DbEntry, ShardedDb};
+use crate::coordinator::platform::Fingerprint;
+use crate::coordinator::search::Exhaustive;
+use crate::coordinator::tuner::Tuner;
+use crate::runtime::Registry;
+use crate::service::protocol::{reply_err, reply_ok, Request};
+use crate::service::scheduler::Scheduler;
+use crate::service::transfer;
+use crate::util::json::{self, Json};
+
+/// How long the accept loop sleeps between polls of the shutdown flag.
+const ACCEPT_POLL: Duration = Duration::from_millis(5);
+
+/// How many transfer candidates a deploy miss returns.
+const DEPLOY_CANDIDATES: usize = 5;
+
+/// Read timeout on accepted connections: idle sockets wake their
+/// handler this often so it can observe the shutdown flag.
+const CONN_READ_TIMEOUT: Duration = Duration::from_millis(500);
+
+/// Upper bound on decision-cache staleness.  The daemon's own writes
+/// invalidate precisely, but the shard directory is a shared store —
+/// `db-migrate` or another machine's tuner may write it out-of-band —
+/// so every cached decision (including negatives) expires and re-reads
+/// its shard within this window.
+const DECISION_CACHE_TTL: Duration = Duration::from_secs(60);
+
+/// A small clock-stamped LRU: `get` refreshes the stamp, `put` evicts
+/// the least-recently-stamped entry when full.  Eviction is O(n) over
+/// the map, which is the right trade at decision-cache sizes (hundreds
+/// to thousands) against the pointer gymnastics of an intrusive list.
+/// `cap == 0` disables storage entirely (every get misses) — the
+/// throughput bench uses that to measure the cold-shard path.
+#[derive(Debug)]
+pub struct Lru<K: Eq + Hash + Clone, V: Clone> {
+    cap: usize,
+    tick: u64,
+    map: HashMap<K, (u64, V)>,
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> Lru<K, V> {
+    pub fn new(cap: usize) -> Lru<K, V> {
+        Lru { cap, tick: 0, map: HashMap::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn get(&mut self, key: &K) -> Option<V> {
+        self.tick += 1;
+        let tick = self.tick;
+        let (stamp, value) = self.map.get_mut(key)?;
+        *stamp = tick;
+        Some(value.clone())
+    }
+
+    pub fn put(&mut self, key: K, value: V) {
+        if self.cap == 0 {
+            return;
+        }
+        self.tick += 1;
+        if self.map.len() >= self.cap && !self.map.contains_key(&key) {
+            if let Some(oldest) =
+                self.map.iter().min_by_key(|(_, (stamp, _))| *stamp).map(|(k, _)| k.clone())
+            {
+                self.map.remove(&oldest);
+            }
+        }
+        self.map.insert(key, (self.tick, value));
+    }
+
+    pub fn remove(&mut self, key: &K) {
+        self.map.remove(key);
+    }
+}
+
+/// Daemon configuration.
+#[derive(Debug, Clone)]
+pub struct ServeOpts {
+    /// Entries older than this are queued for re-tuning.
+    pub ttl_s: u64,
+    /// Decision-cache capacity ((platform, kernel, workload) keys).
+    pub lru_cap: usize,
+}
+
+impl Default for ServeOpts {
+    fn default() -> ServeOpts {
+        // 30 days: tuned configs outlive any one deploy cycle but not a
+        // hardware refresh.
+        ServeOpts { ttl_s: 30 * 24 * 3600, lru_cap: 1024 }
+    }
+}
+
+/// Monotonic per-op counters (reported by the `stats` op and mirrored
+/// into `report::stats::serve_stats_json`).
+#[derive(Debug, Default)]
+struct Counters {
+    lookups: AtomicU64,
+    deploys: AtomicU64,
+    lru_hits: AtomicU64,
+    shard_reads: AtomicU64,
+    records: AtomicU64,
+    transfer_misses: AtomicU64,
+    retune_queued: AtomicU64,
+    retunes: AtomicU64,
+    errors: AtomicU64,
+}
+
+/// Point-in-time snapshot of the daemon's counters (the serve-side
+/// analogue of [`crate::coordinator::tuner::TuneStats`]).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ServeStats {
+    pub lookups: u64,
+    pub deploys: u64,
+    pub lru_hits: u64,
+    pub shard_reads: u64,
+    pub records: u64,
+    pub transfer_misses: u64,
+    pub retune_queued: u64,
+    pub retunes: u64,
+    pub errors: u64,
+    pub retune_queue_depth: u64,
+    pub lru_len: u64,
+}
+
+type DecisionKey = (String, String, String);
+
+/// A cached decision: when it was read from the shard, and what it was.
+type Decision = (std::time::Instant, Option<DbEntry>);
+
+/// The daemon: shard store + LRU + scheduler + counters.
+pub struct Server {
+    db: ShardedDb,
+    host: Fingerprint,
+    host_key: String,
+    opts: ServeOpts,
+    lru: Mutex<Lru<DecisionKey, Decision>>,
+    /// Bumped by every invalidation.  `cached_lookup` snapshots it
+    /// before the (unlocked) shard read and declines to populate the
+    /// cache if it moved — otherwise a concurrent record could land
+    /// between the read and the put and the stale (possibly negative)
+    /// result would be cached indefinitely.
+    cache_gen: AtomicU64,
+    scheduler: Mutex<Scheduler>,
+    counters: Counters,
+    shutdown: AtomicBool,
+}
+
+impl Server {
+    pub fn new(db: ShardedDb, host: Fingerprint, opts: ServeOpts) -> Server {
+        let host_key = host.key();
+        Server {
+            db,
+            host,
+            host_key,
+            lru: Mutex::new(Lru::new(opts.lru_cap)),
+            cache_gen: AtomicU64::new(0),
+            scheduler: Mutex::new(Scheduler::new(opts.ttl_s)),
+            opts,
+            counters: Counters::default(),
+            shutdown: AtomicBool::new(false),
+        }
+    }
+
+    pub fn db(&self) -> &ShardedDb {
+        &self.db
+    }
+
+    pub fn host(&self) -> &Fingerprint {
+        &self.host
+    }
+
+    pub fn opts(&self) -> &ServeOpts {
+        &self.opts
+    }
+
+    pub fn is_shutdown(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Request the daemon stop accepting connections.
+    pub fn request_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+    }
+
+    fn bump(&self, counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Shard lookup through the decision cache.  Negative results are
+    /// cached too (a hot deploy path for an untuned key must not
+    /// re-read the shard file every call); `record` invalidates.
+    fn cached_lookup(&self, platform: &str, kernel: &str, tag: &str) -> Result<Option<DbEntry>> {
+        let key = (platform.to_string(), kernel.to_string(), tag.to_string());
+        {
+            let mut lru = self.lru.lock().unwrap();
+            match lru.get(&key) {
+                Some((read_at, cached)) if read_at.elapsed() < DECISION_CACHE_TTL => {
+                    self.bump(&self.counters.lru_hits);
+                    return Ok(cached);
+                }
+                Some(_) => lru.remove(&key), // expired
+                None => {}
+            }
+        }
+        let gen_before = self.cache_gen.load(Ordering::SeqCst);
+        self.bump(&self.counters.shard_reads);
+        let found = self.db.lookup(platform, kernel, tag)?;
+        // Populate only if no invalidation raced the shard read; a
+        // skipped put just means the next lookup reads the shard again.
+        // The re-check and the put share the LRU critical section, and
+        // `invalidate` bumps the generation *inside* that same section,
+        // so an invalidation either precedes this block (gen differs —
+        // skip) or follows it (our possibly-stale entry is removed).
+        {
+            let mut lru = self.lru.lock().unwrap();
+            if self.cache_gen.load(Ordering::SeqCst) == gen_before {
+                lru.put(key, (std::time::Instant::now(), found.clone()));
+            }
+        }
+        Ok(found)
+    }
+
+    fn invalidate(&self, platform: &str, kernel: &str, tag: &str) {
+        let key = (platform.to_string(), kernel.to_string(), tag.to_string());
+        let mut lru = self.lru.lock().unwrap();
+        self.cache_gen.fetch_add(1, Ordering::SeqCst);
+        lru.remove(&key);
+    }
+
+    /// Counter snapshot (plus live queue/cache depths).
+    pub fn stats(&self) -> ServeStats {
+        ServeStats {
+            lookups: self.counters.lookups.load(Ordering::Relaxed),
+            deploys: self.counters.deploys.load(Ordering::Relaxed),
+            lru_hits: self.counters.lru_hits.load(Ordering::Relaxed),
+            shard_reads: self.counters.shard_reads.load(Ordering::Relaxed),
+            records: self.counters.records.load(Ordering::Relaxed),
+            transfer_misses: self.counters.transfer_misses.load(Ordering::Relaxed),
+            retune_queued: self.counters.retune_queued.load(Ordering::Relaxed),
+            retunes: self.counters.retunes.load(Ordering::Relaxed),
+            errors: self.counters.errors.load(Ordering::Relaxed),
+            retune_queue_depth: self.scheduler.lock().unwrap().len() as u64,
+            lru_len: self.lru.lock().unwrap().len() as u64,
+        }
+    }
+
+    /// Handle one parsed request.  Pure with respect to I/O framing —
+    /// every transport and the bench funnel through here.
+    pub fn handle_request(&self, req: &Request) -> Json {
+        match self.dispatch(req) {
+            Ok(reply) => reply,
+            Err(e) => {
+                self.bump(&self.counters.errors);
+                reply_err(&format!("{e:#}"))
+            }
+        }
+    }
+
+    fn dispatch(&self, req: &Request) -> Result<Json> {
+        match req {
+            Request::Ping => Ok(reply_ok(vec![
+                ("op", json::s("pong")),
+                ("platform", json::s(&self.host_key)),
+            ])),
+            Request::Lookup { platform, kernel, workload } => {
+                self.bump(&self.counters.lookups);
+                let platform = platform.as_deref().unwrap_or(&self.host_key);
+                match self.cached_lookup(platform, kernel, workload)? {
+                    Some(entry) => Ok(reply_ok(vec![
+                        ("found", Json::Bool(true)),
+                        ("entry", entry.to_json()),
+                    ])),
+                    None => Ok(reply_ok(vec![("found", Json::Bool(false))])),
+                }
+            }
+            Request::Deploy { platform, kernel, workload, fingerprint } => {
+                self.bump(&self.counters.deploys);
+                let platform = platform.as_deref().unwrap_or(&self.host_key);
+                if let Some(entry) = self.cached_lookup(platform, kernel, workload)? {
+                    return Ok(reply_ok(vec![
+                        ("source", json::s("exact")),
+                        ("entry", entry.to_json()),
+                    ]));
+                }
+                // Miss: answer with transfer-ranked warm-start
+                // candidates from the nearest platforms instead of an
+                // empty deploy.
+                self.bump(&self.counters.transfer_misses);
+                let shards = self.db.all_shards()?;
+                // Rank for the *target platform's* hardware: its stored
+                // shard fingerprint is authoritative (a query made on
+                // behalf of another machine carries the requester's
+                // fingerprint, which describes the wrong box); fall
+                // back to the request's fingerprint, then the host's.
+                let stored = shards
+                    .iter()
+                    .find(|s| s.platform_key == platform)
+                    .and_then(|s| s.fingerprint.as_ref());
+                let target = stored.or(fingerprint.as_ref()).unwrap_or(&self.host);
+                let ranked =
+                    transfer::rank_candidates(&shards, target, kernel, workload, platform);
+                let candidates: Vec<Json> = ranked
+                    .iter()
+                    .take(DEPLOY_CANDIDATES)
+                    .map(|c| {
+                        json::obj(vec![
+                            ("platform", json::s(&c.platform_key)),
+                            ("similarity", json::num(c.similarity)),
+                            ("same_workload", Json::Bool(c.same_workload)),
+                            ("config_id", json::s(&c.entry.best_config_id)),
+                            (
+                                "params",
+                                Json::Obj(
+                                    c.entry
+                                        .best_params
+                                        .iter()
+                                        .map(|(k, v)| (k.clone(), json::int(*v)))
+                                        .collect(),
+                                ),
+                            ),
+                            ("speedup", json::num(c.entry.speedup())),
+                        ])
+                    })
+                    .collect();
+                Ok(reply_ok(vec![
+                    ("source", json::s("transfer")),
+                    ("count", json::int(candidates.len() as i64)),
+                    ("candidates", Json::Arr(candidates)),
+                ]))
+            }
+            Request::Record { entry, fingerprint } => {
+                self.bump(&self.counters.records);
+                let entry = (**entry).clone();
+                let (platform, kernel, tag) =
+                    (entry.platform_key.clone(), entry.kernel.clone(), entry.tag.clone());
+                self.db.record(fingerprint.as_ref(), entry)?;
+                self.invalidate(&platform, &kernel, &tag);
+                Ok(reply_ok(vec![("recorded", Json::Bool(true))]))
+            }
+            Request::Stats => {
+                Ok(reply_ok(vec![(
+                    "stats",
+                    crate::report::stats::serve_stats_json(&self.stats()),
+                )]))
+            }
+            Request::RetuneNext => {
+                let task = self.scheduler.lock().unwrap().pop();
+                match task {
+                    Some(t) => Ok(reply_ok(vec![
+                        ("found", Json::Bool(true)),
+                        ("task", t.to_json()),
+                    ])),
+                    None => Ok(reply_ok(vec![("found", Json::Bool(false))])),
+                }
+            }
+            Request::Shutdown => {
+                self.request_shutdown();
+                Ok(reply_ok(vec![("stopping", Json::Bool(true))]))
+            }
+        }
+    }
+
+    /// Handle one raw wire line → one reply line (no trailing newline).
+    pub fn handle_line(&self, line: &str) -> String {
+        let reply = match Request::parse_line(line) {
+            Ok(req) => self.handle_request(&req),
+            Err(e) => {
+                self.bump(&self.counters.errors);
+                reply_err(&format!("{e:#}"))
+            }
+        };
+        reply.compact()
+    }
+
+    /// Drive one connection: read request lines, write reply lines.
+    /// Transport-agnostic (tests drive it with in-memory buffers).
+    ///
+    /// Socket transports set a read timeout (see [`run_tcp`]); timeouts
+    /// surface here as `WouldBlock`/`TimedOut` errors, which are *not*
+    /// disconnects — the loop re-checks the shutdown flag and keeps
+    /// waiting, so an idle open connection can never pin the daemon
+    /// past a shutdown request.  Lines are accumulated as *bytes*
+    /// (`read_until`), not via `read_line`: the latter's UTF-8 guard
+    /// discards partially-read data when a timeout splits a multi-byte
+    /// character, corrupting the in-flight request.
+    ///
+    /// [`run_tcp`]: Self::run_tcp
+    pub fn serve_connection(&self, mut reader: impl BufRead, mut writer: impl Write) {
+        let mut buf: Vec<u8> = Vec::new();
+        loop {
+            if self.is_shutdown() {
+                break;
+            }
+            match reader.read_until(b'\n', &mut buf) {
+                Ok(0) => break, // EOF
+                Ok(_) => {
+                    let reply = {
+                        let text = String::from_utf8_lossy(&buf);
+                        let trimmed = text.trim();
+                        if trimmed.is_empty() {
+                            None
+                        } else {
+                            Some(self.handle_line(trimmed))
+                        }
+                    };
+                    buf.clear();
+                    if let Some(reply) = reply {
+                        if writer
+                            .write_all(reply.as_bytes())
+                            .and_then(|_| writer.write_all(b"\n"))
+                            .and_then(|_| writer.flush())
+                            .is_err()
+                        {
+                            break;
+                        }
+                    }
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    // Read timeout: partial bytes stay in `buf`; loop
+                    // to re-check the shutdown flag.
+                }
+                Err(_) => break,
+            }
+        }
+    }
+
+    fn serve_split_stream<S: Read + Write>(&self, read_half: S, write_half: S) {
+        self.serve_connection(BufReader::new(read_half), write_half);
+    }
+
+    /// One periodic staleness scan; returns how many tasks were queued.
+    pub fn scan_once(&self) -> Result<usize> {
+        let shards = self.db.all_shards()?;
+        let added = self.scheduler.lock().unwrap().scan(&shards, &self.host, unix_now());
+        self.counters.retune_queued.fetch_add(added as u64, Ordering::Relaxed);
+        Ok(added)
+    }
+
+    /// Background staleness scanner (checks the shutdown flag every
+    /// poll interval, scans every `interval`).
+    pub fn spawn_scan(self: Arc<Self>, interval: Duration) -> std::thread::JoinHandle<()> {
+        std::thread::spawn(move || {
+            while !self.is_shutdown() {
+                if self.scan_once().is_err() {
+                    self.bump(&self.counters.errors);
+                }
+                let mut slept = Duration::ZERO;
+                while slept < interval && !self.is_shutdown() {
+                    std::thread::sleep(Duration::from_millis(50));
+                    slept += Duration::from_millis(50);
+                }
+            }
+        })
+    }
+
+    /// Background re-tune worker: drains the *host's* staleness tasks
+    /// through the batched [`Tuner`] and records fresh entries under
+    /// the host's current fingerprint (foreign platforms' tasks remain
+    /// queued for external `retune-next` workers).  A per-(kernel,
+    /// workload) cooldown — a quarter of the TTL, at least a minute —
+    /// bounds the tuning rate even if a recording failure leaves a
+    /// task re-queue-able, while still allowing the periodic refresh
+    /// the TTL exists for.
+    ///
+    /// The worker builds its own [`Registry`] *inside* the thread via
+    /// `make_registry`: backend executable types are not `Send` under
+    /// the real-runtime feature, so nothing runtime-owned may cross the
+    /// spawn boundary.  If construction fails (no artifacts, stub
+    /// runtime), the worker logs once and exits — the daemon keeps
+    /// serving, it just cannot re-measure.
+    pub fn spawn_retune_worker(
+        self: Arc<Self>,
+        make_registry: impl FnOnce() -> Result<Registry> + Send + 'static,
+        batch: usize,
+    ) -> std::thread::JoinHandle<()> {
+        let cooldown = Duration::from_secs((self.opts.ttl_s / 4).max(60));
+        std::thread::spawn(move || {
+            let registry = match make_registry() {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("re-tune worker exiting: {e:#}");
+                    self.bump(&self.counters.errors);
+                    return;
+                }
+            };
+            let mut last_retuned: HashMap<(String, String), std::time::Instant> = HashMap::new();
+            while !self.is_shutdown() {
+                // Only the host's own tasks: foreign shards stay queued
+                // for the external workers polling `retune-next` — this
+                // daemon cannot re-measure another machine, and a local
+                // tune would be recorded under the host's key anyway,
+                // leaving the foreign shard stale and re-queuing.
+                let task = self.scheduler.lock().unwrap().pop_for(&self.host_key);
+                let Some(task) = task else {
+                    std::thread::sleep(Duration::from_millis(100));
+                    continue;
+                };
+                let work_key = (task.kernel.clone(), task.tag.clone());
+                if last_retuned.get(&work_key).is_some_and(|t| t.elapsed() < cooldown) {
+                    continue;
+                }
+                last_retuned.insert(work_key, std::time::Instant::now());
+                let mut tuner = Tuner::new(&registry);
+                tuner.batch = batch.max(1);
+                let mut strategy = Exhaustive::new();
+                match tuner.tune(&task.kernel, &task.tag, &mut strategy, usize::MAX) {
+                    Ok(outcome) => {
+                        let entry = tuner.entry_for(&outcome);
+                        let (platform, kernel, tag) =
+                            (entry.platform_key.clone(), entry.kernel.clone(), entry.tag.clone());
+                        if self.db.record(Some(&outcome.platform), entry).is_ok() {
+                            self.invalidate(&platform, &kernel, &tag);
+                            self.bump(&self.counters.retunes);
+                        } else {
+                            self.bump(&self.counters.errors);
+                        }
+                    }
+                    Err(_) => self.bump(&self.counters.errors),
+                }
+            }
+        })
+    }
+
+    /// The shared accept loop (transport supplied as a non-blocking
+    /// `accept` closure).  Each connection gets a thread; finished
+    /// handles are reaped every iteration so a long-lived daemon does
+    /// not accumulate dead thread stacks.  Connections carry a read
+    /// timeout ([`ServeStream::prepare`]) so their loops notice the
+    /// shutdown flag even when a client holds the socket open idle.
+    fn run_accept_loop<S: ServeStream>(
+        self: Arc<Self>,
+        mut accept: impl FnMut() -> std::io::Result<S>,
+    ) -> Result<()> {
+        let mut handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        while !self.is_shutdown() {
+            handles.retain(|h| !h.is_finished());
+            match accept() {
+                Ok(stream) => {
+                    stream.prepare();
+                    let srv = Arc::clone(&self);
+                    handles.push(std::thread::spawn(move || {
+                        match stream.split_read_half() {
+                            Ok(read_half) => srv.serve_split_stream(read_half, stream),
+                            Err(_) => srv.bump(&srv.counters.errors),
+                        }
+                    }));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(ACCEPT_POLL);
+                }
+                Err(_) => {
+                    // Persistent accept errors (EMFILE under fd
+                    // exhaustion, etc.) return immediately — back off
+                    // instead of busy-spinning a core on the counter.
+                    self.bump(&self.counters.errors);
+                    std::thread::sleep(ACCEPT_POLL * 10);
+                }
+            }
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+
+    /// Accept loop over TCP.  Returns when shutdown is requested.
+    pub fn run_tcp(self: Arc<Self>, listener: TcpListener) -> Result<()> {
+        listener.set_nonblocking(true)?;
+        self.run_accept_loop(move || listener.accept().map(|(stream, _peer)| stream))
+    }
+
+    /// Accept loop over a Unix socket.  Returns when shutdown is
+    /// requested; the caller owns socket-file cleanup.
+    #[cfg(unix)]
+    pub fn run_unix(self: Arc<Self>, listener: std::os::unix::net::UnixListener) -> Result<()> {
+        listener.set_nonblocking(true)?;
+        self.run_accept_loop(move || listener.accept().map(|(stream, _peer)| stream))
+    }
+}
+
+/// The per-transport surface the accept loop needs: post-accept socket
+/// options and a second handle for the read half.
+trait ServeStream: Read + Write + Send + Sized + 'static {
+    fn prepare(&self);
+    fn split_read_half(&self) -> std::io::Result<Self>;
+}
+
+impl ServeStream for std::net::TcpStream {
+    fn prepare(&self) {
+        let _ = self.set_nonblocking(false);
+        let _ = self.set_nodelay(true);
+        let _ = self.set_read_timeout(Some(CONN_READ_TIMEOUT));
+    }
+
+    fn split_read_half(&self) -> std::io::Result<Self> {
+        self.try_clone()
+    }
+}
+
+#[cfg(unix)]
+impl ServeStream for std::os::unix::net::UnixStream {
+    fn prepare(&self) {
+        let _ = self.set_nonblocking(false);
+        let _ = self.set_read_timeout(Some(CONN_READ_TIMEOUT));
+    }
+
+    fn split_read_half(&self) -> std::io::Result<Self> {
+        self.try_clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fp() -> Fingerprint {
+        Fingerprint {
+            cpu_model: "Srv CPU".into(),
+            num_cpus: 8,
+            simd: vec!["avx2".into(), "fma".into()],
+            cache_l1d_kb: 32,
+            cache_l2_kb: 1024,
+            cache_l3_kb: 8192,
+            os: "linux".into(),
+        }
+    }
+
+    fn entry(platform: &str, kernel: &str, tag: &str, id: &str) -> DbEntry {
+        DbEntry {
+            platform_key: platform.into(),
+            kernel: kernel.into(),
+            tag: tag.into(),
+            best_params: [("block_size".to_string(), 256i64)].into_iter().collect(),
+            best_config_id: id.into(),
+            best_time_s: 1e-3,
+            baseline_time_s: 2e-3,
+            reference_time_s: 9e-4,
+            evaluations: 4,
+            strategy: "exhaustive".into(),
+            recorded_at: unix_now(),
+        }
+    }
+
+    fn test_server(name: &str) -> (Server, std::path::PathBuf) {
+        let dir = std::env::temp_dir()
+            .join(format!("portatune-srv-{name}-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let db = ShardedDb::open(&dir).unwrap();
+        (Server::new(db, fp(), ServeOpts::default()), dir)
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let mut lru: Lru<u32, u32> = Lru::new(2);
+        lru.put(1, 10);
+        lru.put(2, 20);
+        assert_eq!(lru.get(&1), Some(10)); // refresh 1
+        lru.put(3, 30); // evicts 2
+        assert_eq!(lru.get(&2), None);
+        assert_eq!(lru.get(&1), Some(10));
+        assert_eq!(lru.get(&3), Some(30));
+        assert_eq!(lru.len(), 2);
+    }
+
+    #[test]
+    fn lru_cap_zero_stores_nothing() {
+        let mut lru: Lru<u32, u32> = Lru::new(0);
+        lru.put(1, 10);
+        assert_eq!(lru.get(&1), None);
+        assert!(lru.is_empty());
+    }
+
+    #[test]
+    fn record_then_lookup_round_trips() {
+        let (srv, dir) = test_server("roundtrip");
+        let rec = Request::Record {
+            entry: Box::new(entry("p1", "axpy", "n4096", "b256_u1")),
+            fingerprint: Some(fp()),
+        };
+        assert_eq!(srv.handle_request(&rec).get("ok").and_then(Json::as_bool), Some(true));
+        let look = Request::Lookup {
+            platform: Some("p1".into()),
+            kernel: "axpy".into(),
+            workload: "n4096".into(),
+        };
+        let reply = srv.handle_request(&look);
+        assert_eq!(reply.get("found").and_then(Json::as_bool), Some(true));
+        assert_eq!(
+            reply.get("entry").and_then(|e| e.get("best_config_id")).and_then(Json::as_str),
+            Some("b256_u1")
+        );
+        // Second lookup is served from the LRU.
+        let _ = srv.handle_request(&look);
+        let stats = srv.stats();
+        assert_eq!(stats.lookups, 2);
+        assert_eq!(stats.lru_hits, 1);
+        assert_eq!(stats.shard_reads, 1);
+        assert_eq!(stats.records, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn record_invalidates_cached_negative() {
+        let (srv, dir) = test_server("invalidate");
+        let look = Request::Lookup {
+            platform: Some("p1".into()),
+            kernel: "axpy".into(),
+            workload: "n4096".into(),
+        };
+        // Miss gets cached...
+        assert_eq!(srv.handle_request(&look).get("found").and_then(Json::as_bool), Some(false));
+        // ...but a record must bust it.
+        let rec = Request::Record {
+            entry: Box::new(entry("p1", "axpy", "n4096", "fresh")),
+            fingerprint: None,
+        };
+        srv.handle_request(&rec);
+        assert_eq!(srv.handle_request(&look).get("found").and_then(Json::as_bool), Some(true));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn deploy_miss_returns_transfer_candidates_nearest_first() {
+        let (srv, dir) = test_server("transfer");
+        // Two recorded platforms: one near-identical to the requester,
+        // one alien.
+        let near_fp = fp();
+        let mut far_fp = fp();
+        far_fp.simd = vec!["neon".into()];
+        far_fp.cache_l2_kb = 512;
+        far_fp.os = "macos".into();
+        srv.handle_request(&Request::Record {
+            entry: Box::new(entry("near-p", "axpy", "n4096", "near_cfg")),
+            fingerprint: Some(near_fp),
+        });
+        srv.handle_request(&Request::Record {
+            entry: Box::new(entry("far-p", "axpy", "n4096", "far_cfg")),
+            fingerprint: Some(far_fp),
+        });
+        let reply = srv.handle_request(&Request::Deploy {
+            platform: Some("fresh-platform".into()),
+            kernel: "axpy".into(),
+            workload: "n4096".into(),
+            fingerprint: Some(fp()), // requester looks like near-p
+        });
+        assert_eq!(reply.get("source").and_then(Json::as_str), Some("transfer"));
+        let cands = reply.get("candidates").and_then(Json::as_arr).unwrap();
+        assert_eq!(cands.len(), 2);
+        assert_eq!(cands[0].get("config_id").and_then(Json::as_str), Some("near_cfg"));
+        assert!(
+            cands[0].get("similarity").and_then(Json::as_f64).unwrap()
+                > cands[1].get("similarity").and_then(Json::as_f64).unwrap()
+        );
+        assert_eq!(srv.stats().transfer_misses, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn deploy_ranks_for_target_platforms_stored_fingerprint() {
+        let (srv, dir) = test_server("target-fp");
+        let arm = Fingerprint {
+            cpu_model: "ARM Box".into(),
+            num_cpus: 8,
+            simd: vec!["neon".into()],
+            cache_l1d_kb: 64,
+            cache_l2_kb: 512,
+            cache_l3_kb: 0,
+            os: "linux".into(),
+        };
+        // The target platform is known (shard with ARM fingerprint) but
+        // has no entry for the requested kernel — only for another one.
+        srv.handle_request(&Request::Record {
+            entry: Box::new(entry("arm-target", "dot", "n4096", "unrelated")),
+            fingerprint: Some(arm.clone()),
+        });
+        // Candidate pool: an ARM sibling and an x86 box, both tuned for
+        // the requested kernel.
+        let mut arm_sibling = arm.clone();
+        arm_sibling.cache_l2_kb = 1024;
+        srv.handle_request(&Request::Record {
+            entry: Box::new(entry("arm-sibling", "axpy", "n4096", "arm_cfg")),
+            fingerprint: Some(arm_sibling),
+        });
+        srv.handle_request(&Request::Record {
+            entry: Box::new(entry("x86-box", "axpy", "n4096", "x86_cfg")),
+            fingerprint: Some(fp()), // avx2 x86 — matches the *requester*
+        });
+        // Query made on behalf of arm-target from an x86 machine: the
+        // requester's fingerprint must NOT drive the ranking.
+        let reply = srv.handle_request(&Request::Deploy {
+            platform: Some("arm-target".into()),
+            kernel: "axpy".into(),
+            workload: "n4096".into(),
+            fingerprint: Some(fp()),
+        });
+        assert_eq!(reply.get("source").and_then(Json::as_str), Some("transfer"));
+        let cands = reply.get("candidates").and_then(Json::as_arr).unwrap();
+        assert_eq!(
+            cands[0].get("config_id").and_then(Json::as_str),
+            Some("arm_cfg"),
+            "ranking must follow the target's stored ARM fingerprint, not the x86 requester"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn deploy_exact_hit_short_circuits_transfer() {
+        let (srv, dir) = test_server("exact");
+        srv.handle_request(&Request::Record {
+            entry: Box::new(entry("p1", "axpy", "n4096", "mine")),
+            fingerprint: None,
+        });
+        let reply = srv.handle_request(&Request::Deploy {
+            platform: Some("p1".into()),
+            kernel: "axpy".into(),
+            workload: "n4096".into(),
+            fingerprint: None,
+        });
+        assert_eq!(reply.get("source").and_then(Json::as_str), Some("exact"));
+        assert_eq!(srv.stats().transfer_misses, 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn wire_lines_and_shutdown() {
+        let (srv, dir) = test_server("wire");
+        let reply = srv.handle_line(r#"{"op":"ping"}"#);
+        assert!(reply.contains(r#""ok":true"#));
+        let reply = srv.handle_line("garbage");
+        assert!(reply.contains(r#""ok":false"#));
+        assert!(!srv.is_shutdown());
+        let reply = srv.handle_line(r#"{"op":"shutdown"}"#);
+        assert!(reply.contains(r#""stopping":true"#));
+        assert!(srv.is_shutdown());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn serve_connection_over_buffers() {
+        let (srv, dir) = test_server("buffers");
+        let input = b"{\"op\":\"ping\"}\n\n{\"op\":\"stats\"}\n".to_vec();
+        let mut output: Vec<u8> = Vec::new();
+        srv.serve_connection(std::io::Cursor::new(input), &mut output);
+        let text = String::from_utf8(output).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2, "blank lines are skipped: {text}");
+        assert!(lines[0].contains("pong"));
+        assert!(lines[1].contains("stats"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn scan_once_queues_and_retune_next_pops() {
+        let (srv, dir) = test_server("scan");
+        let mut stale = entry("p1", "axpy", "n4096", "old");
+        stale.recorded_at = 1000; // ancient
+        srv.db().record(None, stale).unwrap();
+        let added = srv.scan_once().unwrap();
+        assert_eq!(added, 1);
+        assert_eq!(srv.stats().retune_queue_depth, 1);
+        let reply = srv.handle_request(&Request::RetuneNext);
+        assert_eq!(reply.get("found").and_then(Json::as_bool), Some(true));
+        assert_eq!(
+            reply.get("task").and_then(|t| t.get("reason")).and_then(Json::as_str),
+            Some("ttl-expired")
+        );
+        let reply = srv.handle_request(&Request::RetuneNext);
+        assert_eq!(reply.get("found").and_then(Json::as_bool), Some(false));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,239 @@
+//! Fingerprint-similarity transfer: warm-start candidates for a
+//! platform the store has never seen.
+//!
+//! The paper's sustainability claim is that tuned configurations
+//! outlive one machine; "A Few Fit Most" (Hochgraf & Pai, 2025) shows a
+//! small set of tuned variants transfers across devices.  This module
+//! is the ranking half of that story: given every shard's
+//! [`Fingerprint`] and a target platform, score similarity
+//! ([`Fingerprint::similarity`]: SIMD ISA overlap, cache geometry, core
+//! count, OS) and return each nearby platform's frontier entries,
+//! nearest platform first.  It replaces [`PerfDb::warm_start`]'s
+//! exclude-only heuristic (which ranked by recorded speedup alone and
+//! treated a disjoint-ISA machine as seriously as a sibling box).
+//!
+//! [`PerfDb::warm_start`]: crate::coordinator::perfdb::PerfDb::warm_start
+
+use std::collections::HashSet;
+
+use crate::coordinator::perfdb::{DbEntry, Shard};
+use crate::coordinator::platform::Fingerprint;
+use crate::coordinator::spec::Config;
+
+/// One ranked warm-start candidate.
+#[derive(Debug, Clone)]
+pub struct TransferCandidate {
+    /// Where the entry was recorded.
+    pub platform_key: String,
+    /// Similarity of that platform to the target, in [0, 1].
+    pub similarity: f64,
+    /// Whether the entry's workload tag matches the requested one.
+    pub same_workload: bool,
+    pub entry: DbEntry,
+}
+
+/// Similarity floor below which a platform contributes no candidates —
+/// a disjoint-ISA, alien-cache machine's optimum is noise, not signal.
+pub const MIN_SIMILARITY: f64 = 0.05;
+
+/// Rank warm-start candidates for `kernel`/`tag` on a platform with
+/// fingerprint `target`.
+///
+/// Ordering: similarity (descending), then same-workload entries before
+/// other workloads of the same kernel, then recorded speedup.  Shards
+/// without a stored fingerprint score [`MIN_SIMILARITY`] exactly (they
+/// are admissible but rank behind every scored platform).  The target's
+/// own shard (`exclude_key`) and other kernels never contribute.
+/// Candidates are deduped by winning config id, keeping the
+/// highest-ranked occurrence.
+pub fn rank_candidates(
+    shards: &[Shard],
+    target: &Fingerprint,
+    kernel: &str,
+    tag: &str,
+    exclude_key: &str,
+) -> Vec<TransferCandidate> {
+    let mut out: Vec<TransferCandidate> = Vec::new();
+    for shard in shards {
+        if shard.platform_key == exclude_key {
+            continue;
+        }
+        let similarity = match &shard.fingerprint {
+            Some(fp) => target.similarity(fp),
+            None => MIN_SIMILARITY,
+        };
+        if similarity < MIN_SIMILARITY {
+            continue;
+        }
+        for entry in shard.frontier() {
+            if entry.kernel != kernel || entry.best_config_id == "baseline" {
+                continue;
+            }
+            out.push(TransferCandidate {
+                platform_key: shard.platform_key.clone(),
+                similarity,
+                same_workload: entry.tag == tag,
+                entry: entry.clone(),
+            });
+        }
+    }
+    out.sort_by(|a, b| {
+        b.similarity
+            .total_cmp(&a.similarity)
+            .then(b.same_workload.cmp(&a.same_workload))
+            .then(b.entry.speedup().total_cmp(&a.entry.speedup()))
+    });
+    let mut seen: HashSet<String> = HashSet::new();
+    out.retain(|c| seen.insert(c.entry.best_config_id.clone()));
+    out
+}
+
+/// The configs to seed a tuner's warm start with, rank order preserved,
+/// capped (transfer is a seeding heuristic — evaluating the whole
+/// store's frontier would turn the warm start back into a search).
+pub fn warm_start_configs(candidates: &[TransferCandidate], cap: usize) -> Vec<Config> {
+    candidates.iter().take(cap).map(|c| c.entry.best_params.clone()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fp(simd: &[&str], l1: u64, l2: u64, l3: u64, cores: usize) -> Fingerprint {
+        Fingerprint {
+            cpu_model: "test".into(),
+            num_cpus: cores,
+            simd: simd.iter().map(|s| s.to_string()).collect(),
+            cache_l1d_kb: l1,
+            cache_l2_kb: l2,
+            cache_l3_kb: l3,
+            os: "linux".into(),
+        }
+    }
+
+    fn entry(platform: &str, kernel: &str, tag: &str, id: &str, speedup: f64) -> DbEntry {
+        DbEntry {
+            platform_key: platform.into(),
+            kernel: kernel.into(),
+            tag: tag.into(),
+            best_params: [("block_size".to_string(), 1024i64)].into_iter().collect(),
+            best_config_id: id.into(),
+            best_time_s: 1e-3,
+            baseline_time_s: 1e-3 * speedup,
+            reference_time_s: 9e-4,
+            evaluations: 9,
+            strategy: "exhaustive".into(),
+            recorded_at: 1_700_000_000,
+        }
+    }
+
+    fn shard(key: &str, fp: Option<Fingerprint>, entries: Vec<DbEntry>) -> Shard {
+        Shard { platform_key: key.into(), fingerprint: fp, entries }
+    }
+
+    #[test]
+    fn near_platform_outranks_disjoint_isa_despite_lower_speedup() {
+        let target = fp(&["sse2", "avx", "avx2"], 32, 1024, 33792, 8);
+        let near = fp(&["sse2", "avx", "avx2"], 32, 512, 33792, 8);
+        let far = fp(&["neon"], 128, 4096, 0, 64);
+        let shards = vec![
+            shard("far", Some(far), vec![entry("far", "axpy", "n4096", "far_cfg", 9.9)]),
+            shard("near", Some(near), vec![entry("near", "axpy", "n4096", "near_cfg", 1.2)]),
+        ];
+        let ranked = rank_candidates(&shards, &target, "axpy", "n4096", "local");
+        assert_eq!(ranked.len(), 2);
+        assert_eq!(ranked[0].entry.best_config_id, "near_cfg");
+        assert!(ranked[0].similarity > ranked[1].similarity);
+    }
+
+    #[test]
+    fn excludes_own_platform_and_other_kernels() {
+        let target = fp(&["avx2"], 32, 1024, 8192, 8);
+        let shards = vec![
+            shard(
+                "local",
+                Some(target.clone()),
+                vec![entry("local", "axpy", "n4096", "own", 2.0)],
+            ),
+            shard(
+                "other",
+                Some(target.clone()),
+                vec![
+                    entry("other", "dot", "n4096", "wrong_kernel", 3.0),
+                    entry("other", "axpy", "n4096", "right", 1.5),
+                ],
+            ),
+        ];
+        let ranked = rank_candidates(&shards, &target, "axpy", "n4096", "local");
+        assert_eq!(ranked.len(), 1);
+        assert_eq!(ranked[0].entry.best_config_id, "right");
+    }
+
+    #[test]
+    fn same_workload_breaks_similarity_ties() {
+        let target = fp(&["avx2"], 32, 1024, 8192, 8);
+        let twin = target.clone();
+        let shards = vec![shard(
+            "twin",
+            Some(twin),
+            vec![
+                entry("twin", "axpy", "n65536", "other_tag", 5.0),
+                entry("twin", "axpy", "n4096", "same_tag", 1.2),
+            ],
+        )];
+        let ranked = rank_candidates(&shards, &target, "axpy", "n4096", "local");
+        assert_eq!(ranked[0].entry.best_config_id, "same_tag");
+    }
+
+    #[test]
+    fn fingerprintless_shards_rank_last_but_contribute() {
+        let target = fp(&["avx2"], 32, 1024, 8192, 8);
+        let shards = vec![
+            shard("legacy", None, vec![entry("legacy", "axpy", "n4096", "legacy_cfg", 9.0)]),
+            shard(
+                "scored",
+                Some(target.clone()),
+                vec![entry("scored", "axpy", "n4096", "scored_cfg", 1.1)],
+            ),
+        ];
+        let ranked = rank_candidates(&shards, &target, "axpy", "n4096", "local");
+        assert_eq!(ranked.len(), 2);
+        assert_eq!(ranked[0].entry.best_config_id, "scored_cfg");
+        assert_eq!(ranked[1].similarity, MIN_SIMILARITY);
+    }
+
+    #[test]
+    fn dedupes_by_config_id_and_caps_configs() {
+        let target = fp(&["avx2"], 32, 1024, 8192, 8);
+        let shards = vec![
+            shard(
+                "a",
+                Some(target.clone()),
+                vec![entry("a", "axpy", "n4096", "dup", 1.5)],
+            ),
+            shard(
+                "b",
+                Some(target.clone()),
+                vec![
+                    entry("b", "axpy", "n4096", "dup", 1.4),
+                    entry("b", "axpy", "n65536", "uniq", 1.3),
+                ],
+            ),
+        ];
+        let ranked = rank_candidates(&shards, &target, "axpy", "n4096", "local");
+        assert_eq!(ranked.len(), 2, "dup config id collapses");
+        let configs = warm_start_configs(&ranked, 1);
+        assert_eq!(configs.len(), 1);
+    }
+
+    #[test]
+    fn baseline_records_are_not_candidates() {
+        let target = fp(&["avx2"], 32, 1024, 8192, 8);
+        let shards = vec![shard(
+            "a",
+            Some(target.clone()),
+            vec![entry("a", "axpy", "n4096", "baseline", 1.0)],
+        )];
+        assert!(rank_candidates(&shards, &target, "axpy", "n4096", "local").is_empty());
+    }
+}

@@ -1,0 +1,306 @@
+//! Service-layer integration: the shard store under concurrent
+//! writers, the daemon end-to-end over real TCP, legacy-file merge
+//! semantics, v1 → v2 migration, and the staleness scheduler.
+//!
+//! Everything here is hermetic — no XLA runtime, no artifacts — which
+//! is the point: the serving layer must work on machines that only
+//! *consume* tuned configurations.
+
+use std::sync::Arc;
+
+use portatune::coordinator::perfdb::{unix_now, DbEntry, PerfDb, ShardedDb};
+use portatune::coordinator::platform::Fingerprint;
+use portatune::service::{Client, Request, ServeOpts, Server};
+use portatune::util::json::Json;
+
+fn tmp_dir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("portatune-svcit-{name}-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+fn fp(l2: u64, simd: &[&str]) -> Fingerprint {
+    Fingerprint {
+        cpu_model: "IT CPU".into(),
+        num_cpus: 8,
+        simd: simd.iter().map(|s| s.to_string()).collect(),
+        cache_l1d_kb: 32,
+        cache_l2_kb: l2,
+        cache_l3_kb: 8192,
+        os: "linux".into(),
+    }
+}
+
+fn entry(platform: &str, kernel: &str, tag: &str, id: &str, recorded_at: u64) -> DbEntry {
+    DbEntry {
+        platform_key: platform.into(),
+        kernel: kernel.into(),
+        tag: tag.into(),
+        best_params: [("block_size".to_string(), 512i64)].into_iter().collect(),
+        best_config_id: id.into(),
+        best_time_s: 1e-3,
+        baseline_time_s: 2e-3,
+        reference_time_s: 9e-4,
+        evaluations: 8,
+        strategy: "exhaustive".into(),
+        recorded_at,
+    }
+}
+
+/// N threads × M records into one shard: nothing may be lost.
+#[test]
+fn concurrent_shard_writers_lose_no_entries() {
+    let dir = tmp_dir("writers");
+    let db = ShardedDb::open(&dir).unwrap();
+    const THREADS: usize = 8;
+    const PER_THREAD: usize = 20;
+    let mut handles = Vec::new();
+    for t in 0..THREADS {
+        let db = db.clone();
+        handles.push(std::thread::spawn(move || {
+            for i in 0..PER_THREAD {
+                // Unique identity per record: distinct config id.
+                let e = entry(
+                    "shared-platform",
+                    "axpy",
+                    "n4096",
+                    &format!("cfg_t{t}_i{i}"),
+                    1_700_000_000 + (t * PER_THREAD + i) as u64,
+                );
+                db.record(None, e).unwrap();
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let shard = db.load("shared-platform").unwrap().unwrap();
+    assert_eq!(
+        shard.entries.len(),
+        THREADS * PER_THREAD,
+        "lock-file + merge-on-save must keep every concurrent record"
+    );
+    // The newest record is the lookup answer.
+    let latest = shard.latest("axpy", "n4096").unwrap();
+    assert_eq!(latest.recorded_at, 1_700_000_000 + (THREADS * PER_THREAD - 1) as u64);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Concurrent writers on *different* platforms never contend.
+#[test]
+fn concurrent_writers_different_platforms() {
+    let dir = tmp_dir("multi");
+    let db = ShardedDb::open(&dir).unwrap();
+    let mut handles = Vec::new();
+    for t in 0..6 {
+        let db = db.clone();
+        handles.push(std::thread::spawn(move || {
+            for i in 0..10 {
+                let e = entry(
+                    &format!("platform-{t}"),
+                    "dot",
+                    "n65536",
+                    &format!("cfg_{i}"),
+                    1_700_000_000 + i as u64,
+                );
+                db.record(None, e).unwrap();
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(db.platforms().unwrap().len(), 6);
+    for t in 0..6 {
+        let shard = db.load(&format!("platform-{t}")).unwrap().unwrap();
+        assert_eq!(shard.entries.len(), 10);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Full daemon loop over real TCP: record → lookup → deploy-transfer →
+/// stats → shutdown, with a concurrent client burst in the middle.
+#[test]
+fn daemon_record_lookup_deploy_over_tcp() {
+    let dir = tmp_dir("tcp");
+    let db = ShardedDb::open(&dir).unwrap();
+    let server = Arc::new(Server::new(db, fp(1024, &["avx2", "fma"]), ServeOpts::default()));
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let srv = Arc::clone(&server);
+    let serve_thread = std::thread::spawn(move || srv.run_tcp(listener).unwrap());
+    let client = Client::tcp(addr.clone());
+
+    // Record an entry for a "remote" platform, fingerprint attached.
+    let reply = client
+        .call(&Request::Record {
+            entry: Box::new(entry("remote-box", "axpy", "n4096", "b512_u1", unix_now())),
+            fingerprint: Some(fp(1024, &["avx2", "fma"])),
+        })
+        .unwrap();
+    assert_eq!(reply.get("recorded").and_then(Json::as_bool), Some(true));
+
+    // Exact lookup round-trips the entry.
+    let reply = client
+        .call(&Request::Lookup {
+            platform: Some("remote-box".into()),
+            kernel: "axpy".into(),
+            workload: "n4096".into(),
+        })
+        .unwrap();
+    assert_eq!(reply.get("found").and_then(Json::as_bool), Some(true));
+    assert_eq!(
+        reply.get("entry").and_then(|e| e.get("best_config_id")).and_then(Json::as_str),
+        Some("b512_u1")
+    );
+
+    // Concurrent client burst: every thread must get a coherent reply.
+    let mut handles = Vec::new();
+    for _ in 0..8 {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let client = Client::tcp(addr);
+            for _ in 0..10 {
+                let reply = client
+                    .call(&Request::Lookup {
+                        platform: Some("remote-box".into()),
+                        kernel: "axpy".into(),
+                        workload: "n4096".into(),
+                    })
+                    .unwrap();
+                assert_eq!(reply.get("found").and_then(Json::as_bool), Some(true));
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    // Deploy for an unseen platform with a near-identical fingerprint:
+    // transfer-ranked candidates, nearest first, never an empty miss.
+    let reply = client
+        .call(&Request::Deploy {
+            platform: Some("brand-new-box".into()),
+            kernel: "axpy".into(),
+            workload: "n4096".into(),
+            fingerprint: Some(fp(2048, &["avx2", "fma"])),
+        })
+        .unwrap();
+    assert_eq!(reply.get("source").and_then(Json::as_str), Some("transfer"));
+    let cands = reply.get("candidates").and_then(Json::as_arr).unwrap();
+    assert!(!cands.is_empty());
+    assert_eq!(cands[0].get("config_id").and_then(Json::as_str), Some("b512_u1"));
+    assert!(cands[0].get("similarity").and_then(Json::as_f64).unwrap() > 0.5);
+
+    // Counters saw the traffic.
+    let reply = client.call(&Request::Stats).unwrap();
+    let stats = reply.get("stats").unwrap();
+    assert!(stats.get("lookups").and_then(Json::as_u64).unwrap() >= 81);
+    assert_eq!(stats.get("records").and_then(Json::as_u64), Some(1));
+    assert_eq!(stats.get("transfer_misses").and_then(Json::as_u64), Some(1));
+    assert!(stats.get("lru_hits").and_then(Json::as_u64).unwrap() >= 1);
+
+    // Shutdown stops the accept loop; the serve thread exits.
+    let reply = client.call(&Request::Shutdown).unwrap();
+    assert_eq!(reply.get("stopping").and_then(Json::as_bool), Some(true));
+    serve_thread.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The daemon over a Unix socket (the CI smoke job uses TCP; this
+/// covers the second transport).
+#[cfg(unix)]
+#[test]
+fn daemon_over_unix_socket() {
+    let dir = tmp_dir("unix");
+    std::fs::create_dir_all(&dir).unwrap();
+    let sock = dir.join("portatune.sock");
+    let db = ShardedDb::open(dir.join("shards")).unwrap();
+    let server = Arc::new(Server::new(db, fp(1024, &["avx2"]), ServeOpts::default()));
+    let listener = std::os::unix::net::UnixListener::bind(&sock).unwrap();
+    let srv = Arc::clone(&server);
+    let serve_thread = std::thread::spawn(move || srv.run_unix(listener).unwrap());
+    let client = Client::unix(&sock);
+
+    let reply = client.call(&Request::Ping).unwrap();
+    assert_eq!(reply.get("op").and_then(Json::as_str), Some("pong"));
+    let reply = client.call(&Request::Shutdown).unwrap();
+    assert_eq!(reply.get("stopping").and_then(Json::as_bool), Some(true));
+    serve_thread.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Two *processes'* worth of PerfDb handles on one legacy file: the
+/// second save merges instead of clobbering (the old last-writer-wins
+/// bug lost the first writer's tune).
+#[test]
+fn legacy_file_concurrent_saves_merge() {
+    let dir = tmp_dir("legacy");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("perfdb.json");
+    let mut writer_a = PerfDb::open(&path).unwrap();
+    let mut writer_b = PerfDb::open(&path).unwrap();
+    writer_a.record(entry("platform-a", "axpy", "n4096", "a_cfg", 100));
+    writer_b.record(entry("platform-b", "axpy", "n4096", "b_cfg", 200));
+    writer_a.save().unwrap();
+    writer_b.save().unwrap();
+    let merged = PerfDb::open(&path).unwrap();
+    assert_eq!(merged.len(), 2);
+    assert_eq!(merged.lookup("platform-a", "axpy", "n4096").unwrap().best_config_id, "a_cfg");
+    assert_eq!(merged.lookup("platform-b", "axpy", "n4096").unwrap().best_config_id, "b_cfg");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Migration: a v1 file becomes shards; the daemon serves them.
+#[test]
+fn migrated_legacy_db_serves_lookups() {
+    let dir = tmp_dir("migrated");
+    std::fs::create_dir_all(&dir).unwrap();
+    let legacy_path = dir.join("perfdb.json");
+    let mut legacy = PerfDb::open(&legacy_path).unwrap();
+    legacy.record(entry("old-box", "axpy", "n4096", "legacy_cfg", 1_700_000_000));
+    legacy.save().unwrap();
+
+    let db = ShardedDb::open(dir.join("shards")).unwrap();
+    assert_eq!(db.import_legacy(&legacy_path).unwrap(), 1);
+
+    let server = Server::new(db, fp(1024, &["avx2"]), ServeOpts::default());
+    let reply = server.handle_request(&Request::Lookup {
+        platform: Some("old-box".into()),
+        kernel: "axpy".into(),
+        workload: "n4096".into(),
+    });
+    assert_eq!(reply.get("found").and_then(Json::as_bool), Some(true));
+    assert_eq!(
+        reply.get("entry").and_then(|e| e.get("best_config_id")).and_then(Json::as_str),
+        Some("legacy_cfg")
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Staleness: TTL-expired entries surface through `retune-next`.
+#[test]
+fn stale_entries_flow_to_retune_queue() {
+    let dir = tmp_dir("stale");
+    let db = ShardedDb::open(&dir).unwrap();
+    db.record(None, entry("aging-box", "axpy", "n4096", "old_cfg", 1000)).unwrap();
+    db.record(None, entry("aging-box", "dot", "n4096", "old_cfg2", 1000)).unwrap();
+    let fresh = entry("fresh-box", "axpy", "n4096", "new_cfg", unix_now());
+    db.record(None, fresh).unwrap();
+
+    let server = Server::new(db, fp(1024, &["avx2"]), ServeOpts { ttl_s: 3600, lru_cap: 16 });
+    assert_eq!(server.scan_once().unwrap(), 2, "both aged frontiers queue; fresh does not");
+    let mut seen = Vec::new();
+    loop {
+        let reply = server.handle_request(&Request::RetuneNext);
+        if reply.get("found").and_then(Json::as_bool) != Some(true) {
+            break;
+        }
+        let task = reply.get("task").unwrap();
+        assert_eq!(task.get("reason").and_then(Json::as_str), Some("ttl-expired"));
+        seen.push(task.get("kernel").and_then(Json::as_str).unwrap().to_string());
+    }
+    seen.sort();
+    assert_eq!(seen, vec!["axpy".to_string(), "dot".to_string()]);
+    std::fs::remove_dir_all(&dir).ok();
+}

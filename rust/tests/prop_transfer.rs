@@ -1,0 +1,187 @@
+//! Property tests for the fingerprint-similarity transfer engine,
+//! driven by the crate's deterministic RNG (no proptest in the pinned
+//! set): the similarity metric is a well-behaved kernel (symmetric,
+//! self-distance zero, bounded), and ranking puts near-identical
+//! platforms ahead of disjoint-ISA ones regardless of recorded speedup.
+
+use portatune::coordinator::perfdb::{DbEntry, Shard};
+use portatune::coordinator::platform::Fingerprint;
+use portatune::service::transfer::{rank_candidates, warm_start_configs};
+use portatune::util::rng::Rng;
+
+const ISA_POOL: &[&str] = &["sse2", "sse4_2", "avx", "avx2", "avx512f", "fma", "neon", "sve"];
+const CACHE_POOL: &[u64] = &[0, 16, 32, 48, 64, 256, 512, 1024, 2048, 8192, 33792];
+
+fn random_fingerprint(rng: &mut Rng) -> Fingerprint {
+    let n_isa = rng.gen_range(ISA_POOL.len() + 1);
+    let mut pool: Vec<&str> = ISA_POOL.to_vec();
+    rng.shuffle(&mut pool);
+    Fingerprint {
+        cpu_model: format!("CPU-{}", rng.gen_range(1000)),
+        num_cpus: 1 + rng.gen_range(128),
+        simd: pool[..n_isa].iter().map(|s| s.to_string()).collect(),
+        cache_l1d_kb: CACHE_POOL[rng.gen_range(CACHE_POOL.len())],
+        cache_l2_kb: CACHE_POOL[rng.gen_range(CACHE_POOL.len())],
+        cache_l3_kb: CACHE_POOL[rng.gen_range(CACHE_POOL.len())],
+        os: if rng.gen_range(4) == 0 { "macos".into() } else { "linux".into() },
+    }
+}
+
+fn entry(platform: &str, kernel: &str, tag: &str, id: &str, speedup: f64) -> DbEntry {
+    DbEntry {
+        platform_key: platform.into(),
+        kernel: kernel.into(),
+        tag: tag.into(),
+        best_params: [("block_size".to_string(), 256i64)].into_iter().collect(),
+        best_config_id: id.into(),
+        best_time_s: 1e-3,
+        baseline_time_s: 1e-3 * speedup,
+        reference_time_s: 9e-4,
+        evaluations: 4,
+        strategy: "exhaustive".into(),
+        recorded_at: 1_700_000_000,
+    }
+}
+
+#[test]
+fn prop_similarity_is_symmetric() {
+    let mut rng = Rng::new(0x5144);
+    for case in 0..500 {
+        let a = random_fingerprint(&mut rng);
+        let b = random_fingerprint(&mut rng);
+        let ab = a.similarity(&b);
+        let ba = b.similarity(&a);
+        assert!(
+            (ab - ba).abs() < 1e-12,
+            "case {case}: similarity asymmetric: {ab} vs {ba}\n a={a:?}\n b={b:?}"
+        );
+    }
+}
+
+#[test]
+fn prop_self_distance_is_exactly_zero() {
+    let mut rng = Rng::new(0xD15);
+    for case in 0..500 {
+        let a = random_fingerprint(&mut rng);
+        assert_eq!(a.similarity(&a), 1.0, "case {case}: self-similarity: {a:?}");
+        assert_eq!(a.distance(&a), 0.0, "case {case}: self-distance: {a:?}");
+    }
+}
+
+#[test]
+fn prop_similarity_is_bounded() {
+    let mut rng = Rng::new(0xB0);
+    for case in 0..500 {
+        let a = random_fingerprint(&mut rng);
+        let b = random_fingerprint(&mut rng);
+        let s = a.similarity(&b);
+        assert!((0.0..=1.0).contains(&s), "case {case}: out of range: {s}");
+    }
+}
+
+/// A near-identical platform's candidate must outrank a disjoint-ISA
+/// platform's, whatever speedups were recorded on either.
+#[test]
+fn prop_near_identical_outranks_disjoint_isa() {
+    let mut rng = Rng::new(0xAA);
+    for case in 0..200 {
+        let mut target = random_fingerprint(&mut rng);
+        // Ensure the target has a non-empty ISA so "disjoint" is
+        // meaningful (an empty-vs-empty comparison is a perfect match).
+        if target.simd.is_empty() {
+            target.simd = vec!["avx".into(), "avx2".into()];
+        }
+        target.os = "linux".into();
+
+        // Near-identical: same machine, one cache level nudged.
+        let mut near = target.clone();
+        near.cache_l2_kb = near.cache_l2_kb.max(256) * 2;
+
+        // Disjoint ISA, alien geometry, other OS.
+        let far = Fingerprint {
+            cpu_model: "Alien".into(),
+            num_cpus: target.num_cpus * 4 + 1,
+            simd: ISA_POOL
+                .iter()
+                .filter(|f| !target.simd.iter().any(|t| t == **f))
+                .map(|f| f.to_string())
+                .collect(),
+            cache_l1d_kb: 7,
+            cache_l2_kb: 0,
+            cache_l3_kb: 999_999,
+            os: "macos".into(),
+        };
+
+        let near_speedup = 1.0 + rng.next_f64();
+        let far_speedup = near_speedup + 1.0 + 8.0 * rng.next_f64(); // always higher
+        let shards = vec![
+            Shard {
+                platform_key: "far-box".into(),
+                fingerprint: Some(far),
+                entries: vec![entry("far-box", "axpy", "n4096", "far_cfg", far_speedup)],
+            },
+            Shard {
+                platform_key: "near-box".into(),
+                fingerprint: Some(near),
+                entries: vec![entry("near-box", "axpy", "n4096", "near_cfg", near_speedup)],
+            },
+        ];
+        let ranked = rank_candidates(&shards, &target, "axpy", "n4096", "local-key");
+        assert!(!ranked.is_empty(), "case {case}: near platform must contribute");
+        assert_eq!(
+            ranked[0].entry.best_config_id, "near_cfg",
+            "case {case}: disjoint-ISA platform outranked a near-identical one \
+             (near sim {:.3}, target {target:?})",
+            ranked[0].similarity
+        );
+    }
+}
+
+/// Ranking output invariants: similarity non-increasing, no duplicate
+/// config ids, excluded platform absent, cap respected.
+#[test]
+fn prop_ranking_invariants() {
+    let mut rng = Rng::new(0x1234);
+    for case in 0..100 {
+        let target = random_fingerprint(&mut rng);
+        let n_shards = 1 + rng.gen_range(8);
+        let mut shards = Vec::new();
+        for s in 0..n_shards {
+            let key = format!("box-{s}");
+            let n_entries = 1 + rng.gen_range(4);
+            let entries = (0..n_entries)
+                .map(|_| {
+                    entry(
+                        &key,
+                        "axpy",
+                        if rng.gen_range(2) == 0 { "n4096" } else { "n65536" },
+                        &format!("cfg_{}", rng.gen_range(6)),
+                        1.0 + rng.next_f64(),
+                    )
+                })
+                .collect();
+            let fingerprint =
+                if rng.gen_range(4) == 0 { None } else { Some(random_fingerprint(&mut rng)) };
+            shards.push(Shard { platform_key: key, fingerprint, entries });
+        }
+        let ranked = rank_candidates(&shards, &target, "axpy", "n4096", "box-0");
+        for w in ranked.windows(2) {
+            assert!(
+                w[0].similarity >= w[1].similarity,
+                "case {case}: ranking not sorted by similarity"
+            );
+        }
+        let mut ids: Vec<&str> =
+            ranked.iter().map(|c| c.entry.best_config_id.as_str()).collect();
+        ids.sort_unstable();
+        let before = ids.len();
+        ids.dedup();
+        assert_eq!(ids.len(), before, "case {case}: duplicate config ids in ranking");
+        assert!(
+            ranked.iter().all(|c| c.platform_key != "box-0"),
+            "case {case}: excluded platform leaked into ranking"
+        );
+        let capped = warm_start_configs(&ranked, 3);
+        assert!(capped.len() <= 3);
+    }
+}
