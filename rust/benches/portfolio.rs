@@ -1,0 +1,163 @@
+//! E5 — "A Few Fit Most" for dense GEMM: does a portfolio of K ≤ 4
+//! schedule configs retain ≥ 90% of per-shape-tuned performance across
+//! a shape sweep?
+//!
+//! Three series per shape, GFLOP/s:
+//! * **per-shape tuned** — the matrix minimum for that shape (what
+//!   exhaustive tuning of every shape individually delivers);
+//! * **portfolio** — the config the deployed feature selector
+//!   ([`Portfolio::select_for_dims`]) picks from the K-member
+//!   portfolio for that shape's dims;
+//! * **single default** — the naive un-tuned schedule everywhere.
+//!
+//! Fully hermetic (native GEMM, no XLA, no artifacts).  Also proves
+//! the serving story end to end: the sweep history and the portfolio
+//! are recorded into a temp shard store and an in-process [`Server`]
+//! answers a `portfolio` op for the recorded platform.
+//!
+//! Machine-readable tail: `JSON: {...}`.  Exits non-zero when the
+//! portfolio needs more than 4 configs or retains < 90% — these are
+//! acceptance criteria, not suggestions.
+//!
+//! Run: `cargo bench --bench portfolio` (BENCH_QUICK=1 to shrink).
+
+use portatune::coordinator::platform::Fingerprint;
+use portatune::coordinator::portfolio::{sweep_gemm, sweep_measure_cfg, Portfolio};
+use portatune::coordinator::selection::Tolerance;
+use portatune::report::Table;
+use portatune::service::{Request, ServeOpts, Server};
+use portatune::util::json::{self, Json};
+use portatune::workload::gemm;
+use portatune::coordinator::perfdb::ShardedDb;
+
+const K_MAX: usize = 4;
+const TARGET_RETAINED: f64 = 0.9;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let shapes = if quick { gemm::quick_sweep() } else { gemm::default_sweep() };
+    let host = Fingerprint::detect();
+    println!(
+        "portfolio bench — gemm, {} shapes x {} configs (quick={quick})",
+        shapes.len(),
+        gemm::configs().len()
+    );
+
+    let sweep = sweep_gemm(&shapes, &sweep_measure_cfg(quick), Tolerance::default(), 42, &host)?;
+    let matrix = &sweep.matrix;
+    let built = matrix.build_portfolio(K_MAX, TARGET_RETAINED)?;
+
+    // Column index per portfolio member, for cost lookups.
+    let member_col = |p: &Portfolio, config_id: &str| {
+        matrix.config_ids.iter().position(|id| id == config_id).unwrap_or_else(|| {
+            panic!("portfolio {} references unknown config {config_id}", p.kernel)
+        })
+    };
+
+    let mut t = Table::new(&[
+        "shape", "tuned cfg", "tuned", "portfolio cfg", "portfolio", "default", "retained",
+    ]);
+    let mut retained_selected_sum = 0.0;
+    let mut retained_default_sum = 0.0;
+    let gflops = |flops: u64, cost: f64| flops as f64 / cost / 1e9;
+    for (s, shape) in matrix.shapes.iter().enumerate() {
+        let (best_idx, best_cost) =
+            matrix.best_for_shape(s).expect("every shape has a finite winner");
+        let selected = built
+            .select_for_dims(&shape.dims, &host)
+            .expect("non-empty portfolio always selects");
+        let sel_cost = matrix.costs[s][member_col(&built, &selected.config_id)];
+        let default_cost = matrix.costs[s][sweep.default_index];
+        let retained = best_cost / sel_cost;
+        retained_selected_sum += retained;
+        retained_default_sum += best_cost / default_cost;
+        t.row(vec![
+            shape.tag.clone(),
+            matrix.config_ids[best_idx].clone(),
+            format!("{:.2}", gflops(shape.flops, best_cost)),
+            selected.config_id.clone(),
+            format!("{:.2}", gflops(shape.flops, sel_cost)),
+            format!("{:.2}", gflops(shape.flops, default_cost)),
+            format!("{:.0}%", retained * 100.0),
+        ]);
+    }
+    print!("{}", t.render());
+    let nshapes = matrix.shapes.len() as f64;
+    let retained_selected = retained_selected_sum / nshapes;
+    let retained_default = retained_default_sum / nshapes;
+    println!(
+        "portfolio: {} config(s) — builder retention {:.1}%, deployed-selector retention {:.1}%, \
+         single-default retention {:.1}%",
+        built.len(),
+        built.retained * 100.0,
+        retained_selected * 100.0,
+        retained_default * 100.0
+    );
+
+    // Serving story: record history + portfolio, ask the daemon core.
+    let dir = std::env::temp_dir().join(format!("portatune-pfbench-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let db = ShardedDb::open(&dir)?;
+    let key = host.key();
+    db.record_many(&key, Some(&host), sweep.entries(&key, "sweep-exhaustive"))?;
+    db.record_portfolio(&key, Some(&host), built.clone())?;
+    let server = Server::new(db, host.clone(), ServeOpts::default());
+    let reply = server.handle_request(&Request::Portfolio {
+        platform: None, // daemon resolves to its own host key
+        kernel: gemm::KERNEL.to_string(),
+        dims: Some(matrix.shapes[0].dims.clone()),
+        fingerprint: None,
+    });
+    let serve_ok = reply.get("ok").and_then(Json::as_bool) == Some(true)
+        && reply.get("source").and_then(Json::as_str) == Some("exact")
+        && reply.get("selected").and_then(|s| s.get("config_id")).is_some();
+    println!(
+        "serve: portfolio op for recorded platform -> source={} selected={}",
+        reply.get("source").and_then(Json::as_str).unwrap_or("?"),
+        reply
+            .get("selected")
+            .and_then(|s| s.get("config_id"))
+            .and_then(Json::as_str)
+            .unwrap_or("?")
+    );
+    std::fs::remove_dir_all(&dir).ok();
+
+    let record = json::obj(vec![
+        ("shapes", json::int(matrix.shapes.len() as i64)),
+        ("configs", json::int(matrix.configs.len() as i64)),
+        ("k", json::int(built.len() as i64)),
+        ("k_max", json::int(K_MAX as i64)),
+        ("retained", json::num(built.retained)),
+        ("retained_selected", json::num(retained_selected)),
+        ("retained_default", json::num(retained_default)),
+        (
+            "portfolio_over_default",
+            json::num(retained_selected / retained_default.max(1e-12)),
+        ),
+        ("serve_portfolio_ok", Json::Bool(serve_ok)),
+    ]);
+    println!("JSON: {}", record.compact());
+
+    let mut failed = false;
+    if built.len() > K_MAX {
+        println!("FAIL: portfolio has {} configs (cap {K_MAX})", built.len());
+        failed = true;
+    }
+    if built.retained < TARGET_RETAINED {
+        println!(
+            "FAIL: portfolio retains {:.1}% of per-shape-tuned performance \
+             (acceptance bar: >= {:.0}%)",
+            built.retained * 100.0,
+            TARGET_RETAINED * 100.0
+        );
+        failed = true;
+    }
+    if !serve_ok {
+        println!("FAIL: serve daemon did not answer the portfolio op with an exact selection");
+        failed = true;
+    }
+    if failed {
+        std::process::exit(1);
+    }
+    Ok(())
+}

@@ -34,10 +34,13 @@ use super::spec::TuningSpec;
 /// A parsed `tune` annotation block.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Annotation {
+    /// Kernel family the block tunes.
     pub kernel: String,
     /// Optional workload tag the block binds to (`None` = any workload).
     pub workload: Option<String>,
+    /// Declared parameter domains.
     pub params: Vec<ParamDef>,
+    /// Constraint strings over params and dims.
     pub constraints: Vec<String>,
     /// Requested search strategy name (exhaustive/random/hillclimb/anneal/genetic).
     pub search: Option<String>,

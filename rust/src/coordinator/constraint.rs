@@ -29,9 +29,18 @@ pub type Env = BTreeMap<String, i64>;
 /// Errors from parsing or evaluating a constraint.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ConstraintError {
-    Parse { offset: usize, message: String },
+    /// The source string is not a valid expression.
+    Parse {
+        /// Byte offset of the failure.
+        offset: usize,
+        /// What was expected.
+        message: String,
+    },
+    /// An identifier was neither a parameter nor a workload dim.
     UnknownIdent(String),
+    /// Division or modulo by zero during evaluation.
     DivByZero,
+    /// 64-bit integer overflow during evaluation.
     Overflow,
 }
 
@@ -53,32 +62,53 @@ impl std::error::Error for ConstraintError {}
 /// A parsed constraint expression (reusable across evaluations).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Expr {
+    /// Integer literal.
     Int(i64),
+    /// Parameter or dim reference.
     Ident(String),
+    /// Unary operator application.
     Unary(UnaryOp, Box<Expr>),
+    /// Binary operator application.
     Binary(BinOp, Box<Expr>, Box<Expr>),
 }
 
+/// Unary operators of the constraint grammar.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum UnaryOp {
+    /// Arithmetic negation (`-x`).
     Neg,
+    /// Logical not (`!x`, 0/1 semantics).
     Not,
 }
 
+/// Binary operators of the constraint grammar (C-style precedence).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BinOp {
+    /// `+`
     Add,
+    /// `-`
     Sub,
+    /// `*`
     Mul,
+    /// `/` (integer division; zero divisor errors)
     Div,
+    /// `%` (zero divisor errors)
     Mod,
+    /// `==`
     Eq,
+    /// `!=`
     Ne,
+    /// `<=`
     Le,
+    /// `>=`
     Ge,
+    /// `<`
     Lt,
+    /// `>`
     Gt,
+    /// `&&` (0/1 semantics)
     And,
+    /// `||` (0/1 semantics)
     Or,
 }
 

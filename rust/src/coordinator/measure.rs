@@ -148,6 +148,29 @@ fn timed_samples(
     Ok(samples)
 }
 
+/// Measure an arbitrary host-side computation under the same timing
+/// protocol as artifact execution (warmup, adaptive extension, outlier
+/// rejection).  The native workload families (GEMM) route their sweep
+/// measurements through this so artifact-backed and host-side timings
+/// are directly comparable.  The closure must keep its result
+/// observable (e.g. `std::hint::black_box` the output buffer) so the
+/// optimizer cannot delete the work being timed.
+pub fn measure_host(
+    run: &mut dyn FnMut() -> Result<()>,
+    cfg: &MeasureConfig,
+) -> Result<Measurement> {
+    for _ in 0..cfg.warmup {
+        run()?;
+    }
+    let mut samples = Vec::with_capacity(cfg.reps);
+    while !sampling_done(&samples, cfg) {
+        let t0 = Instant::now();
+        run()?;
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    summarize(samples, cfg)
+}
+
 /// Measure one executable over fixed inputs.
 pub fn measure(
     exe: &Executable,
@@ -209,6 +232,7 @@ pub struct RaceOutcome {
     /// Per-lane summaries, input order; `None` when a lane produced no
     /// usable samples (sampler error before its first repetition).
     pub measurements: Vec<Option<Measurement>>,
+    /// Per-lane sampling records, input order.
     pub lanes: Vec<Lane>,
     /// Lane index with the smallest final median, if any lane finished.
     pub winner: Option<usize>,
@@ -499,6 +523,27 @@ mod tests {
         for lane in &out.lanes {
             assert!(lane.samples.len() >= c.race_min_reps);
         }
+    }
+
+    #[test]
+    fn measure_host_obeys_the_sampling_protocol() {
+        let mut calls = 0usize;
+        let c = MeasureConfig { warmup: 2, target_rel_spread: 1.0, ..cfg() };
+        let mut run = || {
+            calls += 1;
+            std::hint::black_box(calls);
+            Ok(())
+        };
+        let m = measure_host(&mut run, &c).unwrap();
+        assert!(m.samples.len() >= c.reps && m.samples.len() <= c.max_reps);
+        assert_eq!(calls, c.warmup + m.samples.len(), "warmups run untimed before sampling");
+        assert!(m.cost() >= 0.0);
+    }
+
+    #[test]
+    fn measure_host_propagates_errors() {
+        let mut run = || Err(anyhow::anyhow!("boom"));
+        assert!(measure_host(&mut run, &cfg()).is_err());
     }
 
     #[test]

@@ -12,6 +12,7 @@ pub mod constraint;
 pub mod measure;
 pub mod perfdb;
 pub mod platform;
+pub mod portfolio;
 pub mod search;
 pub mod selection;
 pub mod spec;

@@ -31,16 +31,22 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::coordinator::platform::Fingerprint;
+use crate::coordinator::portfolio::Portfolio;
 use crate::coordinator::spec::Config;
 use crate::util::json::{self, Json};
 
 /// One tuning record.
 #[derive(Debug, Clone, PartialEq)]
 pub struct DbEntry {
+    /// Platform key the measurements were taken under.
     pub platform_key: String,
+    /// Kernel family.
     pub kernel: String,
+    /// Workload tag.
     pub tag: String,
+    /// Winning parameter assignment.
     pub best_params: Config,
+    /// Winning config id (`"baseline"` when nothing beat it).
     pub best_config_id: String,
     /// Median seconds of the winning variant.
     pub best_time_s: f64,
@@ -58,6 +64,7 @@ pub struct DbEntry {
 }
 
 impl DbEntry {
+    /// Baseline time over best time (1.0 when degenerate).
     pub fn speedup(&self) -> f64 {
         if self.best_time_s > 0.0 {
             self.baseline_time_s / self.best_time_s
@@ -238,14 +245,17 @@ impl PerfDb {
         })
     }
 
+    /// Every in-memory entry.
     pub fn entries(&self) -> &[DbEntry] {
         &self.entries
     }
 
+    /// Number of in-memory entries.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    /// Whether the DB holds no entries.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }
@@ -450,6 +460,7 @@ impl Drop for FileLock {
 /// plus the full history of tuning records made on it.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Shard {
+    /// The platform this shard belongs to.
     pub platform_key: String,
     /// Recorded by the daemon / tuner when the platform was live;
     /// `None` for entries imported from a v1 file (the fingerprint was
@@ -458,11 +469,24 @@ pub struct Shard {
     pub fingerprint: Option<Fingerprint>,
     /// Every record ever made, not just the newest per key.
     pub entries: Vec<DbEntry>,
+    /// Built variant portfolios, at most one per kernel (newest wins).
+    /// Absent in pre-portfolio shard files; parsing defaults to empty.
+    pub portfolios: Vec<Portfolio>,
 }
 
 impl Shard {
     fn new(platform_key: &str) -> Shard {
-        Shard { platform_key: platform_key.to_string(), fingerprint: None, entries: Vec::new() }
+        Shard {
+            platform_key: platform_key.to_string(),
+            fingerprint: None,
+            entries: Vec::new(),
+            portfolios: Vec::new(),
+        }
+    }
+
+    /// The platform's portfolio for a kernel, if one was built.
+    pub fn portfolio(&self, kernel: &str) -> Option<&Portfolio> {
+        self.portfolios.iter().find(|p| p.kernel == kernel)
     }
 
     /// Newest entry for a (kernel, workload).
@@ -512,6 +536,10 @@ impl Shard {
                 self.fingerprint.as_ref().map(Fingerprint::to_json).unwrap_or(Json::Null),
             ),
             ("entries", Json::Arr(self.entries.iter().map(DbEntry::to_json).collect())),
+            (
+                "portfolios",
+                Json::Arr(self.portfolios.iter().map(Portfolio::to_json).collect()),
+            ),
         ])
         .pretty()
     }
@@ -541,7 +569,16 @@ impl Shard {
             .iter()
             .map(DbEntry::from_json)
             .collect::<Result<Vec<_>>>()?;
-        Ok(Shard { platform_key, fingerprint, entries })
+        // Optional for backward compatibility: shards written before
+        // the portfolio subsystem simply have none.
+        let portfolios = match root.get("portfolios") {
+            Some(Json::Arr(items)) => items
+                .iter()
+                .map(Portfolio::from_json)
+                .collect::<Result<Vec<_>>>()?,
+            _ => Vec::new(),
+        };
+        Ok(Shard { platform_key, fingerprint, entries, portfolios })
     }
 }
 
@@ -566,6 +603,7 @@ impl ShardedDb {
         Ok(ShardedDb { dir })
     }
 
+    /// The shard directory.
     pub fn dir(&self) -> &Path {
         &self.dir
     }
@@ -695,6 +733,48 @@ impl ShardedDb {
     /// Exact lookup: newest record for (platform, kernel, workload).
     pub fn lookup(&self, platform_key: &str, kernel: &str, tag: &str) -> Result<Option<DbEntry>> {
         Ok(self.load(platform_key)?.and_then(|s| s.latest(kernel, tag).cloned()))
+    }
+
+    /// Persist a built portfolio into its platform's shard (replacing
+    /// any previous portfolio for the same kernel), under the same
+    /// lock + read-merge-rename protocol as entry writes — concurrent
+    /// entry recorders lose nothing.
+    pub fn record_portfolio(
+        &self,
+        platform_key: &str,
+        fingerprint: Option<&Fingerprint>,
+        portfolio: Portfolio,
+    ) -> Result<()> {
+        let path = self.shard_path(platform_key);
+        locked_commit(&path, path.with_extension("lock"), || {
+            let mut shard = if path.exists() {
+                let text = std::fs::read_to_string(&path)
+                    .with_context(|| format!("reading shard {}", path.display()))?;
+                let shard = Shard::parse(&text)?;
+                anyhow::ensure!(
+                    shard.platform_key == platform_key,
+                    "shard {} belongs to platform {:?}, not {:?}",
+                    path.display(),
+                    shard.platform_key,
+                    platform_key
+                );
+                shard
+            } else {
+                Shard::new(platform_key)
+            };
+            if let Some(fp) = fingerprint {
+                shard.fingerprint = Some(fp.clone());
+            }
+            shard.portfolios.retain(|p| p.kernel != portfolio.kernel);
+            shard.portfolios.push(portfolio.clone());
+            shard.portfolios.sort_by(|a, b| a.kernel.cmp(&b.kernel));
+            Ok(shard.to_json_text())
+        })
+    }
+
+    /// The stored portfolio for (platform, kernel), if any.
+    pub fn portfolio(&self, platform_key: &str, kernel: &str) -> Result<Option<Portfolio>> {
+        Ok(self.load(platform_key)?.and_then(|s| s.portfolio(kernel).cloned()))
     }
 
     /// Migrate a v1 single-file DB into shards: one locked bulk write
@@ -973,6 +1053,75 @@ mod tests {
         w2.save().unwrap();
         let on_disk = PerfDb::open(&path).unwrap();
         assert_eq!(on_disk.lookup("p1", "axpy", "n4096").unwrap().best_config_id, "newer");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    fn test_portfolio(kernel: &str, id: &str) -> Portfolio {
+        use crate::coordinator::portfolio::{PortfolioItem, FEATURE_NAMES};
+        Portfolio {
+            kernel: kernel.into(),
+            strategy: "greedy-cover".into(),
+            k_max: 4,
+            retained: 0.95,
+            built_at: 1_700_000_000,
+            feature_names: FEATURE_NAMES.iter().map(|s| s.to_string()).collect(),
+            items: vec![PortfolioItem {
+                config: [("tile_m".to_string(), 32i64)].into_iter().collect(),
+                config_id: id.into(),
+                centroid: vec![5.0, 5.0, 5.0, 1.0, -2.0],
+                covered: vec!["m32n32k32".into()],
+            }],
+        }
+    }
+
+    #[test]
+    fn shard_persists_portfolios_alongside_entries() {
+        let dir = tmp_dir("portfolio");
+        let db = ShardedDb::open(&dir).unwrap();
+        db.record(None, entry("p1", "gemm", "m32n32k32", "o1_tm32_tn32_u4", 1.4)).unwrap();
+        db.record_portfolio("p1", None, test_portfolio("gemm", "o1_tm32_tn32_u4")).unwrap();
+        let shard = db.load("p1").unwrap().unwrap();
+        assert_eq!(shard.entries.len(), 1, "entries survive a portfolio write");
+        assert_eq!(shard.portfolio("gemm").unwrap().items[0].config_id, "o1_tm32_tn32_u4");
+        assert!(shard.portfolio("axpy").is_none());
+        let direct = db.portfolio("p1", "gemm").unwrap().unwrap();
+        assert_eq!(direct.retained, 0.95);
+        assert!(db.portfolio("p1", "axpy").unwrap().is_none());
+        assert!(db.portfolio("nobody", "gemm").unwrap().is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn portfolio_rewrite_replaces_same_kernel_only() {
+        let dir = tmp_dir("portfolio-replace");
+        let db = ShardedDb::open(&dir).unwrap();
+        db.record_portfolio("p1", None, test_portfolio("gemm", "old")).unwrap();
+        db.record_portfolio("p1", None, test_portfolio("axpy", "other")).unwrap();
+        db.record_portfolio("p1", None, test_portfolio("gemm", "new")).unwrap();
+        let shard = db.load("p1").unwrap().unwrap();
+        assert_eq!(shard.portfolios.len(), 2, "one portfolio per kernel");
+        assert_eq!(shard.portfolio("gemm").unwrap().items[0].config_id, "new");
+        assert_eq!(shard.portfolio("axpy").unwrap().items[0].config_id, "other");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn pre_portfolio_shard_files_still_parse() {
+        let dir = tmp_dir("portfolio-compat");
+        let db = ShardedDb::open(&dir).unwrap();
+        db.record(None, entry("p1", "axpy", "n4096", "b256_u1", 1.1)).unwrap();
+        // Strip the portfolios key, simulating a shard written by the
+        // pre-portfolio daemon.
+        let path = db.shard_path("p1");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let mut root = json::parse(&text).unwrap();
+        if let Json::Obj(map) = &mut root {
+            map.remove("portfolios");
+        }
+        std::fs::write(&path, root.pretty()).unwrap();
+        let shard = db.load("p1").unwrap().unwrap();
+        assert!(shard.portfolios.is_empty());
+        assert_eq!(shard.entries.len(), 1);
         std::fs::remove_dir_all(&dir).ok();
     }
 

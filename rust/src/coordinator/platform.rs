@@ -16,14 +16,19 @@ use crate::util::json::{self, Json};
 /// A platform's identity for tuning purposes.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Fingerprint {
+    /// CPU model string from /proc/cpuinfo (or "unknown").
     pub cpu_model: String,
+    /// Logical processor count (min 1).
     pub num_cpus: usize,
     /// SIMD ISA levels present (subset of sse2/sse4_2/avx/avx2/avx512f).
     pub simd: Vec<String>,
     /// L1d/L2/L3 sizes in KiB (0 = unknown).
     pub cache_l1d_kb: u64,
+    /// L2 size in KiB (0 = unknown).
     pub cache_l2_kb: u64,
+    /// L3 size in KiB (0 = unknown).
     pub cache_l3_kb: u64,
+    /// Operating system (`std::env::consts::OS`).
     pub os: String,
 }
 

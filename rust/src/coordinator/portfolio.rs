@@ -1,0 +1,786 @@
+//! Variant portfolios — the "A Few Fit Most" result as a subsystem.
+//!
+//! Per-shape tuning finds the best schedule for every problem shape,
+//! but shipping one tuned config per shape is operationally heavy:
+//! Hochgraf & Pai (2025) show a *small portfolio* of tuned variants
+//! covers most workload shapes nearly as well as per-shape tuning.
+//! This module turns a tuning sweep into that portfolio:
+//!
+//! 1. **Sweep** ([`sweep_gemm`]) — measure every schedule config on
+//!    every shape of a sweep (correctness-gated against the naive
+//!    reference), producing a [`CostMatrix`];
+//! 2. **Build** ([`CostMatrix::build_portfolio`]) — greedy set-cover:
+//!    add the config that most improves mean retained performance
+//!    (per-shape-best time ÷ portfolio-best time) until the target
+//!    retention is reached or `k_max` configs are chosen;
+//! 3. **Select** ([`Portfolio::select`]) — at deploy time, pick the
+//!    portfolio member whose covered-shape feature centroid (log dims,
+//!    density, footprint-vs-cache pressure) is nearest the incoming
+//!    workload's features.
+//!
+//! Portfolios persist in the perf-DB shards
+//! ([`crate::coordinator::perfdb::ShardedDb::record_portfolio`]) and
+//! are served (and transfer-ranked for unseen platforms) by the
+//! `portfolio` op of the serve protocol.
+//!
+//! By construction the portfolio can never *beat* per-shape tuning:
+//! every retained ratio divides the per-shape minimum by a cost drawn
+//! from the same measured matrix, so `retained <= 1.0` always — the
+//! property test in `tests/prop_portfolio.rs` pins this down.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::measure::{measure_host, MeasureConfig};
+use crate::coordinator::perfdb::{unix_now, DbEntry};
+use crate::coordinator::platform::Fingerprint;
+use crate::coordinator::selection::{check_outputs, Tolerance};
+use crate::coordinator::spec::Config;
+use crate::util::json::{self, Json};
+use crate::workload::gemm::{self, GemmShape};
+
+/// Names of the workload-feature vector components, in order.  Stored
+/// with every portfolio so build-time and deploy-time feature vectors
+/// can never silently disagree.
+pub const FEATURE_NAMES: [&str; 5] =
+    ["log_m", "log_n", "log_k", "density", "cache_pressure"];
+
+/// Feature vector for a dense workload: log2 of the m/n/k dims, the
+/// nonzero density (1.0 for dense GEMM), and cache pressure — log2 of
+/// the operand footprint relative to the platform's total cache.  The
+/// last component is what lets selection distinguish "fits in L2" from
+/// "streams through memory" shapes on the *deploying* machine.
+pub fn features_for(dims: &BTreeMap<String, i64>, density: f64, fp: &Fingerprint) -> Vec<f64> {
+    let dim = |name: &str| dims.get(name).copied().unwrap_or(1).max(1) as f64;
+    let (m, n, k) = (dim("m"), dim("n"), dim("k"));
+    let footprint = 4.0 * (m * k + k * n + m * n);
+    let cache_kb = (fp.cache_l1d_kb + fp.cache_l2_kb + fp.cache_l3_kb).max(1) as f64;
+    vec![
+        m.log2(),
+        n.log2(),
+        k.log2(),
+        density,
+        (footprint / (cache_kb * 1024.0)).log2(),
+    ]
+}
+
+/// One shape of a sweep: identity, dims, flop count, and its feature
+/// vector (computed against the build platform's cache geometry).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShapePoint {
+    /// Workload tag (perf-DB key), e.g. `m128n128k64`.
+    pub tag: String,
+    /// Dimension map (`m`/`n`/`k` for GEMM).
+    pub dims: BTreeMap<String, i64>,
+    /// Flop count of one execution (for GFLOP/s reporting).
+    pub flops: u64,
+    /// Feature vector in [`FEATURE_NAMES`] order.
+    pub features: Vec<f64>,
+}
+
+/// The measured (shape × config) cost matrix a sweep produces — the
+/// tuning history the portfolio builder clusters.
+#[derive(Debug, Clone)]
+pub struct CostMatrix {
+    /// Kernel family the matrix was measured for.
+    pub kernel: String,
+    /// Swept shapes, row order.
+    pub shapes: Vec<ShapePoint>,
+    /// Schedule configs, column order.
+    pub configs: Vec<Config>,
+    /// Config ids matching [`configs`](Self::configs).
+    pub config_ids: Vec<String>,
+    /// `costs[shape][config]` median seconds; `f64::INFINITY` marks a
+    /// gate failure or measurement error.
+    pub costs: Vec<Vec<f64>>,
+}
+
+impl CostMatrix {
+    /// Index and cost of the per-shape winner (`None` if every config
+    /// failed on that shape).
+    pub fn best_for_shape(&self, shape_idx: usize) -> Option<(usize, f64)> {
+        self.costs[shape_idx]
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.is_finite())
+            .min_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, c)| (i, *c))
+    }
+
+    /// Mean retained performance of a candidate portfolio (config
+    /// column indices): for each shape, per-shape-best time divided by
+    /// the best time any member achieves, averaged over shapes.  1.0 ⇒
+    /// the portfolio matches per-shape tuning everywhere.
+    pub fn retained_with(&self, members: &[usize]) -> f64 {
+        if self.shapes.is_empty() || members.is_empty() {
+            return 0.0;
+        }
+        let mut total = 0.0;
+        for s in 0..self.shapes.len() {
+            let Some((_, best)) = self.best_for_shape(s) else { continue };
+            let member_best = members
+                .iter()
+                .map(|&c| self.costs[s][c])
+                .fold(f64::INFINITY, f64::min);
+            total += if member_best.is_finite() { best / member_best } else { 0.0 };
+        }
+        total / self.shapes.len() as f64
+    }
+
+    /// Greedy set-cover portfolio construction (see module docs).
+    /// Stops as soon as mean retention reaches `target` or `k_max`
+    /// members are chosen.  Errors when the matrix is empty or no
+    /// config is finite anywhere.
+    pub fn build_portfolio(&self, k_max: usize, target: f64) -> Result<Portfolio> {
+        anyhow::ensure!(k_max >= 1, "portfolio needs k_max >= 1");
+        anyhow::ensure!(!self.shapes.is_empty(), "cannot build a portfolio from zero shapes");
+        anyhow::ensure!(
+            (0..self.shapes.len()).any(|s| self.best_for_shape(s).is_some()),
+            "every config failed on every shape"
+        );
+
+        let mut members: Vec<usize> = Vec::new();
+        while members.len() < k_max {
+            let current = self.retained_with(&members);
+            // Pick the config whose addition maximizes retention.
+            let next = (0..self.configs.len())
+                .filter(|c| !members.contains(c))
+                .map(|c| {
+                    let mut trial = members.clone();
+                    trial.push(c);
+                    (c, self.retained_with(&trial))
+                })
+                .max_by(|a, b| a.1.total_cmp(&b.1));
+            let Some((c, gained)) = next else { break };
+            if !members.is_empty() && gained <= current {
+                break; // no config improves coverage further
+            }
+            members.push(c);
+            if gained >= target {
+                break;
+            }
+        }
+
+        // Assign each shape to its best member (its "cluster"), then
+        // summarize each member by the feature centroid of the shapes
+        // it covers.  Members covering nothing are dropped.
+        let mut covered: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for s in 0..self.shapes.len() {
+            let winner = members
+                .iter()
+                .copied()
+                .filter(|&c| self.costs[s][c].is_finite())
+                .min_by(|&x, &y| self.costs[s][x].total_cmp(&self.costs[s][y]));
+            if let Some(c) = winner {
+                covered.entry(c).or_default().push(s);
+            }
+        }
+        let items: Vec<PortfolioItem> = covered
+            .iter()
+            .map(|(&c, shape_idxs)| {
+                let dim = self.shapes[shape_idxs[0]].features.len();
+                let mut centroid = vec![0.0; dim];
+                for &s in shape_idxs {
+                    for (acc, f) in centroid.iter_mut().zip(&self.shapes[s].features) {
+                        *acc += f;
+                    }
+                }
+                for f in centroid.iter_mut() {
+                    *f /= shape_idxs.len() as f64;
+                }
+                PortfolioItem {
+                    config: self.configs[c].clone(),
+                    config_id: self.config_ids[c].clone(),
+                    centroid,
+                    covered: shape_idxs.iter().map(|&s| self.shapes[s].tag.clone()).collect(),
+                }
+            })
+            .collect();
+        let final_members: Vec<usize> = covered.keys().copied().collect();
+        Ok(Portfolio {
+            kernel: self.kernel.clone(),
+            strategy: "greedy-cover".to_string(),
+            k_max,
+            retained: self.retained_with(&final_members),
+            built_at: unix_now(),
+            feature_names: FEATURE_NAMES.iter().map(|s| s.to_string()).collect(),
+            items,
+        })
+    }
+}
+
+/// One member of a portfolio: a schedule config plus the feature
+/// centroid of the sweep shapes it won, which is its selector at
+/// deploy time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PortfolioItem {
+    /// The schedule parameters.
+    pub config: Config,
+    /// Stable config id (`o1_tm32_tn128_u4` style).
+    pub config_id: String,
+    /// Mean feature vector of the shapes this member covers.
+    pub centroid: Vec<f64>,
+    /// Tags of the sweep shapes this member won.
+    pub covered: Vec<String>,
+}
+
+/// A built portfolio: K ≤ `k_max` schedule configs that together
+/// retain `retained` of per-shape-tuned performance over the sweep.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Portfolio {
+    /// Kernel family this portfolio serves.
+    pub kernel: String,
+    /// Construction algorithm (`greedy-cover`).
+    pub strategy: String,
+    /// The size cap the builder ran with.
+    pub k_max: usize,
+    /// Mean retained fraction of per-shape-tuned performance over the
+    /// build sweep (≤ 1.0 by construction).
+    pub retained: f64,
+    /// Unix seconds when built.
+    pub built_at: u64,
+    /// Feature-vector component names (build/deploy contract).
+    pub feature_names: Vec<String>,
+    /// The members, in config-enumeration order.
+    pub items: Vec<PortfolioItem>,
+}
+
+impl Portfolio {
+    /// Number of members.
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    /// Whether the portfolio has no members.
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Deploy-time selection: the member whose centroid is nearest (in
+    /// Euclidean feature distance) to the workload's feature vector.
+    pub fn select(&self, features: &[f64]) -> Option<&PortfolioItem> {
+        self.items
+            .iter()
+            .min_by(|a, b| {
+                dist2(&a.centroid, features).total_cmp(&dist2(&b.centroid, features))
+            })
+    }
+
+    /// Selection by raw dims: computes the feature vector against the
+    /// deploying platform's cache geometry first.  Returns `None` when
+    /// the portfolio's stored [`feature_names`](Self::feature_names)
+    /// disagree with this build's [`FEATURE_NAMES`] — comparing
+    /// centroids component-by-component against a differently-defined
+    /// feature vector would silently select the wrong member.
+    pub fn select_for_dims(
+        &self,
+        dims: &BTreeMap<String, i64>,
+        fp: &Fingerprint,
+    ) -> Option<&PortfolioItem> {
+        if !self.feature_names.iter().map(String::as_str).eq(FEATURE_NAMES) {
+            return None;
+        }
+        self.select(&features_for(dims, 1.0, fp))
+    }
+
+    /// JSON view (shard storage and the serve protocol's wire form).
+    pub fn to_json(&self) -> Json {
+        let items: Vec<Json> = self
+            .items
+            .iter()
+            .map(|item| {
+                json::obj(vec![
+                    ("config_id", json::s(&item.config_id)),
+                    (
+                        "params",
+                        Json::Obj(
+                            item.config
+                                .iter()
+                                .map(|(k, v)| (k.clone(), json::int(*v)))
+                                .collect(),
+                        ),
+                    ),
+                    (
+                        "centroid",
+                        Json::Arr(item.centroid.iter().map(|&f| json::num(f)).collect()),
+                    ),
+                    (
+                        "covered",
+                        Json::Arr(item.covered.iter().map(|t| json::s(t)).collect()),
+                    ),
+                ])
+            })
+            .collect();
+        json::obj(vec![
+            ("kernel", json::s(&self.kernel)),
+            ("strategy", json::s(&self.strategy)),
+            ("k_max", json::int(self.k_max as i64)),
+            ("retained", json::num(self.retained)),
+            ("built_at", json::int(self.built_at as i64)),
+            (
+                "feature_names",
+                Json::Arr(self.feature_names.iter().map(|n| json::s(n)).collect()),
+            ),
+            ("items", Json::Arr(items)),
+        ])
+    }
+
+    /// Parse the [`to_json`](Self::to_json) form.
+    pub fn from_json(v: &Json) -> Result<Portfolio> {
+        let gs = |k: &str| -> Result<String> {
+            v.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| anyhow::anyhow!("portfolio missing {k}"))
+        };
+        let items = v
+            .get("items")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("portfolio missing items"))?
+            .iter()
+            .map(|item| {
+                let config = item
+                    .get("params")
+                    .and_then(Json::as_obj)
+                    .ok_or_else(|| anyhow::anyhow!("portfolio item missing params"))?
+                    .iter()
+                    .map(|(k, val)| {
+                        val.as_i64()
+                            .map(|x| (k.clone(), x))
+                            .ok_or_else(|| anyhow::anyhow!("non-int param {k}"))
+                    })
+                    .collect::<Result<BTreeMap<_, _>>>()?;
+                let centroid = item
+                    .get("centroid")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow::anyhow!("portfolio item missing centroid"))?
+                    .iter()
+                    .map(|f| f.as_f64().ok_or_else(|| anyhow::anyhow!("non-num centroid")))
+                    .collect::<Result<Vec<_>>>()?;
+                let covered = item
+                    .get("covered")
+                    .and_then(Json::as_arr)
+                    .map(|a| {
+                        a.iter()
+                            .filter_map(Json::as_str)
+                            .map(str::to_string)
+                            .collect::<Vec<_>>()
+                    })
+                    .unwrap_or_default();
+                Ok(PortfolioItem {
+                    config,
+                    config_id: item
+                        .get("config_id")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow::anyhow!("portfolio item missing config_id"))?
+                        .to_string(),
+                    centroid,
+                    covered,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Portfolio {
+            kernel: gs("kernel")?,
+            strategy: gs("strategy")?,
+            k_max: v.get("k_max").and_then(Json::as_u64).unwrap_or(4) as usize,
+            retained: v
+                .get("retained")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("portfolio missing retained"))?,
+            built_at: v.get("built_at").and_then(Json::as_u64).unwrap_or(0),
+            // No default on absence: `to_json` always writes the field,
+            // so a portfolio without it was built under an UNKNOWN
+            // feature definition — assuming the current one would let
+            // `select_for_dims` compare centroids across contracts.
+            feature_names: v
+                .get("feature_names")
+                .and_then(Json::as_arr)
+                .map(|a| {
+                    a.iter()
+                        .filter_map(Json::as_str)
+                        .map(str::to_string)
+                        .collect::<Vec<_>>()
+                })
+                .ok_or_else(|| anyhow::anyhow!("portfolio missing feature_names"))?,
+            items,
+        })
+    }
+}
+
+fn dist2(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f64>()
+        + (a.len() as f64 - b.len() as f64).abs() * 1e9 // length mismatch = far
+}
+
+/// The result of a native GEMM sweep: the cost matrix plus the
+/// per-shape naive-reference timings and the default-schedule column.
+#[derive(Debug, Clone)]
+pub struct GemmSweep {
+    /// Measured (shape × config) costs.
+    pub matrix: CostMatrix,
+    /// Median seconds of the naive reference per shape (row order).
+    pub reference_s: Vec<f64>,
+    /// Column index of [`gemm::default_config`] in the matrix.
+    pub default_index: usize,
+}
+
+impl GemmSweep {
+    /// Per-shape [`DbEntry`] records (the tuning history the serve
+    /// daemon answers lookups from): best config per shape, with the
+    /// default schedule as the baseline comparator and the naive
+    /// reference as the reference timing.
+    pub fn entries(&self, platform_key: &str, strategy: &str) -> Vec<DbEntry> {
+        let now = unix_now();
+        self.matrix
+            .shapes
+            .iter()
+            .enumerate()
+            .filter_map(|(s, shape)| {
+                let (best_idx, best_cost) = self.matrix.best_for_shape(s)?;
+                let default_cost = self.matrix.costs[s][self.default_index];
+                let baseline = if default_cost.is_finite() {
+                    default_cost
+                } else {
+                    self.reference_s[s]
+                };
+                Some(DbEntry {
+                    platform_key: platform_key.to_string(),
+                    kernel: self.matrix.kernel.clone(),
+                    tag: shape.tag.clone(),
+                    best_params: self.matrix.configs[best_idx].clone(),
+                    best_config_id: self.matrix.config_ids[best_idx].clone(),
+                    best_time_s: best_cost,
+                    baseline_time_s: baseline,
+                    reference_time_s: self.reference_s[s],
+                    evaluations: self.matrix.configs.len() as u64,
+                    strategy: strategy.to_string(),
+                    recorded_at: now,
+                })
+            })
+            .collect()
+    }
+}
+
+/// Measurement profile for native sweeps: lighter than artifact tuning
+/// (the matrix is shapes × configs measurements) but still median-of-3
+/// with outlier rejection; `quick` drops to the smoke profile.
+pub fn sweep_measure_cfg(quick: bool) -> MeasureConfig {
+    if quick {
+        MeasureConfig::quick()
+    } else {
+        MeasureConfig {
+            warmup: 1,
+            reps: 3,
+            target_rel_spread: 0.5,
+            max_reps: 5,
+            outlier_k: 5.0,
+            race_min_reps: 2,
+        }
+    }
+}
+
+/// Measure the full GEMM schedule space over a shape sweep (see module
+/// docs).  Every config is gated against the naive reference before
+/// timing; gate failures and measurement errors record `INFINITY` and
+/// never poison the portfolio.  Deterministic inputs per (shape, seed).
+pub fn sweep_gemm(
+    shapes: &[GemmShape],
+    measure_cfg: &MeasureConfig,
+    tolerance: Tolerance,
+    seed: u64,
+    fp: &Fingerprint,
+) -> Result<GemmSweep> {
+    anyhow::ensure!(!shapes.is_empty(), "sweep needs at least one shape");
+    let spec = gemm::space();
+    let configs = spec.enumerate();
+    let config_ids: Vec<String> = configs.iter().map(|c| spec.config_id(c)).collect();
+    let default_id = spec.config_id(&gemm::default_config());
+    let default_index = config_ids
+        .iter()
+        .position(|id| *id == default_id)
+        .context("default config missing from the gemm space")?;
+
+    // The untimed gate/oracle executions double as warmup #1, exactly
+    // like the artifact pipeline's gate run (no work is executed just
+    // to be thrown away).
+    let post_gate = MeasureConfig {
+        warmup: measure_cfg.warmup.saturating_sub(1),
+        ..measure_cfg.clone()
+    };
+
+    let mut shape_points = Vec::with_capacity(shapes.len());
+    let mut costs = Vec::with_capacity(shapes.len());
+    let mut reference_s = Vec::with_capacity(shapes.len());
+    for &shape in shapes {
+        let (a, b) = gemm::inputs(shape, seed);
+        // The oracle computation is also the reference's first warmup.
+        let want = gemm::reference(&a, &b, shape);
+        let reference = measure_host(
+            &mut || {
+                let out = gemm::reference(&a, &b, shape);
+                std::hint::black_box(&out);
+                Ok(())
+            },
+            &post_gate,
+        )?;
+        reference_s.push(reference.cost());
+
+        let mut row = Vec::with_capacity(configs.len());
+        for config in &configs {
+            // Gate first: a wrong answer is infinitely expensive.  The
+            // gate execution is warmup #1 for the measurement below.
+            let got = gemm::run_config(&a, &b, shape, config);
+            if !check_outputs(&got, &want, tolerance).ok {
+                row.push(f64::INFINITY);
+                continue;
+            }
+            let measured = measure_host(
+                &mut || {
+                    let out = gemm::run_config(&a, &b, shape, config);
+                    std::hint::black_box(&out);
+                    Ok(())
+                },
+                &post_gate,
+            );
+            row.push(measured.map(|m| m.cost()).unwrap_or(f64::INFINITY));
+        }
+        costs.push(row);
+        shape_points.push(ShapePoint {
+            tag: shape.tag(),
+            dims: shape.dims(),
+            flops: shape.flops(),
+            features: features_for(&shape.dims(), 1.0, fp),
+        });
+    }
+
+    Ok(GemmSweep {
+        matrix: CostMatrix {
+            kernel: gemm::KERNEL.to_string(),
+            shapes: shape_points,
+            configs,
+            config_ids,
+            costs,
+        },
+        reference_s,
+        default_index,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fp() -> Fingerprint {
+        Fingerprint {
+            cpu_model: "Port CPU".into(),
+            num_cpus: 8,
+            simd: vec!["avx2".into()],
+            cache_l1d_kb: 32,
+            cache_l2_kb: 1024,
+            cache_l3_kb: 8192,
+            os: "linux".into(),
+        }
+    }
+
+    /// A synthetic 4-shape × 3-config matrix with known structure:
+    /// config 0 wins shapes 0/1, config 1 wins shapes 2/3, config 2 is
+    /// uniformly mediocre.
+    fn matrix() -> CostMatrix {
+        let shape = |tag: &str, m: i64, n: i64, k: i64| ShapePoint {
+            tag: tag.into(),
+            dims: [("m".to_string(), m), ("n".to_string(), n), ("k".to_string(), k)]
+                .into_iter()
+                .collect(),
+            flops: (2 * m * n * k) as u64,
+            features: features_for(
+                &[("m".to_string(), m), ("n".to_string(), n), ("k".to_string(), k)]
+                    .into_iter()
+                    .collect(),
+                1.0,
+                &fp(),
+            ),
+        };
+        let cfg = |o: i64| -> Config {
+            [
+                ("loop_order".to_string(), o),
+                ("tile_m".to_string(), 32i64),
+                ("tile_n".to_string(), 32i64),
+                ("unroll".to_string(), 1i64),
+            ]
+            .into_iter()
+            .collect()
+        };
+        CostMatrix {
+            kernel: "gemm".into(),
+            shapes: vec![
+                shape("m16n16k16", 16, 16, 16),
+                shape("m32n32k32", 32, 32, 32),
+                shape("m256n256k256", 256, 256, 256),
+                shape("m512n512k64", 512, 512, 64),
+            ],
+            configs: vec![cfg(0), cfg(1), cfg(2)],
+            config_ids: vec!["c0".into(), "c1".into(), "c2".into()],
+            costs: vec![
+                vec![1.0, 2.0, 1.5],
+                vec![1.0, 3.0, 1.5],
+                vec![4.0, 2.0, 3.0],
+                vec![5.0, 2.5, 4.0],
+            ],
+        }
+    }
+
+    #[test]
+    fn greedy_builder_covers_both_regimes() {
+        let m = matrix();
+        let p = m.build_portfolio(2, 1.0).unwrap();
+        assert_eq!(p.len(), 2);
+        let ids: Vec<&str> = p.items.iter().map(|i| i.config_id.as_str()).collect();
+        assert!(ids.contains(&"c0") && ids.contains(&"c1"), "{ids:?}");
+        assert!((p.retained - 1.0).abs() < 1e-12, "both regimes covered exactly");
+        // Small shapes cluster under c0, large under c1.
+        let c0 = p.items.iter().find(|i| i.config_id == "c0").unwrap();
+        assert_eq!(c0.covered, vec!["m16n16k16".to_string(), "m32n32k32".to_string()]);
+    }
+
+    #[test]
+    fn k1_portfolio_picks_the_best_single_cover() {
+        let m = matrix();
+        let p = m.build_portfolio(1, 1.0).unwrap();
+        assert_eq!(p.len(), 1);
+        // c1 retention: (1/2 + 1/3 + 2/2 + 2.5/2.5)/4 = 0.7083;
+        // c0: (1 + 1 + 2/4 + 2.5/5)/4 = 0.75; c2: (2/3 + 2/3 + 2/3 + 2.5/4)/4 < 0.7.
+        assert_eq!(p.items[0].config_id, "c0");
+        assert!(p.retained <= 1.0 + 1e-12);
+    }
+
+    #[test]
+    fn retention_is_monotone_in_k_and_bounded() {
+        let m = matrix();
+        let r1 = m.build_portfolio(1, 1.0).unwrap().retained;
+        let r2 = m.build_portfolio(2, 1.0).unwrap().retained;
+        let r3 = m.build_portfolio(3, 1.0).unwrap().retained;
+        assert!(r1 <= r2 + 1e-12 && r2 <= r3 + 1e-12);
+        assert!(r3 <= 1.0 + 1e-12);
+    }
+
+    #[test]
+    fn target_stops_growth_early() {
+        let m = matrix();
+        let p = m.build_portfolio(3, 0.5).unwrap();
+        assert_eq!(p.len(), 1, "0.5 retention is reachable with one config");
+    }
+
+    #[test]
+    fn selection_routes_shapes_to_their_cluster() {
+        let m = matrix();
+        let p = m.build_portfolio(2, 1.0).unwrap();
+        // A small workload selects the small-shape member.
+        let small = p.select(&m.shapes[0].features).unwrap();
+        assert_eq!(small.config_id, "c0");
+        let large = p.select(&m.shapes[2].features).unwrap();
+        assert_eq!(large.config_id, "c1");
+        // Dims-based selection agrees (same fingerprint).
+        let via_dims = p.select_for_dims(&m.shapes[2].dims, &fp()).unwrap();
+        assert_eq!(via_dims.config_id, "c1");
+    }
+
+    #[test]
+    fn foreign_feature_contract_refuses_dims_selection() {
+        let mut p = matrix().build_portfolio(2, 1.0).unwrap();
+        assert!(p.select_for_dims(&GemmShape::new(16, 16, 16).dims(), &fp()).is_some());
+        p.feature_names = vec!["log_m".into(), "something_else".into()];
+        assert!(
+            p.select_for_dims(&GemmShape::new(16, 16, 16).dims(), &fp()).is_none(),
+            "a portfolio built under a different feature contract must not select"
+        );
+        // Raw-feature selection stays available for callers that bring
+        // their own contract handling.
+        assert!(p.select(&[1.0; 5]).is_some());
+    }
+
+    #[test]
+    fn infinite_columns_are_never_selected_into_coverage() {
+        let mut m = matrix();
+        for row in m.costs.iter_mut() {
+            row[0] = f64::INFINITY; // c0 fails everywhere
+        }
+        let p = m.build_portfolio(2, 1.0).unwrap();
+        assert!(p.items.iter().all(|i| i.config_id != "c0"));
+        assert!(p.retained > 0.0);
+    }
+
+    #[test]
+    fn empty_and_degenerate_matrices_error() {
+        let mut m = matrix();
+        m.shapes.clear();
+        m.costs.clear();
+        assert!(m.build_portfolio(2, 0.9).is_err());
+        let mut dead = matrix();
+        for row in dead.costs.iter_mut() {
+            for c in row.iter_mut() {
+                *c = f64::INFINITY;
+            }
+        }
+        assert!(dead.build_portfolio(2, 0.9).is_err());
+        assert!(matrix().build_portfolio(0, 0.9).is_err());
+    }
+
+    #[test]
+    fn portfolio_json_round_trips() {
+        let p = matrix().build_portfolio(2, 1.0).unwrap();
+        let text = p.to_json().compact();
+        let back = Portfolio::from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, p);
+        assert!(Portfolio::from_json(&json::parse("{}").unwrap()).is_err());
+        // A portfolio without its feature contract was built under an
+        // unknown feature definition — refusing beats guessing.
+        let mut stripped = json::parse(&text).unwrap();
+        if let Json::Obj(map) = &mut stripped {
+            map.remove("feature_names");
+        }
+        assert!(Portfolio::from_json(&stripped).is_err());
+    }
+
+    #[test]
+    fn features_track_dims_and_cache_pressure() {
+        let f = fp();
+        let small = features_for(&GemmShape::new(16, 16, 16).dims(), 1.0, &f);
+        let large = features_for(&GemmShape::new(1024, 1024, 1024).dims(), 1.0, &f);
+        assert_eq!(small.len(), FEATURE_NAMES.len());
+        assert!(large[0] > small[0] && large[4] > small[4]);
+        let mut tiny_cache = f.clone();
+        tiny_cache.cache_l2_kb = 1;
+        tiny_cache.cache_l3_kb = 0;
+        tiny_cache.cache_l1d_kb = 1;
+        let pressured = features_for(&GemmShape::new(16, 16, 16).dims(), 1.0, &tiny_cache);
+        assert!(pressured[4] > small[4], "smaller cache raises pressure");
+    }
+
+    #[test]
+    fn quick_sweep_end_to_end_builds_a_valid_portfolio() {
+        let shapes = [GemmShape::new(12, 12, 12), GemmShape::new(24, 8, 16)];
+        let sweep = sweep_gemm(
+            &shapes,
+            &MeasureConfig::quick(),
+            Tolerance::default(),
+            7,
+            &fp(),
+        )
+        .unwrap();
+        assert_eq!(sweep.matrix.shapes.len(), 2);
+        assert_eq!(sweep.matrix.configs.len(), gemm::configs().len());
+        // Gates pass: at least one finite cost per shape.
+        for s in 0..2 {
+            assert!(sweep.matrix.best_for_shape(s).is_some());
+        }
+        let p = sweep.matrix.build_portfolio(4, 0.9).unwrap();
+        assert!(p.len() <= 4 && !p.is_empty());
+        assert!(p.retained <= 1.0 + 1e-12);
+        let entries = sweep.entries("test-platform", "sweep");
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].kernel, "gemm");
+        assert!(entries[0].best_time_s.is_finite());
+        assert!(entries[0].baseline_time_s >= entries[0].best_time_s);
+    }
+}

@@ -12,6 +12,7 @@ use crate::coordinator::spec::{Config, TuningSpec};
 use crate::util::rng::Rng;
 
 #[derive(Debug, Clone)]
+/// Simulated annealing over the neighbor move set (seeded).
 pub struct Anneal {
     seed: u64,
     /// Initial temperature (relative-slowdown units).
@@ -21,10 +22,12 @@ pub struct Anneal {
 }
 
 impl Anneal {
+    /// An annealer with the default temperature schedule.
     pub fn new(seed: u64) -> Anneal {
         Anneal { seed, t0: 0.35, alpha: 0.92 }
     }
 
+    /// An annealer with an explicit initial temperature and decay.
     pub fn with_schedule(seed: u64, t0: f64, alpha: f64) -> Anneal {
         assert!(t0 > 0.0 && alpha > 0.0 && alpha < 1.0, "bad annealing schedule");
         Anneal { seed, t0, alpha }

@@ -9,6 +9,7 @@ use super::{Budget, SearchResult, SearchStrategy};
 use crate::coordinator::spec::{Config, TuningSpec};
 
 #[derive(Debug, Default, Clone)]
+/// Deterministic full-space sweep in enumeration order.
 pub struct Exhaustive {
     /// Batch-mode state: the enumeration, materialized once.
     plan: Option<Vec<Config>>,
@@ -16,6 +17,7 @@ pub struct Exhaustive {
 }
 
 impl Exhaustive {
+    /// A fresh sweep.
     pub fn new() -> Exhaustive {
         Exhaustive::default()
     }

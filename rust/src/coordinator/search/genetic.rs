@@ -11,6 +11,8 @@ use crate::coordinator::spec::{Config, TuningSpec};
 use crate::util::rng::Rng;
 
 #[derive(Debug, Clone)]
+/// Generational genetic algorithm (tournament selection, uniform
+/// crossover, per-parameter mutation; seeded).
 pub struct Genetic {
     seed: u64,
     pop_size: usize,
@@ -23,10 +25,12 @@ pub struct Genetic {
 }
 
 impl Genetic {
+    /// A GA with the default population and mutation rate.
     pub fn new(seed: u64) -> Genetic {
         Genetic::with_params(seed, 8, 0.25)
     }
 
+    /// A GA with explicit population size and mutation rate.
     pub fn with_params(seed: u64, pop_size: usize, mutation_rate: f64) -> Genetic {
         assert!(pop_size >= 2, "population must be >= 2");
         assert!((0.0..=1.0).contains(&mutation_rate), "mutation_rate in [0,1]");

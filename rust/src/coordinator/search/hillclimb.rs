@@ -13,6 +13,7 @@ use crate::coordinator::spec::{Config, TuningSpec};
 use crate::util::rng::Rng;
 
 #[derive(Debug, Clone)]
+/// Greedy hill-climbing over one-step neighbors, with random restarts.
 pub struct HillClimb {
     seed: u64,
     max_restarts: usize,
@@ -26,10 +27,12 @@ pub struct HillClimb {
 }
 
 impl HillClimb {
+    /// A climber with the default restart budget.
     pub fn new(seed: u64) -> HillClimb {
         HillClimb::with_restarts(seed, 8)
     }
 
+    /// A climber with an explicit restart budget.
     pub fn with_restarts(seed: u64, max_restarts: usize) -> HillClimb {
         HillClimb {
             seed,

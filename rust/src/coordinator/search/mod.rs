@@ -4,7 +4,8 @@
 //! number of parameter variations ... a number of resulting code variants
 //! are compared"): exhaustive sweep, uniform random sampling, greedy
 //! hill-climbing with restarts, simulated annealing, and a genetic
-//! algorithm.  Every strategy operates through [`Budget`], which dedupes
+//! algorithm.  Every strategy operates through the crate-internal
+//! `Budget` wrapper, which dedupes
 //! repeated configurations (an evaluation = one compile+measure cycle, the
 //! expensive unit the budget must bound) and records the full history for
 //! the ablation benches.
@@ -34,7 +35,9 @@ use super::spec::{Config, TuningSpec};
 /// One recorded (config, cost) evaluation, in evaluation order.
 #[derive(Debug, Clone)]
 pub struct Evaluation {
+    /// The evaluated parameter assignment.
     pub config: Config,
+    /// Observed cost (seconds; +inf = gated/failed).
     pub cost: f64,
 }
 
@@ -48,6 +51,7 @@ pub struct SearchResult {
 }
 
 impl SearchResult {
+    /// Number of unique evaluations performed.
     pub fn evaluations(&self) -> usize {
         self.history.len()
     }
@@ -86,8 +90,11 @@ impl SearchResult {
 ///   default single-candidate implementation and are driven through
 ///   `run` instead.
 pub trait SearchStrategy {
+    /// Stable strategy name (CLI spelling, DB `strategy` field).
     fn name(&self) -> &'static str;
 
+    /// Sequential drive: explore `spec` within `budget` unique
+    /// evaluations, calling `eval` one configuration at a time.
     fn run(
         &mut self,
         spec: &TuningSpec,

@@ -11,6 +11,7 @@ use crate::coordinator::spec::{Config, TuningSpec};
 use crate::util::rng::Rng;
 
 #[derive(Debug, Clone)]
+/// Uniform random sampling of valid configs (seeded).
 pub struct RandomSearch {
     seed: u64,
     /// Batch-mode state: the seeded shuffle, materialized once.
@@ -19,6 +20,7 @@ pub struct RandomSearch {
 }
 
 impl RandomSearch {
+    /// A sampler with the given seed.
     pub fn new(seed: u64) -> RandomSearch {
         RandomSearch { seed, plan: None, cursor: 0 }
     }

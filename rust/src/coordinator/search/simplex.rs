@@ -15,6 +15,7 @@ use crate::coordinator::spec::{Config, TuningSpec};
 use crate::util::rng::Rng;
 
 #[derive(Debug, Clone)]
+/// Nelder–Mead simplex search adapted to the discrete index lattice.
 pub struct NelderMead {
     seed: u64,
     /// Reflection / expansion / contraction / shrink coefficients.
@@ -26,6 +27,7 @@ pub struct NelderMead {
 }
 
 impl NelderMead {
+    /// A simplex search with the given seed.
     pub fn new(seed: u64) -> NelderMead {
         NelderMead { seed, alpha: 1.0, gamma: 2.0, rho: 0.5, sigma: 0.5, max_restarts: 4 }
     }

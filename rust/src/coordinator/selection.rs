@@ -13,7 +13,9 @@ use crate::coordinator::spec::Config;
 /// Elementwise tolerance.
 #[derive(Debug, Clone, Copy)]
 pub struct Tolerance {
+    /// Relative tolerance (scaled by the reference magnitude).
     pub rtol: f64,
+    /// Absolute tolerance floor.
     pub atol: f64,
 }
 
@@ -28,11 +30,15 @@ impl Default for Tolerance {
 /// Outcome of comparing one variant's outputs against the reference.
 #[derive(Debug, Clone)]
 pub struct CorrectnessReport {
+    /// Did every element pass the tolerance?
     pub ok: bool,
+    /// Largest absolute error observed.
     pub max_abs_err: f64,
+    /// Largest relative error observed.
     pub max_rel_err: f64,
     /// Index of the worst element (for diagnostics).
     pub worst_index: usize,
+    /// Number of elements outside tolerance.
     pub mismatched: usize,
 }
 
@@ -86,9 +92,13 @@ pub fn check_outputs(candidate: &[f32], reference: &[f32], tol: Tolerance) -> Co
 /// A fully evaluated variant: identity, timing, correctness.
 #[derive(Debug, Clone)]
 pub struct RankedVariant {
+    /// The parameter assignment.
     pub config: Config,
+    /// Stable config id.
     pub config_id: String,
+    /// Timing result.
     pub measurement: Measurement,
+    /// Gate outcome vs the reference outputs.
     pub correctness: CorrectnessReport,
 }
 

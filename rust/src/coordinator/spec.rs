@@ -21,9 +21,13 @@ pub type Config = BTreeMap<String, i64>;
 /// The searchable space for one (kernel, workload) pair.
 #[derive(Debug, Clone)]
 pub struct TuningSpec {
+    /// Kernel family being tuned.
     pub kernel: String,
+    /// Workload tag being tuned.
     pub tag: String,
+    /// Parameter schemas, in declaration order (id/enumeration order).
     pub params: Vec<ParamDef>,
+    /// Workload dims visible to constraints.
     pub dims: BTreeMap<String, i64>,
     constraints: Vec<(String, Expr)>,
 }
@@ -74,6 +78,7 @@ impl TuningSpec {
         })
     }
 
+    /// The constraint source strings, in declaration order.
     pub fn constraint_srcs(&self) -> Vec<&str> {
         self.constraints.iter().map(|(s, _)| s.as_str()).collect()
     }

@@ -51,9 +51,13 @@ use crate::workload;
 /// One evaluated variant, as reported in a [`TuneOutcome`].
 #[derive(Debug, Clone)]
 pub struct VariantResult {
+    /// The parameter assignment.
     pub config: Config,
+    /// Stable config id.
     pub config_id: String,
+    /// Timing (None when compilation or execution failed outright).
     pub measurement: Option<Measurement>,
+    /// Gate outcome (None when the variant never executed).
     pub correctness: Option<CorrectnessReport>,
     /// Cost seen by the search (median seconds; +inf if gated/failed).
     pub cost: f64,
@@ -120,9 +124,13 @@ impl TuneStats {
 ///   correctness gate.
 #[derive(Debug)]
 pub struct TuneOutcome {
+    /// Kernel family tuned.
     pub kernel: String,
+    /// Workload tag tuned.
     pub tag: String,
+    /// Search strategy that drove the run.
     pub strategy: String,
+    /// The platform the measurements were taken on.
     pub platform: Fingerprint,
     /// Pure-XLA reference artifact timing.
     pub reference: Measurement,
@@ -135,8 +143,9 @@ pub struct TuneOutcome {
     pub evaluated: Vec<VariantResult>,
     /// Where the tuning time went (compile/measure/reps accounting).
     pub stats: TuneStats,
-    /// flops/bytes of the workload (for roofline reporting).
+    /// Flop count of the workload (for roofline reporting).
     pub flops: u64,
+    /// Bytes moved by the workload (for roofline reporting).
     pub bytes: u64,
 }
 
@@ -188,6 +197,7 @@ impl TuneOutcome {
         }
     }
 
+    /// Number of unique variant evaluations the search performed.
     pub fn evaluations(&self) -> usize {
         self.evaluated.len()
     }
@@ -196,8 +206,11 @@ impl TuneOutcome {
 /// Tuning driver bound to a registry.
 pub struct Tuner<'a> {
     registry: &'a Registry,
+    /// Timing-harness parameters for every measurement in the run.
     pub measure_cfg: MeasureConfig,
+    /// Correctness-gate tolerance vs the reference outputs.
     pub tolerance: Tolerance,
+    /// Seed for deterministic workload-input generation.
     pub input_seed: u64,
     /// Optional fixed candidate list evaluated before the strategy runs
     /// (perf-DB warm start).
@@ -210,6 +223,7 @@ pub struct Tuner<'a> {
 }
 
 impl<'a> Tuner<'a> {
+    /// A tuner with default measurement, tolerance, and serial drive.
     pub fn new(registry: &'a Registry) -> Tuner<'a> {
         Tuner {
             registry,
@@ -221,16 +235,19 @@ impl<'a> Tuner<'a> {
         }
     }
 
+    /// Builder: replace the measurement config.
     pub fn with_measure_cfg(mut self, cfg: MeasureConfig) -> Self {
         self.measure_cfg = cfg;
         self
     }
 
+    /// Builder: set the warm-start candidate list.
     pub fn with_warm_start(mut self, candidates: Vec<Config>) -> Self {
         self.warm_start = candidates;
         self
     }
 
+    /// Builder: set the per-round candidate batch size (min 1).
     pub fn with_batch(mut self, batch: usize) -> Self {
         self.batch = batch.max(1);
         self

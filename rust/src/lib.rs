@@ -28,6 +28,8 @@
 //! # anyhow::Ok(())
 //! ```
 
+#![warn(missing_docs)]
+
 pub mod coordinator;
 pub mod report;
 pub mod runtime;
@@ -56,6 +58,7 @@ pub mod prelude {
     pub use crate::coordinator::measure::{MeasureConfig, Measurement};
     pub use crate::coordinator::perfdb::{PerfDb, Shard, ShardedDb};
     pub use crate::coordinator::platform::Fingerprint;
+    pub use crate::coordinator::portfolio::{CostMatrix, Portfolio, PortfolioItem};
     pub use crate::coordinator::search::{
         Anneal, Exhaustive, Genetic, HillClimb, RandomSearch, SearchStrategy,
     };

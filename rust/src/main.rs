@@ -12,6 +12,8 @@
 //! portatune deploy --kernel K --workload T  artifact the current platform should run
 //! portatune annotate FILE                 parse /*@ tune ... @*/ blocks
 //! portatune tune-annotated FILE           run every tune block in FILE
+//! portatune tune --kernel gemm --sweep    native GEMM sweep (no artifacts)
+//! portatune portfolio build|show          "few fit most" variant portfolios
 //! portatune serve                         tuning-as-a-service daemon (shard store)
 //! portatune query --op deploy ...         ask a running daemon
 //! portatune db-migrate                    import a v1 perfdb.json into shards
@@ -30,6 +32,8 @@ use portatune::coordinator::annotation::{extract_blocks, Annotation};
 use portatune::coordinator::measure::MeasureConfig;
 use portatune::coordinator::perfdb::{PerfDb, ShardedDb};
 use portatune::coordinator::platform::Fingerprint;
+use portatune::coordinator::portfolio::{self, sweep_measure_cfg, GemmSweep};
+use portatune::coordinator::selection::Tolerance;
 use portatune::coordinator::search::{
     Anneal, Exhaustive, Genetic, HillClimb, NelderMead, RandomSearch, SearchStrategy,
 };
@@ -38,35 +42,72 @@ use portatune::report::{Fig1Report, Fig1Row, Table};
 use portatune::runtime::{Registry, Runtime};
 use portatune::service::{transfer, Client, Request, ServeOpts, Server};
 use portatune::util::cli::Args;
+use portatune::workload::gemm;
 
-const USAGE: &str = "usage: portatune <platform|inspect|tune|tune-all|report-fig1|db-list|deploy|annotate|tune-annotated|serve|query|db-migrate> [flags]
-  global: --artifacts DIR (default artifacts), --db PATH (default perfdb.json),
-          --shards DIR (default perfdb.d)
-  tune:   --kernel K --workload T [--strategy exhaustive|random|hillclimb|anneal|genetic]
-          [--budget N] [--seed N] [--quick] [--warm-start] [--no-record]
-          [--batch N]  batch size > 1 overlaps variant compilation on a
-          background pool and races measurements with early termination
-          (strategies without batch proposal fall back to serial)
-          --warm-start seeds from the shard store's transfer ranking when
-          --shards exists, else from the legacy --db file
-  tune-all:    [--kernels a,b,c] [--strategy S] [--budget N] [--seed N] [--quick] [--batch N]
-  report-fig1: [--kernels axpy,dot,triad] [--csv PATH] [--quick]
-  deploy: --kernel K --workload T
-  annotate: <file>
-  tune-annotated: <file> [--quick] — execute each /*@ tune @*/ block (kernel,
-          workload, strategy, budget, seed all come from the annotation)
-  serve:  [--listen ADDR (default 127.0.0.1:7171)] [--socket PATH (unix)]
-          [--ttl-days N (default 30)] [--lru N (default 1024)]
-          [--scan-secs N (default 60)] [--retune [--batch N]]
-          imports --db into the shard store at startup when it exists;
-          --retune re-tunes stale entries through the batched tuner when
-          the artifact registry is available
-  query:  --op ping|lookup|deploy|stats|retune-next|shutdown
-          [--addr ADDR (default 127.0.0.1:7171) | --socket PATH]
-          [--kernel K --workload T] [--platform KEY] — deploy sends the
-          local fingerprint so misses come back transfer-ranked
-  db-migrate: import --db (v1 json) into --shards (v2 shard files)";
+const USAGE: &str = "usage: portatune <subcommand> [flags]
+  global flags (every subcommand):
+    --artifacts DIR   artifact root with manifest.json     (default: artifacts)
+    --db PATH         legacy v1 perf-DB file               (default: perfdb.json)
+    --shards DIR      v2 sharded perf-DB directory         (default: perfdb.d)
 
+  platform          print the fingerprint that keys the perf DB
+                      e.g. portatune platform
+  inspect           summarize the artifact manifest
+                      e.g. portatune inspect --artifacts artifacts
+  tune              empirical search over one (kernel, workload)
+                      e.g. portatune tune --kernel axpy --workload n65536 --batch 4
+                    flags: --kernel K --workload T
+                      [--strategy exhaustive|random|hillclimb|anneal|genetic|neldermead]
+                      [--budget N] [--seed N] [--quick] [--no-record]
+                      [--batch N]      overlap compilation + race measurements
+                      [--warm-start]   seed from the shard store's transfer
+                                       ranking (falls back to the legacy --db)
+                      [--sweep]        native families only (gemm): tune every
+                                       shape of the built-in sweep and record
+                                       each winner to --shards (no --workload)
+                      e.g. portatune tune --kernel gemm --sweep --quick
+  tune-all          tune every workload of the listed kernels
+                      e.g. portatune tune-all --kernels axpy,dot --strategy genetic --budget 16
+  portfolio         build/show \"few fit most\" variant portfolios
+                      build: sweep the native GEMM space, cluster per-shape
+                             winners into K configs, persist to --shards
+                        e.g. portatune portfolio build --kernel gemm --k 4 --target 0.9
+                        flags: [--kernel gemm] [--k N (default 4)]
+                               [--target F (default 0.9)] [--quick] [--seed N]
+                      show:  print the stored portfolio for a platform
+                        e.g. portatune portfolio show --kernel gemm
+                        flags: [--kernel gemm] [--platform KEY (default: this host)]
+  report-fig1       regenerate the paper's Figure 1
+                      e.g. portatune report-fig1 --kernels axpy,dot,triad --csv fig1.csv
+  db-list           show recorded tuning results from the legacy --db file
+                      e.g. portatune db-list --db perfdb.json
+  deploy            print the artifact the current platform should run
+                      e.g. portatune deploy --kernel axpy --workload n4096
+  annotate          parse /*@ tune ... @*/ blocks from a source file
+                      e.g. portatune annotate examples/annotated.c
+  tune-annotated    execute every /*@ tune @*/ block in a file
+                      e.g. portatune tune-annotated examples/annotated.c --quick
+  serve             tuning-as-a-service daemon over the shard store
+                      e.g. portatune serve --listen 127.0.0.1:7171 --shards perfdb.d
+                    flags: [--listen ADDR (default 127.0.0.1:7171)]
+                      [--socket PATH (unix domain socket instead of TCP)]
+                      [--ttl-days N (default 30)] [--lru N (default 1024)]
+                      [--scan-secs N (default 60)] [--retune [--batch N]]
+                      imports --db into the shard store at startup when present
+  query             ask a running daemon (one JSON reply line on stdout)
+                      e.g. portatune query --op lookup --kernel axpy --workload n4096
+                      e.g. portatune query --op portfolio --kernel gemm --m 128 --n 128 --k 64
+                    flags: --op ping|lookup|deploy|stats|retune-next|portfolio|shutdown
+                      [--addr ADDR (default 127.0.0.1:7171) | --socket PATH]
+                      [--kernel K] [--workload T] [--platform KEY]
+                      [--m N --n N --k N]  portfolio-op dims for selection
+  db-migrate        import a v1 --db file into --shards (v2 shard files)
+                      e.g. portatune db-migrate --db perfdb.json --shards perfdb.d
+
+  The wire protocol the daemon speaks is specified in docs/PROTOCOL.md;
+  docs/ARCHITECTURE.md maps the modules behind these subcommands.";
+
+/// Instantiate a search strategy by its CLI name.
 pub fn make_strategy(name: &str, seed: u64) -> Result<Box<dyn SearchStrategy>> {
     Ok(match name {
         "exhaustive" => Box::new(Exhaustive::new()),
@@ -113,6 +154,7 @@ fn dispatch(args: &Args) -> Result<()> {
         }
         Some("tune") => cmd_tune(args, &artifacts, &db_path, &shards_dir),
         Some("tune-all") => cmd_tune_all(args, &artifacts, &db_path),
+        Some("portfolio") => cmd_portfolio(args, &shards_dir),
         Some("report-fig1") => cmd_report_fig1(args, &artifacts),
         Some("db-list") => {
             args.finish()?;
@@ -191,6 +233,10 @@ fn cmd_query(args: &Args) -> Result<()> {
     let kernel = args.get("kernel").map(str::to_string);
     let workload = args.get("workload").map(str::to_string);
     let platform = args.get("platform").map(str::to_string);
+    let dims: Vec<(String, Option<i64>)> = ["m", "n", "k"]
+        .iter()
+        .map(|d| Ok((d.to_string(), args.get(d).map(|v| v.parse::<i64>()).transpose()?)))
+        .collect::<Result<_>>()?;
     args.finish()?;
 
     let need = |v: Option<String>, flag: &str| {
@@ -211,10 +257,21 @@ fn cmd_query(args: &Args) -> Result<()> {
         },
         "stats" => Request::Stats,
         "retune-next" => Request::RetuneNext,
+        "portfolio" => {
+            let given: std::collections::BTreeMap<String, i64> =
+                dims.into_iter().filter_map(|(k, v)| v.map(|v| (k, v))).collect();
+            Request::Portfolio {
+                platform,
+                kernel: need(kernel, "kernel")?,
+                dims: if given.is_empty() { None } else { Some(given) },
+                fingerprint: Some(Fingerprint::detect()),
+            }
+        }
         "shutdown" => Request::Shutdown,
         other => {
             return Err(anyhow::anyhow!(
-                "unknown query op {other}; expected ping|lookup|deploy|stats|retune-next|shutdown"
+                "unknown query op {other}; expected \
+                 ping|lookup|deploy|stats|retune-next|portfolio|shutdown"
             ))
         }
     };
@@ -273,9 +330,12 @@ fn cmd_tune(args: &Args, artifacts: &Path, db_path: &Path, shards_dir: &Path) ->
         .get("kernel")
         .ok_or_else(|| anyhow::anyhow!("tune requires --kernel"))?
         .to_string();
+    if args.get_bool("sweep") {
+        return cmd_tune_sweep(args, &kernel, shards_dir);
+    }
     let workload = args
         .get("workload")
-        .ok_or_else(|| anyhow::anyhow!("tune requires --workload"))?
+        .ok_or_else(|| anyhow::anyhow!("tune requires --workload (or --sweep)"))?
         .to_string();
     let strategy_name = args.get_or("strategy", "exhaustive");
     let budget = args.get_parsed::<usize>("budget", usize::MAX)?;
@@ -371,6 +431,159 @@ fn cmd_tune(args: &Args, artifacts: &Path, db_path: &Path, shards_dir: &Path) ->
         );
     }
     Ok(())
+}
+
+/// `tune --sweep`: tune every shape of the native GEMM sweep (no
+/// artifacts or runtime needed) and record each per-shape winner into
+/// the shard store — the tuning history `portfolio build` clusters.
+fn cmd_tune_sweep(args: &Args, kernel: &str, shards_dir: &Path) -> Result<()> {
+    let quick = args.get_bool("quick");
+    let seed = args.get_parsed::<u64>("seed", 42)?;
+    if args.get("workload").is_some() {
+        return Err(anyhow::anyhow!(
+            "--sweep tunes the whole built-in shape sweep; drop --workload"
+        ));
+    }
+    args.finish()?;
+    anyhow::ensure!(
+        kernel == gemm::KERNEL,
+        "--sweep supports the native gemm family only; use tune-all for artifact-backed kernels"
+    );
+    let host = Fingerprint::detect();
+    let sweep = run_gemm_sweep(quick, seed, &host)?;
+    let db = ShardedDb::open(shards_dir)?;
+    let entries = sweep.entries(&host.key(), "sweep-exhaustive");
+    db.record_many(&host.key(), Some(&host), entries.clone())?;
+
+    let mut t = Table::new(&["shape", "best", "tuned", "default", "speedup", "GFLOP/s"]);
+    for entry in &entries {
+        let flops = sweep
+            .matrix
+            .shapes
+            .iter()
+            .find(|s| s.tag == entry.tag)
+            .map(|s| s.flops)
+            .unwrap_or(0);
+        t.row(vec![
+            entry.tag.clone(),
+            entry.best_config_id.clone(),
+            format!("{:.3} ms", entry.best_time_s * 1e3),
+            format!("{:.3} ms", entry.baseline_time_s * 1e3),
+            format!("{:.2}x", entry.speedup()),
+            format!("{:.2}", flops as f64 / entry.best_time_s / 1e9),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "recorded {} shape(s) to {} (platform {})",
+        entries.len(),
+        shards_dir.display(),
+        host.key()
+    );
+    Ok(())
+}
+
+/// Shared sweep runner for `tune --sweep` and `portfolio build`.
+fn run_gemm_sweep(quick: bool, seed: u64, host: &Fingerprint) -> Result<GemmSweep> {
+    let shapes = if quick { gemm::quick_sweep() } else { gemm::default_sweep() };
+    println!(
+        "sweeping {} over {} shapes x {} configs (native, no artifacts needed)",
+        gemm::KERNEL,
+        shapes.len(),
+        gemm::configs().len()
+    );
+    portfolio::sweep_gemm(
+        &shapes,
+        &sweep_measure_cfg(quick),
+        Tolerance::default(),
+        seed,
+        host,
+    )
+}
+
+/// `portfolio build` / `portfolio show`.
+fn cmd_portfolio(args: &Args, shards_dir: &Path) -> Result<()> {
+    match args.positional.get(1).map(String::as_str) {
+        Some("build") => cmd_portfolio_build(args, shards_dir),
+        Some("show") => cmd_portfolio_show(args, shards_dir),
+        other => Err(anyhow::anyhow!(
+            "portfolio requires an action (build|show), got {other:?}"
+        )),
+    }
+}
+
+fn cmd_portfolio_build(args: &Args, shards_dir: &Path) -> Result<()> {
+    let kernel = args.get_or("kernel", gemm::KERNEL);
+    let k_max = args.get_parsed::<usize>("k", 4)?;
+    let target = args.get_parsed::<f64>("target", 0.9)?;
+    let quick = args.get_bool("quick");
+    let seed = args.get_parsed::<u64>("seed", 42)?;
+    args.finish()?;
+    anyhow::ensure!(
+        kernel == gemm::KERNEL,
+        "portfolio build supports the native gemm family only (so far)"
+    );
+
+    let host = Fingerprint::detect();
+    let sweep = run_gemm_sweep(quick, seed, &host)?;
+    let built = sweep.matrix.build_portfolio(k_max, target)?;
+
+    // Persist the sweep history AND the portfolio: the serve daemon
+    // answers lookups from the former and `portfolio` ops from the
+    // latter.
+    let db = ShardedDb::open(shards_dir)?;
+    let entries = sweep.entries(&host.key(), "sweep-exhaustive");
+    db.record_many(&host.key(), Some(&host), entries)?;
+    db.record_portfolio(&host.key(), Some(&host), built.clone())?;
+
+    print_portfolio(&built, &host.key());
+    println!(
+        "persisted to {} — {} config(s) retain {:.1}% of per-shape-tuned performance",
+        shards_dir.display(),
+        built.len(),
+        built.retained * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_portfolio_show(args: &Args, shards_dir: &Path) -> Result<()> {
+    let kernel = args.get_or("kernel", gemm::KERNEL);
+    let platform = args
+        .get("platform")
+        .map(str::to_string)
+        .unwrap_or_else(|| Fingerprint::detect().key());
+    args.finish()?;
+    let db = ShardedDb::open(shards_dir)?;
+    match db.portfolio(&platform, &kernel)? {
+        Some(p) => {
+            print_portfolio(&p, &platform);
+            Ok(())
+        }
+        None => {
+            println!("(no {kernel} portfolio recorded for platform {platform})");
+            Ok(())
+        }
+    }
+}
+
+fn print_portfolio(p: &portatune::coordinator::portfolio::Portfolio, platform: &str) {
+    println!(
+        "{} portfolio on {platform}: {} config(s), retained {:.1}%, built by {} at {}",
+        p.kernel,
+        p.len(),
+        p.retained * 100.0,
+        p.strategy,
+        p.built_at
+    );
+    let mut t = Table::new(&["config", "covers", "shapes"]);
+    for item in &p.items {
+        t.row(vec![
+            item.config_id.clone(),
+            item.covered.len().to_string(),
+            item.covered.join(","),
+        ]);
+    }
+    print!("{}", t.render());
 }
 
 fn cmd_tune_all(args: &Args, artifacts: &Path, db_path: &Path) -> Result<()> {

@@ -32,6 +32,7 @@ impl Fig1Row {
         (1.0 - self.tuned_s / self.baseline_s) * 100.0
     }
 
+    /// Baseline time over tuned time (the figure's headline ratio).
     pub fn speedup(&self) -> f64 {
         if self.tuned_s > 0.0 {
             self.baseline_s / self.tuned_s
@@ -53,15 +54,19 @@ impl Fig1Row {
 /// The full figure for one kernel.
 #[derive(Debug, Clone)]
 pub struct Fig1Report {
+    /// Kernel family the figure covers.
     pub kernel: String,
+    /// One row per input size.
     pub rows: Vec<Fig1Row>,
 }
 
 impl Fig1Report {
+    /// An empty report for one kernel.
     pub fn new(kernel: impl Into<String>) -> Fig1Report {
         Fig1Report { kernel: kernel.into(), rows: Vec::new() }
     }
 
+    /// Append one size point.
     pub fn push(&mut self, row: Fig1Row) {
         self.rows.push(row);
     }
@@ -72,6 +77,7 @@ impl Fig1Report {
         self.rows.iter().map(Fig1Row::speedup).fold(1.0, f64::max)
     }
 
+    /// Maximum time-reduction percentage across sizes.
     pub fn max_reduction_pct(&self) -> f64 {
         self.rows.iter().map(Fig1Row::reduction_pct).fold(0.0, f64::max)
     }

@@ -74,6 +74,8 @@ pub fn serve_stats_json(stats: &ServeStats) -> Json {
         ("shard_reads".to_string(), int(stats.shard_reads)),
         ("records".to_string(), int(stats.records)),
         ("transfer_misses".to_string(), int(stats.transfer_misses)),
+        ("portfolios".to_string(), int(stats.portfolios)),
+        ("portfolio_transfers".to_string(), int(stats.portfolio_transfers)),
         ("retune_queued".to_string(), int(stats.retune_queued)),
         ("retunes".to_string(), int(stats.retunes)),
         ("errors".to_string(), int(stats.errors)),
@@ -128,6 +130,8 @@ mod tests {
             shard_reads: 10,
             records: 3,
             transfer_misses: 2,
+            portfolios: 5,
+            portfolio_transfers: 2,
             retune_queued: 4,
             retunes: 1,
             errors: 0,
@@ -138,5 +142,7 @@ mod tests {
         assert_eq!(parsed.get("lookups").and_then(Json::as_u64), Some(100));
         assert_eq!(parsed.get("lru_hits").and_then(Json::as_u64), Some(90));
         assert_eq!(parsed.get("retune_queue_depth").and_then(Json::as_u64), Some(3));
+        assert_eq!(parsed.get("portfolios").and_then(Json::as_u64), Some(5));
+        assert_eq!(parsed.get("portfolio_transfers").and_then(Json::as_u64), Some(2));
     }
 }

@@ -24,14 +24,17 @@ impl Runtime {
         Ok(Arc::new(Runtime { client }))
     }
 
+    /// PJRT platform name (e.g. `cpu`).
     pub fn platform_name(&self) -> String {
         self.client.platform_name()
     }
 
+    /// PJRT platform version string.
     pub fn platform_version(&self) -> String {
         self.client.platform_version()
     }
 
+    /// Number of devices the client sees.
     pub fn device_count(&self) -> usize {
         self.client.device_count()
     }

@@ -19,6 +19,7 @@ impl Executable {
         Executable { exe, name }
     }
 
+    /// Artifact-derived display name.
     pub fn name(&self) -> &str {
         &self.name
     }

@@ -13,11 +13,14 @@ use crate::xla;
 /// Element types exchanged with artifacts (matches `aot.py::_dtype_str`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum DType {
+    /// 32-bit IEEE-754 float.
     F32,
+    /// 32-bit signed integer.
     I32,
 }
 
 impl DType {
+    /// Parse the manifest's dtype string (`"f32"` / `"i32"`).
     pub fn parse(s: &str) -> Result<DType> {
         match s {
             "f32" => Ok(DType::F32),
@@ -26,6 +29,7 @@ impl DType {
         }
     }
 
+    /// The manifest spelling of this dtype.
     pub fn as_str(&self) -> &'static str {
         match self {
             DType::F32 => "f32",
@@ -33,6 +37,7 @@ impl DType {
         }
     }
 
+    /// Bytes per element.
     pub fn size_bytes(&self) -> usize {
         4
     }
@@ -41,12 +46,16 @@ impl DType {
 /// An input slot declared by the manifest.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TensorSpec {
+    /// Slot name from the manifest.
     pub name: String,
+    /// Element type.
     pub dtype: DType,
+    /// Dense row-major shape.
     pub shape: Vec<usize>,
 }
 
 impl TensorSpec {
+    /// Product of the shape dims.
     pub fn element_count(&self) -> usize {
         self.shape.iter().product()
     }
@@ -55,16 +64,30 @@ impl TensorSpec {
 /// A concrete host tensor.
 #[derive(Debug, Clone, PartialEq)]
 pub enum TensorData {
-    F32 { shape: Vec<usize>, data: Vec<f32> },
-    I32 { shape: Vec<usize>, data: Vec<i32> },
+    /// Dense row-major f32 tensor.
+    F32 {
+        /// Tensor shape.
+        shape: Vec<usize>,
+        /// Row-major elements (`shape` product long).
+        data: Vec<f32>,
+    },
+    /// Dense row-major i32 tensor.
+    I32 {
+        /// Tensor shape.
+        shape: Vec<usize>,
+        /// Row-major elements (`shape` product long).
+        data: Vec<i32>,
+    },
 }
 
 impl TensorData {
+    /// An f32 tensor (panics on shape/data length mismatch).
     pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> TensorData {
         assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
         TensorData::F32 { shape, data }
     }
 
+    /// An i32 tensor (panics on shape/data length mismatch).
     pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> TensorData {
         assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
         TensorData::I32 { shape, data }
@@ -75,12 +98,14 @@ impl TensorData {
         TensorData::f32(vec![1], vec![v])
     }
 
+    /// The tensor's shape.
     pub fn shape(&self) -> &[usize] {
         match self {
             TensorData::F32 { shape, .. } | TensorData::I32 { shape, .. } => shape,
         }
     }
 
+    /// The tensor's element type.
     pub fn dtype(&self) -> DType {
         match self {
             TensorData::F32 { .. } => DType::F32,
@@ -88,10 +113,12 @@ impl TensorData {
         }
     }
 
+    /// Product of the shape dims.
     pub fn element_count(&self) -> usize {
         self.shape().iter().product()
     }
 
+    /// The f32 elements, if this is an `F32` tensor.
     pub fn as_f32(&self) -> Option<&[f32]> {
         match self {
             TensorData::F32 { data, .. } => Some(data),
@@ -99,6 +126,7 @@ impl TensorData {
         }
     }
 
+    /// The i32 elements, if this is an `I32` tensor.
     pub fn as_i32(&self) -> Option<&[i32]> {
         match self {
             TensorData::I32 { data, .. } => Some(data),

@@ -26,27 +26,39 @@ use super::literal::{DType, TensorSpec};
 /// One tuning parameter's schema (name, id abbreviation, domain).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ParamDef {
+    /// Parameter name (matches constraint identifiers).
     pub name: String,
+    /// Short prefix used in variant ids (`b` in `b1024_u4`).
     pub abbrev: String,
+    /// Finite ordered value domain.
     pub values: Vec<i64>,
 }
 
 /// One pre-lowered variant of a workload.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Variant {
+    /// Stable variant id derived from the parameter values.
     pub id: String,
+    /// The parameter assignment this artifact was lowered with.
     pub params: BTreeMap<String, i64>,
+    /// Artifact path relative to the manifest root.
     pub path: String,
 }
 
 /// One concrete workload (fixed shapes) of a kernel family.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Workload {
+    /// Shape tag (`n65536`, `m128n128k64`, ...).
     pub tag: String,
+    /// Named problem dimensions.
     pub dims: BTreeMap<String, i64>,
+    /// Declared input signature, in call order.
     pub inputs: Vec<TensorSpec>,
+    /// Declared output signature.
     pub output: TensorSpec,
+    /// Flop count of one execution (roofline reporting).
     pub flops: u64,
+    /// Bytes moved by one execution (roofline reporting).
     pub bytes: u64,
     /// Pure-XLA reference artifact (semantics oracle + vendor-library
     /// comparator).
@@ -57,6 +69,7 @@ pub struct Workload {
     /// Whether untupled twins (`*.nt.hlo.txt`) exist for device-resident
     /// iteration (output buffer feeds back as the next input).
     pub untupled: bool,
+    /// Every pre-lowered schedule variant of this workload.
     pub variants: Vec<Variant>,
 }
 
@@ -69,6 +82,7 @@ pub fn untupled_path(path: &str) -> String {
 }
 
 impl Workload {
+    /// Find a variant by id.
     pub fn variant(&self, id: &str) -> Option<&Variant> {
         self.variants.iter().find(|v| v.id == id)
     }
@@ -77,13 +91,18 @@ impl Workload {
 /// One kernel family as declared by the manifest.
 #[derive(Debug, Clone, PartialEq)]
 pub struct KernelEntry {
+    /// Kernel family name.
     pub name: String,
+    /// Tuning parameter schemas.
     pub params: Vec<ParamDef>,
+    /// Constraint strings over params and workload dims.
     pub constraints: Vec<String>,
+    /// The family's concrete workloads.
     pub workloads: Vec<Workload>,
 }
 
 impl KernelEntry {
+    /// Find a workload by tag.
     pub fn workload(&self, tag: &str) -> Option<&Workload> {
         self.workloads.iter().find(|w| w.tag == tag)
     }
@@ -92,11 +111,14 @@ impl KernelEntry {
 /// The parsed manifest.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Manifest {
+    /// Schema version (currently 1).
     pub version: i64,
+    /// Every kernel family the artifact set covers.
     pub kernels: Vec<KernelEntry>,
 }
 
 impl Manifest {
+    /// Find a kernel family by name.
     pub fn kernel(&self, name: &str) -> Option<&KernelEntry> {
         self.kernels.iter().find(|k| k.name == name)
     }
@@ -353,14 +375,17 @@ impl Registry {
         })
     }
 
+    /// The backing PJRT runtime.
     pub fn runtime(&self) -> &Arc<Runtime> {
         &self.cache.runtime
     }
 
+    /// The parsed manifest.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
+    /// The artifact root directory.
     pub fn root(&self) -> &Path {
         &self.cache.root
     }

@@ -11,6 +11,7 @@
 /// Error type matching the real crate's role in `Result` signatures.
 #[derive(Debug, Clone)]
 pub enum Error {
+    /// The named entry point needs the real XLA runtime.
     Unavailable(&'static str),
 }
 
@@ -34,26 +35,32 @@ type Result<T> = std::result::Result<T, Error>;
 pub struct PjRtClient;
 
 impl PjRtClient {
+    /// Always fails: no PJRT without the native library.
     pub fn cpu() -> Result<PjRtClient> {
         Err(Error::Unavailable("PjRtClient::cpu"))
     }
 
+    /// Static stub platform name.
     pub fn platform_name(&self) -> String {
         "stub".to_string()
     }
 
+    /// Static stub platform version.
     pub fn platform_version(&self) -> String {
         "0".to_string()
     }
 
+    /// Always 0 — the stub has no devices.
     pub fn device_count(&self) -> usize {
         0
     }
 
+    /// Always fails (see [`Error::Unavailable`]).
     pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
         Err(Error::Unavailable("PjRtClient::compile"))
     }
 
+    /// Always fails (see [`Error::Unavailable`]).
     pub fn buffer_from_host_buffer<T>(
         &self,
         _data: &[T],
@@ -64,37 +71,46 @@ impl PjRtClient {
     }
 }
 
+/// Stub HLO module handle.
 pub struct HloModuleProto;
 
 impl HloModuleProto {
+    /// Always fails (see [`Error::Unavailable`]).
     pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
         Err(Error::Unavailable("HloModuleProto::from_text_file"))
     }
 }
 
+/// Stub computation handle.
 pub struct XlaComputation;
 
 impl XlaComputation {
+    /// Total constructor (the failure happens at compile time instead).
     pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
         XlaComputation
     }
 }
 
+/// Stub executable handle.
 pub struct PjRtLoadedExecutable;
 
 impl PjRtLoadedExecutable {
+    /// Always fails (see [`Error::Unavailable`]).
     pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
         Err(Error::Unavailable("execute"))
     }
 
+    /// Always fails (see [`Error::Unavailable`]).
     pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
         Err(Error::Unavailable("execute_b"))
     }
 }
 
+/// Stub device buffer handle.
 pub struct PjRtBuffer;
 
 impl PjRtBuffer {
+    /// Always fails (see [`Error::Unavailable`]).
     pub fn to_literal_sync(&self) -> Result<Literal> {
         Err(Error::Unavailable("to_literal_sync"))
     }
@@ -104,18 +120,22 @@ impl PjRtBuffer {
 pub struct Literal;
 
 impl Literal {
+    /// Total constructor — data is discarded, execution is impossible anyway.
     pub fn vec1<T>(_data: &[T]) -> Literal {
         Literal
     }
 
+    /// Total no-op reshape.
     pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
         Ok(Literal)
     }
 
+    /// Always fails (see [`Error::Unavailable`]).
     pub fn to_vec<T>(&self) -> Result<Vec<T>> {
         Err(Error::Unavailable("Literal::to_vec"))
     }
 
+    /// Always fails (see [`Error::Unavailable`]).
     pub fn to_tuple1(self) -> Result<Literal> {
         Err(Error::Unavailable("Literal::to_tuple1"))
     }

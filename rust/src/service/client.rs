@@ -31,11 +31,13 @@ pub struct Client {
 }
 
 impl Client {
+    /// A client for a TCP endpoint (`host:port`).
     pub fn tcp(addr: impl Into<String>) -> Client {
         Client { endpoint: Endpoint::Tcp(addr.into()) }
     }
 
     #[cfg(unix)]
+    /// A client for a Unix-domain-socket endpoint.
     pub fn unix(path: impl Into<PathBuf>) -> Client {
         Client { endpoint: Endpoint::Unix(path.into()) }
     }

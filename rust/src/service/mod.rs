@@ -19,10 +19,11 @@
 //! * [`protocol`] — the wire format (std-only, reuses
 //!   [`crate::util::json`]);
 //! * [`client`] — what `portatune query` and embedders speak;
-//! * [`transfer`] — fingerprint-similarity ranking, so a deploy miss on
-//!   a never-seen platform answers with the nearest platforms' tuned
-//!   configurations (the cross-device transfer result of "A Few Fit
-//!   Most", Hochgraf & Pai 2025) instead of an empty miss;
+//! * [`transfer`] — fingerprint-similarity ranking for tuned entries
+//!   AND variant portfolios, so a deploy or `portfolio` miss on a
+//!   never-seen platform answers with the nearest platform's results
+//!   (the cross-device transfer result of "A Few Fit Most", Hochgraf &
+//!   Pai 2025) instead of an empty miss;
 //! * [`scheduler`] — the staleness queue feeding re-tunes through the
 //!   batched [`crate::coordinator::tuner::Tuner`] (the persistent
 //!   runtime-service shape of Kernel Tuning Toolkit, Petrovič et al.
@@ -38,4 +39,6 @@ pub use client::{Client, Endpoint};
 pub use protocol::{reply_err, reply_ok, Request};
 pub use scheduler::{RetuneTask, Scheduler, StaleReason};
 pub use server::{Lru, ServeOpts, ServeStats, Server};
-pub use transfer::{rank_candidates, warm_start_configs, TransferCandidate};
+pub use transfer::{
+    rank_candidates, rank_portfolios, warm_start_configs, PortfolioCandidate, TransferCandidate,
+};

@@ -14,6 +14,7 @@
 //! {"op":"record","entry":{..DbEntry..},"fingerprint":{..}?}
 //! {"op":"stats"}
 //! {"op":"retune-next"}
+//! {"op":"portfolio","kernel":"gemm","platform":KEY?,"dims":{"m":128,..}?,"fingerprint":{..}?}
 //! {"op":"shutdown"}
 //! ```
 //!
@@ -31,19 +32,56 @@ use crate::util::json::{self, Json};
 /// A parsed client request.
 #[derive(Debug, Clone)]
 pub enum Request {
+    /// Liveness check.
     Ping,
-    Lookup { platform: Option<String>, kernel: String, workload: String },
-    Deploy {
+    /// Exact read of the newest record for (platform, kernel, workload).
+    Lookup {
+        /// Platform key (daemon host's own when absent).
         platform: Option<String>,
+        /// Kernel family.
         kernel: String,
+        /// Workload tag.
+        workload: String,
+    },
+    /// Deployment decision; misses answer with transfer candidates.
+    Deploy {
+        /// Platform key (daemon host's own when absent).
+        platform: Option<String>,
+        /// Kernel family.
+        kernel: String,
+        /// Workload tag.
         workload: String,
         /// The requesting platform's fingerprint — feeds the transfer
         /// engine on a miss.  Defaults to the daemon host's own.
         fingerprint: Option<Fingerprint>,
     },
-    Record { entry: Box<DbEntry>, fingerprint: Option<Fingerprint> },
+    /// Write one tuning record into its platform's shard.
+    Record {
+        /// The record to persist.
+        entry: Box<DbEntry>,
+        /// Recording platform's fingerprint (stored in the shard).
+        fingerprint: Option<Fingerprint>,
+    },
+    /// Counter snapshot.
     Stats,
+    /// Pop one task from the staleness re-tune queue.
     RetuneNext,
+    /// Fetch (and optionally select from) a platform's variant
+    /// portfolio for a kernel.  A miss answers with the nearest
+    /// platform's portfolio, transfer-ranked like `deploy`.
+    Portfolio {
+        /// Target platform key (daemon host's own when absent).
+        platform: Option<String>,
+        /// Kernel family whose portfolio is wanted.
+        kernel: String,
+        /// Workload dims; when present the reply includes the member
+        /// the feature selector picks for them.
+        dims: Option<std::collections::BTreeMap<String, i64>>,
+        /// Requesting platform's fingerprint (transfer ranking on a
+        /// miss, cache-geometry features for selection).
+        fingerprint: Option<Fingerprint>,
+    },
+    /// Stop accepting connections and drain.
     Shutdown,
 }
 
@@ -92,6 +130,28 @@ impl Request {
             }
             "stats" => Ok(Request::Stats),
             "retune-next" => Ok(Request::RetuneNext),
+            "portfolio" => {
+                let dims = match v.get("dims") {
+                    Some(Json::Null) | None => None,
+                    Some(d) => Some(
+                        d.as_obj()
+                            .ok_or_else(|| anyhow::anyhow!("portfolio dims must be an object"))?
+                            .iter()
+                            .map(|(k, val)| {
+                                val.as_i64()
+                                    .map(|x| (k.clone(), x))
+                                    .ok_or_else(|| anyhow::anyhow!("non-int dim {k}"))
+                            })
+                            .collect::<Result<std::collections::BTreeMap<_, _>>>()?,
+                    ),
+                };
+                Ok(Request::Portfolio {
+                    platform: opt("platform"),
+                    kernel: gs("kernel")?,
+                    dims,
+                    fingerprint: fp()?,
+                })
+            }
             "shutdown" => Ok(Request::Shutdown),
             other => Err(anyhow::anyhow!("unknown op {other}")),
         }
@@ -130,6 +190,22 @@ impl Request {
             }
             Request::Stats => fields.push(("op", json::s("stats"))),
             Request::RetuneNext => fields.push(("op", json::s("retune-next"))),
+            Request::Portfolio { platform, kernel, dims, fingerprint } => {
+                fields.push(("op", json::s("portfolio")));
+                fields.push(("kernel", json::s(kernel)));
+                if let Some(p) = platform {
+                    fields.push(("platform", json::s(p)));
+                }
+                if let Some(d) = dims {
+                    fields.push((
+                        "dims",
+                        Json::Obj(d.iter().map(|(k, v)| (k.clone(), json::int(*v))).collect()),
+                    ));
+                }
+                if let Some(fp) = fingerprint {
+                    fields.push(("fingerprint", fp.to_json()));
+                }
+            }
             Request::Shutdown => fields.push(("op", json::s("shutdown"))),
         }
         json::obj(fields).compact()
@@ -162,6 +238,22 @@ mod tests {
             },
             Request::Stats,
             Request::RetuneNext,
+            Request::Portfolio {
+                platform: None,
+                kernel: "gemm".into(),
+                dims: None,
+                fingerprint: None,
+            },
+            Request::Portfolio {
+                platform: Some("p1".into()),
+                kernel: "gemm".into(),
+                dims: Some(
+                    [("m".to_string(), 128i64), ("n".to_string(), 64), ("k".to_string(), 32)]
+                        .into_iter()
+                        .collect(),
+                ),
+                fingerprint: None,
+            },
             Request::Shutdown,
         ];
         for req in reqs {
@@ -204,6 +296,25 @@ mod tests {
         assert!(Request::parse_line(r#"{"op":"lookup"}"#).is_err());
         assert!(Request::parse_line(r#"{"op":"record","entry":{}}"#).is_err());
         assert!(Request::parse_line("not json at all").is_err());
+        assert!(Request::parse_line(r#"{"op":"portfolio"}"#).is_err(), "kernel is required");
+        assert!(
+            Request::parse_line(r#"{"op":"portfolio","kernel":"gemm","dims":{"m":"big"}}"#)
+                .is_err(),
+            "dims must be integers"
+        );
+    }
+
+    #[test]
+    fn portfolio_dims_round_trip() {
+        let line = r#"{"op":"portfolio","kernel":"gemm","dims":{"k":32,"m":128,"n":64}}"#;
+        match Request::parse_line(line).unwrap() {
+            Request::Portfolio { kernel, dims: Some(dims), platform: None, .. } => {
+                assert_eq!(kernel, "gemm");
+                assert_eq!(dims["m"], 128);
+                assert_eq!(dims["k"], 32);
+            }
+            other => panic!("parsed {other:?}"),
+        }
     }
 
     #[test]

@@ -26,6 +26,13 @@
 //! is never queued twice, and popping a task releases its slot so a
 //! later scan can re-queue it if it is still stale.
 //!
+//! Known limitation: the scan covers *entries* only.  A shard's built
+//! portfolios (`Shard::portfolios`) age too — their `built_at` and
+//! centroid features go stale under the same TTL/drift signals — but
+//! rebuilding one requires a full sweep, not a single re-tune, so
+//! portfolio refresh is left to `portatune portfolio build` until the
+//! scheduler grows a rebuild task kind (see ROADMAP open items).
+//!
 //! [`Tuner`]: crate::coordinator::tuner::Tuner
 
 use std::collections::{HashSet, VecDeque};
@@ -37,14 +44,18 @@ use crate::util::json::{self, Json};
 /// Why a task was queued.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum StaleReason {
-    /// Entry older than the TTL (age in seconds at scan time).
-    TtlExpired { age_s: u64 },
+    /// Entry older than the TTL.
+    TtlExpired {
+        /// Age in seconds at scan time.
+        age_s: u64,
+    },
     /// The platform under this key no longer matches its stored
     /// fingerprint.
     FingerprintDrift,
 }
 
 impl StaleReason {
+    /// Stable wire spelling of the reason.
     pub fn as_str(&self) -> &'static str {
         match self {
             StaleReason::TtlExpired { .. } => "ttl-expired",
@@ -56,13 +67,18 @@ impl StaleReason {
 /// One queued re-tune unit.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct RetuneTask {
+    /// Platform whose entry went stale.
     pub platform_key: String,
+    /// Kernel family to re-tune.
     pub kernel: String,
+    /// Workload tag to re-tune.
     pub tag: String,
+    /// Why the task was queued.
     pub reason: StaleReason,
 }
 
 impl RetuneTask {
+    /// Wire form for the `retune-next` reply.
     pub fn to_json(&self) -> Json {
         json::obj(vec![
             ("platform", json::s(&self.platform_key)),
@@ -115,6 +131,7 @@ pub struct Scheduler {
 }
 
 impl Scheduler {
+    /// An empty queue with the given TTL.
     pub fn new(ttl_s: u64) -> Scheduler {
         Scheduler {
             ttl_s,
@@ -124,14 +141,17 @@ impl Scheduler {
         }
     }
 
+    /// The configured staleness TTL in seconds.
     pub fn ttl_s(&self) -> u64 {
         self.ttl_s
     }
 
+    /// Queued task count.
     pub fn len(&self) -> usize {
         self.queue.len()
     }
 
+    /// Whether the queue is empty.
     pub fn is_empty(&self) -> bool {
         self.queue.is_empty()
     }
@@ -256,6 +276,7 @@ mod tests {
             platform_key: key.clone(),
             fingerprint: Some(host.clone()),
             entries: vec![entry(&key, "axpy", "n4096", 1000)],
+            portfolios: Vec::new(),
         };
         let mut sched = Scheduler::new(3600);
         // Within TTL: nothing queued.
@@ -280,6 +301,7 @@ mod tests {
             platform_key: fp(1024).key(),
             fingerprint: Some(drifted_fp),
             entries: vec![entry("x", "axpy", "n4096", u64::MAX / 2)],
+            portfolios: Vec::new(),
         };
         let mut sched = Scheduler::new(u64::MAX);
         assert_eq!(sched.scan(std::slice::from_ref(&shard), &host, u64::MAX / 2), 1);
@@ -300,6 +322,7 @@ mod tests {
             platform_key: "remote-box".into(),
             fingerprint: Some(fp(512)),
             entries: vec![entry("remote-box", "axpy", "n4096", 5000)],
+            portfolios: Vec::new(),
         };
         let mut sched = Scheduler::new(u64::MAX);
         assert_eq!(sched.scan(&[shard], &host, 6000), 0);
@@ -320,6 +343,7 @@ mod tests {
             platform_key: key.clone(),
             fingerprint: Some(host.clone()),
             entries: vec![entry(&key, "axpy", "n4096", 5000)],
+            portfolios: Vec::new(),
         };
         let mut sched = Scheduler::new(3600);
         assert_eq!(sched.scan(&[shard], &host, 5100), 0);
@@ -334,11 +358,13 @@ mod tests {
             platform_key: "other-box".into(),
             fingerprint: None,
             entries: vec![entry("other-box", "axpy", "n4096", 100)],
+            portfolios: Vec::new(),
         };
         let mine = Shard {
             platform_key: host.key(),
             fingerprint: Some(host.clone()),
             entries: vec![entry(&host.key(), "dot", "n4096", 100)],
+            portfolios: Vec::new(),
         };
         assert_eq!(sched.scan(&[foreign, mine], &host, 1_000_000), 2);
         // The host worker pops only its own task...

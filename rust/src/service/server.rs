@@ -27,6 +27,7 @@ use anyhow::Result;
 
 use crate::coordinator::perfdb::{unix_now, DbEntry, ShardedDb};
 use crate::coordinator::platform::Fingerprint;
+use crate::coordinator::portfolio::{Portfolio, PortfolioItem};
 use crate::coordinator::search::Exhaustive;
 use crate::coordinator::tuner::Tuner;
 use crate::runtime::Registry;
@@ -66,18 +67,22 @@ pub struct Lru<K: Eq + Hash + Clone, V: Clone> {
 }
 
 impl<K: Eq + Hash + Clone, V: Clone> Lru<K, V> {
+    /// An LRU holding at most `cap` entries (0 disables storage).
     pub fn new(cap: usize) -> Lru<K, V> {
         Lru { cap, tick: 0, map: HashMap::new() }
     }
 
+    /// Live entry count.
     pub fn len(&self) -> usize {
         self.map.len()
     }
 
+    /// Whether the cache is empty.
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
     }
 
+    /// Fetch (and freshness-stamp) a cached value.
     pub fn get(&mut self, key: &K) -> Option<V> {
         self.tick += 1;
         let tick = self.tick;
@@ -86,6 +91,8 @@ impl<K: Eq + Hash + Clone, V: Clone> Lru<K, V> {
         Some(value.clone())
     }
 
+    /// Insert a value, evicting the least-recently-stamped entry when
+    /// full.
     pub fn put(&mut self, key: K, value: V) {
         if self.cap == 0 {
             return;
@@ -101,8 +108,15 @@ impl<K: Eq + Hash + Clone, V: Clone> Lru<K, V> {
         self.map.insert(key, (self.tick, value));
     }
 
+    /// Drop one key (cache invalidation).
     pub fn remove(&mut self, key: &K) {
         self.map.remove(key);
+    }
+
+    /// Keep only entries whose key satisfies the predicate (bulk
+    /// invalidation, e.g. "everything for this platform").
+    pub fn retain(&mut self, mut keep: impl FnMut(&K) -> bool) {
+        self.map.retain(|k, _| keep(k));
     }
 }
 
@@ -133,6 +147,8 @@ struct Counters {
     shard_reads: AtomicU64,
     records: AtomicU64,
     transfer_misses: AtomicU64,
+    portfolios: AtomicU64,
+    portfolio_transfers: AtomicU64,
     retune_queued: AtomicU64,
     retunes: AtomicU64,
     errors: AtomicU64,
@@ -142,16 +158,31 @@ struct Counters {
 /// analogue of [`crate::coordinator::tuner::TuneStats`]).
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct ServeStats {
+    /// `lookup` ops served.
     pub lookups: u64,
+    /// `deploy` ops served.
     pub deploys: u64,
+    /// Lookups answered from the decision cache.
     pub lru_hits: u64,
+    /// Lookups that read a shard file.
     pub shard_reads: u64,
+    /// `record` ops served.
     pub records: u64,
+    /// Deploy misses answered via transfer ranking.
     pub transfer_misses: u64,
+    /// `portfolio` ops served.
+    pub portfolios: u64,
+    /// `portfolio` ops that missed locally and answered via transfer.
+    pub portfolio_transfers: u64,
+    /// Tasks the staleness scan has queued.
     pub retune_queued: u64,
+    /// Re-tunes the local worker completed.
     pub retunes: u64,
+    /// Requests that errored (malformed lines included).
     pub errors: u64,
+    /// Current staleness-queue depth.
     pub retune_queue_depth: u64,
+    /// Current decision-cache entry count.
     pub lru_len: u64,
 }
 
@@ -160,6 +191,13 @@ type DecisionKey = (String, String, String);
 /// A cached decision: when it was read from the shard, and what it was.
 type Decision = (std::time::Instant, Option<DbEntry>);
 
+/// Portfolio-cache key: (platform, kernel).
+type PortfolioKey = (String, String);
+
+/// A cached portfolio read: when it was read, the shard's stored
+/// fingerprint (drives selection features), and the portfolio itself.
+type PortfolioDecision = (std::time::Instant, Option<Fingerprint>, Option<Portfolio>);
+
 /// The daemon: shard store + LRU + scheduler + counters.
 pub struct Server {
     db: ShardedDb,
@@ -167,6 +205,15 @@ pub struct Server {
     host_key: String,
     opts: ServeOpts,
     lru: Mutex<Lru<DecisionKey, Decision>>,
+    /// `portfolio`-op cache over the shards.  No generation counter:
+    /// the daemon has no portfolio-writing op (`portfolio build` runs
+    /// out of band), so for the portfolio *itself* the TTL is the
+    /// staleness bound — the same guarantee [`DECISION_CACHE_TTL`]
+    /// gives entry decisions against out-of-band writers.  The cached
+    /// *fingerprint* half, however, IS written in-band (a `record` op
+    /// may update the shard's fingerprint), so `invalidate` drops the
+    /// platform's portfolio entries too.
+    portfolio_lru: Mutex<Lru<PortfolioKey, PortfolioDecision>>,
     /// Bumped by every invalidation.  `cached_lookup` snapshots it
     /// before the (unlocked) shard read and declines to populate the
     /// cache if it moved — otherwise a concurrent record could land
@@ -179,6 +226,7 @@ pub struct Server {
 }
 
 impl Server {
+    /// A daemon core over a shard store, serving as `host`.
     pub fn new(db: ShardedDb, host: Fingerprint, opts: ServeOpts) -> Server {
         let host_key = host.key();
         Server {
@@ -186,6 +234,7 @@ impl Server {
             host,
             host_key,
             lru: Mutex::new(Lru::new(opts.lru_cap)),
+            portfolio_lru: Mutex::new(Lru::new(opts.lru_cap)),
             cache_gen: AtomicU64::new(0),
             scheduler: Mutex::new(Scheduler::new(opts.ttl_s)),
             opts,
@@ -194,18 +243,22 @@ impl Server {
         }
     }
 
+    /// The backing shard store.
     pub fn db(&self) -> &ShardedDb {
         &self.db
     }
 
+    /// The fingerprint the daemon serves as.
     pub fn host(&self) -> &Fingerprint {
         &self.host
     }
 
+    /// The daemon's configuration.
     pub fn opts(&self) -> &ServeOpts {
         &self.opts
     }
 
+    /// Whether shutdown has been requested.
     pub fn is_shutdown(&self) -> bool {
         self.shutdown.load(Ordering::SeqCst)
     }
@@ -253,11 +306,47 @@ impl Server {
         Ok(found)
     }
 
+    /// Portfolio read through its cache (fingerprint rides along: it
+    /// lives in the same shard file and selection needs it).
+    fn cached_portfolio(
+        &self,
+        platform: &str,
+        kernel: &str,
+    ) -> Result<(Option<Fingerprint>, Option<Portfolio>)> {
+        let key = (platform.to_string(), kernel.to_string());
+        {
+            let mut lru = self.portfolio_lru.lock().unwrap();
+            match lru.get(&key) {
+                Some((read_at, fp, p)) if read_at.elapsed() < DECISION_CACHE_TTL => {
+                    self.bump(&self.counters.lru_hits);
+                    return Ok((fp, p));
+                }
+                Some(_) => lru.remove(&key), // expired
+                None => {}
+            }
+        }
+        self.bump(&self.counters.shard_reads);
+        let shard = self.db.load(platform)?;
+        let fp = shard.as_ref().and_then(|s| s.fingerprint.clone());
+        let p = shard.as_ref().and_then(|s| s.portfolio(kernel).cloned());
+        self.portfolio_lru
+            .lock()
+            .unwrap()
+            .put(key, (std::time::Instant::now(), fp.clone(), p.clone()));
+        Ok((fp, p))
+    }
+
     fn invalidate(&self, platform: &str, kernel: &str, tag: &str) {
         let key = (platform.to_string(), kernel.to_string(), tag.to_string());
         let mut lru = self.lru.lock().unwrap();
         self.cache_gen.fetch_add(1, Ordering::SeqCst);
         lru.remove(&key);
+        drop(lru);
+        // The write may have replaced the shard's fingerprint, which
+        // the portfolio cache stores for selection features — drop the
+        // platform's portfolio entries (every kernel) so the next
+        // portfolio op re-reads it.
+        self.portfolio_lru.lock().unwrap().retain(|(p, _)| p != platform);
     }
 
     /// Counter snapshot (plus live queue/cache depths).
@@ -269,6 +358,8 @@ impl Server {
             shard_reads: self.counters.shard_reads.load(Ordering::Relaxed),
             records: self.counters.records.load(Ordering::Relaxed),
             transfer_misses: self.counters.transfer_misses.load(Ordering::Relaxed),
+            portfolios: self.counters.portfolios.load(Ordering::Relaxed),
+            portfolio_transfers: self.counters.portfolio_transfers.load(Ordering::Relaxed),
             retune_queued: self.counters.retune_queued.load(Ordering::Relaxed),
             retunes: self.counters.retunes.load(Ordering::Relaxed),
             errors: self.counters.errors.load(Ordering::Relaxed),
@@ -375,6 +466,56 @@ impl Server {
                     "stats",
                     crate::report::stats::serve_stats_json(&self.stats()),
                 )]))
+            }
+            Request::Portfolio { platform, kernel, dims, fingerprint } => {
+                self.bump(&self.counters.portfolios);
+                let platform = platform.as_deref().unwrap_or(&self.host_key);
+                let (stored_fp, portfolio) = self.cached_portfolio(platform, kernel)?;
+                // Selection features depend on cache geometry; the
+                // target platform's stored fingerprint is authoritative,
+                // then the request's, then the host's (same precedence
+                // as deploy's transfer ranking).
+                let target =
+                    stored_fp.as_ref().or(fingerprint.as_ref()).unwrap_or(&self.host).clone();
+                if let Some(p) = portfolio {
+                    let mut fields = vec![
+                        ("found", Json::Bool(true)),
+                        ("source", json::s("exact")),
+                        ("platform", json::s(platform)),
+                        ("portfolio", p.to_json()),
+                    ];
+                    if let Some(dims) = dims {
+                        if let Some(item) = p.select_for_dims(dims, &target) {
+                            fields.push(("selected", portfolio_item_json(item)));
+                        }
+                    }
+                    return Ok(reply_ok(fields));
+                }
+                // Miss: answer with the nearest platform's portfolio
+                // instead of nothing — portfolios transfer exactly like
+                // single tuned configs do.  (Uncached by design: like
+                // deploy's transfer path, it is the cold fallback.)
+                let shards = self.db.all_shards()?;
+                let ranked = transfer::rank_portfolios(&shards, &target, kernel, platform);
+                match ranked.into_iter().next() {
+                    Some(c) => {
+                        self.bump(&self.counters.portfolio_transfers);
+                        let mut fields = vec![
+                            ("found", Json::Bool(true)),
+                            ("source", json::s("transfer")),
+                            ("platform", json::s(&c.platform_key)),
+                            ("similarity", json::num(c.similarity)),
+                            ("portfolio", c.portfolio.to_json()),
+                        ];
+                        if let Some(dims) = dims {
+                            if let Some(item) = c.portfolio.select_for_dims(dims, &target) {
+                                fields.push(("selected", portfolio_item_json(item)));
+                            }
+                        }
+                        Ok(reply_ok(fields))
+                    }
+                    None => Ok(reply_ok(vec![("found", Json::Bool(false))])),
+                }
             }
             Request::RetuneNext => {
                 let task = self.scheduler.lock().unwrap().pop();
@@ -612,6 +753,18 @@ impl Server {
         listener.set_nonblocking(true)?;
         self.run_accept_loop(move || listener.accept().map(|(stream, _peer)| stream))
     }
+}
+
+/// Compact wire view of a selected portfolio member (the part a deploy
+/// client actually consumes: which config to run).
+fn portfolio_item_json(item: &PortfolioItem) -> Json {
+    json::obj(vec![
+        ("config_id", json::s(&item.config_id)),
+        (
+            "params",
+            Json::Obj(item.config.iter().map(|(k, v)| (k.clone(), json::int(*v))).collect()),
+        ),
+    ])
 }
 
 /// The per-transport surface the accept loop needs: post-accept socket
@@ -854,6 +1007,159 @@ mod tests {
         });
         assert_eq!(reply.get("source").and_then(Json::as_str), Some("exact"));
         assert_eq!(srv.stats().transfer_misses, 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    fn test_portfolio(kernel: &str) -> crate::coordinator::portfolio::Portfolio {
+        use crate::coordinator::portfolio::{Portfolio, PortfolioItem, FEATURE_NAMES};
+        Portfolio {
+            kernel: kernel.into(),
+            strategy: "greedy-cover".into(),
+            k_max: 4,
+            retained: 0.93,
+            built_at: unix_now(),
+            feature_names: FEATURE_NAMES.iter().map(|s| s.to_string()).collect(),
+            items: vec![
+                PortfolioItem {
+                    config: [
+                        ("loop_order".to_string(), 1i64),
+                        ("tile_m".to_string(), 32i64),
+                    ]
+                    .into_iter()
+                    .collect(),
+                    config_id: "small_cfg".into(),
+                    centroid: vec![4.0, 4.0, 4.0, 1.0, -6.0],
+                    covered: vec!["m16n16k16".into()],
+                },
+                PortfolioItem {
+                    config: [
+                        ("loop_order".to_string(), 1i64),
+                        ("tile_m".to_string(), 128i64),
+                    ]
+                    .into_iter()
+                    .collect(),
+                    config_id: "large_cfg".into(),
+                    centroid: vec![9.0, 9.0, 9.0, 1.0, 2.0],
+                    covered: vec!["m512n512k512".into()],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn portfolio_exact_hit_selects_by_dims() {
+        let (srv, dir) = test_server("portfolio-exact");
+        srv.db().record_portfolio("p1", Some(&fp()), test_portfolio("gemm")).unwrap();
+        let reply = srv.handle_request(&Request::Portfolio {
+            platform: Some("p1".into()),
+            kernel: "gemm".into(),
+            dims: Some(
+                [("m".to_string(), 512i64), ("n".to_string(), 512), ("k".to_string(), 512)]
+                    .into_iter()
+                    .collect(),
+            ),
+            fingerprint: None,
+        });
+        assert_eq!(reply.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(reply.get("source").and_then(Json::as_str), Some("exact"));
+        assert_eq!(
+            reply
+                .get("portfolio")
+                .and_then(|p| p.get("kernel"))
+                .and_then(Json::as_str),
+            Some("gemm")
+        );
+        assert_eq!(
+            reply
+                .get("selected")
+                .and_then(|s| s.get("config_id"))
+                .and_then(Json::as_str),
+            Some("large_cfg"),
+            "a 512^3 workload must select the large-shape member"
+        );
+        let stats = srv.stats();
+        assert_eq!(stats.portfolios, 1);
+        assert_eq!(stats.portfolio_transfers, 0);
+        assert_eq!(stats.shard_reads, 1);
+        // A second identical op is served from the portfolio cache.
+        let reply = srv.handle_request(&Request::Portfolio {
+            platform: Some("p1".into()),
+            kernel: "gemm".into(),
+            dims: None,
+            fingerprint: None,
+        });
+        assert_eq!(reply.get("source").and_then(Json::as_str), Some("exact"));
+        let stats = srv.stats();
+        assert_eq!(stats.shard_reads, 1, "cached portfolio must not re-read the shard");
+        assert_eq!(stats.lru_hits, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn record_invalidates_cached_portfolio_fingerprint() {
+        let (srv, dir) = test_server("portfolio-inval");
+        srv.db().record_portfolio("p1", Some(&fp()), test_portfolio("gemm")).unwrap();
+        let req = Request::Portfolio {
+            platform: Some("p1".into()),
+            kernel: "gemm".into(),
+            dims: None,
+            fingerprint: None,
+        };
+        let _ = srv.handle_request(&req); // populates the portfolio cache
+        assert_eq!(srv.stats().shard_reads, 1);
+        // A record op may rewrite the shard's fingerprint (which the
+        // cache stores for selection) — it must bust the entry.
+        srv.handle_request(&Request::Record {
+            entry: Box::new(entry("p1", "axpy", "n4096", "whatever")),
+            fingerprint: Some(fp()),
+        });
+        let _ = srv.handle_request(&req);
+        assert_eq!(
+            srv.stats().shard_reads,
+            2,
+            "portfolio op after a record must re-read the shard"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn portfolio_miss_transfers_from_nearest_platform() {
+        let (srv, dir) = test_server("portfolio-transfer");
+        let near_fp = fp();
+        let mut far_fp = fp();
+        far_fp.simd = vec!["neon".into()];
+        far_fp.os = "macos".into();
+        srv.db().record_portfolio("near-p", Some(&near_fp), test_portfolio("gemm")).unwrap();
+        srv.db().record_portfolio("far-p", Some(&far_fp), test_portfolio("gemm")).unwrap();
+        let reply = srv.handle_request(&Request::Portfolio {
+            platform: Some("fresh-platform".into()),
+            kernel: "gemm".into(),
+            dims: None,
+            fingerprint: Some(fp()), // requester looks like near-p
+        });
+        assert_eq!(reply.get("source").and_then(Json::as_str), Some("transfer"));
+        assert_eq!(reply.get("platform").and_then(Json::as_str), Some("near-p"));
+        assert!(reply.get("similarity").and_then(Json::as_f64).unwrap() > 0.5);
+        assert_eq!(srv.stats().portfolio_transfers, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn portfolio_total_miss_reports_not_found() {
+        let (srv, dir) = test_server("portfolio-none");
+        let reply = srv.handle_request(&Request::Portfolio {
+            platform: None,
+            kernel: "gemm".into(),
+            dims: None,
+            fingerprint: None,
+        });
+        assert_eq!(reply.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(reply.get("found").and_then(Json::as_bool), Some(false));
+        assert_eq!(
+            srv.stats().portfolio_transfers,
+            0,
+            "a total miss is not a transfer answer"
+        );
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -18,6 +18,7 @@ use std::collections::HashSet;
 
 use crate::coordinator::perfdb::{DbEntry, Shard};
 use crate::coordinator::platform::Fingerprint;
+use crate::coordinator::portfolio::Portfolio;
 use crate::coordinator::spec::Config;
 
 /// One ranked warm-start candidate.
@@ -29,6 +30,7 @@ pub struct TransferCandidate {
     pub similarity: f64,
     /// Whether the entry's workload tag matches the requested one.
     pub same_workload: bool,
+    /// The borrowed tuning record.
     pub entry: DbEntry,
 }
 
@@ -95,6 +97,58 @@ pub fn warm_start_configs(candidates: &[TransferCandidate], cap: usize) -> Vec<C
     candidates.iter().take(cap).map(|c| c.entry.best_params.clone()).collect()
 }
 
+/// A portfolio recorded on another platform, ranked by fingerprint
+/// similarity to the target — what a `portfolio` op answers with when
+/// the asking platform never built one itself.
+#[derive(Debug, Clone)]
+pub struct PortfolioCandidate {
+    /// Where the portfolio was built.
+    pub platform_key: String,
+    /// Similarity of that platform to the target, in [0, 1].
+    pub similarity: f64,
+    /// The candidate portfolio itself.
+    pub portfolio: Portfolio,
+}
+
+/// Rank other platforms' portfolios for `kernel` by fingerprint
+/// similarity to `target`, nearest first (ties broken by retained
+/// coverage).  The same admissibility rules as entry transfer apply:
+/// the target's own shard is excluded, fingerprintless shards score
+/// [`MIN_SIMILARITY`] exactly, and anything below that floor is noise.
+pub fn rank_portfolios(
+    shards: &[Shard],
+    target: &Fingerprint,
+    kernel: &str,
+    exclude_key: &str,
+) -> Vec<PortfolioCandidate> {
+    let mut out: Vec<PortfolioCandidate> = Vec::new();
+    for shard in shards {
+        if shard.platform_key == exclude_key {
+            continue;
+        }
+        let similarity = match &shard.fingerprint {
+            Some(fp) => target.similarity(fp),
+            None => MIN_SIMILARITY,
+        };
+        if similarity < MIN_SIMILARITY {
+            continue;
+        }
+        if let Some(p) = shard.portfolio(kernel) {
+            out.push(PortfolioCandidate {
+                platform_key: shard.platform_key.clone(),
+                similarity,
+                portfolio: p.clone(),
+            });
+        }
+    }
+    out.sort_by(|a, b| {
+        b.similarity
+            .total_cmp(&a.similarity)
+            .then(b.portfolio.retained.total_cmp(&a.portfolio.retained))
+    });
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -128,7 +182,7 @@ mod tests {
     }
 
     fn shard(key: &str, fp: Option<Fingerprint>, entries: Vec<DbEntry>) -> Shard {
-        Shard { platform_key: key.into(), fingerprint: fp, entries }
+        Shard { platform_key: key.into(), fingerprint: fp, entries, portfolios: Vec::new() }
     }
 
     #[test]
@@ -224,6 +278,57 @@ mod tests {
         assert_eq!(ranked.len(), 2, "dup config id collapses");
         let configs = warm_start_configs(&ranked, 1);
         assert_eq!(configs.len(), 1);
+    }
+
+    fn portfolio(kernel: &str, retained: f64) -> Portfolio {
+        use crate::coordinator::portfolio::{PortfolioItem, FEATURE_NAMES};
+        Portfolio {
+            kernel: kernel.into(),
+            strategy: "greedy-cover".into(),
+            k_max: 4,
+            retained,
+            built_at: 1_700_000_000,
+            feature_names: FEATURE_NAMES.iter().map(|s| s.to_string()).collect(),
+            items: vec![PortfolioItem {
+                config: [("tile_m".to_string(), 32i64)].into_iter().collect(),
+                config_id: "o1_tm32_tn32_u4".into(),
+                centroid: vec![5.0; FEATURE_NAMES.len()],
+                covered: vec!["m32n32k32".into()],
+            }],
+        }
+    }
+
+    #[test]
+    fn portfolios_rank_nearest_platform_first() {
+        let target = fp(&["sse2", "avx", "avx2"], 32, 1024, 33792, 8);
+        let near = fp(&["sse2", "avx", "avx2"], 32, 512, 33792, 8);
+        let far = fp(&["neon"], 128, 4096, 0, 64);
+        let mut near_shard = shard("near", Some(near), vec![]);
+        near_shard.portfolios = vec![portfolio("gemm", 0.91)];
+        let mut far_shard = shard("far", Some(far), vec![]);
+        far_shard.portfolios = vec![portfolio("gemm", 0.99)];
+        let mut own = shard("local", Some(target.clone()), vec![]);
+        own.portfolios = vec![portfolio("gemm", 1.0)];
+        let mut wrong_kernel = shard("other", Some(target.clone()), vec![]);
+        wrong_kernel.portfolios = vec![portfolio("axpy", 1.0)];
+        let shards = vec![far_shard, near_shard, own, wrong_kernel];
+        let ranked = rank_portfolios(&shards, &target, "gemm", "local");
+        assert_eq!(ranked.len(), 2, "own shard and other kernels are excluded");
+        assert_eq!(ranked[0].platform_key, "near");
+        assert!(ranked[0].similarity > ranked[1].similarity);
+    }
+
+    #[test]
+    fn fingerprintless_portfolios_rank_last_but_contribute() {
+        let target = fp(&["avx2"], 32, 1024, 8192, 8);
+        let mut legacy = shard("legacy", None, vec![]);
+        legacy.portfolios = vec![portfolio("gemm", 0.99)];
+        let mut scored = shard("scored", Some(target.clone()), vec![]);
+        scored.portfolios = vec![portfolio("gemm", 0.90)];
+        let ranked = rank_portfolios(&[legacy, scored], &target, "gemm", "local");
+        assert_eq!(ranked.len(), 2);
+        assert_eq!(ranked[0].platform_key, "scored");
+        assert_eq!(ranked[1].similarity, MIN_SIMILARITY);
     }
 
     #[test]

@@ -22,13 +22,16 @@ pub struct Bench {
 /// One named measurement.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Section name as passed to [`Bench::run`].
     pub id: String,
+    /// Timing summary over the section's repetitions.
     pub summary: Summary,
     /// Optional derived metric (e.g. GFLOP/s) with its unit.
     pub metric: Option<(f64, String)>,
 }
 
 impl Bench {
+    /// A runner with the default (BENCH_QUICK-aware) budgets.
     pub fn new(name: &str) -> Bench {
         // BENCH_QUICK=1 shrinks budgets (used by `make test` smoke runs).
         let quick = std::env::var("BENCH_QUICK").is_ok();
@@ -40,12 +43,14 @@ impl Bench {
         }
     }
 
+    /// Override warmup and repetition counts.
     pub fn with_reps(mut self, warmup: usize, reps: usize) -> Bench {
         self.warmup = warmup;
         self.reps = reps.max(1);
         self
     }
 
+    /// The bench's display name.
     pub fn name(&self) -> &str {
         &self.name
     }
@@ -79,6 +84,7 @@ impl Bench {
         }
     }
 
+    /// Every recorded section, in run order.
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }

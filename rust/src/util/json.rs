@@ -13,15 +13,22 @@ use std::fmt::Write as _;
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// JSON `null`.
     Null,
+    /// JSON boolean.
     Bool(bool),
+    /// JSON number (always `f64`; our integers stay below 2^53).
     Num(f64),
+    /// JSON string.
     Str(String),
+    /// JSON array.
     Arr(Vec<Json>),
+    /// JSON object (sorted keys — deterministic serialization).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// The boolean value, if this is a `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -29,6 +36,7 @@ impl Json {
         }
     }
 
+    /// The numeric value, if this is a `Num`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -36,14 +44,17 @@ impl Json {
         }
     }
 
+    /// The numeric value truncated to `i64`, if this is a `Num`.
     pub fn as_i64(&self) -> Option<i64> {
         self.as_f64().map(|n| n as i64)
     }
 
+    /// The numeric value as `u64` (`None` when negative or non-numeric).
     pub fn as_u64(&self) -> Option<u64> {
         self.as_f64().and_then(|n| if n >= 0.0 { Some(n as u64) } else { None })
     }
 
+    /// The string slice, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -51,6 +62,7 @@ impl Json {
         }
     }
 
+    /// The element slice, if this is an `Arr`.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -58,6 +70,7 @@ impl Json {
         }
     }
 
+    /// The key→value map, if this is an `Obj`.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(o) => Some(o),
@@ -185,7 +198,9 @@ fn write_escaped(out: &mut String, s: &str) {
 /// Parse error with byte offset for diagnostics.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ParseError {
+    /// Byte offset of the failure in the input.
     pub offset: usize,
+    /// Human-readable description of what was expected.
     pub message: String,
 }
 
@@ -425,18 +440,22 @@ pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
+/// A `Json::Num` from an `f64`.
 pub fn num(n: f64) -> Json {
     Json::Num(n)
 }
 
+/// A `Json::Num` from an integer (exact below 2^53).
 pub fn int(n: i64) -> Json {
     Json::Num(n as f64)
 }
 
+/// A `Json::Str` from a string slice.
 pub fn s(v: &str) -> Json {
     Json::Str(v.to_string())
 }
 
+/// A `Json::Arr` from a vector of values.
 pub fn arr(items: Vec<Json>) -> Json {
     Json::Arr(items)
 }

@@ -22,6 +22,7 @@ impl Rng {
         Rng { state, spare_gauss: None }
     }
 
+    /// Next raw 64-bit output of the generator.
     pub fn next_u64(&mut self) -> u64 {
         let mut x = self.state;
         x ^= x >> 12;

@@ -10,13 +10,19 @@
 /// Summary statistics over a sample of timings (seconds).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Summary {
+    /// Sample count.
     pub n: usize,
+    /// Fastest observation.
     pub min: f64,
+    /// Slowest observation.
     pub max: f64,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Median — the robust central estimate tuning decisions key off.
     pub median: f64,
     /// Median absolute deviation (unscaled).
     pub mad: f64,
+    /// Sample standard deviation (n−1 denominator).
     pub stddev: f64,
 }
 

@@ -1,0 +1,413 @@
+//! Dense GEMM (C = A·B) — the canonical autotuning stress test.
+//!
+//! The Kernel Tuning Toolkit benchmark paper (Petrovič et al. 2019)
+//! uses dense matrix multiply as its reference workload because its
+//! schedule space (tiling, loop order, unrolling) exposes every cache
+//! and ILP effect an autotuner must navigate.  This module is the
+//! *native* GEMM family: the blocked/tiled kernel runs host-side in
+//! Rust, so the whole sweep → portfolio → serve story is hermetic — no
+//! pre-lowered artifacts or PJRT runtime required.  A naive
+//! triple-loop reference provides the correctness oracle, exactly as
+//! the artifact-backed families gate against their XLA baseline.
+//!
+//! Tuning dimensions (see [`space`]):
+//!
+//! * `loop_order` — ijk (dot-product form), ikj (row-streaming, the
+//!   cache-friendly order for row-major operands), jki (column-walking);
+//! * `tile_m` / `tile_n` — the i/j blocking factors (tiles clamp at
+//!   matrix edges, so every config is valid for every shape);
+//! * `unroll` — manual unroll factor of the innermost loop.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::spec::{Config, TuningSpec};
+use crate::runtime::registry::ParamDef;
+use crate::util::rng::Rng;
+
+/// The kernel name GEMM records use in the perf DB and serve protocol.
+pub const KERNEL: &str = "gemm";
+
+/// One dense GEMM problem shape: C[m,n] = A[m,k] · B[k,n].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemmShape {
+    /// Rows of A and C.
+    pub m: usize,
+    /// Columns of B and C.
+    pub n: usize,
+    /// Columns of A / rows of B (the reduction dimension).
+    pub k: usize,
+}
+
+impl GemmShape {
+    /// Construct a shape (all dimensions must be non-zero).
+    pub fn new(m: usize, n: usize, k: usize) -> GemmShape {
+        assert!(m > 0 && n > 0 && k > 0, "GEMM dims must be non-zero");
+        GemmShape { m, n, k }
+    }
+
+    /// Workload tag used as the perf-DB key, e.g. `m128n128k64`.
+    pub fn tag(&self) -> String {
+        format!("m{}n{}k{}", self.m, self.n, self.k)
+    }
+
+    /// Dims map in the manifest/workload convention.
+    pub fn dims(&self) -> BTreeMap<String, i64> {
+        [
+            ("m".to_string(), self.m as i64),
+            ("n".to_string(), self.n as i64),
+            ("k".to_string(), self.k as i64),
+        ]
+        .into_iter()
+        .collect()
+    }
+
+    /// Multiply-add flop count (2·m·n·k).
+    pub fn flops(&self) -> u64 {
+        2 * self.m as u64 * self.n as u64 * self.k as u64
+    }
+
+    /// Total operand + result footprint in bytes (f32 A, B, C).
+    pub fn footprint_bytes(&self) -> u64 {
+        4 * (self.m as u64 * self.k as u64
+            + self.k as u64 * self.n as u64
+            + self.m as u64 * self.n as u64)
+    }
+}
+
+/// The standard shape sweep the portfolio experiments run over: square
+/// sizes crossing the cache hierarchy plus skinny/tall/deep rectangles
+/// (the shapes "A Few Fit Most" shows cluster into a few regimes).
+pub fn default_sweep() -> Vec<GemmShape> {
+    vec![
+        GemmShape::new(32, 32, 32),
+        GemmShape::new(64, 64, 64),
+        GemmShape::new(96, 96, 96),
+        GemmShape::new(160, 160, 160),
+        GemmShape::new(192, 192, 64),
+        GemmShape::new(256, 64, 32),
+        GemmShape::new(64, 256, 32),
+        GemmShape::new(32, 32, 512),
+        GemmShape::new(512, 16, 64),
+        GemmShape::new(24, 24, 96),
+    ]
+}
+
+/// Shrunk sweep for smoke runs (`BENCH_QUICK`, CI, `--quick`).
+pub fn quick_sweep() -> Vec<GemmShape> {
+    vec![
+        GemmShape::new(24, 24, 24),
+        GemmShape::new(48, 48, 48),
+        GemmShape::new(64, 16, 16),
+        GemmShape::new(16, 64, 32),
+    ]
+}
+
+/// The GEMM schedule space in canonical parameter order.  Shape-
+/// independent: tiles clamp at matrix edges, so no constraints prune
+/// the space and every shape shares one config enumeration (which is
+/// what lets a portfolio config apply across the whole sweep).
+pub fn space() -> TuningSpec {
+    TuningSpec::new(
+        KERNEL,
+        "space",
+        vec![
+            ParamDef { name: "loop_order".into(), abbrev: "o".into(), values: vec![0, 1, 2] },
+            ParamDef { name: "tile_m".into(), abbrev: "tm".into(), values: vec![8, 32, 128] },
+            ParamDef { name: "tile_n".into(), abbrev: "tn".into(), values: vec![8, 32, 128] },
+            ParamDef { name: "unroll".into(), abbrev: "u".into(), values: vec![1, 4] },
+        ],
+        &[],
+        BTreeMap::new(),
+    )
+    .expect("gemm space has no constraints to fail parsing")
+}
+
+/// Every config of [`space`], in canonical enumeration order.
+pub fn configs() -> Vec<Config> {
+    space().enumerate()
+}
+
+/// The un-annotated default schedule: naive loop order, effectively
+/// untiled (tile 128 covers most sweep shapes whole), no unrolling —
+/// what a programmer writes before tuning.  This is the single-default
+/// comparator of the portfolio bench.
+pub fn default_config() -> Config {
+    [
+        ("loop_order".to_string(), 0i64),
+        ("tile_m".to_string(), 128i64),
+        ("tile_n".to_string(), 128i64),
+        ("unroll".to_string(), 1i64),
+    ]
+    .into_iter()
+    .collect()
+}
+
+/// Deterministic operands for a shape: (A[m·k], B[k·n]) row-major,
+/// standard normal, seeded by (seed, tag) like every other workload
+/// generator.
+pub fn inputs(shape: GemmShape, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in shape.tag().bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    let mut rng = Rng::new(seed ^ h);
+    let a = rng.gauss_vec_f32(shape.m * shape.k);
+    let b = rng.gauss_vec_f32(shape.k * shape.n);
+    (a, b)
+}
+
+/// Naive triple-loop reference (ascending-k accumulation) — the
+/// correctness oracle every tiled variant is gated against.
+pub fn reference(a: &[f32], b: &[f32], shape: GemmShape) -> Vec<f32> {
+    let GemmShape { m, n, k } = shape;
+    assert_eq!(a.len(), m * k, "A shape mismatch");
+    assert_eq!(b.len(), k * n, "B shape mismatch");
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut s = 0.0f32;
+            for l in 0..k {
+                s += a[i * k + l] * b[l * n + j];
+            }
+            c[i * n + j] = s;
+        }
+    }
+    c
+}
+
+/// Run the blocked/tiled GEMM under a schedule config (see module docs
+/// for the dimensions).  Handles odd/rectangular shapes by clamping
+/// tiles at the edges; unknown/missing parameters fall back to the
+/// naive schedule, so a transferred config from a richer space still
+/// executes.
+pub fn run_config(a: &[f32], b: &[f32], shape: GemmShape, config: &Config) -> Vec<f32> {
+    let GemmShape { m, n, k } = shape;
+    assert_eq!(a.len(), m * k, "A shape mismatch");
+    assert_eq!(b.len(), k * n, "B shape mismatch");
+    let param = |name: &str, fallback: i64| -> usize {
+        config.get(name).copied().unwrap_or(fallback).max(1) as usize
+    };
+    let tile_m = param("tile_m", 128);
+    let tile_n = param("tile_n", 128);
+    let unroll = param("unroll", 1).min(MAX_UNROLL);
+    let order = config.get("loop_order").copied().unwrap_or(0);
+
+    let mut c = vec![0.0f32; m * n];
+    let mut i0 = 0;
+    while i0 < m {
+        let i1 = (i0 + tile_m).min(m);
+        let mut j0 = 0;
+        while j0 < n {
+            let j1 = (j0 + tile_n).min(n);
+            match order {
+                1 => tile_ikj(a, b, &mut c, (n, k), (i0, i1), (j0, j1), unroll),
+                2 => tile_jki(a, b, &mut c, (n, k), (i0, i1), (j0, j1), unroll),
+                _ => tile_ijk(a, b, &mut c, (n, k), (i0, i1), (j0, j1), unroll),
+            }
+            j0 = j1;
+        }
+        i0 = i1;
+    }
+    c
+}
+
+/// Hard cap on the unroll factor (sizes the accumulator array).
+const MAX_UNROLL: usize = 8;
+
+/// ijk within a tile: dot-product form, `unroll` partial accumulators
+/// over the reduction (re-associates the sum — gated by tolerance).
+fn tile_ijk(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    (n, k): (usize, usize),
+    (i0, i1): (usize, usize),
+    (j0, j1): (usize, usize),
+    unroll: usize,
+) {
+    for i in i0..i1 {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in j0..j1 {
+            let mut acc = [0.0f32; MAX_UNROLL];
+            let chunks = k / unroll * unroll;
+            let mut l = 0;
+            while l < chunks {
+                for lane in 0..unroll {
+                    acc[lane] += arow[l + lane] * b[(l + lane) * n + j];
+                }
+                l += unroll;
+            }
+            let mut s = 0.0f32;
+            for value in acc.iter().take(unroll) {
+                s += value;
+            }
+            while l < k {
+                s += arow[l] * b[l * n + j];
+                l += 1;
+            }
+            c[i * n + j] = s;
+        }
+    }
+}
+
+/// ikj within a tile: stream one A element against a B row slice into
+/// the C row slice (row-major friendly).  Accumulation stays in
+/// ascending-k order for every element, so the result is bit-identical
+/// to the reference at any unroll.
+fn tile_ikj(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    (n, k): (usize, usize),
+    (i0, i1): (usize, usize),
+    (j0, j1): (usize, usize),
+    unroll: usize,
+) {
+    let width = j1 - j0;
+    let chunks = width / unroll * unroll;
+    for i in i0..i1 {
+        for l in 0..k {
+            let ail = a[i * k + l];
+            let brow = &b[l * n + j0..l * n + j1];
+            let crow = &mut c[i * n + j0..i * n + j1];
+            let mut idx = 0;
+            while idx < chunks {
+                for lane in 0..unroll {
+                    crow[idx + lane] += ail * brow[idx + lane];
+                }
+                idx += unroll;
+            }
+            while idx < width {
+                crow[idx] += ail * brow[idx];
+                idx += 1;
+            }
+        }
+    }
+}
+
+/// jki within a tile: walk columns of C with i innermost (strided —
+/// the deliberately cache-hostile order).  Ascending-k accumulation,
+/// bit-identical to the reference at any unroll.
+fn tile_jki(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    (n, k): (usize, usize),
+    (i0, i1): (usize, usize),
+    (j0, j1): (usize, usize),
+    unroll: usize,
+) {
+    let height = i1 - i0;
+    let chunks = height / unroll * unroll;
+    for j in j0..j1 {
+        for l in 0..k {
+            let blj = b[l * n + j];
+            let mut idx = 0;
+            while idx < chunks {
+                for lane in 0..unroll {
+                    let i = i0 + idx + lane;
+                    c[i * n + j] += a[i * k + l] * blj;
+                }
+                idx += unroll;
+            }
+            while idx < height {
+                let i = i0 + idx;
+                c[i * n + j] += a[i * k + l] * blj;
+                idx += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::selection::{check_outputs, Tolerance};
+
+    #[test]
+    fn space_is_shape_independent_and_sized() {
+        let all = configs();
+        assert_eq!(all.len(), 3 * 3 * 3 * 2);
+        let spec = space();
+        assert!(all.iter().all(|c| spec.is_valid(c)));
+        assert!(all.contains(&default_config()));
+    }
+
+    #[test]
+    fn config_ids_follow_declaration_order() {
+        let spec = space();
+        assert_eq!(spec.config_id(&default_config()), "o0_tm128_tn128_u1");
+    }
+
+    #[test]
+    fn inputs_are_deterministic_per_shape_and_seed() {
+        let s = GemmShape::new(8, 6, 4);
+        let (a1, b1) = inputs(s, 7);
+        let (a2, b2) = inputs(s, 7);
+        assert_eq!(a1, a2);
+        assert_eq!(b1, b2);
+        let (a3, _) = inputs(s, 8);
+        assert_ne!(a1, a3);
+        assert_eq!(a1.len(), 8 * 4);
+        assert_eq!(b1.len(), 4 * 6);
+    }
+
+    #[test]
+    fn identity_times_anything_is_identity() {
+        // A = I (4x4), B arbitrary: C must equal B for every config.
+        let shape = GemmShape::new(4, 5, 4);
+        let mut a = vec![0.0f32; 16];
+        for i in 0..4 {
+            a[i * 4 + i] = 1.0;
+        }
+        let (_, b) = inputs(shape, 3);
+        for config in configs() {
+            let c = run_config(&a, &b, shape, &config);
+            assert_eq!(c, b, "config {:?}", space().config_id(&config));
+        }
+    }
+
+    #[test]
+    fn every_config_matches_reference_on_odd_shapes() {
+        let tol = Tolerance::default();
+        for shape in [
+            GemmShape::new(1, 1, 1),
+            GemmShape::new(3, 5, 7),
+            GemmShape::new(37, 17, 29),
+            GemmShape::new(65, 33, 17),
+            GemmShape::new(128, 1, 8),
+        ] {
+            let (a, b) = inputs(shape, 11);
+            let want = reference(&a, &b, shape);
+            for config in configs() {
+                let got = run_config(&a, &b, shape, &config);
+                let report = check_outputs(&got, &want, tol);
+                assert!(
+                    report.ok,
+                    "{} vs reference on {}: max abs err {:.3e}",
+                    space().config_id(&config),
+                    shape.tag(),
+                    report.max_abs_err
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_params_fall_back_to_naive_schedule() {
+        let shape = GemmShape::new(6, 6, 6);
+        let (a, b) = inputs(shape, 2);
+        let got = run_config(&a, &b, shape, &Config::new());
+        assert_eq!(got, reference(&a, &b, shape));
+    }
+
+    #[test]
+    fn shape_derivations() {
+        let s = GemmShape::new(128, 64, 32);
+        assert_eq!(s.tag(), "m128n64k32");
+        assert_eq!(s.flops(), 2 * 128 * 64 * 32);
+        assert_eq!(s.footprint_bytes(), 4 * (128 * 32 + 32 * 64 + 128 * 64));
+        assert_eq!(s.dims()["m"], 128);
+    }
+}

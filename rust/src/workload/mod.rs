@@ -6,6 +6,7 @@
 //! generation is seeded (xorshift) so tuning, tests, and benches see
 //! identical data run-to-run.
 
+pub mod gemm;
 pub mod spmv;
 pub mod stencil;
 pub mod vectors;
@@ -65,7 +66,11 @@ pub fn inputs_for(kernel: &str, wl: &Workload, seed: u64) -> Result<Vec<TensorDa
             let x = vectors::gauss(&mut rng, nrows);
             vec![values, col_idx, x]
         }
-        "matmul" => {
+        // The native GEMM family (workload::gemm) shares the matmul
+        // input signature; accepting both names here lets artifact-
+        // backed pipelines address the same (kernel, workload) keys the
+        // native sweep records.
+        "matmul" | "gemm" => {
             let (m, n, k) = (dim("m")?, dim("n")?, dim("k")?);
             vec![
                 TensorData::f32(vec![m, k], rng.gauss_vec_f32(m * k)),

@@ -1,0 +1,223 @@
+//! Property tests for the GEMM workload and the variant-portfolio
+//! engine — fully hermetic (native kernels, synthetic cost matrices).
+//!
+//! The load-bearing invariant: a portfolio is built FROM the measured
+//! matrix, so selection can never "beat" the true per-shape winner —
+//! for every build shape, the cost of any portfolio member (including
+//! the selected one) is ≥ the per-shape minimum by construction of the
+//! clustering.  If this ever fails, the builder fabricated performance
+//! that was never measured.
+
+use std::collections::BTreeMap;
+
+use portatune::coordinator::platform::Fingerprint;
+use portatune::coordinator::portfolio::{features_for, CostMatrix, ShapePoint};
+use portatune::coordinator::selection::{check_outputs, Tolerance};
+use portatune::coordinator::spec::Config;
+use portatune::util::rng::Rng;
+use portatune::workload::gemm::{self, GemmShape};
+
+fn fp() -> Fingerprint {
+    Fingerprint {
+        cpu_model: "Prop CPU".into(),
+        num_cpus: 8,
+        simd: vec!["avx2".into()],
+        cache_l1d_kb: 32,
+        cache_l2_kb: 1024,
+        cache_l3_kb: 8192,
+        os: "linux".into(),
+    }
+}
+
+/// Random cost matrices over random shape sets: seeded, replayable.
+fn random_matrix(rng: &mut Rng, nshapes: usize, nconfigs: usize) -> CostMatrix {
+    let host = fp();
+    let shapes: Vec<ShapePoint> = (0..nshapes)
+        .map(|_| {
+            let m = 1 << (3 + rng.gen_range(7)); // 8..=512
+            let n = 1 << (3 + rng.gen_range(7));
+            let k = 1 << (3 + rng.gen_range(7));
+            let dims: BTreeMap<String, i64> = [
+                ("m".to_string(), m as i64),
+                ("n".to_string(), n as i64),
+                ("k".to_string(), k as i64),
+            ]
+            .into_iter()
+            .collect();
+            ShapePoint {
+                tag: format!("m{m}n{n}k{k}"),
+                flops: (2 * m * n * k) as u64,
+                features: features_for(&dims, 1.0, &host),
+                dims,
+            }
+        })
+        .collect();
+    let configs: Vec<Config> = (0..nconfigs)
+        .map(|c| {
+            [("loop_order".to_string(), c as i64)]
+                .into_iter()
+                .collect()
+        })
+        .collect();
+    let costs: Vec<Vec<f64>> = (0..nshapes)
+        .map(|_| {
+            (0..nconfigs)
+                .map(|_| {
+                    if rng.next_f64() < 0.05 {
+                        f64::INFINITY // occasional gate failure
+                    } else {
+                        1e-4 + rng.next_f64() * 1e-2
+                    }
+                })
+                .collect()
+        })
+        .collect();
+    CostMatrix {
+        kernel: "gemm".into(),
+        shapes,
+        config_ids: (0..nconfigs).map(|c| format!("c{c}")).collect(),
+        configs,
+        costs,
+    }
+}
+
+/// The headline property: selection never picks a config whose cost on
+/// a build shape beats the true per-shape winner — and therefore the
+/// portfolio's retained fraction never exceeds 1.0.
+#[test]
+fn portfolio_never_beats_the_per_shape_winner() {
+    let mut rng = Rng::new(0xF0CA);
+    for case in 0..40 {
+        let nshapes = 2 + rng.gen_range(8);
+        let nconfigs = 2 + rng.gen_range(20);
+        let matrix = random_matrix(&mut rng, nshapes, nconfigs);
+        let k_max = 1 + rng.gen_range(4);
+        let Ok(portfolio) = matrix.build_portfolio(k_max, 0.9) else {
+            continue; // all-infinite matrices legitimately refuse
+        };
+        assert!(portfolio.len() <= k_max, "case {case}: size cap violated");
+        assert!(
+            portfolio.retained <= 1.0 + 1e-12,
+            "case {case}: retained {} > 1 — portfolio 'beat' measured per-shape tuning",
+            portfolio.retained
+        );
+        for (s, shape) in matrix.shapes.iter().enumerate() {
+            let Some((_, best)) = matrix.best_for_shape(s) else { continue };
+            // Every member's measured cost on this shape is >= best.
+            for item in &portfolio.items {
+                let col = matrix
+                    .config_ids
+                    .iter()
+                    .position(|id| *id == item.config_id)
+                    .expect("portfolio members come from the matrix");
+                assert!(
+                    matrix.costs[s][col] >= best - 1e-15,
+                    "case {case}: member {} beats the winner on {}",
+                    item.config_id,
+                    shape.tag
+                );
+            }
+            // ...including the one the deploy selector picks.
+            let selected = portfolio.select(&shape.features).expect("non-empty portfolio");
+            let col = matrix
+                .config_ids
+                .iter()
+                .position(|id| *id == selected.config_id)
+                .unwrap();
+            assert!(matrix.costs[s][col] >= best - 1e-15, "case {case}: selection beat tuning");
+        }
+    }
+}
+
+/// Retention grows (weakly) with the portfolio size cap.
+#[test]
+fn retention_is_monotone_in_k() {
+    let mut rng = Rng::new(0xBEEF);
+    for _ in 0..20 {
+        let matrix = random_matrix(&mut rng, 2 + rng.gen_range(6), 3 + rng.gen_range(12));
+        let mut last = 0.0;
+        for k in 1..=4 {
+            let Ok(p) = matrix.build_portfolio(k, 1.1) else { continue };
+            assert!(
+                p.retained + 1e-12 >= last,
+                "k={k}: retention dropped from {last} to {}",
+                p.retained
+            );
+            last = p.retained;
+        }
+    }
+}
+
+/// Members only ever cover shapes they actually win within the
+/// portfolio, and every covered tag exists in the sweep.
+#[test]
+fn coverage_partitions_the_build_shapes() {
+    let mut rng = Rng::new(0xC0FE);
+    for _ in 0..20 {
+        let matrix = random_matrix(&mut rng, 3 + rng.gen_range(6), 4 + rng.gen_range(10));
+        let Ok(p) = matrix.build_portfolio(3, 1.1) else { continue };
+        let tags: Vec<&str> = matrix.shapes.iter().map(|s| s.tag.as_str()).collect();
+        let mut covered_total = 0;
+        for item in &p.items {
+            assert!(!item.covered.is_empty(), "memberless items must be dropped");
+            covered_total += item.covered.len();
+            for tag in &item.covered {
+                assert!(tags.contains(&tag.as_str()), "unknown covered tag {tag}");
+            }
+        }
+        // Each shape with any finite cost among members is covered
+        // exactly once.
+        assert!(covered_total <= matrix.shapes.len());
+    }
+}
+
+/// GEMM correctness across the whole schedule space on shapes chosen
+/// to stress tile-edge handling: odd primes, degenerate dims, and
+/// rectangles bigger than every tile value.
+#[test]
+fn gemm_variants_match_reference_on_awkward_shapes() {
+    let tol = Tolerance::default();
+    let shapes = [
+        GemmShape::new(1, 1, 1),
+        GemmShape::new(2, 3, 1),
+        GemmShape::new(7, 7, 7),
+        GemmShape::new(31, 9, 13),
+        GemmShape::new(9, 31, 13),
+        GemmShape::new(129, 5, 33), // one past a tile boundary
+        GemmShape::new(40, 129, 17),
+    ];
+    let spec = gemm::space();
+    for shape in shapes {
+        let (a, b) = gemm::inputs(shape, 0xA11CE);
+        let want = gemm::reference(&a, &b, shape);
+        for config in gemm::configs() {
+            let got = gemm::run_config(&a, &b, shape, &config);
+            let report = check_outputs(&got, &want, tol);
+            assert!(
+                report.ok,
+                "{} on {}: {} mismatched, max abs err {:.3e}",
+                spec.config_id(&config),
+                shape.tag(),
+                report.mismatched,
+                report.max_abs_err
+            );
+        }
+    }
+}
+
+/// The ikj and jki orders accumulate in ascending-k order for every
+/// element, so they are bit-identical to the naive reference — a
+/// stronger-than-tolerance check that the tiling math is exact.
+#[test]
+fn ascending_k_orders_are_bitwise_exact() {
+    let shape = GemmShape::new(33, 21, 19);
+    let (a, b) = gemm::inputs(shape, 99);
+    let want = gemm::reference(&a, &b, shape);
+    for config in gemm::configs() {
+        if config["loop_order"] == 0 && config["unroll"] != 1 {
+            continue; // ijk re-associates under unroll; tolerance covers it
+        }
+        let got = gemm::run_config(&a, &b, shape, &config);
+        assert_eq!(got, want, "config {:?}", gemm::space().config_id(&config));
+    }
+}

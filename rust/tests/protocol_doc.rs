@@ -1,0 +1,123 @@
+//! docs/PROTOCOL.md is executable documentation: every `C:` example
+//! line must parse as a wire request (and round-trip through the
+//! serializer), every `S:` line must parse as a reply JSON object with
+//! the `ok` discriminant, and the examples must cover every op the
+//! parser knows.  If an op is added, renamed, or its fields change,
+//! either the spec or this test fails — the two cannot drift apart.
+
+use portatune::service::Request;
+use portatune::util::json::{self, Json};
+
+fn spec_text() -> String {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../docs/PROTOCOL.md");
+    std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("reading {path}: {e} — did docs/PROTOCOL.md move?"))
+}
+
+fn example_lines(prefix: &str) -> Vec<String> {
+    spec_text()
+        .lines()
+        .map(str::trim)
+        .filter_map(|l| l.strip_prefix(prefix).map(str::to_string))
+        .collect()
+}
+
+#[test]
+fn every_documented_request_parses_and_round_trips() {
+    let requests = example_lines("C: ");
+    assert!(!requests.is_empty(), "PROTOCOL.md has no C: example lines");
+    for line in &requests {
+        let parsed = Request::parse_line(line)
+            .unwrap_or_else(|e| panic!("documented request does not parse: {line}\n  {e:#}"));
+        let wire = parsed.to_line();
+        let reparsed = Request::parse_line(&wire)
+            .unwrap_or_else(|e| panic!("serialized form does not re-parse: {wire}\n  {e:#}"));
+        assert_eq!(
+            reparsed.to_line(),
+            wire,
+            "serializer is not a fixed point for documented request: {line}"
+        );
+    }
+}
+
+#[test]
+fn every_documented_reply_is_a_valid_reply_object() {
+    let replies = example_lines("S: ");
+    assert!(!replies.is_empty(), "PROTOCOL.md has no S: example lines");
+    for line in &replies {
+        let v = json::parse(line)
+            .unwrap_or_else(|e| panic!("documented reply does not parse: {line}\n  {e}"));
+        assert!(
+            v.get("ok").and_then(Json::as_bool).is_some(),
+            "documented reply lacks the ok discriminant: {line}"
+        );
+    }
+}
+
+#[test]
+fn examples_cover_every_op() {
+    let mut documented: Vec<String> = example_lines("C: ")
+        .iter()
+        .map(|line| {
+            json::parse(line)
+                .expect("C: lines are JSON")
+                .get("op")
+                .and_then(Json::as_str)
+                .expect("C: lines carry an op")
+                .to_string()
+        })
+        .collect();
+    documented.sort();
+    documented.dedup();
+    let mut expected = vec![
+        "deploy",
+        "lookup",
+        "ping",
+        "portfolio",
+        "record",
+        "retune-next",
+        "shutdown",
+        "stats",
+    ];
+    expected.sort_unstable();
+    assert_eq!(
+        documented, expected,
+        "PROTOCOL.md must document exactly the ops the parser knows"
+    );
+}
+
+/// Documented entry/fingerprint payloads must satisfy the typed
+/// parsers, not just the JSON grammar — a schema change to DbEntry or
+/// Fingerprint has to be reflected in the spec.
+#[test]
+fn documented_payloads_satisfy_typed_parsers() {
+    use portatune::coordinator::perfdb::DbEntry;
+    use portatune::coordinator::platform::Fingerprint;
+    use portatune::coordinator::portfolio::Portfolio;
+    let mut entries = 0;
+    let mut fingerprints = 0;
+    let mut portfolios = 0;
+    for line in example_lines("C: ").into_iter().chain(example_lines("S: ")) {
+        let v = json::parse(&line).expect("example lines are JSON");
+        if let Some(e) = v.get("entry") {
+            DbEntry::from_json(e).unwrap_or_else(|err| {
+                panic!("documented entry does not satisfy DbEntry::from_json: {err:#}\n{line}")
+            });
+            entries += 1;
+        }
+        if let Some(f) = v.get("fingerprint") {
+            assert!(
+                Fingerprint::from_json(f).is_some(),
+                "documented fingerprint does not satisfy Fingerprint::from_json: {line}"
+            );
+            fingerprints += 1;
+        }
+        if let Some(p) = v.get("portfolio") {
+            Portfolio::from_json(p).unwrap_or_else(|err| {
+                panic!("documented portfolio does not parse: {err:#}\n{line}")
+            });
+            portfolios += 1;
+        }
+    }
+    assert!(entries >= 2 && fingerprints >= 2 && portfolios >= 2, "spec lost its payload examples");
+}

@@ -1,0 +1,77 @@
+#!/usr/bin/env python3
+"""Markdown link checker for the repo's documentation set.
+
+Checks that every relative link target in the given markdown files
+exists on disk (anchors within a file are checked against its headings).
+External (http/https/mailto) links are not fetched — CI must stay
+hermetic — only their syntax is accepted.
+
+Usage: python3 tools/check_links.py README.md docs/*.md
+Exits non-zero when any link is broken.
+"""
+
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def headings_of(path):
+    """GitHub-style anchor slugs for every heading in a markdown file."""
+    slugs = set()
+    try:
+        with open(path, encoding="utf-8") as fh:
+            for line in fh:
+                if line.startswith("#"):
+                    text = line.lstrip("#").strip().lower()
+                    slug = re.sub(r"[^\w\- ]", "", text).replace(" ", "-")
+                    slugs.add(slug)
+    except OSError:
+        pass
+    return slugs
+
+
+def check_file(md_path):
+    errors = []
+    base = os.path.dirname(os.path.abspath(md_path))
+    with open(md_path, encoding="utf-8") as fh:
+        content = fh.read()
+    # Strip fenced code blocks: examples may contain bracketed text
+    # that is not a link.
+    content = re.sub(r"```.*?```", "", content, flags=re.S)
+    for target in LINK_RE.findall(content):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, anchor = target.partition("#")
+        if not path_part:  # same-file anchor
+            if anchor and anchor not in headings_of(md_path):
+                errors.append(f"{md_path}: broken anchor #{anchor}")
+            continue
+        resolved = os.path.normpath(os.path.join(base, path_part))
+        if not os.path.exists(resolved):
+            errors.append(f"{md_path}: broken link {target} -> {resolved}")
+        elif anchor and resolved.endswith(".md") and anchor not in headings_of(resolved):
+            errors.append(f"{md_path}: broken anchor {target}")
+    return errors
+
+
+def main(argv):
+    if len(argv) < 2:
+        print(__doc__)
+        return 2
+    all_errors = []
+    for md in argv[1:]:
+        if not os.path.exists(md):
+            all_errors.append(f"no such file: {md}")
+            continue
+        all_errors.extend(check_file(md))
+    for err in all_errors:
+        print(f"BROKEN: {err}")
+    if not all_errors:
+        print(f"ok: {len(argv) - 1} file(s), all links resolve")
+    return 1 if all_errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
