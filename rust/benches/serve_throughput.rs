@@ -11,6 +11,10 @@
 //!   shard, scores fingerprint similarity, ranks candidates.  The
 //!   slowest path by design; it exists so a fresh platform gets a
 //!   warm start instead of nothing.
+//! * **lease cycle** — one full worker checkout
+//!   (task-lease → heartbeat → complete) against a pre-filled queue:
+//!   the fleet-coordination overhead per task, which must be noise
+//!   next to the minutes a sweep or re-tune actually takes.
 //!
 //! Fully hermetic (no XLA, no artifacts): the store is synthesized into
 //! a temp dir.  Machine-readable tail line: `JSON: {...}` with
@@ -20,7 +24,7 @@
 
 use std::time::Instant;
 
-use portatune::coordinator::perfdb::{unix_now, DbEntry, ShardedDb};
+use portatune::coordinator::perfdb::{DbEntry, ShardedDb};
 use portatune::coordinator::platform::Fingerprint;
 use portatune::report::Table;
 use portatune::service::{Request, ServeOpts, Server};
@@ -66,7 +70,10 @@ fn synth_entry(platform_key: &str, kernel: &str, tag: &str, i: usize) -> DbEntry
         reference_time_s: 9e-4,
         evaluations: 16,
         strategy: "exhaustive".to_string(),
-        recorded_at: unix_now(),
+        // Ancient on purpose: the lookup paths never read this, and it
+        // lets the lease-cycle section below treat every frontier as
+        // stale without racing wall-clock time.
+        recorded_at: 1000,
     }
 }
 
@@ -160,10 +167,33 @@ fn main() -> anyhow::Result<()> {
         );
     });
 
+    // Lease cycle: every synthesized entry is ancient (recorded_at
+    // 1000), so one scan fills the queue; measure full
+    // lease → heartbeat → complete round trips against it.
+    let lease_srv = Server::new(db.clone(), host.clone(), ServeOpts::default());
+    let queued = lease_srv.scan_once()?;
+    let lease_n = queued.min(if quick { 50 } else { 300 });
+    let lease_per_s = rate(lease_n, |_| {
+        let reply = lease_srv.handle_request(&Request::TaskLease {
+            kind: None,
+            platform: None,
+            ttl_s: Some(600),
+        });
+        assert_eq!(reply.get("found").and_then(Json::as_bool), Some(true), "queue ran dry");
+        let lease_id = reply.get("lease_id").and_then(Json::as_u64).unwrap();
+        let reply = lease_srv.handle_request(&Request::TaskHeartbeat { lease_id });
+        assert_eq!(reply.get("extended").and_then(Json::as_bool), Some(true));
+        let reply = lease_srv.handle_request(&Request::TaskComplete { lease_id });
+        assert_eq!(reply.get("settled").and_then(Json::as_bool), Some(true));
+    });
+
     let mut t = Table::new(&["path", "lookups/sec", "vs cold"]);
-    for (name, per_s) in
-        [("cold shard", cold_per_s), ("warm LRU", warm_per_s), ("transfer miss", transfer_per_s)]
-    {
+    for (name, per_s) in [
+        ("cold shard", cold_per_s),
+        ("warm LRU", warm_per_s),
+        ("transfer miss", transfer_per_s),
+        ("lease cycle", lease_per_s),
+    ] {
         t.row(vec![
             name.to_string(),
             format!("{per_s:.0}"),
@@ -187,6 +217,7 @@ fn main() -> anyhow::Result<()> {
         ("cold_per_s", json::num(cold_per_s)),
         ("warm_lru_per_s", json::num(warm_per_s)),
         ("transfer_miss_per_s", json::num(transfer_per_s)),
+        ("lease_cycle_per_s", json::num(lease_per_s)),
         ("warm_over_cold", json::num(speedup)),
         ("platforms", json::int(platforms as i64)),
     ]);

@@ -480,6 +480,23 @@ pub fn sweep_measure_cfg(quick: bool) -> MeasureConfig {
     }
 }
 
+/// One-call native sweep for a kernel family: the standard shape sweep
+/// (`quick` selects the smoke-sized one), the standard measurement
+/// profile, default tolerance.  This is the execution path shared by
+/// `portatune tune --sweep`, `portatune portfolio build`, and the
+/// worker fleet's sweep / portfolio-rebuild tasks — errors (rather
+/// than panics) on kernels with no native implementation, so a worker
+/// can `task-fail` an unsupported task.
+pub fn sweep_native(kernel: &str, quick: bool, seed: u64, fp: &Fingerprint) -> Result<GemmSweep> {
+    anyhow::ensure!(
+        kernel == gemm::KERNEL,
+        "no native sweep for kernel {kernel:?} (only {:?} runs host-side)",
+        gemm::KERNEL
+    );
+    let shapes = if quick { gemm::quick_sweep() } else { gemm::default_sweep() };
+    sweep_gemm(&shapes, &sweep_measure_cfg(quick), Tolerance::default(), seed, fp)
+}
+
 /// Measure the full GEMM schedule space over a shape sweep (see module
 /// docs).  Every config is gated against the naive reference before
 /// timing; gate failures and measurement errors record `INFINITY` and
@@ -755,6 +772,12 @@ mod tests {
         tiny_cache.cache_l1d_kb = 1;
         let pressured = features_for(&GemmShape::new(16, 16, 16).dims(), 1.0, &tiny_cache);
         assert!(pressured[4] > small[4], "smaller cache raises pressure");
+    }
+
+    #[test]
+    fn sweep_native_refuses_non_native_kernels() {
+        let err = sweep_native("axpy", true, 7, &fp()).unwrap_err();
+        assert!(err.to_string().contains("no native sweep"), "{err:#}");
     }
 
     #[test]

@@ -35,6 +35,7 @@ pub mod report;
 pub mod runtime;
 pub mod service;
 pub mod util;
+pub mod worker;
 pub mod workload;
 
 // Without the `xla-runtime` feature the real `xla` crate (which needs the
@@ -65,5 +66,6 @@ pub mod prelude {
     pub use crate::coordinator::spec::{Config, TuningSpec};
     pub use crate::coordinator::tuner::{TuneOutcome, TuneStats, Tuner, VariantResult};
     pub use crate::runtime::{Executable, Registry, Runtime, TensorData};
-    pub use crate::service::{Client, Request, ServeOpts, Server};
+    pub use crate::service::{Client, Request, ServeOpts, Server, TaskKind, TuningTask};
+    pub use crate::worker::{Worker, WorkerOpts};
 }

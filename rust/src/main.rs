@@ -16,6 +16,7 @@
 //! portatune portfolio build|show          "few fit most" variant portfolios
 //! portatune serve                         tuning-as-a-service daemon (shard store)
 //! portatune query --op deploy ...         ask a running daemon
+//! portatune work                          fleet worker: lease → execute → report
 //! portatune db-migrate                    import a v1 perfdb.json into shards
 //! ```
 //!
@@ -32,16 +33,18 @@ use portatune::coordinator::annotation::{extract_blocks, Annotation};
 use portatune::coordinator::measure::MeasureConfig;
 use portatune::coordinator::perfdb::{PerfDb, ShardedDb};
 use portatune::coordinator::platform::Fingerprint;
-use portatune::coordinator::portfolio::{self, sweep_measure_cfg, GemmSweep};
-use portatune::coordinator::selection::Tolerance;
+use portatune::coordinator::portfolio::{self, GemmSweep};
 use portatune::coordinator::search::{
     Anneal, Exhaustive, Genetic, HillClimb, NelderMead, RandomSearch, SearchStrategy,
 };
 use portatune::coordinator::tuner::Tuner;
 use portatune::report::{Fig1Report, Fig1Row, Table};
 use portatune::runtime::{Registry, Runtime};
-use portatune::service::{transfer, Client, Request, ServeOpts, Server};
+use portatune::service::{
+    transfer, Client, Request, ServeOpts, Server, DEFAULT_LEASE_TTL_S,
+};
 use portatune::util::cli::Args;
+use portatune::worker::{Worker, WorkerOpts};
 use portatune::workload::gemm;
 
 const USAGE: &str = "usage: portatune <subcommand> [flags]
@@ -93,6 +96,7 @@ const USAGE: &str = "usage: portatune <subcommand> [flags]
                       [--socket PATH (unix domain socket instead of TCP)]
                       [--ttl-days N (default 30)] [--lru N (default 1024)]
                       [--scan-secs N (default 60)] [--retune [--batch N]]
+                      [--lease-ttl SECS (default 600)]  worker-lease TTL
                       imports --db into the shard store at startup when present
   query             ask a running daemon (one JSON reply line on stdout)
                       e.g. portatune query --op lookup --kernel axpy --workload n4096
@@ -101,6 +105,18 @@ const USAGE: &str = "usage: portatune <subcommand> [flags]
                       [--addr ADDR (default 127.0.0.1:7171) | --socket PATH]
                       [--kernel K] [--workload T] [--platform KEY]
                       [--m N --n N --k N]  portfolio-op dims for selection
+  work              fleet worker: lease tasks from a daemon, execute them
+                    (retune via artifacts, sweep / portfolio-rebuild
+                    host-side), report results back
+                      e.g. portatune work --addr 127.0.0.1:7171 --once --quick
+                    flags: [--addr ADDR (default 127.0.0.1:7171) | --socket PATH]
+                      [--once]          execute exactly one task, then exit
+                                        (non-zero if none arrives or it fails)
+                      [--quick]         smoke-sized sweeps and measurements
+                      [--any-platform]  lease foreign platforms' tasks too
+                      [--lease-ttl SECS (default 600)] [--heartbeat SECS]
+                      [--poll SECS (default 2)] [--wait-secs N (default 15)]
+                      [--seed N] [--batch N] [--k N] [--target F]
   db-migrate        import a v1 --db file into --shards (v2 shard files)
                       e.g. portatune db-migrate --db perfdb.json --shards perfdb.d
 
@@ -165,6 +181,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("tune-annotated") => cmd_tune_annotated(args, &artifacts, &db_path),
         Some("serve") => cmd_serve(args, &artifacts, &db_path, &shards_dir),
         Some("query") => cmd_query(args),
+        Some("work") => cmd_work(args, &artifacts),
         Some("db-migrate") => cmd_db_migrate(args, &db_path, &shards_dir),
         _ => Err(anyhow::anyhow!("missing or unknown subcommand")),
     }
@@ -179,6 +196,7 @@ fn cmd_serve(args: &Args, artifacts: &Path, db_path: &Path, shards_dir: &Path) -
     let scan_secs = args.get_parsed::<u64>("scan-secs", 60)?;
     let retune = args.get_bool("retune");
     let batch = args.get_parsed::<usize>("batch", 4)?;
+    let lease_ttl_s = args.get_parsed::<u64>("lease-ttl", DEFAULT_LEASE_TTL_S)?;
     args.finish()?;
 
     let db = ShardedDb::open(shards_dir)?;
@@ -188,7 +206,7 @@ fn cmd_serve(args: &Args, artifacts: &Path, db_path: &Path, shards_dir: &Path) -
     }
     let host = Fingerprint::detect();
     println!("platform: {}", host.key());
-    let opts = ServeOpts { ttl_s: ttl_days * 24 * 3600, lru_cap };
+    let opts = ServeOpts { ttl_s: ttl_days * 24 * 3600, lru_cap, lease_ttl_s };
     let server = Arc::new(Server::new(db, host, opts));
     let _scan =
         Arc::clone(&server).spawn_scan(std::time::Duration::from_secs(scan_secs.max(1)));
@@ -283,6 +301,61 @@ fn cmd_query(args: &Args) -> Result<()> {
         None => Client::tcp(addr),
     };
     println!("{}", client.call(&request)?.compact());
+    Ok(())
+}
+
+/// Fleet worker: lease tasks from a daemon, execute, report back.
+fn cmd_work(args: &Args, artifacts: &Path) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:7171");
+    let socket = args.get("socket").map(PathBuf::from);
+    let once = args.get_bool("once");
+    let quick = args.get_bool("quick");
+    let any_platform = args.get_bool("any-platform");
+    let lease_ttl_s = args.get_parsed::<u64>("lease-ttl", DEFAULT_LEASE_TTL_S)?;
+    let heartbeat_s = args.get_parsed::<u64>("heartbeat", 0)?;
+    let poll_s = args.get_parsed::<u64>("poll", 2)?;
+    let wait_s = args.get_parsed::<u64>("wait-secs", 15)?;
+    let seed = args.get_parsed::<u64>("seed", 42)?;
+    let batch = args.get_parsed::<usize>("batch", 4)?;
+    let k_max = args.get_parsed::<usize>("k", 4)?;
+    let target = args.get_parsed::<f64>("target", 0.9)?;
+    args.finish()?;
+
+    let client = match socket {
+        #[cfg(unix)]
+        Some(path) => Client::unix(path),
+        #[cfg(not(unix))]
+        Some(_) => return Err(anyhow::anyhow!("--socket requires a unix platform; use --addr")),
+        None => Client::tcp(addr),
+    };
+    let worker = Worker::new(
+        client,
+        WorkerOpts {
+            artifacts: artifacts.to_path_buf(),
+            lease_ttl_s,
+            heartbeat_s,
+            quick,
+            seed,
+            batch,
+            any_platform,
+            k_max,
+            target,
+        },
+    );
+    println!(
+        "worker on platform {} ({}; lease ttl {lease_ttl_s}s)",
+        worker.host_key(),
+        if any_platform { "any-platform" } else { "own-platform tasks only" },
+    );
+    let summary = worker.run(
+        once,
+        std::time::Duration::from_secs(poll_s.max(1)),
+        std::time::Duration::from_secs(wait_s),
+    )?;
+    println!(
+        "worker done: {} task(s) completed, {} failed",
+        summary.completed, summary.failed
+    );
     Ok(())
 }
 
@@ -483,7 +556,9 @@ fn cmd_tune_sweep(args: &Args, kernel: &str, shards_dir: &Path) -> Result<()> {
     Ok(())
 }
 
-/// Shared sweep runner for `tune --sweep` and `portfolio build`.
+/// Shared sweep runner for `tune --sweep` and `portfolio build` (the
+/// worker fleet's sweep tasks run the same [`portfolio::sweep_native`]
+/// without the progress line).
 fn run_gemm_sweep(quick: bool, seed: u64, host: &Fingerprint) -> Result<GemmSweep> {
     let shapes = if quick { gemm::quick_sweep() } else { gemm::default_sweep() };
     println!(
@@ -492,13 +567,7 @@ fn run_gemm_sweep(quick: bool, seed: u64, host: &Fingerprint) -> Result<GemmSwee
         shapes.len(),
         gemm::configs().len()
     );
-    portfolio::sweep_gemm(
-        &shapes,
-        &sweep_measure_cfg(quick),
-        Tolerance::default(),
-        seed,
-        host,
-    )
+    portfolio::sweep_native(gemm::KERNEL, quick, seed, host)
 }
 
 /// `portfolio build` / `portfolio show`.

@@ -76,10 +76,25 @@ pub fn serve_stats_json(stats: &ServeStats) -> Json {
         ("transfer_misses".to_string(), int(stats.transfer_misses)),
         ("portfolios".to_string(), int(stats.portfolios)),
         ("portfolio_transfers".to_string(), int(stats.portfolio_transfers)),
-        ("retune_queued".to_string(), int(stats.retune_queued)),
+        ("tasks_queued".to_string(), int(stats.tasks_queued)),
+        ("tasks_leased".to_string(), int(stats.tasks_leased)),
+        ("tasks_completed".to_string(), int(stats.tasks_completed)),
+        ("tasks_failed".to_string(), int(stats.tasks_failed)),
+        ("leases_expired".to_string(), int(stats.leases_expired)),
         ("retunes".to_string(), int(stats.retunes)),
         ("errors".to_string(), int(stats.errors)),
-        ("retune_queue_depth".to_string(), int(stats.retune_queue_depth)),
+        ("tasks_pending".to_string(), int(stats.tasks_pending)),
+        ("tasks_inflight".to_string(), int(stats.tasks_inflight)),
+        (
+            "queue_depth".to_string(),
+            Json::Obj(
+                stats
+                    .queue_depth
+                    .iter()
+                    .map(|(kind, depth)| (kind.clone(), int(*depth)))
+                    .collect(),
+            ),
+        ),
         ("lru_len".to_string(), int(stats.lru_len)),
     ]
     .into_iter()
@@ -132,16 +147,41 @@ mod tests {
             transfer_misses: 2,
             portfolios: 5,
             portfolio_transfers: 2,
-            retune_queued: 4,
+            tasks_queued: 4,
+            tasks_leased: 3,
+            tasks_completed: 2,
+            tasks_failed: 1,
+            leases_expired: 1,
             retunes: 1,
             errors: 0,
-            retune_queue_depth: 3,
+            tasks_pending: 3,
+            tasks_inflight: 1,
+            queue_depth: [
+                ("retune".to_string(), 2u64),
+                ("sweep".to_string(), 0),
+                ("portfolio-rebuild".to_string(), 1),
+            ]
+            .into_iter()
+            .collect(),
             lru_len: 12,
         };
         let parsed = json::parse(&serve_stats_json(&stats).compact()).unwrap();
         assert_eq!(parsed.get("lookups").and_then(Json::as_u64), Some(100));
         assert_eq!(parsed.get("lru_hits").and_then(Json::as_u64), Some(90));
-        assert_eq!(parsed.get("retune_queue_depth").and_then(Json::as_u64), Some(3));
+        assert_eq!(parsed.get("tasks_queued").and_then(Json::as_u64), Some(4));
+        assert_eq!(parsed.get("tasks_leased").and_then(Json::as_u64), Some(3));
+        assert_eq!(parsed.get("tasks_completed").and_then(Json::as_u64), Some(2));
+        assert_eq!(parsed.get("tasks_failed").and_then(Json::as_u64), Some(1));
+        assert_eq!(parsed.get("leases_expired").and_then(Json::as_u64), Some(1));
+        assert_eq!(parsed.get("tasks_pending").and_then(Json::as_u64), Some(3));
+        assert_eq!(parsed.get("tasks_inflight").and_then(Json::as_u64), Some(1));
+        assert_eq!(
+            parsed
+                .get("queue_depth")
+                .and_then(|d| d.get("portfolio-rebuild"))
+                .and_then(Json::as_u64),
+            Some(1)
+        );
         assert_eq!(parsed.get("portfolios").and_then(Json::as_u64), Some(5));
         assert_eq!(parsed.get("portfolio_transfers").and_then(Json::as_u64), Some(2));
     }

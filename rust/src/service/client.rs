@@ -12,7 +12,19 @@ use std::path::PathBuf;
 use anyhow::{Context, Result};
 
 use crate::service::protocol::Request;
+use crate::service::scheduler::{TaskKind, TuningTask};
 use crate::util::json::{self, Json};
+
+/// A checked-out task: what to do plus the lease that owns it.
+#[derive(Debug, Clone)]
+pub struct LeasedTask {
+    /// Lease id to heartbeat / settle with.
+    pub lease_id: u64,
+    /// Granted lease TTL in seconds.
+    pub ttl_s: u64,
+    /// The work itself.
+    pub task: TuningTask,
+}
 
 /// Where the daemon listens.
 #[derive(Debug, Clone)]
@@ -59,6 +71,55 @@ impl Client {
                 Self::exchange(req, &stream, &stream)
             }
         }
+    }
+
+    /// Check out the next tuning task under a lease (the worker
+    /// fleet's poll).  `Ok(None)` means the queue had nothing matching
+    /// the filters.
+    pub fn lease_task(
+        &self,
+        kind: Option<TaskKind>,
+        platform: Option<String>,
+        ttl_s: Option<u64>,
+    ) -> Result<Option<LeasedTask>> {
+        let reply = self.call(&Request::TaskLease { kind, platform, ttl_s })?;
+        if reply.get("found").and_then(Json::as_bool) != Some(true) {
+            return Ok(None);
+        }
+        let lease_id = reply
+            .get("lease_id")
+            .and_then(Json::as_u64)
+            .context("task-lease reply missing lease_id")?;
+        let ttl_s = reply.get("ttl_s").and_then(Json::as_u64).unwrap_or(0);
+        let task = TuningTask::from_json(
+            reply.get("task").context("task-lease reply missing task")?,
+        )?;
+        Ok(Some(LeasedTask { lease_id, ttl_s, task }))
+    }
+
+    /// Extend a lease.  `Ok(false)` means the lease is gone (expired
+    /// or settled) and the worker should abandon the task.
+    pub fn heartbeat_task(&self, lease_id: u64) -> Result<bool> {
+        let reply = self.call(&Request::TaskHeartbeat { lease_id })?;
+        Ok(reply.get("extended").and_then(Json::as_bool) == Some(true))
+    }
+
+    /// Settle a lease as done.  `Ok(true)` when this call settled it,
+    /// `Ok(false)` when it was already settled (idempotent retry).
+    pub fn complete_task(&self, lease_id: u64) -> Result<bool> {
+        let reply = self.call(&Request::TaskComplete { lease_id })?;
+        Ok(reply.get("duplicate").and_then(Json::as_bool) != Some(true))
+    }
+
+    /// Settle a lease as failed.  `Ok(true)` when the task requeued
+    /// for another attempt, `Ok(false)` when it was dropped or already
+    /// settled.
+    pub fn fail_task(&self, lease_id: u64, error: &str) -> Result<bool> {
+        let reply = self.call(&Request::TaskFail {
+            lease_id,
+            error: Some(error.to_string()),
+        })?;
+        Ok(reply.get("requeued").and_then(Json::as_bool) == Some(true))
     }
 
     fn exchange(

@@ -24,10 +24,15 @@
 //!   never-seen platform answers with the nearest platform's results
 //!   (the cross-device transfer result of "A Few Fit Most", Hochgraf &
 //!   Pai 2025) instead of an empty miss;
-//! * [`scheduler`] — the staleness queue feeding re-tunes through the
-//!   batched [`crate::coordinator::tuner::Tuner`] (the persistent
-//!   runtime-service shape of Kernel Tuning Toolkit, Petrovič et al.
-//!   2019).
+//! * [`scheduler`] — the leased [`TaskQueue`] of typed tuning tasks
+//!   (retune / sweep / portfolio-rebuild) that the staleness scan
+//!   feeds and the `portatune work` fleet drains: `task-lease` checks
+//!   a task out under a TTL, `task-heartbeat` extends it,
+//!   `task-complete`/`task-fail` settle it, and an expired lease
+//!   requeues automatically so a crashed worker never loses work (the
+//!   persistent runtime-service shape of Kernel Tuning Toolkit,
+//!   Petrovič et al. 2019, plus portfolio maintenance from "A Few Fit
+//!   Most").
 
 pub mod client;
 pub mod protocol;
@@ -35,9 +40,12 @@ pub mod scheduler;
 pub mod server;
 pub mod transfer;
 
-pub use client::{Client, Endpoint};
+pub use client::{Client, Endpoint, LeasedTask};
 pub use protocol::{reply_err, reply_ok, Request};
-pub use scheduler::{RetuneTask, Scheduler, StaleReason};
+pub use scheduler::{
+    CompleteOutcome, FailOutcome, StaleReason, TaskKind, TaskQueue, TuningTask,
+    DEFAULT_LEASE_TTL_S,
+};
 pub use server::{Lru, ServeOpts, ServeStats, Server};
 pub use transfer::{
     rank_candidates, rank_portfolios, warm_start_configs, PortfolioCandidate, TransferCandidate,

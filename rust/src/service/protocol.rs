@@ -12,7 +12,12 @@
 //! {"op":"lookup","kernel":"axpy","workload":"n4096","platform":KEY?}
 //! {"op":"deploy","kernel":"axpy","workload":"n4096","platform":KEY?,"fingerprint":{..}?}
 //! {"op":"record","entry":{..DbEntry..},"fingerprint":{..}?}
+//! {"op":"record-portfolio","portfolio":{..Portfolio..},"platform":KEY?,"fingerprint":{..}?}
 //! {"op":"stats"}
+//! {"op":"task-lease","kind":"retune"?,"platform":KEY?,"ttl_s":600?}
+//! {"op":"task-heartbeat","lease_id":N}
+//! {"op":"task-complete","lease_id":N}
+//! {"op":"task-fail","lease_id":N,"error":"..."?}
 //! {"op":"retune-next"}
 //! {"op":"portfolio","kernel":"gemm","platform":KEY?,"dims":{"m":128,..}?,"fingerprint":{..}?}
 //! {"op":"shutdown"}
@@ -21,12 +26,17 @@
 //! `platform` defaults to the daemon host's own key.  Replies are
 //! `{"ok":true,...}` or `{"ok":false,"error":"..."}`; `deploy` misses
 //! answer with transfer-ranked candidates instead of an empty result
-//! (see [`crate::service::server`]).
+//! (see [`crate::service::server`]).  The four `task-*` ops are the
+//! worker-fleet checkout protocol (see [`crate::service::scheduler`]);
+//! `retune-next` survives as a back-compat alias for a default-TTL
+//! lease of the next retune task.
 
 use anyhow::{Context, Result};
 
 use crate::coordinator::perfdb::DbEntry;
 use crate::coordinator::platform::Fingerprint;
+use crate::coordinator::portfolio::Portfolio;
+use crate::service::scheduler::TaskKind;
 use crate::util::json::{self, Json};
 
 /// A parsed client request.
@@ -62,9 +72,50 @@ pub enum Request {
         /// Recording platform's fingerprint (stored in the shard).
         fingerprint: Option<Fingerprint>,
     },
+    /// Write (or replace) a platform's variant portfolio — how a
+    /// worker reports a finished portfolio-rebuild task so the
+    /// daemon's portfolio cache is invalidated and the fresh
+    /// `built_at` serves immediately.
+    RecordPortfolio {
+        /// Platform whose shard receives the portfolio (daemon host's
+        /// own when absent).
+        platform: Option<String>,
+        /// The built portfolio.
+        portfolio: Box<Portfolio>,
+        /// Recording platform's fingerprint (stored in the shard).
+        fingerprint: Option<Fingerprint>,
+    },
     /// Counter snapshot.
     Stats,
-    /// Pop one task from the staleness re-tune queue.
+    /// Check out the next tuning task under a lease.
+    TaskLease {
+        /// Take only tasks of this kind (any kind when absent).
+        kind: Option<TaskKind>,
+        /// Take only tasks for this platform — a worker can usually
+        /// measure only its own hardware (any platform when absent).
+        platform: Option<String>,
+        /// Lease TTL in seconds (daemon default when absent).
+        ttl_s: Option<u64>,
+    },
+    /// Extend a live lease by its TTL.
+    TaskHeartbeat {
+        /// The lease to extend.
+        lease_id: u64,
+    },
+    /// Settle a lease: the task's results were recorded.
+    TaskComplete {
+        /// The lease to settle.
+        lease_id: u64,
+    },
+    /// Settle a lease as failed; the task requeues (bounded retries).
+    TaskFail {
+        /// The lease to settle.
+        lease_id: u64,
+        /// Worker-side error description (logged by the daemon).
+        error: Option<String>,
+    },
+    /// Back-compat alias: lease the next retune task at the default
+    /// TTL (pre-fleet pollers keep working and gain crash-proofing).
     RetuneNext,
     /// Fetch (and optionally select from) a platform's variant
     /// portfolio for a kernel.  A miss answers with the nearest
@@ -128,7 +179,40 @@ impl Request {
                     fingerprint: fp()?,
                 })
             }
+            "record-portfolio" => {
+                let p = v
+                    .get("portfolio")
+                    .ok_or_else(|| anyhow::anyhow!("record-portfolio request missing portfolio"))?;
+                Ok(Request::RecordPortfolio {
+                    platform: opt("platform"),
+                    portfolio: Box::new(Portfolio::from_json(p)?),
+                    fingerprint: fp()?,
+                })
+            }
             "stats" => Ok(Request::Stats),
+            "task-lease" => {
+                let kind = match v.get("kind").and_then(Json::as_str) {
+                    None => None,
+                    Some(s) => Some(
+                        TaskKind::parse(s)
+                            .ok_or_else(|| anyhow::anyhow!("unknown task kind {s}"))?,
+                    ),
+                };
+                let ttl_s = match v.get("ttl_s") {
+                    Some(Json::Null) | None => None,
+                    Some(t) => Some(
+                        t.as_u64()
+                            .ok_or_else(|| anyhow::anyhow!("ttl_s must be a non-negative int"))?,
+                    ),
+                };
+                Ok(Request::TaskLease { kind, platform: opt("platform"), ttl_s })
+            }
+            "task-heartbeat" => Ok(Request::TaskHeartbeat { lease_id: lease_id(&v, op)? }),
+            "task-complete" => Ok(Request::TaskComplete { lease_id: lease_id(&v, op)? }),
+            "task-fail" => Ok(Request::TaskFail {
+                lease_id: lease_id(&v, op)?,
+                error: opt("error"),
+            }),
             "retune-next" => Ok(Request::RetuneNext),
             "portfolio" => {
                 let dims = match v.get("dims") {
@@ -188,7 +272,44 @@ impl Request {
                     fields.push(("fingerprint", fp.to_json()));
                 }
             }
+            Request::RecordPortfolio { platform, portfolio, fingerprint } => {
+                fields.push(("op", json::s("record-portfolio")));
+                if let Some(p) = platform {
+                    fields.push(("platform", json::s(p)));
+                }
+                fields.push(("portfolio", portfolio.to_json()));
+                if let Some(fp) = fingerprint {
+                    fields.push(("fingerprint", fp.to_json()));
+                }
+            }
             Request::Stats => fields.push(("op", json::s("stats"))),
+            Request::TaskLease { kind, platform, ttl_s } => {
+                fields.push(("op", json::s("task-lease")));
+                if let Some(k) = kind {
+                    fields.push(("kind", json::s(k.as_str())));
+                }
+                if let Some(p) = platform {
+                    fields.push(("platform", json::s(p)));
+                }
+                if let Some(t) = ttl_s {
+                    fields.push(("ttl_s", json::int(*t as i64)));
+                }
+            }
+            Request::TaskHeartbeat { lease_id } => {
+                fields.push(("op", json::s("task-heartbeat")));
+                fields.push(("lease_id", json::int(*lease_id as i64)));
+            }
+            Request::TaskComplete { lease_id } => {
+                fields.push(("op", json::s("task-complete")));
+                fields.push(("lease_id", json::int(*lease_id as i64)));
+            }
+            Request::TaskFail { lease_id, error } => {
+                fields.push(("op", json::s("task-fail")));
+                fields.push(("lease_id", json::int(*lease_id as i64)));
+                if let Some(e) = error {
+                    fields.push(("error", json::s(e)));
+                }
+            }
             Request::RetuneNext => fields.push(("op", json::s("retune-next"))),
             Request::Portfolio { platform, kernel, dims, fingerprint } => {
                 fields.push(("op", json::s("portfolio")));
@@ -210,6 +331,13 @@ impl Request {
         }
         json::obj(fields).compact()
     }
+}
+
+/// Required `lease_id` field of the task-settlement ops.
+fn lease_id(v: &Json, op: &str) -> Result<u64> {
+    v.get("lease_id")
+        .and_then(Json::as_u64)
+        .ok_or_else(|| anyhow::anyhow!("{op} request missing lease_id"))
 }
 
 /// `{"ok":true, ...}` reply body.
@@ -238,6 +366,15 @@ mod tests {
             },
             Request::Stats,
             Request::RetuneNext,
+            Request::TaskLease { kind: None, platform: None, ttl_s: None },
+            Request::TaskLease {
+                kind: Some(TaskKind::PortfolioRebuild),
+                platform: Some("p1".into()),
+                ttl_s: Some(300),
+            },
+            Request::TaskHeartbeat { lease_id: 7 },
+            Request::TaskComplete { lease_id: 7 },
+            Request::TaskFail { lease_id: 7, error: Some("sweep oom".into()) },
             Request::Portfolio {
                 platform: None,
                 kernel: "gemm".into(),
@@ -302,6 +439,77 @@ mod tests {
                 .is_err(),
             "dims must be integers"
         );
+        assert!(
+            Request::parse_line(r#"{"op":"task-lease","kind":"repaint"}"#).is_err(),
+            "unknown task kinds error"
+        );
+        assert!(
+            Request::parse_line(r#"{"op":"task-lease","ttl_s":"soon"}"#).is_err(),
+            "ttl_s must be an int"
+        );
+        assert!(
+            Request::parse_line(r#"{"op":"task-heartbeat"}"#).is_err(),
+            "lease_id is required"
+        );
+        assert!(Request::parse_line(r#"{"op":"task-complete","lease_id":-3}"#).is_err());
+        assert!(Request::parse_line(r#"{"op":"record-portfolio"}"#).is_err());
+        assert!(
+            Request::parse_line(r#"{"op":"record-portfolio","portfolio":{"kernel":"gemm"}}"#)
+                .is_err(),
+            "portfolio payload must satisfy the typed parser"
+        );
+    }
+
+    #[test]
+    fn task_ops_round_trip_their_fields() {
+        let line = r#"{"op":"task-lease","kind":"sweep","platform":"p1","ttl_s":120}"#;
+        match Request::parse_line(line).unwrap() {
+            Request::TaskLease { kind, platform, ttl_s } => {
+                assert_eq!(kind, Some(TaskKind::Sweep));
+                assert_eq!(platform.as_deref(), Some("p1"));
+                assert_eq!(ttl_s, Some(120));
+            }
+            other => panic!("parsed {other:?}"),
+        }
+        match Request::parse_line(r#"{"op":"task-fail","lease_id":9}"#).unwrap() {
+            Request::TaskFail { lease_id, error } => {
+                assert_eq!(lease_id, 9);
+                assert!(error.is_none());
+            }
+            other => panic!("parsed {other:?}"),
+        }
+    }
+
+    #[test]
+    fn record_portfolio_round_trips() {
+        use crate::coordinator::portfolio::{PortfolioItem, FEATURE_NAMES};
+        let portfolio = Portfolio {
+            kernel: "gemm".into(),
+            strategy: "greedy-cover".into(),
+            k_max: 4,
+            retained: 0.93,
+            built_at: 1_700_000_000,
+            feature_names: FEATURE_NAMES.iter().map(|s| s.to_string()).collect(),
+            items: vec![PortfolioItem {
+                config: [("tile_m".to_string(), 32i64)].into_iter().collect(),
+                config_id: "o1_tm32".into(),
+                centroid: vec![5.0; FEATURE_NAMES.len()],
+                covered: vec!["m32n32k32".into()],
+            }],
+        };
+        let req = Request::RecordPortfolio {
+            platform: Some("p1".into()),
+            portfolio: Box::new(portfolio.clone()),
+            fingerprint: None,
+        };
+        let line = req.to_line();
+        match Request::parse_line(&line).unwrap() {
+            Request::RecordPortfolio { platform, portfolio: back, .. } => {
+                assert_eq!(platform.as_deref(), Some("p1"));
+                assert_eq!(*back, portfolio);
+            }
+            other => panic!("parsed {other:?}"),
+        }
     }
 
     #[test]

@@ -1,13 +1,65 @@
-//! Staleness-aware re-tune queue.
+//! The leased task queue behind the distributed worker fleet.
 //!
 //! Tuned configurations rot: hardware drifts (microcode, cache
 //! partitioning, a new machine inheriting an old shard) and entries
-//! age past usefulness.  The scheduler scans the shard store and queues
-//! re-tune tasks for (platform, kernel, workload) frontiers that are
-//! stale, so the daemon (or an operator popping `retune-next`) can push
-//! them back through the existing batched [`Tuner`].
+//! age past usefulness.  Built portfolios rot the same way — their
+//! `built_at` stamp ages under the identical TTL/drift signals, but
+//! refreshing one needs a full sweep, not a single re-tune.  The
+//! [`TaskQueue`] turns both staleness signals into typed
+//! [`TuningTask`]s that a fleet of `portatune work` processes (or the
+//! daemon's own in-process re-tune worker) can drain:
 //!
-//! Two staleness signals, checked per frontier entry:
+//! * [`TaskKind::Retune`] — one (kernel, workload) re-tune through the
+//!   batched [`Tuner`] (artifact-backed kernels);
+//! * [`TaskKind::Sweep`] — a whole-shape-sweep re-measure of a native
+//!   kernel family (stale native entries collapse into one sweep task
+//!   per (platform, kernel): the artifact tuner cannot re-measure
+//!   them, and a sweep refreshes every shape at once);
+//! * [`TaskKind::PortfolioRebuild`] — sweep + portfolio reconstruction
+//!   when a shard's stored portfolio outlives the TTL or its platform
+//!   fingerprint drifts.  A queued rebuild subsumes the sweep task for
+//!   the same (platform, kernel) — rebuilding re-records every sweep
+//!   entry anyway.
+//!
+//! **Lease semantics** make the queue loss-proof: handing a task out
+//! ([`TaskQueue::lease`]) moves it to an in-flight table with a TTL
+//! and a lease id; [`heartbeat`](TaskQueue::heartbeat) extends the
+//! TTL, [`complete`](TaskQueue::complete)/[`fail`](TaskQueue::fail)
+//! settle it, and [`expire`](TaskQueue::expire) requeues any lease
+//! whose holder went silent — a crashed worker never loses work.  The
+//! legacy `retune-next` op is an alias for a default-TTL lease of the
+//! next [`TaskKind::Retune`] task, so pre-fleet pollers keep working
+//! *and* gain crash-proofing for free.
+//!
+//! Guarantees the property tests pin down:
+//!
+//! * an expired lease requeues its task **exactly once**;
+//! * a double `complete` is idempotent (the second reports
+//!   [`CompleteOutcome::Duplicate`]);
+//! * a completed task is never re-leased (only a *later scan* finding
+//!   the data still stale can create a new task with the same
+//!   identity);
+//! * at any instant a task identity is pending, leased, or settled —
+//!   never two of those at once, so two workers draining concurrently
+//!   cannot execute the same task twice.
+//!
+//! Two churn bounds keep the queue convergent:
+//!
+//! * **attempts** — `task-fail`s and lease expiries both count toward
+//!   [`MAX_ATTEMPTS`]; a task that keeps failing or keeps losing its
+//!   lease (a poison task, or a legacy `retune-next` poller that
+//!   never settles) is dropped instead of ping-ponging forever.  The
+//!   staleness scan recreates it — with fresh attempts — only if the
+//!   data is genuinely still stale, so nothing is ever lost;
+//! * **resolution stamps** — completing a task records the data
+//!   version (`recorded_at`/`built_at`) it was queued against.  The
+//!   scan will not requeue an identity whose completion demonstrably
+//!   could not refresh its data (an `--any-platform` worker whose
+//!   results land under its own key, not the stale foreign shard's)
+//!   until the shard's stamp actually changes.
+//!
+//! Two staleness signals, checked per frontier entry and per stored
+//! portfolio:
 //!
 //! * **fingerprint drift** — the shard's stored fingerprint no longer
 //!   hashes to the shard's own platform key: the machine kept recording
@@ -16,35 +68,76 @@
 //!   whose slug matches the stored fingerprint's CPU-model are eligible
 //!   — clients may record under arbitrary wire-supplied names
 //!   ("remote-box"), and those can never re-hash to themselves, so
-//!   treating them as drifted would re-queue them forever.  Known
-//!   limitation: a hardware change that replaces the CPU *model* (the
-//!   slug no longer matches either way) is undecidable from shard
-//!   contents alone and is left to TTL expiry;
-//! * **TTL expiry** — `recorded_at` is older than the configured TTL.
+//!   treating them as drifted would re-queue them forever;
+//! * **TTL expiry** — `recorded_at` (entries) or `built_at`
+//!   (portfolios) is older than the configured TTL.
 //!
-//! Scans are idempotent: a (platform, kernel, workload) already queued
-//! is never queued twice, and popping a task releases its slot so a
+//! Scans are idempotent: an identity already pending or leased is
+//! never queued twice, and settling a task releases its slot so a
 //! later scan can re-queue it if it is still stale.
-//!
-//! Known limitation: the scan covers *entries* only.  A shard's built
-//! portfolios (`Shard::portfolios`) age too — their `built_at` and
-//! centroid features go stale under the same TTL/drift signals — but
-//! rebuilding one requires a full sweep, not a single re-tune, so
-//! portfolio refresh is left to `portatune portfolio build` until the
-//! scheduler grows a rebuild task kind (see ROADMAP open items).
 //!
 //! [`Tuner`]: crate::coordinator::tuner::Tuner
 
-use std::collections::{HashSet, VecDeque};
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
+
+use anyhow::Result;
 
 use crate::coordinator::perfdb::Shard;
 use crate::coordinator::platform::Fingerprint;
 use crate::util::json::{self, Json};
+use crate::workload::gemm;
+
+/// Lease TTL applied when a `task-lease` request names none (and the
+/// TTL backing the `retune-next` compatibility alias).
+pub const DEFAULT_LEASE_TTL_S: u64 = 600;
+
+/// How many times a task may be `task-fail`ed **or lose its lease to
+/// expiry** before the queue drops it instead of requeueing (a poison
+/// task — or one held by a legacy poller that never settles — must not
+/// ping-pong through the fleet forever; the next staleness scan
+/// recreates it if the data is still stale).
+pub const MAX_ATTEMPTS: u32 = 3;
+
+/// How many settled lease ids the queue remembers for idempotency
+/// checks before pruning the oldest.
+const SETTLED_KEEP: usize = 4096;
+
+/// What a queued task asks a worker to do.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum TaskKind {
+    /// Re-tune one (kernel, workload) through the batched tuner.
+    Retune,
+    /// Re-measure a native kernel family's whole shape sweep.
+    Sweep,
+    /// Sweep + rebuild a platform's variant portfolio.
+    PortfolioRebuild,
+}
+
+impl TaskKind {
+    /// Stable wire spelling of the kind.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TaskKind::Retune => "retune",
+            TaskKind::Sweep => "sweep",
+            TaskKind::PortfolioRebuild => "portfolio-rebuild",
+        }
+    }
+
+    /// Parse the wire spelling.
+    pub fn parse(s: &str) -> Option<TaskKind> {
+        match s {
+            "retune" => Some(TaskKind::Retune),
+            "sweep" => Some(TaskKind::Sweep),
+            "portfolio-rebuild" => Some(TaskKind::PortfolioRebuild),
+            _ => None,
+        }
+    }
+}
 
 /// Why a task was queued.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum StaleReason {
-    /// Entry older than the TTL.
+    /// Entry (or portfolio) older than the TTL.
     TtlExpired {
         /// Age in seconds at scan time.
         age_s: u64,
@@ -64,28 +157,513 @@ impl StaleReason {
     }
 }
 
-/// One queued re-tune unit.
+/// Dedupe identity of a task: what it would *do*, independent of when
+/// it was queued or how often it failed.
+pub type TaskIdentity = (TaskKind, String, String, Option<String>);
+
+/// One queued unit of tuning work.
 #[derive(Debug, Clone, PartialEq, Eq)]
-pub struct RetuneTask {
-    /// Platform whose entry went stale.
+pub struct TuningTask {
+    /// What to do.
+    pub kind: TaskKind,
+    /// Platform whose data went stale.
     pub platform_key: String,
-    /// Kernel family to re-tune.
+    /// Kernel family.
     pub kernel: String,
-    /// Workload tag to re-tune.
-    pub tag: String,
+    /// Workload tag; `None` for kernel-wide kinds (sweep, rebuild).
+    pub tag: Option<String>,
     /// Why the task was queued.
     pub reason: StaleReason,
+    /// How many times the task has been `task-fail`ed back.
+    pub attempts: u32,
 }
 
-impl RetuneTask {
-    /// Wire form for the `retune-next` reply.
+impl TuningTask {
+    /// The dedupe identity (see [`TaskIdentity`]).
+    pub fn identity(&self) -> TaskIdentity {
+        (self.kind, self.platform_key.clone(), self.kernel.clone(), self.tag.clone())
+    }
+
+    /// Wire form for `task-lease` / `retune-next` replies.
     pub fn to_json(&self) -> Json {
-        json::obj(vec![
+        let mut fields = vec![
+            ("kind", json::s(self.kind.as_str())),
             ("platform", json::s(&self.platform_key)),
             ("kernel", json::s(&self.kernel)),
-            ("workload", json::s(&self.tag)),
-            ("reason", json::s(self.reason.as_str())),
-        ])
+        ];
+        if let Some(tag) = &self.tag {
+            fields.push(("workload", json::s(tag)));
+        }
+        fields.push(("reason", json::s(self.reason.as_str())));
+        if let StaleReason::TtlExpired { age_s } = &self.reason {
+            fields.push(("age_s", json::int(*age_s as i64)));
+        }
+        if self.attempts > 0 {
+            fields.push(("attempts", json::int(self.attempts as i64)));
+        }
+        json::obj(fields)
+    }
+
+    /// Parse the [`to_json`](Self::to_json) form (what `portatune
+    /// work` receives).  `kind` defaults to retune so pre-fleet
+    /// daemons' `retune-next` replies still parse.
+    pub fn from_json(v: &Json) -> Result<TuningTask> {
+        let gs = |k: &str| -> Result<String> {
+            v.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| anyhow::anyhow!("task missing {k}"))
+        };
+        let kind = match v.get("kind").and_then(Json::as_str) {
+            None => TaskKind::Retune,
+            Some(s) => {
+                TaskKind::parse(s).ok_or_else(|| anyhow::anyhow!("unknown task kind {s}"))?
+            }
+        };
+        let reason = match v.get("reason").and_then(Json::as_str) {
+            Some("fingerprint-drift") => StaleReason::FingerprintDrift,
+            _ => StaleReason::TtlExpired {
+                age_s: v.get("age_s").and_then(Json::as_u64).unwrap_or(0),
+            },
+        };
+        Ok(TuningTask {
+            kind,
+            platform_key: gs("platform")?,
+            kernel: gs("kernel")?,
+            tag: v.get("workload").and_then(Json::as_str).map(str::to_string),
+            reason,
+            attempts: v.get("attempts").and_then(Json::as_u64).unwrap_or(0) as u32,
+        })
+    }
+}
+
+/// An in-flight lease: the task, its TTL, and when it expires.
+#[derive(Debug, Clone)]
+struct Lease {
+    task: TuningTask,
+    ttl_s: u64,
+    expires_at: u64,
+}
+
+/// How a settled lease ended (kept for idempotency checks).
+#[derive(Debug, Clone)]
+enum Settled {
+    Completed,
+    Failed,
+    /// The lease expired and its task was requeued; the identity is
+    /// kept so a *late* completion can withdraw the requeued copy.
+    Expired(TaskIdentity),
+}
+
+/// What `complete` reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CompleteOutcome {
+    /// The lease was live (or had expired with its task still waiting
+    /// unleased — the late completion withdrew it); the task is done.
+    Settled,
+    /// The lease was already settled — a retried `task-complete`, or a
+    /// late completion whose task another worker already picked up.
+    /// Idempotent: nothing changed.
+    Duplicate,
+    /// The lease id was never issued (or pruned long ago).
+    Unknown,
+}
+
+/// What `fail` reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailOutcome {
+    /// The task went back to the pending queue for another worker.
+    Requeued,
+    /// The task exhausted [`MAX_ATTEMPTS`] and was dropped (the next
+    /// scan recreates it if the data is still stale).
+    Dropped,
+    /// The lease was already settled; nothing changed.
+    Duplicate,
+    /// The lease id was never issued.
+    Unknown,
+}
+
+/// FIFO of typed tuning tasks with lease-based checkout.
+#[derive(Debug)]
+pub struct TaskQueue {
+    ttl_s: u64,
+    pending: VecDeque<TuningTask>,
+    leased: HashMap<u64, Lease>,
+    /// Settled lease ids (bounded by `SETTLED_KEEP`).  BTreeMap so
+    /// pruning drops the *oldest* ids (ids are monotonic).
+    settled: BTreeMap<u64, Settled>,
+    /// Identities currently pending or leased (scan dedupe).
+    queued: HashSet<TaskIdentity>,
+    /// Data version (`recorded_at`/`built_at`) each scan-queued
+    /// identity was created against.
+    stamps: HashMap<TaskIdentity, u64>,
+    /// Identities completed at least once, with the newest data stamp
+    /// their execution ran against.  The scan skips an identity whose
+    /// shard stamp has not moved past its resolution — the completed
+    /// work demonstrably did not (and will not) refresh that data, so
+    /// requeueing it would churn forever (see module docs).
+    resolved: HashMap<TaskIdentity, u64>,
+    /// Drift tasks ever queued.  Unlike TTL tasks — which re-recording
+    /// resolves (fresh `recorded_at`/`built_at`) — a drifted shard is a
+    /// historical inconsistency no re-tune can repair (the fresh record
+    /// lands under the machine's *new* key), so each is delivered at
+    /// most once per queue lifetime instead of re-queuing after every
+    /// settle forever.
+    drift_notified: HashSet<TaskIdentity>,
+    next_lease: u64,
+}
+
+impl TaskQueue {
+    /// An empty queue with the given staleness TTL.
+    pub fn new(ttl_s: u64) -> TaskQueue {
+        TaskQueue {
+            ttl_s,
+            pending: VecDeque::new(),
+            leased: HashMap::new(),
+            settled: BTreeMap::new(),
+            queued: HashSet::new(),
+            stamps: HashMap::new(),
+            resolved: HashMap::new(),
+            drift_notified: HashSet::new(),
+            next_lease: 0,
+        }
+    }
+
+    /// The configured staleness TTL in seconds.
+    pub fn ttl_s(&self) -> u64 {
+        self.ttl_s
+    }
+
+    /// Pending (not-yet-leased) task count.
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Whether no tasks are pending.
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Currently-leased task count.
+    pub fn leased_len(&self) -> usize {
+        self.leased.len()
+    }
+
+    /// Pending depth per task kind (the `stats` op's gauge).
+    pub fn depth_by_kind(&self) -> BTreeMap<&'static str, u64> {
+        let mut depth: BTreeMap<&'static str, u64> = BTreeMap::new();
+        for kind in [TaskKind::Retune, TaskKind::Sweep, TaskKind::PortfolioRebuild] {
+            depth.insert(kind.as_str(), 0);
+        }
+        for t in &self.pending {
+            *depth.entry(t.kind.as_str()).or_insert(0) += 1;
+        }
+        depth
+    }
+
+    /// Queue a task unless its identity is already pending or leased.
+    /// Returns whether it was added.
+    pub fn enqueue(&mut self, task: TuningTask) -> bool {
+        let identity = task.identity();
+        if !self.queued.insert(identity.clone()) {
+            return false;
+        }
+        if matches!(task.reason, StaleReason::FingerprintDrift) {
+            self.drift_notified.insert(identity);
+        }
+        self.pending.push_back(task);
+        true
+    }
+
+    /// Scan shards against the daemon host's live fingerprint at time
+    /// `now`; queue every newly-stale frontier entry and portfolio.
+    /// Returns how many tasks were added.  (`host` reserved for
+    /// lineage-aware drift rules; the current rule needs only
+    /// shard-internal consistency.)
+    pub fn scan(&mut self, shards: &[Shard], _host: &Fingerprint, now: u64) -> usize {
+        let mut added = 0;
+        for shard in shards {
+            let drifted = match &shard.fingerprint {
+                // A *derived* key that its own stored fingerprint no
+                // longer hashes to: the machine changed while records
+                // kept landing under the old key.  Arbitrary
+                // wire-supplied keys are exempt (see module docs).
+                Some(fp) => {
+                    key_derived_from(&shard.platform_key, fp)
+                        && fp.key() != shard.platform_key
+                }
+                None => false,
+            };
+            // Portfolios first: a queued rebuild subsumes the sweep
+            // task the same shard's stale native entries would create.
+            for p in &shard.portfolios {
+                let identity = (
+                    TaskKind::PortfolioRebuild,
+                    shard.platform_key.clone(),
+                    p.kernel.clone(),
+                    None,
+                );
+                let Some(reason) =
+                    self.stale_reason(drifted, &identity, p.built_at, now)
+                else {
+                    continue;
+                };
+                if self.enqueue_scanned(
+                    TuningTask {
+                        kind: TaskKind::PortfolioRebuild,
+                        platform_key: shard.platform_key.clone(),
+                        kernel: p.kernel.clone(),
+                        tag: None,
+                        reason,
+                        attempts: 0,
+                    },
+                    p.built_at,
+                ) {
+                    added += 1;
+                }
+            }
+            for entry in shard.frontier() {
+                // Native kernels have no artifact for the tuner to
+                // re-measure; their stale shapes collapse into one
+                // whole-sweep task per (platform, kernel).
+                let (kind, tag) = if entry.kernel == gemm::KERNEL {
+                    (TaskKind::Sweep, None)
+                } else {
+                    (TaskKind::Retune, Some(entry.tag.clone()))
+                };
+                if kind == TaskKind::Sweep
+                    && self.queued.contains(&(
+                        TaskKind::PortfolioRebuild,
+                        shard.platform_key.clone(),
+                        entry.kernel.clone(),
+                        None,
+                    ))
+                {
+                    continue; // rebuild re-records the sweep anyway
+                }
+                let identity =
+                    (kind, shard.platform_key.clone(), entry.kernel.clone(), tag.clone());
+                let Some(reason) =
+                    self.stale_reason(drifted, &identity, entry.recorded_at, now)
+                else {
+                    continue;
+                };
+                if self.enqueue_scanned(
+                    TuningTask {
+                        kind,
+                        platform_key: shard.platform_key.clone(),
+                        kernel: entry.kernel.clone(),
+                        tag,
+                        reason,
+                        attempts: 0,
+                    },
+                    entry.recorded_at,
+                ) {
+                    added += 1;
+                }
+            }
+        }
+        added
+    }
+
+    /// Drift outranks TTL but is delivered once; an already-notified
+    /// drifted identity still gets ordinary TTL staleness checks (its
+    /// data keeps aging).  `None` means "not stale" — including the
+    /// resolution-stamp case: an identity already completed against a
+    /// data version at least this new cannot be refreshed by running
+    /// again, so it only requeues once the shard's stamp moves.
+    fn stale_reason(
+        &self,
+        drifted: bool,
+        identity: &TaskIdentity,
+        stamped_at: u64,
+        now: u64,
+    ) -> Option<StaleReason> {
+        if self.resolved.get(identity).is_some_and(|&s| s >= stamped_at) {
+            return None;
+        }
+        if drifted && !self.drift_notified.contains(identity) {
+            return Some(StaleReason::FingerprintDrift);
+        }
+        let age_s = now.saturating_sub(stamped_at);
+        if age_s <= self.ttl_s {
+            return None;
+        }
+        Some(StaleReason::TtlExpired { age_s })
+    }
+
+    /// Scan-side enqueue: records the data stamp the task targets (so
+    /// completion can mark the identity resolved at that version) and
+    /// clears any prior resolution — the check in `stale_reason` only
+    /// lets a stamped identity through once its data moved, at which
+    /// point it is fair game again.  A dedupe-rejected enqueue still
+    /// merges the stamp upward (a kernel-wide sweep task covers shapes
+    /// with heterogeneous `recorded_at`s).
+    fn enqueue_scanned(&mut self, task: TuningTask, stamped_at: u64) -> bool {
+        let identity = task.identity();
+        self.resolved.remove(&identity);
+        let stamp = self.stamps.entry(identity).or_insert(0);
+        *stamp = (*stamp).max(stamped_at);
+        self.enqueue(task)
+    }
+
+    /// Check out the first pending task matching the filters under a
+    /// lease of `ttl_s` seconds.  Returns the lease id and a copy of
+    /// the task.  `platform` lets a worker take only tasks it can
+    /// actually measure (its own hardware); `kind` lets the legacy
+    /// `retune-next` alias and single-purpose workers skip kinds they
+    /// cannot execute.
+    pub fn lease(
+        &mut self,
+        kind: Option<TaskKind>,
+        platform: Option<&str>,
+        ttl_s: u64,
+        now: u64,
+    ) -> Option<(u64, TuningTask)> {
+        let idx = self.pending.iter().position(|t| {
+            kind.map_or(true, |k| t.kind == k)
+                && platform.map_or(true, |p| t.platform_key == p)
+        })?;
+        let task = self.pending.remove(idx)?;
+        self.next_lease += 1;
+        let id = self.next_lease;
+        let ttl_s = ttl_s.max(1);
+        // Saturating: `ttl_s` arrives from the wire, and an absurd
+        // value must neither overflow-panic nor wrap into a lease that
+        // is born expired (which would hand the task to a second
+        // worker while the first still runs it).
+        let expires_at = now.saturating_add(ttl_s);
+        self.leased.insert(id, Lease { task: task.clone(), ttl_s, expires_at });
+        Some((id, task))
+    }
+
+    /// Extend a live lease by its original TTL.  Returns the TTL when
+    /// the lease is live, `None` when it is unknown or already settled
+    /// (the worker has lost it and must stop).
+    pub fn heartbeat(&mut self, lease_id: u64, now: u64) -> Option<u64> {
+        let lease = self.leased.get_mut(&lease_id)?;
+        lease.expires_at = now.saturating_add(lease.ttl_s);
+        Some(lease.ttl_s)
+    }
+
+    /// Requeue every lease whose TTL ran out.  Each expired lease
+    /// requeues its task exactly once: the lease moves to the settled
+    /// table, so a second `expire` (or a straggling heartbeat) cannot
+    /// duplicate it.  A lease loss counts toward [`MAX_ATTEMPTS`] —
+    /// otherwise a task held by a crash-looping worker (or a legacy
+    /// `retune-next` poller that never settles) would requeue and
+    /// re-execute forever; once exhausted the task drops and only a
+    /// scan that still finds the data stale recreates it.  Returns how
+    /// many leases expired.
+    pub fn expire(&mut self, now: u64) -> usize {
+        let expired: Vec<u64> = self
+            .leased
+            .iter()
+            .filter(|(_, l)| now >= l.expires_at)
+            .map(|(&id, _)| id)
+            .collect();
+        let n = expired.len();
+        for id in expired {
+            if let Some(lease) = self.leased.remove(&id) {
+                let mut task = lease.task;
+                self.settle(id, Settled::Expired(task.identity()));
+                task.attempts += 1;
+                if task.attempts >= MAX_ATTEMPTS {
+                    let identity = task.identity();
+                    self.queued.remove(&identity);
+                    self.stamps.remove(&identity);
+                } else {
+                    // Identity stays in `queued`: the task is still
+                    // live, just back in pending.
+                    self.pending.push_back(task);
+                }
+            }
+        }
+        n
+    }
+
+    /// Settle a lease as done.  Idempotent: see [`CompleteOutcome`].
+    pub fn complete(&mut self, lease_id: u64) -> CompleteOutcome {
+        if let Some(lease) = self.leased.remove(&lease_id) {
+            self.resolve(lease.task.identity());
+            self.settle(lease_id, Settled::Completed);
+            return CompleteOutcome::Settled;
+        }
+        match self.settled.get(&lease_id).cloned() {
+            Some(Settled::Completed) | Some(Settled::Failed) => CompleteOutcome::Duplicate,
+            Some(Settled::Expired(identity)) => {
+                // The worker finished after its lease expired.  If the
+                // requeued copy is still waiting, withdraw it — the
+                // work is done; if another worker already leased it,
+                // that execution will settle on its own.
+                if let Some(idx) =
+                    self.pending.iter().position(|t| t.identity() == identity)
+                {
+                    self.pending.remove(idx);
+                    self.resolve(identity);
+                    self.settle(lease_id, Settled::Completed);
+                    CompleteOutcome::Settled
+                } else {
+                    CompleteOutcome::Duplicate
+                }
+            }
+            None => CompleteOutcome::Unknown,
+        }
+    }
+
+    /// Release a completed identity and record which data version its
+    /// execution ran against, so the scan stops requeueing work that
+    /// demonstrably cannot refresh its shard (see module docs).
+    fn resolve(&mut self, identity: TaskIdentity) {
+        self.queued.remove(&identity);
+        if let Some(stamp) = self.stamps.remove(&identity) {
+            self.resolved.insert(identity, stamp);
+        }
+    }
+
+    /// Settle a lease as failed; the task requeues until it exhausts
+    /// [`MAX_ATTEMPTS`] (shared with expiry losses).
+    pub fn fail(&mut self, lease_id: u64) -> FailOutcome {
+        if let Some(mut lease) = self.leased.remove(&lease_id) {
+            self.settle(lease_id, Settled::Failed);
+            lease.task.attempts += 1;
+            if lease.task.attempts >= MAX_ATTEMPTS {
+                let identity = lease.task.identity();
+                self.queued.remove(&identity);
+                self.stamps.remove(&identity);
+                return FailOutcome::Dropped;
+            }
+            self.pending.push_back(lease.task);
+            return FailOutcome::Requeued;
+        }
+        match self.settled.get(&lease_id) {
+            Some(_) => FailOutcome::Duplicate,
+            None => FailOutcome::Unknown,
+        }
+    }
+
+    /// Settle a lease without judging the task: the holder chose not
+    /// to execute it now (the daemon's local cooldown path).  The
+    /// identity is released with no resolution recorded and no attempt
+    /// charged, so a later scan requeues it as soon as it is due.
+    pub fn defer(&mut self, lease_id: u64) -> bool {
+        if let Some(lease) = self.leased.remove(&lease_id) {
+            let identity = lease.task.identity();
+            self.queued.remove(&identity);
+            self.stamps.remove(&identity);
+            self.settle(lease_id, Settled::Failed);
+            true
+        } else {
+            false
+        }
+    }
+
+    fn settle(&mut self, lease_id: u64, how: Settled) {
+        self.settled.insert(lease_id, how);
+        while self.settled.len() > SETTLED_KEEP {
+            let oldest = *self.settled.keys().next().expect("settled non-empty");
+            self.settled.remove(&oldest);
+        }
     }
 }
 
@@ -115,130 +693,11 @@ fn key_derived_from(key: &str, fp: &Fingerprint) -> bool {
     key.as_bytes()[..key.len() - 17] == *slug.as_bytes()
 }
 
-/// FIFO of stale frontiers with membership dedupe.
-#[derive(Debug)]
-pub struct Scheduler {
-    ttl_s: u64,
-    queue: VecDeque<RetuneTask>,
-    queued: HashSet<(String, String, String)>,
-    /// Drift tasks ever queued.  Unlike TTL tasks — which re-recording
-    /// resolves (fresh `recorded_at`) — a drifted shard is a historical
-    /// inconsistency no re-tune can repair (the fresh record lands
-    /// under the machine's *new* key), so each is delivered at most
-    /// once per scheduler lifetime instead of re-queuing after every
-    /// pop forever.
-    drift_notified: HashSet<(String, String, String)>,
-}
-
-impl Scheduler {
-    /// An empty queue with the given TTL.
-    pub fn new(ttl_s: u64) -> Scheduler {
-        Scheduler {
-            ttl_s,
-            queue: VecDeque::new(),
-            queued: HashSet::new(),
-            drift_notified: HashSet::new(),
-        }
-    }
-
-    /// The configured staleness TTL in seconds.
-    pub fn ttl_s(&self) -> u64 {
-        self.ttl_s
-    }
-
-    /// Queued task count.
-    pub fn len(&self) -> usize {
-        self.queue.len()
-    }
-
-    /// Whether the queue is empty.
-    pub fn is_empty(&self) -> bool {
-        self.queue.is_empty()
-    }
-
-    /// Scan shards against the daemon host's live fingerprint at time
-    /// `now`; queue every newly-stale frontier entry.  Returns how many
-    /// tasks were added.  (`host` reserved for lineage-aware drift
-    /// rules; the current rule needs only shard-internal consistency.)
-    pub fn scan(&mut self, shards: &[Shard], _host: &Fingerprint, now: u64) -> usize {
-        let mut added = 0;
-        for shard in shards {
-            let drifted = match &shard.fingerprint {
-                // A *derived* key that its own stored fingerprint no
-                // longer hashes to: the machine changed while records
-                // kept landing under the old key.  Arbitrary
-                // wire-supplied keys are exempt (see module docs).
-                Some(fp) => {
-                    key_derived_from(&shard.platform_key, fp)
-                        && fp.key() != shard.platform_key
-                }
-                None => false,
-            };
-            for entry in shard.frontier() {
-                let key =
-                    (shard.platform_key.clone(), entry.kernel.clone(), entry.tag.clone());
-                // Drift outranks TTL but is delivered once; an
-                // already-notified drifted shard still gets ordinary
-                // TTL staleness checks (its entries keep aging).
-                let reason = if drifted && !self.drift_notified.contains(&key) {
-                    StaleReason::FingerprintDrift
-                } else {
-                    let age_s = now.saturating_sub(entry.recorded_at);
-                    if age_s <= self.ttl_s {
-                        continue;
-                    }
-                    StaleReason::TtlExpired { age_s }
-                };
-                if self.queued.insert(key.clone()) {
-                    if matches!(reason, StaleReason::FingerprintDrift) {
-                        self.drift_notified.insert(key);
-                    }
-                    self.queue.push_back(RetuneTask {
-                        platform_key: shard.platform_key.clone(),
-                        kernel: entry.kernel.clone(),
-                        tag: entry.tag.clone(),
-                        reason,
-                    });
-                    added += 1;
-                }
-            }
-        }
-        added
-    }
-
-    /// Pop the next task (releases its dedupe slot).
-    pub fn pop(&mut self) -> Option<RetuneTask> {
-        let task = self.queue.pop_front()?;
-        self.queued.remove(&(
-            task.platform_key.clone(),
-            task.kernel.clone(),
-            task.tag.clone(),
-        ));
-        Some(task)
-    }
-
-    /// Pop the first task belonging to `platform_key`, leaving other
-    /// platforms' tasks queued.  The daemon's local re-tune worker uses
-    /// this: it can only re-measure the host, and popping a foreign
-    /// task would either waste a tune (the foreign shard stays stale
-    /// and re-queues) or starve the external workers that poll
-    /// `retune-next` for exactly those tasks.
-    pub fn pop_for(&mut self, platform_key: &str) -> Option<RetuneTask> {
-        let idx = self.queue.iter().position(|t| t.platform_key == platform_key)?;
-        let task = self.queue.remove(idx)?;
-        self.queued.remove(&(
-            task.platform_key.clone(),
-            task.kernel.clone(),
-            task.tag.clone(),
-        ));
-        Some(task)
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::coordinator::perfdb::DbEntry;
+    use crate::coordinator::portfolio::{Portfolio, PortfolioItem, FEATURE_NAMES};
 
     fn fp(l2: u64) -> Fingerprint {
         Fingerprint {
@@ -268,6 +727,34 @@ mod tests {
         }
     }
 
+    fn portfolio(kernel: &str, built_at: u64) -> Portfolio {
+        Portfolio {
+            kernel: kernel.into(),
+            strategy: "greedy-cover".into(),
+            k_max: 4,
+            retained: 0.95,
+            built_at,
+            feature_names: FEATURE_NAMES.iter().map(|s| s.to_string()).collect(),
+            items: vec![PortfolioItem {
+                config: [("tile_m".to_string(), 32i64)].into_iter().collect(),
+                config_id: "o1_tm32".into(),
+                centroid: vec![5.0; FEATURE_NAMES.len()],
+                covered: vec!["m32n32k32".into()],
+            }],
+        }
+    }
+
+    fn retune_task(platform: &str, kernel: &str, tag: &str) -> TuningTask {
+        TuningTask {
+            kind: TaskKind::Retune,
+            platform_key: platform.into(),
+            kernel: kernel.into(),
+            tag: Some(tag.into()),
+            reason: StaleReason::TtlExpired { age_s: 9000 },
+            attempts: 0,
+        }
+    }
+
     #[test]
     fn queues_ttl_expired_only_once() {
         let host = fp(1024);
@@ -278,18 +765,132 @@ mod tests {
             entries: vec![entry(&key, "axpy", "n4096", 1000)],
             portfolios: Vec::new(),
         };
-        let mut sched = Scheduler::new(3600);
+        let mut q = TaskQueue::new(3600);
         // Within TTL: nothing queued.
-        assert_eq!(sched.scan(std::slice::from_ref(&shard), &host, 2000), 0);
+        assert_eq!(q.scan(std::slice::from_ref(&shard), &host, 2000), 0);
         // Past TTL: queued exactly once across repeated scans.
-        assert_eq!(sched.scan(std::slice::from_ref(&shard), &host, 10_000), 1);
-        assert_eq!(sched.scan(std::slice::from_ref(&shard), &host, 10_000), 0);
-        let task = sched.pop().unwrap();
+        assert_eq!(q.scan(std::slice::from_ref(&shard), &host, 10_000), 1);
+        assert_eq!(q.scan(std::slice::from_ref(&shard), &host, 10_000), 0);
+        let (id, task) = q.lease(None, None, 60, 10_000).unwrap();
         assert_eq!(task.kernel, "axpy");
+        assert_eq!(task.kind, TaskKind::Retune);
         assert_eq!(task.reason, StaleReason::TtlExpired { age_s: 9_000 });
-        assert!(sched.pop().is_none());
-        // Popped slot is free again: still-stale entries re-queue.
-        assert_eq!(sched.scan(&[shard], &host, 10_000), 1);
+        // Leased, not settled: scans still see the identity as taken.
+        assert_eq!(q.scan(std::slice::from_ref(&shard), &host, 10_000), 0);
+        assert_eq!(q.complete(id), CompleteOutcome::Settled);
+        // Completed against this exact data version: the completion
+        // demonstrably did not refresh the shard (stamp unchanged), so
+        // re-running it cannot help — the scan must NOT churn it.
+        assert_eq!(q.scan(std::slice::from_ref(&shard), &host, 10_000), 0);
+        // A fresh record lands (stamp moves) and later goes stale
+        // again: the identity is fair game once more.
+        let renewed = Shard {
+            entries: vec![entry(&key, "axpy", "n4096", 2000)],
+            ..shard
+        };
+        assert_eq!(q.scan(&[renewed], &host, 10_000), 1);
+    }
+
+    #[test]
+    fn repeated_lease_losses_drop_the_task_until_rescanned() {
+        // A legacy retune-next poller (or a crash-looping worker)
+        // never settles its lease; expiry must charge attempts so the
+        // task cannot re-execute forever.
+        let mut q = TaskQueue::new(3600);
+        assert!(q.enqueue(retune_task("p1", "axpy", "n4096")));
+        let mut now = 0;
+        for _ in 0..MAX_ATTEMPTS - 1 {
+            let (_, _) = q.lease(None, None, 10, now).unwrap();
+            now += 10;
+            assert_eq!(q.expire(now), 1);
+            assert_eq!(q.len(), 1, "still under the attempt bound: requeued");
+        }
+        let (_, task) = q.lease(None, None, 10, now).unwrap();
+        assert_eq!(task.attempts, MAX_ATTEMPTS - 1);
+        now += 10;
+        assert_eq!(q.expire(now), 1, "the lease itself still expires");
+        assert!(q.is_empty(), "attempts exhausted: dropped, not requeued");
+        // Nothing is lost: the identity slot is free, so the next scan
+        // (or enqueue) recreates it with fresh attempts.
+        assert!(q.enqueue(retune_task("p1", "axpy", "n4096")));
+    }
+
+    #[test]
+    fn huge_wire_ttls_saturate_instead_of_wrapping() {
+        let mut q = TaskQueue::new(3600);
+        assert!(q.enqueue(retune_task("p1", "axpy", "n4096")));
+        // A hostile/buggy client asks for a lease of ~u64::MAX secs:
+        // must not overflow into a lease that is born expired (which
+        // would hand the task to a second worker immediately).
+        let (id, _) = q.lease(None, None, u64::MAX, 1_000_000).unwrap();
+        assert_eq!(q.expire(u64::MAX - 1), 0, "saturated lease never expires early");
+        assert_eq!(q.heartbeat(id, u64::MAX - 1), Some(u64::MAX));
+        assert_eq!(q.complete(id), CompleteOutcome::Settled);
+    }
+
+    #[test]
+    fn defer_releases_without_resolving_or_charging_attempts() {
+        let host = fp(1024);
+        let key = host.key();
+        let shard = Shard {
+            platform_key: key.clone(),
+            fingerprint: Some(host.clone()),
+            entries: vec![entry(&key, "axpy", "n4096", 1000)],
+            portfolios: Vec::new(),
+        };
+        let mut q = TaskQueue::new(3600);
+        assert_eq!(q.scan(std::slice::from_ref(&shard), &host, 10_000), 1);
+        let (id, _) = q.lease(None, None, 60, 10_000).unwrap();
+        assert!(q.defer(id));
+        assert!(!q.defer(id), "double defer is a no-op");
+        // Unlike complete, a deferred identity requeues on the very
+        // next scan (same stamp): the work was skipped, not resolved.
+        assert_eq!(q.scan(std::slice::from_ref(&shard), &host, 10_000), 1);
+        let (_, task) = q.lease(None, None, 60, 10_000).unwrap();
+        assert_eq!(task.attempts, 0, "defer charges no attempt");
+    }
+
+    #[test]
+    fn stale_portfolio_queues_rebuild_and_subsumes_sweep() {
+        let host = fp(1024);
+        let key = host.key();
+        let shard = Shard {
+            platform_key: key.clone(),
+            fingerprint: Some(host.clone()),
+            // A stale native-gemm entry AND a stale gemm portfolio:
+            // only the rebuild task queues (it re-records the sweep).
+            entries: vec![entry(&key, gemm::KERNEL, "m32n32k32", 1000)],
+            portfolios: vec![portfolio(gemm::KERNEL, 1000)],
+        };
+        let mut q = TaskQueue::new(3600);
+        assert_eq!(q.scan(std::slice::from_ref(&shard), &host, 10_000), 1);
+        let (_, task) = q.lease(None, None, 60, 10_000).unwrap();
+        assert_eq!(task.kind, TaskKind::PortfolioRebuild);
+        assert_eq!(task.kernel, gemm::KERNEL);
+        assert_eq!(task.tag, None);
+    }
+
+    #[test]
+    fn stale_native_entries_collapse_into_one_sweep_task() {
+        let host = fp(1024);
+        let key = host.key();
+        let shard = Shard {
+            platform_key: key.clone(),
+            fingerprint: Some(host.clone()),
+            entries: vec![
+                entry(&key, gemm::KERNEL, "m32n32k32", 1000),
+                entry(&key, gemm::KERNEL, "m64n64k64", 1000),
+                entry(&key, "axpy", "n4096", 1000),
+            ],
+            portfolios: Vec::new(),
+        };
+        let mut q = TaskQueue::new(3600);
+        // Two stale gemm shapes -> ONE sweep task; axpy -> one retune.
+        assert_eq!(q.scan(&[shard], &host, 10_000), 2);
+        let depth = q.depth_by_kind();
+        assert_eq!(depth["sweep"], 1);
+        assert_eq!(depth["retune"], 1);
+        assert_eq!(depth["portfolio-rebuild"], 0);
     }
 
     #[test]
@@ -301,15 +902,20 @@ mod tests {
             platform_key: fp(1024).key(),
             fingerprint: Some(drifted_fp),
             entries: vec![entry("x", "axpy", "n4096", u64::MAX / 2)],
-            portfolios: Vec::new(),
+            portfolios: vec![portfolio("gemm", u64::MAX / 2)],
         };
-        let mut sched = Scheduler::new(u64::MAX);
-        assert_eq!(sched.scan(std::slice::from_ref(&shard), &host, u64::MAX / 2), 1);
-        assert_eq!(sched.pop().unwrap().reason, StaleReason::FingerprintDrift);
+        let mut q = TaskQueue::new(u64::MAX);
+        assert_eq!(q.scan(std::slice::from_ref(&shard), &host, u64::MAX / 2), 2);
+        let (id, task) = q.lease(Some(TaskKind::Retune), None, 60, 0).unwrap();
+        assert_eq!(task.reason, StaleReason::FingerprintDrift);
+        assert_eq!(q.complete(id), CompleteOutcome::Settled);
+        let (id, task) = q.lease(Some(TaskKind::PortfolioRebuild), None, 60, 0).unwrap();
+        assert_eq!(task.reason, StaleReason::FingerprintDrift);
+        assert_eq!(q.complete(id), CompleteOutcome::Settled);
         // Drift is unfixable by re-tuning (fresh records land under the
         // new key), so it is delivered once — not re-queued every scan.
-        assert_eq!(sched.scan(&[shard], &host, u64::MAX / 2), 0);
-        assert!(sched.is_empty());
+        assert_eq!(q.scan(&[shard], &host, u64::MAX / 2), 0);
+        assert!(q.is_empty());
     }
 
     #[test]
@@ -324,8 +930,8 @@ mod tests {
             entries: vec![entry("remote-box", "axpy", "n4096", 5000)],
             portfolios: Vec::new(),
         };
-        let mut sched = Scheduler::new(u64::MAX);
-        assert_eq!(sched.scan(&[shard], &host, 6000), 0);
+        let mut q = TaskQueue::new(u64::MAX);
+        assert_eq!(q.scan(&[shard], &host, 6000), 0);
         assert!(!is_derived_key("remote-box"));
         assert!(is_derived_key(&host.key()));
         assert!(!is_derived_key("ends-with-UPPER-0123456789ABCDEF"));
@@ -343,49 +949,157 @@ mod tests {
             platform_key: key.clone(),
             fingerprint: Some(host.clone()),
             entries: vec![entry(&key, "axpy", "n4096", 5000)],
-            portfolios: Vec::new(),
+            portfolios: vec![portfolio("gemm", 5000)],
         };
-        let mut sched = Scheduler::new(3600);
-        assert_eq!(sched.scan(&[shard], &host, 5100), 0);
-        assert!(sched.is_empty());
+        let mut q = TaskQueue::new(3600);
+        assert_eq!(q.scan(&[shard], &host, 5100), 0);
+        assert!(q.is_empty());
     }
 
     #[test]
-    fn pop_for_skips_foreign_platforms() {
-        let host = fp(1024);
-        let mut sched = Scheduler::new(3600);
-        let foreign = Shard {
-            platform_key: "other-box".into(),
-            fingerprint: None,
-            entries: vec![entry("other-box", "axpy", "n4096", 100)],
-            portfolios: Vec::new(),
-        };
-        let mine = Shard {
-            platform_key: host.key(),
-            fingerprint: Some(host.clone()),
-            entries: vec![entry(&host.key(), "dot", "n4096", 100)],
-            portfolios: Vec::new(),
-        };
-        assert_eq!(sched.scan(&[foreign, mine], &host, 1_000_000), 2);
-        // The host worker pops only its own task...
-        let task = sched.pop_for(&host.key()).unwrap();
+    fn lease_filters_by_platform_and_kind() {
+        let mut q = TaskQueue::new(3600);
+        assert!(q.enqueue(retune_task("other-box", "axpy", "n4096")));
+        assert!(q.enqueue(retune_task("my-box", "dot", "n4096")));
+        // A platform-filtered lease skips foreign tasks...
+        let (id, task) = q.lease(None, Some("my-box"), 60, 0).unwrap();
         assert_eq!(task.kernel, "dot");
-        assert!(sched.pop_for(&host.key()).is_none());
-        // ...and the foreign task stays queued for retune-next.
-        assert_eq!(sched.len(), 1);
-        assert_eq!(sched.pop().unwrap().platform_key, "other-box");
+        assert!(q.lease(None, Some("my-box"), 60, 0).is_none());
+        assert_eq!(q.complete(id), CompleteOutcome::Settled);
+        // ...and the foreign task stays pending for the fleet.
+        assert_eq!(q.len(), 1);
+        assert!(q.lease(Some(TaskKind::Sweep), None, 60, 0).is_none());
+        let (_, task) = q.lease(Some(TaskKind::Retune), None, 60, 0).unwrap();
+        assert_eq!(task.platform_key, "other-box");
     }
 
     #[test]
-    fn task_json_is_machine_readable() {
-        let task = RetuneTask {
+    fn expired_lease_requeues_exactly_once() {
+        let mut q = TaskQueue::new(3600);
+        assert!(q.enqueue(retune_task("p1", "axpy", "n4096")));
+        let (id, _) = q.lease(None, None, 10, 100).unwrap();
+        assert_eq!(q.len(), 0);
+        // Not yet expired.
+        assert_eq!(q.expire(105), 0);
+        // Expired: requeued once; repeated expiry sweeps add nothing.
+        assert_eq!(q.expire(110), 1);
+        assert_eq!(q.expire(110), 0);
+        assert_eq!(q.expire(10_000), 0);
+        assert_eq!(q.len(), 1);
+        // The dead lease is gone: heartbeats on it fail.
+        assert!(q.heartbeat(id, 111).is_none());
+        // The requeued task leases again under a NEW id.
+        let (id2, task) = q.lease(None, None, 10, 120).unwrap();
+        assert_ne!(id, id2);
+        assert_eq!(task.kernel, "axpy");
+    }
+
+    #[test]
+    fn heartbeat_extends_the_lease() {
+        let mut q = TaskQueue::new(3600);
+        assert!(q.enqueue(retune_task("p1", "axpy", "n4096")));
+        let (id, _) = q.lease(None, None, 10, 100).unwrap();
+        assert_eq!(q.heartbeat(id, 108), Some(10));
+        // Would have expired at 110 without the heartbeat; now 118.
+        assert_eq!(q.expire(112), 0);
+        assert_eq!(q.expire(118), 1);
+    }
+
+    #[test]
+    fn double_complete_is_idempotent() {
+        let mut q = TaskQueue::new(3600);
+        assert!(q.enqueue(retune_task("p1", "axpy", "n4096")));
+        let (id, _) = q.lease(None, None, 60, 0).unwrap();
+        assert_eq!(q.complete(id), CompleteOutcome::Settled);
+        assert_eq!(q.complete(id), CompleteOutcome::Duplicate);
+        assert_eq!(q.complete(id), CompleteOutcome::Duplicate);
+        assert_eq!(q.complete(999), CompleteOutcome::Unknown);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn completed_task_is_never_re_leased() {
+        let mut q = TaskQueue::new(3600);
+        assert!(q.enqueue(retune_task("p1", "axpy", "n4096")));
+        let (id, _) = q.lease(None, None, 10, 100).unwrap();
+        assert_eq!(q.complete(id), CompleteOutcome::Settled);
+        // Even an expiry sweep far in the future cannot resurrect it.
+        assert_eq!(q.expire(10_000), 0);
+        assert!(q.lease(None, None, 10, 10_000).is_none());
+    }
+
+    #[test]
+    fn late_complete_after_expiry_withdraws_the_requeued_copy() {
+        let mut q = TaskQueue::new(3600);
+        assert!(q.enqueue(retune_task("p1", "axpy", "n4096")));
+        let (id, _) = q.lease(None, None, 10, 100).unwrap();
+        assert_eq!(q.expire(110), 1);
+        assert_eq!(q.len(), 1);
+        // The worker was slow, not dead: its completion withdraws the
+        // requeued copy so nobody re-executes finished work.
+        assert_eq!(q.complete(id), CompleteOutcome::Settled);
+        assert_eq!(q.len(), 0);
+        assert!(q.lease(None, None, 10, 120).is_none());
+        // But if another worker had already re-leased it, the late
+        // completion is a duplicate and the new lease runs its course.
+        assert!(q.enqueue(retune_task("p2", "dot", "n4096")));
+        let (id_a, _) = q.lease(None, None, 10, 200).unwrap();
+        assert_eq!(q.expire(210), 1);
+        let (id_b, _) = q.lease(None, None, 10, 211).unwrap();
+        assert_eq!(q.complete(id_a), CompleteOutcome::Duplicate);
+        assert_eq!(q.complete(id_b), CompleteOutcome::Settled);
+    }
+
+    #[test]
+    fn failed_tasks_requeue_until_attempts_exhaust() {
+        let mut q = TaskQueue::new(3600);
+        assert!(q.enqueue(retune_task("p1", "axpy", "n4096")));
+        for attempt in 1..MAX_ATTEMPTS {
+            let (id, task) = q.lease(None, None, 60, 0).unwrap();
+            assert_eq!(task.attempts, attempt - 1);
+            assert_eq!(q.fail(id), FailOutcome::Requeued);
+        }
+        let (id, task) = q.lease(None, None, 60, 0).unwrap();
+        assert_eq!(task.attempts, MAX_ATTEMPTS - 1);
+        assert_eq!(q.fail(id), FailOutcome::Dropped);
+        assert!(q.is_empty());
+        assert_eq!(q.fail(id), FailOutcome::Duplicate);
+        assert_eq!(q.fail(777), FailOutcome::Unknown);
+        // The identity slot is released: a later scan can requeue it.
+        assert!(q.enqueue(retune_task("p1", "axpy", "n4096")));
+    }
+
+    #[test]
+    fn task_json_round_trips() {
+        let task = TuningTask {
+            kind: TaskKind::PortfolioRebuild,
             platform_key: "p1".into(),
-            kernel: "axpy".into(),
-            tag: "n4096".into(),
-            reason: StaleReason::FingerprintDrift,
+            kernel: "gemm".into(),
+            tag: None,
+            reason: StaleReason::TtlExpired { age_s: 9000 },
+            attempts: 1,
         };
         let j = task.to_json();
-        assert_eq!(j.get("reason").and_then(Json::as_str), Some("fingerprint-drift"));
-        assert_eq!(j.get("kernel").and_then(Json::as_str), Some("axpy"));
+        assert_eq!(j.get("kind").and_then(Json::as_str), Some("portfolio-rebuild"));
+        assert_eq!(j.get("reason").and_then(Json::as_str), Some("ttl-expired"));
+        assert_eq!(j.get("age_s").and_then(Json::as_u64), Some(9000));
+        assert!(j.get("workload").is_none());
+        assert_eq!(TuningTask::from_json(&j).unwrap(), task);
+
+        let retune = retune_task("p1", "axpy", "n4096");
+        let j = retune.to_json();
+        assert_eq!(j.get("workload").and_then(Json::as_str), Some("n4096"));
+        assert_eq!(TuningTask::from_json(&j).unwrap(), retune);
+
+        // Pre-fleet replies (no kind) default to retune.
+        let legacy = json::obj(vec![
+            ("platform", json::s("p1")),
+            ("kernel", json::s("axpy")),
+            ("workload", json::s("n4096")),
+            ("reason", json::s("fingerprint-drift")),
+        ]);
+        let parsed = TuningTask::from_json(&legacy).unwrap();
+        assert_eq!(parsed.kind, TaskKind::Retune);
+        assert_eq!(parsed.reason, StaleReason::FingerprintDrift);
     }
 }

@@ -2,7 +2,7 @@
 //!
 //! A [`Server`] owns a [`ShardedDb`], the host [`Fingerprint`], an
 //! in-memory LRU decision cache over the shards, per-op counters, and
-//! the staleness [`Scheduler`].  Request handling is a pure function
+//! the leased [`TaskQueue`].  Request handling is a pure function
 //! from [`Request`] to a JSON reply ([`Server::handle_request`]), so
 //! the same core serves TCP, Unix sockets, in-process tests, and the
 //! throughput bench without touching a socket.
@@ -13,14 +13,25 @@
 //! is `Mutex`/atomics.  Background threads: a periodic staleness scan,
 //! and — when the daemon was started with a usable artifact registry —
 //! a re-tune worker that drains the queue through the batched
-//! [`Tuner`].
+//! [`Tuner`].  External `portatune work` processes drain everything
+//! else via the `task-lease`/`task-heartbeat`/`task-complete`/
+//! `task-fail` ops (see [`crate::service::scheduler`]).
+//!
+//! Panic policy: request handling must never take the daemon down on
+//! client input.  Malformed lines and bad payloads become
+//! `{"ok":false}` replies in [`Request::parse_line`] / the dispatch
+//! `Result`; the remaining `unwrap`-shaped hazards were mutex-poison
+//! unwraps on the shared caches and queue, which the module-private
+//! `lock()` helper now recovers from instead (a panicking writer
+//! leaves counters/caches usable — worst case a stale cache entry,
+//! which the TTL already bounds).
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::hash::Hash;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpListener;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::Duration;
 
 use anyhow::Result;
@@ -32,9 +43,19 @@ use crate::coordinator::search::Exhaustive;
 use crate::coordinator::tuner::Tuner;
 use crate::runtime::Registry;
 use crate::service::protocol::{reply_err, reply_ok, Request};
-use crate::service::scheduler::Scheduler;
+use crate::service::scheduler::{
+    CompleteOutcome, FailOutcome, TaskKind, TaskQueue, DEFAULT_LEASE_TTL_S,
+};
 use crate::service::transfer;
 use crate::util::json::{self, Json};
+
+/// Lock a mutex, recovering from poisoning: the guarded state (caches,
+/// counters, the task queue) stays consistent under panics because
+/// every critical section only mutates it through its own methods —
+/// serving slightly-stale cached data beats killing the daemon.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
 
 /// How long the accept loop sleeps between polls of the shutdown flag.
 const ACCEPT_POLL: Duration = Duration::from_millis(5);
@@ -45,6 +66,11 @@ const DEPLOY_CANDIDATES: usize = 5;
 /// Read timeout on accepted connections: idle sockets wake their
 /// handler this often so it can observe the shutdown flag.
 const CONN_READ_TIMEOUT: Duration = Duration::from_millis(500);
+
+/// Upper bound on a client-requested lease TTL: a typo'd `ttl_s`
+/// must not pin a task in flight until daemon restart — past this the
+/// lease expires and the task requeues like any other silent worker's.
+const MAX_LEASE_TTL_S: u64 = 24 * 3600;
 
 /// Upper bound on decision-cache staleness.  The daemon's own writes
 /// invalidate precisely, but the shard directory is a shared store —
@@ -127,13 +153,16 @@ pub struct ServeOpts {
     pub ttl_s: u64,
     /// Decision-cache capacity ((platform, kernel, workload) keys).
     pub lru_cap: usize,
+    /// Lease TTL granted when a `task-lease` request names none (and
+    /// backing the `retune-next` compatibility alias).
+    pub lease_ttl_s: u64,
 }
 
 impl Default for ServeOpts {
     fn default() -> ServeOpts {
         // 30 days: tuned configs outlive any one deploy cycle but not a
         // hardware refresh.
-        ServeOpts { ttl_s: 30 * 24 * 3600, lru_cap: 1024 }
+        ServeOpts { ttl_s: 30 * 24 * 3600, lru_cap: 1024, lease_ttl_s: DEFAULT_LEASE_TTL_S }
     }
 }
 
@@ -149,7 +178,11 @@ struct Counters {
     transfer_misses: AtomicU64,
     portfolios: AtomicU64,
     portfolio_transfers: AtomicU64,
-    retune_queued: AtomicU64,
+    tasks_queued: AtomicU64,
+    tasks_leased: AtomicU64,
+    tasks_completed: AtomicU64,
+    tasks_failed: AtomicU64,
+    leases_expired: AtomicU64,
     retunes: AtomicU64,
     errors: AtomicU64,
 }
@@ -175,13 +208,28 @@ pub struct ServeStats {
     /// `portfolio` ops that missed locally and answered via transfer.
     pub portfolio_transfers: u64,
     /// Tasks the staleness scan has queued.
-    pub retune_queued: u64,
-    /// Re-tunes the local worker completed.
+    pub tasks_queued: u64,
+    /// Leases handed out (`task-lease` + `retune-next` + the local
+    /// re-tune worker).
+    pub tasks_leased: u64,
+    /// Tasks settled successfully (`task-complete`, deduplicated).
+    pub tasks_completed: u64,
+    /// Tasks settled as failed (`task-fail`).
+    pub tasks_failed: u64,
+    /// Leases whose holders went silent past their TTL (each one
+    /// requeued its task).
+    pub leases_expired: u64,
+    /// Re-tunes the daemon's own in-process worker completed.
     pub retunes: u64,
     /// Requests that errored (malformed lines included).
     pub errors: u64,
-    /// Current staleness-queue depth.
-    pub retune_queue_depth: u64,
+    /// Pending (not-yet-leased) task count.
+    pub tasks_pending: u64,
+    /// Currently-leased task count.
+    pub tasks_inflight: u64,
+    /// Pending queue depth per task kind (`retune`, `sweep`,
+    /// `portfolio-rebuild`).
+    pub queue_depth: BTreeMap<String, u64>,
     /// Current decision-cache entry count.
     pub lru_len: u64,
 }
@@ -205,22 +253,22 @@ pub struct Server {
     host_key: String,
     opts: ServeOpts,
     lru: Mutex<Lru<DecisionKey, Decision>>,
-    /// `portfolio`-op cache over the shards.  No generation counter:
-    /// the daemon has no portfolio-writing op (`portfolio build` runs
-    /// out of band), so for the portfolio *itself* the TTL is the
-    /// staleness bound — the same guarantee [`DECISION_CACHE_TTL`]
-    /// gives entry decisions against out-of-band writers.  The cached
-    /// *fingerprint* half, however, IS written in-band (a `record` op
-    /// may update the shard's fingerprint), so `invalidate` drops the
-    /// platform's portfolio entries too.
+    /// `portfolio`-op cache over the shards.  Both halves are now
+    /// written in-band — `record` may update the shard's fingerprint,
+    /// and `record-portfolio` (how workers report finished rebuilds)
+    /// replaces the portfolio itself — so invalidation drops the
+    /// platform's portfolio entries and the populate path is guarded
+    /// by [`Self::cache_gen`] exactly like the decision cache.  The
+    /// TTL still bounds staleness against out-of-band writers
+    /// (`portatune portfolio build` on another machine).
     portfolio_lru: Mutex<Lru<PortfolioKey, PortfolioDecision>>,
-    /// Bumped by every invalidation.  `cached_lookup` snapshots it
-    /// before the (unlocked) shard read and declines to populate the
-    /// cache if it moved — otherwise a concurrent record could land
-    /// between the read and the put and the stale (possibly negative)
-    /// result would be cached indefinitely.
+    /// Bumped by every invalidation.  The cached-read paths snapshot
+    /// it before their (unlocked) shard read and decline to populate
+    /// their cache if it moved — otherwise a concurrent record could
+    /// land between the read and the put and the stale (possibly
+    /// negative) result would be cached indefinitely.
     cache_gen: AtomicU64,
-    scheduler: Mutex<Scheduler>,
+    scheduler: Mutex<TaskQueue>,
     counters: Counters,
     shutdown: AtomicBool,
 }
@@ -236,7 +284,7 @@ impl Server {
             lru: Mutex::new(Lru::new(opts.lru_cap)),
             portfolio_lru: Mutex::new(Lru::new(opts.lru_cap)),
             cache_gen: AtomicU64::new(0),
-            scheduler: Mutex::new(Scheduler::new(opts.ttl_s)),
+            scheduler: Mutex::new(TaskQueue::new(opts.ttl_s)),
             opts,
             counters: Counters::default(),
             shutdown: AtomicBool::new(false),
@@ -278,7 +326,7 @@ impl Server {
     fn cached_lookup(&self, platform: &str, kernel: &str, tag: &str) -> Result<Option<DbEntry>> {
         let key = (platform.to_string(), kernel.to_string(), tag.to_string());
         {
-            let mut lru = self.lru.lock().unwrap();
+            let mut lru = lock(&self.lru);
             match lru.get(&key) {
                 Some((read_at, cached)) if read_at.elapsed() < DECISION_CACHE_TTL => {
                     self.bump(&self.counters.lru_hits);
@@ -298,7 +346,7 @@ impl Server {
         // so an invalidation either precedes this block (gen differs —
         // skip) or follows it (our possibly-stale entry is removed).
         {
-            let mut lru = self.lru.lock().unwrap();
+            let mut lru = lock(&self.lru);
             if self.cache_gen.load(Ordering::SeqCst) == gen_before {
                 lru.put(key, (std::time::Instant::now(), found.clone()));
             }
@@ -315,7 +363,7 @@ impl Server {
     ) -> Result<(Option<Fingerprint>, Option<Portfolio>)> {
         let key = (platform.to_string(), kernel.to_string());
         {
-            let mut lru = self.portfolio_lru.lock().unwrap();
+            let mut lru = lock(&self.portfolio_lru);
             match lru.get(&key) {
                 Some((read_at, fp, p)) if read_at.elapsed() < DECISION_CACHE_TTL => {
                     self.bump(&self.counters.lru_hits);
@@ -325,20 +373,26 @@ impl Server {
                 None => {}
             }
         }
+        let gen_before = self.cache_gen.load(Ordering::SeqCst);
         self.bump(&self.counters.shard_reads);
         let shard = self.db.load(platform)?;
         let fp = shard.as_ref().and_then(|s| s.fingerprint.clone());
         let p = shard.as_ref().and_then(|s| s.portfolio(kernel).cloned());
-        self.portfolio_lru
-            .lock()
-            .unwrap()
-            .put(key, (std::time::Instant::now(), fp.clone(), p.clone()));
+        // Same race guard as `cached_lookup`: a `record-portfolio`
+        // landing between the shard read and this put must not leave a
+        // stale (possibly negative) portfolio cached indefinitely.
+        {
+            let mut lru = lock(&self.portfolio_lru);
+            if self.cache_gen.load(Ordering::SeqCst) == gen_before {
+                lru.put(key, (std::time::Instant::now(), fp.clone(), p.clone()));
+            }
+        }
         Ok((fp, p))
     }
 
     fn invalidate(&self, platform: &str, kernel: &str, tag: &str) {
         let key = (platform.to_string(), kernel.to_string(), tag.to_string());
-        let mut lru = self.lru.lock().unwrap();
+        let mut lru = lock(&self.lru);
         self.cache_gen.fetch_add(1, Ordering::SeqCst);
         lru.remove(&key);
         drop(lru);
@@ -346,11 +400,32 @@ impl Server {
         // the portfolio cache stores for selection features — drop the
         // platform's portfolio entries (every kernel) so the next
         // portfolio op re-reads it.
-        self.portfolio_lru.lock().unwrap().retain(|(p, _)| p != platform);
+        lock(&self.portfolio_lru).retain(|(p, _)| p != platform);
+    }
+
+    /// Invalidate after a portfolio write: drop the platform's
+    /// portfolio cache entries (under the generation bump so a racing
+    /// `cached_portfolio` read cannot re-cache the pre-write shard).
+    fn invalidate_portfolio(&self, platform: &str) {
+        let mut lru = lock(&self.portfolio_lru);
+        self.cache_gen.fetch_add(1, Ordering::SeqCst);
+        lru.retain(|(p, _)| p != platform);
     }
 
     /// Counter snapshot (plus live queue/cache depths).
     pub fn stats(&self) -> ServeStats {
+        self.drain_expired();
+        let (tasks_pending, tasks_inflight, queue_depth) = {
+            let q = lock(&self.scheduler);
+            (
+                q.len() as u64,
+                q.leased_len() as u64,
+                q.depth_by_kind()
+                    .into_iter()
+                    .map(|(k, v)| (k.to_string(), v))
+                    .collect::<BTreeMap<String, u64>>(),
+            )
+        };
         ServeStats {
             lookups: self.counters.lookups.load(Ordering::Relaxed),
             deploys: self.counters.deploys.load(Ordering::Relaxed),
@@ -360,11 +435,28 @@ impl Server {
             transfer_misses: self.counters.transfer_misses.load(Ordering::Relaxed),
             portfolios: self.counters.portfolios.load(Ordering::Relaxed),
             portfolio_transfers: self.counters.portfolio_transfers.load(Ordering::Relaxed),
-            retune_queued: self.counters.retune_queued.load(Ordering::Relaxed),
+            tasks_queued: self.counters.tasks_queued.load(Ordering::Relaxed),
+            tasks_leased: self.counters.tasks_leased.load(Ordering::Relaxed),
+            tasks_completed: self.counters.tasks_completed.load(Ordering::Relaxed),
+            tasks_failed: self.counters.tasks_failed.load(Ordering::Relaxed),
+            leases_expired: self.counters.leases_expired.load(Ordering::Relaxed),
             retunes: self.counters.retunes.load(Ordering::Relaxed),
             errors: self.counters.errors.load(Ordering::Relaxed),
-            retune_queue_depth: self.scheduler.lock().unwrap().len() as u64,
-            lru_len: self.lru.lock().unwrap().len() as u64,
+            tasks_pending,
+            tasks_inflight,
+            queue_depth,
+            lru_len: lock(&self.lru).len() as u64,
+        }
+    }
+
+    /// Requeue every lease whose holder went silent past its TTL.
+    /// Called lazily by every queue-touching op and the periodic scan
+    /// — a crashed worker's task is back in the queue by the next time
+    /// anyone asks for work.
+    fn drain_expired(&self) {
+        let expired = lock(&self.scheduler).expire(unix_now());
+        if expired > 0 {
+            self.counters.leases_expired.fetch_add(expired as u64, Ordering::Relaxed);
         }
     }
 
@@ -461,6 +553,17 @@ impl Server {
                 self.invalidate(&platform, &kernel, &tag);
                 Ok(reply_ok(vec![("recorded", Json::Bool(true))]))
             }
+            Request::RecordPortfolio { platform, portfolio, fingerprint } => {
+                self.bump(&self.counters.records);
+                let platform = platform.as_deref().unwrap_or(&self.host_key);
+                self.db.record_portfolio(platform, fingerprint.as_ref(), (**portfolio).clone())?;
+                self.invalidate_portfolio(platform);
+                Ok(reply_ok(vec![
+                    ("recorded", Json::Bool(true)),
+                    ("platform", json::s(platform)),
+                    ("kernel", json::s(&portfolio.kernel)),
+                ]))
+            }
             Request::Stats => {
                 Ok(reply_ok(vec![(
                     "stats",
@@ -517,20 +620,106 @@ impl Server {
                     None => Ok(reply_ok(vec![("found", Json::Bool(false))])),
                 }
             }
-            Request::RetuneNext => {
-                let task = self.scheduler.lock().unwrap().pop();
-                match task {
-                    Some(t) => Ok(reply_ok(vec![
-                        ("found", Json::Bool(true)),
-                        ("task", t.to_json()),
+            Request::TaskLease { kind, platform, ttl_s } => {
+                self.drain_expired();
+                let ttl = ttl_s.unwrap_or(self.opts.lease_ttl_s).min(MAX_LEASE_TTL_S);
+                self.lease_reply(*kind, platform.as_deref(), ttl)
+            }
+            Request::TaskHeartbeat { lease_id } => {
+                self.drain_expired();
+                match lock(&self.scheduler).heartbeat(*lease_id, unix_now()) {
+                    Some(ttl) => Ok(reply_ok(vec![
+                        ("extended", Json::Bool(true)),
+                        ("ttl_s", json::int(ttl as i64)),
                     ])),
-                    None => Ok(reply_ok(vec![("found", Json::Bool(false))])),
+                    // Not an error reply: the worker must learn "you
+                    // lost the lease, stop" — a protocol failure would
+                    // be indistinguishable from a flaky connection.
+                    None => Ok(reply_ok(vec![("extended", Json::Bool(false))])),
                 }
+            }
+            Request::TaskComplete { lease_id } => {
+                self.drain_expired();
+                let outcome = lock(&self.scheduler).complete(*lease_id);
+                match outcome {
+                    CompleteOutcome::Settled => {
+                        self.bump(&self.counters.tasks_completed);
+                        Ok(reply_ok(vec![
+                            ("settled", Json::Bool(true)),
+                            ("duplicate", Json::Bool(false)),
+                        ]))
+                    }
+                    CompleteOutcome::Duplicate => Ok(reply_ok(vec![
+                        ("settled", Json::Bool(true)),
+                        ("duplicate", Json::Bool(true)),
+                    ])),
+                    CompleteOutcome::Unknown => {
+                        Err(anyhow::anyhow!("unknown lease {lease_id}"))
+                    }
+                }
+            }
+            Request::TaskFail { lease_id, error } => {
+                self.drain_expired();
+                if let Some(msg) = error {
+                    eprintln!("task lease {lease_id} failed on worker: {msg}");
+                }
+                let outcome = lock(&self.scheduler).fail(*lease_id);
+                match outcome {
+                    FailOutcome::Requeued => {
+                        self.bump(&self.counters.tasks_failed);
+                        Ok(reply_ok(vec![("requeued", Json::Bool(true))]))
+                    }
+                    FailOutcome::Dropped => {
+                        self.bump(&self.counters.tasks_failed);
+                        Ok(reply_ok(vec![
+                            ("requeued", Json::Bool(false)),
+                            ("dropped", Json::Bool(true)),
+                        ]))
+                    }
+                    FailOutcome::Duplicate => Ok(reply_ok(vec![
+                        ("requeued", Json::Bool(false)),
+                        ("duplicate", Json::Bool(true)),
+                    ])),
+                    FailOutcome::Unknown => Err(anyhow::anyhow!("unknown lease {lease_id}")),
+                }
+            }
+            Request::RetuneNext => {
+                // Back-compat alias: a default-TTL lease of the next
+                // retune task.  The old fire-and-forget pop lost the
+                // task forever if the poller died before recording;
+                // now a dead poller's lease expires and the task
+                // requeues.  Old callers ignore the extra lease
+                // fields; new ones may heartbeat/complete them.
+                self.drain_expired();
+                self.lease_reply(Some(TaskKind::Retune), None, self.opts.lease_ttl_s)
             }
             Request::Shutdown => {
                 self.request_shutdown();
                 Ok(reply_ok(vec![("stopping", Json::Bool(true))]))
             }
+        }
+    }
+
+    /// Lease the next matching task and shape the wire reply shared by
+    /// `task-lease` and the `retune-next` alias.
+    fn lease_reply(
+        &self,
+        kind: Option<TaskKind>,
+        platform: Option<&str>,
+        ttl_s: u64,
+    ) -> Result<Json> {
+        let leased = lock(&self.scheduler).lease(kind, platform, ttl_s, unix_now());
+        match leased {
+            Some((lease_id, task)) => {
+                self.bump(&self.counters.tasks_leased);
+                Ok(reply_ok(vec![
+                    ("found", Json::Bool(true)),
+                    ("lease_id", json::int(lease_id as i64)),
+                    ("ttl_s", json::int(ttl_s.max(1) as i64)),
+                    ("task", task.to_json()),
+                ]))
+            }
+            None => Ok(reply_ok(vec![("found", Json::Bool(false))])),
         }
     }
 
@@ -606,10 +795,14 @@ impl Server {
     }
 
     /// One periodic staleness scan; returns how many tasks were queued.
+    /// Also requeues expired leases — the scan thread is the heartbeat
+    /// that guarantees a crashed worker's task resurfaces even when no
+    /// other worker is polling.
     pub fn scan_once(&self) -> Result<usize> {
+        self.drain_expired();
         let shards = self.db.all_shards()?;
-        let added = self.scheduler.lock().unwrap().scan(&shards, &self.host, unix_now());
-        self.counters.retune_queued.fetch_add(added as u64, Ordering::Relaxed);
+        let added = lock(&self.scheduler).scan(&shards, &self.host, unix_now());
+        self.counters.tasks_queued.fetch_add(added as u64, Ordering::Relaxed);
         Ok(added)
     }
 
@@ -630,14 +823,19 @@ impl Server {
         })
     }
 
-    /// Background re-tune worker: drains the *host's* staleness tasks
+    /// Background re-tune worker: drains the *host's* retune tasks
     /// through the batched [`Tuner`] and records fresh entries under
-    /// the host's current fingerprint (foreign platforms' tasks remain
-    /// queued for external `retune-next` workers).  A per-(kernel,
-    /// workload) cooldown — a quarter of the TTL, at least a minute —
-    /// bounds the tuning rate even if a recording failure leaves a
-    /// task re-queue-able, while still allowing the periodic refresh
-    /// the TTL exists for.
+    /// the host's current fingerprint.  Foreign platforms' tasks and
+    /// the kernel-wide kinds (sweep, portfolio-rebuild) remain queued
+    /// for the external `portatune work` fleet — this worker owns an
+    /// artifact registry, not a native sweep pipeline.  Checkout goes
+    /// through the same lease machinery as the wire ops (a generous
+    /// TTL: the tune is a single blocking call with nothing to
+    /// heartbeat from), so its completions and failures show up in the
+    /// task counters.  A per-(kernel, workload) cooldown — a quarter
+    /// of the TTL, at least a minute — bounds the tuning rate even if
+    /// a recording failure leaves a task re-queue-able, while still
+    /// allowing the periodic refresh the TTL exists for.
     ///
     /// The worker builds its own [`Registry`] *inside* the thread via
     /// `make_registry`: backend executable types are not `Send` under
@@ -661,26 +859,51 @@ impl Server {
                 }
             };
             let mut last_retuned: HashMap<(String, String), std::time::Instant> = HashMap::new();
+            // A tune is one blocking call with no heartbeat
+            // opportunity; lease long enough that a slow exhaustive
+            // pass cannot expire out from under an in-process worker.
+            let lease_ttl = self.opts.lease_ttl_s.max(3600);
             while !self.is_shutdown() {
-                // Only the host's own tasks: foreign shards stay queued
-                // for the external workers polling `retune-next` — this
-                // daemon cannot re-measure another machine, and a local
-                // tune would be recorded under the host's key anyway,
-                // leaving the foreign shard stale and re-queuing.
-                let task = self.scheduler.lock().unwrap().pop_for(&self.host_key);
-                let Some(task) = task else {
+                // Only the host's own retune tasks: foreign shards and
+                // kernel-wide tasks stay queued for the external fleet
+                // — this daemon cannot re-measure another machine, and
+                // a local tune would be recorded under the host's key
+                // anyway, leaving the foreign shard stale and
+                // re-queuing.
+                self.drain_expired();
+                let leased = lock(&self.scheduler).lease(
+                    Some(TaskKind::Retune),
+                    Some(&self.host_key),
+                    lease_ttl,
+                    unix_now(),
+                );
+                let Some((lease_id, task)) = leased else {
                     std::thread::sleep(Duration::from_millis(100));
                     continue;
                 };
-                let work_key = (task.kernel.clone(), task.tag.clone());
+                self.bump(&self.counters.tasks_leased);
+                let Some(tag) = task.tag.clone() else {
+                    // Retune tasks always carry a workload; a tagless
+                    // one is a queue bug — drop it rather than loop.
+                    let _ = lock(&self.scheduler).fail(lease_id);
+                    self.bump(&self.counters.tasks_failed);
+                    self.bump(&self.counters.errors);
+                    continue;
+                };
+                let work_key = (task.kernel.clone(), tag.clone());
                 if last_retuned.get(&work_key).is_some_and(|t| t.elapsed() < cooldown) {
+                    // Within cooldown: defer (not complete — a
+                    // completion would mark the identity resolved at
+                    // its current stamp and the scan would never bring
+                    // it back); the next scan requeues it.
+                    let _ = lock(&self.scheduler).defer(lease_id);
                     continue;
                 }
                 last_retuned.insert(work_key, std::time::Instant::now());
                 let mut tuner = Tuner::new(&registry);
                 tuner.batch = batch.max(1);
                 let mut strategy = Exhaustive::new();
-                match tuner.tune(&task.kernel, &task.tag, &mut strategy, usize::MAX) {
+                match tuner.tune(&task.kernel, &tag, &mut strategy, usize::MAX) {
                     Ok(outcome) => {
                         let entry = tuner.entry_for(&outcome);
                         let (platform, kernel, tag) =
@@ -688,11 +911,22 @@ impl Server {
                         if self.db.record(Some(&outcome.platform), entry).is_ok() {
                             self.invalidate(&platform, &kernel, &tag);
                             self.bump(&self.counters.retunes);
+                            if lock(&self.scheduler).complete(lease_id)
+                                == CompleteOutcome::Settled
+                            {
+                                self.bump(&self.counters.tasks_completed);
+                            }
                         } else {
+                            let _ = lock(&self.scheduler).fail(lease_id);
+                            self.bump(&self.counters.tasks_failed);
                             self.bump(&self.counters.errors);
                         }
                     }
-                    Err(_) => self.bump(&self.counters.errors),
+                    Err(_) => {
+                        let _ = lock(&self.scheduler).fail(lease_id);
+                        self.bump(&self.counters.tasks_failed);
+                        self.bump(&self.counters.errors);
+                    }
                 }
             }
         })
@@ -1192,22 +1426,158 @@ mod tests {
     }
 
     #[test]
-    fn scan_once_queues_and_retune_next_pops() {
+    fn scan_once_queues_and_retune_next_leases() {
         let (srv, dir) = test_server("scan");
         let mut stale = entry("p1", "axpy", "n4096", "old");
         stale.recorded_at = 1000; // ancient
         srv.db().record(None, stale).unwrap();
         let added = srv.scan_once().unwrap();
         assert_eq!(added, 1);
-        assert_eq!(srv.stats().retune_queue_depth, 1);
+        let stats = srv.stats();
+        assert_eq!(stats.tasks_pending, 1);
+        assert_eq!(stats.tasks_queued, 1);
+        assert_eq!(stats.queue_depth["retune"], 1);
+        // retune-next is now a lease: the reply carries the task in
+        // the legacy shape PLUS a lease id.
         let reply = srv.handle_request(&Request::RetuneNext);
         assert_eq!(reply.get("found").and_then(Json::as_bool), Some(true));
         assert_eq!(
             reply.get("task").and_then(|t| t.get("reason")).and_then(Json::as_str),
             Some("ttl-expired")
         );
+        assert_eq!(
+            reply.get("task").and_then(|t| t.get("workload")).and_then(Json::as_str),
+            Some("n4096")
+        );
+        let lease_id = reply.get("lease_id").and_then(Json::as_u64).unwrap();
+        // The task is in flight, not re-leasable...
         let reply = srv.handle_request(&Request::RetuneNext);
         assert_eq!(reply.get("found").and_then(Json::as_bool), Some(false));
+        let stats = srv.stats();
+        assert_eq!(stats.tasks_inflight, 1);
+        assert_eq!(stats.tasks_leased, 1);
+        // ...heartbeats extend it, and completion settles it.
+        let reply = srv.handle_request(&Request::TaskHeartbeat { lease_id });
+        assert_eq!(reply.get("extended").and_then(Json::as_bool), Some(true));
+        let reply = srv.handle_request(&Request::TaskComplete { lease_id });
+        assert_eq!(reply.get("settled").and_then(Json::as_bool), Some(true));
+        assert_eq!(reply.get("duplicate").and_then(Json::as_bool), Some(false));
+        // Double-complete is idempotent and does NOT double-count.
+        let reply = srv.handle_request(&Request::TaskComplete { lease_id });
+        assert_eq!(reply.get("duplicate").and_then(Json::as_bool), Some(true));
+        let stats = srv.stats();
+        assert_eq!(stats.tasks_completed, 1);
+        assert_eq!(stats.tasks_inflight, 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn task_lease_filters_and_fail_requeues() {
+        let (srv, dir) = test_server("lease-filter");
+        let mut stale = entry("p1", "axpy", "n4096", "old");
+        stale.recorded_at = 1000;
+        srv.db().record(None, stale).unwrap();
+        assert_eq!(srv.scan_once().unwrap(), 1);
+        // Platform filter: a worker for another box gets nothing.
+        let reply = srv.handle_request(&Request::TaskLease {
+            kind: None,
+            platform: Some("other-box".into()),
+            ttl_s: None,
+        });
+        assert_eq!(reply.get("found").and_then(Json::as_bool), Some(false));
+        // Kind filter: no sweep tasks queued.
+        let reply = srv.handle_request(&Request::TaskLease {
+            kind: Some(TaskKind::Sweep),
+            platform: None,
+            ttl_s: None,
+        });
+        assert_eq!(reply.get("found").and_then(Json::as_bool), Some(false));
+        // Unfiltered lease takes it; fail requeues it for a retry.
+        let reply = srv.handle_request(&Request::TaskLease {
+            kind: None,
+            platform: Some("p1".into()),
+            ttl_s: Some(60),
+        });
+        assert_eq!(reply.get("found").and_then(Json::as_bool), Some(true));
+        let lease_id = reply.get("lease_id").and_then(Json::as_u64).unwrap();
+        let reply = srv.handle_request(&Request::TaskFail {
+            lease_id,
+            error: Some("worker had no artifacts".into()),
+        });
+        assert_eq!(reply.get("requeued").and_then(Json::as_bool), Some(true));
+        let stats = srv.stats();
+        assert_eq!(stats.tasks_failed, 1);
+        assert_eq!(stats.tasks_pending, 1);
+        // Settling an unknown lease is an error reply, not a panic.
+        let reply = srv.handle_request(&Request::TaskComplete { lease_id: 999_999 });
+        assert_eq!(reply.get("ok").and_then(Json::as_bool), Some(false));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn record_portfolio_op_invalidates_the_portfolio_cache() {
+        let (srv, dir) = test_server("record-portfolio");
+        let mut old = test_portfolio("gemm");
+        old.built_at = 1000;
+        srv.db().record_portfolio("p1", Some(&fp()), old).unwrap();
+        let req = Request::Portfolio {
+            platform: Some("p1".into()),
+            kernel: "gemm".into(),
+            dims: None,
+            fingerprint: None,
+        };
+        let reply = srv.handle_request(&req); // populates the cache
+        assert_eq!(
+            reply.get("portfolio").and_then(|p| p.get("built_at")).and_then(Json::as_u64),
+            Some(1000)
+        );
+        // A worker reports a rebuilt portfolio through the wire op...
+        let fresh = test_portfolio("gemm");
+        let fresh_built_at = fresh.built_at;
+        let reply = srv.handle_request(&Request::RecordPortfolio {
+            platform: Some("p1".into()),
+            portfolio: Box::new(fresh),
+            fingerprint: Some(fp()),
+        });
+        assert_eq!(reply.get("recorded").and_then(Json::as_bool), Some(true));
+        // ...and the very next portfolio op serves the fresh build —
+        // no TTL wait, the cache was invalidated.
+        let reply = srv.handle_request(&req);
+        assert_eq!(
+            reply.get("portfolio").and_then(|p| p.get("built_at")).and_then(Json::as_u64),
+            Some(fresh_built_at)
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stale_portfolio_flows_to_rebuild_task_and_rebuild_resolves_it() {
+        let (srv, dir) = test_server("stale-portfolio");
+        let mut aged = test_portfolio("gemm");
+        aged.built_at = 1000; // ancient
+        let platform = srv.host().key();
+        srv.db().record_portfolio(&platform, Some(&fp()), aged).unwrap();
+        assert_eq!(srv.scan_once().unwrap(), 1);
+        let reply = srv.handle_request(&Request::TaskLease {
+            kind: None,
+            platform: Some(platform.clone()),
+            ttl_s: Some(60),
+        });
+        assert_eq!(reply.get("found").and_then(Json::as_bool), Some(true));
+        let task = reply.get("task").unwrap();
+        assert_eq!(task.get("kind").and_then(Json::as_str), Some("portfolio-rebuild"));
+        assert_eq!(task.get("kernel").and_then(Json::as_str), Some("gemm"));
+        let lease_id = reply.get("lease_id").and_then(Json::as_u64).unwrap();
+        // The worker reports the rebuild and completes the lease.
+        srv.handle_request(&Request::RecordPortfolio {
+            platform: Some(platform.clone()),
+            portfolio: Box::new(test_portfolio("gemm")),
+            fingerprint: Some(fp()),
+        });
+        let reply = srv.handle_request(&Request::TaskComplete { lease_id });
+        assert_eq!(reply.get("settled").and_then(Json::as_bool), Some(true));
+        // Fresh build -> the next scan queues nothing.
+        assert_eq!(srv.scan_once().unwrap(), 0);
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -1,0 +1,422 @@
+//! The distributed tuning worker — `portatune work`.
+//!
+//! A worker is the execution half of the serve daemon's [`TaskQueue`]:
+//! it loops **lease → execute → report** against a remote daemon over
+//! the ordinary wire [`Client`], so any machine that can reach the
+//! daemon can help drain its staleness backlog.  The daemon never
+//! blocks on a worker: a lease that stops heartbeating expires and the
+//! task requeues, so killing a worker mid-task loses nothing.
+//!
+//! What each task kind executes:
+//!
+//! * **retune** — the batched [`Tuner`] over the worker's artifact
+//!   registry (one (kernel, workload) pair), reported back through the
+//!   `record` op so the daemon's decision cache is invalidated;
+//! * **sweep** — [`sweep_native`] host-side (no artifacts needed),
+//!   every per-shape winner reported through `record`;
+//! * **portfolio-rebuild** — [`sweep_native`] plus
+//!   [`CostMatrix::build_portfolio`], the sweep entries reported
+//!   through `record` and the rebuilt portfolio through
+//!   `record-portfolio`, so the daemon serves the fresh `built_at`
+//!   immediately.
+//!
+//! By default a worker leases only tasks for **its own platform key**
+//! — measurements taken on this machine describe this machine, and
+//! recording them under a foreign key would poison that platform's
+//! shard.  `--any-platform` opts into taking foreign tasks anyway
+//! (results still record under the worker's true key: that is where
+//! the fresh data lands after a hardware change).
+//!
+//! While a task executes, a background thread heartbeats the lease so
+//! a long sweep cannot expire out from under a *live* worker; the
+//! heartbeat stops the moment execution ends (success or failure).
+//!
+//! [`TaskQueue`]: crate::service::scheduler::TaskQueue
+//! [`Tuner`]: crate::coordinator::tuner::Tuner
+//! [`sweep_native`]: crate::coordinator::portfolio::sweep_native
+//! [`CostMatrix::build_portfolio`]: crate::coordinator::portfolio::CostMatrix::build_portfolio
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::measure::MeasureConfig;
+use crate::coordinator::platform::Fingerprint;
+use crate::coordinator::portfolio::{sweep_native, GemmSweep};
+use crate::coordinator::search::Exhaustive;
+use crate::coordinator::tuner::Tuner;
+use crate::runtime::{Registry, Runtime};
+use crate::service::client::{Client, LeasedTask};
+use crate::service::protocol::Request;
+use crate::service::scheduler::{TaskKind, TuningTask, DEFAULT_LEASE_TTL_S};
+
+/// Worker configuration (the `portatune work` flags).
+#[derive(Debug, Clone)]
+pub struct WorkerOpts {
+    /// Artifact root for retune tasks (sweeps need none).
+    pub artifacts: PathBuf,
+    /// Lease TTL requested from the daemon.
+    pub lease_ttl_s: u64,
+    /// Heartbeat interval while executing; 0 derives `lease_ttl_s / 3`
+    /// (at least one second).
+    pub heartbeat_s: u64,
+    /// Smoke-sized sweeps and measurement profiles.
+    pub quick: bool,
+    /// Deterministic input seed for sweeps.
+    pub seed: u64,
+    /// Tuner batch size for retune tasks.
+    pub batch: usize,
+    /// Lease tasks for any platform, not just this machine's key.
+    pub any_platform: bool,
+    /// Portfolio size cap for rebuild tasks.
+    pub k_max: usize,
+    /// Retention target for rebuild tasks.
+    pub target: f64,
+}
+
+impl Default for WorkerOpts {
+    fn default() -> WorkerOpts {
+        WorkerOpts {
+            artifacts: PathBuf::from("artifacts"),
+            lease_ttl_s: DEFAULT_LEASE_TTL_S,
+            heartbeat_s: 0,
+            quick: false,
+            seed: 42,
+            batch: 4,
+            any_platform: false,
+            k_max: 4,
+            target: 0.9,
+        }
+    }
+}
+
+/// What one executed task looked like.
+#[derive(Debug, Clone)]
+pub struct TaskReport {
+    /// The lease that owned the task.
+    pub lease_id: u64,
+    /// The task itself.
+    pub task: TuningTask,
+    /// Whether execution succeeded (and the completion was reported).
+    pub ok: bool,
+    /// Human-oriented outcome description (the error text on failure).
+    pub detail: String,
+}
+
+/// Tally of a worker run.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WorkSummary {
+    /// Tasks executed and completed.
+    pub completed: u64,
+    /// Tasks that failed (reported via `task-fail`).
+    pub failed: u64,
+}
+
+/// A fleet worker bound to one daemon.
+pub struct Worker {
+    client: Client,
+    host: Fingerprint,
+    host_key: String,
+    opts: WorkerOpts,
+}
+
+impl Worker {
+    /// A worker speaking to `client`, identifying as this machine.
+    pub fn new(client: Client, opts: WorkerOpts) -> Worker {
+        let host = Fingerprint::detect();
+        let host_key = host.key();
+        Worker { client, host, host_key, opts }
+    }
+
+    /// The platform key this worker records results under.
+    pub fn host_key(&self) -> &str {
+        &self.host_key
+    }
+
+    /// Heartbeat cadence for a lease the daemon granted at
+    /// `granted_ttl_s`.  Derived from the *granted* TTL, not the
+    /// requested one — the daemon caps absurd requests, and beating at
+    /// a third of a TTL the lease does not actually have would let it
+    /// expire (and requeue for a second worker) under a live one.
+    fn heartbeat_interval(&self, granted_ttl_s: u64) -> Duration {
+        let secs = if self.opts.heartbeat_s > 0 {
+            self.opts.heartbeat_s
+        } else {
+            (granted_ttl_s / 3).max(1)
+        };
+        Duration::from_secs(secs)
+    }
+
+    /// Lease one task, execute it, and report the result.  `Ok(None)`
+    /// when the daemon had no matching task.  Execution errors are
+    /// *reported* (`task-fail`), not returned: the worker loop should
+    /// keep draining; only transport-level failures surface as `Err`.
+    pub fn run_once(&self) -> Result<Option<TaskReport>> {
+        let platform = (!self.opts.any_platform).then(|| self.host_key.clone());
+        let Some(leased) =
+            self.client.lease_task(None, platform, Some(self.opts.lease_ttl_s))?
+        else {
+            return Ok(None);
+        };
+        let granted_ttl_s = if leased.ttl_s > 0 { leased.ttl_s } else { self.opts.lease_ttl_s };
+        let heartbeat = HeartbeatGuard::spawn(
+            self.client.clone(),
+            leased.lease_id,
+            self.heartbeat_interval(granted_ttl_s),
+        );
+        let outcome = self.execute(&leased);
+        drop(heartbeat);
+        match outcome {
+            Ok(detail) => {
+                self.client
+                    .complete_task(leased.lease_id)
+                    .context("reporting task completion")?;
+                Ok(Some(TaskReport {
+                    lease_id: leased.lease_id,
+                    task: leased.task,
+                    ok: true,
+                    detail,
+                }))
+            }
+            Err(e) => {
+                let detail = format!("{e:#}");
+                // Best-effort: if even the failure report cannot reach
+                // the daemon, the lease TTL requeues the task anyway.
+                let _ = self.client.fail_task(leased.lease_id, &detail);
+                Ok(Some(TaskReport {
+                    lease_id: leased.lease_id,
+                    task: leased.task,
+                    ok: false,
+                    detail,
+                }))
+            }
+        }
+    }
+
+    /// Drain loop.  With `once`, waits up to `wait` for a task to
+    /// appear, executes exactly one, and errors if it failed (or none
+    /// arrived) — the CI smoke shape.  Otherwise polls forever every
+    /// `poll`, tolerating transient daemon outages with backoff, and
+    /// returns once the daemon stays unreachable.
+    pub fn run(&self, once: bool, poll: Duration, wait: Duration) -> Result<WorkSummary> {
+        let mut summary = WorkSummary::default();
+        let started = Instant::now();
+        let mut consecutive_errors: u32 = 0;
+        loop {
+            match self.run_once() {
+                Ok(Some(report)) => {
+                    consecutive_errors = 0;
+                    let task = &report.task;
+                    let label = match &task.tag {
+                        Some(tag) => format!("{}/{}", task.kernel, tag),
+                        None => task.kernel.clone(),
+                    };
+                    if report.ok {
+                        summary.completed += 1;
+                        eprintln!(
+                            "[work] completed {} {} for {}: {}",
+                            task.kind.as_str(),
+                            label,
+                            task.platform_key,
+                            report.detail
+                        );
+                    } else {
+                        summary.failed += 1;
+                        eprintln!(
+                            "[work] FAILED {} {} for {}: {}",
+                            task.kind.as_str(),
+                            label,
+                            task.platform_key,
+                            report.detail
+                        );
+                    }
+                    if once {
+                        anyhow::ensure!(
+                            report.ok,
+                            "task failed: {} (see daemon log)",
+                            report.detail
+                        );
+                        return Ok(summary);
+                    }
+                }
+                Ok(None) => {
+                    // A successful empty poll proves the daemon is
+                    // reachable: non-consecutive blips must not
+                    // accumulate into a fatal "unreachable" verdict on
+                    // a long-running idle worker.
+                    consecutive_errors = 0;
+                    if once && started.elapsed() >= wait {
+                        anyhow::bail!(
+                            "no task available within {:.0}s (is the daemon's staleness \
+                             scan running, and does this worker's platform filter match?)",
+                            wait.as_secs_f64()
+                        );
+                    }
+                    std::thread::sleep(poll);
+                }
+                Err(e) => {
+                    consecutive_errors += 1;
+                    if consecutive_errors >= 5 {
+                        return Err(e.context("daemon unreachable after 5 attempts"));
+                    }
+                    eprintln!("[work] daemon error (retrying): {e:#}");
+                    std::thread::sleep(poll * consecutive_errors);
+                }
+            }
+        }
+    }
+
+    /// Execute one leased task; returns the completion detail line.
+    fn execute(&self, leased: &LeasedTask) -> Result<String> {
+        let task = &leased.task;
+        match task.kind {
+            TaskKind::Sweep => self.execute_sweep(task),
+            TaskKind::PortfolioRebuild => self.execute_rebuild(task),
+            TaskKind::Retune => self.execute_retune(task),
+        }
+    }
+
+    /// Run the native sweep and report every per-shape winner through
+    /// `record`.  Returns the sweep and how many shapes were recorded
+    /// (shared by the sweep and portfolio-rebuild task kinds).
+    fn sweep_and_record(&self, task: &TuningTask) -> Result<(GemmSweep, usize)> {
+        let sweep = sweep_native(&task.kernel, self.opts.quick, self.opts.seed, &self.host)?;
+        let entries = sweep.entries(&self.host_key, "worker-sweep");
+        let n = entries.len();
+        for entry in entries {
+            self.client
+                .call(&Request::Record {
+                    entry: Box::new(entry),
+                    fingerprint: Some(self.host.clone()),
+                })
+                .context("recording sweep entry")?;
+        }
+        Ok((sweep, n))
+    }
+
+    /// Execute a sweep task.
+    fn execute_sweep(&self, task: &TuningTask) -> Result<String> {
+        let (_, n) = self.sweep_and_record(task)?;
+        Ok(format!("swept {n} shape(s) of {}", task.kernel))
+    }
+
+    /// Sweep, rebuild the portfolio, and report both.
+    fn execute_rebuild(&self, task: &TuningTask) -> Result<String> {
+        let (sweep, shapes) = self.sweep_and_record(task)?;
+        let built = sweep.matrix.build_portfolio(self.opts.k_max, self.opts.target)?;
+        let k = built.len();
+        let retained = built.retained;
+        self.client
+            .call(&Request::RecordPortfolio {
+                platform: Some(self.host_key.clone()),
+                portfolio: Box::new(built),
+                fingerprint: Some(self.host.clone()),
+            })
+            .context("recording rebuilt portfolio")?;
+        Ok(format!(
+            "rebuilt {} portfolio: {k} config(s) retain {:.1}% over {shapes} shape(s)",
+            task.kernel,
+            retained * 100.0
+        ))
+    }
+
+    /// Re-tune one (kernel, workload) through the artifact registry.
+    fn execute_retune(&self, task: &TuningTask) -> Result<String> {
+        let tag = task.tag.as_deref().context("retune task carries no workload")?;
+        let runtime = Runtime::cpu().context("opening runtime for retune")?;
+        let registry = Registry::open(runtime, &self.opts.artifacts)
+            .context("opening artifact registry for retune")?;
+        let mut tuner = Tuner::new(&registry);
+        tuner.batch = self.opts.batch.max(1);
+        if self.opts.quick {
+            tuner.measure_cfg = MeasureConfig::quick();
+        }
+        let mut strategy = Exhaustive::new();
+        let outcome = tuner.tune(&task.kernel, tag, &mut strategy, usize::MAX)?;
+        let entry = tuner.entry_for(&outcome);
+        let speedup = entry.speedup();
+        let best = entry.best_config_id.clone();
+        self.client
+            .call(&Request::Record {
+                entry: Box::new(entry),
+                fingerprint: Some(outcome.platform.clone()),
+            })
+            .context("recording retune result")?;
+        Ok(format!("retuned {}/{tag}: {best} ({speedup:.2}x)", task.kernel))
+    }
+}
+
+/// Background lease keep-alive for the duration of one execution.
+/// Heartbeat failures are ignored: if the daemon is gone the lease
+/// will expire and requeue, which is the designed recovery path.
+struct HeartbeatGuard {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl HeartbeatGuard {
+    fn spawn(client: Client, lease_id: u64, interval: Duration) -> HeartbeatGuard {
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&stop);
+        let handle = std::thread::spawn(move || {
+            let slice = Duration::from_millis(100);
+            loop {
+                let mut slept = Duration::ZERO;
+                while slept < interval {
+                    if flag.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    std::thread::sleep(slice);
+                    slept += slice;
+                }
+                if flag.load(Ordering::Relaxed) {
+                    return;
+                }
+                let _ = client.heartbeat_task(lease_id);
+            }
+        });
+        HeartbeatGuard { stop, handle: Some(handle) }
+    }
+}
+
+impl Drop for HeartbeatGuard {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(handle) = self.handle.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn heartbeat_interval_derives_from_granted_ttl() {
+        let mut opts = WorkerOpts::default();
+        let worker = Worker::new(Client::tcp("127.0.0.1:1"), opts.clone());
+        // The *granted* TTL drives the cadence — a server-capped lease
+        // must still be heartbeated often enough to stay alive even if
+        // the worker asked for far more.
+        assert_eq!(worker.heartbeat_interval(90), Duration::from_secs(30));
+        assert_eq!(worker.heartbeat_interval(86_400), Duration::from_secs(28_800));
+        // A degenerate TTL still heartbeats at least every second.
+        assert_eq!(worker.heartbeat_interval(1), Duration::from_secs(1));
+        // An explicit --heartbeat overrides the derivation.
+        opts.heartbeat_s = 7;
+        let worker = Worker::new(Client::tcp("127.0.0.1:1"), opts);
+        assert_eq!(worker.heartbeat_interval(90), Duration::from_secs(7));
+    }
+
+    #[test]
+    fn run_once_with_unreachable_daemon_is_a_transport_error() {
+        // Port 1 is never listening; the lease call must surface as a
+        // connection error, not a panic or a silent None.
+        let worker = Worker::new(Client::tcp("127.0.0.1:1"), WorkerOpts::default());
+        assert!(worker.run_once().is_err());
+    }
+}

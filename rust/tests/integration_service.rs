@@ -1,17 +1,22 @@
 //! Service-layer integration: the shard store under concurrent
 //! writers, the daemon end-to-end over real TCP, legacy-file merge
-//! semantics, v1 → v2 migration, and the staleness scheduler.
+//! semantics, v1 → v2 migration, the leased task queue under
+//! concurrent workers, and the full daemon ⇄ `portatune work`
+//! convergence loop for a stale portfolio.
 //!
 //! Everything here is hermetic — no XLA runtime, no artifacts — which
 //! is the point: the serving layer must work on machines that only
-//! *consume* tuned configurations.
+//! *consume* tuned configurations (and the worker's sweep tasks run
+//! the native GEMM family host-side).
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use portatune::coordinator::perfdb::{unix_now, DbEntry, PerfDb, ShardedDb};
 use portatune::coordinator::platform::Fingerprint;
-use portatune::service::{Client, Request, ServeOpts, Server};
+use portatune::coordinator::portfolio::{Portfolio, PortfolioItem, FEATURE_NAMES};
+use portatune::service::{Client, Request, ServeOpts, Server, TaskKind};
 use portatune::util::json::Json;
+use portatune::worker::{Worker, WorkerOpts};
 
 fn tmp_dir(name: &str) -> std::path::PathBuf {
     let dir = std::env::temp_dir().join(format!("portatune-svcit-{name}-{}", std::process::id()));
@@ -288,7 +293,11 @@ fn stale_entries_flow_to_retune_queue() {
     let fresh = entry("fresh-box", "axpy", "n4096", "new_cfg", unix_now());
     db.record(None, fresh).unwrap();
 
-    let server = Server::new(db, fp(1024, &["avx2"]), ServeOpts { ttl_s: 3600, lru_cap: 16 });
+    let server = Server::new(
+        db,
+        fp(1024, &["avx2"]),
+        ServeOpts { ttl_s: 3600, lru_cap: 16, ..ServeOpts::default() },
+    );
     assert_eq!(server.scan_once().unwrap(), 2, "both aged frontiers queue; fresh does not");
     let mut seen = Vec::new();
     loop {
@@ -296,11 +305,220 @@ fn stale_entries_flow_to_retune_queue() {
         if reply.get("found").and_then(Json::as_bool) != Some(true) {
             break;
         }
+        assert!(
+            reply.get("lease_id").and_then(Json::as_u64).is_some(),
+            "retune-next is a lease now; the reply must carry the lease id"
+        );
         let task = reply.get("task").unwrap();
         assert_eq!(task.get("reason").and_then(Json::as_str), Some("ttl-expired"));
         seen.push(task.get("kernel").and_then(Json::as_str).unwrap().to_string());
     }
     seen.sort();
     assert_eq!(seen, vec!["axpy".to_string(), "dot".to_string()]);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+fn test_portfolio(kernel: &str, built_at: u64) -> Portfolio {
+    Portfolio {
+        kernel: kernel.into(),
+        strategy: "greedy-cover".into(),
+        k_max: 4,
+        retained: 0.95,
+        built_at,
+        feature_names: FEATURE_NAMES.iter().map(|s| s.to_string()).collect(),
+        items: vec![PortfolioItem {
+            config: [
+                ("loop_order".to_string(), 1i64),
+                ("tile_m".to_string(), 32i64),
+                ("tile_n".to_string(), 32i64),
+                ("unroll".to_string(), 4i64),
+            ]
+            .into_iter()
+            .collect(),
+            config_id: "o1_tm32_tn32_u4".into(),
+            centroid: vec![5.0; FEATURE_NAMES.len()],
+            covered: vec!["m32n32k32".into()],
+        }],
+    }
+}
+
+/// Two workers drain one queue concurrently over real TCP: every task
+/// is executed exactly once — the lease checkout makes double
+/// execution impossible — and the counters agree.
+#[test]
+fn two_workers_drain_queue_without_double_execution() {
+    let dir = tmp_dir("two-workers");
+    let db = ShardedDb::open(&dir).unwrap();
+    // 10 stale artifact-kernel frontiers across two platforms.
+    for (p, kernel) in [("box-a", "axpy"), ("box-b", "dot")] {
+        for i in 0..5 {
+            db.record(None, entry(p, kernel, &format!("n{}", 1 << i), "old", 1000)).unwrap();
+        }
+    }
+    let server = Arc::new(Server::new(
+        db,
+        fp(1024, &["avx2"]),
+        ServeOpts { ttl_s: 3600, lru_cap: 16, ..ServeOpts::default() },
+    ));
+    assert_eq!(server.scan_once().unwrap(), 10);
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let srv = Arc::clone(&server);
+    let serve_thread = std::thread::spawn(move || srv.run_tcp(listener).unwrap());
+
+    let executed: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+    let mut drainers = Vec::new();
+    for _ in 0..2 {
+        let addr = addr.clone();
+        let executed = Arc::clone(&executed);
+        drainers.push(std::thread::spawn(move || {
+            let client = Client::tcp(addr);
+            loop {
+                let Some(leased) = client.lease_task(None, None, Some(60)).unwrap() else {
+                    break;
+                };
+                // "Execute": record the task identity, then settle.
+                let t = &leased.task;
+                executed.lock().unwrap().push(format!(
+                    "{}|{}|{}|{}",
+                    t.kind.as_str(),
+                    t.platform_key,
+                    t.kernel,
+                    t.tag.clone().unwrap_or_default()
+                ));
+                assert!(client.complete_task(leased.lease_id).unwrap());
+            }
+        }));
+    }
+    for d in drainers {
+        d.join().unwrap();
+    }
+    let mut executed = executed.lock().unwrap().clone();
+    let total = executed.len();
+    executed.sort();
+    executed.dedup();
+    assert_eq!(total, 10, "both workers together execute every task");
+    assert_eq!(executed.len(), 10, "no task is executed twice");
+    let stats = server.stats();
+    assert_eq!(stats.tasks_leased, 10);
+    assert_eq!(stats.tasks_completed, 10);
+    assert_eq!(stats.tasks_pending, 0);
+    assert_eq!(stats.tasks_inflight, 0);
+
+    let client = Client::tcp(addr);
+    client.call(&Request::Shutdown).unwrap();
+    serve_thread.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The acceptance-criteria loop, hermetically: a daemon holding a
+/// stale portfolio plus an external worker converge without operator
+/// action.  The staleness scan queues a portfolio-rebuild task, the
+/// worker leases and executes it (real quick sweep + rebuild), reports
+/// through record/record-portfolio, and a subsequent `portfolio` query
+/// serves the rebuilt result with a fresh `built_at`.
+#[test]
+fn worker_rebuilds_stale_portfolio_end_to_end() {
+    let dir = tmp_dir("worker-e2e");
+    let db = ShardedDb::open(&dir).unwrap();
+    // The worker only leases tasks for its own platform, so the stale
+    // portfolio must live under the test machine's real key.
+    let host = Fingerprint::detect();
+    db.record_portfolio(&host.key(), Some(&host), test_portfolio("gemm", 1000)).unwrap();
+
+    let server = Arc::new(Server::new(db, host.clone(), ServeOpts::default()));
+    assert_eq!(server.scan_once().unwrap(), 1, "aged built_at queues one rebuild");
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let srv = Arc::clone(&server);
+    let serve_thread = std::thread::spawn(move || srv.run_tcp(listener).unwrap());
+
+    let worker = Worker::new(
+        Client::tcp(addr.clone()),
+        WorkerOpts { quick: true, ..WorkerOpts::default() },
+    );
+    let report = worker.run_once().unwrap().expect("a rebuild task was queued");
+    assert!(report.ok, "rebuild failed: {}", report.detail);
+    assert_eq!(report.task.kind, TaskKind::PortfolioRebuild);
+
+    // The daemon now serves the rebuilt portfolio — fresh built_at,
+    // cache invalidated, no TTL wait.
+    let client = Client::tcp(addr);
+    let reply = client
+        .call(&Request::Portfolio {
+            platform: Some(host.key()),
+            kernel: "gemm".into(),
+            dims: None,
+            fingerprint: None,
+        })
+        .unwrap();
+    assert_eq!(reply.get("found").and_then(Json::as_bool), Some(true));
+    assert_eq!(reply.get("source").and_then(Json::as_str), Some("exact"));
+    let built_at = reply
+        .get("portfolio")
+        .and_then(|p| p.get("built_at"))
+        .and_then(Json::as_u64)
+        .unwrap();
+    assert!(built_at > 1000, "built_at must advance past the aged stamp");
+    let stats = server.stats();
+    assert_eq!(stats.tasks_completed, 1);
+    assert_eq!(stats.tasks_pending, 0);
+    // The sweep history was recorded too (lookups will find entries).
+    assert!(stats.records >= 2, "rebuild reports sweep entries + portfolio");
+    // Converged: the next scan finds nothing stale.
+    assert_eq!(server.scan_once().unwrap(), 0);
+
+    client.call(&Request::Shutdown).unwrap();
+    serve_thread.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Killing a worker mid-lease loses nothing: the lease expires after
+/// its TTL and the task requeues for the next worker.
+#[test]
+fn killed_worker_mid_lease_requeues_after_ttl() {
+    let dir = tmp_dir("dead-worker");
+    let db = ShardedDb::open(&dir).unwrap();
+    db.record(None, entry("aging-box", "axpy", "n4096", "old", 1000)).unwrap();
+    let server = Server::new(
+        db,
+        fp(1024, &["avx2"]),
+        ServeOpts { ttl_s: 3600, lru_cap: 16, ..ServeOpts::default() },
+    );
+    assert_eq!(server.scan_once().unwrap(), 1);
+    // "Worker" leases with a 1-second TTL and then dies silently.
+    let reply = server.handle_request(&Request::TaskLease {
+        kind: None,
+        platform: None,
+        ttl_s: Some(1),
+    });
+    assert_eq!(reply.get("found").and_then(Json::as_bool), Some(true));
+    let dead_lease = reply.get("lease_id").and_then(Json::as_u64).unwrap();
+    // Nothing to lease while the task is in flight.
+    let reply = server.handle_request(&Request::TaskLease {
+        kind: None,
+        platform: None,
+        ttl_s: Some(1),
+    });
+    assert_eq!(reply.get("found").and_then(Json::as_bool), Some(false));
+    // Past the TTL, the next queue touch requeues it for a live worker.
+    std::thread::sleep(std::time::Duration::from_millis(2100));
+    let reply = server.handle_request(&Request::TaskLease {
+        kind: None,
+        platform: None,
+        ttl_s: Some(60),
+    });
+    assert_eq!(
+        reply.get("found").and_then(Json::as_bool),
+        Some(true),
+        "the dead worker's task must requeue after its lease TTL"
+    );
+    let new_lease = reply.get("lease_id").and_then(Json::as_u64).unwrap();
+    assert_ne!(dead_lease, new_lease);
+    let stats = server.stats();
+    assert_eq!(stats.leases_expired, 1);
+    // The dead worker's late heartbeat learns the lease is gone.
+    let reply = server.handle_request(&Request::TaskHeartbeat { lease_id: dead_lease });
+    assert_eq!(reply.get("extended").and_then(Json::as_bool), Some(false));
     std::fs::remove_dir_all(&dir).ok();
 }

@@ -1,0 +1,224 @@
+//! Property tests for the leased task queue, driven by the crate's
+//! deterministic RNG (no proptest in the pinned set).  The guarantees
+//! under test are the ones the distributed worker fleet leans on:
+//!
+//! * an expired lease requeues its task **exactly once**, no matter
+//!   how many expiry sweeps run or when;
+//! * `complete` is idempotent — the first call settles, every retry
+//!   reports a duplicate and changes nothing;
+//! * a completed task is never re-leased;
+//! * under an adversarial random interleaving of lease / heartbeat /
+//!   complete / fail / expire, every task is completed at most once
+//!   and nothing is ever lost (every enqueued task ends completed or
+//!   dropped-after-max-attempts).
+
+use std::collections::HashSet;
+
+use portatune::service::scheduler::{
+    CompleteOutcome, FailOutcome, StaleReason, TaskKind, TaskQueue, TuningTask, MAX_ATTEMPTS,
+};
+use portatune::util::rng::Rng;
+
+fn task(rng: &mut Rng, i: usize) -> TuningTask {
+    let kind = match rng.gen_range(3) {
+        0 => TaskKind::Retune,
+        1 => TaskKind::Sweep,
+        _ => TaskKind::PortfolioRebuild,
+    };
+    TuningTask {
+        kind,
+        platform_key: format!("platform-{}", rng.gen_range(4)),
+        kernel: format!("kernel-{i}"),
+        tag: match kind {
+            TaskKind::Retune => Some(format!("n{}", 1 << rng.gen_range(16))),
+            _ => None,
+        },
+        reason: if rng.gen_range(4) == 0 {
+            StaleReason::FingerprintDrift
+        } else {
+            StaleReason::TtlExpired { age_s: rng.gen_range(1_000_000) as u64 }
+        },
+        attempts: 0,
+    }
+}
+
+#[test]
+fn expired_lease_requeues_exactly_once_under_random_sweeps() {
+    let mut rng = Rng::new(0xC0FFEE);
+    for _ in 0..50 {
+        let mut q = TaskQueue::new(3600);
+        let n = 1 + rng.gen_range(12);
+        for i in 0..n {
+            assert!(q.enqueue(task(&mut rng, i)));
+        }
+        // Lease everything with random TTLs, heartbeat a random subset
+        // once, then run many random expiry sweeps past every horizon.
+        let mut now = 1000u64;
+        let mut leases = Vec::new();
+        while let Some((id, _)) = q.lease(None, None, 1 + rng.gen_range(50) as u64, now) {
+            leases.push(id);
+        }
+        assert_eq!(leases.len(), n);
+        assert_eq!(q.len(), 0);
+        for &id in &leases {
+            if rng.gen_range(2) == 0 {
+                assert!(q.heartbeat(id, now).is_some());
+            }
+        }
+        let mut total_expired = 0;
+        for _ in 0..20 {
+            now += rng.gen_range(40) as u64;
+            total_expired += q.expire(now);
+        }
+        now += 1000; // beyond every possible ttl + heartbeat
+        total_expired += q.expire(now);
+        total_expired += q.expire(now); // idempotent second sweep
+        assert_eq!(total_expired, n, "each lease expires exactly once");
+        assert_eq!(q.len(), n, "each task is back in pending exactly once");
+        // The dead leases are really dead.
+        for id in leases {
+            assert!(q.heartbeat(id, now).is_none());
+        }
+    }
+}
+
+#[test]
+fn complete_is_idempotent_and_completed_tasks_never_lease_again() {
+    let mut rng = Rng::new(0xBEEF);
+    for _ in 0..50 {
+        let mut q = TaskQueue::new(3600);
+        let n = 1 + rng.gen_range(10);
+        let mut identities = HashSet::new();
+        for i in 0..n {
+            let t = task(&mut rng, i);
+            identities.insert(t.identity());
+            assert!(q.enqueue(t));
+        }
+        let mut now = 0u64;
+        let mut completed: HashSet<_> = HashSet::new();
+        while let Some((id, t)) = q.lease(None, None, 60, now) {
+            now += rng.gen_range(5) as u64;
+            assert_eq!(q.complete(id), CompleteOutcome::Settled);
+            assert!(
+                completed.insert(t.identity()),
+                "a completed identity was leased a second time"
+            );
+            // Every retry is a duplicate and must not resurrect it.
+            for _ in 0..rng.gen_range(3) {
+                assert_eq!(q.complete(id), CompleteOutcome::Duplicate);
+            }
+            assert_eq!(q.fail(id), FailOutcome::Duplicate);
+        }
+        assert_eq!(completed, identities, "everything drains exactly once");
+        assert!(q.is_empty());
+        assert_eq!(q.expire(u64::MAX / 2), 0, "nothing settled can expire");
+        assert!(q.lease(None, None, 60, now).is_none());
+    }
+}
+
+/// The adversarial interleaving: random workers lease, heartbeat,
+/// complete, fail, crash (silently dropping their lease), while expiry
+/// sweeps run at random times.  Model-checked invariants: a task
+/// identity is completed at most once, completed and explicitly-
+/// dropped sets stay disjoint, and at the end the queue is fully
+/// drained — every identity was either completed, dropped by
+/// exhausted `fail`s, or dropped by exhausted lease losses (expiry
+/// charges attempts too); none is ever stuck pending/leased and none
+/// executes twice.
+#[test]
+fn random_interleavings_neither_lose_nor_duplicate_work() {
+    let mut rng = Rng::new(0xD15C0);
+    for round in 0..30 {
+        let mut q = TaskQueue::new(3600);
+        let n = 2 + rng.gen_range(10);
+        let mut identities = HashSet::new();
+        for i in 0..n {
+            let t = task(&mut rng, i);
+            identities.insert(t.identity());
+            assert!(q.enqueue(t));
+        }
+        let mut now = 0u64;
+        let mut held: Vec<(u64, TuningTask)> = Vec::new();
+        let mut completed: HashSet<_> = HashSet::new();
+        let mut dropped: HashSet<_> = HashSet::new();
+        for _step in 0..2000 {
+            now += rng.gen_range(4) as u64;
+            match rng.gen_range(10) {
+                // Lease (short TTLs so crashes recover within the run).
+                0..=3 => {
+                    if let Some((id, t)) = q.lease(None, None, 1 + rng.gen_range(8) as u64, now)
+                    {
+                        held.push((id, t));
+                    }
+                }
+                // Complete a held lease.
+                4..=5 => {
+                    if !held.is_empty() {
+                        let (id, t) = held.swap_remove(rng.gen_range(held.len()));
+                        if q.complete(id) == CompleteOutcome::Settled {
+                            assert!(
+                                completed.insert(t.identity()),
+                                "round {round}: identity completed twice"
+                            );
+                        }
+                    }
+                }
+                // Fail a held lease.
+                6 => {
+                    if !held.is_empty() {
+                        let (id, t) = held.swap_remove(rng.gen_range(held.len()));
+                        match q.fail(id) {
+                            FailOutcome::Requeued => {}
+                            FailOutcome::Dropped => {
+                                dropped.insert(t.identity());
+                            }
+                            // The lease may have expired under us.
+                            FailOutcome::Duplicate => {}
+                            FailOutcome::Unknown => panic!("issued lease unknown"),
+                        }
+                    }
+                }
+                // Heartbeat a held lease (may already be expired).
+                7 => {
+                    if !held.is_empty() {
+                        let idx = rng.gen_range(held.len());
+                        let _ = q.heartbeat(held[idx].0, now);
+                    }
+                }
+                // Crash a worker: silently forget the lease.
+                8 => {
+                    if !held.is_empty() {
+                        let idx = rng.gen_range(held.len());
+                        held.swap_remove(idx);
+                    }
+                }
+                // Expiry sweep (may drop tasks whose attempts ran out).
+                _ => {
+                    q.expire(now);
+                }
+            }
+        }
+        // Drain whatever is left synchronously.  Any lease can still
+        // expire at most MAX_ATTEMPTS times total, so a bounded number
+        // of expire+lease passes fully empties the queue.
+        for _ in 0..=MAX_ATTEMPTS {
+            now += 10_000;
+            q.expire(now);
+            while let Some((id, t)) = q.lease(None, None, 60, now) {
+                if q.complete(id) == CompleteOutcome::Settled {
+                    assert!(
+                        completed.insert(t.identity()),
+                        "round {round}: identity completed twice in drain"
+                    );
+                }
+            }
+        }
+        assert!(q.is_empty(), "round {round}: tasks stuck pending");
+        for identity in &identities {
+            assert!(
+                !(completed.contains(identity) && dropped.contains(identity)),
+                "round {round}: identity both completed and dropped: {identity:?}"
+            );
+        }
+    }
+}

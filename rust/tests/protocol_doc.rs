@@ -75,9 +75,14 @@ fn examples_cover_every_op() {
         "ping",
         "portfolio",
         "record",
+        "record-portfolio",
         "retune-next",
         "shutdown",
         "stats",
+        "task-complete",
+        "task-fail",
+        "task-heartbeat",
+        "task-lease",
     ];
     expected.sort_unstable();
     assert_eq!(
@@ -94,9 +99,11 @@ fn documented_payloads_satisfy_typed_parsers() {
     use portatune::coordinator::perfdb::DbEntry;
     use portatune::coordinator::platform::Fingerprint;
     use portatune::coordinator::portfolio::Portfolio;
+    use portatune::service::TuningTask;
     let mut entries = 0;
     let mut fingerprints = 0;
     let mut portfolios = 0;
+    let mut tasks = 0;
     for line in example_lines("C: ").into_iter().chain(example_lines("S: ")) {
         let v = json::parse(&line).expect("example lines are JSON");
         if let Some(e) = v.get("entry") {
@@ -118,6 +125,13 @@ fn documented_payloads_satisfy_typed_parsers() {
             });
             portfolios += 1;
         }
+        if let Some(t) = v.get("task") {
+            TuningTask::from_json(t).unwrap_or_else(|err| {
+                panic!("documented task does not satisfy TuningTask::from_json: {err:#}\n{line}")
+            });
+            tasks += 1;
+        }
     }
     assert!(entries >= 2 && fingerprints >= 2 && portfolios >= 2, "spec lost its payload examples");
+    assert!(tasks >= 2, "spec lost its leased-task payload examples");
 }
