@@ -183,7 +183,8 @@ fn main() -> anyhow::Result<()> {
         let lease_id = reply.get("lease_id").and_then(Json::as_u64).unwrap();
         let reply = lease_srv.handle_request(&Request::TaskHeartbeat { lease_id });
         assert_eq!(reply.get("extended").and_then(Json::as_bool), Some(true));
-        let reply = lease_srv.handle_request(&Request::TaskComplete { lease_id });
+        let reply =
+            lease_srv.handle_request(&Request::TaskComplete { lease_id, request_id: None });
         assert_eq!(reply.get("settled").and_then(Json::as_bool), Some(true));
     });
 

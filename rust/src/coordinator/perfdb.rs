@@ -22,6 +22,19 @@
 //!   writers (threads or processes) lose nothing.  `portatune serve`
 //!   is backed by this store; `ShardedDb::import_legacy` migrates a v1
 //!   file into shards.
+//!
+//! **Crash safety (v2).**  New shard files carry a one-line content
+//! checksum header over the document body, so a torn write (power
+//! loss, ENOSPC, a crashed writer) is *detected* rather than parsed
+//! into garbage.  A shard that fails the checksum — or fails to parse
+//! at all — is quarantined to `<shard>.corrupt` and treated as absent:
+//! reads degrade to a miss, and the next write rebuilds the shard
+//! from the merge path instead of erroring forever.  Acknowledged
+//! records are never lost to this: the commit protocol writes a tmp
+//! file and renames, so a crash mid-write leaves the published shard
+//! untouched (and the writer unacknowledged).  Headerless files
+//! written by older versions still parse — the checksum is only
+//! verified when the header is present.
 
 use std::collections::BTreeMap;
 use std::io::Write as _;
@@ -342,6 +355,17 @@ fn locked_commit(
         let lock = FileLock::acquire(lock_path.clone())?;
         let doc = build()?;
         let tmp = unique_tmp(path);
+        if crate::service::faults::hit(crate::service::faults::InjectionPoint::ShardTornWrite) {
+            // Simulate a writer dying mid-write: half the document
+            // lands in the tmp file and the rename never happens.  The
+            // published shard is untouched and the caller gets an
+            // error, so nothing it was told succeeded is lost.
+            let _ = std::fs::write(&tmp, &doc.as_bytes()[..doc.len() / 2]);
+            anyhow::bail!(
+                "fault-injected: torn write to {} (crashed before rename)",
+                path.display()
+            );
+        }
         std::fs::write(&tmp, doc)
             .with_context(|| format!("writing tmp for {}", path.display()))?;
         if !lock.still_owned() {
@@ -528,7 +552,7 @@ impl Shard {
     }
 
     fn to_json_text(&self) -> String {
-        json::obj(vec![
+        let body = json::obj(vec![
             ("version", json::int(2)),
             ("platform_key", json::s(&self.platform_key)),
             (
@@ -541,10 +565,12 @@ impl Shard {
                 Json::Arr(self.portfolios.iter().map(Portfolio::to_json).collect()),
             ),
         ])
-        .pretty()
+        .pretty();
+        with_checksum(&body)
     }
 
     fn parse(text: &str) -> Result<Shard> {
+        let text = verified_shard_body(text)?;
         let root = json::parse(text).context("parsing shard json")?;
         let version = root.get("version").and_then(Json::as_i64).unwrap_or(0);
         if version != 2 {
@@ -579,6 +605,95 @@ impl Shard {
             _ => Vec::new(),
         };
         Ok(Shard { platform_key, fingerprint, entries, portfolios })
+    }
+}
+
+/// First line of a checksummed shard document.  Kept distinguishable
+/// from a bare JSON document's `{` + newline-pretty body so headerless
+/// legacy shards keep parsing.
+const CHECKSUM_PREFIX: &str = "{\"shard_checksum\":\"";
+
+/// Prepend the content-checksum header: one compact JSON line holding
+/// the FNV-1a of the raw body bytes, then the body itself.
+fn with_checksum(body: &str) -> String {
+    let sum = crate::coordinator::platform::fnv1a(body);
+    format!("{CHECKSUM_PREFIX}{sum:016x}\"}}\n{body}")
+}
+
+/// Split an optional checksum header off a shard document.  Headerless
+/// text (a shard written before checksums) passes through unverified;
+/// a present header must match the body or the document is corrupt
+/// (torn write, truncation, bit rot).
+fn verified_shard_body(text: &str) -> Result<&str> {
+    if !text.starts_with(CHECKSUM_PREFIX) {
+        return Ok(text);
+    }
+    let (header, body) = text
+        .split_once('\n')
+        .ok_or_else(|| anyhow::anyhow!("shard checksum header without a body"))?;
+    let stated = json::parse(header)
+        .ok()
+        .and_then(|h| h.get("shard_checksum").and_then(Json::as_str).map(str::to_string))
+        .ok_or_else(|| anyhow::anyhow!("malformed shard checksum header"))?;
+    let stated = u64::from_str_radix(&stated, 16)
+        .map_err(|_| anyhow::anyhow!("non-hex shard checksum {stated:?}"))?;
+    let actual = crate::coordinator::platform::fnv1a(body);
+    anyhow::ensure!(
+        stated == actual,
+        "shard checksum mismatch: header says {stated:016x}, body hashes to {actual:016x} \
+         (torn or corrupt write)"
+    );
+    Ok(body)
+}
+
+/// The write path's view of the on-disk shard: parse it for merging,
+/// or — when it is missing *or corrupt* — start from an empty shard so
+/// the write rebuilds it (the corrupt original is quarantined first).
+/// A shard whose contents belong to a *different* platform is neither:
+/// that is a store-layout bug and errors loudly.
+fn read_or_rebuild(path: &Path, platform_key: &str) -> Result<Shard> {
+    if !path.exists() {
+        return Ok(Shard::new(platform_key));
+    }
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading shard {}", path.display()))?;
+    match Shard::parse(&text) {
+        Ok(shard) => {
+            anyhow::ensure!(
+                shard.platform_key == platform_key,
+                "shard {} belongs to platform {:?}, not {:?}",
+                path.display(),
+                shard.platform_key,
+                platform_key
+            );
+            Ok(shard)
+        }
+        Err(e) => {
+            quarantine(path, &e);
+            Ok(Shard::new(platform_key))
+        }
+    }
+}
+
+/// Move a corrupt shard file aside to `<shard>.corrupt` so reads
+/// degrade to a miss and the next write rebuilds from the merge path.
+/// Best-effort: a failed rename leaves the file in place (the caller
+/// already treats it as absent either way).
+fn quarantine(path: &Path, err: &anyhow::Error) {
+    let mut target = path.as_os_str().to_os_string();
+    target.push(".corrupt");
+    let target = PathBuf::from(target);
+    match std::fs::rename(path, &target) {
+        Ok(()) => eprintln!(
+            "warning: quarantined corrupt shard {} -> {} ({err:#})",
+            path.display(),
+            target.display()
+        ),
+        Err(rename_err) => eprintln!(
+            "warning: corrupt shard {} could not be quarantined ({rename_err}); \
+             original error: {err:#}",
+            path.display()
+        ),
     }
 }
 
@@ -624,6 +739,11 @@ impl ShardedDb {
     }
 
     /// Load one platform's shard (None if it has no records yet).
+    ///
+    /// A torn or corrupt shard file (bad checksum, truncated JSON,
+    /// zero bytes) is quarantined to `<shard>.corrupt` and reported as
+    /// absent — the daemon serves a miss instead of panicking, and the
+    /// next write rebuilds the shard from the merge path.
     pub fn load(&self, platform_key: &str) -> Result<Option<Shard>> {
         let path = self.shard_path(platform_key);
         if !path.exists() {
@@ -631,7 +751,13 @@ impl ShardedDb {
         }
         let text = std::fs::read_to_string(&path)
             .with_context(|| format!("reading shard {}", path.display()))?;
-        let shard = Shard::parse(&text)?;
+        let shard = match Shard::parse(&text) {
+            Ok(shard) => shard,
+            Err(e) => {
+                quarantine(&path, &e);
+                return Ok(None);
+            }
+        };
         anyhow::ensure!(
             shard.platform_key == platform_key,
             "shard {} belongs to platform {:?}, not {:?}",
@@ -646,10 +772,11 @@ impl ShardedDb {
     ///
     /// Whole-store scans degrade instead of failing: an unreadable or
     /// corrupt shard file (ENOSPC truncation, foreign tool, hand edit)
-    /// is skipped with a warning, so one bad platform cannot take down
-    /// every deploy miss, staleness scan, and warm start.  Targeted
-    /// operations on the bad shard itself ([`load`](Self::load),
-    /// [`record`](Self::record)) still error loudly.
+    /// is quarantined to `<shard>.corrupt` and skipped with a warning,
+    /// so one bad platform cannot take down every deploy miss,
+    /// staleness scan, and warm start.  Targeted operations on the bad
+    /// shard ([`load`](Self::load), [`record`](Self::record)) likewise
+    /// quarantine and degrade — a miss, then a rebuild on next write.
     pub fn all_shards(&self) -> Result<Vec<Shard>> {
         let mut shards = Vec::new();
         for entry in std::fs::read_dir(&self.dir).context("listing shard dir")? {
@@ -662,9 +789,7 @@ impl ShardedDb {
                     .and_then(|text| Shard::parse(&text));
                 match parsed {
                     Ok(shard) => shards.push(shard),
-                    Err(e) => {
-                        eprintln!("warning: skipping corrupt shard {}: {e:#}", path.display());
-                    }
+                    Err(e) => quarantine(&path, &e),
                 }
             }
         }
@@ -701,21 +826,7 @@ impl ShardedDb {
         );
         let path = self.shard_path(platform_key);
         locked_commit(&path, path.with_extension("lock"), || {
-            let mut shard = if path.exists() {
-                let text = std::fs::read_to_string(&path)
-                    .with_context(|| format!("reading shard {}", path.display()))?;
-                let shard = Shard::parse(&text)?;
-                anyhow::ensure!(
-                    shard.platform_key == platform_key,
-                    "shard {} belongs to platform {:?}, not {:?}",
-                    path.display(),
-                    shard.platform_key,
-                    platform_key
-                );
-                shard
-            } else {
-                Shard::new(platform_key)
-            };
+            let mut shard = read_or_rebuild(&path, platform_key)?;
             if let Some(fp) = fingerprint {
                 shard.fingerprint = Some(fp.clone());
             }
@@ -747,21 +858,7 @@ impl ShardedDb {
     ) -> Result<()> {
         let path = self.shard_path(platform_key);
         locked_commit(&path, path.with_extension("lock"), || {
-            let mut shard = if path.exists() {
-                let text = std::fs::read_to_string(&path)
-                    .with_context(|| format!("reading shard {}", path.display()))?;
-                let shard = Shard::parse(&text)?;
-                anyhow::ensure!(
-                    shard.platform_key == platform_key,
-                    "shard {} belongs to platform {:?}, not {:?}",
-                    path.display(),
-                    shard.platform_key,
-                    platform_key
-                );
-                shard
-            } else {
-                Shard::new(platform_key)
-            };
+            let mut shard = read_or_rebuild(&path, platform_key)?;
             if let Some(fp) = fingerprint {
                 shard.fingerprint = Some(fp.clone());
             }
@@ -1110,11 +1207,12 @@ mod tests {
         let dir = tmp_dir("portfolio-compat");
         let db = ShardedDb::open(&dir).unwrap();
         db.record(None, entry("p1", "axpy", "n4096", "b256_u1", 1.1)).unwrap();
-        // Strip the portfolios key, simulating a shard written by the
-        // pre-portfolio daemon.
+        // Strip the portfolios key AND the checksum header, simulating
+        // a shard written by the pre-portfolio (pre-checksum) daemon.
         let path = db.shard_path("p1");
         let text = std::fs::read_to_string(&path).unwrap();
-        let mut root = json::parse(&text).unwrap();
+        let body = verified_shard_body(&text).unwrap();
+        let mut root = json::parse(body).unwrap();
         if let Json::Obj(map) = &mut root {
             map.remove("portfolios");
         }
@@ -1122,6 +1220,77 @@ mod tests {
         let shard = db.load("p1").unwrap().unwrap();
         assert!(shard.portfolios.is_empty());
         assert_eq!(shard.entries.len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shard_files_carry_a_verifiable_checksum() {
+        let shard = Shard {
+            platform_key: "p1".into(),
+            fingerprint: None,
+            entries: vec![entry("p1", "axpy", "n4096", "a", 1.2)],
+            portfolios: vec![],
+        };
+        let text = shard.to_json_text();
+        assert!(text.starts_with(CHECKSUM_PREFIX), "new shards lead with the header");
+        assert_eq!(Shard::parse(&text).unwrap(), shard);
+        // Headerless legacy documents pass through unverified.
+        let body = verified_shard_body(&text).unwrap();
+        assert_eq!(Shard::parse(body).unwrap(), shard);
+        // Any body tampering breaks the checksum.
+        let tampered = text.replace("axpy", "ypxa");
+        assert!(Shard::parse(&tampered).is_err());
+    }
+
+    /// Satellite: truncated JSON, bad checksum, and zero-byte shard
+    /// files must quarantine + recover, never panic.
+    #[test]
+    fn corrupt_shards_quarantine_and_recover() {
+        let cases: [(&str, fn(&str) -> String); 3] = [
+            ("truncated", |text| text[..text.len() / 2].to_string()),
+            ("badsum", |text| text.replacen("axpy", "ypxa", 1)),
+            ("zerobyte", |_| String::new()),
+        ];
+        for (name, corrupt) in cases {
+            let dir = tmp_dir(&format!("corrupt-{name}"));
+            let db = ShardedDb::open(&dir).unwrap();
+            db.record(None, entry("p1", "axpy", "n4096", "b256_u1", 1.1)).unwrap();
+            let path = db.shard_path("p1");
+            let text = std::fs::read_to_string(&path).unwrap();
+            std::fs::write(&path, corrupt(&text)).unwrap();
+
+            // Reads degrade to a miss and quarantine the bad file.
+            assert!(db.load("p1").unwrap().is_none(), "{name}: load must miss, not panic");
+            let corpse = PathBuf::from({
+                let mut s = path.as_os_str().to_os_string();
+                s.push(".corrupt");
+                s
+            });
+            assert!(corpse.exists(), "{name}: corrupt file must be quarantined");
+            assert!(!path.exists(), "{name}: the bad file is moved, not copied");
+            assert!(db.all_shards().unwrap().is_empty());
+
+            // The next write rebuilds the shard from scratch.
+            db.record(None, entry("p1", "axpy", "n4096", "fresh", 1.3)).unwrap();
+            let shard = db.load("p1").unwrap().unwrap();
+            assert_eq!(shard.entries.len(), 1);
+            assert_eq!(shard.latest("axpy", "n4096").unwrap().best_config_id, "fresh");
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+
+    #[test]
+    fn corrupt_shard_under_write_rebuilds_from_merge_path() {
+        let dir = tmp_dir("corrupt-write");
+        let db = ShardedDb::open(&dir).unwrap();
+        db.record(None, entry("p1", "axpy", "n4096", "old", 1.1)).unwrap();
+        std::fs::write(db.shard_path("p1"), "{definitely not a shard").unwrap();
+        // The write-side merge quarantines and starts fresh instead of
+        // failing forever.
+        db.record(None, entry("p1", "dot", "n64", "new", 1.2)).unwrap();
+        let shard = db.load("p1").unwrap().unwrap();
+        assert_eq!(shard.entries.len(), 1);
+        assert_eq!(shard.latest("dot", "n64").unwrap().best_config_id, "new");
         std::fs::remove_dir_all(&dir).ok();
     }
 

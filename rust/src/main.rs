@@ -41,7 +41,7 @@ use portatune::coordinator::tuner::Tuner;
 use portatune::report::{Fig1Report, Fig1Row, Table};
 use portatune::runtime::{Registry, Runtime};
 use portatune::service::{
-    transfer, Client, Request, ServeOpts, Server, DEFAULT_LEASE_TTL_S,
+    faults, transfer, Client, Request, ServeOpts, Server, DEFAULT_LEASE_TTL_S,
 };
 use portatune::util::cli::Args;
 use portatune::worker::{Worker, WorkerOpts};
@@ -97,6 +97,11 @@ const USAGE: &str = "usage: portatune <subcommand> [flags]
                       [--ttl-days N (default 30)] [--lru N (default 1024)]
                       [--scan-secs N (default 60)] [--retune [--batch N]]
                       [--lease-ttl SECS (default 600)]  worker-lease TTL
+                      [--max-conns N (default 256)]   shed connections past N
+                      [--conn-idle SECS (default 300)] close idle connections
+                      [--faults SPEC] [--fault-seed N]  deterministic fault
+                        injection, e.g. --faults server.reply-drop:0.2:3
+                        (also via PORTATUNE_FAULTS / PORTATUNE_FAULT_SEED)
                       imports --db into the shard store at startup when present
   query             ask a running daemon (one JSON reply line on stdout)
                       e.g. portatune query --op lookup --kernel axpy --workload n4096
@@ -117,6 +122,8 @@ const USAGE: &str = "usage: portatune <subcommand> [flags]
                       [--lease-ttl SECS (default 600)] [--heartbeat SECS]
                       [--poll SECS (default 2)] [--wait-secs N (default 15)]
                       [--seed N] [--batch N] [--k N] [--target F]
+                      [--faults SPEC] [--fault-seed N]  deterministic fault
+                        injection (same spec grammar as serve)
   db-migrate        import a v1 --db file into --shards (v2 shard files)
                       e.g. portatune db-migrate --db perfdb.json --shards perfdb.d
 
@@ -143,6 +150,21 @@ pub fn make_strategy(name: &str, seed: u64) -> Result<Box<dyn SearchStrategy>> {
 fn open_registry(artifacts: &Path) -> Result<Registry> {
     let runtime = Runtime::cpu()?;
     Registry::open(runtime, artifacts)
+}
+
+/// Install the deterministic fault plan requested via `--faults SPEC`
+/// (with optional `--fault-seed N`), falling back to the
+/// `PORTATUNE_FAULTS` / `PORTATUNE_FAULT_SEED` environment variables.
+/// No flags and no env means no plan: the hooks stay zero-cost.
+fn install_faults(args: &Args) -> Result<()> {
+    let seed = args.get_parsed::<u64>("fault-seed", faults::DEFAULT_SEED)?;
+    if let Some(spec) = args.get("faults") {
+        let plan = faults::install(faults::FaultPlan::from_spec(spec, seed)?);
+        eprintln!("fault injection: ON (spec {spec:?}, seed {:#x})", plan.seed());
+    } else if let Some(plan) = faults::install_from_env()? {
+        eprintln!("fault injection: ON (from env, seed {:#x})", plan.seed());
+    }
+    Ok(())
 }
 
 fn main() {
@@ -197,6 +219,10 @@ fn cmd_serve(args: &Args, artifacts: &Path, db_path: &Path, shards_dir: &Path) -
     let retune = args.get_bool("retune");
     let batch = args.get_parsed::<usize>("batch", 4)?;
     let lease_ttl_s = args.get_parsed::<u64>("lease-ttl", DEFAULT_LEASE_TTL_S)?;
+    let defaults = ServeOpts::default();
+    let max_conns = args.get_parsed::<usize>("max-conns", defaults.max_conns)?;
+    let conn_idle_s = args.get_parsed::<u64>("conn-idle", defaults.conn_idle_s)?;
+    install_faults(args)?;
     args.finish()?;
 
     let db = ShardedDb::open(shards_dir)?;
@@ -206,7 +232,13 @@ fn cmd_serve(args: &Args, artifacts: &Path, db_path: &Path, shards_dir: &Path) -
     }
     let host = Fingerprint::detect();
     println!("platform: {}", host.key());
-    let opts = ServeOpts { ttl_s: ttl_days * 24 * 3600, lru_cap, lease_ttl_s };
+    let opts = ServeOpts {
+        ttl_s: ttl_days * 24 * 3600,
+        lru_cap,
+        lease_ttl_s,
+        max_conns,
+        conn_idle_s,
+    };
     let server = Arc::new(Server::new(db, host, opts));
     let _scan =
         Arc::clone(&server).spawn_scan(std::time::Duration::from_secs(scan_secs.max(1)));
@@ -319,6 +351,7 @@ fn cmd_work(args: &Args, artifacts: &Path) -> Result<()> {
     let batch = args.get_parsed::<usize>("batch", 4)?;
     let k_max = args.get_parsed::<usize>("k", 4)?;
     let target = args.get_parsed::<f64>("target", 0.9)?;
+    install_faults(args)?;
     args.finish()?;
 
     let client = match socket {

@@ -83,6 +83,9 @@ pub fn serve_stats_json(stats: &ServeStats) -> Json {
         ("leases_expired".to_string(), int(stats.leases_expired)),
         ("retunes".to_string(), int(stats.retunes)),
         ("errors".to_string(), int(stats.errors)),
+        ("dedup_hits".to_string(), int(stats.dedup_hits)),
+        ("conns_shed".to_string(), int(stats.conns_shed)),
+        ("conns_closed_idle".to_string(), int(stats.conns_closed_idle)),
         ("tasks_pending".to_string(), int(stats.tasks_pending)),
         ("tasks_inflight".to_string(), int(stats.tasks_inflight)),
         (
@@ -154,6 +157,9 @@ mod tests {
             leases_expired: 1,
             retunes: 1,
             errors: 0,
+            dedup_hits: 2,
+            conns_shed: 1,
+            conns_closed_idle: 1,
             tasks_pending: 3,
             tasks_inflight: 1,
             queue_depth: [
@@ -184,5 +190,8 @@ mod tests {
         );
         assert_eq!(parsed.get("portfolios").and_then(Json::as_u64), Some(5));
         assert_eq!(parsed.get("portfolio_transfers").and_then(Json::as_u64), Some(2));
+        assert_eq!(parsed.get("dedup_hits").and_then(Json::as_u64), Some(2));
+        assert_eq!(parsed.get("conns_shed").and_then(Json::as_u64), Some(1));
+        assert_eq!(parsed.get("conns_closed_idle").and_then(Json::as_u64), Some(1));
     }
 }

@@ -5,15 +5,41 @@
 //! One connection per call: requests are rare (deploy-time lookups),
 //! so connection reuse buys nothing and a stateless client cannot leak
 //! sockets.  Both endpoints the daemon listens on are supported.
+//!
+//! **Resilience.**  Every socket carries connect/read/write timeouts
+//! (a dead daemon can no longer hang `query`/`work` forever), and
+//! transient failures retry under a bounded [`RetryPolicy`] with
+//! exponential backoff + jitter.  Retry safety is per op:
+//!
+//! * idempotent ops (lookup, deploy, stats, the lease/heartbeat/fail
+//!   ops, portfolio reads and replacements) retry transparently;
+//! * the non-idempotent writes — `record` and `task-complete` — retry
+//!   only when they carry a client-generated `request_id` the daemon
+//!   dedupes (the typed helpers [`Client::record`] and
+//!   [`Client::complete_task`] always attach one); a bare
+//!   `Request::Record`/`Request::TaskComplete` without an id is sent
+//!   exactly once;
+//! * `shutdown` is always a single attempt.
+//!
+//! Only transport-level failures (connect errors, timeouts, a
+//! connection closed without a reply) and the daemon's explicit
+//! `overloaded` shed reply are retried; any other daemon-reported
+//! error is returned immediately.
 
 use std::io::{BufRead, BufReader, Write};
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
+use crate::coordinator::perfdb::DbEntry;
+use crate::coordinator::platform::Fingerprint;
+use crate::service::faults::{self, InjectionPoint};
 use crate::service::protocol::Request;
 use crate::service::scheduler::{TaskKind, TuningTask};
 use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
 
 /// A checked-out task: what to do plus the lease that owns it.
 #[derive(Debug, Clone)]
@@ -36,31 +62,134 @@ pub enum Endpoint {
     Unix(PathBuf),
 }
 
+/// Bounded-retry + timeout configuration for a [`Client`].
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Total attempts for a retryable op (1 = no retries).
+    pub attempts: u32,
+    /// Backoff before the first retry; doubles per attempt.
+    pub base_delay: Duration,
+    /// Backoff ceiling.
+    pub max_delay: Duration,
+    /// TCP connect timeout.
+    pub connect_timeout: Duration,
+    /// Socket read/write timeout, set at connect time.
+    pub io_timeout: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            attempts: 3,
+            base_delay: Duration::from_millis(50),
+            max_delay: Duration::from_secs(2),
+            connect_timeout: Duration::from_secs(5),
+            io_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Exponential backoff with full jitter for the given retry
+    /// (1-based): `base * 2^(n-1)` capped at `max_delay`, scaled by a
+    /// uniform factor in [0.5, 1) so synchronized clients desynchronize.
+    pub fn backoff(&self, retry: u32) -> Duration {
+        let exp = self
+            .base_delay
+            .saturating_mul(1u32 << retry.saturating_sub(1).min(16))
+            .min(self.max_delay);
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.subsec_nanos() as u64)
+            .unwrap_or(0);
+        let mut rng = Rng::new(nanos ^ ((retry as u64) << 32) | 1);
+        exp.mul_f64(0.5 + 0.5 * rng.next_f64())
+    }
+}
+
 /// A stateless protocol client.
 #[derive(Debug, Clone)]
 pub struct Client {
     endpoint: Endpoint,
+    policy: RetryPolicy,
 }
 
 impl Client {
     /// A client for a TCP endpoint (`host:port`).
     pub fn tcp(addr: impl Into<String>) -> Client {
-        Client { endpoint: Endpoint::Tcp(addr.into()) }
+        Client { endpoint: Endpoint::Tcp(addr.into()), policy: RetryPolicy::default() }
     }
 
     #[cfg(unix)]
     /// A client for a Unix-domain-socket endpoint.
     pub fn unix(path: impl Into<PathBuf>) -> Client {
-        Client { endpoint: Endpoint::Unix(path.into()) }
+        Client { endpoint: Endpoint::Unix(path.into()), policy: RetryPolicy::default() }
     }
 
-    /// Send one request, return the parsed reply object.
+    /// Replace the retry/timeout policy (builder style).
+    pub fn with_policy(mut self, policy: RetryPolicy) -> Client {
+        self.policy = policy;
+        self
+    }
+
+    /// Send one request, return the parsed reply object.  Retryable
+    /// ops (see the module docs) are re-sent under the policy when the
+    /// failure was transient; everything else is a single attempt.
     pub fn call(&self, req: &Request) -> Result<Json> {
+        let attempts = if Self::op_retries_transparently(req) {
+            self.policy.attempts.max(1)
+        } else {
+            1
+        };
+        let mut last = None;
+        for attempt in 1..=attempts {
+            if attempt > 1 {
+                std::thread::sleep(self.policy.backoff(attempt - 1));
+            }
+            match self.call_once(req) {
+                Ok(reply) => return Ok(reply),
+                Err(e) if attempt < attempts && error_is_transient(&e) => last = Some(e),
+                Err(e) => return Err(e),
+            }
+        }
+        Err(last
+            .unwrap_or_else(|| anyhow::anyhow!("retry budget exhausted"))
+            .context(format!("after {attempts} attempts")))
+    }
+
+    /// Whether `req` may be transparently re-sent after a transient
+    /// failure without risking double application.
+    fn op_retries_transparently(req: &Request) -> bool {
+        match req {
+            // Non-idempotent writes: only safe with a dedupe id.
+            Request::Record { request_id, .. } | Request::TaskComplete { request_id, .. } => {
+                request_id.is_some()
+            }
+            // Retrying shutdown against a daemon that just obeyed it
+            // only produces a confusing connect error.
+            Request::Shutdown => false,
+            _ => true,
+        }
+    }
+
+    fn call_once(&self, req: &Request) -> Result<Json> {
         match &self.endpoint {
             Endpoint::Tcp(addr) => {
-                let stream = std::net::TcpStream::connect(addr)
-                    .with_context(|| format!("connecting to portatune daemon at {addr}"))?;
+                use std::net::ToSocketAddrs;
+                let sock = addr
+                    .to_socket_addrs()
+                    .with_context(|| format!("resolving portatune daemon address {addr}"))?
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("address {addr} resolved to nothing"))?;
+                let stream =
+                    std::net::TcpStream::connect_timeout(&sock, self.policy.connect_timeout)
+                        .with_context(|| format!("connecting to portatune daemon at {addr}"))?;
+                let _ = stream.set_read_timeout(Some(self.policy.io_timeout));
+                let _ = stream.set_write_timeout(Some(self.policy.io_timeout));
                 let _ = stream.set_nodelay(true);
+                if faults::hit(InjectionPoint::ClientConnectDrop) {
+                    anyhow::bail!("fault-injected: connection dropped before request");
+                }
                 Self::exchange(req, &stream, &stream)
             }
             #[cfg(unix)]
@@ -68,9 +197,25 @@ impl Client {
                 let stream = std::os::unix::net::UnixStream::connect(path).with_context(|| {
                     format!("connecting to portatune daemon at {}", path.display())
                 })?;
+                let _ = stream.set_read_timeout(Some(self.policy.io_timeout));
+                let _ = stream.set_write_timeout(Some(self.policy.io_timeout));
+                if faults::hit(InjectionPoint::ClientConnectDrop) {
+                    anyhow::bail!("fault-injected: connection dropped before request");
+                }
                 Self::exchange(req, &stream, &stream)
             }
         }
+    }
+
+    /// Write one tuning record, attaching a fresh `request_id` so the
+    /// write retries safely: a lost ack re-sends the same id and the
+    /// daemon replays the original reply instead of re-recording.
+    pub fn record(&self, entry: DbEntry, fingerprint: Option<Fingerprint>) -> Result<Json> {
+        self.call(&Request::Record {
+            entry: Box::new(entry),
+            fingerprint,
+            request_id: Some(fresh_request_id()),
+        })
     }
 
     /// Check out the next tuning task under a lease (the worker
@@ -106,8 +251,13 @@ impl Client {
 
     /// Settle a lease as done.  `Ok(true)` when this call settled it,
     /// `Ok(false)` when it was already settled (idempotent retry).
+    /// Carries a fresh `request_id` so a retried completion whose
+    /// first ack was lost still answers like the first attempt.
     pub fn complete_task(&self, lease_id: u64) -> Result<bool> {
-        let reply = self.call(&Request::TaskComplete { lease_id })?;
+        let reply = self.call(&Request::TaskComplete {
+            lease_id,
+            request_id: Some(fresh_request_id()),
+        })?;
         Ok(reply.get("duplicate").and_then(Json::as_bool) != Some(true))
     }
 
@@ -132,6 +282,7 @@ impl Client {
             .and_then(|_| writer.write_all(b"\n"))
             .and_then(|_| writer.flush())
             .context("sending request")?;
+        faults::stall(InjectionPoint::ClientReadStall);
         let mut line = String::new();
         BufReader::new(reader).read_line(&mut line).context("reading reply")?;
         anyhow::ensure!(!line.trim().is_empty(), "daemon closed the connection without a reply");
@@ -144,5 +295,120 @@ impl Client {
             return Err(anyhow::anyhow!("daemon error: {msg}"));
         }
         Ok(reply)
+    }
+}
+
+/// A process-unique opaque dedupe id: pid + wall-clock nanos + a
+/// process-wide sequence number.  Uniqueness, not secrecy, is the
+/// requirement — the daemon only compares ids for equality.
+fn fresh_request_id() -> String {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    format!("{:x}-{nanos:x}-{seq:x}", std::process::id())
+}
+
+/// Transient = worth retrying: transport failures (connect/timeout/
+/// closed-without-reply) and the daemon's explicit `overloaded` shed
+/// reply.  Any other daemon-reported error is definitive.
+fn error_is_transient(e: &anyhow::Error) -> bool {
+    let text = format!("{e:#}");
+    match text.find("daemon error: ") {
+        None => true,
+        Some(i) => text[i + "daemon error: ".len()..].starts_with("overloaded"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn retry_safety_classification() {
+        let entry = || {
+            Box::new(DbEntry {
+                platform_key: "p".into(),
+                kernel: "axpy".into(),
+                tag: "n64".into(),
+                best_params: Default::default(),
+                best_config_id: "b".into(),
+                best_time_s: 1.0,
+                baseline_time_s: 1.0,
+                reference_time_s: 1.0,
+                evaluations: 1,
+                strategy: "t".into(),
+                recorded_at: 1,
+            })
+        };
+        assert!(Client::op_retries_transparently(&Request::Ping));
+        assert!(Client::op_retries_transparently(&Request::Stats));
+        assert!(Client::op_retries_transparently(&Request::TaskHeartbeat { lease_id: 1 }));
+        assert!(!Client::op_retries_transparently(&Request::Shutdown));
+        assert!(!Client::op_retries_transparently(&Request::Record {
+            entry: entry(),
+            fingerprint: None,
+            request_id: None,
+        }));
+        assert!(Client::op_retries_transparently(&Request::Record {
+            entry: entry(),
+            fingerprint: None,
+            request_id: Some("id-1".into()),
+        }));
+        assert!(!Client::op_retries_transparently(&Request::TaskComplete {
+            lease_id: 1,
+            request_id: None,
+        }));
+        assert!(Client::op_retries_transparently(&Request::TaskComplete {
+            lease_id: 1,
+            request_id: Some("id-2".into()),
+        }));
+    }
+
+    #[test]
+    fn transient_error_classification() {
+        assert!(error_is_transient(&anyhow::anyhow!("connecting to portatune daemon at x")));
+        assert!(error_is_transient(&anyhow::anyhow!(
+            "daemon closed the connection without a reply"
+        )));
+        assert!(error_is_transient(&anyhow::anyhow!(
+            "daemon error: overloaded: 64 connections in flight"
+        )));
+        assert!(!error_is_transient(&anyhow::anyhow!("daemon error: unknown op warp")));
+    }
+
+    #[test]
+    fn backoff_grows_and_caps() {
+        let p = RetryPolicy {
+            base_delay: Duration::from_millis(100),
+            max_delay: Duration::from_millis(350),
+            ..RetryPolicy::default()
+        };
+        // Jitter scales into [0.5, 1) of the exponential value.
+        let b1 = p.backoff(1);
+        assert!(b1 >= Duration::from_millis(50) && b1 < Duration::from_millis(100), "{b1:?}");
+        let b4 = p.backoff(4);
+        assert!(b4 < Duration::from_millis(350), "cap violated: {b4:?}");
+    }
+
+    #[test]
+    fn request_ids_are_unique() {
+        let ids: std::collections::HashSet<String> =
+            (0..100).map(|_| fresh_request_id()).collect();
+        assert_eq!(ids.len(), 100);
+    }
+
+    #[test]
+    fn dead_endpoint_errors_within_the_retry_budget() {
+        // Port 1 refuses immediately; three attempts must still come
+        // back as a transport error, not hang.
+        let client = Client::tcp("127.0.0.1:1").with_policy(RetryPolicy {
+            attempts: 3,
+            base_delay: Duration::from_millis(1),
+            ..RetryPolicy::default()
+        });
+        assert!(client.call(&Request::Ping).is_err());
     }
 }

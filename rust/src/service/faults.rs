@@ -1,0 +1,401 @@
+//! Deterministic fault injection for the serve/work path.
+//!
+//! Distributed-tuning failures — dropped connections, half-written
+//! shard files, workers dying mid-lease — are rare in the wild and
+//! impossible to reproduce on demand, which makes the recovery paths
+//! the least-tested code in the daemon.  This module turns those
+//! failures into a *seeded schedule*: a [`FaultPlan`] names injection
+//! points (see [`InjectionPoint`]) threaded through `server.rs`,
+//! `client.rs`, `scheduler.rs`, `worker/mod.rs`, and `perfdb.rs`, and
+//! decides per occurrence whether the fault fires.  The same seed
+//! always produces the same per-point decision sequence, so a chaos
+//! run that loses a task is replayable exactly.
+//!
+//! Design constraints:
+//!
+//! * **Off by default, zero-cost when off** — every hook first checks
+//!   one relaxed atomic bool; no plan installed means no lock, no RNG,
+//!   no branch beyond that load.
+//! * **Deterministic per point** — the decision for the Nth occurrence
+//!   of a point is a pure function of `(seed, point, N)`, independent
+//!   of thread interleaving across *different* points.  (Near a
+//!   `max_hits` cap, racing threads may disagree about *which* of two
+//!   simultaneous occurrences consumes the final budget slot, but the
+//!   total never exceeds the cap.)
+//! * **Bounded** — every point carries a `max_hits` budget, so a
+//!   faulted system quiesces: bounded client retries eventually
+//!   succeed, and chaos tests terminate.
+//!
+//! Configuration is a spec string (CLI `--faults`, env
+//! `PORTATUNE_FAULTS`) of comma-separated `point:probability[:max_hits]`
+//! clauses, e.g. `server.reply-drop:0.2:5,shard.torn-write:1.0:2`.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Rng;
+
+/// Seed used when a spec is given without an explicit seed.
+pub const DEFAULT_SEED: u64 = 0x00C0_FFEE;
+
+/// How long a stall-type fault ([`stall`]) sleeps when it fires.  Short
+/// enough to keep chaos tests fast, long enough to trip the server's
+/// per-connection read deadline and the client's socket timeouts.
+pub const STALL: Duration = Duration::from_millis(50);
+
+/// Environment variable holding the fault spec string.
+pub const ENV_SPEC: &str = "PORTATUNE_FAULTS";
+
+/// Environment variable holding the schedule seed (u64).
+pub const ENV_SEED: &str = "PORTATUNE_FAULT_SEED";
+
+/// Named places in the serve/work path where a fault can fire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InjectionPoint {
+    /// Client drops the connection after connect, before the request
+    /// line is written (spec name `client.connect-drop`).
+    ClientConnectDrop,
+    /// Client stalls between writing the request and reading the reply
+    /// (spec name `client.read-stall`) — exercises the server's idle
+    /// deadline and the client's socket read timeout.
+    ClientReadStall,
+    /// Server drops the connection instead of writing the reply (spec
+    /// name `server.reply-drop`) — the op executed, the ack is lost.
+    ServerReplyDrop,
+    /// Server stalls before reading the next request line (spec name
+    /// `server.read-stall`).
+    ServerReadStall,
+    /// Shard commit writes a truncated document to the temp file and
+    /// fails before the rename (spec name `shard.torn-write`) — the
+    /// published shard is untouched, the writer sees an error.
+    ShardTornWrite,
+    /// Scheduler delays settling a lease inside complete/fail (spec
+    /// name `lease.settle-delay`).
+    LeaseSettleDelay,
+    /// Worker "crashes" between executing a task and reporting the
+    /// outcome (spec name `worker.crash`) — neither `task-complete`
+    /// nor `task-fail` is sent; only lease expiry recovers the task.
+    WorkerCrash,
+}
+
+/// Every injection point, in index order.
+pub const ALL_POINTS: [InjectionPoint; 7] = [
+    InjectionPoint::ClientConnectDrop,
+    InjectionPoint::ClientReadStall,
+    InjectionPoint::ServerReplyDrop,
+    InjectionPoint::ServerReadStall,
+    InjectionPoint::ShardTornWrite,
+    InjectionPoint::LeaseSettleDelay,
+    InjectionPoint::WorkerCrash,
+];
+
+impl InjectionPoint {
+    /// Stable spec-string spelling of the point.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            InjectionPoint::ClientConnectDrop => "client.connect-drop",
+            InjectionPoint::ClientReadStall => "client.read-stall",
+            InjectionPoint::ServerReplyDrop => "server.reply-drop",
+            InjectionPoint::ServerReadStall => "server.read-stall",
+            InjectionPoint::ShardTornWrite => "shard.torn-write",
+            InjectionPoint::LeaseSettleDelay => "lease.settle-delay",
+            InjectionPoint::WorkerCrash => "worker.crash",
+        }
+    }
+
+    /// Parse a spec-string spelling back into a point.
+    pub fn parse(s: &str) -> Option<InjectionPoint> {
+        ALL_POINTS.iter().copied().find(|p| p.as_str() == s)
+    }
+
+    fn index(&self) -> usize {
+        match self {
+            InjectionPoint::ClientConnectDrop => 0,
+            InjectionPoint::ClientReadStall => 1,
+            InjectionPoint::ServerReplyDrop => 2,
+            InjectionPoint::ServerReadStall => 3,
+            InjectionPoint::ShardTornWrite => 4,
+            InjectionPoint::LeaseSettleDelay => 5,
+            InjectionPoint::WorkerCrash => 6,
+        }
+    }
+}
+
+const POINT_COUNT: usize = ALL_POINTS.len();
+
+/// One point's schedule: fire with this probability, at most this often.
+#[derive(Debug, Clone, Copy)]
+struct PointPlan {
+    probability: f64,
+    max_hits: u64,
+}
+
+/// A seeded, bounded schedule of faults over the named injection
+/// points.  Install one globally with [`install`]; hooks consult it
+/// through [`hit`]/[`stall`].
+#[derive(Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    points: [Option<PointPlan>; POINT_COUNT],
+    occurrences: [AtomicU64; POINT_COUNT],
+    fired: [AtomicU64; POINT_COUNT],
+}
+
+impl FaultPlan {
+    /// Parse a spec string (`point:probability[:max_hits]`, comma
+    /// separated) into a plan with the given seed.
+    pub fn from_spec(spec: &str, seed: u64) -> Result<FaultPlan> {
+        let mut points: [Option<PointPlan>; POINT_COUNT] = [None; POINT_COUNT];
+        for clause in spec.split(',').map(str::trim).filter(|c| !c.is_empty()) {
+            let mut parts = clause.split(':');
+            let name = parts.next().unwrap_or("");
+            let point = InjectionPoint::parse(name).ok_or_else(|| {
+                let known: Vec<&str> = ALL_POINTS.iter().map(|p| p.as_str()).collect();
+                anyhow::anyhow!("unknown injection point {name:?} (known: {known:?})")
+            })?;
+            let prob: f64 = match parts.next() {
+                Some(p) => p
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad probability in fault clause {clause:?}"))?,
+                None => bail!("fault clause {clause:?} lacks a probability"),
+            };
+            if !(0.0..=1.0).contains(&prob) {
+                bail!("probability out of [0,1] in fault clause {clause:?}");
+            }
+            let max_hits: u64 = match parts.next() {
+                Some(h) => h
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad max_hits in fault clause {clause:?}"))?,
+                None => u64::MAX,
+            };
+            if parts.next().is_some() {
+                bail!("trailing fields in fault clause {clause:?}");
+            }
+            points[point.index()] = Some(PointPlan { probability: prob, max_hits });
+        }
+        Ok(FaultPlan {
+            seed,
+            points,
+            occurrences: std::array::from_fn(|_| AtomicU64::new(0)),
+            fired: std::array::from_fn(|_| AtomicU64::new(0)),
+        })
+    }
+
+    /// Build a plan from `PORTATUNE_FAULTS` / `PORTATUNE_FAULT_SEED`.
+    /// Returns `Ok(None)` when the spec variable is unset or empty.
+    pub fn from_env() -> Result<Option<FaultPlan>> {
+        let spec = match std::env::var(ENV_SPEC) {
+            Ok(s) if !s.trim().is_empty() => s,
+            _ => return Ok(None),
+        };
+        let seed = match std::env::var(ENV_SEED) {
+            Ok(s) => s
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad {ENV_SEED}: {s:?} (want u64)"))?,
+            Err(_) => DEFAULT_SEED,
+        };
+        Ok(Some(FaultPlan::from_spec(&spec, seed)?))
+    }
+
+    /// The seed the schedule was built with.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Decide whether this occurrence of `point` faults.  Counts the
+    /// occurrence either way; never fires more than the point's
+    /// `max_hits` budget.
+    pub fn decide(&self, point: InjectionPoint) -> bool {
+        let i = point.index();
+        let Some(plan) = self.points[i] else { return false };
+        let n = self.occurrences[i].fetch_add(1, Ordering::Relaxed);
+        if self.fired[i].load(Ordering::Relaxed) >= plan.max_hits {
+            return false;
+        }
+        let mut rng = Rng::new(mix(self.seed, i as u64, n));
+        if rng.next_f64() >= plan.probability {
+            return false;
+        }
+        // Claim a budget slot; back off if a racing occurrence took the
+        // last one between the load above and here.
+        self.fired[i].fetch_add(1, Ordering::Relaxed) < plan.max_hits
+    }
+
+    /// How many times `point` has fired so far.
+    pub fn fired(&self, point: InjectionPoint) -> u64 {
+        let i = point.index();
+        self.fired[i].load(Ordering::Relaxed).min(self.points[i].map_or(0, |p| p.max_hits))
+    }
+
+    /// How many times `point` has been consulted so far.
+    pub fn occurrences(&self, point: InjectionPoint) -> u64 {
+        self.occurrences[point.index()].load(Ordering::Relaxed)
+    }
+}
+
+/// Mix (seed, point, occurrence) into an RNG seed: SplitMix-style odd
+/// multipliers keep nearby inputs decorrelated.
+fn mix(seed: u64, point: u64, n: u64) -> u64 {
+    let mut x = seed
+        ^ point.wrapping_mul(0x9e37_79b9_7f4a_7c15)
+        ^ n.wrapping_mul(0x2545_f491_4f6c_dd1d);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x ^= x >> 27;
+    x
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+fn slot() -> &'static Mutex<Option<Arc<FaultPlan>>> {
+    static SLOT: OnceLock<Mutex<Option<Arc<FaultPlan>>>> = OnceLock::new();
+    SLOT.get_or_init(|| Mutex::new(None))
+}
+
+/// Install `plan` as the process-wide fault schedule (replacing any
+/// previous one) and return a handle for inspecting its counters.
+pub fn install(plan: FaultPlan) -> Arc<FaultPlan> {
+    let plan = Arc::new(plan);
+    *slot().lock().unwrap_or_else(std::sync::PoisonError::into_inner) = Some(Arc::clone(&plan));
+    ENABLED.store(true, Ordering::SeqCst);
+    plan
+}
+
+/// Install a plan from the environment, if one is configured.
+pub fn install_from_env() -> Result<Option<Arc<FaultPlan>>> {
+    Ok(FaultPlan::from_env()?.map(install))
+}
+
+/// Remove the process-wide fault schedule; all hooks become no-ops.
+pub fn clear() {
+    ENABLED.store(false, Ordering::SeqCst);
+    *slot().lock().unwrap_or_else(std::sync::PoisonError::into_inner) = None;
+}
+
+/// Whether a fault schedule is currently installed.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// The currently installed schedule, if any.
+pub fn active() -> Option<Arc<FaultPlan>> {
+    if !enabled() {
+        return None;
+    }
+    slot().lock().unwrap_or_else(std::sync::PoisonError::into_inner).clone()
+}
+
+/// Consult the installed schedule at `point`.  The zero-cost path:
+/// with no schedule installed this is one relaxed atomic load.
+pub fn hit(point: InjectionPoint) -> bool {
+    match active() {
+        Some(plan) => plan.decide(point),
+        None => false,
+    }
+}
+
+/// Like [`hit`], but a firing fault sleeps [`STALL`] instead of being
+/// returned to the caller for explicit handling.  Returns whether the
+/// stall happened.
+pub fn stall(point: InjectionPoint) -> bool {
+    if hit(point) {
+        std::thread::sleep(STALL);
+        true
+    } else {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_round_trips_every_point_name() {
+        for p in ALL_POINTS {
+            assert_eq!(InjectionPoint::parse(p.as_str()), Some(p));
+        }
+        assert_eq!(InjectionPoint::parse("bogus"), None);
+    }
+
+    #[test]
+    fn spec_parse_errors_are_loud() {
+        assert!(FaultPlan::from_spec("bogus:0.5", 1).is_err());
+        assert!(FaultPlan::from_spec("worker.crash", 1).is_err());
+        assert!(FaultPlan::from_spec("worker.crash:1.5", 1).is_err());
+        assert!(FaultPlan::from_spec("worker.crash:0.5:x", 1).is_err());
+        assert!(FaultPlan::from_spec("worker.crash:0.5:1:junk", 1).is_err());
+        assert!(FaultPlan::from_spec("", 1).is_ok());
+    }
+
+    #[test]
+    fn same_seed_same_schedule() {
+        let spec = "server.reply-drop:0.3,worker.crash:0.5:10";
+        let a = FaultPlan::from_spec(spec, 42).unwrap();
+        let b = FaultPlan::from_spec(spec, 42).unwrap();
+        for _ in 0..1000 {
+            assert_eq!(
+                a.decide(InjectionPoint::ServerReplyDrop),
+                b.decide(InjectionPoint::ServerReplyDrop)
+            );
+            assert_eq!(a.decide(InjectionPoint::WorkerCrash), b.decide(InjectionPoint::WorkerCrash));
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let a = FaultPlan::from_spec("server.reply-drop:0.5", 1).unwrap();
+        let b = FaultPlan::from_spec("server.reply-drop:0.5", 2).unwrap();
+        let same = (0..256)
+            .filter(|_| {
+                a.decide(InjectionPoint::ServerReplyDrop)
+                    == b.decide(InjectionPoint::ServerReplyDrop)
+            })
+            .count();
+        assert!(same < 256, "independent seeds produced identical schedules");
+    }
+
+    #[test]
+    fn max_hits_bounds_firing() {
+        let plan = FaultPlan::from_spec("shard.torn-write:1.0:3", 7).unwrap();
+        let fired = (0..100).filter(|_| plan.decide(InjectionPoint::ShardTornWrite)).count();
+        assert_eq!(fired, 3);
+        assert_eq!(plan.fired(InjectionPoint::ShardTornWrite), 3);
+        assert_eq!(plan.occurrences(InjectionPoint::ShardTornWrite), 100);
+    }
+
+    #[test]
+    fn unconfigured_point_never_fires() {
+        let plan = FaultPlan::from_spec("worker.crash:1.0", 7).unwrap();
+        assert!(!plan.decide(InjectionPoint::ClientConnectDrop));
+    }
+
+    #[test]
+    fn global_hooks_are_inert_without_a_plan() {
+        // Other tests in this binary may install plans; serialize by
+        // clearing first (the global is process-wide by design).
+        clear();
+        assert!(!enabled());
+        assert!(!hit(InjectionPoint::WorkerCrash));
+        assert!(!stall(InjectionPoint::LeaseSettleDelay));
+        let plan = install(FaultPlan::from_spec("worker.crash:1.0:1", 3).unwrap());
+        assert!(hit(InjectionPoint::WorkerCrash));
+        assert!(!hit(InjectionPoint::WorkerCrash), "budget of 1 exhausted");
+        assert_eq!(plan.fired(InjectionPoint::WorkerCrash), 1);
+        clear();
+        assert!(!hit(InjectionPoint::WorkerCrash));
+    }
+
+    #[test]
+    fn env_plan_requires_spec() {
+        // No env mutation here (racy across threads): absent spec var
+        // is the common case in the test environment.
+        if std::env::var(ENV_SPEC).is_err() {
+            assert!(FaultPlan::from_env().unwrap().is_none());
+        }
+    }
+}

@@ -33,14 +33,23 @@
 //!   persistent runtime-service shape of Kernel Tuning Toolkit,
 //!   Petrovič et al. 2019, plus portfolio maintenance from "A Few Fit
 //!   Most").
+//! * [`faults`] — the deterministic fault-injection harness behind
+//!   `tests/chaos.rs`: a seeded [`FaultPlan`] fires connection drops,
+//!   read/write stalls, torn shard writes, lease-settle delays, and
+//!   worker crashes at named points across the serve/work path, so
+//!   the recovery machinery (client retry + request-id dedupe, lease
+//!   expiry, shard quarantine) is exercised on demand instead of only
+//!   in production incidents.
 
 pub mod client;
+pub mod faults;
 pub mod protocol;
 pub mod scheduler;
 pub mod server;
 pub mod transfer;
 
-pub use client::{Client, Endpoint, LeasedTask};
+pub use client::{Client, Endpoint, LeasedTask, RetryPolicy};
+pub use faults::{FaultPlan, InjectionPoint};
 pub use protocol::{reply_err, reply_ok, Request};
 pub use scheduler::{
     CompleteOutcome, FailOutcome, StaleReason, TaskKind, TaskQueue, TuningTask,

@@ -11,12 +11,12 @@
 //! {"op":"ping"}
 //! {"op":"lookup","kernel":"axpy","workload":"n4096","platform":KEY?}
 //! {"op":"deploy","kernel":"axpy","workload":"n4096","platform":KEY?,"fingerprint":{..}?}
-//! {"op":"record","entry":{..DbEntry..},"fingerprint":{..}?}
+//! {"op":"record","entry":{..DbEntry..},"fingerprint":{..}?,"request_id":"..."?}
 //! {"op":"record-portfolio","portfolio":{..Portfolio..},"platform":KEY?,"fingerprint":{..}?}
 //! {"op":"stats"}
 //! {"op":"task-lease","kind":"retune"?,"platform":KEY?,"ttl_s":600?}
 //! {"op":"task-heartbeat","lease_id":N}
-//! {"op":"task-complete","lease_id":N}
+//! {"op":"task-complete","lease_id":N,"request_id":"..."?}
 //! {"op":"task-fail","lease_id":N,"error":"..."?}
 //! {"op":"retune-next"}
 //! {"op":"portfolio","kernel":"gemm","platform":KEY?,"dims":{"m":128,..}?,"fingerprint":{..}?}
@@ -30,6 +30,13 @@
 //! worker-fleet checkout protocol (see [`crate::service::scheduler`]);
 //! `retune-next` survives as a back-compat alias for a default-TTL
 //! lease of the next retune task.
+//!
+//! `request_id` (the two non-idempotent write ops, `record` and
+//! `task-complete`) is an optional client-generated opaque string: the
+//! daemon remembers recent ids and replays the stored reply for a
+//! duplicate, so a client may retry a write whose ack was lost without
+//! double-applying it (see the retry machinery in
+//! [`crate::service::client`]).
 
 use anyhow::{Context, Result};
 
@@ -71,6 +78,9 @@ pub enum Request {
         entry: Box<DbEntry>,
         /// Recording platform's fingerprint (stored in the shard).
         fingerprint: Option<Fingerprint>,
+        /// Client-generated dedupe id: a retry carrying the same id
+        /// replays the first attempt's reply instead of re-recording.
+        request_id: Option<String>,
     },
     /// Write (or replace) a platform's variant portfolio — how a
     /// worker reports a finished portfolio-rebuild task so the
@@ -106,6 +116,11 @@ pub enum Request {
     TaskComplete {
         /// The lease to settle.
         lease_id: u64,
+        /// Client-generated dedupe id: a retry carrying the same id
+        /// replays the first attempt's reply (completion is already
+        /// idempotent server-side; the id keeps the *reply* stable
+        /// too, so a retry does not see `duplicate:true`).
+        request_id: Option<String>,
     },
     /// Settle a lease as failed; the task requeues (bounded retries).
     TaskFail {
@@ -177,6 +192,7 @@ impl Request {
                 Ok(Request::Record {
                     entry: Box::new(DbEntry::from_json(entry)?),
                     fingerprint: fp()?,
+                    request_id: opt("request_id"),
                 })
             }
             "record-portfolio" => {
@@ -208,7 +224,10 @@ impl Request {
                 Ok(Request::TaskLease { kind, platform: opt("platform"), ttl_s })
             }
             "task-heartbeat" => Ok(Request::TaskHeartbeat { lease_id: lease_id(&v, op)? }),
-            "task-complete" => Ok(Request::TaskComplete { lease_id: lease_id(&v, op)? }),
+            "task-complete" => Ok(Request::TaskComplete {
+                lease_id: lease_id(&v, op)?,
+                request_id: opt("request_id"),
+            }),
             "task-fail" => Ok(Request::TaskFail {
                 lease_id: lease_id(&v, op)?,
                 error: opt("error"),
@@ -265,11 +284,14 @@ impl Request {
                     fields.push(("fingerprint", fp.to_json()));
                 }
             }
-            Request::Record { entry, fingerprint } => {
+            Request::Record { entry, fingerprint, request_id } => {
                 fields.push(("op", json::s("record")));
                 fields.push(("entry", entry.to_json()));
                 if let Some(fp) = fingerprint {
                     fields.push(("fingerprint", fp.to_json()));
+                }
+                if let Some(id) = request_id {
+                    fields.push(("request_id", json::s(id)));
                 }
             }
             Request::RecordPortfolio { platform, portfolio, fingerprint } => {
@@ -299,9 +321,12 @@ impl Request {
                 fields.push(("op", json::s("task-heartbeat")));
                 fields.push(("lease_id", json::int(*lease_id as i64)));
             }
-            Request::TaskComplete { lease_id } => {
+            Request::TaskComplete { lease_id, request_id } => {
                 fields.push(("op", json::s("task-complete")));
                 fields.push(("lease_id", json::int(*lease_id as i64)));
+                if let Some(id) = request_id {
+                    fields.push(("request_id", json::s(id)));
+                }
             }
             Request::TaskFail { lease_id, error } => {
                 fields.push(("op", json::s("task-fail")));
@@ -373,7 +398,8 @@ mod tests {
                 ttl_s: Some(300),
             },
             Request::TaskHeartbeat { lease_id: 7 },
-            Request::TaskComplete { lease_id: 7 },
+            Request::TaskComplete { lease_id: 7, request_id: None },
+            Request::TaskComplete { lease_id: 7, request_id: Some("w1-42".into()) },
             Request::TaskFail { lease_id: 7, error: Some("sweep oom".into()) },
             Request::Portfolio {
                 platform: None,
@@ -475,6 +501,24 @@ mod tests {
             Request::TaskFail { lease_id, error } => {
                 assert_eq!(lease_id, 9);
                 assert!(error.is_none());
+            }
+            other => panic!("parsed {other:?}"),
+        }
+    }
+
+    #[test]
+    fn request_id_is_optional_and_round_trips() {
+        match Request::parse_line(r#"{"op":"task-complete","lease_id":4}"#).unwrap() {
+            Request::TaskComplete { lease_id, request_id } => {
+                assert_eq!(lease_id, 4);
+                assert!(request_id.is_none());
+            }
+            other => panic!("parsed {other:?}"),
+        }
+        let line = r#"{"lease_id":4,"op":"task-complete","request_id":"w2-17"}"#;
+        match Request::parse_line(line).unwrap() {
+            req @ Request::TaskComplete { .. } => {
+                assert_eq!(req.to_line(), line, "request_id must survive serialization");
             }
             other => panic!("parsed {other:?}"),
         }

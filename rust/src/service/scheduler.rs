@@ -584,6 +584,7 @@ impl TaskQueue {
 
     /// Settle a lease as done.  Idempotent: see [`CompleteOutcome`].
     pub fn complete(&mut self, lease_id: u64) -> CompleteOutcome {
+        crate::service::faults::stall(crate::service::faults::InjectionPoint::LeaseSettleDelay);
         if let Some(lease) = self.leased.remove(&lease_id) {
             self.resolve(lease.task.identity());
             self.settle(lease_id, Settled::Completed);
@@ -624,6 +625,7 @@ impl TaskQueue {
     /// Settle a lease as failed; the task requeues until it exhausts
     /// [`MAX_ATTEMPTS`] (shared with expiry losses).
     pub fn fail(&mut self, lease_id: u64) -> FailOutcome {
+        crate::service::faults::stall(crate::service::faults::InjectionPoint::LeaseSettleDelay);
         if let Some(mut lease) = self.leased.remove(&lease_id) {
             self.settle(lease_id, Settled::Failed);
             lease.task.attempts += 1;

@@ -42,6 +42,7 @@ use crate::coordinator::portfolio::{Portfolio, PortfolioItem};
 use crate::coordinator::search::Exhaustive;
 use crate::coordinator::tuner::Tuner;
 use crate::runtime::Registry;
+use crate::service::faults::{self, InjectionPoint};
 use crate::service::protocol::{reply_err, reply_ok, Request};
 use crate::service::scheduler::{
     CompleteOutcome, FailOutcome, TaskKind, TaskQueue, DEFAULT_LEASE_TTL_S,
@@ -71,6 +72,12 @@ const CONN_READ_TIMEOUT: Duration = Duration::from_millis(500);
 /// must not pin a task in flight until daemon restart — past this the
 /// lease expires and the task requeues like any other silent worker's.
 const MAX_LEASE_TTL_S: u64 = 24 * 3600;
+
+/// Reply-dedupe cache capacity: one entry per recent non-idempotent
+/// request id (`record` / `task-complete`).  Sized like the
+/// scheduler's settled-lease memory — far larger than any plausible
+/// client retry window.
+const DEDUPE_KEEP: usize = 4096;
 
 /// Upper bound on decision-cache staleness.  The daemon's own writes
 /// invalidate precisely, but the shard directory is a shared store —
@@ -156,13 +163,29 @@ pub struct ServeOpts {
     /// Lease TTL granted when a `task-lease` request names none (and
     /// backing the `retune-next` compatibility alias).
     pub lease_ttl_s: u64,
+    /// Maximum concurrently-served connections (0 disables the cap).
+    /// Past the cap, a new connection gets a single retryable
+    /// `overloaded` error reply and is dropped (shed) instead of
+    /// queueing a handler thread without bound.
+    pub max_conns: usize,
+    /// Per-connection idle deadline in seconds (0 disables it): a
+    /// connection that completes no request for this long is closed,
+    /// so a stalled or wedged client cannot pin its handler thread
+    /// forever.
+    pub conn_idle_s: u64,
 }
 
 impl Default for ServeOpts {
     fn default() -> ServeOpts {
-        // 30 days: tuned configs outlive any one deploy cycle but not a
-        // hardware refresh.
-        ServeOpts { ttl_s: 30 * 24 * 3600, lru_cap: 1024, lease_ttl_s: DEFAULT_LEASE_TTL_S }
+        ServeOpts {
+            // 30 days: tuned configs outlive any one deploy cycle but
+            // not a hardware refresh.
+            ttl_s: 30 * 24 * 3600,
+            lru_cap: 1024,
+            lease_ttl_s: DEFAULT_LEASE_TTL_S,
+            max_conns: 256,
+            conn_idle_s: 300,
+        }
     }
 }
 
@@ -185,6 +208,9 @@ struct Counters {
     leases_expired: AtomicU64,
     retunes: AtomicU64,
     errors: AtomicU64,
+    dedup_hits: AtomicU64,
+    conns_shed: AtomicU64,
+    conns_closed_idle: AtomicU64,
 }
 
 /// Point-in-time snapshot of the daemon's counters (the serve-side
@@ -223,6 +249,14 @@ pub struct ServeStats {
     pub retunes: u64,
     /// Requests that errored (malformed lines included).
     pub errors: u64,
+    /// Retried non-idempotent requests answered by replaying the
+    /// stored reply instead of re-executing (request-id dedupe).
+    pub dedup_hits: u64,
+    /// Connections shed with an `overloaded` reply at the connection
+    /// cap.
+    pub conns_shed: u64,
+    /// Connections closed for exceeding the idle deadline.
+    pub conns_closed_idle: u64,
     /// Pending (not-yet-leased) task count.
     pub tasks_pending: u64,
     /// Currently-leased task count.
@@ -269,6 +303,11 @@ pub struct Server {
     /// negative) result would be cached indefinitely.
     cache_gen: AtomicU64,
     scheduler: Mutex<TaskQueue>,
+    /// Replies to recent non-idempotent requests, keyed by the
+    /// client-sent request id.  A retry whose first attempt's reply
+    /// was lost in flight replays the stored reply instead of
+    /// re-executing (double-recording an entry, re-settling a lease).
+    dedupe: Mutex<Lru<String, Json>>,
     counters: Counters,
     shutdown: AtomicBool,
 }
@@ -285,6 +324,7 @@ impl Server {
             portfolio_lru: Mutex::new(Lru::new(opts.lru_cap)),
             cache_gen: AtomicU64::new(0),
             scheduler: Mutex::new(TaskQueue::new(opts.ttl_s)),
+            dedupe: Mutex::new(Lru::new(DEDUPE_KEEP)),
             opts,
             counters: Counters::default(),
             shutdown: AtomicBool::new(false),
@@ -442,6 +482,9 @@ impl Server {
             leases_expired: self.counters.leases_expired.load(Ordering::Relaxed),
             retunes: self.counters.retunes.load(Ordering::Relaxed),
             errors: self.counters.errors.load(Ordering::Relaxed),
+            dedup_hits: self.counters.dedup_hits.load(Ordering::Relaxed),
+            conns_shed: self.counters.conns_shed.load(Ordering::Relaxed),
+            conns_closed_idle: self.counters.conns_closed_idle.load(Ordering::Relaxed),
             tasks_pending,
             tasks_inflight,
             queue_depth,
@@ -458,6 +501,30 @@ impl Server {
         if expired > 0 {
             self.counters.leases_expired.fetch_add(expired as u64, Ordering::Relaxed);
         }
+    }
+
+    /// Replay-or-execute for non-idempotent ops carrying a client
+    /// request id.  A retried `record`/`task-complete` whose first
+    /// attempt's *reply* was lost must not re-execute — the stored
+    /// reply is replayed byte-for-byte instead.  Error outcomes are
+    /// not stored, so a genuinely failed attempt can be retried for
+    /// real; requests without an id always execute.
+    fn deduped(
+        &self,
+        request_id: &Option<String>,
+        exec: impl FnOnce() -> Result<Json>,
+    ) -> Result<Json> {
+        if let Some(id) = request_id {
+            if let Some(prev) = lock(&self.dedupe).get(id) {
+                self.bump(&self.counters.dedup_hits);
+                return Ok(prev);
+            }
+        }
+        let reply = exec()?;
+        if let Some(id) = request_id {
+            lock(&self.dedupe).put(id.clone(), reply.clone());
+        }
+        Ok(reply)
     }
 
     /// Handle one parsed request.  Pure with respect to I/O framing —
@@ -544,14 +611,16 @@ impl Server {
                     ("candidates", Json::Arr(candidates)),
                 ]))
             }
-            Request::Record { entry, fingerprint } => {
-                self.bump(&self.counters.records);
-                let entry = (**entry).clone();
-                let (platform, kernel, tag) =
-                    (entry.platform_key.clone(), entry.kernel.clone(), entry.tag.clone());
-                self.db.record(fingerprint.as_ref(), entry)?;
-                self.invalidate(&platform, &kernel, &tag);
-                Ok(reply_ok(vec![("recorded", Json::Bool(true))]))
+            Request::Record { entry, fingerprint, request_id } => {
+                self.deduped(request_id, || {
+                    self.bump(&self.counters.records);
+                    let entry = (**entry).clone();
+                    let (platform, kernel, tag) =
+                        (entry.platform_key.clone(), entry.kernel.clone(), entry.tag.clone());
+                    self.db.record(fingerprint.as_ref(), entry)?;
+                    self.invalidate(&platform, &kernel, &tag);
+                    Ok(reply_ok(vec![("recorded", Json::Bool(true))]))
+                })
             }
             Request::RecordPortfolio { platform, portfolio, fingerprint } => {
                 self.bump(&self.counters.records);
@@ -638,25 +707,27 @@ impl Server {
                     None => Ok(reply_ok(vec![("extended", Json::Bool(false))])),
                 }
             }
-            Request::TaskComplete { lease_id } => {
-                self.drain_expired();
-                let outcome = lock(&self.scheduler).complete(*lease_id);
-                match outcome {
-                    CompleteOutcome::Settled => {
-                        self.bump(&self.counters.tasks_completed);
-                        Ok(reply_ok(vec![
+            Request::TaskComplete { lease_id, request_id } => {
+                self.deduped(request_id, || {
+                    self.drain_expired();
+                    let outcome = lock(&self.scheduler).complete(*lease_id);
+                    match outcome {
+                        CompleteOutcome::Settled => {
+                            self.bump(&self.counters.tasks_completed);
+                            Ok(reply_ok(vec![
+                                ("settled", Json::Bool(true)),
+                                ("duplicate", Json::Bool(false)),
+                            ]))
+                        }
+                        CompleteOutcome::Duplicate => Ok(reply_ok(vec![
                             ("settled", Json::Bool(true)),
-                            ("duplicate", Json::Bool(false)),
-                        ]))
+                            ("duplicate", Json::Bool(true)),
+                        ])),
+                        CompleteOutcome::Unknown => {
+                            Err(anyhow::anyhow!("unknown lease {lease_id}"))
+                        }
                     }
-                    CompleteOutcome::Duplicate => Ok(reply_ok(vec![
-                        ("settled", Json::Bool(true)),
-                        ("duplicate", Json::Bool(true)),
-                    ])),
-                    CompleteOutcome::Unknown => {
-                        Err(anyhow::anyhow!("unknown lease {lease_id}"))
-                    }
-                }
+                })
             }
             Request::TaskFail { lease_id, error } => {
                 self.drain_expired();
@@ -747,16 +818,25 @@ impl Server {
     /// discards partially-read data when a timeout splits a multi-byte
     /// character, corrupting the in-flight request.
     ///
+    /// A connection that completes no request within the configured
+    /// idle deadline ([`ServeOpts::conn_idle_s`]) is closed — the
+    /// read timeout wakes this loop often enough to notice — so a
+    /// stalled client (wedged process, half-open TCP peer) cannot pin
+    /// a handler thread forever.
+    ///
     /// [`run_tcp`]: Self::run_tcp
     pub fn serve_connection(&self, mut reader: impl BufRead, mut writer: impl Write) {
         let mut buf: Vec<u8> = Vec::new();
+        let mut last_activity = std::time::Instant::now();
         loop {
             if self.is_shutdown() {
                 break;
             }
+            faults::stall(InjectionPoint::ServerReadStall);
             match reader.read_until(b'\n', &mut buf) {
                 Ok(0) => break, // EOF
                 Ok(_) => {
+                    last_activity = std::time::Instant::now();
                     let reply = {
                         let text = String::from_utf8_lossy(&buf);
                         let trimmed = text.trim();
@@ -768,6 +848,14 @@ impl Server {
                     };
                     buf.clear();
                     if let Some(reply) = reply {
+                        if faults::hit(InjectionPoint::ServerReplyDrop) {
+                            // Fault injection: the request executed
+                            // but its reply dies with the connection —
+                            // exactly a daemon failure between execute
+                            // and respond.  Retrying clients must
+                            // recover via request-id dedupe.
+                            break;
+                        }
                         if writer
                             .write_all(reply.as_bytes())
                             .and_then(|_| writer.write_all(b"\n"))
@@ -783,7 +871,12 @@ impl Server {
                         || e.kind() == std::io::ErrorKind::TimedOut =>
                 {
                     // Read timeout: partial bytes stay in `buf`; loop
-                    // to re-check the shutdown flag.
+                    // to re-check the shutdown flag and idle deadline.
+                    let idle_s = self.opts.conn_idle_s;
+                    if idle_s > 0 && last_activity.elapsed() >= Duration::from_secs(idle_s) {
+                        self.bump(&self.counters.conns_closed_idle);
+                        break;
+                    }
                 }
                 Err(_) => break,
             }
@@ -946,8 +1039,43 @@ impl Server {
         while !self.is_shutdown() {
             handles.retain(|h| !h.is_finished());
             match accept() {
-                Ok(stream) => {
+                Ok(mut stream) => {
                     stream.prepare();
+                    if self.opts.max_conns > 0 && handles.len() >= self.opts.max_conns {
+                        // Shed load: a bounded thread-per-connection
+                        // pool beats unbounded queueing.  The refused
+                        // client gets one retryable `overloaded` reply
+                        // (see `client::RetryPolicy`).  Reply + close
+                        // happen on a short detached thread that also
+                        // drains the client's in-flight request bytes —
+                        // closing with unread data can reset the
+                        // connection and tear the reply away before the
+                        // client reads it — so the accept loop itself
+                        // never blocks on a shed connection.
+                        self.bump(&self.counters.conns_shed);
+                        let line = reply_err(&format!(
+                            "overloaded: {} connections in flight",
+                            handles.len()
+                        ))
+                        .compact();
+                        std::thread::spawn(move || {
+                            let _ = stream
+                                .write_all(line.as_bytes())
+                                .and_then(|_| stream.write_all(b"\n"))
+                                .and_then(|_| stream.flush());
+                            // Bounded drain: one read timeout at most,
+                            // and a peer streaming data cannot pin the
+                            // thread past a few buffers.
+                            let mut sink = [0u8; 1024];
+                            for _ in 0..16 {
+                                match stream.read(&mut sink) {
+                                    Ok(n) if n > 0 => {}
+                                    _ => break,
+                                }
+                            }
+                        });
+                        continue;
+                    }
                     let srv = Arc::clone(&self);
                     handles.push(std::thread::spawn(move || {
                         match stream.split_read_half() {
@@ -968,9 +1096,18 @@ impl Server {
                 }
             }
         }
+        // Graceful drain: accepting has stopped; in-flight handlers
+        // observe the shutdown flag within one read timeout and
+        // finish their current request before exiting.  Then flush a
+        // final stats snapshot to the log so a restart never discards
+        // the counters silently.
         for h in handles {
             let _ = h.join();
         }
+        eprintln!(
+            "portatune serve: drained on shutdown; final stats: {}",
+            crate::report::stats::serve_stats_json(&self.stats()).compact()
+        );
         Ok(())
     }
 
@@ -1097,6 +1234,7 @@ mod tests {
     fn record_then_lookup_round_trips() {
         let (srv, dir) = test_server("roundtrip");
         let rec = Request::Record {
+            request_id: None,
             entry: Box::new(entry("p1", "axpy", "n4096", "b256_u1")),
             fingerprint: Some(fp()),
         };
@@ -1134,6 +1272,7 @@ mod tests {
         assert_eq!(srv.handle_request(&look).get("found").and_then(Json::as_bool), Some(false));
         // ...but a record must bust it.
         let rec = Request::Record {
+            request_id: None,
             entry: Box::new(entry("p1", "axpy", "n4096", "fresh")),
             fingerprint: None,
         };
@@ -1153,10 +1292,12 @@ mod tests {
         far_fp.cache_l2_kb = 512;
         far_fp.os = "macos".into();
         srv.handle_request(&Request::Record {
+            request_id: None,
             entry: Box::new(entry("near-p", "axpy", "n4096", "near_cfg")),
             fingerprint: Some(near_fp),
         });
         srv.handle_request(&Request::Record {
+            request_id: None,
             entry: Box::new(entry("far-p", "axpy", "n4096", "far_cfg")),
             fingerprint: Some(far_fp),
         });
@@ -1193,6 +1334,7 @@ mod tests {
         // The target platform is known (shard with ARM fingerprint) but
         // has no entry for the requested kernel — only for another one.
         srv.handle_request(&Request::Record {
+            request_id: None,
             entry: Box::new(entry("arm-target", "dot", "n4096", "unrelated")),
             fingerprint: Some(arm.clone()),
         });
@@ -1201,10 +1343,12 @@ mod tests {
         let mut arm_sibling = arm.clone();
         arm_sibling.cache_l2_kb = 1024;
         srv.handle_request(&Request::Record {
+            request_id: None,
             entry: Box::new(entry("arm-sibling", "axpy", "n4096", "arm_cfg")),
             fingerprint: Some(arm_sibling),
         });
         srv.handle_request(&Request::Record {
+            request_id: None,
             entry: Box::new(entry("x86-box", "axpy", "n4096", "x86_cfg")),
             fingerprint: Some(fp()), // avx2 x86 — matches the *requester*
         });
@@ -1230,6 +1374,7 @@ mod tests {
     fn deploy_exact_hit_short_circuits_transfer() {
         let (srv, dir) = test_server("exact");
         srv.handle_request(&Request::Record {
+            request_id: None,
             entry: Box::new(entry("p1", "axpy", "n4096", "mine")),
             fingerprint: None,
         });
@@ -1344,6 +1489,7 @@ mod tests {
         // A record op may rewrite the shard's fingerprint (which the
         // cache stores for selection) — it must bust the entry.
         srv.handle_request(&Request::Record {
+            request_id: None,
             entry: Box::new(entry("p1", "axpy", "n4096", "whatever")),
             fingerprint: Some(fp()),
         });
@@ -1459,11 +1605,11 @@ mod tests {
         // ...heartbeats extend it, and completion settles it.
         let reply = srv.handle_request(&Request::TaskHeartbeat { lease_id });
         assert_eq!(reply.get("extended").and_then(Json::as_bool), Some(true));
-        let reply = srv.handle_request(&Request::TaskComplete { lease_id });
+        let reply = srv.handle_request(&Request::TaskComplete { lease_id, request_id: None });
         assert_eq!(reply.get("settled").and_then(Json::as_bool), Some(true));
         assert_eq!(reply.get("duplicate").and_then(Json::as_bool), Some(false));
         // Double-complete is idempotent and does NOT double-count.
-        let reply = srv.handle_request(&Request::TaskComplete { lease_id });
+        let reply = srv.handle_request(&Request::TaskComplete { lease_id, request_id: None });
         assert_eq!(reply.get("duplicate").and_then(Json::as_bool), Some(true));
         let stats = srv.stats();
         assert_eq!(stats.tasks_completed, 1);
@@ -1509,7 +1655,8 @@ mod tests {
         assert_eq!(stats.tasks_failed, 1);
         assert_eq!(stats.tasks_pending, 1);
         // Settling an unknown lease is an error reply, not a panic.
-        let reply = srv.handle_request(&Request::TaskComplete { lease_id: 999_999 });
+        let reply = srv
+            .handle_request(&Request::TaskComplete { lease_id: 999_999, request_id: None });
         assert_eq!(reply.get("ok").and_then(Json::as_bool), Some(false));
         std::fs::remove_dir_all(&dir).ok();
     }
@@ -1574,10 +1721,61 @@ mod tests {
             portfolio: Box::new(test_portfolio("gemm")),
             fingerprint: Some(fp()),
         });
-        let reply = srv.handle_request(&Request::TaskComplete { lease_id });
+        let reply = srv.handle_request(&Request::TaskComplete { lease_id, request_id: None });
         assert_eq!(reply.get("settled").and_then(Json::as_bool), Some(true));
         // Fresh build -> the next scan queues nothing.
         assert_eq!(srv.scan_once().unwrap(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn request_id_dedupes_replayed_records() {
+        let (srv, dir) = test_server("dedupe");
+        let rec = Request::Record {
+            request_id: Some("cli-1".into()),
+            entry: Box::new(entry("p1", "axpy", "n4096", "b256_u1")),
+            fingerprint: None,
+        };
+        let first = srv.handle_request(&rec);
+        assert_eq!(first.get("ok").and_then(Json::as_bool), Some(true));
+        // A retry with the same id replays the stored reply without
+        // re-executing the record.
+        let second = srv.handle_request(&rec);
+        assert_eq!(second, first);
+        let stats = srv.stats();
+        assert_eq!(stats.records, 1, "a replayed record must not re-execute");
+        assert_eq!(stats.dedup_hits, 1);
+        // A different id is a different request.
+        let other = Request::Record {
+            request_id: Some("cli-2".into()),
+            entry: Box::new(entry("p1", "axpy", "n8192", "b128_u2")),
+            fingerprint: None,
+        };
+        srv.handle_request(&other);
+        assert_eq!(srv.stats().records, 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn request_id_replays_task_complete_reply() {
+        let (srv, dir) = test_server("dedupe-complete");
+        let mut stale = entry("p1", "axpy", "n4096", "old");
+        stale.recorded_at = 1000;
+        srv.db().record(None, stale).unwrap();
+        assert_eq!(srv.scan_once().unwrap(), 1);
+        let reply = srv.handle_request(&Request::RetuneNext);
+        let lease_id = reply.get("lease_id").and_then(Json::as_u64).unwrap();
+        let req = Request::TaskComplete { lease_id, request_id: Some("w1-1".into()) };
+        let first = srv.handle_request(&req);
+        assert_eq!(first.get("duplicate").and_then(Json::as_bool), Some(false));
+        // A replayed complete (lost reply, same id) gets the SAME
+        // reply back — `duplicate:false`, not the scheduler's
+        // duplicate path — so the worker cannot tell its first
+        // attempt's reply was lost.
+        let second = srv.handle_request(&req);
+        assert_eq!(second, first);
+        assert_eq!(srv.stats().tasks_completed, 1);
+        assert_eq!(srv.stats().dedup_hits, 1);
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -50,6 +50,7 @@ use crate::coordinator::search::Exhaustive;
 use crate::coordinator::tuner::Tuner;
 use crate::runtime::{Registry, Runtime};
 use crate::service::client::{Client, LeasedTask};
+use crate::service::faults::{self, InjectionPoint};
 use crate::service::protocol::Request;
 use crate::service::scheduler::{TaskKind, TuningTask, DEFAULT_LEASE_TTL_S};
 
@@ -167,8 +168,27 @@ impl Worker {
             leased.lease_id,
             self.heartbeat_interval(granted_ttl_s),
         );
-        let outcome = self.execute(&leased);
+        // Execution runs under `catch_unwind`: a panicking kernel or
+        // sweep must not unwind past the report step — the daemon
+        // should learn "this task failed" *now* via `task-fail`, not
+        // a lease TTL later.  The heartbeat guard stops either way.
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            self.execute(&leased)
+        }))
+        .unwrap_or_else(|panic| {
+            Err(anyhow::anyhow!("task execution panicked: {}", panic_message(panic.as_ref())))
+        });
         drop(heartbeat);
+        if faults::hit(InjectionPoint::WorkerCrash) {
+            // Fault injection: die between executing and settling,
+            // like a worker killed mid-report.  Deliberately no
+            // `task-fail` either — only lease expiry may recover the
+            // task, which is exactly what the chaos suite asserts.
+            anyhow::bail!(
+                "fault-injected worker crash before settling lease {}",
+                leased.lease_id
+            );
+        }
         match outcome {
             Ok(detail) => {
                 self.client
@@ -198,9 +218,11 @@ impl Worker {
 
     /// Drain loop.  With `once`, waits up to `wait` for a task to
     /// appear, executes exactly one, and errors if it failed (or none
-    /// arrived) — the CI smoke shape.  Otherwise polls forever every
-    /// `poll`, tolerating transient daemon outages with backoff, and
-    /// returns once the daemon stays unreachable.
+    /// arrived) — the CI smoke shape; five consecutive transport
+    /// errors are fatal there.  Otherwise polls forever every `poll`
+    /// and **survives daemon outages indefinitely**: transport errors
+    /// back off (capped at ten polls) and the worker re-leases once
+    /// the daemon is back, so a daemon restart never kills the fleet.
     pub fn run(&self, once: bool, poll: Duration, wait: Duration) -> Result<WorkSummary> {
         let mut summary = WorkSummary::default();
         let started = Instant::now();
@@ -259,11 +281,15 @@ impl Worker {
                 }
                 Err(e) => {
                     consecutive_errors += 1;
-                    if consecutive_errors >= 5 {
+                    if once && consecutive_errors >= 5 {
                         return Err(e.context("daemon unreachable after 5 attempts"));
                     }
-                    eprintln!("[work] daemon error (retrying): {e:#}");
-                    std::thread::sleep(poll * consecutive_errors);
+                    let backoff = poll * consecutive_errors.min(10);
+                    eprintln!(
+                        "[work] daemon error (attempt {consecutive_errors}, retrying in \
+                         {backoff:?}): {e:#}"
+                    );
+                    std::thread::sleep(backoff);
                 }
             }
         }
@@ -288,10 +314,7 @@ impl Worker {
         let n = entries.len();
         for entry in entries {
             self.client
-                .call(&Request::Record {
-                    entry: Box::new(entry),
-                    fingerprint: Some(self.host.clone()),
-                })
+                .record(entry, Some(self.host.clone()))
                 .context("recording sweep entry")?;
         }
         Ok((sweep, n))
@@ -340,12 +363,21 @@ impl Worker {
         let speedup = entry.speedup();
         let best = entry.best_config_id.clone();
         self.client
-            .call(&Request::Record {
-                entry: Box::new(entry),
-                fingerprint: Some(outcome.platform.clone()),
-            })
+            .record(entry, Some(outcome.platform.clone()))
             .context("recording retune result")?;
         Ok(format!("retuned {}/{tag}: {best} ({speedup:.2}x)", task.kernel))
+    }
+}
+
+/// Best-effort text of a caught panic payload (panics carry `&str` or
+/// `String` in practice; anything else gets a placeholder).
+fn panic_message(panic: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = panic.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = panic.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
     }
 }
 
@@ -418,5 +450,15 @@ mod tests {
         // connection error, not a panic or a silent None.
         let worker = Worker::new(Client::tcp("127.0.0.1:1"), WorkerOpts::default());
         assert!(worker.run_once().is_err());
+    }
+
+    #[test]
+    fn panic_payloads_render_as_text() {
+        let caught =
+            std::panic::catch_unwind(|| panic!("kernel exploded")).expect_err("must panic");
+        assert_eq!(panic_message(caught.as_ref()), "kernel exploded");
+        let caught = std::panic::catch_unwind(|| panic!("{} exploded", "sweep"))
+            .expect_err("must panic");
+        assert_eq!(panic_message(caught.as_ref()), "sweep exploded");
     }
 }

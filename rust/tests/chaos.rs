@@ -1,0 +1,394 @@
+//! Chaos harness: the daemon, a drainer fleet, and record clients under
+//! a seeded fault schedule (`portatune::service::faults`).
+//!
+//! Every test asserts *end-state invariants* that must hold under any
+//! schedule the budgeted spec can produce — no task lost or settled
+//! twice, no acknowledged record lost, every client call eventually
+//! answered, same seed ⇒ same schedule.  `CHAOS_SEED` (decimal u64)
+//! overrides the seed; CI runs the fixed default plus one random seed
+//! per build, and every run prints the seed so a failing schedule can
+//! be replayed exactly.
+//!
+//! Budget analysis behind the spec below: a lease expiry charges an
+//! attempt toward `MAX_ATTEMPTS` (3), and two faults can orphan a
+//! lease — `worker.crash` (drainer abandons it) and `server.reply-drop`
+//! on a task-lease reply (lease created, worker never learns).  Their
+//! combined `max_hits` budget is 2, so no task can accumulate 3 charged
+//! attempts and be dropped, under *any* seed.  `shard.torn-write` fails
+//! before the rename, so a failed record attempt never commits and an
+//! app-level re-record (fresh request id) cannot duplicate.
+//!
+//! The installed fault plan is process-global, so every serving test
+//! holds `SERIAL` and clears the plan on exit (drop-safe on panic).
+
+use std::io::Read;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use portatune::coordinator::perfdb::{unix_now, DbEntry, ShardedDb};
+use portatune::coordinator::platform::Fingerprint;
+use portatune::service::faults::{self, FaultPlan, InjectionPoint};
+use portatune::service::{Client, Request, RetryPolicy, ServeOpts, Server};
+use portatune::util::json::Json;
+
+/// The drain test's schedule.  Probabilities are moderate so different
+/// seeds genuinely produce different schedules; budgets are small so
+/// the system quiesces (and see the attempt-budget analysis above).
+const DRAIN_SPEC: &str = "worker.crash:1.0:1,server.reply-drop:0.25:1,server.read-stall:0.25:3,\
+                          client.connect-drop:0.25:2,client.read-stall:0.25:3,\
+                          lease.settle-delay:0.25:3,shard.torn-write:1.0:2";
+
+fn chaos_seed() -> u64 {
+    match std::env::var("CHAOS_SEED") {
+        Ok(s) => s.trim().parse().expect("CHAOS_SEED must be a decimal u64"),
+        Err(_) => faults::DEFAULT_SEED,
+    }
+}
+
+/// Serializes serving tests (the fault plan and the daemon's TCP port
+/// churn are process-wide) and clears any installed plan on drop, so a
+/// panicking test cannot leak its faults into the next one.
+struct ChaosGuard {
+    _serial: std::sync::MutexGuard<'static, ()>,
+}
+
+impl Drop for ChaosGuard {
+    fn drop(&mut self) {
+        faults::clear();
+    }
+}
+
+fn chaos_guard() -> ChaosGuard {
+    static SERIAL: Mutex<()> = Mutex::new(());
+    ChaosGuard { _serial: SERIAL.lock().unwrap_or_else(std::sync::PoisonError::into_inner) }
+}
+
+fn tmp_dir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("portatune-chaos-{name}-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+fn fp() -> Fingerprint {
+    Fingerprint {
+        cpu_model: "Chaos CPU".into(),
+        num_cpus: 8,
+        simd: vec!["avx2".into(), "fma".into()],
+        cache_l1d_kb: 32,
+        cache_l2_kb: 1024,
+        cache_l3_kb: 8192,
+        os: "linux".into(),
+    }
+}
+
+fn entry(platform: &str, kernel: &str, tag: &str, id: &str, recorded_at: u64) -> DbEntry {
+    DbEntry {
+        platform_key: platform.into(),
+        kernel: kernel.into(),
+        tag: tag.into(),
+        best_params: [("block_size".to_string(), 512i64)].into_iter().collect(),
+        best_config_id: id.into(),
+        best_time_s: 1e-3,
+        baseline_time_s: 2e-3,
+        reference_time_s: 9e-4,
+        evaluations: 8,
+        strategy: "exhaustive".into(),
+        recorded_at,
+    }
+}
+
+/// Tight timeouts so a faulted call fails fast; four attempts out-last
+/// every bounded fault budget in [`DRAIN_SPEC`].
+fn chaos_policy() -> RetryPolicy {
+    RetryPolicy {
+        attempts: 4,
+        base_delay: Duration::from_millis(10),
+        max_delay: Duration::from_millis(100),
+        connect_timeout: Duration::from_secs(2),
+        io_timeout: Duration::from_secs(2),
+    }
+}
+
+fn start_server(
+    dir: &std::path::Path,
+    opts: ServeOpts,
+) -> (Arc<Server>, String, std::thread::JoinHandle<()>) {
+    let db = ShardedDb::open(dir).unwrap();
+    let server = Arc::new(Server::new(db, fp(), opts));
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let srv = Arc::clone(&server);
+    let handle = std::thread::spawn(move || srv.run_tcp(listener).unwrap());
+    (server, addr, handle)
+}
+
+fn lookup(platform: &str, kernel: &str, workload: &str) -> Request {
+    Request::Lookup {
+        platform: Some(platform.to_string()),
+        kernel: kernel.to_string(),
+        workload: workload.to_string(),
+    }
+}
+
+fn stat(client: &Client, field: &str) -> u64 {
+    let reply = client.call(&Request::Stats).unwrap();
+    reply.get("stats").and_then(|s| s.get(field)).and_then(Json::as_u64).unwrap()
+}
+
+/// The headline chaos run: a daemon with 10 queued re-tune tasks, two
+/// drainer threads, and two record threads, all under [`DRAIN_SPEC`].
+/// End state, regardless of seed: every task settles exactly once
+/// (crashed leases recover via expiry, lost acks dedupe via request
+/// id), and every acknowledged record is served back.
+#[test]
+fn faulted_drain_loses_no_tasks_and_no_records() {
+    let _guard = chaos_guard();
+    let seed = chaos_seed();
+    eprintln!("chaos drain seed: {seed} ({seed:#x})");
+
+    let dir = tmp_dir("drain");
+    let db = ShardedDb::open(&dir).unwrap();
+    for i in 0..5 {
+        db.record(None, entry("box-a", "axpy", &format!("n{i}"), "stale", 1000)).unwrap();
+        db.record(None, entry("box-b", "dot", &format!("n{i}"), "stale", 1000)).unwrap();
+    }
+    let (server, addr, serve_thread) = start_server(&dir, ServeOpts::default());
+    assert_eq!(server.scan_once().unwrap(), 10, "10 stale frontier entries queue 10 re-tunes");
+
+    faults::install(FaultPlan::from_spec(DRAIN_SPEC, seed).unwrap());
+
+    // Drainers: lease → (maybe crash) → complete, until all 10 settle.
+    // A crash abandons the lease; only its 2 s TTL recovers the task.
+    let completed = Arc::new(AtomicU64::new(0));
+    let identities = Arc::new(Mutex::new(Vec::<String>::new()));
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let mut drainers = Vec::new();
+    for _ in 0..2 {
+        let addr = addr.clone();
+        let completed = Arc::clone(&completed);
+        let identities = Arc::clone(&identities);
+        drainers.push(std::thread::spawn(move || {
+            let client = Client::tcp(addr).with_policy(chaos_policy());
+            while completed.load(Ordering::SeqCst) < 10 && Instant::now() < deadline {
+                let leased = match client.lease_task(None, None, Some(2)) {
+                    Ok(Some(leased)) => leased,
+                    _ => {
+                        std::thread::sleep(Duration::from_millis(100));
+                        continue;
+                    }
+                };
+                if faults::hit(InjectionPoint::WorkerCrash) {
+                    continue; // crash before settling; expiry requeues
+                }
+                match client.complete_task(leased.lease_id) {
+                    Ok(true) => {
+                        let task = &leased.task;
+                        let id =
+                            format!("{}/{}/{:?}", task.platform_key, task.kernel, task.tag);
+                        identities.lock().unwrap().push(id);
+                        completed.fetch_add(1, Ordering::SeqCst);
+                    }
+                    Ok(false) => {} // someone else settled it; not ours
+                    Err(_) => {}    // ack lost beyond retries; expiry requeues
+                }
+            }
+        }));
+    }
+
+    // Recorders: 10 unique entries each.  A torn-write fault surfaces
+    // as a definitive daemon error with nothing committed, so the
+    // app-level retry (fresh request id per attempt) is dedupe-safe.
+    let mut recorders = Vec::new();
+    for t in 0..2u64 {
+        let addr = addr.clone();
+        recorders.push(std::thread::spawn(move || {
+            let client = Client::tcp(addr).with_policy(chaos_policy());
+            for i in 0..10 {
+                let e = entry(
+                    "rec-box",
+                    "axpy",
+                    &format!("t{t}n{i}"),
+                    &format!("cfg{t}_{i}"),
+                    unix_now(),
+                );
+                let committed = (0..10).any(|_| {
+                    if client.record(e.clone(), None).is_ok() {
+                        return true;
+                    }
+                    std::thread::sleep(Duration::from_millis(50));
+                    false
+                });
+                assert!(committed, "record t{t}n{i} never succeeded");
+            }
+        }));
+    }
+    for h in recorders {
+        h.join().unwrap();
+    }
+    for h in drainers {
+        h.join().unwrap();
+    }
+
+    // Verification runs fault-free: the faulted phase is over.
+    faults::clear();
+    assert_eq!(completed.load(Ordering::SeqCst), 10, "every task must settle exactly once");
+    let mut ids = identities.lock().unwrap().clone();
+    ids.sort();
+    let distinct = ids.len();
+    ids.dedup();
+    assert_eq!(ids.len(), distinct, "a task settled twice: {ids:?}");
+    assert_eq!(distinct, 10);
+
+    let client = Client::tcp(addr);
+    assert_eq!(stat(&client, "tasks_completed"), 10, "daemon ledger disagrees with drainers");
+    for t in 0..2u64 {
+        for i in 0..10 {
+            let reply = client.call(&lookup("rec-box", "axpy", &format!("t{t}n{i}"))).unwrap();
+            assert_eq!(
+                reply.get("found").and_then(Json::as_bool),
+                Some(true),
+                "acknowledged record t{t}n{i} was lost"
+            );
+        }
+    }
+    let _ = client.call(&Request::Shutdown);
+    serve_thread.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The replayability contract: one seed, one schedule — across every
+/// injection point, under the drain spec itself.
+#[test]
+fn same_seed_replays_the_same_schedule() {
+    let seed = chaos_seed();
+    eprintln!("chaos schedule seed: {seed} ({seed:#x})");
+    let a = FaultPlan::from_spec(DRAIN_SPEC, seed).unwrap();
+    let b = FaultPlan::from_spec(DRAIN_SPEC, seed).unwrap();
+    for n in 0..500 {
+        for p in faults::ALL_POINTS {
+            assert_eq!(
+                a.decide(p),
+                b.decide(p),
+                "schedules diverged at occurrence {n} of {}",
+                p.as_str()
+            );
+        }
+    }
+    // And a different seed is a different schedule (unbounded point, so
+    // budget exhaustion cannot mask the divergence).
+    let c = FaultPlan::from_spec("server.reply-drop:0.5", seed).unwrap();
+    let d = FaultPlan::from_spec("server.reply-drop:0.5", seed ^ 0x9e37_79b9).unwrap();
+    let agreed = (0..512)
+        .filter(|_| {
+            c.decide(InjectionPoint::ServerReplyDrop) == d.decide(InjectionPoint::ServerReplyDrop)
+        })
+        .count();
+    assert!(agreed < 512, "different seeds produced identical schedules");
+}
+
+/// Shard corruption behind a live daemon: the poisoned shard degrades
+/// to a lookup miss and a `.corrupt` quarantine — never an error or a
+/// panic — and the next record rebuilds a servable shard.
+#[test]
+fn corrupt_shard_quarantines_and_recovers_over_the_wire() {
+    let _guard = chaos_guard();
+    let dir = tmp_dir("corrupt");
+    let (_server, addr, serve_thread) = start_server(&dir, ServeOpts::default());
+    let client = Client::tcp(addr);
+    client.record(entry("corrupt-box", "axpy", "n4096", "good", unix_now()), None).unwrap();
+
+    // Corrupt the shard on disk behind the daemon's back.  The shard
+    // path hashing is a store implementation detail, so find the file
+    // by suffix.
+    let shard_file = std::fs::read_dir(&dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .find(|p| {
+            p.file_name().and_then(|n| n.to_str()).is_some_and(|n| n.ends_with(".shard.json"))
+        })
+        .expect("the record must have published a shard file");
+    std::fs::write(&shard_file, "{\"schema\": 2, \"entries\": [{\"platform_k").unwrap();
+
+    let reply = client.call(&lookup("corrupt-box", "axpy", "n4096")).unwrap();
+    assert_eq!(reply.get("found").and_then(Json::as_bool), Some(false));
+    let quarantined = std::path::PathBuf::from(format!("{}.corrupt", shard_file.display()));
+    assert!(quarantined.exists(), "torn shard must be quarantined, not deleted");
+    assert!(!shard_file.exists(), "torn shard must be moved aside");
+
+    client.record(entry("corrupt-box", "axpy", "n4096", "fresh", unix_now()), None).unwrap();
+    let reply = client.call(&lookup("corrupt-box", "axpy", "n4096")).unwrap();
+    assert_eq!(reply.get("found").and_then(Json::as_bool), Some(true));
+    assert_eq!(
+        reply.get("entry").and_then(|e| e.get("best_config_id")).and_then(Json::as_str),
+        Some("fresh")
+    );
+
+    let _ = client.call(&Request::Shutdown);
+    serve_thread.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Past `max_conns` in-flight connections the daemon sheds instead of
+/// queueing: one `overloaded` reply (transient to the client's retry
+/// classifier), then the socket closes; capacity frees as holders
+/// disconnect and the shed shows up in the stats.
+#[test]
+fn connection_cap_sheds_with_a_retryable_overloaded_reply() {
+    let _guard = chaos_guard();
+    let dir = tmp_dir("cap");
+    let opts = ServeOpts { max_conns: 2, ..ServeOpts::default() };
+    let (_server, addr, serve_thread) = start_server(&dir, opts);
+
+    let hold_a = std::net::TcpStream::connect(&addr).unwrap();
+    let hold_b = std::net::TcpStream::connect(&addr).unwrap();
+    std::thread::sleep(Duration::from_millis(300)); // let both get accepted
+
+    let one_shot =
+        Client::tcp(addr.clone()).with_policy(RetryPolicy { attempts: 1, ..chaos_policy() });
+    let err = one_shot.call(&Request::Ping).unwrap_err();
+    assert!(format!("{err:#}").contains("overloaded"), "want a shed reply, got: {err:#}");
+
+    drop(hold_a);
+    drop(hold_b);
+    std::thread::sleep(Duration::from_millis(300)); // let the handlers drain
+    let client = Client::tcp(addr);
+    assert_eq!(
+        client.call(&Request::Ping).unwrap().get("ok").and_then(Json::as_bool),
+        Some(true),
+        "capacity must free once holders disconnect"
+    );
+    assert!(stat(&client, "conns_shed") >= 1);
+
+    let _ = client.call(&Request::Shutdown);
+    serve_thread.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A connection that never sends a request is closed at the idle
+/// deadline (a stalled peer cannot pin a connection slot forever).
+#[test]
+fn idle_connections_are_reaped_at_the_deadline() {
+    let _guard = chaos_guard();
+    let dir = tmp_dir("idle");
+    let opts = ServeOpts { conn_idle_s: 1, ..ServeOpts::default() };
+    let (_server, addr, serve_thread) = start_server(&dir, opts);
+
+    let mut idle = std::net::TcpStream::connect(&addr).unwrap();
+    idle.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let started = Instant::now();
+    let mut buf = [0u8; 16];
+    let n = idle.read(&mut buf).unwrap();
+    assert_eq!(n, 0, "daemon must close the idle connection cleanly (EOF)");
+    assert!(
+        started.elapsed() >= Duration::from_millis(900),
+        "closed before the idle deadline: {:?}",
+        started.elapsed()
+    );
+
+    let client = Client::tcp(addr);
+    assert!(stat(&client, "conns_closed_idle") >= 1);
+    let _ = client.call(&Request::Shutdown);
+    serve_thread.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -139,6 +139,7 @@ fn daemon_record_lookup_deploy_over_tcp() {
     // Record an entry for a "remote" platform, fingerprint attached.
     let reply = client
         .call(&Request::Record {
+            request_id: None,
             entry: Box::new(entry("remote-box", "axpy", "n4096", "b512_u1", unix_now())),
             fingerprint: Some(fp(1024, &["avx2", "fma"])),
         })
