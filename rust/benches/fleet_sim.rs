@@ -1,0 +1,158 @@
+//! Fleet-scale robustness gate: the deterministic simulation from
+//! `portatune::sim` run at CI size, twice, with hard acceptance bars.
+//!
+//! One run drives the real task queue, sharded store, and transfer
+//! ranking for a 1000-platform fleet drained by 8 simulated workers
+//! under crash churn, fingerprint drift, and Poisson lookup traffic —
+//! all on a virtual clock seeded from `FLEET_SIM_SEED` (default 4242).
+//! The second run repeats the first seed and must reproduce it *bit
+//! for bit*: same report, same audit-log bytes.  Gates:
+//!
+//! * the initial backlog converges (every initially-stale identity
+//!   refreshed) before the run ends;
+//! * duplicate work — executions finished after someone else already
+//!   settled the task — stays ≤ 1%;
+//! * staleness-at-serve percentiles are ordered and bounded by the
+//!   simulated horizon;
+//! * the run's audit log passes hash-chain verification (enforced
+//!   inside [`portatune::sim::run`] itself) and the repeat run's log
+//!   is byte-identical.
+//!
+//! Any violation prints `FAIL: ...` and exits 1.  Machine-readable
+//! tail: `JSON: {...}` (the first run's report).
+//!
+//! Env knobs: `BENCH_QUICK=1` shrinks to the smoke fleet;
+//! `FLEET_SIM_SEED=N` picks the seed; `FLEET_SIM_DIR=path` keeps the
+//! first run's shards and audit log there (instead of a temp dir) so
+//! CI can run `portatune audit verify` on the evidence afterwards.
+//!
+//! Run: `cargo bench --bench fleet_sim`
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use portatune::sim::{run, SimConfig};
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let seed: u64 = std::env::var("FLEET_SIM_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4242);
+    let (keep_dir, root) = match std::env::var("FLEET_SIM_DIR") {
+        Ok(dir) => (true, PathBuf::from(dir)),
+        Err(_) => (
+            false,
+            std::env::temp_dir().join(format!("portatune-fleetsim-{}", std::process::id())),
+        ),
+    };
+    std::fs::create_dir_all(&root)?;
+
+    let cfg = |sub: &str| {
+        let base = root.join(sub);
+        if quick {
+            SimConfig::smoke(&base, seed)
+        } else {
+            SimConfig::fleet(&base, seed)
+        }
+    };
+
+    let cfg_a = cfg("run-a");
+    println!(
+        "fleet-sim bench — {} platforms, {} workers, {} sim-seconds, seed {} ({})",
+        cfg_a.platforms,
+        cfg_a.workers,
+        cfg_a.duration_s,
+        seed,
+        if quick { "quick" } else { "full" },
+    );
+
+    let t0 = Instant::now();
+    let report = run(&cfg_a)?;
+    let wall_a = t0.elapsed().as_secs_f64();
+    println!(
+        "run A: {:.1}s wall — {} enqueued, {} completions, {} duplicates ({:.3}%), \
+         convergence {:?}, staleness p50/p95/p99 {}/{}/{}s, {} audit entries",
+        wall_a,
+        report.tasks_enqueued,
+        report.completions,
+        report.duplicates,
+        report.duplicate_rate * 100.0,
+        report.convergence_s,
+        report.staleness_p50_s,
+        report.staleness_p95_s,
+        report.staleness_p99_s,
+        report.audit_entries,
+    );
+
+    // Repeat the seed: the whole decision sequence must reproduce.
+    let cfg_b = cfg("run-b");
+    let t1 = Instant::now();
+    let repeat = run(&cfg_b)?;
+    println!("run B (same seed): {:.1}s wall", t1.elapsed().as_secs_f64());
+
+    let mut failed = false;
+    let mut fail = |msg: String| {
+        println!("FAIL: {msg}");
+        failed = true;
+    };
+
+    if repeat != report {
+        fail(format!("same seed produced a different report:\n  A: {report:?}\n  B: {repeat:?}"));
+    }
+    let bytes_a = std::fs::read(&cfg_a.audit_path)?;
+    let bytes_b = std::fs::read(&cfg_b.audit_path)?;
+    if bytes_a != bytes_b {
+        fail(format!(
+            "same seed produced different audit logs ({} vs {} bytes)",
+            bytes_a.len(),
+            bytes_b.len()
+        ));
+    }
+    match report.convergence_s {
+        Some(s) => println!("converged in {s} sim-seconds"),
+        None => fail("initial backlog never converged within the run".to_string()),
+    }
+    if report.duplicate_rate > 0.01 {
+        fail(format!(
+            "duplicate-work rate {:.4} exceeds the 1% bar ({} of {} executions)",
+            report.duplicate_rate, report.duplicates, report.executions
+        ));
+    }
+    if report.staleness_p50_s > report.staleness_p95_s
+        || report.staleness_p95_s > report.staleness_p99_s
+    {
+        fail(format!(
+            "staleness percentiles out of order: p50 {} p95 {} p99 {}",
+            report.staleness_p50_s, report.staleness_p95_s, report.staleness_p99_s
+        ));
+    }
+    let horizon = cfg_a.ttl_s + cfg_a.duration_s;
+    if report.staleness_p99_s > horizon {
+        fail(format!(
+            "staleness p99 {}s exceeds the simulated horizon {}s",
+            report.staleness_p99_s, horizon
+        ));
+    }
+    if report.serves == 0 || report.exact_hits == 0 {
+        fail(format!(
+            "traffic produced no serves ({}) or no exact hits ({})",
+            report.serves, report.exact_hits
+        ));
+    }
+
+    // Run B was only evidence for the determinism gate; run A's dir is
+    // what CI verifies with `portatune audit verify`.
+    std::fs::remove_dir_all(root.join("run-b")).ok();
+    if keep_dir {
+        println!("kept evidence: {} (audit log + shards)", cfg_a.audit_path.display());
+    } else {
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    println!("JSON: {}", report.to_json().compact());
+    if failed {
+        std::process::exit(1);
+    }
+    Ok(())
+}

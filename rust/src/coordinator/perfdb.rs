@@ -39,6 +39,7 @@
 use std::collections::BTreeMap;
 use std::io::Write as _;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
@@ -398,6 +399,61 @@ const STALE_LOCK: Duration = Duration::from_secs(10);
 /// How long `acquire` waits before giving up.
 const LOCK_TIMEOUT: Duration = Duration::from_secs(10);
 
+/// How many timestamped `.corrupt.<ts>` quarantine files are kept per
+/// shard; older ones are pruned so a shard corrupted in a crash loop
+/// cannot fill the disk with corpses.
+const MAX_QUARANTINES_PER_SHARD: usize = 3;
+
+/// Process-wide count of abandoned lock files removed — by the
+/// in-band steal path in [`FileLock::acquire`] and by the periodic
+/// sweep ([`reap_stale_locks`]).  Global because lock stealing happens
+/// in free functions with no handle to thread a counter through;
+/// surfaced as `stale_locks_reaped` in the daemon's `stats` op.
+static STALE_LOCKS_REAPED: AtomicU64 = AtomicU64::new(0);
+
+/// Total abandoned lock files this process has reaped or stolen.
+pub fn stale_locks_reaped() -> u64 {
+    STALE_LOCKS_REAPED.load(Ordering::Relaxed)
+}
+
+/// Remove lock files under `dir` whose mtime is older than `ttl` — the
+/// corpses of writers that died between `create_new` and `Drop`.  The
+/// in-band steal in [`FileLock::acquire`] already unblocks *contended*
+/// locks; this sweep is for the uncontended ones, which otherwise sit
+/// forever and cost every future writer a [`STALE_LOCK`] wait on first
+/// contact.  Removal goes through the same atomic rename-aside dance
+/// as stealing, so a racing live writer's fresh lock is never deleted.
+pub fn reap_stale_locks(dir: &Path, ttl: Duration) -> Result<usize> {
+    let mut reaped = 0;
+    for entry in std::fs::read_dir(dir)
+        .with_context(|| format!("listing {} for stale locks", dir.display()))?
+    {
+        let path = entry?.path();
+        let is_lock = path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .is_some_and(|n| n.ends_with(".lock"));
+        if !is_lock {
+            continue;
+        }
+        let stale = std::fs::metadata(&path)
+            .and_then(|m| m.modified())
+            .ok()
+            .and_then(|t| t.elapsed().ok())
+            .is_some_and(|age| age > ttl);
+        if !stale {
+            continue;
+        }
+        let aside = path.with_extension(format!("stale.{}", std::process::id()));
+        if std::fs::rename(&path, &aside).is_ok() {
+            let _ = std::fs::remove_file(&aside);
+            STALE_LOCKS_REAPED.fetch_add(1, Ordering::Relaxed);
+            reaped += 1;
+        }
+    }
+    Ok(reaped)
+}
+
 impl FileLock {
     /// The lock file's content: the owner's token.  Checked by `Drop`
     /// so a holder whose lock was stolen (after `STALE_LOCK`) cannot
@@ -435,6 +491,7 @@ impl FileLock {
                         ));
                         if std::fs::rename(&path, &aside).is_ok() {
                             let _ = std::fs::remove_file(&aside);
+                            STALE_LOCKS_REAPED.fetch_add(1, Ordering::Relaxed);
                         }
                         continue;
                     }
@@ -675,25 +732,77 @@ fn read_or_rebuild(path: &Path, platform_key: &str) -> Result<Shard> {
     }
 }
 
-/// Move a corrupt shard file aside to `<shard>.corrupt` so reads
-/// degrade to a miss and the next write rebuilds from the merge path.
-/// Best-effort: a failed rename leaves the file in place (the caller
-/// already treats it as absent either way).
+/// Move a corrupt shard file aside to `<shard>.corrupt.<unix_ts>` so
+/// reads degrade to a miss and the next write rebuilds from the merge
+/// path.  Timestamped names preserve forensic history when the same
+/// shard corrupts repeatedly (the old single `.corrupt` name silently
+/// overwrote the previous corpse); the per-shard corpse count is
+/// bounded at [`MAX_QUARANTINES_PER_SHARD`] — oldest pruned first — so
+/// a crash loop cannot fill the disk.  Best-effort: a failed rename
+/// leaves the file in place (the caller already treats it as absent
+/// either way).
 fn quarantine(path: &Path, err: &anyhow::Error) {
-    let mut target = path.as_os_str().to_os_string();
-    target.push(".corrupt");
-    let target = PathBuf::from(target);
+    let ts = unix_now();
+    let mut target = PathBuf::from({
+        let mut s = path.as_os_str().to_os_string();
+        s.push(format!(".corrupt.{ts}"));
+        s
+    });
+    // Same-second repeat corruption: suffix a counter rather than
+    // overwrite the earlier corpse.
+    let mut n = 0;
+    while target.exists() {
+        n += 1;
+        let mut s = path.as_os_str().to_os_string();
+        s.push(format!(".corrupt.{ts}-{n}"));
+        target = PathBuf::from(s);
+    }
     match std::fs::rename(path, &target) {
-        Ok(()) => eprintln!(
-            "warning: quarantined corrupt shard {} -> {} ({err:#})",
-            path.display(),
-            target.display()
-        ),
+        Ok(()) => {
+            eprintln!(
+                "warning: quarantined corrupt shard {} -> {} ({err:#})",
+                path.display(),
+                target.display()
+            );
+            prune_quarantines(path);
+        }
         Err(rename_err) => eprintln!(
             "warning: corrupt shard {} could not be quarantined ({rename_err}); \
              original error: {err:#}",
             path.display()
         ),
+    }
+}
+
+/// Keep only the newest [`MAX_QUARANTINES_PER_SHARD`] quarantine files
+/// for the shard at `path` (names sort chronologically because the
+/// suffix is a unix timestamp; a same-second `-n` counter suffix sorts
+/// after the bare name, preserving arrival order).
+fn prune_quarantines(path: &Path) {
+    let (Some(dir), Some(name)) = (path.parent(), path.file_name().and_then(|n| n.to_str()))
+    else {
+        return;
+    };
+    let prefix = format!("{name}.corrupt.");
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return;
+    };
+    let mut corpses: Vec<PathBuf> = entries
+        .flatten()
+        .map(|e| e.path())
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with(&prefix))
+        })
+        .collect();
+    if corpses.len() <= MAX_QUARANTINES_PER_SHARD {
+        return;
+    }
+    corpses.sort();
+    let excess = corpses.len() - MAX_QUARANTINES_PER_SHARD;
+    for old in &corpses[..excess] {
+        let _ = std::fs::remove_file(old);
     }
 }
 
@@ -888,6 +997,32 @@ impl ShardedDb {
         for (key, entries) in by_platform {
             n += entries.len();
             self.record_many(&key, None, entries)?;
+        }
+        Ok(n)
+    }
+
+    /// Sweep the shard directory for lock files abandoned past
+    /// [`STALE_LOCK`] (a writer that died between locking and
+    /// committing) and remove them.  Returns how many were reaped; the
+    /// running total is exported via [`stale_locks_reaped`].
+    pub fn reap_stale_locks(&self) -> Result<usize> {
+        reap_stale_locks(&self.dir, STALE_LOCK)
+    }
+
+    /// How many quarantined (`.corrupt.<ts>`) shard corpses currently
+    /// sit in the store — a live gauge for the `stats` op, so an
+    /// operator notices repeated corruption without grepping logs.
+    pub fn quarantined_count(&self) -> Result<u64> {
+        let mut n = 0;
+        for entry in std::fs::read_dir(&self.dir).context("listing shard dir")? {
+            let path = entry?.path();
+            if path
+                .file_name()
+                .and_then(|f| f.to_str())
+                .is_some_and(|f| f.contains(".corrupt."))
+            {
+                n += 1;
+            }
         }
         Ok(n)
     }
@@ -1259,14 +1394,14 @@ mod tests {
             let text = std::fs::read_to_string(&path).unwrap();
             std::fs::write(&path, corrupt(&text)).unwrap();
 
-            // Reads degrade to a miss and quarantine the bad file.
+            // Reads degrade to a miss and quarantine the bad file
+            // under a timestamped `.corrupt.<ts>` name.
             assert!(db.load("p1").unwrap().is_none(), "{name}: load must miss, not panic");
-            let corpse = PathBuf::from({
-                let mut s = path.as_os_str().to_os_string();
-                s.push(".corrupt");
-                s
-            });
-            assert!(corpse.exists(), "{name}: corrupt file must be quarantined");
+            assert_eq!(
+                db.quarantined_count().unwrap(),
+                1,
+                "{name}: corrupt file must be quarantined"
+            );
             assert!(!path.exists(), "{name}: the bad file is moved, not copied");
             assert!(db.all_shards().unwrap().is_empty());
 
@@ -1317,6 +1452,52 @@ mod tests {
         assert!(!lock_path.exists(), "lock is released on drop");
         // Re-acquirable after release.
         let _again = FileLock::acquire(lock_path.clone()).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stale_locks_are_reaped_but_fresh_ones_survive() {
+        let dir = tmp_dir("reap");
+        let db = ShardedDb::open(&dir).unwrap();
+        // A pre-planted corpse: a writer that died holding the lock.
+        let stale = dir.join("dead-writer.shard.lock");
+        std::fs::write(&stale, "99999:ThreadId(99)").unwrap();
+        let backdated = std::time::SystemTime::now() - Duration::from_secs(3600);
+        std::fs::OpenOptions::new()
+            .write(true)
+            .open(&stale)
+            .unwrap()
+            .set_modified(backdated)
+            .unwrap();
+        // A live writer's fresh lock must not be touched.
+        let fresh = dir.join("live-writer.shard.lock");
+        std::fs::write(&fresh, "live").unwrap();
+        let before = stale_locks_reaped();
+        assert_eq!(db.reap_stale_locks().unwrap(), 1);
+        assert!(!stale.exists(), "abandoned lock must be removed");
+        assert!(fresh.exists(), "fresh lock must survive the sweep");
+        assert!(stale_locks_reaped() >= before + 1, "reap must bump the counter");
+        // Idempotent: nothing left to reap.
+        assert_eq!(db.reap_stale_locks().unwrap(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn repeated_quarantines_are_timestamped_and_bounded() {
+        let dir = tmp_dir("qbound");
+        let db = ShardedDb::open(&dir).unwrap();
+        for round in 0..(MAX_QUARANTINES_PER_SHARD + 3) {
+            db.record(None, entry("p1", "axpy", "n4096", "cfg", 1.1)).unwrap();
+            let path = db.shard_path("p1");
+            std::fs::write(&path, format!("{{garbage round {round}")).unwrap();
+            assert!(db.load("p1").unwrap().is_none());
+        }
+        let corpses = db.quarantined_count().unwrap();
+        assert!(
+            corpses as usize <= MAX_QUARANTINES_PER_SHARD,
+            "quarantine count {corpses} exceeds the bound"
+        );
+        assert!(corpses >= 1, "at least the newest corpse is kept");
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -34,6 +34,7 @@ pub mod coordinator;
 pub mod report;
 pub mod runtime;
 pub mod service;
+pub mod sim;
 pub mod util;
 pub mod worker;
 pub mod workload;

@@ -18,6 +18,7 @@
 //! portatune query --op deploy ...         ask a running daemon
 //! portatune work                          fleet worker: lease → execute → report
 //! portatune db-migrate                    import a v1 perfdb.json into shards
+//! portatune audit verify|replay           check / re-derive the decision log
 //! ```
 //!
 //! Global flags: `--artifacts DIR` (default `artifacts`), `--db PATH`
@@ -40,6 +41,7 @@ use portatune::coordinator::search::{
 use portatune::coordinator::tuner::Tuner;
 use portatune::report::{Fig1Report, Fig1Row, Table};
 use portatune::runtime::{Registry, Runtime};
+use portatune::service::audit::{read_verified, verify_log, AuditLog};
 use portatune::service::{
     faults, transfer, Client, Request, ServeOpts, Server, DEFAULT_LEASE_TTL_S,
 };
@@ -102,6 +104,9 @@ const USAGE: &str = "usage: portatune <subcommand> [flags]
                       [--faults SPEC] [--fault-seed N]  deterministic fault
                         injection, e.g. --faults server.reply-drop:0.2:3
                         (also via PORTATUNE_FAULTS / PORTATUNE_FAULT_SEED)
+                      [--audit PATH]  append every consequential decision
+                        (lease/complete/fail/requeue, record, serve reason)
+                        to a hash-chained tamper-evident log at PATH
                       imports --db into the shard store at startup when present
   query             ask a running daemon (one JSON reply line on stdout)
                       e.g. portatune query --op lookup --kernel axpy --workload n4096
@@ -124,6 +129,16 @@ const USAGE: &str = "usage: portatune <subcommand> [flags]
                       [--seed N] [--batch N] [--k N] [--target F]
                       [--faults SPEC] [--fault-seed N]  deterministic fault
                         injection (same spec grammar as serve)
+                      [--audit PATH]  keep a worker-side hash-chained log of
+                        leased/completed/failed tasks at PATH
+  audit             inspect a hash-chained audit log written via --audit
+                      verify: walk the chain; exit 0 if intact, non-zero
+                              with the first bad entry index on tampering
+                              or truncation
+                        e.g. portatune audit verify audit.log
+                      replay: re-print the decision sequence in order
+                        e.g. portatune audit replay audit.log --platform KEY
+                        flags: [--platform KEY]  only that platform's entries
   db-migrate        import a v1 --db file into --shards (v2 shard files)
                       e.g. portatune db-migrate --db perfdb.json --shards perfdb.d
 
@@ -204,6 +219,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("serve") => cmd_serve(args, &artifacts, &db_path, &shards_dir),
         Some("query") => cmd_query(args),
         Some("work") => cmd_work(args, &artifacts),
+        Some("audit") => cmd_audit(args),
         Some("db-migrate") => cmd_db_migrate(args, &db_path, &shards_dir),
         _ => Err(anyhow::anyhow!("missing or unknown subcommand")),
     }
@@ -222,6 +238,7 @@ fn cmd_serve(args: &Args, artifacts: &Path, db_path: &Path, shards_dir: &Path) -
     let defaults = ServeOpts::default();
     let max_conns = args.get_parsed::<usize>("max-conns", defaults.max_conns)?;
     let conn_idle_s = args.get_parsed::<u64>("conn-idle", defaults.conn_idle_s)?;
+    let audit_path = args.get("audit").map(PathBuf::from);
     install_faults(args)?;
     args.finish()?;
 
@@ -240,6 +257,12 @@ fn cmd_serve(args: &Args, artifacts: &Path, db_path: &Path, shards_dir: &Path) -
         conn_idle_s,
     };
     let server = Arc::new(Server::new(db, host, opts));
+    if let Some(path) = audit_path {
+        let log = AuditLog::open(&path)
+            .with_context(|| format!("opening audit log {}", path.display()))?;
+        println!("audit log: {}", path.display());
+        server.enable_audit(Arc::new(log));
+    }
     let _scan =
         Arc::clone(&server).spawn_scan(std::time::Duration::from_secs(scan_secs.max(1)));
     if retune {
@@ -351,6 +374,7 @@ fn cmd_work(args: &Args, artifacts: &Path) -> Result<()> {
     let batch = args.get_parsed::<usize>("batch", 4)?;
     let k_max = args.get_parsed::<usize>("k", 4)?;
     let target = args.get_parsed::<f64>("target", 0.9)?;
+    let audit = args.get("audit").map(PathBuf::from);
     install_faults(args)?;
     args.finish()?;
 
@@ -373,6 +397,7 @@ fn cmd_work(args: &Args, artifacts: &Path) -> Result<()> {
             any_platform,
             k_max,
             target,
+            audit,
         },
     );
     println!(
@@ -389,6 +414,79 @@ fn cmd_work(args: &Args, artifacts: &Path) -> Result<()> {
         "worker done: {} task(s) completed, {} failed",
         summary.completed, summary.failed
     );
+    Ok(())
+}
+
+/// `audit verify` / `audit replay` over a hash-chained decision log.
+fn cmd_audit(args: &Args) -> Result<()> {
+    let action = args.positional.get(1).map(String::as_str);
+    let log = args
+        .positional
+        .get(2)
+        .map(PathBuf::from)
+        .ok_or_else(|| {
+            anyhow::anyhow!("audit requires a log path, e.g. portatune audit verify audit.log")
+        })?;
+    match action {
+        Some("verify") => {
+            args.finish()?;
+            cmd_audit_verify(&log)
+        }
+        Some("replay") => cmd_audit_replay(args, &log),
+        other => Err(anyhow::anyhow!(
+            "audit requires an action (verify|replay), got {other:?}"
+        )),
+    }
+}
+
+/// Walk the chain; exit 0 when intact, exit 2 with the first bad entry
+/// index on any tampering or truncation (distinct from exit 1, the
+/// generic CLI error path, so scripts can tell "bad log" from "bad
+/// invocation").
+fn cmd_audit_verify(log: &Path) -> Result<()> {
+    match verify_log(log) {
+        Ok(report) => {
+            let head = match (report.head_present, report.head_lag) {
+                (false, _) => ", no head sidecar".to_string(),
+                (true, 0) => ", head current".to_string(),
+                (true, lag) => format!(", head lags by {lag} entr(ies)"),
+            };
+            println!(
+                "ok: {} entr(ies), chain intact{}{head}",
+                report.entries,
+                if report.torn_tail { ", torn tail discarded" } else { "" },
+            );
+            Ok(())
+        }
+        Err(e) => {
+            eprintln!("audit verify FAILED: {e}");
+            if let Some(index) = e.index() {
+                eprintln!("first bad entry index: {index}");
+            }
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Re-derive the decision sequence from a verified log, optionally
+/// filtered to one platform's entries.
+fn cmd_audit_replay(args: &Args, log: &Path) -> Result<()> {
+    let platform = args.get("platform").map(str::to_string);
+    args.finish()?;
+    let entries = read_verified(log)
+        .map_err(|e| anyhow::anyhow!("audit log failed verification: {e}"))?;
+    let total = entries.len();
+    let mut shown = 0usize;
+    for entry in entries {
+        if let Some(want) = &platform {
+            if entry.event.platform() != Some(want.as_str()) {
+                continue;
+            }
+        }
+        println!("#{} t={} {}", entry.seq, entry.ts, entry.event.describe());
+        shown += 1;
+    }
+    println!("({shown} of {total} entr(ies) shown)");
     Ok(())
 }
 

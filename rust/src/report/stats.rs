@@ -99,6 +99,8 @@ pub fn serve_stats_json(stats: &ServeStats) -> Json {
             ),
         ),
         ("lru_len".to_string(), int(stats.lru_len)),
+        ("stale_locks_reaped".to_string(), int(stats.stale_locks_reaped)),
+        ("shards_quarantined".to_string(), int(stats.shards_quarantined)),
     ]
     .into_iter()
     .collect();
@@ -170,6 +172,8 @@ mod tests {
             .into_iter()
             .collect(),
             lru_len: 12,
+            stale_locks_reaped: 2,
+            shards_quarantined: 1,
         };
         let parsed = json::parse(&serve_stats_json(&stats).compact()).unwrap();
         assert_eq!(parsed.get("lookups").and_then(Json::as_u64), Some(100));
@@ -193,5 +197,7 @@ mod tests {
         assert_eq!(parsed.get("dedup_hits").and_then(Json::as_u64), Some(2));
         assert_eq!(parsed.get("conns_shed").and_then(Json::as_u64), Some(1));
         assert_eq!(parsed.get("conns_closed_idle").and_then(Json::as_u64), Some(1));
+        assert_eq!(parsed.get("stale_locks_reaped").and_then(Json::as_u64), Some(2));
+        assert_eq!(parsed.get("shards_quarantined").and_then(Json::as_u64), Some(1));
     }
 }

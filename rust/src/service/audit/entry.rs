@@ -1,0 +1,509 @@
+//! Typed audit events and the hash-chained entry framing.
+//!
+//! Every consequential decision the daemon (or the fleet simulation)
+//! makes becomes one [`AuditEvent`]; the writer wraps it into an
+//! [`AuditEntry`] carrying a sequence number, a timestamp, the hash of
+//! the previous entry, and its own hash over a canonical encoding.
+//! Canonical means: the entry is serialized through [`Json::Obj`]
+//! (BTreeMap-backed, so key order is fixed) and [`Json::compact`] (no
+//! whitespace), so the same logical entry always hashes identically.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::{self, Json};
+use crate::util::sha256;
+
+/// The `prev` value of the first entry in a log.
+pub const GENESIS_HASH: &str =
+    "0000000000000000000000000000000000000000000000000000000000000000";
+
+/// Why a deploy/lookup/portfolio answer was what it was.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServeReason {
+    /// The platform's own shard held a tuned entry (or portfolio).
+    Exact,
+    /// Served from the daemon's decision LRU (originally an exact hit).
+    LruCache,
+    /// Transferred from the nearest fingerprinted platform.
+    Transfer {
+        /// Platform key the answer was borrowed from.
+        source: String,
+        /// Fingerprint similarity to the source, in permille (0..=1000)
+        /// — integer so the hashed encoding is exact.
+        similarity_pm: u64,
+    },
+    /// Nothing to serve; the caller was told to explore/tune.
+    Miss,
+}
+
+impl ServeReason {
+    /// Stable wire spelling of the reason.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ServeReason::Exact => "exact",
+            ServeReason::LruCache => "lru-cache",
+            ServeReason::Transfer { .. } => "transfer",
+            ServeReason::Miss => "miss",
+        }
+    }
+}
+
+/// One consequential decision, typed.
+///
+/// Task-lifecycle variants mirror the scheduler's transitions; `Served`
+/// and `RecordAccepted` mirror the data plane.  All fields are plain
+/// strings/integers so the canonical JSON encoding is exact (no
+/// floats).
+#[derive(Debug, Clone, PartialEq)]
+pub enum AuditEvent {
+    /// A tuning task entered the queue.
+    TaskEnqueued {
+        /// Task kind (`retune` / `sweep` / `portfolio-rebuild`).
+        kind: String,
+        /// Platform the task tunes for.
+        platform: String,
+        /// Kernel family.
+        kernel: String,
+        /// Workload tag, when the task is workload-scoped.
+        tag: Option<String>,
+        /// Why it was queued (staleness reason, "client-miss", ...).
+        reason: String,
+    },
+    /// A worker leased a task.
+    TaskLeased {
+        /// Lease id granted.
+        lease_id: u64,
+        /// Task kind.
+        kind: String,
+        /// Platform the task tunes for.
+        platform: String,
+        /// Kernel family.
+        kernel: String,
+    },
+    /// A leased task completed and settled.
+    TaskCompleted {
+        /// The settling lease.
+        lease_id: u64,
+    },
+    /// A leased task failed (reported via `task-fail`).
+    TaskFailed {
+        /// The settling lease.
+        lease_id: u64,
+        /// The reported error text.
+        error: String,
+    },
+    /// A lease expired and its task was requeued.
+    TaskRequeued {
+        /// Task kind.
+        kind: String,
+        /// Platform the task tunes for.
+        platform: String,
+        /// Kernel family.
+        kernel: String,
+        /// Attempts consumed so far (after the increment).
+        attempts: u64,
+    },
+    /// A lease expired and its task was dropped (attempt budget spent).
+    TaskDropped {
+        /// Task kind.
+        kind: String,
+        /// Platform the task tunes for.
+        platform: String,
+        /// Kernel family.
+        kernel: String,
+        /// Attempts consumed when the task was abandoned.
+        attempts: u64,
+    },
+    /// A tuning result was accepted into the shard store.
+    RecordAccepted {
+        /// Platform shard the entry landed in.
+        platform: String,
+        /// Kernel family.
+        kernel: String,
+        /// Workload tag.
+        tag: String,
+        /// Winning config id.
+        config: String,
+    },
+    /// A deploy/lookup/portfolio answer left the daemon.
+    Served {
+        /// The wire op (`lookup` / `deploy` / `portfolio`).
+        op: String,
+        /// Platform the answer was for.
+        platform: String,
+        /// Kernel family.
+        kernel: String,
+        /// Workload tag, when the op is workload-scoped.
+        workload: Option<String>,
+        /// Why this answer: exact / lru-cache / transfer / miss.
+        reason: ServeReason,
+    },
+}
+
+impl AuditEvent {
+    /// Stable event-type tag used in the serialized form.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            AuditEvent::TaskEnqueued { .. } => "task-enqueued",
+            AuditEvent::TaskLeased { .. } => "task-leased",
+            AuditEvent::TaskCompleted { .. } => "task-completed",
+            AuditEvent::TaskFailed { .. } => "task-failed",
+            AuditEvent::TaskRequeued { .. } => "task-requeued",
+            AuditEvent::TaskDropped { .. } => "task-dropped",
+            AuditEvent::RecordAccepted { .. } => "record-accepted",
+            AuditEvent::Served { .. } => "served",
+        }
+    }
+
+    /// JSON form (one object; key order canonical via `BTreeMap`).
+    pub fn to_json(&self) -> Json {
+        let mut o: BTreeMap<String, Json> = BTreeMap::new();
+        o.insert("type".into(), json::s(self.kind()));
+        match self {
+            AuditEvent::TaskEnqueued { kind, platform, kernel, tag, reason } => {
+                o.insert("kind".into(), json::s(kind));
+                o.insert("platform".into(), json::s(platform));
+                o.insert("kernel".into(), json::s(kernel));
+                if let Some(tag) = tag {
+                    o.insert("tag".into(), json::s(tag));
+                }
+                o.insert("reason".into(), json::s(reason));
+            }
+            AuditEvent::TaskLeased { lease_id, kind, platform, kernel } => {
+                o.insert("lease_id".into(), json::int(*lease_id as i64));
+                o.insert("kind".into(), json::s(kind));
+                o.insert("platform".into(), json::s(platform));
+                o.insert("kernel".into(), json::s(kernel));
+            }
+            AuditEvent::TaskCompleted { lease_id } => {
+                o.insert("lease_id".into(), json::int(*lease_id as i64));
+            }
+            AuditEvent::TaskFailed { lease_id, error } => {
+                o.insert("lease_id".into(), json::int(*lease_id as i64));
+                o.insert("error".into(), json::s(error));
+            }
+            AuditEvent::TaskRequeued { kind, platform, kernel, attempts }
+            | AuditEvent::TaskDropped { kind, platform, kernel, attempts } => {
+                o.insert("kind".into(), json::s(kind));
+                o.insert("platform".into(), json::s(platform));
+                o.insert("kernel".into(), json::s(kernel));
+                o.insert("attempts".into(), json::int(*attempts as i64));
+            }
+            AuditEvent::RecordAccepted { platform, kernel, tag, config } => {
+                o.insert("platform".into(), json::s(platform));
+                o.insert("kernel".into(), json::s(kernel));
+                o.insert("tag".into(), json::s(tag));
+                o.insert("config".into(), json::s(config));
+            }
+            AuditEvent::Served { op, platform, kernel, workload, reason } => {
+                o.insert("op".into(), json::s(op));
+                o.insert("platform".into(), json::s(platform));
+                o.insert("kernel".into(), json::s(kernel));
+                if let Some(w) = workload {
+                    o.insert("workload".into(), json::s(w));
+                }
+                o.insert("reason".into(), json::s(reason.as_str()));
+                if let ServeReason::Transfer { source, similarity_pm } = reason {
+                    o.insert("source".into(), json::s(source));
+                    o.insert("similarity_pm".into(), json::int(*similarity_pm as i64));
+                }
+            }
+        }
+        Json::Obj(o)
+    }
+
+    /// Parse the JSON form back into the typed event.
+    pub fn from_json(j: &Json) -> Result<AuditEvent> {
+        let get = |k: &str| -> Result<String> {
+            j.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("event lacks string field {k:?}"))
+        };
+        let get_u64 = |k: &str| -> Result<u64> {
+            j.get(k)
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("event lacks integer field {k:?}"))
+        };
+        let opt = |k: &str| j.get(k).and_then(Json::as_str).map(str::to_string);
+        let ty = get("type")?;
+        Ok(match ty.as_str() {
+            "task-enqueued" => AuditEvent::TaskEnqueued {
+                kind: get("kind")?,
+                platform: get("platform")?,
+                kernel: get("kernel")?,
+                tag: opt("tag"),
+                reason: get("reason")?,
+            },
+            "task-leased" => AuditEvent::TaskLeased {
+                lease_id: get_u64("lease_id")?,
+                kind: get("kind")?,
+                platform: get("platform")?,
+                kernel: get("kernel")?,
+            },
+            "task-completed" => AuditEvent::TaskCompleted { lease_id: get_u64("lease_id")? },
+            "task-failed" => {
+                AuditEvent::TaskFailed { lease_id: get_u64("lease_id")?, error: get("error")? }
+            }
+            "task-requeued" => AuditEvent::TaskRequeued {
+                kind: get("kind")?,
+                platform: get("platform")?,
+                kernel: get("kernel")?,
+                attempts: get_u64("attempts")?,
+            },
+            "task-dropped" => AuditEvent::TaskDropped {
+                kind: get("kind")?,
+                platform: get("platform")?,
+                kernel: get("kernel")?,
+                attempts: get_u64("attempts")?,
+            },
+            "record-accepted" => AuditEvent::RecordAccepted {
+                platform: get("platform")?,
+                kernel: get("kernel")?,
+                tag: get("tag")?,
+                config: get("config")?,
+            },
+            "served" => {
+                let reason = match get("reason")?.as_str() {
+                    "exact" => ServeReason::Exact,
+                    "lru-cache" => ServeReason::LruCache,
+                    "transfer" => ServeReason::Transfer {
+                        source: get("source")?,
+                        similarity_pm: get_u64("similarity_pm")?,
+                    },
+                    "miss" => ServeReason::Miss,
+                    other => return Err(anyhow!("unknown serve reason {other:?}")),
+                };
+                AuditEvent::Served {
+                    op: get("op")?,
+                    platform: get("platform")?,
+                    kernel: get("kernel")?,
+                    workload: opt("workload"),
+                    reason,
+                }
+            }
+            other => return Err(anyhow!("unknown audit event type {other:?}")),
+        })
+    }
+
+    /// The platform key the event concerns, if any (replay filtering).
+    pub fn platform(&self) -> Option<&str> {
+        match self {
+            AuditEvent::TaskEnqueued { platform, .. }
+            | AuditEvent::TaskLeased { platform, .. }
+            | AuditEvent::TaskRequeued { platform, .. }
+            | AuditEvent::TaskDropped { platform, .. }
+            | AuditEvent::RecordAccepted { platform, .. }
+            | AuditEvent::Served { platform, .. } => Some(platform),
+            AuditEvent::TaskCompleted { .. } | AuditEvent::TaskFailed { .. } => None,
+        }
+    }
+
+    /// One human-oriented line for `audit replay`.
+    pub fn describe(&self) -> String {
+        match self {
+            AuditEvent::TaskEnqueued { kind, platform, kernel, tag, reason } => {
+                let tag = tag.as_deref().unwrap_or("-");
+                format!("enqueue {kind} {kernel}/{tag} for {platform} ({reason})")
+            }
+            AuditEvent::TaskLeased { lease_id, kind, platform, kernel } => {
+                format!("lease #{lease_id} {kind} {kernel} for {platform}")
+            }
+            AuditEvent::TaskCompleted { lease_id } => format!("complete #{lease_id}"),
+            AuditEvent::TaskFailed { lease_id, error } => {
+                format!("fail #{lease_id}: {error}")
+            }
+            AuditEvent::TaskRequeued { kind, platform, kernel, attempts } => {
+                format!("requeue {kind} {kernel} for {platform} (attempt {attempts})")
+            }
+            AuditEvent::TaskDropped { kind, platform, kernel, attempts } => {
+                format!("drop {kind} {kernel} for {platform} after {attempts} attempt(s)")
+            }
+            AuditEvent::RecordAccepted { platform, kernel, tag, config } => {
+                format!("record {kernel}/{tag} = {config} for {platform}")
+            }
+            AuditEvent::Served { op, platform, kernel, workload, reason } => {
+                let w = workload.as_deref().unwrap_or("-");
+                let why = match reason {
+                    ServeReason::Transfer { source, similarity_pm } => {
+                        format!("transfer from {source} (similarity {similarity_pm}‰)")
+                    }
+                    other => other.as_str().to_string(),
+                };
+                format!("serve {op} {kernel}/{w} to {platform}: {why}")
+            }
+        }
+    }
+}
+
+/// One framed, chained log entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AuditEntry {
+    /// Zero-based position in the log.
+    pub seq: u64,
+    /// Unix seconds (real clock in the daemon, sim clock in the sim).
+    pub ts: u64,
+    /// Hex SHA-256 of the previous entry's canonical preimage
+    /// ([`GENESIS_HASH`] for the first entry).
+    pub prev: String,
+    /// Hex SHA-256 of this entry's canonical preimage.
+    pub hash: String,
+    /// The decision itself.
+    pub event: AuditEvent,
+}
+
+impl AuditEntry {
+    /// Build a chained entry: computes the hash over the canonical
+    /// preimage (`{event,prev,seq,ts}` compact JSON).
+    pub fn new(seq: u64, ts: u64, prev: String, event: AuditEvent) -> AuditEntry {
+        let hash = sha256::hex_digest(preimage(seq, ts, &prev, &event).as_bytes());
+        AuditEntry { seq, ts, prev, hash, event }
+    }
+
+    /// Serialized log line (no trailing newline).
+    pub fn to_line(&self) -> String {
+        let mut o: BTreeMap<String, Json> = BTreeMap::new();
+        o.insert("event".into(), self.event.to_json());
+        o.insert("hash".into(), json::s(&self.hash));
+        o.insert("prev".into(), json::s(&self.prev));
+        o.insert("seq".into(), json::int(self.seq as i64));
+        o.insert("ts".into(), json::int(self.ts as i64));
+        Json::Obj(o).compact()
+    }
+
+    /// Parse one log line (does *not* check the chain — that is the
+    /// verifier's job; this only requires well-formedness).
+    pub fn parse_line(line: &str) -> Result<AuditEntry> {
+        let j = json::parse(line).map_err(|e| anyhow!("bad entry json: {e}"))?;
+        let seq = j.get("seq").and_then(Json::as_u64).context("entry lacks seq")?;
+        let ts = j.get("ts").and_then(Json::as_u64).context("entry lacks ts")?;
+        let prev = j
+            .get("prev")
+            .and_then(Json::as_str)
+            .context("entry lacks prev")?
+            .to_string();
+        let hash = j
+            .get("hash")
+            .and_then(Json::as_str)
+            .context("entry lacks hash")?
+            .to_string();
+        let event = AuditEvent::from_json(j.get("event").context("entry lacks event")?)?;
+        Ok(AuditEntry { seq, ts, prev, hash, event })
+    }
+
+    /// Recompute the hash this entry *should* carry.
+    pub fn expected_hash(&self) -> String {
+        sha256::hex_digest(preimage(self.seq, self.ts, &self.prev, &self.event).as_bytes())
+    }
+}
+
+/// The canonical hashed preimage: everything except the hash itself.
+fn preimage(seq: u64, ts: u64, prev: &str, event: &AuditEvent) -> String {
+    let mut o: BTreeMap<String, Json> = BTreeMap::new();
+    o.insert("event".into(), event.to_json());
+    o.insert("prev".into(), json::s(prev));
+    o.insert("seq".into(), json::int(seq as i64));
+    o.insert("ts".into(), json::int(ts as i64));
+    Json::Obj(o).compact()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn events() -> Vec<AuditEvent> {
+        vec![
+            AuditEvent::TaskEnqueued {
+                kind: "sweep".into(),
+                platform: "p-0".into(),
+                kernel: "gemm".into(),
+                tag: None,
+                reason: "ttl-expired".into(),
+            },
+            AuditEvent::TaskLeased {
+                lease_id: 7,
+                kind: "sweep".into(),
+                platform: "p-0".into(),
+                kernel: "gemm".into(),
+            },
+            AuditEvent::TaskCompleted { lease_id: 7 },
+            AuditEvent::TaskFailed { lease_id: 9, error: "kernel exploded".into() },
+            AuditEvent::TaskRequeued {
+                kind: "retune".into(),
+                platform: "p-1".into(),
+                kernel: "axpy".into(),
+                attempts: 2,
+            },
+            AuditEvent::TaskDropped {
+                kind: "retune".into(),
+                platform: "p-1".into(),
+                kernel: "axpy".into(),
+                attempts: 3,
+            },
+            AuditEvent::RecordAccepted {
+                platform: "p-0".into(),
+                kernel: "gemm".into(),
+                tag: "m64n64k64".into(),
+                config: "o1_tm32".into(),
+            },
+            AuditEvent::Served {
+                op: "deploy".into(),
+                platform: "p-2".into(),
+                kernel: "gemm".into(),
+                workload: Some("m64n64k64".into()),
+                reason: ServeReason::Transfer { source: "p-0".into(), similarity_pm: 875 },
+            },
+            AuditEvent::Served {
+                op: "lookup".into(),
+                platform: "p-0".into(),
+                kernel: "gemm".into(),
+                workload: Some("m64n64k64".into()),
+                reason: ServeReason::Exact,
+            },
+        ]
+    }
+
+    #[test]
+    fn every_event_round_trips() {
+        for ev in events() {
+            let parsed = AuditEvent::from_json(&ev.to_json()).unwrap();
+            assert_eq!(parsed, ev);
+        }
+    }
+
+    #[test]
+    fn entry_line_round_trips_and_hash_is_stable() {
+        let ev = events().remove(0);
+        let e = AuditEntry::new(0, 1_700_000_000, GENESIS_HASH.into(), ev);
+        assert_eq!(e.hash, e.expected_hash());
+        let parsed = AuditEntry::parse_line(&e.to_line()).unwrap();
+        assert_eq!(parsed, e);
+        assert_eq!(parsed.expected_hash(), e.hash);
+    }
+
+    #[test]
+    fn hash_covers_every_field() {
+        let ev = || events().remove(2);
+        let base = AuditEntry::new(3, 100, GENESIS_HASH.into(), ev());
+        assert_ne!(AuditEntry::new(4, 100, GENESIS_HASH.into(), ev()).hash, base.hash);
+        assert_ne!(AuditEntry::new(3, 101, GENESIS_HASH.into(), ev()).hash, base.hash);
+        assert_ne!(AuditEntry::new(3, 100, base.hash.clone(), ev()).hash, base.hash);
+        assert_ne!(
+            AuditEntry::new(3, 100, GENESIS_HASH.into(), AuditEvent::TaskCompleted {
+                lease_id: 8
+            })
+            .hash,
+            base.hash
+        );
+    }
+
+    #[test]
+    fn describe_mentions_the_decision() {
+        let lines: Vec<String> = events().iter().map(AuditEvent::describe).collect();
+        assert!(lines.iter().any(|l| l.contains("transfer from p-0")));
+        assert!(lines.iter().any(|l| l.contains("exact")));
+        assert!(lines.iter().any(|l| l.contains("requeue")));
+    }
+}

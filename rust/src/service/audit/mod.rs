@@ -1,0 +1,33 @@
+//! Tamper-evident audit log for tuning decisions.
+//!
+//! At fleet scale an operator has to be able to answer "*why* did this
+//! platform get that config?" and "did anyone rewrite history?".  This
+//! module makes every consequential decision — task lease / complete /
+//! fail / requeue, record accepted, deploy/lookup/portfolio answers
+//! with their reason (exact hit, LRU cache, transfer from platform X,
+//! miss) — a typed [`AuditEvent`] appended to a hash-chained log:
+//!
+//! * **[`entry`]** — the event types and the framed [`AuditEntry`]:
+//!   `{event, hash, prev, seq, ts}` per line, compact canonical JSON,
+//!   `hash = SHA-256(preimage)` and `prev` = the previous entry's hash
+//!   (genesis: 64 zeros).
+//! * **[`writer`]** — [`AuditLog`]: append-only, crash-safe (single
+//!   `write_all` per entry, torn tails truncated on re-open), sidecar
+//!   head file republished atomically after each append so tail
+//!   truncation is detectable.
+//! * **[`verify`]** — [`verify_log`] walks the chain and fails with the
+//!   exact entry index on any alteration; [`read_verified`] feeds
+//!   `portatune audit replay`.
+//!
+//! The daemon threads entries through `server.rs` / `scheduler.rs`, the
+//! fleet worker writes its own local log, and the fleet simulation
+//! (`crate::sim`) verifies its log after every run — each layer
+//! exercises the other.
+
+pub mod entry;
+pub mod verify;
+pub mod writer;
+
+pub use entry::{AuditEntry, AuditEvent, ServeReason, GENESIS_HASH};
+pub use verify::{read_verified, verify_log, VerifyError, VerifyReport};
+pub use writer::{head_path, AuditLog};

@@ -1,0 +1,244 @@
+//! Chain verification: detect tampering and truncation, precisely.
+//!
+//! The verifier walks the log line by line, recomputing every entry's
+//! hash over its canonical preimage and checking the `prev` linkage and
+//! sequence numbering.  Failures carry the exact entry index, so a
+//! flipped byte in entry 17 reports *entry 17*, not "chain bad".
+//!
+//! Truncation needs one extra commitment: a chain that simply stops is
+//! internally consistent.  The writer therefore maintains a sidecar
+//! *head* file (`<log>.head`, written atomically via tmp + rename)
+//! recording the latest entry's `(seq, hash)`; a log shorter than its
+//! head is truncated.  The head may lag the log by appends made in the
+//! crash window between appending and re-publishing the head — that lag
+//! is tolerated (and reported), the reverse is not.
+//!
+//! Framing tolerance: a final line without a terminating newline is a
+//! *torn tail* (a writer died mid-append).  It is never counted as an
+//! entry — the writer discards it on re-open — and verification of the
+//! complete prefix proceeds normally.
+
+use std::path::Path;
+
+use crate::util::json::{self, Json};
+
+use super::entry::{AuditEntry, GENESIS_HASH};
+use super::writer::head_path;
+
+/// Why verification failed.  Every variant that concerns a specific
+/// entry names its zero-based index.
+#[derive(Debug, Clone, PartialEq)]
+pub enum VerifyError {
+    /// The log (or head) could not be read.
+    Io(String),
+    /// Entry `index` is not a well-formed framed entry.
+    Malformed {
+        /// Zero-based entry index.
+        index: u64,
+        /// Parser detail.
+        detail: String,
+    },
+    /// Entry `index` carries the wrong sequence number.
+    SeqMismatch {
+        /// Zero-based entry index (the expected sequence number).
+        index: u64,
+        /// The sequence number actually stored.
+        found: u64,
+    },
+    /// Entry `index`'s stored hash does not match its recomputed hash —
+    /// some byte of the entry was altered.
+    HashMismatch {
+        /// Zero-based entry index.
+        index: u64,
+    },
+    /// Entry `index`'s `prev` does not match the previous entry's hash.
+    ChainBreak {
+        /// Zero-based entry index.
+        index: u64,
+    },
+    /// The log ends before the entry the head file committed to —
+    /// the tail was truncated.
+    Truncated {
+        /// Index of the first missing entry (== number of complete
+        /// entries present).
+        index: u64,
+        /// The sequence number the head file committed to.
+        head_seq: u64,
+    },
+    /// The head file's hash disagrees with the entry it points at.
+    HeadMismatch {
+        /// The head's committed sequence number.
+        head_seq: u64,
+    },
+    /// The head file exists but is not well-formed.
+    HeadMalformed(String),
+}
+
+impl VerifyError {
+    /// The entry index the failure pins down, when it concerns one.
+    /// For [`VerifyError::Truncated`] this is the first missing index.
+    pub fn index(&self) -> Option<u64> {
+        match self {
+            VerifyError::Malformed { index, .. }
+            | VerifyError::SeqMismatch { index, .. }
+            | VerifyError::HashMismatch { index }
+            | VerifyError::ChainBreak { index }
+            | VerifyError::Truncated { index, .. } => Some(*index),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for VerifyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            VerifyError::Io(e) => write!(f, "audit log unreadable: {e}"),
+            VerifyError::Malformed { index, detail } => {
+                write!(f, "entry {index} is malformed: {detail}")
+            }
+            VerifyError::SeqMismatch { index, found } => {
+                write!(f, "entry {index} carries sequence number {found}")
+            }
+            VerifyError::HashMismatch { index } => {
+                write!(f, "entry {index} was altered (stored hash does not match contents)")
+            }
+            VerifyError::ChainBreak { index } => {
+                write!(f, "entry {index} does not chain to its predecessor")
+            }
+            VerifyError::Truncated { index, head_seq } => write!(
+                f,
+                "log truncated at entry {index}: head commits to sequence {head_seq}"
+            ),
+            VerifyError::HeadMismatch { head_seq } => {
+                write!(f, "head hash disagrees with entry {head_seq}")
+            }
+            VerifyError::HeadMalformed(e) => write!(f, "head file malformed: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for VerifyError {}
+
+/// What a successful verification found.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VerifyReport {
+    /// Complete, chain-verified entries.
+    pub entries: u64,
+    /// Whether a torn (partial, newline-less) tail was discarded.
+    pub torn_tail: bool,
+    /// Whether the sidecar head file was present.
+    pub head_present: bool,
+    /// Entries past the head's commitment (the crash window), when the
+    /// head was present.
+    pub head_lag: u64,
+}
+
+/// The verified scan shared by the verifier and the writer's re-open
+/// recovery.
+pub(crate) struct Scan {
+    /// Every complete entry, in order, chain-verified.
+    pub entries: Vec<AuditEntry>,
+    /// Byte length of the valid prefix (complete entries + newlines).
+    pub valid_len: u64,
+    /// Whether trailing torn bytes follow the valid prefix.
+    pub torn_tail: bool,
+}
+
+/// Walk raw log content, verifying framing, sequence, per-entry hashes,
+/// and prev-linkage.  Fails at the first bad entry.
+pub(crate) fn scan_content(content: &[u8]) -> Result<Scan, VerifyError> {
+    let mut entries = Vec::new();
+    let mut valid_len: u64 = 0;
+    let mut prev_hash = GENESIS_HASH.to_string();
+    let mut rest = content;
+    let mut torn_tail = false;
+    while !rest.is_empty() {
+        let Some(nl) = rest.iter().position(|&b| b == b'\n') else {
+            // No terminating newline: a writer died mid-append.  The
+            // partial tail is discarded, never counted.
+            torn_tail = true;
+            break;
+        };
+        let index = entries.len() as u64;
+        let line_bytes = &rest[..nl];
+        let line = std::str::from_utf8(line_bytes).map_err(|e| VerifyError::Malformed {
+            index,
+            detail: format!("not utf-8: {e}"),
+        })?;
+        let entry = AuditEntry::parse_line(line)
+            .map_err(|e| VerifyError::Malformed { index, detail: format!("{e:#}") })?;
+        if entry.seq != index {
+            return Err(VerifyError::SeqMismatch { index, found: entry.seq });
+        }
+        if entry.hash != entry.expected_hash() {
+            return Err(VerifyError::HashMismatch { index });
+        }
+        if entry.prev != prev_hash {
+            return Err(VerifyError::ChainBreak { index });
+        }
+        prev_hash = entry.hash.clone();
+        entries.push(entry);
+        valid_len += nl as u64 + 1;
+        rest = &rest[nl + 1..];
+    }
+    Ok(Scan { entries, valid_len, torn_tail })
+}
+
+/// Verify the chain in `path` (and its sidecar head, when present).
+///
+/// A missing log file is an error; a missing head file downgrades
+/// truncation detection (reported via
+/// [`head_present`](VerifyReport::head_present)) but the chain itself
+/// is still checked.
+pub fn verify_log(path: &Path) -> Result<VerifyReport, VerifyError> {
+    let (scan, report) = verified_scan(path)?;
+    drop(scan);
+    Ok(report)
+}
+
+/// Verify `path` and return its entries (the replay input).
+pub fn read_verified(path: &Path) -> Result<Vec<AuditEntry>, VerifyError> {
+    let (scan, _) = verified_scan(path)?;
+    Ok(scan.entries)
+}
+
+fn verified_scan(path: &Path) -> Result<(Scan, VerifyReport), VerifyError> {
+    let content = std::fs::read(path)
+        .map_err(|e| VerifyError::Io(format!("{}: {e}", path.display())))?;
+    let scan = scan_content(&content)?;
+    let mut report = VerifyReport {
+        entries: scan.entries.len() as u64,
+        torn_tail: scan.torn_tail,
+        head_present: false,
+        head_lag: 0,
+    };
+    let head = head_path(path);
+    if head.exists() {
+        let text = std::fs::read_to_string(&head)
+            .map_err(|e| VerifyError::Io(format!("{}: {e}", head.display())))?;
+        let j = json::parse(&text).map_err(|e| VerifyError::HeadMalformed(e.to_string()))?;
+        let head_seq = j
+            .get("seq")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| VerifyError::HeadMalformed("head lacks seq".into()))?;
+        let head_hash = j
+            .get("hash")
+            .and_then(Json::as_str)
+            .ok_or_else(|| VerifyError::HeadMalformed("head lacks hash".into()))?;
+        report.head_present = true;
+        match scan.entries.get(head_seq as usize) {
+            None => {
+                return Err(VerifyError::Truncated {
+                    index: scan.entries.len() as u64,
+                    head_seq,
+                })
+            }
+            Some(e) if e.hash != head_hash => {
+                return Err(VerifyError::HeadMismatch { head_seq })
+            }
+            Some(_) => {}
+        }
+        report.head_lag = scan.entries.len() as u64 - 1 - head_seq;
+    }
+    Ok((scan, report))
+}

@@ -1,0 +1,268 @@
+//! The append-only audit log writer.
+//!
+//! Appends are one `write_all` of `line + '\n'` to a file opened in
+//! append mode — a crash mid-append leaves at most one torn, newline-
+//! less tail, which re-open discards (truncates) and verification
+//! tolerates.  After each successful append the sidecar head file is
+//! republished atomically (unique tmp + rename) so truncation of the
+//! published log is detectable.
+//!
+//! One `AuditLog` serializes all in-process writers behind a mutex:
+//! entries from concurrent server threads interleave *between* entries,
+//! never inside one, and the chain stays intact by construction.
+
+use std::fs::OpenOptions;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::perfdb::unix_now;
+use crate::util::json::{self, Json};
+
+use super::entry::{AuditEntry, AuditEvent, GENESIS_HASH};
+use super::verify::scan_content;
+
+/// The sidecar head path for a log at `log` (`<log>.head`).
+pub fn head_path(log: &Path) -> PathBuf {
+    let mut name = log.as_os_str().to_os_string();
+    name.push(".head");
+    PathBuf::from(name)
+}
+
+struct WriterState {
+    file: std::fs::File,
+    next_seq: u64,
+    prev_hash: String,
+}
+
+/// A chained, crash-safe audit log open for appending.
+pub struct AuditLog {
+    path: PathBuf,
+    state: Mutex<WriterState>,
+    appended: AtomicU64,
+}
+
+impl std::fmt::Debug for AuditLog {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("AuditLog").field("path", &self.path).finish()
+    }
+}
+
+impl AuditLog {
+    /// Open `path` for appending, creating it (and its parent
+    /// directory) if absent.  An existing log is scanned: a torn tail
+    /// is truncated away and the chain resumes from the last complete
+    /// entry; a log whose *prefix* fails verification is refused —
+    /// appending to a tampered log would only launder it.
+    pub fn open(path: &Path) -> Result<AuditLog> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating {}", parent.display()))?;
+            }
+        }
+        let content = match std::fs::read(path) {
+            Ok(c) => c,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+            Err(e) => return Err(e).with_context(|| format!("reading {}", path.display())),
+        };
+        let scan = scan_content(&content)
+            .map_err(|e| anyhow::anyhow!("refusing to append to {}: {e}", path.display()))?;
+        if scan.torn_tail {
+            // Crash recovery: drop the partial tail so the next append
+            // starts on a clean line boundary.
+            let f = OpenOptions::new()
+                .write(true)
+                .open(path)
+                .with_context(|| format!("opening {} for recovery", path.display()))?;
+            f.set_len(scan.valid_len)
+                .with_context(|| format!("truncating torn tail of {}", path.display()))?;
+        }
+        let (next_seq, prev_hash) = match scan.entries.last() {
+            Some(last) => (last.seq + 1, last.hash.clone()),
+            None => (0, GENESIS_HASH.to_string()),
+        };
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        Ok(AuditLog {
+            path: path.to_path_buf(),
+            state: Mutex::new(WriterState { file, next_seq, prev_hash }),
+            appended: AtomicU64::new(0),
+        })
+    }
+
+    /// The log file path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Entries appended through this handle (not the whole file).
+    pub fn appended(&self) -> u64 {
+        self.appended.load(Ordering::Relaxed)
+    }
+
+    /// Append `event` stamped with the current wall clock.
+    pub fn append(&self, event: AuditEvent) -> Result<u64> {
+        self.append_at(unix_now(), event)
+    }
+
+    /// Append `event` stamped with `ts` (the simulation passes its own
+    /// clock so logs stay bit-identical per seed).  Returns the entry's
+    /// sequence number.
+    pub fn append_at(&self, ts: u64, event: AuditEvent) -> Result<u64> {
+        let mut state = self
+            .state
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        let entry = AuditEntry::new(state.next_seq, ts, state.prev_hash.clone(), event);
+        let mut line = entry.to_line();
+        line.push('\n');
+        state
+            .file
+            .write_all(line.as_bytes())
+            .with_context(|| format!("appending to {}", self.path.display()))?;
+        state
+            .file
+            .flush()
+            .with_context(|| format!("flushing {}", self.path.display()))?;
+        state.next_seq = entry.seq + 1;
+        state.prev_hash = entry.hash.clone();
+        // Republish the head.  A crash between the append above and
+        // this rename leaves the head one entry behind, which the
+        // verifier tolerates as the crash window.
+        let head = head_path(&self.path);
+        let tmp = head.with_extension(format!("head.tmp.{}", std::process::id()));
+        let doc = Json::Obj(
+            [
+                ("hash".to_string(), json::s(&entry.hash)),
+                ("seq".to_string(), json::int(entry.seq as i64)),
+            ]
+            .into_iter()
+            .collect(),
+        );
+        std::fs::write(&tmp, doc.compact())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, &head)
+            .with_context(|| format!("publishing {}", head.display()))?;
+        self.appended.fetch_add(1, Ordering::Relaxed);
+        Ok(entry.seq)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::audit::verify::verify_log;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "portatune-audit-{tag}-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn ev(lease_id: u64) -> AuditEvent {
+        AuditEvent::TaskCompleted { lease_id }
+    }
+
+    #[test]
+    fn appends_verify_and_resume_across_reopen() {
+        let dir = tmp_dir("reopen");
+        let path = dir.join("audit.log");
+        {
+            let log = AuditLog::open(&path).unwrap();
+            for i in 0..5 {
+                assert_eq!(log.append_at(100 + i, ev(i)).unwrap(), i);
+            }
+        }
+        let report = verify_log(&path).unwrap();
+        assert_eq!(report.entries, 5);
+        assert!(report.head_present);
+        assert_eq!(report.head_lag, 0);
+        // Re-open continues the same chain.
+        let log = AuditLog::open(&path).unwrap();
+        assert_eq!(log.append_at(200, ev(99)).unwrap(), 5);
+        assert_eq!(verify_log(&path).unwrap().entries, 6);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_tail_is_discarded_on_reopen() {
+        let dir = tmp_dir("torn");
+        let path = dir.join("audit.log");
+        {
+            let log = AuditLog::open(&path).unwrap();
+            for i in 0..3 {
+                log.append_at(100, ev(i)).unwrap();
+            }
+        }
+        // Simulate a crash mid-append: partial, newline-less tail.
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(b"{\"event\":{\"lease_id\":77,\"type\":\"task-com").unwrap();
+        drop(f);
+        let report = verify_log(&path).unwrap();
+        assert_eq!(report.entries, 3);
+        assert!(report.torn_tail);
+        // Re-open truncates the tail and the chain continues cleanly.
+        let log = AuditLog::open(&path).unwrap();
+        assert_eq!(log.append_at(101, ev(3)).unwrap(), 3);
+        let report = verify_log(&path).unwrap();
+        assert_eq!(report.entries, 4);
+        assert!(!report.torn_tail);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tampered_log_is_refused_for_append() {
+        let dir = tmp_dir("tamper");
+        let path = dir.join("audit.log");
+        {
+            let log = AuditLog::open(&path).unwrap();
+            for i in 0..3 {
+                log.append_at(100, ev(i)).unwrap();
+            }
+        }
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[10] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(AuditLog::open(&path).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn head_lag_from_a_crash_window_is_tolerated() {
+        let dir = tmp_dir("headlag");
+        let path = dir.join("audit.log");
+        let log = AuditLog::open(&path).unwrap();
+        for i in 0..4 {
+            log.append_at(100, ev(i)).unwrap();
+        }
+        // Roll the head back one entry, as if the process died between
+        // appending entry 3 and republishing the head.
+        let head = head_path(&path);
+        let entries = crate::service::audit::verify::read_verified(&path).unwrap();
+        let doc = Json::Obj(
+            [
+                ("hash".to_string(), json::s(&entries[2].hash)),
+                ("seq".to_string(), json::int(2)),
+            ]
+            .into_iter()
+            .collect(),
+        );
+        std::fs::write(&head, doc.compact()).unwrap();
+        let report = verify_log(&path).unwrap();
+        assert_eq!(report.entries, 4);
+        assert_eq!(report.head_lag, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -33,6 +33,11 @@
 //!   persistent runtime-service shape of Kernel Tuning Toolkit,
 //!   Petrovič et al. 2019, plus portfolio maintenance from "A Few Fit
 //!   Most").
+//! * [`audit`] — the tamper-evident decision log: every lease /
+//!   settle / requeue / record / serve answer (with its reason) is a
+//!   typed, hash-chained entry; `portatune audit verify` proves the
+//!   log unaltered and `portatune audit replay` re-derives a
+//!   platform's decision sequence.
 //! * [`faults`] — the deterministic fault-injection harness behind
 //!   `tests/chaos.rs`: a seeded [`FaultPlan`] fires connection drops,
 //!   read/write stalls, torn shard writes, lease-settle delays, and
@@ -41,6 +46,7 @@
 //!   expiry, shard quarantine) is exercised on demand instead of only
 //!   in production incidents.
 
+pub mod audit;
 pub mod client;
 pub mod faults;
 pub mod protocol;
@@ -48,11 +54,12 @@ pub mod scheduler;
 pub mod server;
 pub mod transfer;
 
+pub use audit::{AuditEntry, AuditEvent, AuditLog, ServeReason, VerifyError, VerifyReport};
 pub use client::{Client, Endpoint, LeasedTask, RetryPolicy};
 pub use faults::{FaultPlan, InjectionPoint};
 pub use protocol::{reply_err, reply_ok, Request};
 pub use scheduler::{
-    CompleteOutcome, FailOutcome, StaleReason, TaskKind, TaskQueue, TuningTask,
+    CompleteOutcome, ExpireReport, FailOutcome, StaleReason, TaskKind, TaskQueue, TuningTask,
     DEFAULT_LEASE_TTL_S,
 };
 pub use server::{Lru, ServeOpts, ServeStats, Server};

@@ -269,6 +269,15 @@ pub enum CompleteOutcome {
     Unknown,
 }
 
+/// What one `expire_report` pass did, task by task.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ExpireReport {
+    /// Tasks whose lease lapsed and that went back to pending.
+    pub requeued: Vec<TuningTask>,
+    /// Tasks abandoned after exhausting [`MAX_ATTEMPTS`].
+    pub dropped: Vec<TuningTask>,
+}
+
 /// What `fail` reports.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FailOutcome {
@@ -380,8 +389,19 @@ impl TaskQueue {
     /// Returns how many tasks were added.  (`host` reserved for
     /// lineage-aware drift rules; the current rule needs only
     /// shard-internal consistency.)
-    pub fn scan(&mut self, shards: &[Shard], _host: &Fingerprint, now: u64) -> usize {
-        let mut added = 0;
+    pub fn scan(&mut self, shards: &[Shard], host: &Fingerprint, now: u64) -> usize {
+        self.scan_report(shards, host, now).len()
+    }
+
+    /// Like [`scan`](Self::scan) but returns the tasks actually queued,
+    /// so callers can audit each enqueue decision with its reason.
+    pub fn scan_report(
+        &mut self,
+        shards: &[Shard],
+        _host: &Fingerprint,
+        now: u64,
+    ) -> Vec<TuningTask> {
+        let mut added = Vec::new();
         for shard in shards {
             let drifted = match &shard.fingerprint {
                 // A *derived* key that its own stored fingerprint no
@@ -408,18 +428,16 @@ impl TaskQueue {
                 else {
                     continue;
                 };
-                if self.enqueue_scanned(
-                    TuningTask {
-                        kind: TaskKind::PortfolioRebuild,
-                        platform_key: shard.platform_key.clone(),
-                        kernel: p.kernel.clone(),
-                        tag: None,
-                        reason,
-                        attempts: 0,
-                    },
-                    p.built_at,
-                ) {
-                    added += 1;
+                let task = TuningTask {
+                    kind: TaskKind::PortfolioRebuild,
+                    platform_key: shard.platform_key.clone(),
+                    kernel: p.kernel.clone(),
+                    tag: None,
+                    reason,
+                    attempts: 0,
+                };
+                if self.enqueue_scanned(task.clone(), p.built_at) {
+                    added.push(task);
                 }
             }
             for entry in shard.frontier() {
@@ -448,18 +466,16 @@ impl TaskQueue {
                 else {
                     continue;
                 };
-                if self.enqueue_scanned(
-                    TuningTask {
-                        kind,
-                        platform_key: shard.platform_key.clone(),
-                        kernel: entry.kernel.clone(),
-                        tag,
-                        reason,
-                        attempts: 0,
-                    },
-                    entry.recorded_at,
-                ) {
-                    added += 1;
+                let task = TuningTask {
+                    kind,
+                    platform_key: shard.platform_key.clone(),
+                    kernel: entry.kernel.clone(),
+                    tag,
+                    reason,
+                    attempts: 0,
+                };
+                if self.enqueue_scanned(task.clone(), entry.recorded_at) {
+                    added.push(task);
                 }
             }
         }
@@ -556,13 +572,22 @@ impl TaskQueue {
     /// scan that still finds the data stale recreates it.  Returns how
     /// many leases expired.
     pub fn expire(&mut self, now: u64) -> usize {
+        let report = self.expire_report(now);
+        report.requeued.len() + report.dropped.len()
+    }
+
+    /// Like [`expire`](Self::expire), but returns the affected tasks
+    /// themselves, split by outcome — the audit log records a
+    /// `task-requeued` or `task-dropped` entry per task, not a bare
+    /// count.
+    pub fn expire_report(&mut self, now: u64) -> ExpireReport {
         let expired: Vec<u64> = self
             .leased
             .iter()
             .filter(|(_, l)| now >= l.expires_at)
             .map(|(&id, _)| id)
             .collect();
-        let n = expired.len();
+        let mut report = ExpireReport::default();
         for id in expired {
             if let Some(lease) = self.leased.remove(&id) {
                 let mut task = lease.task;
@@ -572,14 +597,16 @@ impl TaskQueue {
                     let identity = task.identity();
                     self.queued.remove(&identity);
                     self.stamps.remove(&identity);
+                    report.dropped.push(task);
                 } else {
                     // Identity stays in `queued`: the task is still
                     // live, just back in pending.
-                    self.pending.push_back(task);
+                    self.pending.push_back(task.clone());
+                    report.requeued.push(task);
                 }
             }
         }
-        n
+        report
     }
 
     /// Settle a lease as done.  Idempotent: see [`CompleteOutcome`].

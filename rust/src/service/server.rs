@@ -31,7 +31,7 @@ use std::hash::Hash;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpListener;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, MutexGuard};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
 use std::time::Duration;
 
 use anyhow::Result;
@@ -42,6 +42,7 @@ use crate::coordinator::portfolio::{Portfolio, PortfolioItem};
 use crate::coordinator::search::Exhaustive;
 use crate::coordinator::tuner::Tuner;
 use crate::runtime::Registry;
+use crate::service::audit::{AuditEvent, AuditLog, ServeReason};
 use crate::service::faults::{self, InjectionPoint};
 use crate::service::protocol::{reply_err, reply_ok, Request};
 use crate::service::scheduler::{
@@ -266,6 +267,13 @@ pub struct ServeStats {
     pub queue_depth: BTreeMap<String, u64>,
     /// Current decision-cache entry count.
     pub lru_len: u64,
+    /// Abandoned shard lock files removed this process — stolen in-band
+    /// by contending writers plus swept by the periodic scan.
+    pub stale_locks_reaped: u64,
+    /// Quarantined (`.corrupt.<ts>`) shard corpses currently on disk —
+    /// a live gauge, not a counter: pruning and operator cleanup lower
+    /// it.
+    pub shards_quarantined: u64,
 }
 
 type DecisionKey = (String, String, String);
@@ -310,6 +318,12 @@ pub struct Server {
     dedupe: Mutex<Lru<String, Json>>,
     counters: Counters,
     shutdown: AtomicBool,
+    /// The tamper-evident decision log, attached once via
+    /// [`Self::enable_audit`].  Optional — a daemon without one serves
+    /// identically, it just leaves no trail.  Append failures bump the
+    /// error counter but never fail the request being served: audit is
+    /// evidence, not a write barrier.
+    audit: OnceLock<Arc<AuditLog>>,
 }
 
 impl Server {
@@ -328,6 +342,29 @@ impl Server {
             opts,
             counters: Counters::default(),
             shutdown: AtomicBool::new(false),
+            audit: OnceLock::new(),
+        }
+    }
+
+    /// Attach the audit log.  Call once, before serving; a second call
+    /// is ignored (the first log wins — swapping logs mid-flight would
+    /// fork the hash chain).
+    pub fn enable_audit(&self, log: Arc<AuditLog>) {
+        let _ = self.audit.set(log);
+    }
+
+    /// The attached audit log, if any.
+    pub fn audit_log(&self) -> Option<&Arc<AuditLog>> {
+        self.audit.get()
+    }
+
+    /// Append a decision to the audit log, when one is attached.
+    fn audit(&self, event: AuditEvent) {
+        if let Some(log) = self.audit.get() {
+            if let Err(e) = log.append(event) {
+                eprintln!("audit append failed: {e:#}");
+                self.bump(&self.counters.errors);
+            }
         }
     }
 
@@ -362,15 +399,23 @@ impl Server {
 
     /// Shard lookup through the decision cache.  Negative results are
     /// cached too (a hot deploy path for an untuned key must not
-    /// re-read the shard file every call); `record` invalidates.
-    fn cached_lookup(&self, platform: &str, kernel: &str, tag: &str) -> Result<Option<DbEntry>> {
+    /// re-read the shard file every call); `record` invalidates.  The
+    /// second half of the pair reports whether the answer came from
+    /// the LRU (true) or a shard read (false) — the audit log records
+    /// the distinction.
+    fn cached_lookup(
+        &self,
+        platform: &str,
+        kernel: &str,
+        tag: &str,
+    ) -> Result<(Option<DbEntry>, bool)> {
         let key = (platform.to_string(), kernel.to_string(), tag.to_string());
         {
             let mut lru = lock(&self.lru);
             match lru.get(&key) {
                 Some((read_at, cached)) if read_at.elapsed() < DECISION_CACHE_TTL => {
                     self.bump(&self.counters.lru_hits);
-                    return Ok(cached);
+                    return Ok((cached, true));
                 }
                 Some(_) => lru.remove(&key), // expired
                 None => {}
@@ -391,23 +436,24 @@ impl Server {
                 lru.put(key, (std::time::Instant::now(), found.clone()));
             }
         }
-        Ok(found)
+        Ok((found, false))
     }
 
     /// Portfolio read through its cache (fingerprint rides along: it
-    /// lives in the same shard file and selection needs it).
+    /// lives in the same shard file and selection needs it).  The final
+    /// `bool` reports an LRU answer, as in [`Self::cached_lookup`].
     fn cached_portfolio(
         &self,
         platform: &str,
         kernel: &str,
-    ) -> Result<(Option<Fingerprint>, Option<Portfolio>)> {
+    ) -> Result<(Option<Fingerprint>, Option<Portfolio>, bool)> {
         let key = (platform.to_string(), kernel.to_string());
         {
             let mut lru = lock(&self.portfolio_lru);
             match lru.get(&key) {
                 Some((read_at, fp, p)) if read_at.elapsed() < DECISION_CACHE_TTL => {
                     self.bump(&self.counters.lru_hits);
-                    return Ok((fp, p));
+                    return Ok((fp, p, true));
                 }
                 Some(_) => lru.remove(&key), // expired
                 None => {}
@@ -427,7 +473,7 @@ impl Server {
                 lru.put(key, (std::time::Instant::now(), fp.clone(), p.clone()));
             }
         }
-        Ok((fp, p))
+        Ok((fp, p, false))
     }
 
     fn invalidate(&self, platform: &str, kernel: &str, tag: &str) {
@@ -489,17 +535,37 @@ impl Server {
             tasks_inflight,
             queue_depth,
             lru_len: lock(&self.lru).len() as u64,
+            stale_locks_reaped: crate::coordinator::perfdb::stale_locks_reaped(),
+            shards_quarantined: self.db.quarantined_count().unwrap_or(0),
         }
     }
 
     /// Requeue every lease whose holder went silent past its TTL.
     /// Called lazily by every queue-touching op and the periodic scan
     /// — a crashed worker's task is back in the queue by the next time
-    /// anyone asks for work.
+    /// anyone asks for work.  Each expiry decision (requeue vs drop)
+    /// lands in the audit log.
     fn drain_expired(&self) {
-        let expired = lock(&self.scheduler).expire(unix_now());
+        let report = lock(&self.scheduler).expire_report(unix_now());
+        let expired = report.requeued.len() + report.dropped.len();
         if expired > 0 {
             self.counters.leases_expired.fetch_add(expired as u64, Ordering::Relaxed);
+        }
+        for t in &report.requeued {
+            self.audit(AuditEvent::TaskRequeued {
+                kind: t.kind.as_str().to_string(),
+                platform: t.platform_key.clone(),
+                kernel: t.kernel.clone(),
+                attempts: t.attempts as u64,
+            });
+        }
+        for t in &report.dropped {
+            self.audit(AuditEvent::TaskDropped {
+                kind: t.kind.as_str().to_string(),
+                platform: t.platform_key.clone(),
+                kernel: t.kernel.clone(),
+                attempts: t.attempts as u64,
+            });
         }
     }
 
@@ -548,7 +614,20 @@ impl Server {
             Request::Lookup { platform, kernel, workload } => {
                 self.bump(&self.counters.lookups);
                 let platform = platform.as_deref().unwrap_or(&self.host_key);
-                match self.cached_lookup(platform, kernel, workload)? {
+                let (found, from_lru) = self.cached_lookup(platform, kernel, workload)?;
+                let reason = match (&found, from_lru) {
+                    (Some(_), true) => ServeReason::LruCache,
+                    (Some(_), false) => ServeReason::Exact,
+                    (None, _) => ServeReason::Miss,
+                };
+                self.audit(AuditEvent::Served {
+                    op: "lookup".into(),
+                    platform: platform.to_string(),
+                    kernel: kernel.clone(),
+                    workload: Some(workload.clone()),
+                    reason,
+                });
+                match found {
                     Some(entry) => Ok(reply_ok(vec![
                         ("found", Json::Bool(true)),
                         ("entry", entry.to_json()),
@@ -559,7 +638,19 @@ impl Server {
             Request::Deploy { platform, kernel, workload, fingerprint } => {
                 self.bump(&self.counters.deploys);
                 let platform = platform.as_deref().unwrap_or(&self.host_key);
-                if let Some(entry) = self.cached_lookup(platform, kernel, workload)? {
+                let (found, from_lru) = self.cached_lookup(platform, kernel, workload)?;
+                if let Some(entry) = found {
+                    self.audit(AuditEvent::Served {
+                        op: "deploy".into(),
+                        platform: platform.to_string(),
+                        kernel: kernel.clone(),
+                        workload: Some(workload.clone()),
+                        reason: if from_lru {
+                            ServeReason::LruCache
+                        } else {
+                            ServeReason::Exact
+                        },
+                    });
                     return Ok(reply_ok(vec![
                         ("source", json::s("exact")),
                         ("entry", entry.to_json()),
@@ -582,6 +673,20 @@ impl Server {
                 let target = stored.or(fingerprint.as_ref()).unwrap_or(&self.host);
                 let ranked =
                     transfer::rank_candidates(&shards, target, kernel, workload, platform);
+                self.audit(AuditEvent::Served {
+                    op: "deploy".into(),
+                    platform: platform.to_string(),
+                    kernel: kernel.clone(),
+                    workload: Some(workload.clone()),
+                    reason: match ranked.first() {
+                        Some(best) => ServeReason::Transfer {
+                            source: best.platform_key.clone(),
+                            similarity_pm: (best.similarity.clamp(0.0, 1.0) * 1000.0).round()
+                                as u64,
+                        },
+                        None => ServeReason::Miss,
+                    },
+                });
                 let candidates: Vec<Json> = ranked
                     .iter()
                     .take(DEPLOY_CANDIDATES)
@@ -617,8 +722,15 @@ impl Server {
                     let entry = (**entry).clone();
                     let (platform, kernel, tag) =
                         (entry.platform_key.clone(), entry.kernel.clone(), entry.tag.clone());
+                    let config = entry.best_config_id.clone();
                     self.db.record(fingerprint.as_ref(), entry)?;
                     self.invalidate(&platform, &kernel, &tag);
+                    self.audit(AuditEvent::RecordAccepted {
+                        platform: platform.clone(),
+                        kernel: kernel.clone(),
+                        tag: tag.clone(),
+                        config,
+                    });
                     Ok(reply_ok(vec![("recorded", Json::Bool(true))]))
                 })
             }
@@ -627,6 +739,12 @@ impl Server {
                 let platform = platform.as_deref().unwrap_or(&self.host_key);
                 self.db.record_portfolio(platform, fingerprint.as_ref(), (**portfolio).clone())?;
                 self.invalidate_portfolio(platform);
+                self.audit(AuditEvent::RecordAccepted {
+                    platform: platform.to_string(),
+                    kernel: portfolio.kernel.clone(),
+                    tag: "*".into(),
+                    config: format!("portfolio[{}]", portfolio.items.len()),
+                });
                 Ok(reply_ok(vec![
                     ("recorded", Json::Bool(true)),
                     ("platform", json::s(platform)),
@@ -642,7 +760,7 @@ impl Server {
             Request::Portfolio { platform, kernel, dims, fingerprint } => {
                 self.bump(&self.counters.portfolios);
                 let platform = platform.as_deref().unwrap_or(&self.host_key);
-                let (stored_fp, portfolio) = self.cached_portfolio(platform, kernel)?;
+                let (stored_fp, portfolio, from_lru) = self.cached_portfolio(platform, kernel)?;
                 // Selection features depend on cache geometry; the
                 // target platform's stored fingerprint is authoritative,
                 // then the request's, then the host's (same precedence
@@ -650,6 +768,17 @@ impl Server {
                 let target =
                     stored_fp.as_ref().or(fingerprint.as_ref()).unwrap_or(&self.host).clone();
                 if let Some(p) = portfolio {
+                    self.audit(AuditEvent::Served {
+                        op: "portfolio".into(),
+                        platform: platform.to_string(),
+                        kernel: kernel.clone(),
+                        workload: None,
+                        reason: if from_lru {
+                            ServeReason::LruCache
+                        } else {
+                            ServeReason::Exact
+                        },
+                    });
                     let mut fields = vec![
                         ("found", Json::Bool(true)),
                         ("source", json::s("exact")),
@@ -669,6 +798,20 @@ impl Server {
                 // deploy's transfer path, it is the cold fallback.)
                 let shards = self.db.all_shards()?;
                 let ranked = transfer::rank_portfolios(&shards, &target, kernel, platform);
+                self.audit(AuditEvent::Served {
+                    op: "portfolio".into(),
+                    platform: platform.to_string(),
+                    kernel: kernel.clone(),
+                    workload: None,
+                    reason: match ranked.first() {
+                        Some(best) => ServeReason::Transfer {
+                            source: best.platform_key.clone(),
+                            similarity_pm: (best.similarity.clamp(0.0, 1.0) * 1000.0).round()
+                                as u64,
+                        },
+                        None => ServeReason::Miss,
+                    },
+                });
                 match ranked.into_iter().next() {
                     Some(c) => {
                         self.bump(&self.counters.portfolio_transfers);
@@ -714,6 +857,7 @@ impl Server {
                     match outcome {
                         CompleteOutcome::Settled => {
                             self.bump(&self.counters.tasks_completed);
+                            self.audit(AuditEvent::TaskCompleted { lease_id: *lease_id });
                             Ok(reply_ok(vec![
                                 ("settled", Json::Bool(true)),
                                 ("duplicate", Json::Bool(false)),
@@ -735,6 +879,12 @@ impl Server {
                     eprintln!("task lease {lease_id} failed on worker: {msg}");
                 }
                 let outcome = lock(&self.scheduler).fail(*lease_id);
+                if matches!(outcome, FailOutcome::Requeued | FailOutcome::Dropped) {
+                    self.audit(AuditEvent::TaskFailed {
+                        lease_id: *lease_id,
+                        error: error.clone().unwrap_or_default(),
+                    });
+                }
                 match outcome {
                     FailOutcome::Requeued => {
                         self.bump(&self.counters.tasks_failed);
@@ -783,6 +933,12 @@ impl Server {
         match leased {
             Some((lease_id, task)) => {
                 self.bump(&self.counters.tasks_leased);
+                self.audit(AuditEvent::TaskLeased {
+                    lease_id,
+                    kind: task.kind.as_str().to_string(),
+                    platform: task.platform_key.clone(),
+                    kernel: task.kernel.clone(),
+                });
                 Ok(reply_ok(vec![
                     ("found", Json::Bool(true)),
                     ("lease_id", json::int(lease_id as i64)),
@@ -893,10 +1049,25 @@ impl Server {
     /// other worker is polling.
     pub fn scan_once(&self) -> Result<usize> {
         self.drain_expired();
+        // Sweep abandoned shard locks first: a corpse would otherwise
+        // cost every writer below a full stale-lock wait.
+        if let Err(e) = self.db.reap_stale_locks() {
+            eprintln!("stale-lock sweep failed: {e:#}");
+            self.bump(&self.counters.errors);
+        }
         let shards = self.db.all_shards()?;
-        let added = lock(&self.scheduler).scan(&shards, &self.host, unix_now());
-        self.counters.tasks_queued.fetch_add(added as u64, Ordering::Relaxed);
-        Ok(added)
+        let added = lock(&self.scheduler).scan_report(&shards, &self.host, unix_now());
+        self.counters.tasks_queued.fetch_add(added.len() as u64, Ordering::Relaxed);
+        for t in &added {
+            self.audit(AuditEvent::TaskEnqueued {
+                kind: t.kind.as_str().to_string(),
+                platform: t.platform_key.clone(),
+                kernel: t.kernel.clone(),
+                tag: t.tag.clone(),
+                reason: t.reason.as_str().to_string(),
+            });
+        }
+        Ok(added.len())
     }
 
     /// Background staleness scanner (checks the shutdown flag every
@@ -975,12 +1146,22 @@ impl Server {
                     continue;
                 };
                 self.bump(&self.counters.tasks_leased);
+                self.audit(AuditEvent::TaskLeased {
+                    lease_id,
+                    kind: task.kind.as_str().to_string(),
+                    platform: task.platform_key.clone(),
+                    kernel: task.kernel.clone(),
+                });
                 let Some(tag) = task.tag.clone() else {
                     // Retune tasks always carry a workload; a tagless
                     // one is a queue bug — drop it rather than loop.
                     let _ = lock(&self.scheduler).fail(lease_id);
                     self.bump(&self.counters.tasks_failed);
                     self.bump(&self.counters.errors);
+                    self.audit(AuditEvent::TaskFailed {
+                        lease_id,
+                        error: "retune task lacks a workload tag".into(),
+                    });
                     continue;
                 };
                 let work_key = (task.kernel.clone(), tag.clone());
@@ -1001,24 +1182,40 @@ impl Server {
                         let entry = tuner.entry_for(&outcome);
                         let (platform, kernel, tag) =
                             (entry.platform_key.clone(), entry.kernel.clone(), entry.tag.clone());
+                        let config = entry.best_config_id.clone();
                         if self.db.record(Some(&outcome.platform), entry).is_ok() {
                             self.invalidate(&platform, &kernel, &tag);
                             self.bump(&self.counters.retunes);
+                            self.audit(AuditEvent::RecordAccepted {
+                                platform: platform.clone(),
+                                kernel: kernel.clone(),
+                                tag: tag.clone(),
+                                config,
+                            });
                             if lock(&self.scheduler).complete(lease_id)
                                 == CompleteOutcome::Settled
                             {
                                 self.bump(&self.counters.tasks_completed);
+                                self.audit(AuditEvent::TaskCompleted { lease_id });
                             }
                         } else {
                             let _ = lock(&self.scheduler).fail(lease_id);
                             self.bump(&self.counters.tasks_failed);
                             self.bump(&self.counters.errors);
+                            self.audit(AuditEvent::TaskFailed {
+                                lease_id,
+                                error: "recording the tuned entry failed".into(),
+                            });
                         }
                     }
-                    Err(_) => {
+                    Err(e) => {
                         let _ = lock(&self.scheduler).fail(lease_id);
                         self.bump(&self.counters.tasks_failed);
                         self.bump(&self.counters.errors);
+                        self.audit(AuditEvent::TaskFailed {
+                            lease_id,
+                            error: format!("{e:#}"),
+                        });
                     }
                 }
             }

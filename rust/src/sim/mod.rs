@@ -1,0 +1,878 @@
+//! Deterministic fleet simulation: the real scheduling, storage, and
+//! transfer engines driven by a synthetic fleet on a virtual clock.
+//!
+//! The chaos suite (`tests/chaos.rs`) exercises the daemon over real
+//! sockets with wall-clock timing — strong on protocol faults, weak on
+//! *scale* and *repeatability*.  This module is the complement: a
+//! single-threaded discrete-event loop that drives the real
+//! [`TaskQueue`], [`ShardedDb`], and transfer/portfolio ranking against
+//! a synthetic population of fingerprints, with Poisson query traffic,
+//! fingerprint drift, and worker churn from a seeded [`FaultPlan`].
+//! Everything — platform genesis, task durations, crashes, traffic —
+//! derives from one seed, and the clock is a plain `u64`, so a run is
+//! bit-reproducible: same seed, same decision sequence, same audit log
+//! bytes.  `benches/fleet_sim.rs` turns the report into a CI gate.
+//!
+//! What the simulation measures:
+//!
+//! - **convergence time**: sim-seconds from the first scan until every
+//!   initially-stale identity has been refreshed — how long the fleet
+//!   takes to work off a cold backlog.  (The queue itself keeps
+//!   churning afterwards: refreshed data re-ages past the TTL, which
+//!   is the steady state, not a failure.)
+//! - **duplicate-work rate**: executions that finish only to learn the
+//!   task was already settled by someone else (the lease expired
+//!   mid-run and the requeued copy won), over all finished executions.
+//! - **staleness at serve**: age (`now - recorded_at`) of every entry
+//!   actually served to lookup traffic, reported as p50/p95/p99.
+//!
+//! Every consequential decision goes through a real [`AuditLog`]
+//! stamped with the sim clock, and [`run`] verifies the chain before
+//! returning — the simulation cannot report success over a log that
+//! would not survive `portatune audit verify`.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::perfdb::{DbEntry, Shard, ShardedDb};
+use crate::coordinator::platform::Fingerprint;
+use crate::coordinator::portfolio::{Portfolio, PortfolioItem, FEATURE_NAMES};
+use crate::service::audit::{verify_log, AuditEvent, AuditLog, ServeReason};
+use crate::service::faults::{FaultPlan, InjectionPoint};
+use crate::service::scheduler::{
+    CompleteOutcome, TaskIdentity, TaskKind, TaskQueue, TuningTask,
+};
+use crate::service::transfer;
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+
+/// Everything a simulation run is parameterized by.  All durations are
+/// sim-seconds; nothing here reads the wall clock.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Synthetic platform population size.
+    pub platforms: usize,
+    /// Simulated workers draining the task queue.
+    pub workers: usize,
+    /// Sim-seconds to run after the warm-up offset.
+    pub duration_s: u64,
+    /// Master seed: population, traffic, durations, and churn all
+    /// derive from it.
+    pub seed: u64,
+    /// Staleness TTL the scan enforces (entries are seeded older than
+    /// this, so the whole population is a cold backlog at t0).
+    pub ttl_s: u64,
+    /// Worker-lease TTL.
+    pub lease_ttl_s: u64,
+    /// Scan cadence.
+    pub scan_every_s: u64,
+    /// Mean lookup arrivals per sim-second (Poisson).
+    pub traffic_per_s: f64,
+    /// How many platforms drift (fingerprint changes under a stable
+    /// key) during the run.
+    pub drift_platforms: usize,
+    /// Per-lease probability that the leasing worker crashes before
+    /// settling (routed through the real [`FaultPlan`]).
+    pub crash_prob: f64,
+    /// Directory for the real shard store the sim writes through to.
+    /// **Recreated from scratch** at the start of every run.
+    pub db_dir: PathBuf,
+    /// Path for the hash-chained audit log of every decision.  Also
+    /// recreated per run.
+    pub audit_path: PathBuf,
+}
+
+impl SimConfig {
+    /// The CI-gated configuration: a 1000-platform fleet drained by 8
+    /// workers under churn, sized to converge within the run.
+    pub fn fleet(root: &std::path::Path, seed: u64) -> SimConfig {
+        SimConfig {
+            platforms: 1000,
+            workers: 8,
+            duration_s: 7200,
+            seed,
+            ttl_s: 600,
+            lease_ttl_s: 60,
+            scan_every_s: 60,
+            traffic_per_s: 2.0,
+            drift_platforms: 10,
+            crash_prob: 0.05,
+            db_dir: root.join("shards"),
+            audit_path: root.join("audit.log"),
+        }
+    }
+
+    /// A smoke-sized variant (fast enough for unit tests and
+    /// `BENCH_QUICK=1`): same mechanics, smaller fleet.
+    pub fn smoke(root: &std::path::Path, seed: u64) -> SimConfig {
+        SimConfig {
+            platforms: 60,
+            workers: 4,
+            duration_s: 900,
+            drift_platforms: 2,
+            ..SimConfig::fleet(root, seed)
+        }
+    }
+}
+
+/// What a finished run reports — the bench serializes this as the
+/// machine-readable `JSON:` tail and gates on it.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct SimReport {
+    /// Seed the run derived from.
+    pub seed: u64,
+    /// Population size actually simulated.
+    pub platforms: usize,
+    /// Worker count actually simulated.
+    pub workers: usize,
+    /// Sim-seconds simulated.
+    pub duration_s: u64,
+    /// Tasks the scan enqueued (initial backlog + drift + re-scans).
+    pub tasks_enqueued: u64,
+    /// Tasks requeued by lease expiry (crashes and slow executions).
+    pub tasks_requeued: u64,
+    /// Tasks dropped after exhausting their attempt budget.
+    pub tasks_dropped: u64,
+    /// Executions workers finished (including ones that turned out to
+    /// be duplicates).
+    pub executions: u64,
+    /// Executions that settled their task.
+    pub completions: u64,
+    /// Executions wasted: the task was already settled by another
+    /// worker when this one reported back.
+    pub duplicates: u64,
+    /// `duplicates / executions` (0 when nothing executed).
+    pub duplicate_rate: f64,
+    /// Sim-seconds from the first scan until every initially-stale
+    /// identity had been refreshed; `None` if the run ended first.
+    pub convergence_s: Option<u64>,
+    /// Lookup + portfolio queries served.
+    pub serves: u64,
+    /// Serves answered from the asking platform's own data.
+    pub exact_hits: u64,
+    /// Serves answered by cross-platform transfer.
+    pub transfers: u64,
+    /// Serves with nothing to offer.
+    pub misses: u64,
+    /// Median age of served lookup entries, sim-seconds.
+    pub staleness_p50_s: u64,
+    /// 95th-percentile age of served lookup entries.
+    pub staleness_p95_s: u64,
+    /// 99th-percentile age of served lookup entries.
+    pub staleness_p99_s: u64,
+    /// Entries appended to the audit log (verified before reporting).
+    pub audit_entries: u64,
+}
+
+impl SimReport {
+    /// JSON view — the bench's `JSON:` tail.
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("seed", json::int(self.seed as i64)),
+            ("platforms", json::int(self.platforms as i64)),
+            ("workers", json::int(self.workers as i64)),
+            ("duration_s", json::int(self.duration_s as i64)),
+            ("tasks_enqueued", json::int(self.tasks_enqueued as i64)),
+            ("tasks_requeued", json::int(self.tasks_requeued as i64)),
+            ("tasks_dropped", json::int(self.tasks_dropped as i64)),
+            ("executions", json::int(self.executions as i64)),
+            ("completions", json::int(self.completions as i64)),
+            ("duplicates", json::int(self.duplicates as i64)),
+            ("duplicate_rate", json::num(self.duplicate_rate)),
+            (
+                "convergence_s",
+                self.convergence_s.map(|s| json::int(s as i64)).unwrap_or(Json::Null),
+            ),
+            ("serves", json::int(self.serves as i64)),
+            ("exact_hits", json::int(self.exact_hits as i64)),
+            ("transfers", json::int(self.transfers as i64)),
+            ("misses", json::int(self.misses as i64)),
+            ("staleness_p50_s", json::int(self.staleness_p50_s as i64)),
+            ("staleness_p95_s", json::int(self.staleness_p95_s as i64)),
+            ("staleness_p99_s", json::int(self.staleness_p99_s as i64)),
+            ("audit_entries", json::int(self.audit_entries as i64)),
+        ])
+    }
+}
+
+/// What one simulated worker is doing.
+enum WorkerState {
+    Idle,
+    Busy { lease_id: u64, task: TuningTask, done_at: u64 },
+    Crashed { until: u64 },
+}
+
+/// Per-platform bookkeeping alongside the shard mirror: its current
+/// (possibly drifted) fingerprint and what traffic can ask it for.
+struct PlatMeta {
+    fp: Fingerprint,
+    pairs: Vec<(String, String)>,
+}
+
+/// The non-native (kernel, workload) menu platforms are seeded from.
+const WORKLOADS: [(&str, &str); 3] =
+    [("axpy", "n4096"), ("dot", "n1024"), ("stencil3", "r1024")];
+
+/// Sim-seconds a simulated execution takes, by task kind.  Every 211th
+/// execution is pathologically slow (outlives its lease), which is the
+/// seeded source of duplicate work the bench gates at ≤ 1%.
+fn exec_secs(kind: TaskKind, rng: &mut Rng, serial: u64, lease_ttl_s: u64) -> u64 {
+    if serial % 211 == 210 {
+        return lease_ttl_s + 15;
+    }
+    match kind {
+        TaskKind::Retune => 5 + rng.gen_range(10) as u64,
+        TaskKind::Sweep => 8 + rng.gen_range(12) as u64,
+        TaskKind::PortfolioRebuild => 10 + rng.gen_range(15) as u64,
+    }
+}
+
+/// A synthetic fingerprint for population index `i` — eight hardware
+/// families with per-machine cache/core variation, so transfer ranking
+/// has genuine neighborhoods to find.
+fn synth_fp(i: usize, rng: &mut Rng) -> Fingerprint {
+    const SIMD: [&[&str]; 8] = [
+        &["sse2"],
+        &["sse2", "avx"],
+        &["sse2", "avx", "avx2"],
+        &["avx2", "fma"],
+        &["avx2", "avx512f"],
+        &["neon"],
+        &["neon", "sve"],
+        &["avx2", "fma", "avx512f"],
+    ];
+    let family = i % SIMD.len();
+    Fingerprint {
+        cpu_model: format!("SimCPU f{family} m{i}"),
+        num_cpus: [4usize, 8, 16, 32, 64][rng.gen_range(5)],
+        simd: SIMD[family].iter().map(|s| s.to_string()).collect(),
+        cache_l1d_kb: [32u64, 48, 64][rng.gen_range(3)],
+        cache_l2_kb: [512u64, 1024, 2048][rng.gen_range(3)],
+        cache_l3_kb: [4096u64, 8192, 16384, 32768][rng.gen_range(4)],
+        os: if family >= 5 { "darwin".into() } else { "linux".into() },
+    }
+}
+
+/// A synthetic tuning record.
+fn synth_entry(
+    platform_key: &str,
+    kernel: &str,
+    tag: &str,
+    config_id: &str,
+    recorded_at: u64,
+    rng: &mut Rng,
+) -> DbEntry {
+    let best = 0.5e-3 + rng.next_f64() * 2e-3;
+    DbEntry {
+        platform_key: platform_key.into(),
+        kernel: kernel.into(),
+        tag: tag.into(),
+        best_params: [("block_size".to_string(), [128i64, 256, 512][rng.gen_range(3)])]
+            .into_iter()
+            .collect(),
+        best_config_id: config_id.into(),
+        best_time_s: best,
+        baseline_time_s: best * (1.5 + rng.next_f64()),
+        reference_time_s: best * 0.9,
+        evaluations: 8,
+        strategy: "sim".into(),
+        recorded_at,
+    }
+}
+
+/// A minimal but well-formed gemm portfolio (feature contract intact,
+/// so selection on it works like the real thing).
+fn synth_portfolio(built_at: u64, rng: &mut Rng) -> Portfolio {
+    let tile = [32i64, 64, 128][rng.gen_range(3)];
+    Portfolio {
+        kernel: "gemm".into(),
+        strategy: "sim".into(),
+        k_max: 2,
+        retained: 0.9 + rng.next_f64() * 0.09,
+        built_at,
+        feature_names: FEATURE_NAMES.iter().map(|s| s.to_string()).collect(),
+        items: vec![PortfolioItem {
+            config: [("tile_m".to_string(), tile)].into_iter().collect(),
+            config_id: format!("sim_t{tile}"),
+            centroid: vec![8.0, 8.0, 8.0, 1.0, 0.0],
+            covered: vec!["m256_n256_k256".into()],
+        }],
+    }
+}
+
+/// Knuth Poisson sampler — deterministic given the shared [`Rng`].
+fn poisson(lambda: f64, rng: &mut Rng) -> u64 {
+    let l = (-lambda).exp();
+    let mut k = 0u64;
+    let mut p = 1.0;
+    loop {
+        p *= rng.next_f64();
+        if p <= l {
+            return k;
+        }
+        k += 1;
+    }
+}
+
+fn percentile(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = (p * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Similarity as audit-friendly permille (no floats in the log).
+fn sim_pm(similarity: f64) -> u64 {
+    (similarity.clamp(0.0, 1.0) * 1000.0).round() as u64
+}
+
+/// The whole simulated world: real engines plus synthetic population.
+struct Fleet<'a> {
+    cfg: &'a SimConfig,
+    db: ShardedDb,
+    audit: AuditLog,
+    plan: FaultPlan,
+    rng: Rng,
+    mirror: Vec<Shard>,
+    meta: Vec<PlatMeta>,
+    index: BTreeMap<String, usize>,
+    initial: BTreeSet<TaskIdentity>,
+    queue: TaskQueue,
+    workers: Vec<WorkerState>,
+    host: Fingerprint,
+    drifts: BTreeMap<u64, Vec<usize>>,
+    report: SimReport,
+    ages: Vec<u64>,
+    executions_started: u64,
+    alien_serial: usize,
+    start: u64,
+}
+
+impl<'a> Fleet<'a> {
+    /// Build the world: seed the population (every entry stale at t0),
+    /// write it through to the real store, and schedule drift events.
+    fn new(cfg: &'a SimConfig) -> Result<Fleet<'a>> {
+        let mut rng = Rng::new(cfg.seed);
+        std::fs::remove_dir_all(&cfg.db_dir).ok();
+        std::fs::remove_file(&cfg.audit_path).ok();
+        std::fs::remove_file(crate::service::audit::head_path(&cfg.audit_path)).ok();
+        if let Some(parent) = cfg.audit_path.parent() {
+            std::fs::create_dir_all(parent).ok();
+        }
+        let db = ShardedDb::open(&cfg.db_dir)?;
+        let audit = AuditLog::open(&cfg.audit_path)?;
+        let plan =
+            FaultPlan::from_spec(&format!("worker.crash:{}", cfg.crash_prob), cfg.seed)?;
+
+        let mut mirror = Vec::with_capacity(cfg.platforms);
+        let mut meta = Vec::with_capacity(cfg.platforms);
+        let mut index = BTreeMap::new();
+        let mut initial = BTreeSet::new();
+        for i in 0..cfg.platforms {
+            let fp = synth_fp(i, &mut rng);
+            let key = fp.key();
+            let mut pairs = vec![("axpy".to_string(), "n4096".to_string()), {
+                let (k, t) = WORKLOADS[1 + rng.gen_range(2)];
+                (k.to_string(), t.to_string())
+            }];
+            let has_gemm = i % 3 == 0;
+            let has_portfolio = i % 10 == 0;
+            if has_gemm {
+                pairs.push(("gemm".to_string(), "m256_n256_k256".to_string()));
+            }
+            let entries: Vec<DbEntry> = pairs
+                .iter()
+                .map(|(k, t)| synth_entry(&key, k, t, "seed_cfg", 0, &mut rng))
+                .collect();
+            db.record_many(&key, Some(&fp), entries.clone())?;
+            let mut shard = Shard {
+                platform_key: key.clone(),
+                fingerprint: Some(fp.clone()),
+                entries,
+                portfolios: Vec::new(),
+            };
+            for (k, t) in &pairs {
+                if k == "gemm" {
+                    if !has_portfolio {
+                        initial.insert((TaskKind::Sweep, key.clone(), k.clone(), None));
+                    }
+                } else {
+                    initial.insert((TaskKind::Retune, key.clone(), k.clone(), Some(t.clone())));
+                }
+            }
+            if has_portfolio {
+                let p = synth_portfolio(0, &mut rng);
+                db.record_portfolio(&key, Some(&fp), p.clone())?;
+                shard.portfolios.push(p);
+                initial.insert((TaskKind::PortfolioRebuild, key.clone(), "gemm".into(), None));
+            }
+            index.insert(key, i);
+            meta.push(PlatMeta { fp, pairs });
+            mirror.push(shard);
+        }
+        let host = synth_fp(usize::MAX / 2, &mut rng);
+
+        // Drift schedule: deterministic platforms at deterministic
+        // times in the back half of the run (after most of the backlog
+        // has drained).
+        let start = cfg.ttl_s + 1;
+        let mut drifts: BTreeMap<u64, Vec<usize>> = BTreeMap::new();
+        for d in 0..cfg.drift_platforms.min(cfg.platforms) {
+            let at = start + cfg.duration_s * (6 + (d as u64 % 3)) / 10 + d as u64;
+            drifts.entry(at).or_default().push(rng.gen_range(cfg.platforms));
+        }
+
+        let report = SimReport {
+            seed: cfg.seed,
+            platforms: cfg.platforms,
+            workers: cfg.workers,
+            duration_s: cfg.duration_s,
+            ..SimReport::default()
+        };
+        Ok(Fleet {
+            cfg,
+            db,
+            audit,
+            plan,
+            rng,
+            mirror,
+            meta,
+            index,
+            initial,
+            queue: TaskQueue::new(cfg.ttl_s),
+            workers: (0..cfg.workers).map(|_| WorkerState::Idle).collect(),
+            host,
+            drifts,
+            report,
+            ages: Vec::new(),
+            executions_started: 0,
+            alien_serial: 0,
+            start,
+        })
+    }
+
+    fn audit(&self, now: u64, event: AuditEvent) -> Result<()> {
+        self.audit.append_at(now, event).map(|_| ())
+    }
+
+    /// The machine under a stable key changes hardware.  The store
+    /// keeps accepting records under the old key — exactly the
+    /// inconsistency the scan's drift rule exists to catch.
+    fn drift(&mut self, i: usize, now: u64) -> Result<()> {
+        let mut fp = self.meta[i].fp.clone();
+        fp.cache_l2_kb *= 2;
+        fp.num_cpus *= 2;
+        self.meta[i].fp = fp.clone();
+        let key = self.mirror[i].platform_key.clone();
+        let marker =
+            synth_entry(&key, "axpy", "n4096", &format!("drift_t{now}"), now, &mut self.rng);
+        self.db.record(Some(&fp), marker.clone())?;
+        self.audit(
+            now,
+            AuditEvent::RecordAccepted {
+                platform: key,
+                kernel: marker.kernel.clone(),
+                tag: marker.tag.clone(),
+                config: marker.best_config_id.clone(),
+            },
+        )?;
+        self.mirror[i].fingerprint = Some(fp);
+        self.mirror[i].entries.push(marker);
+        Ok(())
+    }
+
+    /// One finished execution reports back: settle the lease and, if
+    /// this worker won, refresh the task's data (write-through to the
+    /// mirror and the real store).
+    fn finish(&mut self, task: &TuningTask, lease_id: u64, now: u64) -> Result<()> {
+        self.report.executions += 1;
+        match self.queue.complete(lease_id) {
+            CompleteOutcome::Settled => {}
+            CompleteOutcome::Duplicate | CompleteOutcome::Unknown => {
+                self.report.duplicates += 1;
+                return Ok(());
+            }
+        }
+        self.report.completions += 1;
+        self.initial.remove(&task.identity());
+        self.audit(now, AuditEvent::TaskCompleted { lease_id })?;
+        let idx = self.index[&task.platform_key];
+        let fp = self.meta[idx].fp.clone();
+        let mut fresh: Vec<DbEntry> = Vec::new();
+        match task.kind {
+            TaskKind::Retune => {
+                let tag = task.tag.clone().unwrap_or_default();
+                fresh.push(synth_entry(
+                    &task.platform_key,
+                    &task.kernel,
+                    &tag,
+                    &format!("cfg_t{now}"),
+                    now,
+                    &mut self.rng,
+                ));
+            }
+            TaskKind::Sweep | TaskKind::PortfolioRebuild => {
+                for (k, t) in self.meta[idx].pairs.clone() {
+                    if k == task.kernel {
+                        fresh.push(synth_entry(
+                            &task.platform_key,
+                            &k,
+                            &t,
+                            &format!("cfg_t{now}"),
+                            now,
+                            &mut self.rng,
+                        ));
+                    }
+                }
+            }
+        }
+        if task.kind == TaskKind::PortfolioRebuild {
+            let p = synth_portfolio(now, &mut self.rng);
+            self.db.record_portfolio(&task.platform_key, Some(&fp), p.clone())?;
+            let shard = &mut self.mirror[idx];
+            shard.portfolios.retain(|q| q.kernel != p.kernel);
+            shard.portfolios.push(p);
+        }
+        if !fresh.is_empty() {
+            self.db.record_many(&task.platform_key, Some(&fp), fresh.clone())?;
+            for e in &fresh {
+                self.audit(
+                    now,
+                    AuditEvent::RecordAccepted {
+                        platform: e.platform_key.clone(),
+                        kernel: e.kernel.clone(),
+                        tag: e.tag.clone(),
+                        config: e.best_config_id.clone(),
+                    },
+                )?;
+            }
+            self.mirror[idx].entries.extend(fresh);
+        }
+        Ok(())
+    }
+
+    /// Serve one query against the mirror, the way the daemon would:
+    /// exact data when the platform has it, transfer ranking when it
+    /// does not, an honest miss otherwise.
+    fn serve_one(&mut self, now: u64) -> Result<()> {
+        self.report.serves += 1;
+        let wants_portfolio = self.rng.next_f64() < 0.1;
+        let alien = self.rng.next_f64() < 0.1;
+        let (platform, kernel, workload, reason, age) = if alien {
+            // A platform the store has never seen: transfer is the
+            // only possible answer.
+            self.alien_serial += 1;
+            let fp = synth_fp(usize::MAX - self.alien_serial, &mut self.rng);
+            if wants_portfolio {
+                match transfer::rank_portfolios(&self.mirror, &fp, "gemm", &fp.key()).first() {
+                    Some(c) => (
+                        fp.key(),
+                        "gemm".to_string(),
+                        None,
+                        ServeReason::Transfer {
+                            source: c.platform_key.clone(),
+                            similarity_pm: sim_pm(c.similarity),
+                        },
+                        None,
+                    ),
+                    None => (fp.key(), "gemm".to_string(), None, ServeReason::Miss, None),
+                }
+            } else {
+                let (k, t) = WORKLOADS[self.rng.gen_range(WORKLOADS.len())];
+                match transfer::rank_candidates(&self.mirror, &fp, k, t, &fp.key()).first() {
+                    Some(c) => (
+                        fp.key(),
+                        k.to_string(),
+                        Some(t.to_string()),
+                        ServeReason::Transfer {
+                            source: c.platform_key.clone(),
+                            similarity_pm: sim_pm(c.similarity),
+                        },
+                        Some(now.saturating_sub(c.entry.recorded_at)),
+                    ),
+                    None => (fp.key(), k.to_string(), Some(t.to_string()), ServeReason::Miss, None),
+                }
+            }
+        } else {
+            let i = self.rng.gen_range(self.cfg.platforms);
+            let shard = &self.mirror[i];
+            if wants_portfolio {
+                match shard.portfolio("gemm") {
+                    Some(_) => (
+                        shard.platform_key.clone(),
+                        "gemm".to_string(),
+                        None,
+                        ServeReason::Exact,
+                        None,
+                    ),
+                    None => (
+                        shard.platform_key.clone(),
+                        "gemm".to_string(),
+                        None,
+                        ServeReason::Miss,
+                        None,
+                    ),
+                }
+            } else {
+                let (k, t) = self.meta[i].pairs[self.rng.gen_range(self.meta[i].pairs.len())].clone();
+                match shard.latest(&k, &t) {
+                    Some(e) => (
+                        shard.platform_key.clone(),
+                        k,
+                        Some(t),
+                        ServeReason::Exact,
+                        Some(now.saturating_sub(e.recorded_at)),
+                    ),
+                    None => (shard.platform_key.clone(), k, Some(t), ServeReason::Miss, None),
+                }
+            }
+        };
+        match &reason {
+            ServeReason::Exact => self.report.exact_hits += 1,
+            ServeReason::Miss => self.report.misses += 1,
+            _ => self.report.transfers += 1,
+        }
+        if let Some(age) = age {
+            self.ages.push(age);
+        }
+        let op = if wants_portfolio { "portfolio" } else { "lookup" };
+        self.audit(
+            now,
+            AuditEvent::Served { op: op.into(), platform, kernel, workload, reason },
+        )
+    }
+
+    /// One sim-second: drift, scan, expiry, workers, traffic,
+    /// convergence check — in that fixed order.
+    fn tick(&mut self, now: u64) -> Result<()> {
+        if let Some(idxs) = self.drifts.get(&now).cloned() {
+            for i in idxs {
+                self.drift(i, now)?;
+            }
+        }
+
+        if (now - self.start) % self.cfg.scan_every_s == 0 {
+            let host = self.host.clone();
+            for task in self.queue.scan_report(&self.mirror, &host, now) {
+                self.report.tasks_enqueued += 1;
+                self.audit.append_at(
+                    now,
+                    AuditEvent::TaskEnqueued {
+                        kind: task.kind.as_str().to_string(),
+                        platform: task.platform_key.clone(),
+                        kernel: task.kernel.clone(),
+                        tag: task.tag.clone(),
+                        reason: task.reason.as_str().to_string(),
+                    },
+                )?;
+            }
+        }
+
+        let expired = self.queue.expire_report(now);
+        for t in &expired.requeued {
+            self.report.tasks_requeued += 1;
+            self.audit(
+                now,
+                AuditEvent::TaskRequeued {
+                    kind: t.kind.as_str().to_string(),
+                    platform: t.platform_key.clone(),
+                    kernel: t.kernel.clone(),
+                    attempts: t.attempts as u64,
+                },
+            )?;
+        }
+        for t in &expired.dropped {
+            self.report.tasks_dropped += 1;
+            self.audit(
+                now,
+                AuditEvent::TaskDropped {
+                    kind: t.kind.as_str().to_string(),
+                    platform: t.platform_key.clone(),
+                    kernel: t.kernel.clone(),
+                    attempts: t.attempts as u64,
+                },
+            )?;
+        }
+
+        for w in 0..self.cfg.workers {
+            let state = std::mem::replace(&mut self.workers[w], WorkerState::Idle);
+            self.workers[w] = match state {
+                WorkerState::Busy { lease_id, task, done_at } if now >= done_at => {
+                    self.finish(&task, lease_id, now)?;
+                    WorkerState::Idle
+                }
+                WorkerState::Crashed { until } if now >= until => WorkerState::Idle,
+                other => other,
+            };
+            if matches!(self.workers[w], WorkerState::Idle) {
+                if let Some((lease_id, task)) =
+                    self.queue.lease(None, None, self.cfg.lease_ttl_s, now)
+                {
+                    self.audit(
+                        now,
+                        AuditEvent::TaskLeased {
+                            lease_id,
+                            kind: task.kind.as_str().to_string(),
+                            platform: task.platform_key.clone(),
+                            kernel: task.kernel.clone(),
+                        },
+                    )?;
+                    let secs = exec_secs(
+                        task.kind,
+                        &mut self.rng,
+                        self.executions_started,
+                        self.cfg.lease_ttl_s,
+                    );
+                    self.executions_started += 1;
+                    self.workers[w] = if self.plan.decide(InjectionPoint::WorkerCrash) {
+                        // Crash before settling: the lease is orphaned
+                        // and only its TTL recovers the task.
+                        WorkerState::Crashed { until: now + 45 }
+                    } else {
+                        WorkerState::Busy { lease_id, task, done_at: now + secs }
+                    };
+                }
+            }
+        }
+
+        for _ in 0..poisson(self.cfg.traffic_per_s, &mut self.rng) {
+            self.serve_one(now)?;
+        }
+
+        // Convergence: the cold backlog is fully refreshed.  The queue
+        // may well hold *new* work by now (re-aged data, drift) — that
+        // is steady-state churn, not backlog.
+        if self.report.convergence_s.is_none() && self.initial.is_empty() {
+            self.report.convergence_s = Some(now - self.start);
+        }
+        Ok(())
+    }
+}
+
+/// Run one simulation to completion and return its report.  Fails if
+/// the audit log does not verify or the shard store on disk disagrees
+/// with the in-memory mirror (a write-through was lost).
+pub fn run(cfg: &SimConfig) -> Result<SimReport> {
+    let mut fleet = Fleet::new(cfg)?;
+    let (start, end) = (fleet.start, fleet.start + cfg.duration_s);
+    for now in start..end {
+        fleet.tick(now)?;
+    }
+
+    let Fleet { db, audit, mirror, mut report, mut ages, .. } = fleet;
+    if report.executions > 0 {
+        report.duplicate_rate = report.duplicates as f64 / report.executions as f64;
+    }
+    ages.sort_unstable();
+    report.staleness_p50_s = percentile(&ages, 0.50);
+    report.staleness_p95_s = percentile(&ages, 0.95);
+    report.staleness_p99_s = percentile(&ages, 0.99);
+    report.audit_entries = audit.appended();
+
+    // The run's own evidence must hold up before we report anything.
+    let verified = verify_log(&cfg.audit_path)
+        .map_err(|e| anyhow::anyhow!("simulation audit log failed verification: {e}"))?;
+    anyhow::ensure!(
+        verified.entries == report.audit_entries,
+        "audit log lost entries: wrote {}, verified {}",
+        report.audit_entries,
+        verified.entries
+    );
+    let on_disk = db.all_shards().context("re-reading the store the sim wrote")?;
+    let disk_entries: usize = on_disk.iter().map(|s| s.entries.len()).sum();
+    let mirror_entries: usize = mirror.iter().map(|s| s.entries.len()).sum();
+    anyhow::ensure!(
+        on_disk.len() == mirror.len() && disk_entries == mirror_entries,
+        "write-through mismatch: disk has {} shards / {} entries, mirror {} / {}",
+        on_disk.len(),
+        disk_entries,
+        mirror.len(),
+        mirror_entries
+    );
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("portatune-sim-{name}-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn smoke_sim_converges_with_bounded_duplicates() {
+        let root = tmp("smoke");
+        let report = run(&SimConfig::smoke(&root, 7)).unwrap();
+        assert!(report.convergence_s.is_some(), "backlog never drained: {report:?}");
+        assert!(report.tasks_enqueued >= report.platforms as u64, "{report:?}");
+        assert!(report.duplicate_rate <= 0.01, "duplicate work too high: {report:?}");
+        assert!(report.serves > 0 && report.exact_hits > 0, "{report:?}");
+        assert!(report.audit_entries > 0);
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn same_seed_is_bit_identical_different_seed_is_not() {
+        let (ra, rb, rc) = (tmp("det-a"), tmp("det-b"), tmp("det-c"));
+        let mut cfg_a = SimConfig::smoke(&ra, 42);
+        cfg_a.platforms = 30;
+        cfg_a.duration_s = 600;
+        let mut cfg_b = cfg_a.clone();
+        cfg_b.db_dir = rb.join("shards");
+        cfg_b.audit_path = rb.join("audit.log");
+        let a = run(&cfg_a).unwrap();
+        let b = run(&cfg_b).unwrap();
+        assert_eq!(a, b, "same seed must reproduce the same report");
+        assert_eq!(
+            std::fs::read(&cfg_a.audit_path).unwrap(),
+            std::fs::read(&cfg_b.audit_path).unwrap(),
+            "same seed must reproduce the same audit log bytes"
+        );
+        let mut cfg_c = cfg_a.clone();
+        cfg_c.db_dir = rc.join("shards");
+        cfg_c.audit_path = rc.join("audit.log");
+        cfg_c.seed = 43;
+        let c = run(&cfg_c).unwrap();
+        assert_ne!(a, c, "a different seed must be a different run");
+        // Not just the (seed-carrying) report: the decision sequence
+        // itself must actually diverge.
+        assert_ne!(
+            std::fs::read(&cfg_a.audit_path).unwrap(),
+            std::fs::read(&cfg_c.audit_path).unwrap(),
+            "a different seed must produce a different decision log"
+        );
+        for d in [ra, rb, rc] {
+            std::fs::remove_dir_all(&d).ok();
+        }
+    }
+
+    #[test]
+    fn drift_requeues_work_after_convergence() {
+        let root = tmp("drift");
+        let mut cfg = SimConfig::smoke(&root, 11);
+        cfg.drift_platforms = 4;
+        let report = run(&cfg).unwrap();
+        assert!(report.completions > 0 && report.convergence_s.is_some(), "{report:?}");
+        // Drift fires in the back half of the run; the scan must have
+        // caught it and queued work *because of* it, and the audit log
+        // must say so.
+        let entries = crate::service::audit::read_verified(&cfg.audit_path).unwrap();
+        let drift_enqueues = entries
+            .iter()
+            .filter(|e| {
+                matches!(&e.event, AuditEvent::TaskEnqueued { reason, .. }
+                    if reason == "fingerprint-drift")
+            })
+            .count();
+        assert!(drift_enqueues >= 1, "no drift-reason task in the audit log: {report:?}");
+        std::fs::remove_dir_all(&root).ok();
+    }
+}

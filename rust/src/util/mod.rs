@@ -7,4 +7,5 @@ pub mod bench;
 pub mod cli;
 pub mod json;
 pub mod rng;
+pub mod sha256;
 pub mod stats;

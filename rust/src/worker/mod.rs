@@ -49,6 +49,7 @@ use crate::coordinator::portfolio::{sweep_native, GemmSweep};
 use crate::coordinator::search::Exhaustive;
 use crate::coordinator::tuner::Tuner;
 use crate::runtime::{Registry, Runtime};
+use crate::service::audit::{AuditEvent, AuditLog};
 use crate::service::client::{Client, LeasedTask};
 use crate::service::faults::{self, InjectionPoint};
 use crate::service::protocol::Request;
@@ -76,6 +77,10 @@ pub struct WorkerOpts {
     pub k_max: usize,
     /// Retention target for rebuild tasks.
     pub target: f64,
+    /// Local audit log path (`--audit`); `None` leaves no worker-side
+    /// trail.  The worker's log is its own chain — it records what
+    /// *this* machine leased and settled, complementing the daemon's.
+    pub audit: Option<PathBuf>,
 }
 
 impl Default for WorkerOpts {
@@ -90,6 +95,7 @@ impl Default for WorkerOpts {
             any_platform: false,
             k_max: 4,
             target: 0.9,
+            audit: None,
         }
     }
 }
@@ -122,14 +128,34 @@ pub struct Worker {
     host: Fingerprint,
     host_key: String,
     opts: WorkerOpts,
+    audit: Option<AuditLog>,
 }
 
 impl Worker {
     /// A worker speaking to `client`, identifying as this machine.
+    /// An unopenable `--audit` path disables the trail (with a log
+    /// line) rather than killing the worker: auditing is evidence,
+    /// not a precondition for draining tasks.
     pub fn new(client: Client, opts: WorkerOpts) -> Worker {
         let host = Fingerprint::detect();
         let host_key = host.key();
-        Worker { client, host, host_key, opts }
+        let audit = opts.audit.as_ref().and_then(|p| match AuditLog::open(p) {
+            Ok(log) => Some(log),
+            Err(e) => {
+                eprintln!("[work] audit disabled ({e:#})");
+                None
+            }
+        });
+        Worker { client, host, host_key, opts, audit }
+    }
+
+    /// Append to the worker's local audit log, when one is open.
+    fn audit(&self, event: AuditEvent) {
+        if let Some(log) = &self.audit {
+            if let Err(e) = log.append(event) {
+                eprintln!("[work] audit append failed: {e:#}");
+            }
+        }
     }
 
     /// The platform key this worker records results under.
@@ -162,6 +188,12 @@ impl Worker {
         else {
             return Ok(None);
         };
+        self.audit(AuditEvent::TaskLeased {
+            lease_id: leased.lease_id,
+            kind: leased.task.kind.as_str().to_string(),
+            platform: leased.task.platform_key.clone(),
+            kernel: leased.task.kernel.clone(),
+        });
         let granted_ttl_s = if leased.ttl_s > 0 { leased.ttl_s } else { self.opts.lease_ttl_s };
         let heartbeat = HeartbeatGuard::spawn(
             self.client.clone(),
@@ -194,6 +226,7 @@ impl Worker {
                 self.client
                     .complete_task(leased.lease_id)
                     .context("reporting task completion")?;
+                self.audit(AuditEvent::TaskCompleted { lease_id: leased.lease_id });
                 Ok(Some(TaskReport {
                     lease_id: leased.lease_id,
                     task: leased.task,
@@ -206,6 +239,10 @@ impl Worker {
                 // Best-effort: if even the failure report cannot reach
                 // the daemon, the lease TTL requeues the task anyway.
                 let _ = self.client.fail_task(leased.lease_id, &detail);
+                self.audit(AuditEvent::TaskFailed {
+                    lease_id: leased.lease_id,
+                    error: detail.clone(),
+                });
                 Ok(Some(TaskReport {
                     lease_id: leased.lease_id,
                     task: leased.task,

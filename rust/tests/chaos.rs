@@ -28,6 +28,7 @@ use std::time::{Duration, Instant};
 
 use portatune::coordinator::perfdb::{unix_now, DbEntry, ShardedDb};
 use portatune::coordinator::platform::Fingerprint;
+use portatune::service::audit::{head_path, read_verified, verify_log, AuditEvent, AuditLog};
 use portatune::service::faults::{self, FaultPlan, InjectionPoint};
 use portatune::service::{Client, Request, RetryPolicy, ServeOpts, Server};
 use portatune::util::json::Json;
@@ -114,8 +115,19 @@ fn start_server(
     dir: &std::path::Path,
     opts: ServeOpts,
 ) -> (Arc<Server>, String, std::thread::JoinHandle<()>) {
+    start_server_audited(dir, opts, None)
+}
+
+fn start_server_audited(
+    dir: &std::path::Path,
+    opts: ServeOpts,
+    audit: Option<&std::path::Path>,
+) -> (Arc<Server>, String, std::thread::JoinHandle<()>) {
     let db = ShardedDb::open(dir).unwrap();
     let server = Arc::new(Server::new(db, fp(), opts));
+    if let Some(path) = audit {
+        server.enable_audit(Arc::new(AuditLog::open(path).unwrap()));
+    }
     let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap().to_string();
     let srv = Arc::clone(&server);
@@ -153,7 +165,9 @@ fn faulted_drain_loses_no_tasks_and_no_records() {
         db.record(None, entry("box-a", "axpy", &format!("n{i}"), "stale", 1000)).unwrap();
         db.record(None, entry("box-b", "dot", &format!("n{i}"), "stale", 1000)).unwrap();
     }
-    let (server, addr, serve_thread) = start_server(&dir, ServeOpts::default());
+    let audit_path = dir.join("audit.log");
+    let (server, addr, serve_thread) =
+        start_server_audited(&dir, ServeOpts::default(), Some(&audit_path));
     assert_eq!(server.scan_once().unwrap(), 10, "10 stale frontier entries queue 10 re-tunes");
 
     faults::install(FaultPlan::from_spec(DRAIN_SPEC, seed).unwrap());
@@ -254,6 +268,41 @@ fn faulted_drain_loses_no_tasks_and_no_records() {
     }
     let _ = client.call(&Request::Shutdown);
     serve_thread.join().unwrap();
+
+    // The audit log written under the fault schedule must verify
+    // intact, and its ledger must agree with the drainers: exactly 10
+    // task-completed entries, one per settled task.
+    let report = verify_log(&audit_path).expect("faulted run must leave a verifiable audit log");
+    assert!(report.entries >= 20, "expected enqueues + leases + settlements, got {report:?}");
+    let entries = read_verified(&audit_path).unwrap();
+    let settled = entries
+        .iter()
+        .filter(|e| matches!(e.event, AuditEvent::TaskCompleted { .. }))
+        .count();
+    assert_eq!(settled, 10, "audit ledger disagrees with the drainers");
+
+    // Tamper evidence: flip one byte inside a mid-log entry (on a copy)
+    // and verification must fail naming exactly that entry.
+    let tampered = dir.join("tampered.log");
+    let mut bytes = std::fs::read(&audit_path).unwrap();
+    let line_starts: Vec<usize> = std::iter::once(0)
+        .chain(bytes.iter().enumerate().filter(|(_, b)| **b == b'\n').map(|(i, _)| i + 1))
+        .collect();
+    let victim = entries.len() / 2;
+    bytes[line_starts[victim] + 4] ^= 0x01;
+    std::fs::write(&tampered, &bytes).unwrap();
+    std::fs::copy(head_path(&audit_path), head_path(&tampered)).unwrap();
+    let err = verify_log(&tampered).expect_err("a flipped byte must fail verification");
+    assert_eq!(err.index(), Some(victim as u64), "tamper must name the flipped entry: {err}");
+
+    // Truncation: drop the tail entries but keep the head sidecar —
+    // verification must fail naming the first missing entry.
+    let keep = entries.len() - 2;
+    let truncated_bytes = std::fs::read(&audit_path).unwrap();
+    std::fs::write(&tampered, &truncated_bytes[..line_starts[keep]]).unwrap();
+    let err = verify_log(&tampered).expect_err("a truncated tail must fail verification");
+    assert_eq!(err.index(), Some(keep as u64), "truncation must name the first lost entry: {err}");
+
     std::fs::remove_dir_all(&dir).ok();
 }
 
@@ -312,8 +361,16 @@ fn corrupt_shard_quarantines_and_recovers_over_the_wire() {
 
     let reply = client.call(&lookup("corrupt-box", "axpy", "n4096")).unwrap();
     assert_eq!(reply.get("found").and_then(Json::as_bool), Some(false));
-    let quarantined = std::path::PathBuf::from(format!("{}.corrupt", shard_file.display()));
-    assert!(quarantined.exists(), "torn shard must be quarantined, not deleted");
+    // Quarantine corpses are timestamped (`<shard>.corrupt.<ts>`), so
+    // count by marker rather than guessing the exact name.
+    let corpses = std::fs::read_dir(&dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| {
+            p.file_name().and_then(|n| n.to_str()).is_some_and(|n| n.contains(".corrupt."))
+        })
+        .count();
+    assert_eq!(corpses, 1, "torn shard must be quarantined, not deleted");
     assert!(!shard_file.exists(), "torn shard must be moved aside");
 
     client.record(entry("corrupt-box", "axpy", "n4096", "fresh", unix_now()), None).unwrap();
