@@ -13,7 +13,8 @@
 //! * duplicate work — executions finished after someone else already
 //!   settled the task — stays ≤ 1%;
 //! * staleness-at-serve percentiles are ordered and bounded by the
-//!   simulated horizon;
+//!   simulated horizon (plus the ≤25% overshoot of the telemetry
+//!   histogram's bucket upper bounds, which is what the sim reports);
 //! * the run's audit log passes hash-chain verification (enforced
 //!   inside [`portatune::sim::run`] itself) and the repeat run's log
 //!   is byte-identical.
@@ -127,10 +128,12 @@ fn main() -> anyhow::Result<()> {
             report.staleness_p50_s, report.staleness_p95_s, report.staleness_p99_s
         ));
     }
-    let horizon = cfg_a.ttl_s + cfg_a.duration_s;
+    // The sim reports histogram bucket upper bounds, which may sit up
+    // to 25% above the true percentile — the gate allows exactly that.
+    let horizon = (cfg_a.ttl_s + cfg_a.duration_s) * 5 / 4;
     if report.staleness_p99_s > horizon {
         fail(format!(
-            "staleness p99 {}s exceeds the simulated horizon {}s",
+            "staleness p99 {}s exceeds the simulated horizon {}s (with bucket slack)",
             report.staleness_p99_s, horizon
         ));
     }

@@ -18,7 +18,9 @@
 //!
 //! Fully hermetic (no XLA, no artifacts): the store is synthesized into
 //! a temp dir.  Machine-readable tail line: `JSON: {...}` with
-//! lookups/sec per path.
+//! lookups/sec per path plus per-path latency percentiles from the
+//! shared telemetry histogram (`portatune::obs`): p50/p95/p99 are
+//! log-scaled bucket upper bounds, at most 25% above the true value.
 //!
 //! Run: `cargo bench --bench serve_throughput` (BENCH_QUICK=1 to shrink).
 
@@ -26,6 +28,7 @@ use std::time::Instant;
 
 use portatune::coordinator::perfdb::{DbEntry, ShardedDb};
 use portatune::coordinator::platform::Fingerprint;
+use portatune::obs::Histogram;
 use portatune::report::Table;
 use portatune::service::{Request, ServeOpts, Server};
 use portatune::util::json::{self, Json};
@@ -77,13 +80,17 @@ fn synth_entry(platform_key: &str, kernel: &str, tag: &str, i: usize) -> DbEntry
     }
 }
 
-/// Time `n` calls of `f`; returns calls/sec.
-fn rate(n: usize, mut f: impl FnMut(usize)) -> f64 {
+/// Time `n` calls of `f`; returns calls/sec plus the per-call latency
+/// distribution (µs) in the shared telemetry bucket scheme.
+fn rate(n: usize, mut f: impl FnMut(usize)) -> (f64, Histogram) {
+    let hist = Histogram::new();
     let t0 = Instant::now();
     for i in 0..n {
+        let call = Instant::now();
         f(i);
+        hist.record(call.elapsed().as_micros() as u64);
     }
-    n as f64 / t0.elapsed().as_secs_f64().max(1e-9)
+    (n as f64 / t0.elapsed().as_secs_f64().max(1e-9), hist)
 }
 
 fn main() -> anyhow::Result<()> {
@@ -126,7 +133,7 @@ fn main() -> anyhow::Result<()> {
     // Cold: cache disabled, every lookup re-reads its shard file.
     let cold_opts = ServeOpts { lru_cap: 0, ..ServeOpts::default() };
     let cold_srv = Server::new(db.clone(), host.clone(), cold_opts);
-    let cold_per_s = rate(cold_n, |i| {
+    let (cold_per_s, cold_hist) = rate(cold_n, |i| {
         let reply = cold_srv.handle_request(&lookup_req(&keys[i % keys.len()], i));
         assert_eq!(reply.get("found").and_then(Json::as_bool), Some(true));
     });
@@ -136,7 +143,7 @@ fn main() -> anyhow::Result<()> {
     for i in 0..keys.len() * kernels.len() {
         let _ = warm_srv.handle_request(&lookup_req(&keys[i % keys.len()], i));
     }
-    let warm_per_s = rate(warm_n, |i| {
+    let (warm_per_s, warm_hist) = rate(warm_n, |i| {
         let reply = warm_srv.handle_request(&lookup_req(&keys[i % keys.len()], i));
         assert_eq!(reply.get("found").and_then(Json::as_bool), Some(true));
     });
@@ -152,7 +159,7 @@ fn main() -> anyhow::Result<()> {
         cache_l3_kb: 30720,
         os: "linux".to_string(),
     };
-    let transfer_per_s = rate(transfer_n, |i| {
+    let (transfer_per_s, transfer_hist) = rate(transfer_n, |i| {
         let (kernel, tag) = kernels[i % kernels.len()];
         let reply = warm_srv.handle_request(&Request::Deploy {
             platform: Some("fresh-platform-under-test".to_string()),
@@ -173,7 +180,7 @@ fn main() -> anyhow::Result<()> {
     let lease_srv = Server::new(db.clone(), host.clone(), ServeOpts::default());
     let queued = lease_srv.scan_once()?;
     let lease_n = queued.min(if quick { 50 } else { 300 });
-    let lease_per_s = rate(lease_n, |_| {
+    let (lease_per_s, lease_hist) = rate(lease_n, |_| {
         let reply = lease_srv.handle_request(&Request::TaskLease {
             kind: None,
             platform: None,
@@ -188,16 +195,19 @@ fn main() -> anyhow::Result<()> {
         assert_eq!(reply.get("settled").and_then(Json::as_bool), Some(true));
     });
 
-    let mut t = Table::new(&["path", "lookups/sec", "vs cold"]);
-    for (name, per_s) in [
-        ("cold shard", cold_per_s),
-        ("warm LRU", warm_per_s),
-        ("transfer miss", transfer_per_s),
-        ("lease cycle", lease_per_s),
+    let mut t = Table::new(&["path", "lookups/sec", "p50 us", "p95 us", "p99 us", "vs cold"]);
+    for (name, per_s, hist) in [
+        ("cold shard", cold_per_s, &cold_hist),
+        ("warm LRU", warm_per_s, &warm_hist),
+        ("transfer miss", transfer_per_s, &transfer_hist),
+        ("lease cycle", lease_per_s, &lease_hist),
     ] {
         t.row(vec![
             name.to_string(),
             format!("{per_s:.0}"),
+            hist.quantile(0.50).to_string(),
+            hist.quantile(0.95).to_string(),
+            hist.quantile(0.99).to_string(),
             format!("{:.1}x", per_s / cold_per_s),
         ]);
     }
@@ -219,6 +229,10 @@ fn main() -> anyhow::Result<()> {
         ("warm_lru_per_s", json::num(warm_per_s)),
         ("transfer_miss_per_s", json::num(transfer_per_s)),
         ("lease_cycle_per_s", json::num(lease_per_s)),
+        ("cold_latency_us", cold_hist.to_json()),
+        ("warm_latency_us", warm_hist.to_json()),
+        ("transfer_latency_us", transfer_hist.to_json()),
+        ("lease_latency_us", lease_hist.to_json()),
         ("warm_over_cold", json::num(speedup)),
         ("platforms", json::int(platforms as i64)),
     ]);

@@ -463,12 +463,16 @@ impl FileLock {
     }
 
     fn acquire(path: PathBuf) -> Result<FileLock> {
-        let deadline = Instant::now() + LOCK_TIMEOUT;
+        let started = Instant::now();
+        let deadline = started + LOCK_TIMEOUT;
         loop {
             match std::fs::OpenOptions::new().write(true).create_new(true).open(&path) {
                 Ok(mut f) => {
                     let _ = write!(f, "{}", Self::token());
                     let _ = f.sync_all();
+                    crate::obs::metrics()
+                        .lock_wait_us
+                        .record(started.elapsed().as_micros() as u64);
                     return Ok(FileLock { path });
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {

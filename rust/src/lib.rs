@@ -31,6 +31,7 @@
 #![warn(missing_docs)]
 
 pub mod coordinator;
+pub mod obs;
 pub mod report;
 pub mod runtime;
 pub mod service;

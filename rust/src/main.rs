@@ -16,6 +16,7 @@
 //! portatune portfolio build|show          "few fit most" variant portfolios
 //! portatune serve                         tuning-as-a-service daemon (shard store)
 //! portatune query --op deploy ...         ask a running daemon
+//! portatune metrics                       fetch a daemon's telemetry registry
 //! portatune work                          fleet worker: lease → execute → report
 //! portatune db-migrate                    import a v1 perfdb.json into shards
 //! portatune audit verify|replay           check / re-derive the decision log
@@ -39,6 +40,7 @@ use portatune::coordinator::search::{
     Anneal, Exhaustive, Genetic, HillClimb, NelderMead, RandomSearch, SearchStrategy,
 };
 use portatune::coordinator::tuner::Tuner;
+use portatune::obs;
 use portatune::report::{Fig1Report, Fig1Row, Table};
 use portatune::runtime::{Registry, Runtime};
 use portatune::service::audit::{read_verified, verify_log, AuditLog};
@@ -107,14 +109,24 @@ const USAGE: &str = "usage: portatune <subcommand> [flags]
                       [--audit PATH]  append every consequential decision
                         (lease/complete/fail/requeue, record, serve reason)
                         to a hash-chained tamper-evident log at PATH
+                      [--metrics-addr ADDR]  serve a Prometheus text page
+                        over HTTP at ADDR (e.g. 127.0.0.1:9090)
+                      [--trace PATH]  append Chrome-trace/Perfetto spans
+                        (connection, request, per-op) to PATH
+                      [--slow-ms N]  log requests slower than N ms as
+                        structured JSON lines on stderr (0 = off)
                       imports --db into the shard store at startup when present
   query             ask a running daemon (one JSON reply line on stdout)
                       e.g. portatune query --op lookup --kernel axpy --workload n4096
                       e.g. portatune query --op portfolio --kernel gemm --m 128 --n 128 --k 64
-                    flags: --op ping|lookup|deploy|stats|retune-next|portfolio|shutdown
+                    flags: --op ping|lookup|deploy|stats|metrics|retune-next|portfolio|shutdown
                       [--addr ADDR (default 127.0.0.1:7171) | --socket PATH]
                       [--kernel K] [--workload T] [--platform KEY]
                       [--m N --n N --k N]  portfolio-op dims for selection
+  metrics           fetch a daemon's telemetry registry (counters +
+                    latency histograms; shorthand for query --op metrics)
+                      e.g. portatune metrics --addr 127.0.0.1:7171
+                    flags: [--addr ADDR (default 127.0.0.1:7171) | --socket PATH]
   work              fleet worker: lease tasks from a daemon, execute them
                     (retune via artifacts, sweep / portfolio-rebuild
                     host-side), report results back
@@ -131,6 +143,9 @@ const USAGE: &str = "usage: portatune <subcommand> [flags]
                         injection (same spec grammar as serve)
                       [--audit PATH]  keep a worker-side hash-chained log of
                         leased/completed/failed tasks at PATH
+                      [--trace PATH]  append Chrome-trace/Perfetto spans
+                        (lease/execute/report + wire calls) to PATH; each
+                        task cycle carries one trace id the daemon echoes
   audit             inspect a hash-chained audit log written via --audit
                       verify: walk the chain; exit 0 if intact, non-zero
                               with the first bad entry index on tampering
@@ -218,6 +233,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("tune-annotated") => cmd_tune_annotated(args, &artifacts, &db_path),
         Some("serve") => cmd_serve(args, &artifacts, &db_path, &shards_dir),
         Some("query") => cmd_query(args),
+        Some("metrics") => cmd_metrics(args),
         Some("work") => cmd_work(args, &artifacts),
         Some("audit") => cmd_audit(args),
         Some("db-migrate") => cmd_db_migrate(args, &db_path, &shards_dir),
@@ -239,8 +255,20 @@ fn cmd_serve(args: &Args, artifacts: &Path, db_path: &Path, shards_dir: &Path) -
     let max_conns = args.get_parsed::<usize>("max-conns", defaults.max_conns)?;
     let conn_idle_s = args.get_parsed::<u64>("conn-idle", defaults.conn_idle_s)?;
     let audit_path = args.get("audit").map(PathBuf::from);
+    let metrics_addr = args.get("metrics-addr").map(str::to_string);
+    let trace_path = args.get("trace").map(PathBuf::from);
+    let slow_ms = args.get_parsed::<u64>("slow-ms", 0)?;
     install_faults(args)?;
     args.finish()?;
+
+    if let Some(path) = &trace_path {
+        obs::trace::install(path)?;
+        println!("trace spans: {}", path.display());
+    }
+    if slow_ms > 0 {
+        obs::set_slow_op_ms(slow_ms);
+        println!("slow-op log: requests over {slow_ms}ms");
+    }
 
     let db = ShardedDb::open(shards_dir)?;
     if db_path.exists() {
@@ -262,6 +290,17 @@ fn cmd_serve(args: &Args, artifacts: &Path, db_path: &Path, shards_dir: &Path) -
             .with_context(|| format!("opening audit log {}", path.display()))?;
         println!("audit log: {}", path.display());
         server.enable_audit(Arc::new(log));
+    }
+    if let Some(addr) = metrics_addr {
+        let listener = std::net::TcpListener::bind(&addr)
+            .with_context(|| format!("binding metrics address {addr}"))?;
+        println!("metrics: http://{addr}/metrics");
+        let srv = Arc::clone(&server);
+        std::thread::spawn(move || {
+            if let Err(e) = srv.run_metrics_http(listener) {
+                eprintln!("[serve] metrics responder died: {e:#}");
+            }
+        });
     }
     let _scan =
         Arc::clone(&server).spawn_scan(std::time::Duration::from_secs(scan_secs.max(1)));
@@ -329,6 +368,7 @@ fn cmd_query(args: &Args) -> Result<()> {
             fingerprint: Some(Fingerprint::detect()),
         },
         "stats" => Request::Stats,
+        "metrics" => Request::Metrics,
         "retune-next" => Request::RetuneNext,
         "portfolio" => {
             let given: std::collections::BTreeMap<String, i64> =
@@ -344,7 +384,7 @@ fn cmd_query(args: &Args) -> Result<()> {
         other => {
             return Err(anyhow::anyhow!(
                 "unknown query op {other}; expected \
-                 ping|lookup|deploy|stats|retune-next|portfolio|shutdown"
+                 ping|lookup|deploy|stats|metrics|retune-next|portfolio|shutdown"
             ))
         }
     };
@@ -356,6 +396,23 @@ fn cmd_query(args: &Args) -> Result<()> {
         None => Client::tcp(addr),
     };
     println!("{}", client.call(&request)?.compact());
+    Ok(())
+}
+
+/// Fetch a daemon's telemetry registry (pretty-printed JSON): the
+/// `metrics` wire op — counters plus latency-histogram summaries.
+fn cmd_metrics(args: &Args) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:7171");
+    let socket = args.get("socket").map(PathBuf::from);
+    args.finish()?;
+    let client = match socket {
+        #[cfg(unix)]
+        Some(path) => Client::unix(path),
+        #[cfg(not(unix))]
+        Some(_) => return Err(anyhow::anyhow!("--socket requires a unix platform; use --addr")),
+        None => Client::tcp(addr),
+    };
+    println!("{}", client.call(&Request::Metrics)?.pretty());
     Ok(())
 }
 
@@ -375,9 +432,14 @@ fn cmd_work(args: &Args, artifacts: &Path) -> Result<()> {
     let k_max = args.get_parsed::<usize>("k", 4)?;
     let target = args.get_parsed::<f64>("target", 0.9)?;
     let audit = args.get("audit").map(PathBuf::from);
+    let trace_path = args.get("trace").map(PathBuf::from);
     install_faults(args)?;
     args.finish()?;
 
+    if let Some(path) = &trace_path {
+        obs::trace::install(path)?;
+        println!("trace spans: {}", path.display());
+    }
     let client = match socket {
         #[cfg(unix)]
         Some(path) => Client::unix(path),

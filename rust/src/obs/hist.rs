@@ -1,0 +1,241 @@
+//! Lock-free log-scaled latency histogram.
+//!
+//! The recording surface the whole telemetry layer stands on: a fixed
+//! array of atomic bins, so `record` is one index computation plus one
+//! relaxed `fetch_add` — safe to call from every hot path, every
+//! thread, with no allocation and no lock.  The bucketing is HDR-style
+//! log-linear: values 0–3 get exact bins, and every power-of-two
+//! octave above that is split into four equal sub-buckets, so any
+//! reported bound overstates the true value by less than 25%.  That
+//! bound is what `quantile` returns — the *upper* edge of the bucket
+//! containing the requested rank — which keeps quantiles monotone in
+//! `q` and never under-reports a latency.
+//!
+//! Units are the caller's business: the serve path records
+//! microseconds, the task queue records seconds of queue age, the
+//! fleet simulation records virtual seconds of staleness.  One
+//! `u64`-valued histogram covers nanoseconds to centuries either way.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::json::{self, Json};
+
+/// Sub-buckets per power-of-two octave (4 ⇒ ≤ 25% bucket error).
+const SUB: usize = 4;
+
+/// Total bins: 4 exact bins for 0–3, then 4 sub-buckets for each of
+/// the 62 octaves `[2^2, 2^63)` — covering the entire `u64` range.
+pub const N_BINS: usize = SUB + 62 * SUB;
+
+/// A mergeable, thread-safe latency histogram with fixed log-scaled
+/// buckets (see the module docs for the scheme).
+#[derive(Debug)]
+pub struct Histogram {
+    bins: [AtomicU64; N_BINS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    /// An empty histogram.
+    pub fn new() -> Histogram {
+        Histogram {
+            bins: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// The bin index `value` lands in.
+    pub fn bucket_index(value: u64) -> usize {
+        if value < SUB as u64 {
+            return value as usize;
+        }
+        // Highest set bit m >= 2; the two bits below it pick the
+        // sub-bucket within the octave [2^m, 2^(m+1)).
+        let m = 63 - value.leading_zeros() as usize;
+        let sub = ((value >> (m - 2)) & 0b11) as usize;
+        SUB + (m - 2) * SUB + sub
+    }
+
+    /// Inclusive `(lo, hi)` value bounds of bin `idx`.
+    pub fn bucket_bounds(idx: usize) -> (u64, u64) {
+        assert!(idx < N_BINS, "bin index {idx} out of range");
+        if idx < SUB {
+            return (idx as u64, idx as u64);
+        }
+        let m = 2 + (idx - SUB) / SUB;
+        let sub = ((idx - SUB) % SUB) as u64;
+        let width = 1u64 << (m - 2);
+        let lo = (1u64 << m) + sub * width;
+        (lo, lo + (width - 1))
+    }
+
+    /// Record one observation.
+    pub fn record(&self, value: u64) {
+        self.bins[Self::bucket_index(value)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(value, Ordering::Relaxed);
+    }
+
+    /// Total observations recorded.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all recorded values (caller's unit).
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Whether nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.count() == 0
+    }
+
+    /// Mean recorded value (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum() as f64 / n as f64
+        }
+    }
+
+    /// A point-in-time copy of every bin count.
+    pub fn snapshot(&self) -> [u64; N_BINS] {
+        std::array::from_fn(|i| self.bins[i].load(Ordering::Relaxed))
+    }
+
+    /// Upper bound of the bucket holding the `q`-quantile observation
+    /// (nearest-rank over the bucketed counts; 0 when empty).  The
+    /// bound overstates the true value by < 25% — see module docs —
+    /// and is monotone non-decreasing in `q`.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let bins = self.snapshot();
+        let total: u64 = bins.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for (idx, &n) in bins.iter().enumerate() {
+            cum += n;
+            if cum >= rank {
+                return Self::bucket_bounds(idx).1;
+            }
+        }
+        // Unreachable (cum == total >= rank by the last bin), but a
+        // defensive max-bound beats a panic in a telemetry path.
+        u64::MAX
+    }
+
+    /// Fold `other`'s observations into `self` (bin-wise addition:
+    /// associative, commutative, and lossless on counts).
+    pub fn merge(&self, other: &Histogram) {
+        for (i, bin) in other.snapshot().iter().enumerate() {
+            if *bin > 0 {
+                self.bins[i].fetch_add(*bin, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(other.count(), Ordering::Relaxed);
+        self.sum.fetch_add(other.sum(), Ordering::Relaxed);
+    }
+
+    /// Summary object for the `metrics` wire op: count, sum, mean, and
+    /// the p50/p95/p99 bucket bounds (caller's unit throughout).
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("count", json::int(self.count() as i64)),
+            ("sum", json::int(self.sum() as i64)),
+            ("mean", json::num(self.mean())),
+            ("p50", json::int(self.quantile(0.50) as i64)),
+            ("p95", json::int(self.quantile(0.95) as i64)),
+            ("p99", json::int(self.quantile(0.99) as i64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_values_get_exact_bins() {
+        for v in 0..4u64 {
+            let idx = Histogram::bucket_index(v);
+            assert_eq!(Histogram::bucket_bounds(idx), (v, v));
+        }
+    }
+
+    #[test]
+    fn bounds_partition_the_range() {
+        // Consecutive bins tile u64 with no gaps or overlaps.
+        let mut expected_lo = 0u64;
+        for idx in 0..N_BINS {
+            let (lo, hi) = Histogram::bucket_bounds(idx);
+            assert_eq!(lo, expected_lo, "gap before bin {idx}");
+            assert!(hi >= lo);
+            expected_lo = hi.wrapping_add(1);
+        }
+        assert_eq!(expected_lo, 0, "last bin must end at u64::MAX");
+    }
+
+    #[test]
+    fn quantile_bound_is_within_25_percent() {
+        for v in [5u64, 100, 999, 123_456, 10_000_000_000] {
+            let h = Histogram::new();
+            h.record(v);
+            let q = h.quantile(0.99);
+            assert!(q >= v, "quantile must not under-report: {q} < {v}");
+            assert!((q as f64) < v as f64 * 1.25, "bucket error too wide: {q} for {v}");
+        }
+    }
+
+    #[test]
+    fn quantiles_walk_the_distribution() {
+        let h = Histogram::new();
+        for _ in 0..90 {
+            h.record(10);
+        }
+        for _ in 0..10 {
+            h.record(1000);
+        }
+        assert_eq!(h.count(), 100);
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        assert!(p50 >= 10 && p50 < 13, "p50 was {p50}");
+        assert!(p99 >= 1000 && p99 < 1250, "p99 was {p99}");
+        assert!((h.mean() - 109.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_adds_counts() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        a.record(7);
+        b.record(7);
+        b.record(70);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.sum(), 84);
+        assert_eq!(a.snapshot()[Histogram::bucket_index(7)], 2);
+    }
+
+    #[test]
+    fn empty_histogram_is_all_zero() {
+        let h = Histogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.mean(), 0.0);
+        let j = h.to_json();
+        assert_eq!(j.get("count").and_then(Json::as_u64), Some(0));
+    }
+}

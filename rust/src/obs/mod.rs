@@ -1,0 +1,286 @@
+//! End-to-end telemetry: the metrics registry, latency histograms,
+//! trace spans, and exposition formats.
+//!
+//! Three std-only pieces (see `docs/OBSERVABILITY.md` for the operator
+//! view):
+//!
+//! * [`hist::Histogram`] — the lock-free log-scaled latency histogram
+//!   everything records into;
+//! * [`trace`] — Chrome-trace/Perfetto span emission behind one
+//!   relaxed atomic load (the `faults.rs` discipline), plus the
+//!   wire-propagated `trace_id`;
+//! * this module — the process-wide [`Metrics`] registry, the
+//!   Prometheus text rendering behind `--metrics-addr`, and the
+//!   slow-op threshold behind `--slow-ms`.
+//!
+//! Monotonic *counters* deliberately stay where they were: the
+//! daemon's [`ServeStats`](crate::service::ServeStats) snapshot is
+//! already atomic, already on the wire (`stats`), and already
+//! documented — the registry adds the latency *distributions* those
+//! counters cannot express, and the exposition surfaces (`metrics`
+//! wire op, Prometheus page) merge both.
+//!
+//! Everything here is global by design, like `faults.rs`: telemetry
+//! is recorded from free functions, background threads, and both
+//! halves of the wire protocol, and threading a registry handle
+//! through all of them would couple every layer to this one.
+
+pub mod hist;
+pub mod trace;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+pub use hist::Histogram;
+
+use crate::util::json::{self, Json};
+
+/// Histogram labels for the per-op latency family: every wire op, the
+/// `error` label for unparseable lines, and an `other` fallback so an
+/// unknown label can never panic a telemetry path.
+pub const OP_LABELS: &[&str] = &[
+    "deploy",
+    "error",
+    "lookup",
+    "metrics",
+    "ping",
+    "portfolio",
+    "record",
+    "record-portfolio",
+    "retune-next",
+    "shutdown",
+    "stats",
+    "task-complete",
+    "task-fail",
+    "task-heartbeat",
+    "task-lease",
+    "other",
+];
+
+/// The process-wide latency-histogram registry.
+#[derive(Debug)]
+pub struct Metrics {
+    /// Per-op request latency (µs), one histogram per [`OP_LABELS`]
+    /// entry.
+    op_latency: Vec<Histogram>,
+    /// Shard-file read+parse time (µs) on decision-cache misses.
+    pub shard_read_us: Histogram,
+    /// Shard lock-file acquisition wait (µs) on the write path.
+    pub lock_wait_us: Histogram,
+    /// Decision/portfolio-cache hit latency (µs).
+    pub lru_hit_us: Histogram,
+    /// Transfer-ranking cost (µs): all-shard read + similarity scoring
+    /// on deploy/portfolio misses.
+    pub transfer_rank_us: Histogram,
+    /// Task age between enqueue and lease (seconds).
+    pub queue_age_at_lease_s: Histogram,
+    /// Worker task execution time (µs).
+    pub worker_execute_us: Histogram,
+    /// Worker result-reporting time (µs): the settle round-trip.
+    pub worker_report_us: Histogram,
+}
+
+impl Metrics {
+    fn new() -> Metrics {
+        Metrics {
+            op_latency: OP_LABELS.iter().map(|_| Histogram::new()).collect(),
+            shard_read_us: Histogram::new(),
+            lock_wait_us: Histogram::new(),
+            lru_hit_us: Histogram::new(),
+            transfer_rank_us: Histogram::new(),
+            queue_age_at_lease_s: Histogram::new(),
+            worker_execute_us: Histogram::new(),
+            worker_report_us: Histogram::new(),
+        }
+    }
+
+    /// The latency histogram for one op label (unknown labels fall
+    /// back to `other`).
+    pub fn op(&self, name: &str) -> &Histogram {
+        let idx = OP_LABELS.iter().position(|&l| l == name).unwrap_or(OP_LABELS.len() - 1);
+        &self.op_latency[idx]
+    }
+
+    /// Every histogram with its exposition name, seconds divisor, and
+    /// optional `op` label — the single source both exposition formats
+    /// render from.
+    fn catalog(&self) -> Vec<(&'static str, f64, Option<&'static str>, &Histogram)> {
+        let mut entries: Vec<(&'static str, f64, Option<&'static str>, &Histogram)> = OP_LABELS
+            .iter()
+            .zip(&self.op_latency)
+            .map(|(&label, h)| ("op_latency_seconds", 1e6, Some(label), h))
+            .collect();
+        entries.extend([
+            ("shard_read_seconds", 1e6, None, &self.shard_read_us),
+            ("lock_wait_seconds", 1e6, None, &self.lock_wait_us),
+            ("lru_hit_seconds", 1e6, None, &self.lru_hit_us),
+            ("transfer_rank_seconds", 1e6, None, &self.transfer_rank_us),
+            ("queue_age_at_lease_seconds", 1.0, None, &self.queue_age_at_lease_s),
+            ("worker_execute_seconds", 1e6, None, &self.worker_execute_us),
+            ("worker_report_seconds", 1e6, None, &self.worker_report_us),
+        ]);
+        entries
+    }
+
+    /// The full registry as JSON (the `metrics` wire op's payload):
+    /// per-op latency summaries nested under `op_latency_us`, each
+    /// named histogram beside it, all in the units they record.
+    pub fn to_json(&self) -> Json {
+        let ops = OP_LABELS
+            .iter()
+            .zip(&self.op_latency)
+            .map(|(&label, h)| (label.to_string(), h.to_json()))
+            .collect();
+        json::obj(vec![
+            ("op_latency_us", Json::Obj(ops)),
+            ("shard_read_us", self.shard_read_us.to_json()),
+            ("lock_wait_us", self.lock_wait_us.to_json()),
+            ("lru_hit_us", self.lru_hit_us.to_json()),
+            ("transfer_rank_us", self.transfer_rank_us.to_json()),
+            ("queue_age_at_lease_s", self.queue_age_at_lease_s.to_json()),
+            ("worker_execute_us", self.worker_execute_us.to_json()),
+            ("worker_report_us", self.worker_report_us.to_json()),
+        ])
+    }
+
+    /// Prometheus text-format rendering of every histogram in the
+    /// registry (`_bucket`/`_sum`/`_count` series, `le` in seconds).
+    /// Only buckets that hold observations are emitted (plus `+Inf`)
+    /// — 252 fixed bins per histogram would swamp the page.
+    pub fn prometheus_text(&self) -> String {
+        let mut out = String::new();
+        let mut last_family = "";
+        for (family, divisor, label, h) in self.catalog() {
+            if family != last_family {
+                out.push_str(&format!("# TYPE portatune_{family} histogram\n"));
+                last_family = family;
+            }
+            let labels = |le: Option<String>| -> String {
+                let mut parts = Vec::new();
+                if let Some(op) = label {
+                    parts.push(format!("op=\"{op}\""));
+                }
+                if let Some(le) = le {
+                    parts.push(format!("le=\"{le}\""));
+                }
+                if parts.is_empty() {
+                    String::new()
+                } else {
+                    format!("{{{}}}", parts.join(","))
+                }
+            };
+            let bins = h.snapshot();
+            let mut cum = 0u64;
+            for (idx, &n) in bins.iter().enumerate() {
+                if n == 0 {
+                    continue;
+                }
+                cum += n;
+                let le = Histogram::bucket_bounds(idx).1 as f64 / divisor;
+                out.push_str(&format!(
+                    "portatune_{family}_bucket{} {cum}\n",
+                    labels(Some(le.to_string()))
+                ));
+            }
+            out.push_str(&format!(
+                "portatune_{family}_bucket{} {cum}\n",
+                labels(Some("+Inf".to_string()))
+            ));
+            out.push_str(&format!(
+                "portatune_{family}_sum{} {}\n",
+                labels(None),
+                h.sum() as f64 / divisor
+            ));
+            out.push_str(&format!("portatune_{family}_count{} {}\n", labels(None), h.count()));
+        }
+        out
+    }
+}
+
+/// The process-wide metrics registry.
+pub fn metrics() -> &'static Metrics {
+    static METRICS: OnceLock<Metrics> = OnceLock::new();
+    METRICS.get_or_init(Metrics::new)
+}
+
+/// Slow-op threshold in microseconds; 0 disables the slow-op log.
+static SLOW_OP_US: AtomicU64 = AtomicU64::new(0);
+
+/// Arm the slow-op log: requests slower than `ms` milliseconds get a
+/// structured stderr line (0 disarms).
+pub fn set_slow_op_ms(ms: u64) {
+    SLOW_OP_US.store(ms.saturating_mul(1000), Ordering::SeqCst);
+}
+
+/// The armed slow-op threshold in microseconds (0 = off).
+pub fn slow_op_us() -> u64 {
+    SLOW_OP_US.load(Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn op_labels_resolve_and_unknown_falls_back() {
+        let m = Metrics::new();
+        m.op("lookup").record(10);
+        assert_eq!(m.op("lookup").count(), 1);
+        m.op("no-such-op").record(10);
+        assert_eq!(m.op("other").count(), 1);
+    }
+
+    #[test]
+    fn registry_json_names_every_histogram() {
+        let m = Metrics::new();
+        m.op("ping").record(100);
+        m.queue_age_at_lease_s.record(30);
+        let j = m.to_json();
+        for key in [
+            "op_latency_us",
+            "shard_read_us",
+            "lock_wait_us",
+            "lru_hit_us",
+            "transfer_rank_us",
+            "queue_age_at_lease_s",
+            "worker_execute_us",
+            "worker_report_us",
+        ] {
+            assert!(j.get(key).is_some(), "missing registry key {key}");
+        }
+        assert_eq!(
+            j.get("op_latency_us")
+                .and_then(|o| o.get("ping"))
+                .and_then(|h| h.get("count"))
+                .and_then(Json::as_u64),
+            Some(1)
+        );
+    }
+
+    #[test]
+    fn prometheus_text_renders_buckets_in_seconds() {
+        let m = Metrics::new();
+        m.op("lookup").record(1000); // 1ms
+        m.queue_age_at_lease_s.record(60);
+        let text = m.prometheus_text();
+        assert!(text.contains("# TYPE portatune_op_latency_seconds histogram"));
+        assert!(text.contains("portatune_op_latency_seconds_count{op=\"lookup\"} 1"));
+        assert!(text.contains("le=\"+Inf\""), "+Inf bucket required: {text}");
+        // 1000µs lands in a bucket whose upper bound is ~0.001s.
+        let bucket_line = text
+            .lines()
+            .find(|l| l.starts_with("portatune_op_latency_seconds_bucket{op=\"lookup\",le=\"0."))
+            .expect("a finite lookup bucket");
+        assert!(bucket_line.ends_with(" 1"));
+        assert!(text.contains("portatune_queue_age_at_lease_seconds_count 1"));
+    }
+
+    #[test]
+    fn slow_op_threshold_arms_in_microseconds() {
+        set_slow_op_ms(0);
+        assert_eq!(slow_op_us(), 0);
+        set_slow_op_ms(250);
+        assert_eq!(slow_op_us(), 250_000);
+        set_slow_op_ms(0);
+    }
+}

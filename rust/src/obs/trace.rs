@@ -1,0 +1,234 @@
+//! Chrome-trace-event span emission, wired like `faults.rs`: a single
+//! relaxed atomic load when tracing is off, a global sink installed
+//! once when it is on.
+//!
+//! `install(path)` opens the sink and writes the opening `[` of the
+//! Chrome **JSON Array Format**; every finished span then appends one
+//! complete event (`"ph":"X"`) object followed by a comma and newline.
+//! Both Perfetto and `chrome://tracing` accept an array whose closing
+//! `]` never arrives, so a killed process still leaves a loadable
+//! trace.  Timestamps are wall-clock epoch microseconds — not a
+//! process-relative monotonic clock — so spans emitted by the daemon
+//! and a worker on the same machine line up on one timeline, and a
+//! shared `trace_id` arg links one request's spans across the two
+//! processes.
+//!
+//! The per-thread *current trace id* lets a caller scope every span
+//! and outgoing wire request to one logical operation: the worker sets
+//! it around each task, the client attaches it to request lines, the
+//! daemon echoes it in replies and audit events.
+
+use std::cell::{Cell, RefCell};
+use std::io::Write;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Json};
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// The installed sink (a line-buffered trace file), if any.
+fn sink() -> &'static Mutex<Option<std::io::BufWriter<std::fs::File>>> {
+    static SINK: OnceLock<Mutex<Option<std::io::BufWriter<std::fs::File>>>> = OnceLock::new();
+    SINK.get_or_init(|| Mutex::new(None))
+}
+
+/// Whether span emission is on.  One relaxed load — the only cost
+/// every instrumented path pays when tracing is disabled.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Open `path` as the process-wide trace sink and enable emission.
+/// The file is truncated and seeded with the array opener.
+pub fn install(path: &Path) -> Result<()> {
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("creating trace file {}", path.display()))?;
+    let mut writer = std::io::BufWriter::new(file);
+    writer.write_all(b"[\n").context("writing trace header")?;
+    *lock_sink() = Some(writer);
+    ENABLED.store(true, Ordering::SeqCst);
+    Ok(())
+}
+
+/// Disable emission and drop the sink (flushing it).  Primarily for
+/// tests; a daemon normally traces until exit.
+pub fn clear() {
+    ENABLED.store(false, Ordering::SeqCst);
+    if let Some(mut writer) = lock_sink().take() {
+        let _ = writer.flush();
+    }
+}
+
+fn lock_sink() -> std::sync::MutexGuard<'static, Option<std::io::BufWriter<std::fs::File>>> {
+    sink().lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Wall-clock epoch microseconds (the Chrome trace `ts` clock).
+fn epoch_micros() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_micros() as u64)
+        .unwrap_or(0)
+}
+
+/// Small stable per-thread id for the trace `tid` field.
+fn thread_tid() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    thread_local! {
+        static TID: Cell<u64> = const { Cell::new(0) };
+    }
+    TID.with(|tid| {
+        if tid.get() == 0 {
+            tid.set(NEXT.fetch_add(1, Ordering::Relaxed));
+        }
+        tid.get()
+    })
+}
+
+thread_local! {
+    static CURRENT: RefCell<Option<String>> = const { RefCell::new(None) };
+}
+
+/// Set (or clear) this thread's current trace id.
+pub fn set_current(id: Option<String>) {
+    CURRENT.with(|c| *c.borrow_mut() = id);
+}
+
+/// This thread's current trace id, if one is set.
+pub fn current() -> Option<String> {
+    CURRENT.with(|c| c.borrow().clone())
+}
+
+/// A process-unique trace id: pid + wall-clock nanos + a process-wide
+/// sequence (the same uniqueness recipe as the client's request ids —
+/// equality is the only operation anyone performs on it).
+pub fn fresh_trace_id() -> String {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    format!("t{:x}-{nanos:x}-{seq:x}", std::process::id())
+}
+
+/// An open span: started now, emitted on [`Span::finish`].
+#[derive(Debug)]
+pub struct Span {
+    name: String,
+    cat: &'static str,
+    ts_us: u64,
+    started: Instant,
+}
+
+/// Start a span when tracing is enabled (`None` otherwise, for free).
+pub fn span(name: impl Into<String>, cat: &'static str) -> Option<Span> {
+    if !enabled() {
+        return None;
+    }
+    Some(Span { name: name.into(), cat, ts_us: epoch_micros(), started: Instant::now() })
+}
+
+impl Span {
+    /// Rename an open span (the server learns the op only after
+    /// decoding the request the span already covers).
+    pub fn set_name(&mut self, name: impl Into<String>) {
+        self.name = name.into();
+    }
+
+    /// Close the span and emit its complete event, tagged with the
+    /// trace id when one is known.
+    pub fn finish(self, trace_id: Option<&str>) {
+        let dur_us = self.started.elapsed().as_micros() as u64;
+        emit_event(&self.name, self.cat, self.ts_us, dur_us, trace_id);
+    }
+}
+
+/// Append one Chrome complete event (`ph:"X"`) to the sink.
+fn emit_event(name: &str, cat: &'static str, ts_us: u64, dur_us: u64, trace_id: Option<&str>) {
+    let mut args: Vec<(&str, Json)> = Vec::new();
+    if let Some(id) = trace_id {
+        args.push(("trace_id", json::s(id)));
+    }
+    let event = json::obj(vec![
+        ("ph", json::s("X")),
+        ("name", json::s(name)),
+        ("cat", json::s(cat)),
+        ("ts", json::int(ts_us as i64)),
+        ("dur", json::int(dur_us as i64)),
+        ("pid", json::int(std::process::id() as i64)),
+        ("tid", json::int(thread_tid() as i64)),
+        ("args", json::obj(args)),
+    ]);
+    let mut guard = lock_sink();
+    if let Some(writer) = guard.as_mut() {
+        // Flush per event: a trace that stops at a crash is most of
+        // the point, and tracing is opt-in — throughput is not the
+        // budget here.
+        let _ = writer
+            .write_all(event.compact().as_bytes())
+            .and_then(|_| writer.write_all(b",\n"))
+            .and_then(|_| writer.flush());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_tracing_creates_no_spans() {
+        // Default state: no sink, no spans, enabled() is one load.
+        if !enabled() {
+            assert!(span("noop", "test").is_none());
+        }
+    }
+
+    #[test]
+    fn trace_ids_are_unique_and_current_is_thread_local() {
+        let ids: std::collections::HashSet<String> =
+            (0..64).map(|_| fresh_trace_id()).collect();
+        assert_eq!(ids.len(), 64);
+        set_current(Some("tid-main".into()));
+        assert_eq!(current().as_deref(), Some("tid-main"));
+        let other = std::thread::spawn(current).join().unwrap();
+        assert!(other.is_none(), "current trace id must not leak across threads");
+        set_current(None);
+        assert!(current().is_none());
+    }
+
+    #[test]
+    fn installed_sink_emits_parseable_events() {
+        let path = std::env::temp_dir()
+            .join(format!("portatune-trace-test-{}.json", std::process::id()));
+        install(&path).unwrap();
+        let mut s = span("unit", "test").expect("tracing was just enabled");
+        s.set_name("unit-renamed");
+        s.finish(Some("tid-1"));
+        clear();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert!(text.starts_with("[\n"));
+        // Concurrent tests may have emitted their own events while the
+        // sink was open; every event line must parse, and ours must be
+        // among them.
+        let mut saw_ours = false;
+        for line in text.lines().skip(1) {
+            let event = json::parse(line.trim_end_matches(',')).expect("event must be JSON");
+            assert_eq!(event.get("ph").and_then(Json::as_str), Some("X"));
+            if event.get("name").and_then(Json::as_str) == Some("unit-renamed") {
+                assert_eq!(
+                    event.get("args").and_then(|a| a.get("trace_id")).and_then(Json::as_str),
+                    Some("tid-1")
+                );
+                saw_ours = true;
+            }
+        }
+        assert!(saw_ours, "the finished span must be in the file");
+    }
+}

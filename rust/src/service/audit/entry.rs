@@ -139,6 +139,9 @@ pub enum AuditEvent {
         workload: Option<String>,
         /// Why this answer: exact / lru-cache / transfer / miss.
         reason: ServeReason,
+        /// The request's wire `trace_id`, when the client sent one —
+        /// links this decision to the emitted trace spans.
+        trace_id: Option<String>,
     },
 }
 
@@ -197,7 +200,7 @@ impl AuditEvent {
                 o.insert("tag".into(), json::s(tag));
                 o.insert("config".into(), json::s(config));
             }
-            AuditEvent::Served { op, platform, kernel, workload, reason } => {
+            AuditEvent::Served { op, platform, kernel, workload, reason, trace_id } => {
                 o.insert("op".into(), json::s(op));
                 o.insert("platform".into(), json::s(platform));
                 o.insert("kernel".into(), json::s(kernel));
@@ -208,6 +211,12 @@ impl AuditEvent {
                 if let ServeReason::Transfer { source, similarity_pm } = reason {
                     o.insert("source".into(), json::s(source));
                     o.insert("similarity_pm".into(), json::int(*similarity_pm as i64));
+                }
+                // Absent when the client sent none: an untraced Served
+                // event encodes (and hashes) byte-identically to the
+                // pre-trace format.
+                if let Some(id) = trace_id {
+                    o.insert("trace_id".into(), json::s(id));
                 }
             }
         }
@@ -282,6 +291,7 @@ impl AuditEvent {
                     kernel: get("kernel")?,
                     workload: opt("workload"),
                     reason,
+                    trace_id: opt("trace_id"),
                 }
             }
             other => return Err(anyhow!("unknown audit event type {other:?}")),
@@ -324,7 +334,7 @@ impl AuditEvent {
             AuditEvent::RecordAccepted { platform, kernel, tag, config } => {
                 format!("record {kernel}/{tag} = {config} for {platform}")
             }
-            AuditEvent::Served { op, platform, kernel, workload, reason } => {
+            AuditEvent::Served { op, platform, kernel, workload, reason, .. } => {
                 let w = workload.as_deref().unwrap_or("-");
                 let why = match reason {
                     ServeReason::Transfer { source, similarity_pm } => {
@@ -454,6 +464,7 @@ mod tests {
                 kernel: "gemm".into(),
                 workload: Some("m64n64k64".into()),
                 reason: ServeReason::Transfer { source: "p-0".into(), similarity_pm: 875 },
+                trace_id: Some("tc0ffee-1-0".into()),
             },
             AuditEvent::Served {
                 op: "lookup".into(),
@@ -461,8 +472,35 @@ mod tests {
                 kernel: "gemm".into(),
                 workload: Some("m64n64k64".into()),
                 reason: ServeReason::Exact,
+                trace_id: None,
             },
         ]
+    }
+
+    #[test]
+    fn untraced_served_encodes_without_a_trace_field() {
+        // Back-compat: a Served event with no trace_id must serialize
+        // (and therefore hash) exactly as the pre-trace format did.
+        let ev = AuditEvent::Served {
+            op: "lookup".into(),
+            platform: "p-0".into(),
+            kernel: "gemm".into(),
+            workload: None,
+            reason: ServeReason::Miss,
+            trace_id: None,
+        };
+        let line = ev.to_json().compact();
+        assert!(!line.contains("trace_id"), "absent id must not appear: {line}");
+        let traced = AuditEvent::Served {
+            op: "lookup".into(),
+            platform: "p-0".into(),
+            kernel: "gemm".into(),
+            workload: None,
+            reason: ServeReason::Miss,
+            trace_id: Some("t1-2-3".into()),
+        };
+        assert!(traced.to_json().compact().contains("\"trace_id\":\"t1-2-3\""));
+        assert_eq!(AuditEvent::from_json(&traced.to_json()).unwrap(), traced);
     }
 
     #[test]

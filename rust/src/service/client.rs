@@ -35,6 +35,7 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::perfdb::DbEntry;
 use crate::coordinator::platform::Fingerprint;
+use crate::obs::trace;
 use crate::service::faults::{self, InjectionPoint};
 use crate::service::protocol::Request;
 use crate::service::scheduler::{TaskKind, TuningTask};
@@ -135,7 +136,27 @@ impl Client {
     /// Send one request, return the parsed reply object.  Retryable
     /// ops (see the module docs) are re-sent under the policy when the
     /// failure was transient; everything else is a single attempt.
+    ///
+    /// When tracing is armed the whole call (retries included) is one
+    /// `call:<op>` span, and the request carries a `trace_id` — the
+    /// thread's ambient id if set (workers propagate their task id),
+    /// else a fresh one — which the daemon echoes and stamps into its
+    /// own spans, linking client and server timelines.
     pub fn call(&self, req: &Request) -> Result<Json> {
+        let trace_id = if trace::enabled() {
+            Some(trace::current().unwrap_or_else(trace::fresh_trace_id))
+        } else {
+            None
+        };
+        let span = trace::span(format!("call:{}", req.op_name()), "client");
+        let result = self.call_retrying(req, trace_id.as_deref());
+        if let Some(s) = span {
+            s.finish(trace_id.as_deref());
+        }
+        result
+    }
+
+    fn call_retrying(&self, req: &Request, trace_id: Option<&str>) -> Result<Json> {
         let attempts = if Self::op_retries_transparently(req) {
             self.policy.attempts.max(1)
         } else {
@@ -146,7 +167,7 @@ impl Client {
             if attempt > 1 {
                 std::thread::sleep(self.policy.backoff(attempt - 1));
             }
-            match self.call_once(req) {
+            match self.call_once(req, trace_id) {
                 Ok(reply) => return Ok(reply),
                 Err(e) if attempt < attempts && error_is_transient(&e) => last = Some(e),
                 Err(e) => return Err(e),
@@ -172,7 +193,7 @@ impl Client {
         }
     }
 
-    fn call_once(&self, req: &Request) -> Result<Json> {
+    fn call_once(&self, req: &Request, trace_id: Option<&str>) -> Result<Json> {
         match &self.endpoint {
             Endpoint::Tcp(addr) => {
                 use std::net::ToSocketAddrs;
@@ -190,7 +211,7 @@ impl Client {
                 if faults::hit(InjectionPoint::ClientConnectDrop) {
                     anyhow::bail!("fault-injected: connection dropped before request");
                 }
-                Self::exchange(req, &stream, &stream)
+                Self::exchange(req, trace_id, &stream, &stream)
             }
             #[cfg(unix)]
             Endpoint::Unix(path) => {
@@ -202,7 +223,7 @@ impl Client {
                 if faults::hit(InjectionPoint::ClientConnectDrop) {
                     anyhow::bail!("fault-injected: connection dropped before request");
                 }
-                Self::exchange(req, &stream, &stream)
+                Self::exchange(req, trace_id, &stream, &stream)
             }
         }
     }
@@ -274,11 +295,12 @@ impl Client {
 
     fn exchange(
         req: &Request,
+        trace_id: Option<&str>,
         mut writer: impl Write,
         reader: impl std::io::Read,
     ) -> Result<Json> {
         writer
-            .write_all(req.to_line().as_bytes())
+            .write_all(req.to_line_traced(trace_id).as_bytes())
             .and_then(|_| writer.write_all(b"\n"))
             .and_then(|_| writer.flush())
             .context("sending request")?;

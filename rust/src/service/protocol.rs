@@ -20,8 +20,17 @@
 //! {"op":"task-fail","lease_id":N,"error":"..."?}
 //! {"op":"retune-next"}
 //! {"op":"portfolio","kernel":"gemm","platform":KEY?,"dims":{"m":128,..}?,"fingerprint":{..}?}
+//! {"op":"metrics"}
 //! {"op":"shutdown"}
 //! ```
+//!
+//! Every request may additionally carry an optional `trace_id` string
+//! — an opaque client-generated correlation id, not part of any
+//! `Request` variant.  It travels as a transport envelope field: the
+//! daemon echoes it in the reply, stamps it on the audit log's served
+//! events, and tags emitted trace spans with it, so one logical
+//! operation can be followed across client, daemon, and worker (see
+//! [`crate::obs::trace`]).
 //!
 //! `platform` defaults to the daemon host's own key.  Replies are
 //! `{"ok":true,...}` or `{"ok":false,"error":"..."}`; `deploy` misses
@@ -97,6 +106,9 @@ pub enum Request {
     },
     /// Counter snapshot.
     Stats,
+    /// Full telemetry registry snapshot: the `stats` counters plus
+    /// every latency histogram (see [`crate::obs`]).
+    Metrics,
     /// Check out the next tuning task under a lease.
     TaskLease {
         /// Take only tasks of this kind (any kind when absent).
@@ -152,9 +164,21 @@ pub enum Request {
 }
 
 impl Request {
-    /// Parse one request line.
+    /// Parse one request line (dropping any `trace_id` envelope field).
     pub fn parse_line(line: &str) -> Result<Request> {
+        Self::parse_line_traced(line).map(|(req, _)| req)
+    }
+
+    /// Parse one request line, splitting off the optional `trace_id`
+    /// envelope field (which is transport metadata, not request state).
+    pub fn parse_line_traced(line: &str) -> Result<(Request, Option<String>)> {
         let v = json::parse(line.trim()).context("parsing request json")?;
+        let trace_id = v.get("trace_id").and_then(Json::as_str).map(str::to_string);
+        Ok((Self::request_from_json(&v)?, trace_id))
+    }
+
+    /// Decode a parsed request object.
+    fn request_from_json(v: &Json) -> Result<Request> {
         let op = v
             .get("op")
             .and_then(Json::as_str)
@@ -206,6 +230,7 @@ impl Request {
                 })
             }
             "stats" => Ok(Request::Stats),
+            "metrics" => Ok(Request::Metrics),
             "task-lease" => {
                 let kind = match v.get("kind").and_then(Json::as_str) {
                     None => None,
@@ -260,9 +285,38 @@ impl Request {
         }
     }
 
+    /// The wire op string this request serializes as.
+    pub fn op_name(&self) -> &'static str {
+        match self {
+            Request::Ping => "ping",
+            Request::Lookup { .. } => "lookup",
+            Request::Deploy { .. } => "deploy",
+            Request::Record { .. } => "record",
+            Request::RecordPortfolio { .. } => "record-portfolio",
+            Request::Stats => "stats",
+            Request::Metrics => "metrics",
+            Request::TaskLease { .. } => "task-lease",
+            Request::TaskHeartbeat { .. } => "task-heartbeat",
+            Request::TaskComplete { .. } => "task-complete",
+            Request::TaskFail { .. } => "task-fail",
+            Request::RetuneNext => "retune-next",
+            Request::Portfolio { .. } => "portfolio",
+            Request::Shutdown => "shutdown",
+        }
+    }
+
     /// Serialize to one compact wire line (no trailing newline).
     pub fn to_line(&self) -> String {
+        self.to_line_traced(None)
+    }
+
+    /// Serialize to one wire line carrying the optional `trace_id`
+    /// envelope field (see the module docs).
+    pub fn to_line_traced(&self, trace_id: Option<&str>) -> String {
         let mut fields: Vec<(&str, Json)> = Vec::new();
+        if let Some(id) = trace_id {
+            fields.push(("trace_id", json::s(id)));
+        }
         match self {
             Request::Ping => fields.push(("op", json::s("ping"))),
             Request::Lookup { platform, kernel, workload } => {
@@ -305,6 +359,7 @@ impl Request {
                 }
             }
             Request::Stats => fields.push(("op", json::s("stats"))),
+            Request::Metrics => fields.push(("op", json::s("metrics"))),
             Request::TaskLease { kind, platform, ttl_s } => {
                 fields.push(("op", json::s("task-lease")));
                 if let Some(k) = kind {
@@ -390,6 +445,7 @@ mod tests {
                 workload: "n4096".into(),
             },
             Request::Stats,
+            Request::Metrics,
             Request::RetuneNext,
             Request::TaskLease { kind: None, platform: None, ttl_s: None },
             Request::TaskLease {
@@ -566,6 +622,38 @@ mod tests {
                 assert_eq!(dims["k"], 32);
             }
             other => panic!("parsed {other:?}"),
+        }
+    }
+
+    #[test]
+    fn trace_id_rides_the_envelope_not_the_request() {
+        let line = Request::Ping.to_line_traced(Some("t1-abc"));
+        assert_eq!(line, r#"{"op":"ping","trace_id":"t1-abc"}"#);
+        let (req, trace_id) = Request::parse_line_traced(&line).unwrap();
+        assert!(matches!(req, Request::Ping));
+        assert_eq!(trace_id.as_deref(), Some("t1-abc"));
+        // parse_line drops the envelope field without error.
+        assert!(matches!(Request::parse_line(&line).unwrap(), Request::Ping));
+        // Absent trace_id parses as None.
+        let (_, none) = Request::parse_line_traced(r#"{"op":"ping"}"#).unwrap();
+        assert!(none.is_none());
+    }
+
+    #[test]
+    fn op_name_matches_the_wire_op() {
+        let reqs = vec![
+            Request::Ping,
+            Request::Stats,
+            Request::Metrics,
+            Request::RetuneNext,
+            Request::Shutdown,
+            Request::TaskHeartbeat { lease_id: 1 },
+            Request::Lookup { platform: None, kernel: "axpy".into(), workload: "n1".into() },
+        ];
+        for req in reqs {
+            let line = req.to_line();
+            let v = json::parse(&line).unwrap();
+            assert_eq!(v.get("op").and_then(Json::as_str), Some(req.op_name()));
         }
     }
 

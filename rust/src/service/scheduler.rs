@@ -84,6 +84,7 @@ use anyhow::Result;
 
 use crate::coordinator::perfdb::Shard;
 use crate::coordinator::platform::Fingerprint;
+use crate::obs;
 use crate::util::json::{self, Json};
 use crate::workload::gemm;
 
@@ -319,6 +320,13 @@ pub struct TaskQueue {
     /// most once per queue lifetime instead of re-queuing after every
     /// settle forever.
     drift_notified: HashSet<TaskIdentity>,
+    /// Wall-clock second each pending identity was (re)queued at, for
+    /// the queue-age-at-lease histogram.  Only the paths that carry a
+    /// clock (scan, expiry requeue) stamp entries; a bare [`enqueue`]
+    /// records no age at lease.
+    ///
+    /// [`enqueue`]: Self::enqueue
+    enqueued_at: HashMap<TaskIdentity, u64>,
     next_lease: u64,
 }
 
@@ -334,6 +342,7 @@ impl TaskQueue {
             stamps: HashMap::new(),
             resolved: HashMap::new(),
             drift_notified: HashSet::new(),
+            enqueued_at: HashMap::new(),
             next_lease: 0,
         }
     }
@@ -373,12 +382,22 @@ impl TaskQueue {
     /// Queue a task unless its identity is already pending or leased.
     /// Returns whether it was added.
     pub fn enqueue(&mut self, task: TuningTask) -> bool {
+        self.enqueue_at(task, 0)
+    }
+
+    /// Like [`enqueue`](Self::enqueue), stamping the enqueue time so a
+    /// later [`lease`](Self::lease) can record the task's queue age
+    /// (`now == 0` means "no clock available": no age is recorded).
+    pub fn enqueue_at(&mut self, task: TuningTask, now: u64) -> bool {
         let identity = task.identity();
         if !self.queued.insert(identity.clone()) {
             return false;
         }
         if matches!(task.reason, StaleReason::FingerprintDrift) {
-            self.drift_notified.insert(identity);
+            self.drift_notified.insert(identity.clone());
+        }
+        if now > 0 {
+            self.enqueued_at.insert(identity, now);
         }
         self.pending.push_back(task);
         true
@@ -436,7 +455,7 @@ impl TaskQueue {
                     reason,
                     attempts: 0,
                 };
-                if self.enqueue_scanned(task.clone(), p.built_at) {
+                if self.enqueue_scanned(task.clone(), p.built_at, now) {
                     added.push(task);
                 }
             }
@@ -474,7 +493,7 @@ impl TaskQueue {
                     reason,
                     attempts: 0,
                 };
-                if self.enqueue_scanned(task.clone(), entry.recorded_at) {
+                if self.enqueue_scanned(task.clone(), entry.recorded_at, now) {
                     added.push(task);
                 }
             }
@@ -515,12 +534,12 @@ impl TaskQueue {
     /// point it is fair game again.  A dedupe-rejected enqueue still
     /// merges the stamp upward (a kernel-wide sweep task covers shapes
     /// with heterogeneous `recorded_at`s).
-    fn enqueue_scanned(&mut self, task: TuningTask, stamped_at: u64) -> bool {
+    fn enqueue_scanned(&mut self, task: TuningTask, stamped_at: u64, now: u64) -> bool {
         let identity = task.identity();
         self.resolved.remove(&identity);
         let stamp = self.stamps.entry(identity).or_insert(0);
         *stamp = (*stamp).max(stamped_at);
-        self.enqueue(task)
+        self.enqueue_at(task, now)
     }
 
     /// Check out the first pending task matching the filters under a
@@ -541,6 +560,9 @@ impl TaskQueue {
                 && platform.map_or(true, |p| t.platform_key == p)
         })?;
         let task = self.pending.remove(idx)?;
+        if let Some(at) = self.enqueued_at.remove(&task.identity()) {
+            obs::metrics().queue_age_at_lease_s.record(now.saturating_sub(at));
+        }
         self.next_lease += 1;
         let id = self.next_lease;
         let ttl_s = ttl_s.max(1);
@@ -600,7 +622,9 @@ impl TaskQueue {
                     report.dropped.push(task);
                 } else {
                     // Identity stays in `queued`: the task is still
-                    // live, just back in pending.
+                    // live, just back in pending.  Queue age restarts
+                    // at the requeue, not the original enqueue.
+                    self.enqueued_at.insert(task.identity(), now);
                     self.pending.push_back(task.clone());
                     report.requeued.push(task);
                 }
@@ -628,6 +652,7 @@ impl TaskQueue {
                     self.pending.iter().position(|t| t.identity() == identity)
                 {
                     self.pending.remove(idx);
+                    self.enqueued_at.remove(&identity);
                     self.resolve(identity);
                     self.settle(lease_id, Settled::Completed);
                     CompleteOutcome::Settled
@@ -842,6 +867,31 @@ mod tests {
         // Nothing is lost: the identity slot is free, so the next scan
         // (or enqueue) recreates it with fresh attempts.
         assert!(q.enqueue(retune_task("p1", "axpy", "n4096")));
+    }
+
+    #[test]
+    fn stamped_enqueue_records_queue_age_at_lease() {
+        // The registry is process-global, so assert on deltas: other
+        // tests recording concurrently only ever push the count up.
+        let before = obs::metrics().queue_age_at_lease_s.count();
+        let mut q = TaskQueue::new(3600);
+        assert!(q.enqueue_at(retune_task("p1", "axpy", "n4096"), 100));
+        let (id, _) = q.lease(None, None, 60, 160).unwrap();
+        assert!(
+            obs::metrics().queue_age_at_lease_s.count() > before,
+            "a stamped enqueue must record its age when leased"
+        );
+        assert_eq!(q.complete(id), CompleteOutcome::Settled);
+        // An unstamped enqueue records nothing.
+        let before = obs::metrics().queue_age_at_lease_s.snapshot();
+        assert!(q.enqueue(retune_task("p2", "dot", "n1024")));
+        let _ = q.lease(None, None, 60, 500).unwrap();
+        let after = obs::metrics().queue_age_at_lease_s.snapshot();
+        // Only other tests' concurrent recordings may differ; this
+        // lease contributed no bin increment of its own, which we can
+        // at least smoke-check via the exact-age bucket for 400s.
+        let bin = obs::Histogram::bucket_index(400);
+        assert!(after[bin] >= before[bin], "snapshot is monotone");
     }
 
     #[test]

@@ -32,7 +32,7 @@ use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpListener;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -41,6 +41,7 @@ use crate::coordinator::platform::Fingerprint;
 use crate::coordinator::portfolio::{Portfolio, PortfolioItem};
 use crate::coordinator::search::Exhaustive;
 use crate::coordinator::tuner::Tuner;
+use crate::obs::{self, trace};
 use crate::runtime::Registry;
 use crate::service::audit::{AuditEvent, AuditLog, ServeReason};
 use crate::service::faults::{self, InjectionPoint};
@@ -409,12 +410,14 @@ impl Server {
         kernel: &str,
         tag: &str,
     ) -> Result<(Option<DbEntry>, bool)> {
+        let started = Instant::now();
         let key = (platform.to_string(), kernel.to_string(), tag.to_string());
         {
             let mut lru = lock(&self.lru);
             match lru.get(&key) {
                 Some((read_at, cached)) if read_at.elapsed() < DECISION_CACHE_TTL => {
                     self.bump(&self.counters.lru_hits);
+                    obs::metrics().lru_hit_us.record(started.elapsed().as_micros() as u64);
                     return Ok((cached, true));
                 }
                 Some(_) => lru.remove(&key), // expired
@@ -423,7 +426,9 @@ impl Server {
         }
         let gen_before = self.cache_gen.load(Ordering::SeqCst);
         self.bump(&self.counters.shard_reads);
+        let read_started = Instant::now();
         let found = self.db.lookup(platform, kernel, tag)?;
+        obs::metrics().shard_read_us.record(read_started.elapsed().as_micros() as u64);
         // Populate only if no invalidation raced the shard read; a
         // skipped put just means the next lookup reads the shard again.
         // The re-check and the put share the LRU critical section, and
@@ -447,12 +452,14 @@ impl Server {
         platform: &str,
         kernel: &str,
     ) -> Result<(Option<Fingerprint>, Option<Portfolio>, bool)> {
+        let started = Instant::now();
         let key = (platform.to_string(), kernel.to_string());
         {
             let mut lru = lock(&self.portfolio_lru);
             match lru.get(&key) {
                 Some((read_at, fp, p)) if read_at.elapsed() < DECISION_CACHE_TTL => {
                     self.bump(&self.counters.lru_hits);
+                    obs::metrics().lru_hit_us.record(started.elapsed().as_micros() as u64);
                     return Ok((fp, p, true));
                 }
                 Some(_) => lru.remove(&key), // expired
@@ -461,7 +468,9 @@ impl Server {
         }
         let gen_before = self.cache_gen.load(Ordering::SeqCst);
         self.bump(&self.counters.shard_reads);
+        let read_started = Instant::now();
         let shard = self.db.load(platform)?;
+        obs::metrics().shard_read_us.record(read_started.elapsed().as_micros() as u64);
         let fp = shard.as_ref().and_then(|s| s.fingerprint.clone());
         let p = shard.as_ref().and_then(|s| s.portfolio(kernel).cloned());
         // Same race guard as `cached_lookup`: a `record-portfolio`
@@ -596,16 +605,47 @@ impl Server {
     /// Handle one parsed request.  Pure with respect to I/O framing —
     /// every transport and the bench funnel through here.
     pub fn handle_request(&self, req: &Request) -> Json {
-        match self.dispatch(req) {
+        self.handle_request_traced(req, None)
+    }
+
+    /// [`Self::handle_request`] with the request's wire `trace_id`
+    /// (threaded into served audit events and the slow-op log).  Also
+    /// the per-op latency recording point: every transport and the
+    /// bench funnel through here, so the `op_latency` histograms see
+    /// every request however it arrived.
+    pub fn handle_request_traced(&self, req: &Request, trace_id: Option<&str>) -> Json {
+        let started = Instant::now();
+        let reply = match self.dispatch(req, trace_id) {
             Ok(reply) => reply,
             Err(e) => {
                 self.bump(&self.counters.errors);
                 reply_err(&format!("{e:#}"))
             }
+        };
+        let elapsed_us = started.elapsed().as_micros() as u64;
+        obs::metrics().op(req.op_name()).record(elapsed_us);
+        let threshold_us = obs::slow_op_us();
+        if threshold_us > 0 && elapsed_us >= threshold_us {
+            self.log_slow_op(req.op_name(), elapsed_us, threshold_us, trace_id);
         }
+        reply
     }
 
-    fn dispatch(&self, req: &Request) -> Result<Json> {
+    /// One structured stderr line per over-threshold request — greppable
+    /// by key, joinable to the trace file by `trace_id`.
+    fn log_slow_op(&self, op: &str, elapsed_us: u64, threshold_us: u64, trace_id: Option<&str>) {
+        let mut fields = vec![
+            ("slow_op", json::s(op)),
+            ("elapsed_us", json::int(elapsed_us as i64)),
+            ("threshold_us", json::int(threshold_us as i64)),
+        ];
+        if let Some(id) = trace_id {
+            fields.push(("trace_id", json::s(id)));
+        }
+        eprintln!("{}", json::obj(fields).compact());
+    }
+
+    fn dispatch(&self, req: &Request, trace_id: Option<&str>) -> Result<Json> {
         match req {
             Request::Ping => Ok(reply_ok(vec![
                 ("op", json::s("pong")),
@@ -626,6 +666,7 @@ impl Server {
                     kernel: kernel.clone(),
                     workload: Some(workload.clone()),
                     reason,
+                    trace_id: trace_id.map(str::to_string),
                 });
                 match found {
                     Some(entry) => Ok(reply_ok(vec![
@@ -650,6 +691,7 @@ impl Server {
                         } else {
                             ServeReason::Exact
                         },
+                        trace_id: trace_id.map(str::to_string),
                     });
                     return Ok(reply_ok(vec![
                         ("source", json::s("exact")),
@@ -660,6 +702,7 @@ impl Server {
                 // candidates from the nearest platforms instead of an
                 // empty deploy.
                 self.bump(&self.counters.transfer_misses);
+                let rank_started = Instant::now();
                 let shards = self.db.all_shards()?;
                 // Rank for the *target platform's* hardware: its stored
                 // shard fingerprint is authoritative (a query made on
@@ -673,6 +716,7 @@ impl Server {
                 let target = stored.or(fingerprint.as_ref()).unwrap_or(&self.host);
                 let ranked =
                     transfer::rank_candidates(&shards, target, kernel, workload, platform);
+                obs::metrics().transfer_rank_us.record(rank_started.elapsed().as_micros() as u64);
                 self.audit(AuditEvent::Served {
                     op: "deploy".into(),
                     platform: platform.to_string(),
@@ -686,6 +730,7 @@ impl Server {
                         },
                         None => ServeReason::Miss,
                     },
+                    trace_id: trace_id.map(str::to_string),
                 });
                 let candidates: Vec<Json> = ranked
                     .iter()
@@ -757,6 +802,10 @@ impl Server {
                     crate::report::stats::serve_stats_json(&self.stats()),
                 )]))
             }
+            Request::Metrics => Ok(reply_ok(vec![
+                ("counters", crate::report::stats::serve_stats_json(&self.stats())),
+                ("histograms", obs::metrics().to_json()),
+            ])),
             Request::Portfolio { platform, kernel, dims, fingerprint } => {
                 self.bump(&self.counters.portfolios);
                 let platform = platform.as_deref().unwrap_or(&self.host_key);
@@ -778,6 +827,7 @@ impl Server {
                         } else {
                             ServeReason::Exact
                         },
+                        trace_id: trace_id.map(str::to_string),
                     });
                     let mut fields = vec![
                         ("found", Json::Bool(true)),
@@ -796,8 +846,10 @@ impl Server {
                 // instead of nothing — portfolios transfer exactly like
                 // single tuned configs do.  (Uncached by design: like
                 // deploy's transfer path, it is the cold fallback.)
+                let rank_started = Instant::now();
                 let shards = self.db.all_shards()?;
                 let ranked = transfer::rank_portfolios(&shards, &target, kernel, platform);
+                obs::metrics().transfer_rank_us.record(rank_started.elapsed().as_micros() as u64);
                 self.audit(AuditEvent::Served {
                     op: "portfolio".into(),
                     platform: platform.to_string(),
@@ -811,6 +863,7 @@ impl Server {
                         },
                         None => ServeReason::Miss,
                     },
+                    trace_id: trace_id.map(str::to_string),
                 });
                 match ranked.into_iter().next() {
                     Some(c) => {
@@ -951,14 +1004,36 @@ impl Server {
     }
 
     /// Handle one raw wire line → one reply line (no trailing newline).
+    ///
+    /// The wire telemetry point: splits off the `trace_id` envelope
+    /// field, emits one `request:<op>` span covering decode + dispatch,
+    /// and echoes the id back in the reply so the client can correlate.
     pub fn handle_line(&self, line: &str) -> String {
-        let reply = match Request::parse_line(line) {
-            Ok(req) => self.handle_request(&req),
+        let started = Instant::now();
+        let mut span = trace::span("request", "server");
+        let (mut reply, trace_id) = match Request::parse_line_traced(line) {
+            Ok((req, trace_id)) => {
+                if let Some(s) = span.as_mut() {
+                    s.set_name(format!("request:{}", req.op_name()));
+                }
+                (self.handle_request_traced(&req, trace_id.as_deref()), trace_id)
+            }
             Err(e) => {
                 self.bump(&self.counters.errors);
-                reply_err(&format!("{e:#}"))
+                // Unparseable lines get their own latency label: a
+                // flood of garbage shows up as `op="error"` traffic.
+                obs::metrics().op("error").record(started.elapsed().as_micros() as u64);
+                (reply_err(&format!("{e:#}")), None)
             }
         };
+        if let Some(id) = &trace_id {
+            if let Json::Obj(map) = &mut reply {
+                map.insert("trace_id".into(), json::s(id));
+            }
+        }
+        if let Some(s) = span {
+            s.finish(trace_id.as_deref());
+        }
         reply.compact()
     }
 
@@ -982,6 +1057,7 @@ impl Server {
     ///
     /// [`run_tcp`]: Self::run_tcp
     pub fn serve_connection(&self, mut reader: impl BufRead, mut writer: impl Write) {
+        let conn_span = trace::span("conn", "server");
         let mut buf: Vec<u8> = Vec::new();
         let mut last_activity = std::time::Instant::now();
         loop {
@@ -1036,6 +1112,9 @@ impl Server {
                 }
                 Err(_) => break,
             }
+        }
+        if let Some(s) = conn_span {
+            s.finish(None);
         }
     }
 
@@ -1320,6 +1399,87 @@ impl Server {
     pub fn run_unix(self: Arc<Self>, listener: std::os::unix::net::UnixListener) -> Result<()> {
         listener.set_nonblocking(true)?;
         self.run_accept_loop(move || listener.accept().map(|(stream, _peer)| stream))
+    }
+
+    /// The full telemetry surface rendered as Prometheus text format:
+    /// every `ServeStats` counter/gauge (counters as
+    /// `portatune_<name>_total`, gauges bare, `queue_depth` labeled by
+    /// kind) followed by every registry histogram (see
+    /// [`crate::obs::Metrics::prometheus_text`]).
+    pub fn prometheus_text(&self) -> String {
+        // The live-depth fields of `ServeStats`; everything else in the
+        // snapshot is a monotonic counter.
+        const GAUGES: &[&str] =
+            &["tasks_pending", "tasks_inflight", "lru_len", "shards_quarantined"];
+        let stats = crate::report::stats::serve_stats_json(&self.stats());
+        let mut out = String::new();
+        if let Some(map) = stats.as_obj() {
+            for (key, val) in map {
+                match val {
+                    Json::Num(n) => {
+                        if GAUGES.contains(&key.as_str()) {
+                            out.push_str(&format!("# TYPE portatune_{key} gauge\n"));
+                            out.push_str(&format!("portatune_{key} {n}\n"));
+                        } else {
+                            out.push_str(&format!("# TYPE portatune_{key}_total counter\n"));
+                            out.push_str(&format!("portatune_{key}_total {n}\n"));
+                        }
+                    }
+                    Json::Obj(by_kind) => {
+                        out.push_str(&format!("# TYPE portatune_{key} gauge\n"));
+                        for (kind, depth) in by_kind {
+                            if let Some(n) = depth.as_f64() {
+                                out.push_str(&format!(
+                                    "portatune_{key}{{kind=\"{kind}\"}} {n}\n"
+                                ));
+                            }
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+        out.push_str(&obs::metrics().prometheus_text());
+        out
+    }
+
+    /// Minimal HTTP/1.1 responder behind `--metrics-addr`: every GET
+    /// (scrapers hit `/metrics`, but any path works) gets the
+    /// Prometheus page and the connection closes.  Same non-blocking
+    /// accept + shutdown-poll discipline as the wire accept loop; one
+    /// request is served at a time — a scrape is one small read and
+    /// one buffered write, and metrics must never compete with serving
+    /// for threads.
+    pub fn run_metrics_http(self: Arc<Self>, listener: TcpListener) -> Result<()> {
+        listener.set_nonblocking(true)?;
+        while !self.is_shutdown() {
+            match listener.accept() {
+                Ok((mut stream, _peer)) => {
+                    let _ = stream.set_nonblocking(false);
+                    let _ = stream.set_read_timeout(Some(CONN_READ_TIMEOUT));
+                    // Best-effort: consume the request head so closing
+                    // with unread data cannot RST the response away.
+                    let mut head = [0u8; 1024];
+                    let _ = stream.read(&mut head);
+                    let body = self.prometheus_text();
+                    let response = format!(
+                        "HTTP/1.1 200 OK\r\nContent-Type: text/plain; version=0.0.4; \
+                         charset=utf-8\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+                        body.len(),
+                        body
+                    );
+                    let _ = stream.write_all(response.as_bytes()).and_then(|_| stream.flush());
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(ACCEPT_POLL);
+                }
+                Err(_) => {
+                    self.bump(&self.counters.errors);
+                    std::thread::sleep(ACCEPT_POLL * 10);
+                }
+            }
+        }
+        Ok(())
     }
 }
 
@@ -1751,6 +1911,60 @@ mod tests {
         let reply = srv.handle_line(r#"{"op":"shutdown"}"#);
         assert!(reply.contains(r#""stopping":true"#));
         assert!(srv.is_shutdown());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn handle_line_echoes_trace_id() {
+        let (srv, dir) = test_server("trace-echo");
+        let reply = srv.handle_line(r#"{"op":"ping","trace_id":"t-echo-1"}"#);
+        let v = json::parse(&reply).unwrap();
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(v.get("trace_id").and_then(Json::as_str), Some("t-echo-1"));
+        // Untraced requests get untraced replies.
+        let bare = json::parse(&srv.handle_line(r#"{"op":"ping"}"#)).unwrap();
+        assert!(bare.get("trace_id").is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn metrics_op_returns_counters_and_histograms() {
+        let (srv, dir) = test_server("metrics-op");
+        // Traffic through the latency-recording entry point.
+        let _ = srv.handle_request(&Request::Ping);
+        let reply = srv.handle_request(&Request::Metrics);
+        assert_eq!(reply.get("ok").and_then(Json::as_bool), Some(true));
+        assert!(
+            reply.get("counters").and_then(|c| c.get("lookups")).is_some(),
+            "counters must be the serve_stats_json shape"
+        );
+        let ping = reply
+            .get("histograms")
+            .and_then(|h| h.get("op_latency_us"))
+            .and_then(|o| o.get("ping"))
+            .expect("per-op latency histograms in the payload");
+        assert!(ping.get("count").and_then(Json::as_u64).unwrap_or(0) >= 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn prometheus_page_covers_every_stats_key() {
+        let (srv, dir) = test_server("prom-page");
+        let _ = srv.handle_request(&Request::Ping);
+        let page = srv.prometheus_text();
+        let stats = crate::report::stats::serve_stats_json(&srv.stats());
+        for key in stats.as_obj().unwrap().keys() {
+            assert!(
+                page.contains(&format!("portatune_{key}")),
+                "stats key {key} missing from the Prometheus page"
+            );
+        }
+        assert!(page.contains("# TYPE portatune_lookups_total counter"));
+        assert!(page.contains("# TYPE portatune_tasks_pending gauge"));
+        assert!(
+            page.contains("portatune_op_latency_seconds_bucket"),
+            "registry histograms must render too"
+        );
         std::fs::remove_dir_all(&dir).ok();
     }
 

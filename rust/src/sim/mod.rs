@@ -24,7 +24,11 @@
 //!   task was already settled by someone else (the lease expired
 //!   mid-run and the requeued copy won), over all finished executions.
 //! - **staleness at serve**: age (`now - recorded_at`) of every entry
-//!   actually served to lookup traffic, reported as p50/p95/p99.
+//!   actually served to lookup traffic, accumulated in a *local*
+//!   [`Histogram`](crate::obs::Histogram) (the shared telemetry bucket
+//!   scheme — p50/p95/p99 are bucket upper bounds, ≤25% above the true
+//!   value; a local instance, not the process registry, keeps two runs
+//!   of the same seed bit-identical).
 //!
 //! Every consequential decision goes through a real [`AuditLog`]
 //! stamped with the sim clock, and [`run`] verifies the chain before
@@ -39,6 +43,7 @@ use anyhow::{Context, Result};
 use crate::coordinator::perfdb::{DbEntry, Shard, ShardedDb};
 use crate::coordinator::platform::Fingerprint;
 use crate::coordinator::portfolio::{Portfolio, PortfolioItem, FEATURE_NAMES};
+use crate::obs::Histogram;
 use crate::service::audit::{verify_log, AuditEvent, AuditLog, ServeReason};
 use crate::service::faults::{FaultPlan, InjectionPoint};
 use crate::service::scheduler::{
@@ -156,11 +161,12 @@ pub struct SimReport {
     pub transfers: u64,
     /// Serves with nothing to offer.
     pub misses: u64,
-    /// Median age of served lookup entries, sim-seconds.
+    /// Median age of served lookup entries, sim-seconds (histogram
+    /// bucket upper bound: at most 25% above the true median).
     pub staleness_p50_s: u64,
-    /// 95th-percentile age of served lookup entries.
+    /// 95th-percentile age of served lookup entries (bucket bound).
     pub staleness_p95_s: u64,
-    /// 99th-percentile age of served lookup entries.
+    /// 99th-percentile age of served lookup entries (bucket bound).
     pub staleness_p99_s: u64,
     /// Entries appended to the audit log (verified before reporting).
     pub audit_entries: u64,
@@ -316,14 +322,6 @@ fn poisson(lambda: f64, rng: &mut Rng) -> u64 {
     }
 }
 
-fn percentile(sorted: &[u64], p: f64) -> u64 {
-    if sorted.is_empty() {
-        return 0;
-    }
-    let idx = (p * (sorted.len() - 1) as f64).round() as usize;
-    sorted[idx.min(sorted.len() - 1)]
-}
-
 /// Similarity as audit-friendly permille (no floats in the log).
 fn sim_pm(similarity: f64) -> u64 {
     (similarity.clamp(0.0, 1.0) * 1000.0).round() as u64
@@ -345,7 +343,11 @@ struct Fleet<'a> {
     host: Fingerprint,
     drifts: BTreeMap<u64, Vec<usize>>,
     report: SimReport,
-    ages: Vec<u64>,
+    /// Served-entry ages, in the shared telemetry bucket scheme.  A
+    /// local instance — recording into the process-global registry
+    /// would be shared with concurrent tests and break the sim's
+    /// bit-reproducibility contract.
+    staleness: Histogram,
     executions_started: u64,
     alien_serial: usize,
     start: u64,
@@ -447,7 +449,7 @@ impl<'a> Fleet<'a> {
             host,
             drifts,
             report,
-            ages: Vec::new(),
+            staleness: Histogram::new(),
             executions_started: 0,
             alien_serial: 0,
             start,
@@ -636,12 +638,19 @@ impl<'a> Fleet<'a> {
             _ => self.report.transfers += 1,
         }
         if let Some(age) = age {
-            self.ages.push(age);
+            self.staleness.record(age);
         }
         let op = if wants_portfolio { "portfolio" } else { "lookup" };
         self.audit(
             now,
-            AuditEvent::Served { op: op.into(), platform, kernel, workload, reason },
+            AuditEvent::Served {
+                op: op.into(),
+                platform,
+                kernel,
+                workload,
+                reason,
+                trace_id: None,
+            },
         )
     }
 
@@ -762,14 +771,13 @@ pub fn run(cfg: &SimConfig) -> Result<SimReport> {
         fleet.tick(now)?;
     }
 
-    let Fleet { db, audit, mirror, mut report, mut ages, .. } = fleet;
+    let Fleet { db, audit, mirror, mut report, staleness, .. } = fleet;
     if report.executions > 0 {
         report.duplicate_rate = report.duplicates as f64 / report.executions as f64;
     }
-    ages.sort_unstable();
-    report.staleness_p50_s = percentile(&ages, 0.50);
-    report.staleness_p95_s = percentile(&ages, 0.95);
-    report.staleness_p99_s = percentile(&ages, 0.99);
+    report.staleness_p50_s = staleness.quantile(0.50);
+    report.staleness_p95_s = staleness.quantile(0.95);
+    report.staleness_p99_s = staleness.quantile(0.99);
     report.audit_entries = audit.appended();
 
     // The run's own evidence must hold up before we report anything.

@@ -48,6 +48,7 @@ use crate::coordinator::platform::Fingerprint;
 use crate::coordinator::portfolio::{sweep_native, GemmSweep};
 use crate::coordinator::search::Exhaustive;
 use crate::coordinator::tuner::Tuner;
+use crate::obs::{self, trace};
 use crate::runtime::{Registry, Runtime};
 use crate::service::audit::{AuditEvent, AuditLog};
 use crate::service::client::{Client, LeasedTask};
@@ -181,11 +182,27 @@ impl Worker {
     /// when the daemon had no matching task.  Execution errors are
     /// *reported* (`task-fail`), not returned: the worker loop should
     /// keep draining; only transport-level failures surface as `Err`.
+    ///
+    /// When tracing is armed, the whole cycle runs under one ambient
+    /// trace id: every wire call the cycle makes (lease, records,
+    /// settle) carries it, so the daemon's request spans line up with
+    /// this worker's lease/execute/report spans in one timeline.
     pub fn run_once(&self) -> Result<Option<TaskReport>> {
+        let ambient = trace::enabled().then(trace::fresh_trace_id);
+        trace::set_current(ambient.clone());
+        let result = self.lease_execute_report(ambient.as_deref());
+        trace::set_current(None);
+        result
+    }
+
+    fn lease_execute_report(&self, trace_id: Option<&str>) -> Result<Option<TaskReport>> {
         let platform = (!self.opts.any_platform).then(|| self.host_key.clone());
-        let Some(leased) =
-            self.client.lease_task(None, platform, Some(self.opts.lease_ttl_s))?
-        else {
+        let lease_span = trace::span("lease", "worker");
+        let leased = self.client.lease_task(None, platform, Some(self.opts.lease_ttl_s));
+        if let Some(s) = lease_span {
+            s.finish(trace_id);
+        }
+        let Some(leased) = leased? else {
             return Ok(None);
         };
         self.audit(AuditEvent::TaskLeased {
@@ -204,12 +221,18 @@ impl Worker {
         // sweep must not unwind past the report step — the daemon
         // should learn "this task failed" *now* via `task-fail`, not
         // a lease TTL later.  The heartbeat guard stops either way.
+        let exec_span = trace::span(format!("execute:{}", leased.task.kind.as_str()), "worker");
+        let exec_started = Instant::now();
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             self.execute(&leased)
         }))
         .unwrap_or_else(|panic| {
             Err(anyhow::anyhow!("task execution panicked: {}", panic_message(panic.as_ref())))
         });
+        obs::metrics().worker_execute_us.record(exec_started.elapsed().as_micros() as u64);
+        if let Some(s) = exec_span {
+            s.finish(trace_id);
+        }
         drop(heartbeat);
         if faults::hit(InjectionPoint::WorkerCrash) {
             // Fault injection: die between executing and settling,
@@ -221,18 +244,26 @@ impl Worker {
                 leased.lease_id
             );
         }
-        match outcome {
+        let report_span = trace::span("report", "worker");
+        let report_started = Instant::now();
+        let settled = match outcome {
             Ok(detail) => {
-                self.client
+                let completed = self
+                    .client
                     .complete_task(leased.lease_id)
-                    .context("reporting task completion")?;
-                self.audit(AuditEvent::TaskCompleted { lease_id: leased.lease_id });
-                Ok(Some(TaskReport {
-                    lease_id: leased.lease_id,
-                    task: leased.task,
-                    ok: true,
-                    detail,
-                }))
+                    .context("reporting task completion");
+                match completed {
+                    Ok(_) => {
+                        self.audit(AuditEvent::TaskCompleted { lease_id: leased.lease_id });
+                        Ok(Some(TaskReport {
+                            lease_id: leased.lease_id,
+                            task: leased.task,
+                            ok: true,
+                            detail,
+                        }))
+                    }
+                    Err(e) => Err(e),
+                }
             }
             Err(e) => {
                 let detail = format!("{e:#}");
@@ -250,7 +281,12 @@ impl Worker {
                     detail,
                 }))
             }
+        };
+        obs::metrics().worker_report_us.record(report_started.elapsed().as_micros() as u64);
+        if let Some(s) = report_span {
+            s.finish(trace_id);
         }
+        settled
     }
 
     /// Drain loop.  With `once`, waits up to `wait` for a task to

@@ -69,6 +69,7 @@ fn build_log(path: &Path) -> Vec<u8> {
             kernel: "axpy".into(),
             workload: Some("n4096".into()),
             reason: ServeReason::Transfer { source: "alpha".into(), similarity_pm: 875 },
+            trace_id: Some("tcafe-99-3".into()),
         },
         AuditEvent::Served {
             op: "lookup".into(),
@@ -76,6 +77,7 @@ fn build_log(path: &Path) -> Vec<u8> {
             kernel: "axpy".into(),
             workload: Some("n4096".into()),
             reason: ServeReason::Exact,
+            trace_id: None,
         },
         AuditEvent::Served {
             op: "portfolio".into(),
@@ -83,6 +85,7 @@ fn build_log(path: &Path) -> Vec<u8> {
             kernel: "gemm".into(),
             workload: None,
             reason: ServeReason::Miss,
+            trace_id: None,
         },
     ];
     for (i, ev) in events.into_iter().enumerate() {

@@ -1,0 +1,160 @@
+//! Adversarial properties of the telemetry histogram.
+//!
+//! The unit tests in `obs/hist.rs` check hand-picked examples; these
+//! tests check the *space*: bucket containment over a wide pseudo-random
+//! value sweep, merge algebra (associative, commutative, lossless),
+//! quantile monotonicity in q, and lock-free recording under real
+//! thread contention losing nothing.
+
+use portatune::obs::hist::{Histogram, N_BINS};
+
+/// Deterministic 64-bit LCG (Knuth's MMIX constants) — no external rng
+/// crates, reproducible failures.
+struct Lcg(u64);
+
+impl Lcg {
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        self.0
+    }
+}
+
+/// Values spanning every magnitude the histogram can see: exact small
+/// bins, every octave boundary ±1, and pseudo-random values up to
+/// `u64::MAX`.
+fn adversarial_values() -> Vec<u64> {
+    let mut values = vec![0, 1, 2, 3, u64::MAX];
+    for shift in 2..64 {
+        let v = 1u64 << shift;
+        values.extend([v - 1, v, v + 1]);
+    }
+    let mut rng = Lcg(0x0b5e_55ed_c0ff_ee00);
+    for _ in 0..2000 {
+        let raw = rng.next();
+        // Mask to a random width so small magnitudes are as common as
+        // huge ones (raw u64s are almost always in the top octaves).
+        let width = (rng.next() % 64) as u32;
+        values.push(raw & (u64::MAX >> width));
+    }
+    values
+}
+
+#[test]
+fn every_value_lands_in_a_bucket_that_contains_it() {
+    for v in adversarial_values() {
+        let idx = Histogram::bucket_index(v);
+        assert!(idx < N_BINS, "index {idx} out of range for value {v}");
+        let (lo, hi) = Histogram::bucket_bounds(idx);
+        assert!(
+            lo <= v && v <= hi,
+            "value {v} fell in bucket {idx} [{lo}, {hi}] which does not contain it"
+        );
+    }
+}
+
+#[test]
+fn bucket_bounds_tile_the_u64_range_without_gaps() {
+    let (lo, _) = Histogram::bucket_bounds(0);
+    assert_eq!(lo, 0, "the first bucket must start at 0");
+    for idx in 1..N_BINS {
+        let (_, prev_hi) = Histogram::bucket_bounds(idx - 1);
+        let (lo, hi) = Histogram::bucket_bounds(idx);
+        assert_eq!(
+            lo,
+            prev_hi + 1,
+            "gap or overlap between bucket {} (..{prev_hi}) and {idx} ({lo}..)",
+            idx - 1
+        );
+        assert!(lo <= hi, "inverted bucket {idx}: [{lo}, {hi}]");
+    }
+    let (_, last_hi) = Histogram::bucket_bounds(N_BINS - 1);
+    assert_eq!(last_hi, u64::MAX, "the last bucket must reach u64::MAX");
+}
+
+#[test]
+fn merge_is_commutative_associative_and_lossless() {
+    let values = adversarial_values();
+    let thirds: Vec<Histogram> = (0..3)
+        .map(|t| {
+            let h = Histogram::new();
+            for (i, &v) in values.iter().enumerate() {
+                if i % 3 == t {
+                    h.record(v);
+                }
+            }
+            h
+        })
+        .collect();
+
+    // One histogram fed everything is the ground truth.
+    let all = Histogram::new();
+    for &v in &values {
+        all.record(v);
+    }
+
+    // (a + b) + c == a + (b + c) == ground truth, bin for bin.
+    let left = Histogram::new();
+    left.merge(&thirds[0]);
+    left.merge(&thirds[1]);
+    left.merge(&thirds[2]);
+    let right = Histogram::new();
+    right.merge(&thirds[2]);
+    right.merge(&thirds[1]);
+    right.merge(&thirds[0]);
+    assert_eq!(left.snapshot(), all.snapshot(), "merge lost or moved counts");
+    assert_eq!(left.snapshot(), right.snapshot(), "merge order changed the result");
+    assert_eq!(left.count(), values.len() as u64);
+    assert_eq!(left.sum(), all.sum(), "merge lost sum");
+    // Wrapping sums are part of the contract (u64 totals), so check
+    // the parts too: each third's sum survived into the merge.
+    let part_sum = thirds.iter().fold(0u64, |acc, h| acc.wrapping_add(h.sum()));
+    assert_eq!(left.sum(), part_sum);
+}
+
+#[test]
+fn quantiles_are_monotone_in_q() {
+    let h = Histogram::new();
+    let mut rng = Lcg(42);
+    for _ in 0..10_000 {
+        h.record(rng.next() % 1_000_000);
+    }
+    let qs = [0.0, 0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99, 0.999, 1.0];
+    let mut prev = 0u64;
+    for q in qs {
+        let v = h.quantile(q);
+        assert!(
+            v >= prev,
+            "quantile({q}) = {v} dipped below quantile at lower q ({prev})"
+        );
+        prev = v;
+    }
+    // And the bound property holds at the top: p100 is a bucket upper
+    // bound for the maximum, so it can never be below the true max's
+    // bucket lower bound.
+    assert!(h.quantile(1.0) >= h.quantile(0.999));
+}
+
+#[test]
+fn concurrent_recording_loses_nothing() {
+    const THREADS: u64 = 8;
+    const PER_THREAD: u64 = 10_000;
+    let h = Histogram::new();
+    std::thread::scope(|scope| {
+        for t in 0..THREADS {
+            let h = &h;
+            scope.spawn(move || {
+                for i in 0..PER_THREAD {
+                    // Distinct per-thread values so a lost update would
+                    // skew some bucket, not just the total.
+                    h.record(t * PER_THREAD + i);
+                }
+            });
+        }
+    });
+    assert_eq!(h.count(), THREADS * PER_THREAD, "atomic recording dropped observations");
+    // Sum of 0..80000 exactly.
+    let n = THREADS * PER_THREAD;
+    assert_eq!(h.sum(), n * (n - 1) / 2, "atomic recording dropped sum");
+    let total: u64 = h.snapshot().iter().sum();
+    assert_eq!(total, n, "bins disagree with the count");
+}

@@ -72,6 +72,7 @@ fn examples_cover_every_op() {
     let mut expected = vec![
         "deploy",
         "lookup",
+        "metrics",
         "ping",
         "portfolio",
         "record",
@@ -89,6 +90,39 @@ fn examples_cover_every_op() {
         documented, expected,
         "PROTOCOL.md must document exactly the ops the parser knows"
     );
+}
+
+/// The documented stats surface cannot drift from the implemented one:
+/// every key `serve_stats_json` emits must appear in the spec's `stats`
+/// reply example, and the spec must not promise keys the daemon no
+/// longer sends.  The `metrics` op's `counters` object is the same
+/// payload, so both documented copies are checked.
+#[test]
+fn documented_stats_keys_match_serve_stats_json() {
+    use portatune::report::serve_stats_json;
+    use portatune::service::ServeStats;
+    use std::collections::BTreeSet;
+
+    let implemented: BTreeSet<String> = match serve_stats_json(&ServeStats::default()) {
+        Json::Obj(map) => map.into_keys().collect(),
+        other => panic!("serve_stats_json is not an object: {other:?}"),
+    };
+
+    let mut checked = 0;
+    for line in example_lines("S: ") {
+        let v = json::parse(&line).expect("example lines are JSON");
+        for payload_key in ["stats", "counters"] {
+            let Some(Json::Obj(map)) = v.get(payload_key) else { continue };
+            let documented: BTreeSet<String> = map.keys().cloned().collect();
+            assert_eq!(
+                documented, implemented,
+                "the documented `{payload_key}` object has drifted from \
+                 serve_stats_json — update docs/PROTOCOL.md or report::stats"
+            );
+            checked += 1;
+        }
+    }
+    assert!(checked >= 2, "spec lost its stats/counters payload examples");
 }
 
 /// Documented entry/fingerprint payloads must satisfy the typed
