@@ -1,16 +1,19 @@
-//! Serve-path throughput: what a deploy lookup costs on each of the
-//! daemon's three paths.
+//! Serve-path throughput: what a lookup costs on each of the daemon's
+//! paths, and how the snapshot read path scales under contention.
 //!
-//! * **cold shard** — decision cache disabled (`lru_cap = 0`): every
-//!   lookup reads and parses the platform's shard file.  This is the
-//!   v1 `deploy` experience, per request.
-//! * **warm LRU** — normal cache: after the first touch, lookups are a
-//!   hash-map hit.  The acceptance bar is ≥ 10× over cold (in practice
-//!   it is orders of magnitude).
-//! * **transfer miss** — deploy for a never-seen platform: reads every
-//!   shard, scores fingerprint similarity, ranks candidates.  The
-//!   slowest path by design; it exists so a fresh platform gets a
-//!   warm start instead of nothing.
+//! * **snapshot x1** — single-threaded lookups: every request clones
+//!   the published `Arc<ServeSnapshot>` (a read-lock held for
+//!   nanoseconds) and answers from the immutable index.
+//! * **snapshot xN** — the same traffic from N client threads hammering
+//!   one shared server.  Because readers never take a writer lock, the
+//!   aggregate rate must *scale* with thread count instead of
+//!   flatlining on a mutex; the acceptance bar is ≥ 2× from 1 → 4
+//!   threads whenever the machine actually has ≥ 4 cores (on smaller
+//!   machines the gate prints a skip note instead of failing).
+//! * **transfer miss** — deploy for a never-seen platform: scores
+//!   fingerprint similarity over every shard in the snapshot and ranks
+//!   candidates.  The slowest path by design; it exists so a fresh
+//!   platform gets a warm start instead of nothing.
 //! * **lease cycle** — one full worker checkout
 //!   (task-lease → heartbeat → complete) against a pre-filled queue:
 //!   the fleet-coordination overhead per task, which must be noise
@@ -80,6 +83,18 @@ fn synth_entry(platform_key: &str, kernel: &str, tag: &str, i: usize) -> DbEntry
     }
 }
 
+const KERNELS: &[(&str, &str)] =
+    &[("axpy", "n4096"), ("axpy", "n65536"), ("dot", "n4096"), ("spmv_ell", "k32")];
+
+fn lookup_req(keys: &[String], i: usize) -> Request {
+    let (kernel, tag) = KERNELS[i % KERNELS.len()];
+    Request::Lookup {
+        platform: Some(keys[i % keys.len()].clone()),
+        kernel: kernel.to_string(),
+        workload: tag.to_string(),
+    }
+}
+
 /// Time `n` calls of `f`; returns calls/sec plus the per-call latency
 /// distribution (µs) in the shared telemetry bucket scheme.
 fn rate(n: usize, mut f: impl FnMut(usize)) -> (f64, Histogram) {
@@ -93,12 +108,41 @@ fn rate(n: usize, mut f: impl FnMut(usize)) -> (f64, Histogram) {
     (n as f64 / t0.elapsed().as_secs_f64().max(1e-9), hist)
 }
 
+/// The contended phase: `threads` client threads share one server and
+/// hammer snapshot lookups.  The histogram is the shared telemetry type
+/// (atomic buckets), so all threads record into it concurrently —
+/// exactly how the daemon's own latency metrics work.
+fn contended_rate(
+    srv: &Server,
+    threads: usize,
+    per_thread: usize,
+    keys: &[String],
+) -> (f64, Histogram) {
+    let hist = Histogram::new();
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let hist = &hist;
+            s.spawn(move || {
+                for i in 0..per_thread {
+                    let call = Instant::now();
+                    let reply = srv.handle_request(&lookup_req(keys, t * per_thread + i));
+                    assert_eq!(reply.get("found").and_then(Json::as_bool), Some(true));
+                    hist.record(call.elapsed().as_micros() as u64);
+                }
+            });
+        }
+    });
+    (
+        (threads * per_thread) as f64 / t0.elapsed().as_secs_f64().max(1e-9),
+        hist,
+    )
+}
+
 fn main() -> anyhow::Result<()> {
     let quick = std::env::var("BENCH_QUICK").is_ok();
-    let (platforms, cold_n, warm_n, transfer_n) =
-        if quick { (8, 500, 20_000, 50) } else { (24, 2_000, 200_000, 300) };
-    let kernels: &[(&str, &str)] =
-        &[("axpy", "n4096"), ("axpy", "n65536"), ("dot", "n4096"), ("spmv_ell", "k32")];
+    let (platforms, per_thread_n, transfer_n) =
+        if quick { (8, 5_000, 50) } else { (24, 50_000, 300) };
 
     let dir = std::env::temp_dir()
         .join(format!("portatune-servebench-{}", std::process::id()));
@@ -108,7 +152,7 @@ fn main() -> anyhow::Result<()> {
     for i in 0..platforms {
         let fp = synth_fingerprint(i);
         let key = fp.key();
-        for (j, (kernel, tag)) in kernels.iter().enumerate() {
+        for (j, (kernel, tag)) in KERNELS.iter().enumerate() {
             db.record(Some(&fp), synth_entry(&key, kernel, tag, i + j))?;
         }
         keys.push(key);
@@ -116,37 +160,17 @@ fn main() -> anyhow::Result<()> {
     println!(
         "serve-throughput bench — {} platforms x {} keys, shards in {}",
         platforms,
-        kernels.len(),
+        KERNELS.len(),
         dir.display()
     );
 
     let host = Fingerprint::detect();
-    let lookup_req = |platform: &str, i: usize| {
-        let (kernel, tag) = kernels[i % kernels.len()];
-        Request::Lookup {
-            platform: Some(platform.to_string()),
-            kernel: kernel.to_string(),
-            workload: tag.to_string(),
-        }
-    };
+    let srv = Server::new(db.clone(), host.clone(), ServeOpts::default());
 
-    // Cold: cache disabled, every lookup re-reads its shard file.
-    let cold_opts = ServeOpts { lru_cap: 0, ..ServeOpts::default() };
-    let cold_srv = Server::new(db.clone(), host.clone(), cold_opts);
-    let (cold_per_s, cold_hist) = rate(cold_n, |i| {
-        let reply = cold_srv.handle_request(&lookup_req(&keys[i % keys.len()], i));
-        assert_eq!(reply.get("found").and_then(Json::as_bool), Some(true));
-    });
-
-    // Warm: same traffic through the decision cache.
-    let warm_srv = Server::new(db.clone(), host.clone(), ServeOpts::default());
-    for i in 0..keys.len() * kernels.len() {
-        let _ = warm_srv.handle_request(&lookup_req(&keys[i % keys.len()], i));
-    }
-    let (warm_per_s, warm_hist) = rate(warm_n, |i| {
-        let reply = warm_srv.handle_request(&lookup_req(&keys[i % keys.len()], i));
-        assert_eq!(reply.get("found").and_then(Json::as_bool), Some(true));
-    });
+    // Snapshot reads, uncontended and contended.  Same total traffic
+    // shape; only the thread count changes.
+    let (one_per_s, one_hist) = contended_rate(&srv, 1, per_thread_n, &keys);
+    let (four_per_s, four_hist) = contended_rate(&srv, 4, per_thread_n, &keys);
 
     // Transfer miss: a platform the store has never seen, full
     // similarity ranking over every shard.
@@ -160,8 +184,8 @@ fn main() -> anyhow::Result<()> {
         os: "linux".to_string(),
     };
     let (transfer_per_s, transfer_hist) = rate(transfer_n, |i| {
-        let (kernel, tag) = kernels[i % kernels.len()];
-        let reply = warm_srv.handle_request(&Request::Deploy {
+        let (kernel, tag) = KERNELS[i % KERNELS.len()];
+        let reply = srv.handle_request(&Request::Deploy {
             platform: Some("fresh-platform-under-test".to_string()),
             kernel: kernel.to_string(),
             workload: tag.to_string(),
@@ -195,10 +219,10 @@ fn main() -> anyhow::Result<()> {
         assert_eq!(reply.get("settled").and_then(Json::as_bool), Some(true));
     });
 
-    let mut t = Table::new(&["path", "lookups/sec", "p50 us", "p95 us", "p99 us", "vs cold"]);
+    let mut t = Table::new(&["path", "lookups/sec", "p50 us", "p95 us", "p99 us", "vs x1"]);
     for (name, per_s, hist) in [
-        ("cold shard", cold_per_s, &cold_hist),
-        ("warm LRU", warm_per_s, &warm_hist),
+        ("snapshot x1", one_per_s, &one_hist),
+        ("snapshot x4", four_per_s, &four_hist),
         ("transfer miss", transfer_per_s, &transfer_hist),
         ("lease cycle", lease_per_s, &lease_hist),
     ] {
@@ -208,39 +232,59 @@ fn main() -> anyhow::Result<()> {
             hist.quantile(0.50).to_string(),
             hist.quantile(0.95).to_string(),
             hist.quantile(0.99).to_string(),
-            format!("{:.1}x", per_s / cold_per_s),
+            format!("{:.1}x", per_s / one_per_s),
         ]);
     }
     print!("{}", t.render());
 
-    let speedup = warm_per_s / cold_per_s;
-    let acceptance_failed = speedup < 10.0;
-    if acceptance_failed {
-        println!("FAIL: warm LRU only {speedup:.1}x over cold shard (acceptance bar: >= 10x)");
+    // The scaling gate only means something on a machine that can run
+    // the 4 client threads in parallel; on smaller machines (1-2 core
+    // CI runners) the 4-thread rate legitimately equals the 1-thread
+    // rate, so the bar is reported but not enforced.
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let scaling = four_per_s / one_per_s;
+    let gate_enforced = cores >= 4;
+    let mut acceptance_failed = false;
+    if !gate_enforced {
+        println!(
+            "contended scaling gate SKIPPED: {cores} core(s) available, need >= 4 \
+             (measured {scaling:.2}x)"
+        );
+    } else if scaling < 2.0 {
+        println!(
+            "FAIL: 4-thread contended lookups only {scaling:.2}x the 1-thread rate \
+             (acceptance bar: >= 2x on a {cores}-core machine)"
+        );
+        acceptance_failed = true;
     }
-    let stats = warm_srv.stats();
+    let stats = srv.stats();
     println!(
-        "warm-server counters: {} lookups, {} lru hits, {} shard reads, {} transfer misses",
-        stats.lookups, stats.lru_hits, stats.shard_reads, stats.transfer_misses
+        "server counters: {} lookups, {} snapshot hits, {} shard reads, gen {} \
+         ({} publish(es))",
+        stats.lookups, stats.lru_hits, stats.shard_reads, stats.snapshot_gen,
+        stats.snapshot_publishes
     );
 
     let record = json::obj(vec![
-        ("cold_per_s", json::num(cold_per_s)),
-        ("warm_lru_per_s", json::num(warm_per_s)),
+        ("contended_1_per_s", json::num(one_per_s)),
+        ("contended_4_per_s", json::num(four_per_s)),
+        ("contended_scaling", json::num(scaling)),
+        ("contended_gate_enforced", Json::Bool(gate_enforced)),
+        ("cores", json::int(cores as i64)),
         ("transfer_miss_per_s", json::num(transfer_per_s)),
         ("lease_cycle_per_s", json::num(lease_per_s)),
-        ("cold_latency_us", cold_hist.to_json()),
-        ("warm_latency_us", warm_hist.to_json()),
+        ("contended_1_latency_us", one_hist.to_json()),
+        ("contended_4_latency_us", four_hist.to_json()),
         ("transfer_latency_us", transfer_hist.to_json()),
         ("lease_latency_us", lease_hist.to_json()),
-        ("warm_over_cold", json::num(speedup)),
         ("platforms", json::int(platforms as i64)),
     ]);
     println!("JSON: {}", record.compact());
 
     std::fs::remove_dir_all(&dir).ok();
-    // The 10x warm-over-cold ratio is an acceptance criterion, not a
-    // suggestion: exit non-zero so CI fails when it regresses.
+    // The 2x contended-scaling ratio is an acceptance criterion, not a
+    // suggestion: exit non-zero so CI fails when the read path grows a
+    // lock that serializes clients (on hardware wide enough to tell).
     if acceptance_failed {
         std::process::exit(1);
     }

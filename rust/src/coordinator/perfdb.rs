@@ -612,7 +612,7 @@ impl Shard {
         best.into_values().collect()
     }
 
-    fn to_json_text(&self) -> String {
+    pub(crate) fn to_json_text(&self) -> String {
         let body = json::obj(vec![
             ("version", json::int(2)),
             ("platform_key", json::s(&self.platform_key)),
@@ -630,7 +630,7 @@ impl Shard {
         with_checksum(&body)
     }
 
-    fn parse(text: &str) -> Result<Shard> {
+    pub(crate) fn parse(text: &str) -> Result<Shard> {
         let text = verified_shard_body(text)?;
         let root = json::parse(text).context("parsing shard json")?;
         let version = root.get("version").and_then(Json::as_i64).unwrap_or(0);
@@ -985,6 +985,70 @@ impl ShardedDb {
     /// The stored portfolio for (platform, kernel), if any.
     pub fn portfolio(&self, platform_key: &str, kernel: &str) -> Result<Option<Portfolio>> {
         Ok(self.load(platform_key)?.and_then(|s| s.portfolio(kernel).cloned()))
+    }
+
+    /// One platform's shard *document* — the raw on-disk text, checksum
+    /// header included — verified before return.  This is the bundle
+    /// export path: shipping the verbatim document (instead of a
+    /// re-serialization) is what makes export → import byte-identical.
+    pub fn export_shard_text(&self, platform_key: &str) -> Result<Option<String>> {
+        let path = self.shard_path(platform_key);
+        if !path.exists() {
+            return Ok(None);
+        }
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading shard {}", path.display()))?;
+        let shard = Shard::parse(&text)
+            .with_context(|| format!("verifying shard {}", path.display()))?;
+        anyhow::ensure!(
+            shard.platform_key == platform_key,
+            "shard {} belongs to platform {:?}, not {:?}",
+            path.display(),
+            shard.platform_key,
+            platform_key
+        );
+        Ok(Some(text))
+    }
+
+    /// Install a shard document produced by
+    /// [`export_shard_text`](Self::export_shard_text) — the bundle
+    /// import path.  The document is verified first; a platform with no
+    /// existing shard gets the text written verbatim (byte-identical
+    /// round-trip), while an existing shard is merged through the
+    /// normal record paths (identity-deduped entries, newest portfolio
+    /// per kernel) so an import never erases local history.  Returns
+    /// the platform key and its imported entry count.
+    pub fn import_shard_text(&self, text: &str) -> Result<(String, usize)> {
+        let shard = Shard::parse(text).context("verifying imported shard document")?;
+        let key = shard.platform_key.clone();
+        let count = shard.entries.len();
+        let path = self.shard_path(&key);
+        locked_commit(&path, path.with_extension("lock"), || {
+            // Checked under the lock: a shard that appeared since the
+            // caller looked is a concurrent writer's work and must be
+            // merged, not clobbered by the verbatim fast path.
+            if !path.exists() {
+                return Ok(text.to_string());
+            }
+            let mut disk = read_or_rebuild(&path, &key)?;
+            if let Some(fp) = &shard.fingerprint {
+                disk.fingerprint = Some(fp.clone());
+            }
+            let mut known: std::collections::HashSet<String> =
+                disk.entries.iter().map(DbEntry::identity).collect();
+            for e in &shard.entries {
+                if known.insert(e.identity()) {
+                    disk.entries.push(e.clone());
+                }
+            }
+            for p in &shard.portfolios {
+                disk.portfolios.retain(|q| q.kernel != p.kernel);
+                disk.portfolios.push(p.clone());
+            }
+            disk.portfolios.sort_by(|a, b| a.kernel.cmp(&b.kernel));
+            Ok(disk.to_json_text())
+        })?;
+        Ok((key, count))
     }
 
     /// Migrate a v1 single-file DB into shards: one locked bulk write

@@ -15,7 +15,8 @@
 //! portatune tune --kernel gemm --sweep    native GEMM sweep (no artifacts)
 //! portatune portfolio build|show          "few fit most" variant portfolios
 //! portatune serve                         tuning-as-a-service daemon (shard store)
-//! portatune query --op deploy ...         ask a running daemon
+//! portatune query --op deploy ...         ask a running daemon (or --bundle FILE)
+//! portatune bundle export|import|info     offline decision bundles
 //! portatune metrics                       fetch a daemon's telemetry registry
 //! portatune work                          fleet worker: lease → execute → report
 //! portatune db-migrate                    import a v1 perfdb.json into shards
@@ -45,7 +46,8 @@ use portatune::report::{Fig1Report, Fig1Row, Table};
 use portatune::runtime::{Registry, Runtime};
 use portatune::service::audit::{read_verified, verify_log, AuditLog};
 use portatune::service::{
-    faults, transfer, Client, Request, ServeOpts, Server, DEFAULT_LEASE_TTL_S,
+    faults, parse_bundle, transfer, write_bundle, BundleMeta, Client, OfflineBundle, Request,
+    ServeOpts, Server, DEFAULT_LEASE_TTL_S,
 };
 use portatune::util::cli::Args;
 use portatune::worker::{Worker, WorkerOpts};
@@ -98,7 +100,11 @@ const USAGE: &str = "usage: portatune <subcommand> [flags]
                       e.g. portatune serve --listen 127.0.0.1:7171 --shards perfdb.d
                     flags: [--listen ADDR (default 127.0.0.1:7171)]
                       [--socket PATH (unix domain socket instead of TCP)]
-                      [--ttl-days N (default 30)] [--lru N (default 1024)]
+                      [--ttl-days N (default 30)]
+                      [--workers N (default 0 = auto from CPU count)]
+                        size of the connection worker pool
+                      [--bundle FILE]  import an offline decision bundle
+                        into the shard store before serving
                       [--scan-secs N (default 60)] [--retune [--batch N]]
                       [--lease-ttl SECS (default 600)]  worker-lease TTL
                       [--max-conns N (default 256)]   shed connections past N
@@ -121,6 +127,9 @@ const USAGE: &str = "usage: portatune <subcommand> [flags]
                       e.g. portatune query --op portfolio --kernel gemm --m 128 --n 128 --k 64
                     flags: --op ping|lookup|deploy|stats|metrics|retune-next|portfolio|shutdown
                       [--addr ADDR (default 127.0.0.1:7171) | --socket PATH]
+                      [--bundle FILE]  answer from an offline decision
+                        bundle instead of a daemon (zero round-trips;
+                        read ops only)
                       [--kernel K] [--workload T] [--platform KEY]
                       [--m N --n N --k N]  portfolio-op dims for selection
   metrics           fetch a daemon's telemetry registry (counters +
@@ -154,6 +163,16 @@ const USAGE: &str = "usage: portatune <subcommand> [flags]
                       replay: re-print the decision sequence in order
                         e.g. portatune audit replay audit.log --platform KEY
                         flags: [--platform KEY]  only that platform's entries
+  bundle            offline decision bundles (versioned, checksummed)
+                      export: pack --shards (+ this host's fingerprint)
+                              into one artifact
+                        e.g. portatune bundle export perf.bundle
+                        flags: [--platform KEY (default: this host)]
+                               default platform for offline queries
+                      import: verify FILE and merge its shards into --shards
+                        e.g. portatune bundle import perf.bundle
+                      info:   verify FILE and describe its contents
+                        e.g. portatune bundle info perf.bundle
   db-migrate        import a v1 --db file into --shards (v2 shard files)
                       e.g. portatune db-migrate --db perfdb.json --shards perfdb.d
 
@@ -236,6 +255,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("metrics") => cmd_metrics(args),
         Some("work") => cmd_work(args, &artifacts),
         Some("audit") => cmd_audit(args),
+        Some("bundle") => cmd_bundle(args, &shards_dir),
         Some("db-migrate") => cmd_db_migrate(args, &db_path, &shards_dir),
         _ => Err(anyhow::anyhow!("missing or unknown subcommand")),
     }
@@ -246,7 +266,8 @@ fn cmd_serve(args: &Args, artifacts: &Path, db_path: &Path, shards_dir: &Path) -
     let listen = args.get_or("listen", "127.0.0.1:7171");
     let socket = args.get("socket").map(PathBuf::from);
     let ttl_days = args.get_parsed::<u64>("ttl-days", 30)?;
-    let lru_cap = args.get_parsed::<usize>("lru", 1024)?;
+    let workers = args.get_parsed::<usize>("workers", 0)?;
+    let bundle_path = args.get("bundle").map(PathBuf::from);
     let scan_secs = args.get_parsed::<u64>("scan-secs", 60)?;
     let retune = args.get_bool("retune");
     let batch = args.get_parsed::<usize>("batch", 4)?;
@@ -275,14 +296,31 @@ fn cmd_serve(args: &Args, artifacts: &Path, db_path: &Path, shards_dir: &Path) -
         let imported = db.import_legacy(db_path)?;
         println!("imported {imported} entr(ies) from {}", db_path.display());
     }
+    if let Some(path) = &bundle_path {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading bundle {}", path.display()))?;
+        let (meta, shard_texts) =
+            parse_bundle(&text).with_context(|| format!("verifying bundle {}", path.display()))?;
+        let mut entries = 0usize;
+        for shard_text in &shard_texts {
+            entries += db.import_shard_text(shard_text)?.1;
+        }
+        println!(
+            "imported bundle {} (platform {}, gen {}, {} shard(s), {entries} entr(ies))",
+            path.display(),
+            meta.platform,
+            meta.generation,
+            shard_texts.len()
+        );
+    }
     let host = Fingerprint::detect();
     println!("platform: {}", host.key());
     let opts = ServeOpts {
         ttl_s: ttl_days * 24 * 3600,
-        lru_cap,
         lease_ttl_s,
         max_conns,
         conn_idle_s,
+        workers,
     };
     let server = Arc::new(Server::new(db, host, opts));
     if let Some(path) = audit_path {
@@ -342,6 +380,7 @@ fn cmd_query(args: &Args) -> Result<()> {
     let op = args.get_or("op", "deploy");
     let addr = args.get_or("addr", "127.0.0.1:7171");
     let socket = args.get("socket").map(PathBuf::from);
+    let bundle = args.get("bundle").map(PathBuf::from);
     let kernel = args.get("kernel").map(str::to_string);
     let workload = args.get("workload").map(str::to_string);
     let platform = args.get("platform").map(str::to_string);
@@ -388,12 +427,15 @@ fn cmd_query(args: &Args) -> Result<()> {
             ))
         }
     };
-    let client = match socket {
+    let client = match (bundle, socket) {
+        (Some(path), _) => Client::from_bundle(path)?,
         #[cfg(unix)]
-        Some(path) => Client::unix(path),
+        (None, Some(path)) => Client::unix(path),
         #[cfg(not(unix))]
-        Some(_) => return Err(anyhow::anyhow!("--socket requires a unix platform; use --addr")),
-        None => Client::tcp(addr),
+        (None, Some(_)) => {
+            return Err(anyhow::anyhow!("--socket requires a unix platform; use --addr"))
+        }
+        (None, None) => Client::tcp(addr),
     };
     println!("{}", client.call(&request)?.compact());
     Ok(())
@@ -549,6 +591,106 @@ fn cmd_audit_replay(args: &Args, log: &Path) -> Result<()> {
         shown += 1;
     }
     println!("({shown} of {total} entr(ies) shown)");
+    Ok(())
+}
+
+/// `bundle export` / `bundle import` / `bundle info` over the
+/// versioned, checksummed offline decision-bundle format
+/// (docs/PROTOCOL.md has the byte-level spec).
+fn cmd_bundle(args: &Args, shards_dir: &Path) -> Result<()> {
+    let action = args.positional.get(1).map(String::as_str);
+    let file = args.positional.get(2).map(PathBuf::from).ok_or_else(|| {
+        anyhow::anyhow!("bundle requires a file path, e.g. portatune bundle export perf.bundle")
+    })?;
+    match action {
+        Some("export") => cmd_bundle_export(args, shards_dir, &file),
+        Some("import") => {
+            args.finish()?;
+            cmd_bundle_import(shards_dir, &file)
+        }
+        Some("info") => {
+            args.finish()?;
+            cmd_bundle_info(&file)
+        }
+        other => Err(anyhow::anyhow!(
+            "bundle requires an action (export|import|info), got {other:?}"
+        )),
+    }
+}
+
+/// Pack every shard in the store, plus this host's fingerprint, into
+/// one bundle file.  Cut directly from the store (no daemon), the
+/// generation is 0; `query --bundle` replies echo it so parity checks
+/// against a live daemon can tell which cut they are looking at.
+fn cmd_bundle_export(args: &Args, shards_dir: &Path, file: &Path) -> Result<()> {
+    let host = Fingerprint::detect();
+    let platform = args.get_or("platform", &host.key());
+    args.finish()?;
+    let db = ShardedDb::open(shards_dir)?;
+    let mut shard_texts = Vec::new();
+    for key in db.platforms()? {
+        if let Some(text) = db.export_shard_text(&key)? {
+            shard_texts.push(text);
+        }
+    }
+    let meta = BundleMeta { platform, generation: 0, fingerprint: Some(host) };
+    let text = write_bundle(&meta, &shard_texts);
+    std::fs::write(file, &text).with_context(|| format!("writing {}", file.display()))?;
+    println!(
+        "exported {} shard(s) from {} to {} ({} bytes, platform {})",
+        shard_texts.len(),
+        shards_dir.display(),
+        file.display(),
+        text.len(),
+        meta.platform
+    );
+    Ok(())
+}
+
+/// Verify a bundle and merge its shards into the store (same
+/// identity-deduped merge a live `record` uses, so importing twice is
+/// idempotent).
+fn cmd_bundle_import(shards_dir: &Path, file: &Path) -> Result<()> {
+    let text = std::fs::read_to_string(file)
+        .with_context(|| format!("reading bundle {}", file.display()))?;
+    let (meta, shard_texts) =
+        parse_bundle(&text).with_context(|| format!("verifying bundle {}", file.display()))?;
+    let db = ShardedDb::open(shards_dir)?;
+    for shard_text in &shard_texts {
+        let (platform, entries) = db.import_shard_text(shard_text)?;
+        println!("imported shard {platform}: {entries} entr(ies)");
+    }
+    println!(
+        "bundle {} (platform {}, gen {}): {} shard(s) merged into {}",
+        file.display(),
+        meta.platform,
+        meta.generation,
+        shard_texts.len(),
+        shards_dir.display()
+    );
+    Ok(())
+}
+
+/// Verify a bundle and describe what it would serve.
+fn cmd_bundle_info(file: &Path) -> Result<()> {
+    let bundle = OfflineBundle::load(file)?;
+    let snap = bundle.snapshot();
+    println!(
+        "bundle {}: platform {}, gen {}, {} shard(s)",
+        file.display(),
+        bundle.platform(),
+        snap.generation(),
+        snap.shards().len()
+    );
+    for shard in snap.shards() {
+        println!(
+            "  shard {}: {} entr(ies), {} portfolio(s){}",
+            shard.platform_key,
+            shard.entries.len(),
+            shard.portfolios.len(),
+            if shard.fingerprint.is_some() { ", fingerprint" } else { "" }
+        );
+    }
     Ok(())
 }
 

@@ -99,6 +99,8 @@ pub fn serve_stats_json(stats: &ServeStats) -> Json {
             ),
         ),
         ("lru_len".to_string(), int(stats.lru_len)),
+        ("snapshot_gen".to_string(), int(stats.snapshot_gen)),
+        ("snapshot_publishes".to_string(), int(stats.snapshot_publishes)),
         ("stale_locks_reaped".to_string(), int(stats.stale_locks_reaped)),
         ("shards_quarantined".to_string(), int(stats.shards_quarantined)),
     ]
@@ -172,6 +174,8 @@ mod tests {
             .into_iter()
             .collect(),
             lru_len: 12,
+            snapshot_gen: 6,
+            snapshot_publishes: 8,
             stale_locks_reaped: 2,
             shards_quarantined: 1,
         };
@@ -197,6 +201,8 @@ mod tests {
         assert_eq!(parsed.get("dedup_hits").and_then(Json::as_u64), Some(2));
         assert_eq!(parsed.get("conns_shed").and_then(Json::as_u64), Some(1));
         assert_eq!(parsed.get("conns_closed_idle").and_then(Json::as_u64), Some(1));
+        assert_eq!(parsed.get("snapshot_gen").and_then(Json::as_u64), Some(6));
+        assert_eq!(parsed.get("snapshot_publishes").and_then(Json::as_u64), Some(8));
         assert_eq!(parsed.get("stale_locks_reaped").and_then(Json::as_u64), Some(2));
         assert_eq!(parsed.get("shards_quarantined").and_then(Json::as_u64), Some(1));
     }

@@ -1,0 +1,416 @@
+//! Offline decision bundles: one versioned, checksummed artifact
+//! holding a platform's serve state — every shard document, the
+//! exporter's fingerprint, and the snapshot generation it was cut at.
+//!
+//! This closes the cold-start loop: `portatune bundle export` packs the
+//! store, the artifact ships with the program (the "ship the autotune
+//! cache" idiom), and on the far side either a daemon imports it at
+//! startup (`portatune serve --bundle` / `portatune bundle import`) or
+//! [`crate::service::client::Client::from_bundle`] answers
+//! `lookup`/`deploy`/`portfolio` from it entirely offline — zero daemon
+//! round-trips, identical replies by construction (both paths shape
+//! replies through [`ServeSnapshot`]).
+//!
+//! # Format
+//!
+//! Line-structured, with length-prefixed + SHA-256-checksummed section
+//! payloads and a whole-file footer checksum:
+//!
+//! ```text
+//! portatune-bundle v1
+//! section meta <byte-len> <sha256-hex>
+//! <meta payload bytes>
+//! section shard0 <byte-len> <sha256-hex>
+//! <shard document bytes>
+//! ...
+//! end <sha256-hex of every preceding byte>
+//! ```
+//!
+//! The `meta` payload is compact JSON:
+//! `{"version":1,"platform":...,"generation":N,"shards":N,
+//! "fingerprint":{...}|null}` — it declares the shard-section count, so
+//! even a truncation that removes whole trailing sections *and* splices
+//! a matching footer is named.  Shard payloads are the store's shard
+//! documents verbatim (checksum header included), which is what makes
+//! export → import byte-identical.  Every rejection names the exact
+//! failing section (`header`, `meta`, `shardN`, `footer`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::perfdb::Shard;
+use crate::coordinator::platform::Fingerprint;
+use crate::service::protocol::{reply_err, reply_ok, Request};
+use crate::service::snapshot::ServeSnapshot;
+use crate::util::json::{self, Json};
+use crate::util::sha256;
+
+/// First line of every bundle; the trailing `v1` is the format version.
+pub const BUNDLE_MAGIC: &str = "portatune-bundle v1";
+
+/// Bundle self-description, carried in the `meta` section.
+#[derive(Debug, Clone)]
+pub struct BundleMeta {
+    /// The platform key this bundle primarily serves (the exporter's
+    /// host, or `--platform` at export time).  Offline queries that
+    /// name no platform default to it.
+    pub platform: String,
+    /// Snapshot generation the bundle was cut at; offline replies echo
+    /// it, so bundle answers are comparable to live ones.
+    pub generation: u64,
+    /// The exporter's fingerprint — the transfer-ranking fallback for
+    /// platforms with no stored fingerprint, frozen at export so
+    /// offline answers do not drift with the querying machine.
+    pub fingerprint: Option<Fingerprint>,
+}
+
+impl BundleMeta {
+    fn to_json(&self, shards: usize) -> Json {
+        json::obj(vec![
+            ("version", json::int(1)),
+            ("platform", json::s(&self.platform)),
+            ("generation", json::int(self.generation as i64)),
+            ("shards", json::int(shards as i64)),
+            (
+                "fingerprint",
+                self.fingerprint.as_ref().map(Fingerprint::to_json).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<(BundleMeta, usize)> {
+        let version = v.get("version").and_then(Json::as_i64).unwrap_or(0);
+        anyhow::ensure!(version == 1, "bundle section meta: unsupported version {version}");
+        let platform = v
+            .get("platform")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("bundle section meta: missing platform"))?
+            .to_string();
+        let generation = v.get("generation").and_then(Json::as_u64).unwrap_or(0);
+        let shards = v
+            .get("shards")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| anyhow::anyhow!("bundle section meta: missing shard count"))?
+            as usize;
+        let fingerprint = match v.get("fingerprint") {
+            Some(Json::Null) | None => None,
+            Some(f) => Some(Fingerprint::from_json(f).ok_or_else(|| {
+                anyhow::anyhow!("bundle section meta: malformed fingerprint")
+            })?),
+        };
+        Ok((BundleMeta { platform, generation, fingerprint }, shards))
+    }
+}
+
+/// Serialize a bundle from its meta and the raw shard document texts
+/// (exactly as they sit on disk — see the module docs on byte
+/// identity).
+pub fn write_bundle(meta: &BundleMeta, shard_texts: &[String]) -> String {
+    let mut out = String::new();
+    out.push_str(BUNDLE_MAGIC);
+    out.push('\n');
+    let mut section = |name: &str, payload: &str| {
+        out.push_str(&format!(
+            "section {name} {} {}\n{payload}\n",
+            payload.len(),
+            sha256::hex_digest(payload.as_bytes())
+        ));
+    };
+    section("meta", &meta.to_json(shard_texts.len()).compact());
+    for (i, text) in shard_texts.iter().enumerate() {
+        section(&format!("shard{i}"), text);
+    }
+    let footer = sha256::hex_digest(out.as_bytes());
+    out.push_str(&format!("end {footer}\n"));
+    out
+}
+
+/// Parse and fully verify a bundle.  Every failure mode — bad magic,
+/// truncation anywhere, any flipped byte — is rejected with the exact
+/// failing section named in the error.
+pub fn parse_bundle(text: &str) -> Result<(BundleMeta, Vec<String>)> {
+    let bytes = text.as_bytes();
+    let header_end = text
+        .find('\n')
+        .ok_or_else(|| anyhow::anyhow!("bundle header: truncated before the first line end"))?;
+    anyhow::ensure!(
+        &text[..header_end] == BUNDLE_MAGIC,
+        "bundle header: unrecognized magic {:?} (want {BUNDLE_MAGIC:?})",
+        text[..header_end].chars().take(40).collect::<String>()
+    );
+    let mut pos = header_end + 1;
+    let mut sections: Vec<(String, String)> = Vec::new();
+    let mut saw_footer = false;
+    while pos < bytes.len() {
+        let line_end = text[pos..]
+            .find('\n')
+            .map(|i| pos + i)
+            .ok_or_else(|| anyhow::anyhow!("bundle footer: missing (file truncated)"))?;
+        let line = &text[pos..line_end];
+        if let Some(rest) = line.strip_prefix("section ") {
+            let mut parts = rest.split(' ');
+            let (name, len, stated) = match (parts.next(), parts.next(), parts.next(), parts.next())
+            {
+                (Some(n), Some(l), Some(s), None) => (n.to_string(), l, s),
+                _ => anyhow::bail!("bundle structure: malformed section header {line:?}"),
+            };
+            let len: usize = len
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bundle section {name}: non-numeric length"))?;
+            let payload_start = line_end + 1;
+            let payload = bytes.get(payload_start..payload_start + len).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "bundle section {name}: truncated inside payload (need {len} bytes, have {})",
+                    bytes.len().saturating_sub(payload_start)
+                )
+            })?;
+            anyhow::ensure!(
+                sha256::hex_digest(payload) == stated,
+                "bundle section {name}: checksum mismatch"
+            );
+            anyhow::ensure!(
+                bytes.get(payload_start + len) == Some(&b'\n'),
+                "bundle section {name}: missing payload terminator"
+            );
+            let payload = std::str::from_utf8(payload)
+                .map_err(|_| anyhow::anyhow!("bundle section {name}: payload is not UTF-8"))?;
+            sections.push((name, payload.to_string()));
+            pos = payload_start + len + 1;
+        } else if let Some(stated) = line.strip_prefix("end ") {
+            anyhow::ensure!(
+                sha256::hex_digest(&bytes[..pos]) == stated,
+                "bundle footer: whole-file checksum mismatch"
+            );
+            anyhow::ensure!(
+                line_end + 1 == bytes.len(),
+                "bundle footer: trailing data after the footer line"
+            );
+            saw_footer = true;
+            break;
+        } else {
+            anyhow::bail!("bundle structure: unrecognized line {line:?}");
+        }
+    }
+    anyhow::ensure!(saw_footer, "bundle footer: missing (file truncated)");
+    let mut sections = sections.into_iter();
+    let (meta_name, meta_text) = sections
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("bundle section meta: missing"))?;
+    anyhow::ensure!(meta_name == "meta", "bundle section meta: first section is {meta_name:?}");
+    let meta_json = json::parse(&meta_text)
+        .map_err(|e| anyhow::anyhow!("bundle section meta: invalid json ({e})"))?;
+    let (meta, declared) = BundleMeta::from_json(&meta_json)?;
+    let mut shard_texts = Vec::new();
+    for (i, (name, text)) in sections.enumerate() {
+        anyhow::ensure!(
+            name == format!("shard{i}"),
+            "bundle section {name}: expected shard{i} at this position"
+        );
+        shard_texts.push(text);
+    }
+    anyhow::ensure!(
+        shard_texts.len() == declared,
+        "bundle section meta: declares {declared} shards, found {}",
+        shard_texts.len()
+    );
+    Ok((meta, shard_texts))
+}
+
+/// A fully verified bundle, indexed for serving: what
+/// [`crate::service::client::Client::from_bundle`] answers from.
+#[derive(Debug)]
+pub struct OfflineBundle {
+    platform: String,
+    host: Fingerprint,
+    snapshot: ServeSnapshot,
+}
+
+impl OfflineBundle {
+    /// Parse, verify, and index a bundle from its serialized text.
+    pub fn from_text(text: &str) -> Result<OfflineBundle> {
+        let (meta, shard_texts) = parse_bundle(text)?;
+        let shards = shard_texts
+            .iter()
+            .enumerate()
+            .map(|(i, t)| {
+                Shard::parse(t).with_context(|| format!("bundle section shard{i}"))
+            })
+            .collect::<Result<Vec<Shard>>>()?;
+        let host = meta.fingerprint.clone().unwrap_or_else(Fingerprint::detect);
+        Ok(OfflineBundle {
+            platform: meta.platform,
+            host,
+            snapshot: ServeSnapshot::build(shards, meta.generation),
+        })
+    }
+
+    /// Load a bundle file from disk.
+    pub fn load(path: impl AsRef<Path>) -> Result<OfflineBundle> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading bundle {}", path.display()))?;
+        Self::from_text(&text).with_context(|| format!("loading bundle {}", path.display()))
+    }
+
+    /// The bundle's default platform (queries naming none use it).
+    pub fn platform(&self) -> &str {
+        &self.platform
+    }
+
+    /// The indexed snapshot the bundle serves from.
+    pub fn snapshot(&self) -> &ServeSnapshot {
+        &self.snapshot
+    }
+
+    /// Answer one request offline.  The read ops (`ping`, `lookup`,
+    /// `deploy`, `portfolio`) shape their replies through the same
+    /// [`ServeSnapshot`] methods the daemon uses, so the answers are
+    /// identical to a live daemon serving the same snapshot; every
+    /// other op needs daemon state and gets a definitive error reply.
+    pub fn answer(&self, req: &Request) -> Json {
+        match req {
+            Request::Ping => reply_ok(vec![
+                ("op", json::s("pong")),
+                ("platform", json::s(&self.platform)),
+            ]),
+            Request::Lookup { platform, kernel, workload } => {
+                let platform = platform.as_deref().unwrap_or(&self.platform);
+                self.snapshot.lookup_reply(platform, kernel, workload).0
+            }
+            Request::Deploy { platform, kernel, workload, fingerprint } => {
+                let platform = platform.as_deref().unwrap_or(&self.platform);
+                self.snapshot
+                    .deploy_reply(platform, kernel, workload, fingerprint.as_ref(), &self.host)
+                    .0
+            }
+            Request::Portfolio { platform, kernel, dims, fingerprint } => {
+                let platform = platform.as_deref().unwrap_or(&self.platform);
+                let dims: Option<&BTreeMap<String, i64>> = dims.as_ref();
+                self.snapshot
+                    .portfolio_reply(platform, kernel, dims, fingerprint.as_ref(), &self.host)
+                    .0
+            }
+            other => reply_err(&format!(
+                "offline bundle client: op '{}' requires a daemon",
+                other.op_name()
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::perfdb::{unix_now, DbEntry, ShardedDb};
+
+    fn fp() -> Fingerprint {
+        Fingerprint {
+            cpu_model: "Bundle CPU".into(),
+            num_cpus: 8,
+            simd: vec!["avx2".into()],
+            cache_l1d_kb: 32,
+            cache_l2_kb: 1024,
+            cache_l3_kb: 8192,
+            os: "linux".into(),
+        }
+    }
+
+    fn entry(platform: &str, kernel: &str, tag: &str, id: &str) -> DbEntry {
+        DbEntry {
+            platform_key: platform.into(),
+            kernel: kernel.into(),
+            tag: tag.into(),
+            best_params: [("block_size".to_string(), 256i64)].into_iter().collect(),
+            best_config_id: id.into(),
+            best_time_s: 1e-3,
+            baseline_time_s: 2e-3,
+            reference_time_s: 9e-4,
+            evaluations: 4,
+            strategy: "exhaustive".into(),
+            recorded_at: unix_now(),
+        }
+    }
+
+    fn sample_bundle() -> String {
+        // Unique per call: the tests run in parallel in one process.
+        static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        let seq = SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let dir = std::env::temp_dir()
+            .join(format!("portatune-bundletest-{}-{seq}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let db = ShardedDb::open(&dir).unwrap();
+        db.record(Some(&fp()), entry("p1", "axpy", "n4096", "cfg1")).unwrap();
+        db.record(None, entry("p2", "dot", "n4096", "cfg2")).unwrap();
+        let texts: Vec<String> = ["p1", "p2"]
+            .iter()
+            .map(|p| db.export_shard_text(p).unwrap().unwrap())
+            .collect();
+        std::fs::remove_dir_all(&dir).ok();
+        let meta = BundleMeta {
+            platform: "p1".into(),
+            generation: 9,
+            fingerprint: Some(fp()),
+        };
+        write_bundle(&meta, &texts)
+    }
+
+    #[test]
+    fn round_trips_meta_and_shard_texts() {
+        let text = sample_bundle();
+        let (meta, shards) = parse_bundle(&text).unwrap();
+        assert_eq!(meta.platform, "p1");
+        assert_eq!(meta.generation, 9);
+        assert_eq!(shards.len(), 2);
+        // Re-serializing the parsed payloads reproduces the bundle.
+        assert_eq!(write_bundle(&meta, &shards), text);
+    }
+
+    #[test]
+    fn offline_answers_come_from_the_snapshot() {
+        let bundle = OfflineBundle::from_text(&sample_bundle()).unwrap();
+        let reply = bundle.answer(&Request::Lookup {
+            platform: Some("p1".into()),
+            kernel: "axpy".into(),
+            workload: "n4096".into(),
+        });
+        assert_eq!(reply.get("found").and_then(Json::as_bool), Some(true));
+        assert_eq!(reply.get("gen").and_then(Json::as_u64), Some(9));
+        let reply = bundle.answer(&Request::Stats);
+        assert_eq!(reply.get("ok").and_then(Json::as_bool), Some(false));
+        assert!(reply
+            .get("error")
+            .and_then(Json::as_str)
+            .unwrap()
+            .contains("requires a daemon"));
+    }
+
+    #[test]
+    fn bad_magic_names_the_header() {
+        let text = sample_bundle().replacen("portatune", "portatun3", 1);
+        let err = format!("{:#}", parse_bundle(&text).unwrap_err());
+        assert!(err.contains("bundle header"), "{err}");
+    }
+
+    #[test]
+    fn flipped_payload_byte_names_its_section() {
+        let text = sample_bundle();
+        // Flip a byte inside the second shard's payload.
+        let marker = "cfg2";
+        let at = text.find(marker).unwrap();
+        let mut bytes = text.into_bytes();
+        bytes[at] ^= 0x01;
+        let err =
+            format!("{:#}", parse_bundle(std::str::from_utf8(&bytes).unwrap()).unwrap_err());
+        assert!(err.contains("shard1"), "flip must be pinned to shard1: {err}");
+    }
+
+    #[test]
+    fn truncation_names_the_failing_section() {
+        let text = sample_bundle();
+        let cut = &text[..text.len() / 2];
+        let err = format!("{:#}", parse_bundle(cut).unwrap_err());
+        assert!(err.contains("bundle"), "{err}");
+    }
+}

@@ -4,7 +4,11 @@
 //!
 //! One connection per call: requests are rare (deploy-time lookups),
 //! so connection reuse buys nothing and a stateless client cannot leak
-//! sockets.  Both endpoints the daemon listens on are supported.
+//! sockets.  Both endpoints the daemon listens on are supported, plus
+//! a fully offline one: [`Client::from_bundle`] loads an exported
+//! decision bundle (see [`crate::service::bundle`]) and answers
+//! `lookup`/`deploy`/`portfolio` in-process with zero daemon
+//! round-trips — the cold-start path for machines without a daemon.
 //!
 //! **Resilience.**  Every socket carries connect/read/write timeouts
 //! (a dead daemon can no longer hang `query`/`work` forever), and
@@ -53,7 +57,8 @@ pub struct LeasedTask {
     pub task: TuningTask,
 }
 
-/// Where the daemon listens.
+/// Where the daemon listens — or, for the offline variant, where the
+/// answers come from without any daemon at all.
 #[derive(Debug, Clone)]
 pub enum Endpoint {
     /// `host:port`.
@@ -61,6 +66,10 @@ pub enum Endpoint {
     /// Unix-domain socket path.
     #[cfg(unix)]
     Unix(PathBuf),
+    /// An in-process offline decision bundle: read ops are answered
+    /// from its snapshot, write/task ops fail with a daemon-required
+    /// error.  `Arc` so cloning the client shares the parsed bundle.
+    Bundle(std::sync::Arc<crate::service::bundle::OfflineBundle>),
 }
 
 /// Bounded-retry + timeout configuration for a [`Client`].
@@ -125,6 +134,17 @@ impl Client {
     /// A client for a Unix-domain-socket endpoint.
     pub fn unix(path: impl Into<PathBuf>) -> Client {
         Client { endpoint: Endpoint::Unix(path.into()), policy: RetryPolicy::default() }
+    }
+
+    /// A fully offline client over an exported decision bundle: loads
+    /// and verifies the bundle once, then answers read ops from its
+    /// snapshot with zero daemon round-trips.
+    pub fn from_bundle(path: impl AsRef<std::path::Path>) -> Result<Client> {
+        let bundle = crate::service::bundle::OfflineBundle::load(path)?;
+        Ok(Client {
+            endpoint: Endpoint::Bundle(std::sync::Arc::new(bundle)),
+            policy: RetryPolicy::default(),
+        })
     }
 
     /// Replace the retry/timeout policy (builder style).
@@ -224,6 +244,21 @@ impl Client {
                     anyhow::bail!("fault-injected: connection dropped before request");
                 }
                 Self::exchange(req, trace_id, &stream, &stream)
+            }
+            Endpoint::Bundle(bundle) => {
+                // No socket: the bundle answers in-process.  Error
+                // replies convert exactly as `exchange` converts them,
+                // so `error_is_transient` and callers see the same
+                // `daemon error: ...` shape either way.
+                let reply = bundle.answer(req);
+                if reply.get("ok").and_then(Json::as_bool) != Some(true) {
+                    let msg = reply
+                        .get("error")
+                        .and_then(Json::as_str)
+                        .unwrap_or("daemon reported failure without a message");
+                    return Err(anyhow::anyhow!("daemon error: {msg}"));
+                }
+                Ok(reply)
             }
         }
     }

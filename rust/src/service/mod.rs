@@ -12,10 +12,20 @@
 //!
 //! * [`server`] — `portatune serve`: a daemon answering
 //!   lookup/deploy/record over a line-delimited JSON protocol (TCP or
-//!   Unix socket), layering an LRU decision cache over the sharded
-//!   store ([`crate::coordinator::perfdb::ShardedDb`], one
-//!   lock-file-merged shard per platform) and running a background
-//!   staleness scan + re-tune worker;
+//!   Unix socket) from an immutable, atomically published
+//!   [`snapshot::ServeSnapshot`] over the sharded store
+//!   ([`crate::coordinator::perfdb::ShardedDb`], one lock-file-merged
+//!   shard per platform) — readers never take a writer lock; writers
+//!   clone-merge-publish a new generation — with a bounded worker-pool
+//!   accept loop and a background staleness scan + re-tune worker;
+//! * [`snapshot`] — the immutable serve-path state itself, including
+//!   the reply shaping shared by the daemon and the offline bundle
+//!   client (identical answers by construction);
+//! * [`bundle`] — versioned, checksummed offline decision bundles:
+//!   `portatune bundle export` packs a daemon's shards + portfolios +
+//!   fingerprint into one artifact that [`client::Client::from_bundle`]
+//!   answers from with zero round-trips and `portatune bundle import`
+//!   merges into a fresh daemon's store;
 //! * [`protocol`] — the wire format (std-only, reuses
 //!   [`crate::util::json`]);
 //! * [`client`] — what `portatune query` and embedders speak;
@@ -47,14 +57,17 @@
 //!   in production incidents.
 
 pub mod audit;
+pub mod bundle;
 pub mod client;
 pub mod faults;
 pub mod protocol;
 pub mod scheduler;
 pub mod server;
+pub mod snapshot;
 pub mod transfer;
 
 pub use audit::{AuditEntry, AuditEvent, AuditLog, ServeReason, VerifyError, VerifyReport};
+pub use bundle::{parse_bundle, write_bundle, BundleMeta, OfflineBundle, BUNDLE_MAGIC};
 pub use client::{Client, Endpoint, LeasedTask, RetryPolicy};
 pub use faults::{FaultPlan, InjectionPoint};
 pub use protocol::{reply_err, reply_ok, Request};
@@ -63,6 +76,7 @@ pub use scheduler::{
     DEFAULT_LEASE_TTL_S,
 };
 pub use server::{Lru, ServeOpts, ServeStats, Server};
+pub use snapshot::{ServeSnapshot, ServedFrom};
 pub use transfer::{
     rank_candidates, rank_portfolios, warm_start_configs, PortfolioCandidate, TransferCandidate,
 };

@@ -1,44 +1,60 @@
 //! The `portatune serve` daemon core.
 //!
-//! A [`Server`] owns a [`ShardedDb`], the host [`Fingerprint`], an
-//! in-memory LRU decision cache over the shards, per-op counters, and
-//! the leased [`TaskQueue`].  Request handling is a pure function
-//! from [`Request`] to a JSON reply ([`Server::handle_request`]), so
-//! the same core serves TCP, Unix sockets, in-process tests, and the
+//! A [`Server`] owns a [`ShardedDb`], the host [`Fingerprint`], the
+//! published [`ServeSnapshot`], per-op counters, and the leased
+//! [`TaskQueue`].  Request handling is a pure function from
+//! [`Request`] to a JSON reply ([`Server::handle_request`]), so the
+//! same core serves TCP, Unix sockets, in-process tests, and the
 //! throughput bench without touching a socket.
 //!
-//! Threading model: `std` only.  The accept loop is non-blocking and
-//! polls a shutdown flag; each connection gets a thread (clients are
-//! tuner processes and operators, not the open internet); shared state
-//! is `Mutex`/atomics.  Background threads: a periodic staleness scan,
-//! and — when the daemon was started with a usable artifact registry —
-//! a re-tune worker that drains the queue through the batched
-//! [`Tuner`].  External `portatune work` processes drain everything
-//! else via the `task-lease`/`task-heartbeat`/`task-complete`/
-//! `task-fail` ops (see [`crate::service::scheduler`]).
+//! Serve-path state model: readers never take a writer lock.  All hot
+//! read state lives in an immutable [`ServeSnapshot`] behind
+//! `RwLock<Arc<_>>` (read-mostly discipline: a reader clones the `Arc`
+//! under a read lock — nanoseconds, never held across I/O — and then
+//! works entirely lock-free on shared immutable data).  Writers
+//! (`record`, `record-portfolio`, the re-tune worker, the periodic
+//! scan) commit to disk first, then clone-merge-publish a new snapshot
+//! under a dedicated publish mutex, bumping a monotone generation that
+//! every reply echoes as `gen` — which is what makes read-your-writes
+//! checkable: a read started after an acked write always reports a
+//! generation ≥ the ack's.
+//!
+//! Threading model: `std` only.  The accept loop is non-blocking,
+//! polls a shutdown flag, and hands prepared connections to a bounded
+//! worker pool ([`ServeOpts::workers`] threads over a condvar'd accept
+//! queue) — connection shed at [`ServeOpts::max_conns`] counts queued
+//! plus in-service connections, and idle reaping happens inside
+//! [`Server::serve_connection`] exactly as before.  Background
+//! threads: a periodic staleness scan (which also republishes the
+//! snapshot, bounding out-of-band-writer staleness), and — when the
+//! daemon was started with a usable artifact registry — a re-tune
+//! worker that drains the queue through the batched [`Tuner`].
+//! External `portatune work` processes drain everything else via the
+//! `task-lease`/`task-heartbeat`/`task-complete`/`task-fail` ops (see
+//! [`crate::service::scheduler`]).
 //!
 //! Panic policy: request handling must never take the daemon down on
 //! client input.  Malformed lines and bad payloads become
 //! `{"ok":false}` replies in [`Request::parse_line`] / the dispatch
-//! `Result`; the remaining `unwrap`-shaped hazards were mutex-poison
-//! unwraps on the shared caches and queue, which the module-private
-//! `lock()` helper now recovers from instead (a panicking writer
-//! leaves counters/caches usable — worst case a stale cache entry,
-//! which the TTL already bounds).
+//! `Result`; the remaining `unwrap`-shaped hazards were lock-poison
+//! unwraps on the shared state, which the module-private `lock()` /
+//! `read_lock()` / `write_lock()` helpers recover from instead (every
+//! critical section leaves the guarded value consistent — a published
+//! snapshot is immutable, so a panicking writer can at worst leave the
+//! previous generation serving).
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::hash::Hash;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpListener;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock, RwLock};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::coordinator::perfdb::{unix_now, DbEntry, ShardedDb};
+use crate::coordinator::perfdb::{unix_now, DbEntry, Shard, ShardedDb};
 use crate::coordinator::platform::Fingerprint;
-use crate::coordinator::portfolio::{Portfolio, PortfolioItem};
 use crate::coordinator::search::Exhaustive;
 use crate::coordinator::tuner::Tuner;
 use crate::obs::{self, trace};
@@ -49,22 +65,32 @@ use crate::service::protocol::{reply_err, reply_ok, Request};
 use crate::service::scheduler::{
     CompleteOutcome, FailOutcome, TaskKind, TaskQueue, DEFAULT_LEASE_TTL_S,
 };
-use crate::service::transfer;
+use crate::service::snapshot::{ServeSnapshot, ServedFrom};
 use crate::util::json::{self, Json};
 
-/// Lock a mutex, recovering from poisoning: the guarded state (caches,
-/// counters, the task queue) stays consistent under panics because
-/// every critical section only mutates it through its own methods —
-/// serving slightly-stale cached data beats killing the daemon.
+/// Lock a mutex, recovering from poisoning: the guarded state (the
+/// scheduler, the dedupe cache, the publish token) stays consistent
+/// under panics because every critical section only mutates it through
+/// its own methods — serving slightly-stale data beats killing the
+/// daemon.
 fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
 }
 
+/// Take a read lock, recovering from poisoning: the guarded value is
+/// an `Arc` to an immutable snapshot, so a panicking writer can never
+/// leave it torn — at worst the previous generation keeps serving.
+fn read_lock<T>(l: &RwLock<T>) -> std::sync::RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Take a write lock, recovering from poisoning (see [`read_lock`]).
+fn write_lock<T>(l: &RwLock<T>) -> std::sync::RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
 /// How long the accept loop sleeps between polls of the shutdown flag.
 const ACCEPT_POLL: Duration = Duration::from_millis(5);
-
-/// How many transfer candidates a deploy miss returns.
-const DEPLOY_CANDIDATES: usize = 5;
 
 /// Read timeout on accepted connections: idle sockets wake their
 /// handler this often so it can observe the shutdown flag.
@@ -81,19 +107,11 @@ const MAX_LEASE_TTL_S: u64 = 24 * 3600;
 /// client retry window.
 const DEDUPE_KEEP: usize = 4096;
 
-/// Upper bound on decision-cache staleness.  The daemon's own writes
-/// invalidate precisely, but the shard directory is a shared store —
-/// `db-migrate` or another machine's tuner may write it out-of-band —
-/// so every cached decision (including negatives) expires and re-reads
-/// its shard within this window.
-const DECISION_CACHE_TTL: Duration = Duration::from_secs(60);
-
 /// A small clock-stamped LRU: `get` refreshes the stamp, `put` evicts
 /// the least-recently-stamped entry when full.  Eviction is O(n) over
-/// the map, which is the right trade at decision-cache sizes (hundreds
+/// the map, which is the right trade at reply-dedupe sizes (hundreds
 /// to thousands) against the pointer gymnastics of an intrusive list.
-/// `cap == 0` disables storage entirely (every get misses) — the
-/// throughput bench uses that to measure the cold-shard path.
+/// `cap == 0` disables storage entirely (every get misses).
 #[derive(Debug)]
 pub struct Lru<K: Eq + Hash + Clone, V: Clone> {
     cap: usize,
@@ -160,8 +178,12 @@ impl<K: Eq + Hash + Clone, V: Clone> Lru<K, V> {
 pub struct ServeOpts {
     /// Entries older than this are queued for re-tuning.
     pub ttl_s: u64,
-    /// Decision-cache capacity ((platform, kernel, workload) keys).
-    pub lru_cap: usize,
+    /// Worker-pool size for the accept loop (0 picks a default from
+    /// the machine's available parallelism, clamped to `2..=32`).
+    /// Connections past the pool wait on a bounded accept queue; the
+    /// queue plus in-service connections together are capped by
+    /// [`ServeOpts::max_conns`].
+    pub workers: usize,
     /// Lease TTL granted when a `task-lease` request names none (and
     /// backing the `retune-next` compatibility alias).
     pub lease_ttl_s: u64,
@@ -183,7 +205,7 @@ impl Default for ServeOpts {
             // 30 days: tuned configs outlive any one deploy cycle but
             // not a hardware refresh.
             ttl_s: 30 * 24 * 3600,
-            lru_cap: 1024,
+            workers: 0,
             lease_ttl_s: DEFAULT_LEASE_TTL_S,
             max_conns: 256,
             conn_idle_s: 300,
@@ -213,6 +235,7 @@ struct Counters {
     dedup_hits: AtomicU64,
     conns_shed: AtomicU64,
     conns_closed_idle: AtomicU64,
+    snapshot_publishes: AtomicU64,
 }
 
 /// Point-in-time snapshot of the daemon's counters (the serve-side
@@ -223,9 +246,13 @@ pub struct ServeStats {
     pub lookups: u64,
     /// `deploy` ops served.
     pub deploys: u64,
-    /// Lookups answered from the decision cache.
+    /// Reads answered from the published snapshot's decision index
+    /// (exact hits and indexed negatives alike — every read that never
+    /// touched disk).  The name predates the snapshot refactor and is
+    /// kept for dashboard continuity.
     pub lru_hits: u64,
-    /// Lookups that read a shard file.
+    /// Shard-directory loads performed by snapshot publishes and
+    /// refreshes (reads happen at publish time now, not per lookup).
     pub shard_reads: u64,
     /// `record` ops served.
     pub records: u64,
@@ -266,8 +293,14 @@ pub struct ServeStats {
     /// Pending queue depth per task kind (`retune`, `sweep`,
     /// `portfolio-rebuild`).
     pub queue_depth: BTreeMap<String, u64>,
-    /// Current decision-cache entry count.
+    /// Decision-index size of the published snapshot (frontier entries
+    /// plus portfolios).  The name predates the snapshot refactor.
     pub lru_len: u64,
+    /// Generation of the currently published [`ServeSnapshot`] — a
+    /// gauge; every reply echoes it as `gen`.
+    pub snapshot_gen: u64,
+    /// Snapshot publishes since startup (writer commits + refreshes).
+    pub snapshot_publishes: u64,
     /// Abandoned shard lock files removed this process — stolen in-band
     /// by contending writers plus swept by the periodic scan.
     pub stale_locks_reaped: u64,
@@ -277,40 +310,22 @@ pub struct ServeStats {
     pub shards_quarantined: u64,
 }
 
-type DecisionKey = (String, String, String);
-
-/// A cached decision: when it was read from the shard, and what it was.
-type Decision = (std::time::Instant, Option<DbEntry>);
-
-/// Portfolio-cache key: (platform, kernel).
-type PortfolioKey = (String, String);
-
-/// A cached portfolio read: when it was read, the shard's stored
-/// fingerprint (drives selection features), and the portfolio itself.
-type PortfolioDecision = (std::time::Instant, Option<Fingerprint>, Option<Portfolio>);
-
-/// The daemon: shard store + LRU + scheduler + counters.
+/// The daemon: shard store + published snapshot + scheduler +
+/// counters.
 pub struct Server {
     db: ShardedDb,
     host: Fingerprint,
     host_key: String,
     opts: ServeOpts,
-    lru: Mutex<Lru<DecisionKey, Decision>>,
-    /// `portfolio`-op cache over the shards.  Both halves are now
-    /// written in-band — `record` may update the shard's fingerprint,
-    /// and `record-portfolio` (how workers report finished rebuilds)
-    /// replaces the portfolio itself — so invalidation drops the
-    /// platform's portfolio entries and the populate path is guarded
-    /// by [`Self::cache_gen`] exactly like the decision cache.  The
-    /// TTL still bounds staleness against out-of-band writers
-    /// (`portatune portfolio build` on another machine).
-    portfolio_lru: Mutex<Lru<PortfolioKey, PortfolioDecision>>,
-    /// Bumped by every invalidation.  The cached-read paths snapshot
-    /// it before their (unlocked) shard read and decline to populate
-    /// their cache if it moved — otherwise a concurrent record could
-    /// land between the read and the put and the stale (possibly
-    /// negative) result would be cached indefinitely.
-    cache_gen: AtomicU64,
+    /// The published read state.  Readers clone the `Arc` under a read
+    /// lock (held for nanoseconds, never across I/O) and then serve
+    /// entirely from the immutable snapshot; only [`Self::publish`]
+    /// swaps it, under a write lock held just for the pointer store.
+    snapshot: RwLock<Arc<ServeSnapshot>>,
+    /// Serializes snapshot builders.  Writers hold this across their
+    /// load-merge-build so two concurrent publishes cannot interleave
+    /// into a lost update; readers never touch it.
+    publish: Mutex<()>,
     scheduler: Mutex<TaskQueue>,
     /// Replies to recent non-idempotent requests, keyed by the
     /// client-sent request id.  A retry whose first attempt's reply
@@ -331,13 +346,13 @@ impl Server {
     /// A daemon core over a shard store, serving as `host`.
     pub fn new(db: ShardedDb, host: Fingerprint, opts: ServeOpts) -> Server {
         let host_key = host.key();
+        let initial = ServeSnapshot::build(db.all_shards().unwrap_or_default(), 0);
         Server {
             db,
             host,
             host_key,
-            lru: Mutex::new(Lru::new(opts.lru_cap)),
-            portfolio_lru: Mutex::new(Lru::new(opts.lru_cap)),
-            cache_gen: AtomicU64::new(0),
+            snapshot: RwLock::new(Arc::new(initial)),
+            publish: Mutex::new(()),
             scheduler: Mutex::new(TaskQueue::new(opts.ttl_s)),
             dedupe: Mutex::new(Lru::new(DEDUPE_KEEP)),
             opts,
@@ -398,113 +413,79 @@ impl Server {
         counter.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// Shard lookup through the decision cache.  Negative results are
-    /// cached too (a hot deploy path for an untuned key must not
-    /// re-read the shard file every call); `record` invalidates.  The
-    /// second half of the pair reports whether the answer came from
-    /// the LRU (true) or a shard read (false) — the audit log records
-    /// the distinction.
-    fn cached_lookup(
-        &self,
-        platform: &str,
-        kernel: &str,
-        tag: &str,
-    ) -> Result<(Option<DbEntry>, bool)> {
-        let started = Instant::now();
-        let key = (platform.to_string(), kernel.to_string(), tag.to_string());
-        {
-            let mut lru = lock(&self.lru);
-            match lru.get(&key) {
-                Some((read_at, cached)) if read_at.elapsed() < DECISION_CACHE_TTL => {
-                    self.bump(&self.counters.lru_hits);
-                    obs::metrics().lru_hit_us.record(started.elapsed().as_micros() as u64);
-                    return Ok((cached, true));
-                }
-                Some(_) => lru.remove(&key), // expired
-                None => {}
-            }
-        }
-        let gen_before = self.cache_gen.load(Ordering::SeqCst);
+    /// The currently published snapshot.  The read lock is held only
+    /// for the `Arc` clone; the caller then serves lock-free from
+    /// immutable data, unaffected by concurrent publishes.
+    pub fn snapshot(&self) -> Arc<ServeSnapshot> {
+        Arc::clone(&read_lock(&self.snapshot))
+    }
+
+    /// Swap in a new snapshot.  Caller must hold the publish mutex.
+    fn install(&self, next: ServeSnapshot) -> u64 {
+        let generation = next.generation();
+        *write_lock(&self.snapshot) = Arc::new(next);
+        self.bump(&self.counters.snapshot_publishes);
+        generation
+    }
+
+    /// Clone-merge-publish after a write to one platform's shard:
+    /// re-read that shard from disk, splice it into a copy of the
+    /// current snapshot's shard list, and publish at generation+1.
+    /// Returns the new generation (echoed in the writer's ack, which
+    /// is what gives clients read-your-writes: any read whose reply
+    /// carries `gen >= ack.gen` observes the write).
+    fn publish_platform(&self, platform: &str) -> Result<u64> {
+        let _publishing = lock(&self.publish);
         self.bump(&self.counters.shard_reads);
         let read_started = Instant::now();
-        let found = self.db.lookup(platform, kernel, tag)?;
+        let fresh = self.db.load(platform)?;
         obs::metrics().shard_read_us.record(read_started.elapsed().as_micros() as u64);
-        // Populate only if no invalidation raced the shard read; a
-        // skipped put just means the next lookup reads the shard again.
-        // The re-check and the put share the LRU critical section, and
-        // `invalidate` bumps the generation *inside* that same section,
-        // so an invalidation either precedes this block (gen differs —
-        // skip) or follows it (our possibly-stale entry is removed).
-        {
-            let mut lru = lock(&self.lru);
-            if self.cache_gen.load(Ordering::SeqCst) == gen_before {
-                lru.put(key, (std::time::Instant::now(), found.clone()));
-            }
+        let prev = self.snapshot();
+        let mut shards: Vec<Shard> = prev.shards().to_vec();
+        shards.retain(|s| s.platform_key != platform);
+        if let Some(shard) = fresh {
+            shards.push(shard);
         }
-        Ok((found, false))
+        Ok(self.install(ServeSnapshot::build(shards, prev.generation() + 1)))
     }
 
-    /// Portfolio read through its cache (fingerprint rides along: it
-    /// lives in the same shard file and selection needs it).  The final
-    /// `bool` reports an LRU answer, as in [`Self::cached_lookup`].
-    fn cached_portfolio(
-        &self,
-        platform: &str,
-        kernel: &str,
-    ) -> Result<(Option<Fingerprint>, Option<Portfolio>, bool)> {
-        let started = Instant::now();
-        let key = (platform.to_string(), kernel.to_string());
-        {
-            let mut lru = lock(&self.portfolio_lru);
-            match lru.get(&key) {
-                Some((read_at, fp, p)) if read_at.elapsed() < DECISION_CACHE_TTL => {
-                    self.bump(&self.counters.lru_hits);
-                    obs::metrics().lru_hit_us.record(started.elapsed().as_micros() as u64);
-                    return Ok((fp, p, true));
-                }
-                Some(_) => lru.remove(&key), // expired
-                None => {}
-            }
-        }
-        let gen_before = self.cache_gen.load(Ordering::SeqCst);
+    /// Rebuild the snapshot from the whole shard directory.  This is
+    /// the coarse publish: startup imports, the periodic scan (which
+    /// bounds staleness against out-of-band shard writers), and tests
+    /// that write through [`Self::db`] directly use it.  Returns the
+    /// new generation.
+    pub fn refresh_snapshot(&self) -> Result<u64> {
+        let _publishing = lock(&self.publish);
         self.bump(&self.counters.shard_reads);
         let read_started = Instant::now();
-        let shard = self.db.load(platform)?;
+        let shards = self.db.all_shards()?;
         obs::metrics().shard_read_us.record(read_started.elapsed().as_micros() as u64);
-        let fp = shard.as_ref().and_then(|s| s.fingerprint.clone());
-        let p = shard.as_ref().and_then(|s| s.portfolio(kernel).cloned());
-        // Same race guard as `cached_lookup`: a `record-portfolio`
-        // landing between the shard read and this put must not leave a
-        // stale (possibly negative) portfolio cached indefinitely.
-        {
-            let mut lru = lock(&self.portfolio_lru);
-            if self.cache_gen.load(Ordering::SeqCst) == gen_before {
-                lru.put(key, (std::time::Instant::now(), fp.clone(), p.clone()));
+        let generation = self.snapshot().generation() + 1;
+        Ok(self.install(ServeSnapshot::build(shards, generation)))
+    }
+
+    /// Pack the published snapshot into an offline decision bundle
+    /// (see [`crate::service::bundle`]): every shard's on-disk
+    /// document verbatim where one exists (byte-identical round-trips)
+    /// plus the host fingerprint and the snapshot generation, so
+    /// offline answers carry the same `gen` a live reply would.
+    pub fn export_bundle(&self) -> Result<String> {
+        let snap = self.snapshot();
+        let mut texts = Vec::with_capacity(snap.shards().len());
+        for shard in snap.shards() {
+            match self.db.export_shard_text(&shard.platform_key)? {
+                Some(text) => texts.push(text),
+                // Snapshot shard with no file on disk (deleted since
+                // publish): re-serialize the in-memory copy.
+                None => texts.push(shard.to_json_text()),
             }
         }
-        Ok((fp, p, false))
-    }
-
-    fn invalidate(&self, platform: &str, kernel: &str, tag: &str) {
-        let key = (platform.to_string(), kernel.to_string(), tag.to_string());
-        let mut lru = lock(&self.lru);
-        self.cache_gen.fetch_add(1, Ordering::SeqCst);
-        lru.remove(&key);
-        drop(lru);
-        // The write may have replaced the shard's fingerprint, which
-        // the portfolio cache stores for selection features — drop the
-        // platform's portfolio entries (every kernel) so the next
-        // portfolio op re-reads it.
-        lock(&self.portfolio_lru).retain(|(p, _)| p != platform);
-    }
-
-    /// Invalidate after a portfolio write: drop the platform's
-    /// portfolio cache entries (under the generation bump so a racing
-    /// `cached_portfolio` read cannot re-cache the pre-write shard).
-    fn invalidate_portfolio(&self, platform: &str) {
-        let mut lru = lock(&self.portfolio_lru);
-        self.cache_gen.fetch_add(1, Ordering::SeqCst);
-        lru.retain(|(p, _)| p != platform);
+        let meta = crate::service::bundle::BundleMeta {
+            platform: self.host_key.clone(),
+            generation: snap.generation(),
+            fingerprint: Some(self.host.clone()),
+        };
+        Ok(crate::service::bundle::write_bundle(&meta, &texts))
     }
 
     /// Counter snapshot (plus live queue/cache depths).
@@ -543,7 +524,9 @@ impl Server {
             tasks_pending,
             tasks_inflight,
             queue_depth,
-            lru_len: lock(&self.lru).len() as u64,
+            lru_len: self.snapshot().index_len() as u64,
+            snapshot_gen: self.snapshot().generation(),
+            snapshot_publishes: self.counters.snapshot_publishes.load(Ordering::Relaxed),
             stale_locks_reaped: crate::coordinator::perfdb::stale_locks_reaped(),
             shards_quarantined: self.db.quarantined_count().unwrap_or(0),
         }
@@ -654,112 +637,55 @@ impl Server {
             Request::Lookup { platform, kernel, workload } => {
                 self.bump(&self.counters.lookups);
                 let platform = platform.as_deref().unwrap_or(&self.host_key);
-                let (found, from_lru) = self.cached_lookup(platform, kernel, workload)?;
-                let reason = match (&found, from_lru) {
-                    (Some(_), true) => ServeReason::LruCache,
-                    (Some(_), false) => ServeReason::Exact,
-                    (None, _) => ServeReason::Miss,
-                };
+                let started = Instant::now();
+                let snap = self.snapshot();
+                let (reply, from) = snap.lookup_reply(platform, kernel, workload);
+                self.bump(&self.counters.lru_hits);
+                obs::metrics().lru_hit_us.record(started.elapsed().as_micros() as u64);
                 self.audit(AuditEvent::Served {
                     op: "lookup".into(),
+                    platform: platform.to_string(),
+                    kernel: kernel.clone(),
+                    workload: Some(workload.clone()),
+                    reason: match from {
+                        ServedFrom::Index => ServeReason::Exact,
+                        _ => ServeReason::Miss,
+                    },
+                    trace_id: trace_id.map(str::to_string),
+                });
+                Ok(reply)
+            }
+            Request::Deploy { platform, kernel, workload, fingerprint } => {
+                self.bump(&self.counters.deploys);
+                let platform = platform.as_deref().unwrap_or(&self.host_key);
+                let started = Instant::now();
+                let snap = self.snapshot();
+                let (reply, from) =
+                    snap.deploy_reply(platform, kernel, workload, fingerprint.as_ref(), &self.host);
+                let reason = match from {
+                    ServedFrom::Index => {
+                        self.bump(&self.counters.lru_hits);
+                        obs::metrics().lru_hit_us.record(started.elapsed().as_micros() as u64);
+                        ServeReason::Exact
+                    }
+                    ServedFrom::Transfer { source, similarity_pm } => {
+                        self.bump(&self.counters.transfer_misses);
+                        ServeReason::Transfer { source, similarity_pm }
+                    }
+                    ServedFrom::Miss => {
+                        self.bump(&self.counters.transfer_misses);
+                        ServeReason::Miss
+                    }
+                };
+                self.audit(AuditEvent::Served {
+                    op: "deploy".into(),
                     platform: platform.to_string(),
                     kernel: kernel.clone(),
                     workload: Some(workload.clone()),
                     reason,
                     trace_id: trace_id.map(str::to_string),
                 });
-                match found {
-                    Some(entry) => Ok(reply_ok(vec![
-                        ("found", Json::Bool(true)),
-                        ("entry", entry.to_json()),
-                    ])),
-                    None => Ok(reply_ok(vec![("found", Json::Bool(false))])),
-                }
-            }
-            Request::Deploy { platform, kernel, workload, fingerprint } => {
-                self.bump(&self.counters.deploys);
-                let platform = platform.as_deref().unwrap_or(&self.host_key);
-                let (found, from_lru) = self.cached_lookup(platform, kernel, workload)?;
-                if let Some(entry) = found {
-                    self.audit(AuditEvent::Served {
-                        op: "deploy".into(),
-                        platform: platform.to_string(),
-                        kernel: kernel.clone(),
-                        workload: Some(workload.clone()),
-                        reason: if from_lru {
-                            ServeReason::LruCache
-                        } else {
-                            ServeReason::Exact
-                        },
-                        trace_id: trace_id.map(str::to_string),
-                    });
-                    return Ok(reply_ok(vec![
-                        ("source", json::s("exact")),
-                        ("entry", entry.to_json()),
-                    ]));
-                }
-                // Miss: answer with transfer-ranked warm-start
-                // candidates from the nearest platforms instead of an
-                // empty deploy.
-                self.bump(&self.counters.transfer_misses);
-                let rank_started = Instant::now();
-                let shards = self.db.all_shards()?;
-                // Rank for the *target platform's* hardware: its stored
-                // shard fingerprint is authoritative (a query made on
-                // behalf of another machine carries the requester's
-                // fingerprint, which describes the wrong box); fall
-                // back to the request's fingerprint, then the host's.
-                let stored = shards
-                    .iter()
-                    .find(|s| s.platform_key == platform)
-                    .and_then(|s| s.fingerprint.as_ref());
-                let target = stored.or(fingerprint.as_ref()).unwrap_or(&self.host);
-                let ranked =
-                    transfer::rank_candidates(&shards, target, kernel, workload, platform);
-                obs::metrics().transfer_rank_us.record(rank_started.elapsed().as_micros() as u64);
-                self.audit(AuditEvent::Served {
-                    op: "deploy".into(),
-                    platform: platform.to_string(),
-                    kernel: kernel.clone(),
-                    workload: Some(workload.clone()),
-                    reason: match ranked.first() {
-                        Some(best) => ServeReason::Transfer {
-                            source: best.platform_key.clone(),
-                            similarity_pm: (best.similarity.clamp(0.0, 1.0) * 1000.0).round()
-                                as u64,
-                        },
-                        None => ServeReason::Miss,
-                    },
-                    trace_id: trace_id.map(str::to_string),
-                });
-                let candidates: Vec<Json> = ranked
-                    .iter()
-                    .take(DEPLOY_CANDIDATES)
-                    .map(|c| {
-                        json::obj(vec![
-                            ("platform", json::s(&c.platform_key)),
-                            ("similarity", json::num(c.similarity)),
-                            ("same_workload", Json::Bool(c.same_workload)),
-                            ("config_id", json::s(&c.entry.best_config_id)),
-                            (
-                                "params",
-                                Json::Obj(
-                                    c.entry
-                                        .best_params
-                                        .iter()
-                                        .map(|(k, v)| (k.clone(), json::int(*v)))
-                                        .collect(),
-                                ),
-                            ),
-                            ("speedup", json::num(c.entry.speedup())),
-                        ])
-                    })
-                    .collect();
-                Ok(reply_ok(vec![
-                    ("source", json::s("transfer")),
-                    ("count", json::int(candidates.len() as i64)),
-                    ("candidates", Json::Arr(candidates)),
-                ]))
+                Ok(reply)
             }
             Request::Record { entry, fingerprint, request_id } => {
                 self.deduped(request_id, || {
@@ -769,21 +695,24 @@ impl Server {
                         (entry.platform_key.clone(), entry.kernel.clone(), entry.tag.clone());
                     let config = entry.best_config_id.clone();
                     self.db.record(fingerprint.as_ref(), entry)?;
-                    self.invalidate(&platform, &kernel, &tag);
+                    let generation = self.publish_platform(&platform)?;
                     self.audit(AuditEvent::RecordAccepted {
                         platform: platform.clone(),
                         kernel: kernel.clone(),
                         tag: tag.clone(),
                         config,
                     });
-                    Ok(reply_ok(vec![("recorded", Json::Bool(true))]))
+                    Ok(reply_ok(vec![
+                        ("recorded", Json::Bool(true)),
+                        ("gen", json::int(generation as i64)),
+                    ]))
                 })
             }
             Request::RecordPortfolio { platform, portfolio, fingerprint } => {
                 self.bump(&self.counters.records);
                 let platform = platform.as_deref().unwrap_or(&self.host_key);
                 self.db.record_portfolio(platform, fingerprint.as_ref(), (**portfolio).clone())?;
-                self.invalidate_portfolio(platform);
+                let generation = self.publish_platform(platform)?;
                 self.audit(AuditEvent::RecordAccepted {
                     platform: platform.to_string(),
                     kernel: portfolio.kernel.clone(),
@@ -794,6 +723,7 @@ impl Server {
                     ("recorded", Json::Bool(true)),
                     ("platform", json::s(platform)),
                     ("kernel", json::s(&portfolio.kernel)),
+                    ("gen", json::int(generation as i64)),
                 ]))
             }
             Request::Stats => {
@@ -809,81 +739,36 @@ impl Server {
             Request::Portfolio { platform, kernel, dims, fingerprint } => {
                 self.bump(&self.counters.portfolios);
                 let platform = platform.as_deref().unwrap_or(&self.host_key);
-                let (stored_fp, portfolio, from_lru) = self.cached_portfolio(platform, kernel)?;
-                // Selection features depend on cache geometry; the
-                // target platform's stored fingerprint is authoritative,
-                // then the request's, then the host's (same precedence
-                // as deploy's transfer ranking).
-                let target =
-                    stored_fp.as_ref().or(fingerprint.as_ref()).unwrap_or(&self.host).clone();
-                if let Some(p) = portfolio {
-                    self.audit(AuditEvent::Served {
-                        op: "portfolio".into(),
-                        platform: platform.to_string(),
-                        kernel: kernel.clone(),
-                        workload: None,
-                        reason: if from_lru {
-                            ServeReason::LruCache
-                        } else {
-                            ServeReason::Exact
-                        },
-                        trace_id: trace_id.map(str::to_string),
-                    });
-                    let mut fields = vec![
-                        ("found", Json::Bool(true)),
-                        ("source", json::s("exact")),
-                        ("platform", json::s(platform)),
-                        ("portfolio", p.to_json()),
-                    ];
-                    if let Some(dims) = dims {
-                        if let Some(item) = p.select_for_dims(dims, &target) {
-                            fields.push(("selected", portfolio_item_json(item)));
-                        }
+                let started = Instant::now();
+                let snap = self.snapshot();
+                let (reply, from) = snap.portfolio_reply(
+                    platform,
+                    kernel,
+                    dims.as_ref(),
+                    fingerprint.as_ref(),
+                    &self.host,
+                );
+                let reason = match from {
+                    ServedFrom::Index => {
+                        self.bump(&self.counters.lru_hits);
+                        obs::metrics().lru_hit_us.record(started.elapsed().as_micros() as u64);
+                        ServeReason::Exact
                     }
-                    return Ok(reply_ok(fields));
-                }
-                // Miss: answer with the nearest platform's portfolio
-                // instead of nothing — portfolios transfer exactly like
-                // single tuned configs do.  (Uncached by design: like
-                // deploy's transfer path, it is the cold fallback.)
-                let rank_started = Instant::now();
-                let shards = self.db.all_shards()?;
-                let ranked = transfer::rank_portfolios(&shards, &target, kernel, platform);
-                obs::metrics().transfer_rank_us.record(rank_started.elapsed().as_micros() as u64);
+                    ServedFrom::Transfer { source, similarity_pm } => {
+                        self.bump(&self.counters.portfolio_transfers);
+                        ServeReason::Transfer { source, similarity_pm }
+                    }
+                    ServedFrom::Miss => ServeReason::Miss,
+                };
                 self.audit(AuditEvent::Served {
                     op: "portfolio".into(),
                     platform: platform.to_string(),
                     kernel: kernel.clone(),
                     workload: None,
-                    reason: match ranked.first() {
-                        Some(best) => ServeReason::Transfer {
-                            source: best.platform_key.clone(),
-                            similarity_pm: (best.similarity.clamp(0.0, 1.0) * 1000.0).round()
-                                as u64,
-                        },
-                        None => ServeReason::Miss,
-                    },
+                    reason,
                     trace_id: trace_id.map(str::to_string),
                 });
-                match ranked.into_iter().next() {
-                    Some(c) => {
-                        self.bump(&self.counters.portfolio_transfers);
-                        let mut fields = vec![
-                            ("found", Json::Bool(true)),
-                            ("source", json::s("transfer")),
-                            ("platform", json::s(&c.platform_key)),
-                            ("similarity", json::num(c.similarity)),
-                            ("portfolio", c.portfolio.to_json()),
-                        ];
-                        if let Some(dims) = dims {
-                            if let Some(item) = c.portfolio.select_for_dims(dims, &target) {
-                                fields.push(("selected", portfolio_item_json(item)));
-                            }
-                        }
-                        Ok(reply_ok(fields))
-                    }
-                    None => Ok(reply_ok(vec![("found", Json::Bool(false))])),
-                }
+                Ok(reply)
             }
             Request::TaskLease { kind, platform, ttl_s } => {
                 self.drain_expired();
@@ -1125,7 +1010,10 @@ impl Server {
     /// One periodic staleness scan; returns how many tasks were queued.
     /// Also requeues expired leases — the scan thread is the heartbeat
     /// that guarantees a crashed worker's task resurfaces even when no
-    /// other worker is polling.
+    /// other worker is polling — and republishes the snapshot from
+    /// disk, which bounds read staleness against out-of-band shard
+    /// writers (`db-migrate`, another machine's tuner) by the scan
+    /// interval.
     pub fn scan_once(&self) -> Result<usize> {
         self.drain_expired();
         // Sweep abandoned shard locks first: a corpse would otherwise
@@ -1134,8 +1022,9 @@ impl Server {
             eprintln!("stale-lock sweep failed: {e:#}");
             self.bump(&self.counters.errors);
         }
-        let shards = self.db.all_shards()?;
-        let added = lock(&self.scheduler).scan_report(&shards, &self.host, unix_now());
+        self.refresh_snapshot()?;
+        let snap = self.snapshot();
+        let added = lock(&self.scheduler).scan_report(snap.shards(), &self.host, unix_now());
         self.counters.tasks_queued.fetch_add(added.len() as u64, Ordering::Relaxed);
         for t in &added {
             self.audit(AuditEvent::TaskEnqueued {
@@ -1263,7 +1152,9 @@ impl Server {
                             (entry.platform_key.clone(), entry.kernel.clone(), entry.tag.clone());
                         let config = entry.best_config_id.clone();
                         if self.db.record(Some(&outcome.platform), entry).is_ok() {
-                            self.invalidate(&platform, &kernel, &tag);
+                            if self.publish_platform(&platform).is_err() {
+                                self.bump(&self.counters.errors);
+                            }
                             self.bump(&self.counters.retunes);
                             self.audit(AuditEvent::RecordAccepted {
                                 platform: platform.clone(),
@@ -1302,38 +1193,60 @@ impl Server {
     }
 
     /// The shared accept loop (transport supplied as a non-blocking
-    /// `accept` closure).  Each connection gets a thread; finished
-    /// handles are reaped every iteration so a long-lived daemon does
-    /// not accumulate dead thread stacks.  Connections carry a read
-    /// timeout ([`ServeStream::prepare`]) so their loops notice the
-    /// shutdown flag even when a client holds the socket open idle.
+    /// `accept` closure).  Prepared connections go to a bounded worker
+    /// pool over a condvar'd queue — a fixed number of handler threads
+    /// instead of thread-per-connection, so contended throughput is
+    /// set by pool width and a connection flood cannot pile up thread
+    /// stacks.  Queued plus in-service connections are capped by
+    /// [`ServeOpts::max_conns`]; past the cap a new connection is shed
+    /// with one retryable `overloaded` reply.  Connections carry a
+    /// read timeout ([`ServeStream::prepare`]) so handler loops notice
+    /// the shutdown flag even when a client holds the socket open
+    /// idle.
     fn run_accept_loop<S: ServeStream>(
         self: Arc<Self>,
         mut accept: impl FnMut() -> std::io::Result<S>,
     ) -> Result<()> {
-        let mut handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        let pool: Arc<ConnQueue<S>> = Arc::new(ConnQueue {
+            ready: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            inflight: AtomicUsize::new(0),
+        });
+        let worker_count = if self.opts.workers > 0 {
+            self.opts.workers
+        } else {
+            // Serving is line parsing + hash probes — CPU-bound — so
+            // size to the machine; the clamp keeps one-core boxes able
+            // to overlap a stalled reader with live traffic and huge
+            // boxes from hoarding idle threads.
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).clamp(2, 32)
+        };
+        let mut workers = Vec::with_capacity(worker_count);
+        for _ in 0..worker_count {
+            let srv = Arc::clone(&self);
+            let pool = Arc::clone(&pool);
+            workers.push(std::thread::spawn(move || srv.run_pool_worker(&pool)));
+        }
         while !self.is_shutdown() {
-            handles.retain(|h| !h.is_finished());
             match accept() {
                 Ok(mut stream) => {
                     stream.prepare();
-                    if self.opts.max_conns > 0 && handles.len() >= self.opts.max_conns {
-                        // Shed load: a bounded thread-per-connection
-                        // pool beats unbounded queueing.  The refused
-                        // client gets one retryable `overloaded` reply
-                        // (see `client::RetryPolicy`).  Reply + close
-                        // happen on a short detached thread that also
-                        // drains the client's in-flight request bytes —
+                    let inflight = pool.inflight.load(Ordering::SeqCst);
+                    if self.opts.max_conns > 0 && inflight >= self.opts.max_conns {
+                        // Shed load: a bounded pool beats unbounded
+                        // queueing.  The refused client gets one
+                        // retryable `overloaded` reply (see
+                        // `client::RetryPolicy`).  Reply + close happen
+                        // on a short detached thread that also drains
+                        // the client's in-flight request bytes —
                         // closing with unread data can reset the
                         // connection and tear the reply away before the
                         // client reads it — so the accept loop itself
                         // never blocks on a shed connection.
                         self.bump(&self.counters.conns_shed);
-                        let line = reply_err(&format!(
-                            "overloaded: {} connections in flight",
-                            handles.len()
-                        ))
-                        .compact();
+                        let line =
+                            reply_err(&format!("overloaded: {inflight} connections in flight"))
+                                .compact();
                         std::thread::spawn(move || {
                             let _ = stream
                                 .write_all(line.as_bytes())
@@ -1352,13 +1265,9 @@ impl Server {
                         });
                         continue;
                     }
-                    let srv = Arc::clone(&self);
-                    handles.push(std::thread::spawn(move || {
-                        match stream.split_read_half() {
-                            Ok(read_half) => srv.serve_split_stream(read_half, stream),
-                            Err(_) => srv.bump(&srv.counters.errors),
-                        }
-                    }));
+                    pool.inflight.fetch_add(1, Ordering::SeqCst);
+                    lock(&pool.ready).push_back(stream);
+                    pool.available.notify_one();
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                     std::thread::sleep(ACCEPT_POLL);
@@ -1372,12 +1281,15 @@ impl Server {
                 }
             }
         }
-        // Graceful drain: accepting has stopped; in-flight handlers
-        // observe the shutdown flag within one read timeout and
-        // finish their current request before exiting.  Then flush a
-        // final stats snapshot to the log so a restart never discards
-        // the counters silently.
-        for h in handles {
+        // Graceful drain: accepting has stopped; wake every worker.
+        // Workers pop the queue *before* checking the shutdown flag,
+        // so already-accepted connections still get a handler (their
+        // loops then observe shutdown within one read timeout and
+        // finish the current request).  Then flush a final stats
+        // snapshot to the log so a restart never discards the counters
+        // silently.
+        pool.available.notify_all();
+        for h in workers {
             let _ = h.join();
         }
         eprintln!(
@@ -1385,6 +1297,41 @@ impl Server {
             crate::report::stats::serve_stats_json(&self.stats()).compact()
         );
         Ok(())
+    }
+
+    /// One pool worker: pop the next prepared connection (pop first,
+    /// check shutdown second — so the queue drains on shutdown), serve
+    /// it to completion, release its inflight slot.  A killed client
+    /// surfaces as EOF or a hard read error inside
+    /// [`Self::serve_connection`], which returns — the worker moves on
+    /// to the next connection rather than wedging.
+    fn run_pool_worker<S: ServeStream>(&self, pool: &ConnQueue<S>) {
+        loop {
+            let next = {
+                let mut ready = lock(&pool.ready);
+                loop {
+                    if let Some(stream) = ready.pop_front() {
+                        break Some(stream);
+                    }
+                    if self.is_shutdown() {
+                        break None;
+                    }
+                    // Timed wait: a missed notify (shed race, spurious
+                    // shutdown ordering) costs one timeout, not a hang.
+                    ready = pool
+                        .available
+                        .wait_timeout(ready, CONN_READ_TIMEOUT)
+                        .unwrap_or_else(|poisoned| poisoned.into_inner())
+                        .0;
+                }
+            };
+            let Some(stream) = next else { break };
+            match stream.split_read_half() {
+                Ok(read_half) => self.serve_split_stream(read_half, stream),
+                Err(_) => self.bump(&self.counters.errors),
+            }
+            pool.inflight.fetch_sub(1, Ordering::SeqCst);
+        }
     }
 
     /// Accept loop over TCP.  Returns when shutdown is requested.
@@ -1410,7 +1357,7 @@ impl Server {
         // The live-depth fields of `ServeStats`; everything else in the
         // snapshot is a monotonic counter.
         const GAUGES: &[&str] =
-            &["tasks_pending", "tasks_inflight", "lru_len", "shards_quarantined"];
+            &["tasks_pending", "tasks_inflight", "lru_len", "snapshot_gen", "shards_quarantined"];
         let stats = crate::report::stats::serve_stats_json(&self.stats());
         let mut out = String::new();
         if let Some(map) = stats.as_obj() {
@@ -1483,16 +1430,17 @@ impl Server {
     }
 }
 
-/// Compact wire view of a selected portfolio member (the part a deploy
-/// client actually consumes: which config to run).
-fn portfolio_item_json(item: &PortfolioItem) -> Json {
-    json::obj(vec![
-        ("config_id", json::s(&item.config_id)),
-        (
-            "params",
-            Json::Obj(item.config.iter().map(|(k, v)| (k.clone(), json::int(*v))).collect()),
-        ),
-    ])
+/// Accept-queue state shared between the accept loop and its worker
+/// pool: prepared connections wait here until a worker picks them up.
+struct ConnQueue<S> {
+    /// Prepared connections awaiting a worker.
+    ready: Mutex<VecDeque<S>>,
+    /// Signaled once per push (and broadcast at shutdown).
+    available: Condvar,
+    /// Queued plus in-service connections — the value
+    /// [`ServeOpts::max_conns`] sheds against (a connection counts
+    /// from accept until its handler returns).
+    inflight: AtomicUsize,
 }
 
 /// The per-transport surface the accept loop needs: post-accept socket
@@ -1607,13 +1555,16 @@ mod tests {
             reply.get("entry").and_then(|e| e.get("best_config_id")).and_then(Json::as_str),
             Some("b256_u1")
         );
-        // Second lookup is served from the LRU.
+        // Both lookups are pure snapshot-index probes; the only shard
+        // read was the record's publish.
         let _ = srv.handle_request(&look);
         let stats = srv.stats();
         assert_eq!(stats.lookups, 2);
-        assert_eq!(stats.lru_hits, 1);
+        assert_eq!(stats.lru_hits, 2);
         assert_eq!(stats.shard_reads, 1);
         assert_eq!(stats.records, 1);
+        assert_eq!(stats.snapshot_gen, 1);
+        assert_eq!(stats.snapshot_publishes, 1);
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -1786,6 +1737,8 @@ mod tests {
     fn portfolio_exact_hit_selects_by_dims() {
         let (srv, dir) = test_server("portfolio-exact");
         srv.db().record_portfolio("p1", Some(&fp()), test_portfolio("gemm")).unwrap();
+        // Out-of-band write (straight through the db): publish it.
+        srv.refresh_snapshot().unwrap();
         let reply = srv.handle_request(&Request::Portfolio {
             platform: Some("p1".into()),
             kernel: "gemm".into(),
@@ -1816,8 +1769,8 @@ mod tests {
         let stats = srv.stats();
         assert_eq!(stats.portfolios, 1);
         assert_eq!(stats.portfolio_transfers, 0);
-        assert_eq!(stats.shard_reads, 1);
-        // A second identical op is served from the portfolio cache.
+        assert_eq!(stats.shard_reads, 1, "only the publish read the shard");
+        // A second identical op is another pure snapshot-index probe.
         let reply = srv.handle_request(&Request::Portfolio {
             platform: Some("p1".into()),
             kernel: "gemm".into(),
@@ -1826,8 +1779,8 @@ mod tests {
         });
         assert_eq!(reply.get("source").and_then(Json::as_str), Some("exact"));
         let stats = srv.stats();
-        assert_eq!(stats.shard_reads, 1, "cached portfolio must not re-read the shard");
-        assert_eq!(stats.lru_hits, 1);
+        assert_eq!(stats.shard_reads, 1, "serving must not re-read the shard");
+        assert_eq!(stats.lru_hits, 2);
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -1835,16 +1788,18 @@ mod tests {
     fn record_invalidates_cached_portfolio_fingerprint() {
         let (srv, dir) = test_server("portfolio-inval");
         srv.db().record_portfolio("p1", Some(&fp()), test_portfolio("gemm")).unwrap();
+        srv.refresh_snapshot().unwrap();
         let req = Request::Portfolio {
             platform: Some("p1".into()),
             kernel: "gemm".into(),
             dims: None,
             fingerprint: None,
         };
-        let _ = srv.handle_request(&req); // populates the portfolio cache
+        let _ = srv.handle_request(&req); // pure snapshot probe
         assert_eq!(srv.stats().shard_reads, 1);
-        // A record op may rewrite the shard's fingerprint (which the
-        // cache stores for selection) — it must bust the entry.
+        // A record op may rewrite the shard's fingerprint (which drives
+        // portfolio selection) — its publish must re-read the shard so
+        // the next portfolio op sees the fresh state.
         srv.handle_request(&Request::Record {
             request_id: None,
             entry: Box::new(entry("p1", "axpy", "n4096", "whatever")),
@@ -1854,7 +1809,7 @@ mod tests {
         assert_eq!(
             srv.stats().shard_reads,
             2,
-            "portfolio op after a record must re-read the shard"
+            "the record's publish must re-read the shard exactly once"
         );
         std::fs::remove_dir_all(&dir).ok();
     }
@@ -1868,6 +1823,7 @@ mod tests {
         far_fp.os = "macos".into();
         srv.db().record_portfolio("near-p", Some(&near_fp), test_portfolio("gemm")).unwrap();
         srv.db().record_portfolio("far-p", Some(&far_fp), test_portfolio("gemm")).unwrap();
+        srv.refresh_snapshot().unwrap();
         let reply = srv.handle_request(&Request::Portfolio {
             platform: Some("fresh-platform".into()),
             kernel: "gemm".into(),
@@ -2078,13 +2034,14 @@ mod tests {
         let mut old = test_portfolio("gemm");
         old.built_at = 1000;
         srv.db().record_portfolio("p1", Some(&fp()), old).unwrap();
+        srv.refresh_snapshot().unwrap();
         let req = Request::Portfolio {
             platform: Some("p1".into()),
             kernel: "gemm".into(),
             dims: None,
             fingerprint: None,
         };
-        let reply = srv.handle_request(&req); // populates the cache
+        let reply = srv.handle_request(&req);
         assert_eq!(
             reply.get("portfolio").and_then(|p| p.get("built_at")).and_then(Json::as_u64),
             Some(1000)
@@ -2099,7 +2056,7 @@ mod tests {
         });
         assert_eq!(reply.get("recorded").and_then(Json::as_bool), Some(true));
         // ...and the very next portfolio op serves the fresh build —
-        // no TTL wait, the cache was invalidated.
+        // the wire op published a new snapshot generation.
         let reply = srv.handle_request(&req);
         assert_eq!(
             reply.get("portfolio").and_then(|p| p.get("built_at")).and_then(Json::as_u64),

@@ -1,0 +1,409 @@
+//! Immutable serve-path state: one [`ServeSnapshot`] per published
+//! generation.
+//!
+//! The daemon used to guard its decision caches with mutexes, so every
+//! hot `lookup`/`deploy`/`portfolio` serialized on a lock and contended
+//! throughput flatlined.  Now all read-path state — the shard pool,
+//! the deployable frontier, the per-kernel portfolios, the stored
+//! fingerprints — is precomputed into an immutable snapshot held
+//! behind `RwLock<Arc<ServeSnapshot>>` (read-mostly discipline: readers
+//! clone the `Arc` under a read lock and then work lock-free; writers
+//! clone-merge-publish a whole new snapshot and swap the `Arc`).
+//! Readers therefore never block on a writer mutex, never observe a
+//! half-merged state, and every reply can tell the client exactly
+//! which generation answered it (`gen` — the read-your-writes echo).
+//!
+//! The same type is the payload of an offline decision bundle
+//! ([`crate::service::bundle`]): `Client::from_bundle` answers
+//! `deploy`/`portfolio` from a deserialized snapshot with zero daemon
+//! round-trips, so reply shaping lives *here*, shared by both paths —
+//! offline answers are identical to live ones by construction.
+
+use std::collections::{BTreeMap, HashMap};
+use std::time::Instant;
+
+use crate::coordinator::perfdb::{DbEntry, Shard};
+use crate::coordinator::platform::Fingerprint;
+use crate::coordinator::portfolio::{Portfolio, PortfolioItem};
+use crate::obs;
+use crate::service::protocol::reply_ok;
+use crate::service::transfer;
+use crate::util::json::{self, Json};
+
+/// How many transfer candidates a deploy miss returns.
+pub(crate) const DEPLOY_CANDIDATES: usize = 5;
+
+/// Where a snapshot-served answer came from — the serve path's
+/// counter/audit classification, shared by the daemon and the offline
+/// bundle client.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServedFrom {
+    /// Answered from the snapshot's precomputed index (an exact hit).
+    Index,
+    /// Exact miss answered by transfer ranking from the named source.
+    Transfer {
+        /// Platform key the borrowed answer was recorded on.
+        source: String,
+        /// Similarity of that platform to the target, in per-mille.
+        similarity_pm: u64,
+    },
+    /// Exact miss with no transfer candidate either.
+    Miss,
+}
+
+/// One immutable, internally consistent view of the shard store:
+/// everything the hot serve ops need, precomputed at publish time so
+/// reads are pure hash-map probes over shared (`Arc`ed) data.
+#[derive(Debug, Clone)]
+pub struct ServeSnapshot {
+    generation: u64,
+    /// The full shard pool, sorted by platform key — the transfer
+    /// ranking's candidate set.
+    shards: Vec<Shard>,
+    /// (platform, kernel, workload) → newest entry: the deployable
+    /// frontier across every shard.
+    frontier: HashMap<(String, String, String), DbEntry>,
+    /// (platform, kernel) → built portfolio.
+    portfolios: HashMap<(String, String), Portfolio>,
+    /// platform → stored fingerprint (drives transfer ranking and
+    /// portfolio selection features).
+    fingerprints: HashMap<String, Fingerprint>,
+}
+
+impl ServeSnapshot {
+    /// Precompute a snapshot from a shard pool, stamped `generation`.
+    pub fn build(mut shards: Vec<Shard>, generation: u64) -> ServeSnapshot {
+        shards.sort_by(|a, b| a.platform_key.cmp(&b.platform_key));
+        let mut frontier = HashMap::new();
+        let mut portfolios = HashMap::new();
+        let mut fingerprints = HashMap::new();
+        for shard in &shards {
+            for entry in shard.frontier() {
+                frontier.insert(
+                    (shard.platform_key.clone(), entry.kernel.clone(), entry.tag.clone()),
+                    entry.clone(),
+                );
+            }
+            for p in &shard.portfolios {
+                portfolios.insert((shard.platform_key.clone(), p.kernel.clone()), p.clone());
+            }
+            if let Some(fp) = &shard.fingerprint {
+                fingerprints.insert(shard.platform_key.clone(), fp.clone());
+            }
+        }
+        ServeSnapshot { generation, shards, frontier, portfolios, fingerprints }
+    }
+
+    /// The monotone publish counter this snapshot was stamped with.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// The shard pool this snapshot was built from, sorted by platform.
+    pub fn shards(&self) -> &[Shard] {
+        &self.shards
+    }
+
+    /// Newest entry for (platform, kernel, workload), if tuned.
+    pub fn lookup(&self, platform: &str, kernel: &str, tag: &str) -> Option<&DbEntry> {
+        self.frontier.get(&(platform.to_string(), kernel.to_string(), tag.to_string()))
+    }
+
+    /// The stored portfolio for (platform, kernel), if built.
+    pub fn portfolio(&self, platform: &str, kernel: &str) -> Option<&Portfolio> {
+        self.portfolios.get(&(platform.to_string(), kernel.to_string()))
+    }
+
+    /// The stored fingerprint for a platform, if recorded.
+    pub fn fingerprint(&self, platform: &str) -> Option<&Fingerprint> {
+        self.fingerprints.get(platform)
+    }
+
+    /// Total precomputed index entries (frontier + portfolios) — the
+    /// successor of the old decision-cache `lru_len` gauge.
+    pub fn index_len(&self) -> usize {
+        self.frontier.len() + self.portfolios.len()
+    }
+
+    /// Shape a `lookup` reply.  Pure index probe; the `gen` field tells
+    /// the client which published generation answered.
+    pub fn lookup_reply(&self, platform: &str, kernel: &str, workload: &str) -> (Json, ServedFrom) {
+        match self.lookup(platform, kernel, workload) {
+            Some(entry) => (
+                reply_ok(vec![
+                    ("found", Json::Bool(true)),
+                    ("entry", entry.to_json()),
+                    ("gen", json::int(self.generation as i64)),
+                ]),
+                ServedFrom::Index,
+            ),
+            None => (
+                reply_ok(vec![
+                    ("found", Json::Bool(false)),
+                    ("gen", json::int(self.generation as i64)),
+                ]),
+                ServedFrom::Miss,
+            ),
+        }
+    }
+
+    /// Shape a `deploy` reply: exact frontier hit, else transfer-ranked
+    /// warm-start candidates from the nearest platforms.  Ranking runs
+    /// for the *target platform's* hardware: its stored shard
+    /// fingerprint is authoritative (a query made on behalf of another
+    /// machine carries the requester's fingerprint, which describes the
+    /// wrong box); fall back to the request's fingerprint, then `host`.
+    pub fn deploy_reply(
+        &self,
+        platform: &str,
+        kernel: &str,
+        workload: &str,
+        request_fp: Option<&Fingerprint>,
+        host: &Fingerprint,
+    ) -> (Json, ServedFrom) {
+        if let Some(entry) = self.lookup(platform, kernel, workload) {
+            return (
+                reply_ok(vec![
+                    ("source", json::s("exact")),
+                    ("entry", entry.to_json()),
+                    ("gen", json::int(self.generation as i64)),
+                ]),
+                ServedFrom::Index,
+            );
+        }
+        let rank_started = Instant::now();
+        let target = self.fingerprint(platform).or(request_fp).unwrap_or(host);
+        let ranked = transfer::rank_candidates(&self.shards, target, kernel, workload, platform);
+        obs::metrics().transfer_rank_us.record(rank_started.elapsed().as_micros() as u64);
+        let from = match ranked.first() {
+            Some(best) => ServedFrom::Transfer {
+                source: best.platform_key.clone(),
+                similarity_pm: (best.similarity.clamp(0.0, 1.0) * 1000.0).round() as u64,
+            },
+            None => ServedFrom::Miss,
+        };
+        let candidates: Vec<Json> = ranked
+            .iter()
+            .take(DEPLOY_CANDIDATES)
+            .map(|c| {
+                json::obj(vec![
+                    ("platform", json::s(&c.platform_key)),
+                    ("similarity", json::num(c.similarity)),
+                    ("same_workload", Json::Bool(c.same_workload)),
+                    ("config_id", json::s(&c.entry.best_config_id)),
+                    (
+                        "params",
+                        Json::Obj(
+                            c.entry
+                                .best_params
+                                .iter()
+                                .map(|(k, v)| (k.clone(), json::int(*v)))
+                                .collect(),
+                        ),
+                    ),
+                    ("speedup", json::num(c.entry.speedup())),
+                ])
+            })
+            .collect();
+        (
+            reply_ok(vec![
+                ("source", json::s("transfer")),
+                ("count", json::int(candidates.len() as i64)),
+                ("candidates", Json::Arr(candidates)),
+                ("gen", json::int(self.generation as i64)),
+            ]),
+            from,
+        )
+    }
+
+    /// Shape a `portfolio` reply: exact portfolio (with optional
+    /// dims-driven member selection), else the nearest platform's
+    /// portfolio by transfer ranking, else `found:false`.  Fingerprint
+    /// precedence for selection and ranking matches
+    /// [`deploy_reply`](Self::deploy_reply): stored, then request, then
+    /// `host`.
+    pub fn portfolio_reply(
+        &self,
+        platform: &str,
+        kernel: &str,
+        dims: Option<&BTreeMap<String, i64>>,
+        request_fp: Option<&Fingerprint>,
+        host: &Fingerprint,
+    ) -> (Json, ServedFrom) {
+        let target =
+            self.fingerprint(platform).or(request_fp).unwrap_or(host).clone();
+        if let Some(p) = self.portfolio(platform, kernel) {
+            let mut fields = vec![
+                ("found", Json::Bool(true)),
+                ("source", json::s("exact")),
+                ("platform", json::s(platform)),
+                ("portfolio", p.to_json()),
+            ];
+            if let Some(dims) = dims {
+                if let Some(item) = p.select_for_dims(dims, &target) {
+                    fields.push(("selected", portfolio_item_json(item)));
+                }
+            }
+            fields.push(("gen", json::int(self.generation as i64)));
+            return (reply_ok(fields), ServedFrom::Index);
+        }
+        let rank_started = Instant::now();
+        let ranked = transfer::rank_portfolios(&self.shards, &target, kernel, platform);
+        obs::metrics().transfer_rank_us.record(rank_started.elapsed().as_micros() as u64);
+        match ranked.into_iter().next() {
+            Some(c) => {
+                let from = ServedFrom::Transfer {
+                    source: c.platform_key.clone(),
+                    similarity_pm: (c.similarity.clamp(0.0, 1.0) * 1000.0).round() as u64,
+                };
+                let mut fields = vec![
+                    ("found", Json::Bool(true)),
+                    ("source", json::s("transfer")),
+                    ("platform", json::s(&c.platform_key)),
+                    ("similarity", json::num(c.similarity)),
+                    ("portfolio", c.portfolio.to_json()),
+                ];
+                if let Some(dims) = dims {
+                    if let Some(item) = c.portfolio.select_for_dims(dims, &target) {
+                        fields.push(("selected", portfolio_item_json(item)));
+                    }
+                }
+                fields.push(("gen", json::int(self.generation as i64)));
+                (reply_ok(fields), from)
+            }
+            None => (
+                reply_ok(vec![
+                    ("found", Json::Bool(false)),
+                    ("gen", json::int(self.generation as i64)),
+                ]),
+                ServedFrom::Miss,
+            ),
+        }
+    }
+}
+
+/// Compact wire view of a selected portfolio member (the part a deploy
+/// client actually consumes: which config to run).
+pub(crate) fn portfolio_item_json(item: &PortfolioItem) -> Json {
+    json::obj(vec![
+        ("config_id", json::s(&item.config_id)),
+        (
+            "params",
+            Json::Obj(item.config.iter().map(|(k, v)| (k.clone(), json::int(*v))).collect()),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::perfdb::unix_now;
+
+    fn fp(simd: &[&str]) -> Fingerprint {
+        Fingerprint {
+            cpu_model: "Snap CPU".into(),
+            num_cpus: 8,
+            simd: simd.iter().map(|s| s.to_string()).collect(),
+            cache_l1d_kb: 32,
+            cache_l2_kb: 1024,
+            cache_l3_kb: 8192,
+            os: "linux".into(),
+        }
+    }
+
+    fn entry(platform: &str, kernel: &str, tag: &str, id: &str, at: u64) -> DbEntry {
+        DbEntry {
+            platform_key: platform.into(),
+            kernel: kernel.into(),
+            tag: tag.into(),
+            best_params: [("block_size".to_string(), 256i64)].into_iter().collect(),
+            best_config_id: id.into(),
+            best_time_s: 1e-3,
+            baseline_time_s: 2e-3,
+            reference_time_s: 9e-4,
+            evaluations: 4,
+            strategy: "exhaustive".into(),
+            recorded_at: at,
+        }
+    }
+
+    fn shard(platform: &str, fingerprint: Option<Fingerprint>, entries: Vec<DbEntry>) -> Shard {
+        Shard { platform_key: platform.into(), fingerprint, entries, portfolios: Vec::new() }
+    }
+
+    #[test]
+    fn frontier_index_keeps_newest_entry_per_key() {
+        let now = unix_now();
+        let snap = ServeSnapshot::build(
+            vec![shard(
+                "p1",
+                None,
+                vec![
+                    entry("p1", "axpy", "n4096", "old", now - 100),
+                    entry("p1", "axpy", "n4096", "new", now),
+                    entry("p1", "dot", "n4096", "other", now),
+                ],
+            )],
+            7,
+        );
+        assert_eq!(snap.generation(), 7);
+        assert_eq!(snap.lookup("p1", "axpy", "n4096").unwrap().best_config_id, "new");
+        assert_eq!(snap.index_len(), 2);
+        assert!(snap.lookup("p1", "axpy", "n9999").is_none());
+    }
+
+    #[test]
+    fn replies_echo_the_generation() {
+        let snap = ServeSnapshot::build(
+            vec![shard("p1", None, vec![entry("p1", "axpy", "n4096", "cfg", unix_now())])],
+            42,
+        );
+        let (hit, from) = snap.lookup_reply("p1", "axpy", "n4096");
+        assert_eq!(from, ServedFrom::Index);
+        assert_eq!(hit.get("gen").and_then(Json::as_u64), Some(42));
+        let (miss, from) = snap.lookup_reply("p1", "axpy", "n8192");
+        assert_eq!(from, ServedFrom::Miss);
+        assert_eq!(miss.get("found").and_then(Json::as_bool), Some(false));
+        assert_eq!(miss.get("gen").and_then(Json::as_u64), Some(42));
+    }
+
+    #[test]
+    fn deploy_miss_ranks_transfer_candidates_for_target_fingerprint() {
+        let host = fp(&["avx2", "fma"]);
+        let mut far = fp(&["neon"]);
+        far.os = "macos".into();
+        let snap = ServeSnapshot::build(
+            vec![
+                shard(
+                    "near-p",
+                    Some(fp(&["avx2", "fma"])),
+                    vec![entry("near-p", "axpy", "n4096", "near_cfg", unix_now())],
+                ),
+                shard(
+                    "far-p",
+                    Some(far),
+                    vec![entry("far-p", "axpy", "n4096", "far_cfg", unix_now())],
+                ),
+            ],
+            1,
+        );
+        let (reply, from) =
+            snap.deploy_reply("fresh", "axpy", "n4096", Some(&fp(&["avx2", "fma"])), &host);
+        assert_eq!(reply.get("source").and_then(Json::as_str), Some("transfer"));
+        let cands = reply.get("candidates").and_then(Json::as_arr).unwrap();
+        assert_eq!(cands[0].get("config_id").and_then(Json::as_str), Some("near_cfg"));
+        match from {
+            ServedFrom::Transfer { source, .. } => assert_eq!(source, "near-p"),
+            other => panic!("expected a transfer answer, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn portfolio_total_miss_reports_not_found() {
+        let snap = ServeSnapshot::build(Vec::new(), 3);
+        let (reply, from) = snap.portfolio_reply("p1", "gemm", None, None, &fp(&["avx2"]));
+        assert_eq!(from, ServedFrom::Miss);
+        assert_eq!(reply.get("found").and_then(Json::as_bool), Some(false));
+        assert_eq!(reply.get("gen").and_then(Json::as_u64), Some(3));
+    }
+}

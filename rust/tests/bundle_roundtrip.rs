@@ -1,0 +1,313 @@
+//! Offline decision bundles, end to end and adversarially.
+//!
+//! Three contracts from the bundle design:
+//!
+//! 1. **Byte identity** — export → import → export reproduces every
+//!    shard document byte for byte (bundles carry the on-disk shard
+//!    texts verbatim, checksummed at two layers).
+//! 2. **Parity** — [`Client::from_bundle`] answers every read op with
+//!    *exactly* the reply a live daemon gives for the same snapshot:
+//!    both shape replies through the same `ServeSnapshot` methods, so
+//!    this is equality of whole JSON replies, not spot checks.
+//! 3. **Rejection names the section** — in the style of
+//!    `prop_audit.rs`, every payload byte flipped one at a time must
+//!    pin the failing section by name, and truncation anywhere (plus a
+//!    spliced-footer cover-up) is refused with a named section.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use portatune::coordinator::perfdb::{DbEntry, ShardedDb};
+use portatune::coordinator::platform::Fingerprint;
+use portatune::coordinator::portfolio::{Portfolio, PortfolioItem, FEATURE_NAMES};
+use portatune::service::{parse_bundle, Client, Request, ServeOpts, Server};
+use portatune::util::json::Json;
+use portatune::util::sha256;
+
+fn tmp_dir(name: &str) -> std::path::PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("portatune-bundlert-{name}-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn fp(l2: u64, simd: &[&str]) -> Fingerprint {
+    Fingerprint {
+        cpu_model: "Bundle RT CPU".into(),
+        num_cpus: 8,
+        simd: simd.iter().map(|s| s.to_string()).collect(),
+        cache_l1d_kb: 32,
+        cache_l2_kb: l2,
+        cache_l3_kb: 8192,
+        os: "linux".into(),
+    }
+}
+
+fn entry(platform: &str, kernel: &str, tag: &str, id: &str) -> DbEntry {
+    DbEntry {
+        platform_key: platform.into(),
+        kernel: kernel.into(),
+        tag: tag.into(),
+        best_params: [("block_size".to_string(), 256i64)].into_iter().collect(),
+        best_config_id: id.into(),
+        best_time_s: 1e-3,
+        baseline_time_s: 2e-3,
+        reference_time_s: 9e-4,
+        evaluations: 4,
+        strategy: "exhaustive".into(),
+        recorded_at: 1_700_000_000,
+    }
+}
+
+fn test_portfolio(kernel: &str) -> Portfolio {
+    Portfolio {
+        kernel: kernel.into(),
+        strategy: "greedy-cover".into(),
+        k_max: 4,
+        retained: 0.95,
+        built_at: 1_700_000_000,
+        feature_names: FEATURE_NAMES.iter().map(|s| s.to_string()).collect(),
+        items: vec![PortfolioItem {
+            config: [
+                ("loop_order".to_string(), 1i64),
+                ("tile_m".to_string(), 32i64),
+                ("tile_n".to_string(), 32i64),
+                ("unroll".to_string(), 4i64),
+            ]
+            .into_iter()
+            .collect(),
+            config_id: "o1_tm32_tn32_u4".into(),
+            centroid: vec![5.0; FEATURE_NAMES.len()],
+            covered: vec!["m32n32k32".into()],
+        }],
+    }
+}
+
+/// A two-platform store with fingerprints and a portfolio, plus a
+/// daemon over it whose `export_bundle` cuts the artifact under test.
+fn seeded_server(dir: &std::path::Path) -> (ShardedDb, Server) {
+    let db = ShardedDb::open(dir.join("shards")).unwrap();
+    let fp1 = fp(1024, &["avx2", "fma"]);
+    let fp2 = fp(512, &["sse2", "sse4_2"]);
+    db.record(Some(&fp1), entry("p1", "axpy", "n4096", "cfg_p1")).unwrap();
+    db.record(Some(&fp1), entry("p1", "dot", "n65536", "cfg_p1_dot")).unwrap();
+    db.record(Some(&fp2), entry("p2", "axpy", "n4096", "cfg_p2")).unwrap();
+    db.record_portfolio("p1", Some(&fp1), test_portfolio("gemm")).unwrap();
+    let server = Server::new(db.clone(), fp(2048, &["avx2", "fma"]), ServeOpts::default());
+    (db, server)
+}
+
+#[test]
+fn export_import_export_is_byte_identical() {
+    let dir = tmp_dir("byteid");
+    let (db_a, server) = seeded_server(&dir);
+    let text = server.export_bundle().unwrap();
+    let (meta, shard_texts) = parse_bundle(&text).unwrap();
+    assert_eq!(shard_texts.len(), 2);
+    assert_eq!(meta.generation, server.stats().snapshot_gen);
+    assert!(meta.fingerprint.is_some(), "the exporter freezes its fingerprint");
+
+    // Import into a fresh store: every shard document lands verbatim.
+    let db_b = ShardedDb::open(dir.join("imported")).unwrap();
+    for shard_text in &shard_texts {
+        db_b.import_shard_text(shard_text).unwrap();
+    }
+    for platform in ["p1", "p2"] {
+        assert_eq!(
+            db_b.export_shard_text(platform).unwrap(),
+            db_a.export_shard_text(platform).unwrap(),
+            "shard {platform} must survive export → import byte-identical"
+        );
+    }
+    // Importing the same bundle again is a no-op merge, not a dup.
+    for shard_text in &shard_texts {
+        db_b.import_shard_text(shard_text).unwrap();
+    }
+    assert_eq!(db_b.load("p1").unwrap().unwrap().entries.len(), 2);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn offline_client_answers_equal_live_daemon_answers() {
+    let dir = tmp_dir("parity");
+    let (_db, server) = seeded_server(&dir);
+    let server = Arc::new(server);
+    let bundle_path = dir.join("perf.bundle");
+    std::fs::write(&bundle_path, server.export_bundle().unwrap()).unwrap();
+    let offline = Client::from_bundle(&bundle_path).unwrap();
+
+    let dims: BTreeMap<String, i64> =
+        [("m".to_string(), 128i64), ("n".to_string(), 128), ("k".to_string(), 64)]
+            .into_iter()
+            .collect();
+    let probe_fp = fp(4096, &["avx2"]);
+    let requests = vec![
+        Request::Ping,
+        // Exact hit, miss on an unseen workload, miss on an unseen
+        // platform: all three lookup shapes.
+        Request::Lookup {
+            platform: Some("p1".into()),
+            kernel: "axpy".into(),
+            workload: "n4096".into(),
+        },
+        Request::Lookup {
+            platform: Some("p1".into()),
+            kernel: "axpy".into(),
+            workload: "n9999".into(),
+        },
+        Request::Lookup {
+            platform: Some("nobody".into()),
+            kernel: "axpy".into(),
+            workload: "n4096".into(),
+        },
+        // Deploy: exact, and the transfer-ranked miss for a platform
+        // the store has never seen.
+        Request::Deploy {
+            platform: Some("p1".into()),
+            kernel: "axpy".into(),
+            workload: "n4096".into(),
+            fingerprint: Some(probe_fp.clone()),
+        },
+        Request::Deploy {
+            platform: Some("fresh-box".into()),
+            kernel: "axpy".into(),
+            workload: "n4096".into(),
+            fingerprint: Some(probe_fp.clone()),
+        },
+        // Portfolio: exact with dim selection, transfer, total miss.
+        Request::Portfolio {
+            platform: Some("p1".into()),
+            kernel: "gemm".into(),
+            dims: Some(dims),
+            fingerprint: None,
+        },
+        Request::Portfolio {
+            platform: Some("fresh-box".into()),
+            kernel: "gemm".into(),
+            dims: None,
+            fingerprint: Some(probe_fp),
+        },
+        Request::Portfolio {
+            platform: Some("p1".into()),
+            kernel: "nope".into(),
+            dims: None,
+            fingerprint: None,
+        },
+    ];
+    for req in &requests {
+        let live = server.handle_request(req);
+        let off = offline.call(req).unwrap();
+        assert_eq!(off, live, "offline and live replies must be identical for {req:?}");
+    }
+
+    // Spot-check the suite exercised real paths, not nine misses.
+    let transfer = server.handle_request(&requests[5]);
+    assert_eq!(transfer.get("source").and_then(Json::as_str), Some("transfer"));
+    assert!(transfer.get("count").and_then(Json::as_u64).unwrap() > 0);
+    let selected = server.handle_request(&requests[6]);
+    assert_eq!(selected.get("found").and_then(Json::as_bool), Some(true));
+    assert!(selected.get("selected").is_some(), "dims must drive member selection");
+
+    // Ops that need daemon state are definitive errors offline, with
+    // the op named.
+    let err = offline.call(&Request::Stats).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("requires a daemon") && msg.contains("stats"), "{msg}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Payload byte ranges of a pristine bundle: (section name, start, end).
+fn payload_ranges(text: &str) -> Vec<(String, usize, usize)> {
+    let mut ranges = Vec::new();
+    let mut pos = text.find('\n').unwrap() + 1;
+    let bytes = text.as_bytes();
+    while pos < bytes.len() {
+        let line_end = pos + text[pos..].find('\n').unwrap();
+        let line = &text[pos..line_end];
+        if let Some(rest) = line.strip_prefix("section ") {
+            let mut parts = rest.split(' ');
+            let name = parts.next().unwrap().to_string();
+            let len: usize = parts.next().unwrap().parse().unwrap();
+            ranges.push((name, line_end + 1, line_end + 1 + len));
+            pos = line_end + 1 + len + 1;
+        } else {
+            break; // footer
+        }
+    }
+    ranges
+}
+
+#[test]
+fn every_flipped_byte_is_rejected_and_payload_flips_name_their_section() {
+    let dir = tmp_dir("flip");
+    let (_db, server) = seeded_server(&dir);
+    let text = server.export_bundle().unwrap();
+    assert!(parse_bundle(&text).is_ok(), "pristine bundle must verify");
+    let ranges = payload_ranges(&text);
+    assert_eq!(ranges.len(), 3, "meta + two shards");
+
+    let bytes = text.as_bytes();
+    for p in 0..bytes.len() {
+        let mut flipped = bytes.to_vec();
+        flipped[p] ^= 0x01; // ASCII-safe: the bundle text stays UTF-8
+        let flipped = String::from_utf8(flipped).unwrap();
+        let err = parse_bundle(&flipped)
+            .expect_err(&format!("flip of byte {p} went undetected"));
+        let msg = format!("{err:#}");
+        assert!(msg.contains("bundle"), "flip at {p}: unnamed rejection: {msg}");
+        if let Some((name, _, _)) =
+            ranges.iter().find(|(_, start, end)| p >= *start && p < *end)
+        {
+            assert!(
+                msg.contains(name.as_str()),
+                "flip at {p} inside {name} payload pinned the wrong section: {msg}"
+            );
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn truncation_anywhere_is_rejected_with_a_named_section() {
+    let dir = tmp_dir("trunc");
+    let (_db, server) = seeded_server(&dir);
+    let text = server.export_bundle().unwrap();
+
+    // Cut at every line boundary and at every mid-line point between
+    // boundaries: nothing short of the full file may verify.
+    let mut cuts = vec![0usize];
+    cuts.extend(text.bytes().enumerate().filter(|(_, b)| *b == b'\n').map(|(i, _)| i + 1));
+    for w in cuts.windows(2) {
+        let (boundary, next) = (w[0], w[1]);
+        for cut in [boundary, boundary + (next - boundary) / 2] {
+            if cut == text.len() {
+                continue;
+            }
+            let err = parse_bundle(&text[..cut])
+                .expect_err(&format!("truncation at byte {cut} verified"));
+            let msg = format!("{err:#}");
+            assert!(msg.contains("bundle"), "cut at {cut}: unnamed rejection: {msg}");
+        }
+    }
+
+    // The cover-up: drop the whole trailing shard section AND splice a
+    // recomputed, self-consistent footer.  The meta's declared shard
+    // count still names the lie.
+    let ranges = payload_ranges(&text);
+    let (last_name, _, _) = ranges.last().unwrap().clone();
+    assert_eq!(last_name, "shard1");
+    let section_line_start = text.find("\nsection shard1 ").unwrap() + 1;
+    let spliced = format!(
+        "{}end {}\n",
+        &text[..section_line_start],
+        sha256::hex_digest(text[..section_line_start].as_bytes())
+    );
+    let err = parse_bundle(&spliced).expect_err("spliced footer verified");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("declares 2 shards, found 1"),
+        "the declared count must catch whole-section removal: {msg}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}

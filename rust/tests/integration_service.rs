@@ -9,12 +9,13 @@
 //! *consume* tuned configurations (and the worker's sweep tasks run
 //! the native GEMM family host-side).
 
+use std::io::{BufRead, BufReader, Write};
 use std::sync::{Arc, Mutex};
 
 use portatune::coordinator::perfdb::{unix_now, DbEntry, PerfDb, ShardedDb};
 use portatune::coordinator::platform::Fingerprint;
 use portatune::coordinator::portfolio::{Portfolio, PortfolioItem, FEATURE_NAMES};
-use portatune::service::{Client, Request, ServeOpts, Server, TaskKind};
+use portatune::service::{Client, Request, RetryPolicy, ServeOpts, Server, TaskKind};
 use portatune::util::json::Json;
 use portatune::worker::{Worker, WorkerOpts};
 
@@ -297,7 +298,7 @@ fn stale_entries_flow_to_retune_queue() {
     let server = Server::new(
         db,
         fp(1024, &["avx2"]),
-        ServeOpts { ttl_s: 3600, lru_cap: 16, ..ServeOpts::default() },
+        ServeOpts { ttl_s: 3600, ..ServeOpts::default() },
     );
     assert_eq!(server.scan_once().unwrap(), 2, "both aged frontiers queue; fresh does not");
     let mut seen = Vec::new();
@@ -359,7 +360,7 @@ fn two_workers_drain_queue_without_double_execution() {
     let server = Arc::new(Server::new(
         db,
         fp(1024, &["avx2"]),
-        ServeOpts { ttl_s: 3600, lru_cap: 16, ..ServeOpts::default() },
+        ServeOpts { ttl_s: 3600, ..ServeOpts::default() },
     ));
     assert_eq!(server.scan_once().unwrap(), 10);
     let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
@@ -484,7 +485,7 @@ fn killed_worker_mid_lease_requeues_after_ttl() {
     let server = Server::new(
         db,
         fp(1024, &["avx2"]),
-        ServeOpts { ttl_s: 3600, lru_cap: 16, ..ServeOpts::default() },
+        ServeOpts { ttl_s: 3600, ..ServeOpts::default() },
     );
     assert_eq!(server.scan_once().unwrap(), 1);
     // "Worker" leases with a 1-second TTL and then dies silently.
@@ -521,5 +522,154 @@ fn killed_worker_mid_lease_requeues_after_ttl() {
     // The dead worker's late heartbeat learns the lease is gone.
     let reply = server.handle_request(&Request::TaskHeartbeat { lease_id: dead_lease });
     assert_eq!(reply.get("extended").and_then(Json::as_bool), Some(false));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+fn start_pool_server(
+    dir: &std::path::Path,
+    opts: ServeOpts,
+) -> (Arc<Server>, String, std::thread::JoinHandle<()>) {
+    let db = ShardedDb::open(dir).unwrap();
+    let server = Arc::new(Server::new(db, fp(1024, &["avx2"]), opts));
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let srv = Arc::clone(&server);
+    let serve_thread = std::thread::spawn(move || srv.run_tcp(listener).unwrap());
+    (server, addr, serve_thread)
+}
+
+/// More concurrent clients than pool workers: the accept queue absorbs
+/// the overflow and every request is answered — a fixed pool is a
+/// throughput bound, not a correctness one.
+#[test]
+fn worker_pool_serves_more_clients_than_workers() {
+    let dir = tmp_dir("pool-width");
+    let (_server, addr, serve_thread) =
+        start_pool_server(&dir, ServeOpts { workers: 2, ..ServeOpts::default() });
+
+    let mut handles = Vec::new();
+    for _ in 0..6 {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            for _ in 0..5 {
+                let reply = Client::tcp(addr.clone()).call(&Request::Ping).unwrap();
+                assert_eq!(reply.get("op").and_then(Json::as_str), Some("pong"));
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let client = Client::tcp(addr);
+    client.call(&Request::Shutdown).unwrap();
+    serve_thread.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A connection already accepted (queued behind a busy worker) is
+/// still served after shutdown is requested: workers drain the queue
+/// before exiting instead of abandoning accepted clients.
+#[test]
+fn graceful_shutdown_drains_queued_connections() {
+    let dir = tmp_dir("pool-drain");
+    let (server, addr, serve_thread) =
+        start_pool_server(&dir, ServeOpts { workers: 1, ..ServeOpts::default() });
+
+    // Pin the single worker with a held-open connection.
+    let mut held = std::net::TcpStream::connect(&addr).unwrap();
+    held.write_all(b"{\"op\":\"ping\"}\n").unwrap();
+    held.flush().unwrap();
+    let mut reader = BufReader::new(held.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("pong"), "worker must be attached: {line}");
+
+    // Queue a second client behind it, then stop accepting while the
+    // second connection is still waiting for a worker.
+    let queued = std::thread::spawn({
+        let addr = addr.clone();
+        move || Client::tcp(addr).call(&Request::Ping).unwrap()
+    });
+    std::thread::sleep(std::time::Duration::from_millis(300));
+    server.request_shutdown();
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    drop(reader);
+    drop(held);
+
+    let reply = queued.join().unwrap();
+    assert_eq!(
+        reply.get("op").and_then(Json::as_str),
+        Some("pong"),
+        "a queued connection must drain through the pool on graceful shutdown"
+    );
+    serve_thread.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Clients killed mid-request — a half-written line, a peer that dies
+/// before reading its reply — must not wedge pool workers: the same
+/// fixed pool keeps answering afterwards.
+#[test]
+fn killed_client_mid_request_does_not_wedge_the_pool() {
+    let dir = tmp_dir("pool-kill");
+    let (_server, addr, serve_thread) =
+        start_pool_server(&dir, ServeOpts { workers: 2, ..ServeOpts::default() });
+
+    for i in 0..6 {
+        let mut s = std::net::TcpStream::connect(&addr).unwrap();
+        if i % 2 == 0 {
+            // Partial request: the newline never arrives.
+            s.write_all(b"{\"op\":\"lookup\"").unwrap();
+        } else {
+            // Full request, but the peer vanishes before the reply.
+            s.write_all(b"{\"op\":\"ping\"}\n").unwrap();
+        }
+        drop(s);
+    }
+
+    // Both workers must chew through the corpses and still answer; a
+    // wedged worker would halve the pool, two would hang this client.
+    let client = Client::tcp(addr);
+    for _ in 0..4 {
+        let reply = client.call(&Request::Ping).unwrap();
+        assert_eq!(reply.get("op").and_then(Json::as_str), Some("pong"));
+    }
+    client.call(&Request::Shutdown).unwrap();
+    serve_thread.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `--max-conns` counts queued connections too: with the one worker
+/// busy and the queue holding a second connection, the third is shed
+/// with the retryable `overloaded` reply (PR 6 semantics, preserved
+/// across the pool refactor), and capacity frees as holders leave.
+#[test]
+fn pool_sheds_at_max_conns_counting_queued_connections() {
+    let dir = tmp_dir("pool-shed");
+    let (server, addr, serve_thread) = start_pool_server(
+        &dir,
+        ServeOpts { workers: 1, max_conns: 2, ..ServeOpts::default() },
+    );
+
+    let hold_a = std::net::TcpStream::connect(&addr).unwrap();
+    let hold_b = std::net::TcpStream::connect(&addr).unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(300)); // both accepted
+
+    let one_shot = Client::tcp(addr.clone())
+        .with_policy(RetryPolicy { attempts: 1, ..RetryPolicy::default() });
+    let err = one_shot.call(&Request::Ping).unwrap_err();
+    assert!(format!("{err:#}").contains("overloaded"), "want a shed reply, got: {err:#}");
+
+    drop(hold_a);
+    drop(hold_b);
+    std::thread::sleep(std::time::Duration::from_millis(500)); // handlers drain
+    let client = Client::tcp(addr);
+    let reply = client.call(&Request::Ping).unwrap();
+    assert_eq!(reply.get("op").and_then(Json::as_str), Some("pong"));
+    assert!(server.stats().conns_shed >= 1);
+
+    client.call(&Request::Shutdown).unwrap();
+    serve_thread.join().unwrap();
     std::fs::remove_dir_all(&dir).ok();
 }

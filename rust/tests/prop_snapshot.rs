@@ -1,0 +1,288 @@
+//! Concurrency properties of the snapshot serve path.
+//!
+//! The serve refactor's contract: daemon state is an immutable
+//! `ServeSnapshot` behind an atomically swapped `Arc`, writers
+//! clone-merge-publish a new generation, and every read answers from
+//! exactly one published snapshot.  These tests drive concurrent
+//! recorders against a lookup storm and check the three properties the
+//! design promises:
+//!
+//! 1. **Never torn** — every read observes a *complete* published
+//!    snapshot: found entries carry all their invariant fields, and a
+//!    platform recorded before the storm never transiently vanishes
+//!    while unrelated platforms publish.
+//! 2. **Monotone generations** — the `gen` echoed in every reply never
+//!    decreases from any single observer's point of view.
+//! 3. **Read-your-writes** — a read issued after an acked `record`
+//!    (ack carries the publish's generation) sees that write: the
+//!    served entry is at least as new as the acked one.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use portatune::coordinator::perfdb::{DbEntry, ShardedDb};
+use portatune::coordinator::platform::Fingerprint;
+use portatune::service::{Request, ServeOpts, Server};
+use portatune::util::json::Json;
+
+fn tmp_dir(name: &str) -> std::path::PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("portatune-propsnap-{name}-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+fn fp() -> Fingerprint {
+    Fingerprint {
+        cpu_model: "Prop CPU".into(),
+        num_cpus: 8,
+        simd: vec!["avx2".into()],
+        cache_l1d_kb: 32,
+        cache_l2_kb: 1024,
+        cache_l3_kb: 8192,
+        os: "linux".into(),
+    }
+}
+
+fn entry(platform: &str, id: &str, recorded_at: u64) -> DbEntry {
+    DbEntry {
+        platform_key: platform.into(),
+        kernel: "axpy".into(),
+        tag: "n4096".into(),
+        best_params: [("block_size".to_string(), 512i64)].into_iter().collect(),
+        best_config_id: id.into(),
+        best_time_s: 1e-3,
+        baseline_time_s: 2e-3,
+        reference_time_s: 9e-4,
+        evaluations: 8,
+        strategy: "exhaustive".into(),
+        recorded_at,
+    }
+}
+
+fn lookup(platform: &str) -> Request {
+    Request::Lookup {
+        platform: Some(platform.into()),
+        kernel: "axpy".into(),
+        workload: "n4096".into(),
+    }
+}
+
+/// A served entry must be exactly the shape some recorder published —
+/// all invariant fields intact.  Anything else means a reader saw a
+/// half-merged snapshot.
+fn assert_complete_entry(reply: &Json) {
+    let entry = reply.get("entry").expect("found reply must carry the entry");
+    let id = entry.get("best_config_id").and_then(Json::as_str).unwrap_or("");
+    assert!(
+        id == "seed_cfg" || id.starts_with("cfg_t"),
+        "config id from an unknown write: {id:?}"
+    );
+    assert_eq!(
+        entry.get("best_params").and_then(|p| p.get("block_size")).and_then(Json::as_i64),
+        Some(512),
+        "params must round-trip whole"
+    );
+    assert_eq!(entry.get("evaluations").and_then(Json::as_u64), Some(8));
+    assert_eq!(entry.get("strategy").and_then(Json::as_str), Some("exhaustive"));
+    assert!(entry.get("recorded_at").and_then(Json::as_u64).unwrap_or(0) > 0);
+}
+
+/// Concurrent recorders + a lookup storm: never-torn reads, monotone
+/// generations, and the pre-recorded stable platform stays visible
+/// through every clone-merge-publish of the contended one.
+#[test]
+fn lookup_storm_over_concurrent_recorders_sees_only_published_snapshots() {
+    const RECORDERS: usize = 3;
+    const PER_RECORDER: usize = 8;
+    const READERS: usize = 3;
+
+    let dir = tmp_dir("storm");
+    let db = ShardedDb::open(&dir).unwrap();
+    // A platform recorded before the storm; publishes for prop-box must
+    // never make it flicker out of the snapshot.
+    db.record(None, entry("stable-box", "seed_cfg", 1_700_000_000)).unwrap();
+    let server = Arc::new(Server::new(db, fp(), ServeOpts::default()));
+    assert_eq!(server.stats().snapshot_gen, 0, "initial snapshot is generation 0");
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let clock = Arc::new(AtomicU64::new(1_700_000_001));
+
+    let mut readers = Vec::new();
+    for _ in 0..READERS {
+        let server = Arc::clone(&server);
+        let stop = Arc::clone(&stop);
+        readers.push(std::thread::spawn(move || {
+            let mut last_gen = 0u64;
+            let mut reads = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                // The contended platform: found or not, the reply must
+                // come whole from one snapshot.
+                let reply = server.handle_request(&lookup("prop-box"));
+                let gen = reply
+                    .get("gen")
+                    .and_then(Json::as_u64)
+                    .expect("every lookup reply echoes its snapshot generation");
+                assert!(
+                    gen >= last_gen,
+                    "generation went backwards: {gen} after {last_gen}"
+                );
+                last_gen = gen;
+                if reply.get("found").and_then(Json::as_bool) == Some(true) {
+                    assert_complete_entry(&reply);
+                }
+                // The stable platform: always present, in full.
+                let reply = server.handle_request(&lookup("stable-box"));
+                assert_eq!(
+                    reply.get("found").and_then(Json::as_bool),
+                    Some(true),
+                    "a platform in the snapshot must never transiently vanish"
+                );
+                assert_complete_entry(&reply);
+                reads += 1;
+            }
+            reads
+        }));
+    }
+
+    let mut recorders = Vec::new();
+    for t in 0..RECORDERS {
+        let server = Arc::clone(&server);
+        let clock = Arc::clone(&clock);
+        recorders.push(std::thread::spawn(move || {
+            let mut last_ack_gen = 0u64;
+            for i in 0..PER_RECORDER {
+                let ts = clock.fetch_add(1, Ordering::Relaxed);
+                let reply = server.handle_request(&Request::Record {
+                    entry: Box::new(entry("prop-box", &format!("cfg_t{t}_i{i}"), ts)),
+                    fingerprint: None,
+                    request_id: None,
+                });
+                assert_eq!(reply.get("recorded").and_then(Json::as_bool), Some(true));
+                let ack_gen = reply
+                    .get("gen")
+                    .and_then(Json::as_u64)
+                    .expect("a record ack echoes the generation it published");
+                assert!(
+                    ack_gen > last_ack_gen,
+                    "each record publishes a strictly newer generation \
+                     ({ack_gen} after {last_ack_gen})"
+                );
+                last_ack_gen = ack_gen;
+
+                // Read-your-writes: a read issued after the ack must
+                // observe a snapshot at least as new as the ack's
+                // generation, containing a write at least as new as
+                // ours (another recorder's newer entry also counts).
+                let reply = server.handle_request(&lookup("prop-box"));
+                let read_gen = reply.get("gen").and_then(Json::as_u64).unwrap();
+                assert!(
+                    read_gen >= ack_gen,
+                    "read after ack ran against an older snapshot: \
+                     read gen {read_gen} < acked gen {ack_gen}"
+                );
+                assert_eq!(reply.get("found").and_then(Json::as_bool), Some(true));
+                let seen_ts = reply
+                    .get("entry")
+                    .and_then(|e| e.get("recorded_at"))
+                    .and_then(Json::as_u64)
+                    .unwrap();
+                assert!(
+                    seen_ts >= ts,
+                    "read after ack served an entry older than the acked write \
+                     ({seen_ts} < {ts})"
+                );
+            }
+        }));
+    }
+
+    for r in recorders {
+        r.join().unwrap();
+    }
+    stop.store(true, Ordering::Relaxed);
+    let mut total_reads = 0;
+    for r in readers {
+        total_reads += r.join().unwrap();
+    }
+    assert!(total_reads > 0, "the storm must actually have read something");
+
+    // Quiesced: exactly one publish per record happened, the final
+    // snapshot serves the newest write, and the stable shard survived
+    // every merge.
+    let stats = server.stats();
+    assert_eq!(stats.snapshot_gen, (RECORDERS * PER_RECORDER) as u64);
+    assert_eq!(stats.snapshot_publishes, (RECORDERS * PER_RECORDER) as u64);
+    let final_ts = clock.load(Ordering::Relaxed) - 1;
+    let reply = server.handle_request(&lookup("prop-box"));
+    assert_eq!(
+        reply.get("entry").and_then(|e| e.get("recorded_at")).and_then(Json::as_u64),
+        Some(final_ts),
+        "the frontier must converge on the newest recorded entry"
+    );
+    let reply = server.handle_request(&lookup("stable-box"));
+    assert_eq!(
+        reply
+            .get("entry")
+            .and_then(|e| e.get("best_config_id"))
+            .and_then(Json::as_str),
+        Some("seed_cfg")
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The generation echo, single-observer edition: acks and reads agree
+/// on ordering even with no concurrency, and a refresh republishes at
+/// a strictly newer generation without changing answers.
+#[test]
+fn generation_echo_orders_acks_and_reads() {
+    let dir = tmp_dir("gen-echo");
+    let db = ShardedDb::open(&dir).unwrap();
+    let server = Server::new(db, fp(), ServeOpts::default());
+
+    let miss = server.handle_request(&lookup("prop-box"));
+    assert_eq!(miss.get("found").and_then(Json::as_bool), Some(false));
+    assert_eq!(miss.get("gen").and_then(Json::as_u64), Some(0));
+
+    let ack1 = server.handle_request(&Request::Record {
+        entry: Box::new(entry("prop-box", "cfg_t0_i0", 1_700_000_010)),
+        fingerprint: None,
+        request_id: None,
+    });
+    let g1 = ack1.get("gen").and_then(Json::as_u64).unwrap();
+    assert_eq!(g1, 1);
+
+    let read1 = server.handle_request(&lookup("prop-box"));
+    assert!(read1.get("gen").and_then(Json::as_u64).unwrap() >= g1);
+    assert_eq!(
+        read1.get("entry").and_then(|e| e.get("best_config_id")).and_then(Json::as_str),
+        Some("cfg_t0_i0")
+    );
+
+    let ack2 = server.handle_request(&Request::Record {
+        entry: Box::new(entry("prop-box", "cfg_t0_i1", 1_700_000_020)),
+        fingerprint: None,
+        request_id: None,
+    });
+    let g2 = ack2.get("gen").and_then(Json::as_u64).unwrap();
+    assert!(g2 > g1);
+
+    let read2 = server.handle_request(&lookup("prop-box"));
+    assert!(read2.get("gen").and_then(Json::as_u64).unwrap() >= g2);
+    assert_eq!(
+        read2.get("entry").and_then(|e| e.get("best_config_id")).and_then(Json::as_str),
+        Some("cfg_t0_i1"),
+        "read after the second ack must see the second write"
+    );
+
+    // An explicit refresh republishes from disk at a newer generation;
+    // the answer is unchanged.
+    let g3 = server.refresh_snapshot().unwrap();
+    assert!(g3 > g2);
+    let read3 = server.handle_request(&lookup("prop-box"));
+    assert_eq!(read3.get("gen").and_then(Json::as_u64), Some(g3));
+    assert_eq!(
+        read3.get("entry").and_then(|e| e.get("best_config_id")).and_then(Json::as_str),
+        Some("cfg_t0_i1")
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -125,6 +125,78 @@ fn documented_stats_keys_match_serve_stats_json() {
     assert!(checked >= 2, "spec lost its stats/counters payload examples");
 }
 
+/// Generation echoes cannot drift out of the spec: every documented
+/// reply on the snapshot path — the three read ops and the two record
+/// acks — must carry the snapshot generation as an unsigned `gen`
+/// field.  (Task-queue ops do not read the snapshot and carry none.)
+/// The spec is walked in order so each `S:` line is attributed to the
+/// `C:` op it answers.
+#[test]
+fn documented_snapshot_replies_echo_a_generation() {
+    const SNAPSHOT_OPS: [&str; 5] =
+        ["lookup", "deploy", "portfolio", "record", "record-portfolio"];
+    let mut with_gen = 0;
+    let mut last_op = String::new();
+    for line in spec_text().lines().map(str::trim) {
+        if let Some(req) = line.strip_prefix("C: ") {
+            last_op = json::parse(req)
+                .expect("C: lines are JSON")
+                .get("op")
+                .and_then(Json::as_str)
+                .unwrap_or_default()
+                .to_string();
+        } else if let Some(reply) = line.strip_prefix("S: ") {
+            let v = json::parse(reply).expect("S: lines are JSON");
+            // Error replies (including the overload shed) are shaped
+            // before a snapshot is consulted and carry no generation.
+            if v.get("ok").and_then(Json::as_bool) != Some(true) {
+                continue;
+            }
+            if SNAPSHOT_OPS.contains(&last_op.as_str()) {
+                assert!(
+                    v.get("gen").and_then(Json::as_u64).is_some(),
+                    "a documented {last_op} reply must echo its snapshot \
+                     generation as `gen`: {line}"
+                );
+                with_gen += 1;
+            }
+        }
+    }
+    assert!(with_gen >= 4, "spec lost its generation-echo examples ({with_gen} found)");
+}
+
+/// The bundle format section must pin the real on-disk magic, and the
+/// writer/parser pair must agree with the spec's framing: a minimal
+/// exported bundle starts with the documented magic line and
+/// round-trips through `parse_bundle`.
+#[test]
+fn documented_bundle_format_matches_the_implementation() {
+    use portatune::service::{parse_bundle, write_bundle, BundleMeta, BUNDLE_MAGIC};
+
+    let spec = spec_text();
+    assert!(
+        spec.contains(BUNDLE_MAGIC),
+        "docs/PROTOCOL.md must document the bundle magic line {BUNDLE_MAGIC:?}"
+    );
+    for section in ["meta", "shard0", "footer"] {
+        assert!(
+            spec.contains(section),
+            "the bundle spec must name the {section} section rejection surface"
+        );
+    }
+
+    let meta = BundleMeta { platform: "doc-box".into(), generation: 3, fingerprint: None };
+    let text = write_bundle(&meta, &[]);
+    assert!(
+        text.starts_with(BUNDLE_MAGIC),
+        "an exported bundle must begin with the documented magic"
+    );
+    let (parsed, shards) = parse_bundle(&text).expect("a writer-produced bundle parses");
+    assert_eq!(parsed.platform, "doc-box");
+    assert_eq!(parsed.generation, 3);
+    assert!(shards.is_empty());
+}
+
 /// Documented entry/fingerprint payloads must satisfy the typed
 /// parsers, not just the JSON grammar — a schema change to DbEntry or
 /// Fingerprint has to be reflected in the spec.
