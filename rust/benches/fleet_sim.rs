@@ -17,7 +17,12 @@
 //!   histogram's bucket upper bounds, which is what the sim reports);
 //! * the run's audit log passes hash-chain verification (enforced
 //!   inside [`portatune::sim::run`] itself) and the repeat run's log
-//!   is byte-identical.
+//!   is byte-identical;
+//! * the seeded mid-run slowdowns are detected by the regression
+//!   sentinel (at least one confirmation, bounded detection latency)
+//!   with **zero** false positives on stationary platforms;
+//! * the core-hour ledger accumulated non-zero spend and benefit
+//!   through the real store's write path.
 //!
 //! Any violation prints `FAIL: ...` and exits 1.  Machine-readable
 //! tail: `JSON: {...}` (the first run's report).
@@ -85,6 +90,19 @@ fn main() -> anyhow::Result<()> {
         report.staleness_p99_s,
         report.audit_entries,
     );
+    println!(
+        "        {} slowdown(s) injected, {} regression(s) confirmed \
+         (latency mean {:.0}s / max {}s, {} false positive(s), {} undetected), \
+         ledger spend {}ms / benefit {}ms",
+        report.slow_platforms,
+        report.regressions_detected,
+        report.detection_latency_mean_s,
+        report.detection_latency_max_s,
+        report.regression_false_positives,
+        report.slowdowns_undetected,
+        report.ledger_spend_ms,
+        report.ledger_benefit_ms,
+    );
 
     // Repeat the seed: the whole decision sequence must reproduce.
     let cfg_b = cfg("run-b");
@@ -141,6 +159,36 @@ fn main() -> anyhow::Result<()> {
         fail(format!(
             "traffic produced no serves ({}) or no exact hits ({})",
             report.serves, report.exact_hits
+        ));
+    }
+    if report.slow_platforms > 0 && report.regressions_detected == 0 {
+        fail(format!(
+            "{} seeded slowdown(s), zero sentinel confirmations",
+            report.slow_platforms
+        ));
+    }
+    if report.regression_false_positives != 0 {
+        fail(format!(
+            "{} regression false positive(s) — stationary noise must never fire",
+            report.regression_false_positives
+        ));
+    }
+    // Detection must land within a handful of telemetry windows of the
+    // injection: 5-sample confirmation × cadence, with slack for one
+    // refresh-polluted window.
+    let latency_bar = cfg_a.telemetry_every_s * 10;
+    if report.regressions_detected > 0
+        && (report.detection_latency_max_s == 0 || report.detection_latency_max_s > latency_bar)
+    {
+        fail(format!(
+            "detection latency {}s outside (0, {latency_bar}]s",
+            report.detection_latency_max_s
+        ));
+    }
+    if report.ledger_spend_ms == 0 || report.ledger_benefit_ms == 0 {
+        fail(format!(
+            "ledger never accrued (spend {}ms, benefit {}ms)",
+            report.ledger_spend_ms, report.ledger_benefit_ms
         ));
     }
 

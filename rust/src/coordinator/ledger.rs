@@ -1,0 +1,318 @@
+//! The core-hour ledger: ROI accounting for every tuning decision.
+//!
+//! The paper's premise is that autotuning exists to protect a scarce
+//! core-hour budget — so the store must be able to say whether tuning
+//! *paid for itself*, per (platform, kernel), not just how fast it
+//! serves.  Each shard carries a [`Ledger`]: per-kernel cells that
+//! accumulate tuning **spend** (compile + measure + sweep wall time,
+//! reported by whoever did the work) and realized **benefit**
+//! (baseline-vs-best saving multiplied by the live invocation counts
+//! flowing through `record`).  A kernel *breaks even* once its
+//! accumulated benefit covers its accumulated spend.
+//!
+//! Units are integer **core-milliseconds** throughout.  Integer sums
+//! are exact, so concurrent accrual through the shard store's locked
+//! read-merge-rename commits loses nothing (`tests/prop_ledger.rs`
+//! proves the exact-sum claim under 8-thread recording), and the
+//! cross-store [`merge`](Ledger::merge) is a commutative, associative,
+//! idempotent join — re-importing the same bundle can never
+//! double-count a core-second.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// One accrual against a kernel's ledger cell: what a single `record`
+/// (or portfolio report) contributes.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct LedgerDelta {
+    /// Kernel family the work belongs to.
+    pub kernel: String,
+    /// Tuning cost in core-milliseconds (compile + measure + sweep
+    /// wall time for the work this record reports).
+    pub spend_ms: u64,
+    /// Realized saving in core-milliseconds: (baseline − best) × the
+    /// invocations this record represents.
+    pub benefit_ms: u64,
+    /// Live invocations this record represents.
+    pub invocations: u64,
+    /// Unix second of the accrual (stamps the cell's activity window).
+    pub at: u64,
+}
+
+/// Accumulated spend/benefit for one kernel on one platform.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct LedgerCell {
+    /// Total tuning spend, core-milliseconds.
+    pub spend_ms: u64,
+    /// Total realized benefit, core-milliseconds.
+    pub benefit_ms: u64,
+    /// Total live invocations accounted.
+    pub invocations: u64,
+    /// Accruals that carried nonzero spend (≈ tuning runs paid for).
+    pub tunes: u64,
+    /// Unix second of the first accrual (0 = never).
+    pub first_at: u64,
+    /// Unix second of the newest accrual.
+    pub updated_at: u64,
+}
+
+impl LedgerCell {
+    /// Net position in core-milliseconds (positive once tuning paid
+    /// for itself).
+    pub fn net_ms(&self) -> i64 {
+        self.benefit_ms as i64 - self.spend_ms as i64
+    }
+
+    /// Whether accumulated benefit covers accumulated spend.  A cell
+    /// with no spend has nothing to break even *from* and reports
+    /// `false` — "free" benefit is not ROI.
+    pub fn break_even(&self) -> bool {
+        self.spend_ms > 0 && self.benefit_ms >= self.spend_ms
+    }
+
+    /// Seconds until break-even at the observed benefit rate, `None`
+    /// when already even or when no rate is observable yet.
+    pub fn break_even_eta_s(&self) -> Option<u64> {
+        if self.break_even() || self.spend_ms == 0 {
+            return None;
+        }
+        let window_s = self.updated_at.saturating_sub(self.first_at).max(1);
+        if self.benefit_ms == 0 {
+            return None;
+        }
+        let deficit_ms = self.spend_ms - self.benefit_ms;
+        // deficit / (benefit per second), rounded up.
+        Some((deficit_ms.saturating_mul(window_s)).div_ceil(self.benefit_ms))
+    }
+
+    /// Apply one accrual (exact integer sums).
+    fn apply(&mut self, d: &LedgerDelta) {
+        self.spend_ms += d.spend_ms;
+        self.benefit_ms += d.benefit_ms;
+        self.invocations += d.invocations;
+        if d.spend_ms > 0 {
+            self.tunes += 1;
+        }
+        if d.at > 0 {
+            self.first_at = if self.first_at == 0 { d.at } else { self.first_at.min(d.at) };
+            self.updated_at = self.updated_at.max(d.at);
+        }
+    }
+
+    /// Field-wise join with another cell (see [`Ledger::merge`]).
+    fn join(&mut self, other: &LedgerCell) {
+        self.spend_ms = self.spend_ms.max(other.spend_ms);
+        self.benefit_ms = self.benefit_ms.max(other.benefit_ms);
+        self.invocations = self.invocations.max(other.invocations);
+        self.tunes = self.tunes.max(other.tunes);
+        self.first_at = match (self.first_at, other.first_at) {
+            (0, b) => b,
+            (a, 0) => a,
+            (a, b) => a.min(b),
+        };
+        self.updated_at = self.updated_at.max(other.updated_at);
+    }
+
+    fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("spend_ms", json::int(self.spend_ms as i64)),
+            ("benefit_ms", json::int(self.benefit_ms as i64)),
+            ("invocations", json::int(self.invocations as i64)),
+            ("tunes", json::int(self.tunes as i64)),
+            ("first_at", json::int(self.first_at as i64)),
+            ("updated_at", json::int(self.updated_at as i64)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<LedgerCell> {
+        let gi = |k: &str| -> Result<u64> {
+            v.get(k)
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow::anyhow!("ledger cell missing {k}"))
+        };
+        Ok(LedgerCell {
+            spend_ms: gi("spend_ms")?,
+            benefit_ms: gi("benefit_ms")?,
+            invocations: gi("invocations")?,
+            tunes: gi("tunes")?,
+            first_at: gi("first_at")?,
+            updated_at: gi("updated_at")?,
+        })
+    }
+}
+
+/// Per-kernel ROI cells for one platform's shard.  Persisted beside
+/// `entries` and `portfolios`; absent in pre-ledger shard files
+/// (parsing defaults to empty, exactly like `portfolios`).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Ledger {
+    /// kernel → accumulated cell, sorted (canonical serialization).
+    pub cells: BTreeMap<String, LedgerCell>,
+}
+
+impl Ledger {
+    /// Whether no kernel has accrued anything yet.
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    /// The cell for a kernel, if it has accrued anything.
+    pub fn cell(&self, kernel: &str) -> Option<&LedgerCell> {
+        self.cells.get(kernel)
+    }
+
+    /// Accrue one delta into its kernel's cell.  Called under the
+    /// shard's commit lock, so every delta lands exactly once — sums
+    /// stay exact under any writer interleaving.
+    pub fn apply(&mut self, delta: &LedgerDelta) {
+        if delta.spend_ms == 0 && delta.benefit_ms == 0 && delta.invocations == 0 {
+            return;
+        }
+        self.cells.entry(delta.kernel.clone()).or_default().apply(delta);
+    }
+
+    /// Join with another ledger: union of kernels, field-wise max per
+    /// cell (`first_at` joins by min).  Commutative, associative, and
+    /// idempotent — the shape a cross-store merge needs: importing the
+    /// same bundle twice, or in either order, never double-counts.
+    /// Monotone counters from the same lineage merge losslessly; truly
+    /// divergent histories converge on the larger claim rather than
+    /// summing (a sum would double-count the shared prefix).
+    pub fn merge(&mut self, other: &Ledger) {
+        for (kernel, cell) in &other.cells {
+            self.cells.entry(kernel.clone()).or_default().join(cell);
+        }
+    }
+
+    /// (total spend, total benefit) in core-milliseconds.
+    pub fn totals(&self) -> (u64, u64) {
+        self.cells.values().fold((0, 0), |(s, b), c| (s + c.spend_ms, b + c.benefit_ms))
+    }
+
+    /// Serialize as `{kernel: cell}` (BTreeMap order is canonical).
+    pub fn to_json(&self) -> Json {
+        Json::Obj(self.cells.iter().map(|(k, c)| (k.clone(), c.to_json())).collect())
+    }
+
+    /// Parse the [`to_json`](Self::to_json) form.
+    pub fn from_json(v: &Json) -> Result<Ledger> {
+        let obj = v.as_obj().ok_or_else(|| anyhow::anyhow!("ledger must be an object"))?;
+        let mut cells = BTreeMap::new();
+        for (kernel, cell) in obj {
+            cells.insert(
+                kernel.clone(),
+                LedgerCell::from_json(cell).with_context(|| format!("ledger cell {kernel}"))?,
+            );
+        }
+        Ok(Ledger { cells })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn delta(kernel: &str, spend: u64, benefit: u64, inv: u64, at: u64) -> LedgerDelta {
+        LedgerDelta {
+            kernel: kernel.into(),
+            spend_ms: spend,
+            benefit_ms: benefit,
+            invocations: inv,
+            at,
+        }
+    }
+
+    #[test]
+    fn apply_accumulates_exact_sums() {
+        let mut l = Ledger::default();
+        l.apply(&delta("axpy", 100, 0, 0, 50));
+        l.apply(&delta("axpy", 0, 30, 3, 60));
+        l.apply(&delta("gemm", 500, 0, 0, 55));
+        let axpy = l.cell("axpy").unwrap();
+        assert_eq!(axpy.spend_ms, 100);
+        assert_eq!(axpy.benefit_ms, 30);
+        assert_eq!(axpy.invocations, 3);
+        assert_eq!(axpy.tunes, 1, "only the spend-carrying accrual counts as a tune");
+        assert_eq!(axpy.first_at, 50);
+        assert_eq!(axpy.updated_at, 60);
+        assert_eq!(l.totals(), (600, 30));
+        // Empty deltas allocate nothing.
+        l.apply(&delta("noop", 0, 0, 0, 99));
+        assert!(l.cell("noop").is_none());
+    }
+
+    #[test]
+    fn break_even_semantics() {
+        let mut c = LedgerCell::default();
+        assert!(!c.break_even(), "an empty cell has not broken even");
+        c.apply(&delta("k", 100, 0, 0, 10));
+        assert!(!c.break_even());
+        assert_eq!(c.net_ms(), -100);
+        c.apply(&delta("k", 0, 100, 10, 20));
+        assert!(c.break_even());
+        assert_eq!(c.net_ms(), 0);
+        assert_eq!(c.break_even_eta_s(), None, "already even: no ETA");
+        // Benefit-only cells never claim ROI.
+        let mut free = LedgerCell::default();
+        free.apply(&delta("k", 0, 500, 1, 10));
+        assert!(!free.break_even());
+    }
+
+    #[test]
+    fn eta_projects_the_observed_rate() {
+        let mut c = LedgerCell::default();
+        c.apply(&delta("k", 1000, 0, 0, 100));
+        assert_eq!(c.break_even_eta_s(), None, "no benefit rate observed yet");
+        // 400ms of benefit over a 200s window → 2ms/s; 600ms deficit
+        // → 300s to even.
+        c.apply(&delta("k", 0, 400, 4, 300));
+        assert_eq!(c.break_even_eta_s(), Some(300));
+    }
+
+    #[test]
+    fn merge_is_commutative_associative_idempotent() {
+        let mut a = Ledger::default();
+        a.apply(&delta("axpy", 100, 40, 4, 50));
+        a.apply(&delta("gemm", 900, 0, 0, 70));
+        let mut b = Ledger::default();
+        b.apply(&delta("axpy", 100, 90, 9, 60));
+        b.apply(&delta("dot", 10, 80, 8, 40));
+        let mut c = Ledger::default();
+        c.apply(&delta("gemm", 900, 300, 30, 90));
+
+        let join = |x: &Ledger, y: &Ledger| {
+            let mut out = x.clone();
+            out.merge(y);
+            out
+        };
+        assert_eq!(join(&a, &b), join(&b, &a), "commutative");
+        assert_eq!(
+            join(&join(&a, &b), &c),
+            join(&a, &join(&b, &c)),
+            "associative"
+        );
+        assert_eq!(join(&a, &a), a, "idempotent");
+        // Union of kernels, max per field, min on first_at.
+        let m = join(&a, &b);
+        assert_eq!(m.cells.len(), 3);
+        let axpy = m.cell("axpy").unwrap();
+        assert_eq!(axpy.spend_ms, 100);
+        assert_eq!(axpy.benefit_ms, 90);
+        assert_eq!(axpy.first_at, 50);
+        assert_eq!(axpy.updated_at, 60);
+    }
+
+    #[test]
+    fn json_round_trips_and_tolerates_absence() {
+        let mut l = Ledger::default();
+        l.apply(&delta("axpy", 123, 456, 7, 1_700_000_000));
+        l.apply(&delta("gemm", 9, 0, 0, 1_700_000_100));
+        let back = Ledger::from_json(&json::parse(&l.to_json().compact()).unwrap()).unwrap();
+        assert_eq!(back, l);
+        assert_eq!(Ledger::from_json(&Json::Obj(Default::default())).unwrap(), Ledger::default());
+        assert!(Ledger::from_json(&json::s("nope")).is_err());
+    }
+}

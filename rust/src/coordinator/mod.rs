@@ -9,6 +9,7 @@
 
 pub mod annotation;
 pub mod constraint;
+pub mod ledger;
 pub mod measure;
 pub mod perfdb;
 pub mod platform;

@@ -44,6 +44,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::coordinator::ledger::{Ledger, LedgerDelta};
 use crate::coordinator::platform::Fingerprint;
 use crate::coordinator::portfolio::Portfolio;
 use crate::coordinator::spec::Config;
@@ -557,6 +558,10 @@ pub struct Shard {
     /// Built variant portfolios, at most one per kernel (newest wins).
     /// Absent in pre-portfolio shard files; parsing defaults to empty.
     pub portfolios: Vec<Portfolio>,
+    /// Core-hour ROI accounting per kernel (spend vs realized
+    /// benefit).  Absent in pre-ledger shard files; parsing defaults
+    /// to empty, exactly like `portfolios`.
+    pub ledger: Ledger,
 }
 
 impl Shard {
@@ -566,6 +571,7 @@ impl Shard {
             fingerprint: None,
             entries: Vec::new(),
             portfolios: Vec::new(),
+            ledger: Ledger::default(),
         }
     }
 
@@ -625,6 +631,7 @@ impl Shard {
                 "portfolios",
                 Json::Arr(self.portfolios.iter().map(Portfolio::to_json).collect()),
             ),
+            ("ledger", self.ledger.to_json()),
         ])
         .pretty();
         with_checksum(&body)
@@ -665,7 +672,13 @@ impl Shard {
                 .collect::<Result<Vec<_>>>()?,
             _ => Vec::new(),
         };
-        Ok(Shard { platform_key, fingerprint, entries, portfolios })
+        // Same back-compat posture: pre-ledger shards have no ROI
+        // history yet.
+        let ledger = match root.get("ledger") {
+            Some(v @ Json::Obj(_)) => Ledger::from_json(v)?,
+            _ => Ledger::default(),
+        };
+        Ok(Shard { platform_key, fingerprint, entries, portfolios, ledger })
     }
 }
 
@@ -924,6 +937,20 @@ impl ShardedDb {
         self.record_many(&key, fingerprint, vec![entry])
     }
 
+    /// [`record`](Self::record) plus a core-hour ledger accrual,
+    /// committed atomically with the entry under the same shard lock —
+    /// the delta lands exactly once, so ledger sums stay exact no
+    /// matter how writers interleave.
+    pub fn record_with_ledger(
+        &self,
+        fingerprint: Option<&Fingerprint>,
+        entry: DbEntry,
+        delta: Option<LedgerDelta>,
+    ) -> Result<()> {
+        let key = entry.platform_key.clone();
+        self.record_many_with_ledger(&key, fingerprint, vec![entry], delta.into_iter().collect())
+    }
+
     /// Append a batch of same-platform records under one lock and one
     /// read-merge-rename cycle (the migration path's bulk write; per-
     /// entry `record` would rewrite the shard once per entry).
@@ -932,6 +959,18 @@ impl ShardedDb {
         platform_key: &str,
         fingerprint: Option<&Fingerprint>,
         entries: Vec<DbEntry>,
+    ) -> Result<()> {
+        self.record_many_with_ledger(platform_key, fingerprint, entries, Vec::new())
+    }
+
+    /// [`record_many`](Self::record_many) with ledger accruals applied
+    /// in the same locked commit.
+    pub fn record_many_with_ledger(
+        &self,
+        platform_key: &str,
+        fingerprint: Option<&Fingerprint>,
+        entries: Vec<DbEntry>,
+        deltas: Vec<LedgerDelta>,
     ) -> Result<()> {
         anyhow::ensure!(
             entries.iter().all(|e| e.platform_key == platform_key),
@@ -950,8 +989,21 @@ impl ShardedDb {
                     shard.entries.push(entry.clone());
                 }
             }
+            for delta in &deltas {
+                shard.ledger.apply(delta);
+            }
             Ok(shard.to_json_text())
         })
+    }
+
+    /// Accrue ledger deltas without recording any entry (spend-only
+    /// accounting: a sweep or rebuild whose results ride separate
+    /// records, or live invocation benefit reported on its own).
+    pub fn apply_ledger(&self, platform_key: &str, deltas: Vec<LedgerDelta>) -> Result<()> {
+        if deltas.is_empty() {
+            return Ok(());
+        }
+        self.record_many_with_ledger(platform_key, None, Vec::new(), deltas)
     }
 
     /// Exact lookup: newest record for (platform, kernel, workload).
@@ -969,6 +1021,19 @@ impl ShardedDb {
         fingerprint: Option<&Fingerprint>,
         portfolio: Portfolio,
     ) -> Result<()> {
+        self.record_portfolio_with_ledger(platform_key, fingerprint, portfolio, None)
+    }
+
+    /// [`record_portfolio`](Self::record_portfolio) plus an optional
+    /// ledger accrual (the rebuild's core-hour spend) in the same
+    /// locked commit.
+    pub fn record_portfolio_with_ledger(
+        &self,
+        platform_key: &str,
+        fingerprint: Option<&Fingerprint>,
+        portfolio: Portfolio,
+        delta: Option<LedgerDelta>,
+    ) -> Result<()> {
         let path = self.shard_path(platform_key);
         locked_commit(&path, path.with_extension("lock"), || {
             let mut shard = read_or_rebuild(&path, platform_key)?;
@@ -978,6 +1043,9 @@ impl ShardedDb {
             shard.portfolios.retain(|p| p.kernel != portfolio.kernel);
             shard.portfolios.push(portfolio.clone());
             shard.portfolios.sort_by(|a, b| a.kernel.cmp(&b.kernel));
+            if let Some(delta) = &delta {
+                shard.ledger.apply(delta);
+            }
             Ok(shard.to_json_text())
         })
     }
@@ -1046,6 +1114,9 @@ impl ShardedDb {
                 disk.portfolios.push(p.clone());
             }
             disk.portfolios.sort_by(|a, b| a.kernel.cmp(&b.kernel));
+            // Ledger join is commutative/associative/idempotent, so
+            // re-importing a bundle never double-counts core-seconds.
+            disk.ledger.merge(&shard.ledger);
             Ok(disk.to_json_text())
         })?;
         Ok((key, count))
@@ -1433,6 +1504,7 @@ mod tests {
             fingerprint: None,
             entries: vec![entry("p1", "axpy", "n4096", "a", 1.2)],
             portfolios: vec![],
+            ledger: Ledger::default(),
         };
         let text = shard.to_json_text();
         assert!(text.starts_with(CHECKSUM_PREFIX), "new shards lead with the header");

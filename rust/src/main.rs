@@ -18,6 +18,7 @@
 //! portatune query --op deploy ...         ask a running daemon (or --bundle FILE)
 //! portatune bundle export|import|info     offline decision bundles
 //! portatune metrics                       fetch a daemon's telemetry registry
+//! portatune report                        core-hour ledger: tuning ROI per kernel
 //! portatune work                          fleet worker: lease → execute → report
 //! portatune db-migrate                    import a v1 perfdb.json into shards
 //! portatune audit verify|replay           check / re-derive the decision log
@@ -50,6 +51,7 @@ use portatune::service::{
     ServeOpts, Server, DEFAULT_LEASE_TTL_S,
 };
 use portatune::util::cli::Args;
+use portatune::util::json::Json;
 use portatune::worker::{Worker, WorkerOpts};
 use portatune::workload::gemm;
 
@@ -125,7 +127,7 @@ const USAGE: &str = "usage: portatune <subcommand> [flags]
   query             ask a running daemon (one JSON reply line on stdout)
                       e.g. portatune query --op lookup --kernel axpy --workload n4096
                       e.g. portatune query --op portfolio --kernel gemm --m 128 --n 128 --k 64
-                    flags: --op ping|lookup|deploy|stats|metrics|retune-next|portfolio|shutdown
+                    flags: --op ping|lookup|deploy|stats|metrics|report|retune-next|portfolio|shutdown
                       [--addr ADDR (default 127.0.0.1:7171) | --socket PATH]
                       [--bundle FILE]  answer from an offline decision
                         bundle instead of a daemon (zero round-trips;
@@ -136,6 +138,15 @@ const USAGE: &str = "usage: portatune <subcommand> [flags]
                     latency histograms; shorthand for query --op metrics)
                       e.g. portatune metrics --addr 127.0.0.1:7171
                     flags: [--addr ADDR (default 127.0.0.1:7171) | --socket PATH]
+  report            core-hour ledger: what tuning cost, what it earned
+                    back, and which entries are regressing right now
+                    (table on stdout + one machine-readable JSON: line)
+                      e.g. portatune report --addr 127.0.0.1:7171
+                    flags: [--addr ADDR (default 127.0.0.1:7171) | --socket PATH]
+                      [--bundle FILE]  answer from an offline decision
+                        bundle instead of a daemon
+                      [--platform KEY]  only that platform's ledger
+                      [--json]  print only the JSON: line (for scripts)
   work              fleet worker: lease tasks from a daemon, execute them
                     (retune via artifacts, sweep / portfolio-rebuild
                     host-side), report results back
@@ -253,6 +264,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("serve") => cmd_serve(args, &artifacts, &db_path, &shards_dir),
         Some("query") => cmd_query(args),
         Some("metrics") => cmd_metrics(args),
+        Some("report") => cmd_report(args),
         Some("work") => cmd_work(args, &artifacts),
         Some("audit") => cmd_audit(args),
         Some("bundle") => cmd_bundle(args, &shards_dir),
@@ -408,6 +420,7 @@ fn cmd_query(args: &Args) -> Result<()> {
         },
         "stats" => Request::Stats,
         "metrics" => Request::Metrics,
+        "report" => Request::Report { platform },
         "retune-next" => Request::RetuneNext,
         "portfolio" => {
             let given: std::collections::BTreeMap<String, i64> =
@@ -423,7 +436,7 @@ fn cmd_query(args: &Args) -> Result<()> {
         other => {
             return Err(anyhow::anyhow!(
                 "unknown query op {other}; expected \
-                 ping|lookup|deploy|stats|metrics|retune-next|portfolio|shutdown"
+                 ping|lookup|deploy|stats|metrics|report|retune-next|portfolio|shutdown"
             ))
         }
     };
@@ -456,6 +469,99 @@ fn cmd_metrics(args: &Args) -> Result<()> {
     };
     println!("{}", client.call(&Request::Metrics)?.pretty());
     Ok(())
+}
+
+/// Core-hour ledger report: per-kernel tuning spend vs realized
+/// benefit, break-even status, and active regressions — the `report`
+/// wire op rendered as a table, followed by one `JSON:` line so
+/// scripts (and the CI smoke) never have to parse the table.
+fn cmd_report(args: &Args) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:7171");
+    let socket = args.get("socket").map(PathBuf::from);
+    let bundle = args.get("bundle").map(PathBuf::from);
+    let platform = args.get("platform").map(str::to_string);
+    let json_only = args.get_bool("json");
+    args.finish()?;
+    let client = match (bundle, socket) {
+        (Some(path), _) => Client::from_bundle(path)?,
+        #[cfg(unix)]
+        (None, Some(path)) => Client::unix(path),
+        #[cfg(not(unix))]
+        (None, Some(_)) => {
+            return Err(anyhow::anyhow!("--socket requires a unix platform; use --addr"))
+        }
+        (None, None) => Client::tcp(addr),
+    };
+    let reply = client.report(platform)?;
+    let report = reply
+        .get("report")
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("malformed report reply: {}", reply.compact()))?;
+    if !json_only {
+        print_ledger_report(&report);
+    }
+    println!("JSON: {}", report.compact());
+    Ok(())
+}
+
+/// Render the `report` payload as human tables: one ledger row per
+/// (platform, kernel), then the active-regression list.
+fn print_ledger_report(report: &Json) {
+    let fmt_s = |v: Option<&Json>| -> String {
+        v.and_then(Json::as_f64).map(|s| format!("{s:.3}")).unwrap_or_else(|| "-".into())
+    };
+    let fmt_u = |v: Option<&Json>| -> String {
+        v.and_then(Json::as_u64).map(|n| n.to_string()).unwrap_or_else(|| "-".into())
+    };
+    let mut t = Table::new(&[
+        "platform", "kernel", "spend s", "benefit s", "net s", "invocations", "tunes",
+        "break-even", "eta s", "regressing",
+    ]);
+    for p in report.get("platforms").and_then(Json::as_arr).unwrap_or(&[]) {
+        let platform = p.get("platform").and_then(Json::as_str).unwrap_or("?");
+        for k in p.get("kernels").and_then(Json::as_arr).unwrap_or(&[]) {
+            let flag = |key: &str| {
+                if k.get(key).and_then(Json::as_bool).unwrap_or(false) { "yes" } else { "no" }
+            };
+            t.row(vec![
+                platform.chars().take(24).collect(),
+                k.get("kernel").and_then(Json::as_str).unwrap_or("?").to_string(),
+                fmt_s(k.get("spend_core_seconds")),
+                fmt_s(k.get("benefit_core_seconds")),
+                fmt_s(k.get("net_core_seconds")),
+                fmt_u(k.get("invocations")),
+                fmt_u(k.get("tunes")),
+                flag("break_even").to_string(),
+                fmt_u(k.get("break_even_eta_s")),
+                flag("regressing").to_string(),
+            ]);
+        }
+    }
+    if t.is_empty() {
+        println!("(empty ledger: no tuning spend or benefit recorded yet)");
+    } else {
+        print!("{}", t.render());
+    }
+    if let Some(totals) = report.get("totals") {
+        println!(
+            "totals: spend {} s, benefit {} s, net {} s over {} kernel(s); {} broke even, {} regressing",
+            fmt_s(totals.get("spend_core_seconds")),
+            fmt_s(totals.get("benefit_core_seconds")),
+            fmt_s(totals.get("net_core_seconds")),
+            fmt_u(totals.get("kernels")),
+            fmt_u(totals.get("break_even")),
+            fmt_u(totals.get("regressions_active")),
+        );
+    }
+    let flagged = report.get("regressions").and_then(Json::as_arr).unwrap_or(&[]);
+    for r in flagged {
+        println!(
+            "REGRESSING: {}/{} on {}",
+            r.get("kernel").and_then(Json::as_str).unwrap_or("?"),
+            r.get("workload").and_then(Json::as_str).unwrap_or("?"),
+            r.get("platform").and_then(Json::as_str).unwrap_or("?"),
+        );
+    }
 }
 
 /// Fleet worker: lease tasks from a daemon, execute, report back.

@@ -47,6 +47,7 @@ pub const OP_LABELS: &[&str] = &[
     "portfolio",
     "record",
     "record-portfolio",
+    "report",
     "retune-next",
     "shutdown",
     "stats",

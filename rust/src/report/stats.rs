@@ -103,6 +103,15 @@ pub fn serve_stats_json(stats: &ServeStats) -> Json {
         ("snapshot_publishes".to_string(), int(stats.snapshot_publishes)),
         ("stale_locks_reaped".to_string(), int(stats.stale_locks_reaped)),
         ("shards_quarantined".to_string(), int(stats.shards_quarantined)),
+        ("regressions".to_string(), int(stats.regressions)),
+        ("regressions_active".to_string(), int(stats.regressions_active)),
+        // Ledger totals surface in core-seconds (the unit operators
+        // budget in); the store accumulates exact core-milliseconds.
+        ("tuning_spend_core_seconds".to_string(), num(stats.tuning_spend_ms as f64 / 1000.0)),
+        (
+            "tuning_benefit_core_seconds".to_string(),
+            num(stats.tuning_benefit_ms as f64 / 1000.0),
+        ),
     ]
     .into_iter()
     .collect();
@@ -178,6 +187,10 @@ mod tests {
             snapshot_publishes: 8,
             stale_locks_reaped: 2,
             shards_quarantined: 1,
+            regressions: 2,
+            regressions_active: 1,
+            tuning_spend_ms: 90_500,
+            tuning_benefit_ms: 120_250,
         };
         let parsed = json::parse(&serve_stats_json(&stats).compact()).unwrap();
         assert_eq!(parsed.get("lookups").and_then(Json::as_u64), Some(100));
@@ -205,5 +218,15 @@ mod tests {
         assert_eq!(parsed.get("snapshot_publishes").and_then(Json::as_u64), Some(8));
         assert_eq!(parsed.get("stale_locks_reaped").and_then(Json::as_u64), Some(2));
         assert_eq!(parsed.get("shards_quarantined").and_then(Json::as_u64), Some(1));
+        assert_eq!(parsed.get("regressions").and_then(Json::as_u64), Some(2));
+        assert_eq!(parsed.get("regressions_active").and_then(Json::as_u64), Some(1));
+        assert_eq!(
+            parsed.get("tuning_spend_core_seconds").and_then(Json::as_f64),
+            Some(90.5)
+        );
+        assert_eq!(
+            parsed.get("tuning_benefit_core_seconds").and_then(Json::as_f64),
+            Some(120.25)
+        );
     }
 }

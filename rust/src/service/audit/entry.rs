@@ -127,6 +127,40 @@ pub enum AuditEvent {
         /// Winning config id.
         config: String,
     },
+    /// The regression sentinel confirmed a served config has gone slow
+    /// on live hardware.  All evidence is integer permille so the
+    /// hashed encoding is exact.
+    Regression {
+        /// Platform whose config regressed.
+        platform: String,
+        /// Kernel family.
+        kernel: String,
+        /// Workload tag.
+        workload: String,
+        /// Smoothed observed/stored cost ratio at confirmation,
+        /// permille (1300 = running 1.3× the stored best).
+        ratio_pm: u64,
+        /// Samples in the evidence window.
+        window_n: u64,
+        /// Mean ratio over the evidence window, permille.
+        window_mean_pm: u64,
+        /// Worst ratio in the evidence window, permille.
+        window_max_pm: u64,
+    },
+    /// A (platform, kernel) ledger cell crossed break-even: realized
+    /// benefit caught up with tuning spend (see
+    /// [`crate::coordinator::ledger`]).
+    BreakEven {
+        /// Platform whose ledger crossed.
+        platform: String,
+        /// Kernel family.
+        kernel: String,
+        /// Cumulative tuning spend at the crossing, core-milliseconds.
+        spend_ms: u64,
+        /// Cumulative realized benefit at the crossing,
+        /// core-milliseconds.
+        benefit_ms: u64,
+    },
     /// A deploy/lookup/portfolio answer left the daemon.
     Served {
         /// The wire op (`lookup` / `deploy` / `portfolio`).
@@ -156,6 +190,8 @@ impl AuditEvent {
             AuditEvent::TaskRequeued { .. } => "task-requeued",
             AuditEvent::TaskDropped { .. } => "task-dropped",
             AuditEvent::RecordAccepted { .. } => "record-accepted",
+            AuditEvent::Regression { .. } => "regression",
+            AuditEvent::BreakEven { .. } => "break-even",
             AuditEvent::Served { .. } => "served",
         }
     }
@@ -199,6 +235,29 @@ impl AuditEvent {
                 o.insert("kernel".into(), json::s(kernel));
                 o.insert("tag".into(), json::s(tag));
                 o.insert("config".into(), json::s(config));
+            }
+            AuditEvent::Regression {
+                platform,
+                kernel,
+                workload,
+                ratio_pm,
+                window_n,
+                window_mean_pm,
+                window_max_pm,
+            } => {
+                o.insert("platform".into(), json::s(platform));
+                o.insert("kernel".into(), json::s(kernel));
+                o.insert("workload".into(), json::s(workload));
+                o.insert("ratio_pm".into(), json::int(*ratio_pm as i64));
+                o.insert("window_n".into(), json::int(*window_n as i64));
+                o.insert("window_mean_pm".into(), json::int(*window_mean_pm as i64));
+                o.insert("window_max_pm".into(), json::int(*window_max_pm as i64));
+            }
+            AuditEvent::BreakEven { platform, kernel, spend_ms, benefit_ms } => {
+                o.insert("platform".into(), json::s(platform));
+                o.insert("kernel".into(), json::s(kernel));
+                o.insert("spend_ms".into(), json::int(*spend_ms as i64));
+                o.insert("benefit_ms".into(), json::int(*benefit_ms as i64));
             }
             AuditEvent::Served { op, platform, kernel, workload, reason, trace_id } => {
                 o.insert("op".into(), json::s(op));
@@ -274,6 +333,21 @@ impl AuditEvent {
                 tag: get("tag")?,
                 config: get("config")?,
             },
+            "regression" => AuditEvent::Regression {
+                platform: get("platform")?,
+                kernel: get("kernel")?,
+                workload: get("workload")?,
+                ratio_pm: get_u64("ratio_pm")?,
+                window_n: get_u64("window_n")?,
+                window_mean_pm: get_u64("window_mean_pm")?,
+                window_max_pm: get_u64("window_max_pm")?,
+            },
+            "break-even" => AuditEvent::BreakEven {
+                platform: get("platform")?,
+                kernel: get("kernel")?,
+                spend_ms: get_u64("spend_ms")?,
+                benefit_ms: get_u64("benefit_ms")?,
+            },
             "served" => {
                 let reason = match get("reason")?.as_str() {
                     "exact" => ServeReason::Exact,
@@ -306,6 +380,8 @@ impl AuditEvent {
             | AuditEvent::TaskRequeued { platform, .. }
             | AuditEvent::TaskDropped { platform, .. }
             | AuditEvent::RecordAccepted { platform, .. }
+            | AuditEvent::Regression { platform, .. }
+            | AuditEvent::BreakEven { platform, .. }
             | AuditEvent::Served { platform, .. } => Some(platform),
             AuditEvent::TaskCompleted { .. } | AuditEvent::TaskFailed { .. } => None,
         }
@@ -333,6 +409,20 @@ impl AuditEvent {
             }
             AuditEvent::RecordAccepted { platform, kernel, tag, config } => {
                 format!("record {kernel}/{tag} = {config} for {platform}")
+            }
+            AuditEvent::Regression {
+                platform, kernel, workload, ratio_pm, window_n, ..
+            } => {
+                format!(
+                    "regression {kernel}/{workload} on {platform}: \
+                     {ratio_pm}‰ of stored best over {window_n} samples"
+                )
+            }
+            AuditEvent::BreakEven { platform, kernel, spend_ms, benefit_ms } => {
+                format!(
+                    "break-even {kernel} on {platform}: \
+                     benefit {benefit_ms}ms ≥ spend {spend_ms}ms"
+                )
             }
             AuditEvent::Served { op, platform, kernel, workload, reason, .. } => {
                 let w = workload.as_deref().unwrap_or("-");
@@ -457,6 +547,21 @@ mod tests {
                 kernel: "gemm".into(),
                 tag: "m64n64k64".into(),
                 config: "o1_tm32".into(),
+            },
+            AuditEvent::Regression {
+                platform: "p-0".into(),
+                kernel: "gemm".into(),
+                workload: "m64n64k64".into(),
+                ratio_pm: 1480,
+                window_n: 6,
+                window_mean_pm: 1455,
+                window_max_pm: 1620,
+            },
+            AuditEvent::BreakEven {
+                platform: "p-0".into(),
+                kernel: "gemm".into(),
+                spend_ms: 42_000,
+                benefit_ms: 43_750,
             },
             AuditEvent::Served {
                 op: "deploy".into(),

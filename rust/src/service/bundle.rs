@@ -292,6 +292,12 @@ impl OfflineBundle {
                     .portfolio_reply(platform, kernel, dims, fingerprint.as_ref(), &self.host)
                     .0
             }
+            Request::Report { platform } => {
+                // The economics report is shard data, so the offline
+                // bundle answers it too — same shaping as the daemon,
+                // minus the (sentinel-owned, daemon-only) live flags.
+                self.snapshot.report_reply(platform.as_deref())
+            }
             other => reply_err(&format!(
                 "offline bundle client: op '{}' requires a daemon",
                 other.op_name()

@@ -267,11 +267,32 @@ impl Client {
     /// write retries safely: a lost ack re-sends the same id and the
     /// daemon replays the original reply instead of re-recording.
     pub fn record(&self, entry: DbEntry, fingerprint: Option<Fingerprint>) -> Result<Json> {
+        self.record_with_spend(entry, fingerprint, None)
+    }
+
+    /// [`record`](Self::record), declaring how many core-milliseconds
+    /// of tuning work (compile + measure) produced this entry.  The
+    /// daemon accrues the spend into the platform's core-hour ledger
+    /// atomically with the entry, so retried sends cannot double-bill.
+    pub fn record_with_spend(
+        &self,
+        entry: DbEntry,
+        fingerprint: Option<Fingerprint>,
+        spend_ms: Option<u64>,
+    ) -> Result<Json> {
         self.call(&Request::Record {
             entry: Box::new(entry),
             fingerprint,
             request_id: Some(fresh_request_id()),
+            spend_ms,
         })
+    }
+
+    /// Fetch the tuning-economics report: per-kernel spend / benefit /
+    /// break-even plus active regressions, optionally filtered to one
+    /// platform.
+    pub fn report(&self, platform: Option<String>) -> Result<Json> {
+        self.call(&Request::Report { platform })
     }
 
     /// Check out the next tuning task under a lease (the worker
@@ -408,11 +429,13 @@ mod tests {
             entry: entry(),
             fingerprint: None,
             request_id: None,
+            spend_ms: None,
         }));
         assert!(Client::op_retries_transparently(&Request::Record {
             entry: entry(),
             fingerprint: None,
             request_id: Some("id-1".into()),
+            spend_ms: Some(1200),
         }));
         assert!(!Client::op_retries_transparently(&Request::TaskComplete {
             lease_id: 1,

@@ -48,6 +48,11 @@
 //!   typed, hash-chained entry; `portatune audit verify` proves the
 //!   log unaltered and `portatune audit replay` re-derives a
 //!   platform's decision sequence.
+//! * [`sentinel`] — the regression sentinel: a windowed-EWMA drift
+//!   detector over the live `record` stream that flags served configs
+//!   gone slow, audits the evidence, and enqueues evidence-driven
+//!   retune tasks (paired with the per-shard core-hour ledger in
+//!   [`crate::coordinator::ledger`], surfaced by the `report` op).
 //! * [`faults`] — the deterministic fault-injection harness behind
 //!   `tests/chaos.rs`: a seeded [`FaultPlan`] fires connection drops,
 //!   read/write stalls, torn shard writes, lease-settle delays, and
@@ -62,6 +67,7 @@ pub mod client;
 pub mod faults;
 pub mod protocol;
 pub mod scheduler;
+pub mod sentinel;
 pub mod server;
 pub mod snapshot;
 pub mod transfer;
@@ -75,6 +81,7 @@ pub use scheduler::{
     CompleteOutcome, ExpireReport, FailOutcome, StaleReason, TaskKind, TaskQueue, TuningTask,
     DEFAULT_LEASE_TTL_S,
 };
+pub use sentinel::{Sentinel, SentinelConfig, SentinelEvent, SentinelKey};
 pub use server::{Lru, ServeOpts, ServeStats, Server};
 pub use snapshot::{ServeSnapshot, ServedFrom};
 pub use transfer::{

@@ -11,9 +11,10 @@
 //! {"op":"ping"}
 //! {"op":"lookup","kernel":"axpy","workload":"n4096","platform":KEY?}
 //! {"op":"deploy","kernel":"axpy","workload":"n4096","platform":KEY?,"fingerprint":{..}?}
-//! {"op":"record","entry":{..DbEntry..},"fingerprint":{..}?,"request_id":"..."?}
-//! {"op":"record-portfolio","portfolio":{..Portfolio..},"platform":KEY?,"fingerprint":{..}?}
+//! {"op":"record","entry":{..DbEntry..},"fingerprint":{..}?,"request_id":"..."?,"spend_ms":N?}
+//! {"op":"record-portfolio","portfolio":{..Portfolio..},"platform":KEY?,"fingerprint":{..}?,"spend_ms":N?}
 //! {"op":"stats"}
+//! {"op":"report","platform":KEY?}
 //! {"op":"task-lease","kind":"retune"?,"platform":KEY?,"ttl_s":600?}
 //! {"op":"task-heartbeat","lease_id":N}
 //! {"op":"task-complete","lease_id":N,"request_id":"..."?}
@@ -90,6 +91,10 @@ pub enum Request {
         /// Client-generated dedupe id: a retry carrying the same id
         /// replays the first attempt's reply instead of re-recording.
         request_id: Option<String>,
+        /// Core-milliseconds of tuning work behind this record
+        /// (compile + measure + sweep wall time) — accrued into the
+        /// shard's core-hour ledger as spend.
+        spend_ms: Option<u64>,
     },
     /// Write (or replace) a platform's variant portfolio — how a
     /// worker reports a finished portfolio-rebuild task so the
@@ -103,9 +108,18 @@ pub enum Request {
         portfolio: Box<Portfolio>,
         /// Recording platform's fingerprint (stored in the shard).
         fingerprint: Option<Fingerprint>,
+        /// Core-milliseconds the rebuild cost — ledger spend for the
+        /// portfolio's kernel.
+        spend_ms: Option<u64>,
     },
     /// Counter snapshot.
     Stats,
+    /// The core-hour ledger: per-(platform, kernel) tuning ROI
+    /// (spend, benefit, net, break-even) plus active regressions.
+    Report {
+        /// Restrict to one platform (all platforms when absent).
+        platform: Option<String>,
+    },
     /// Full telemetry registry snapshot: the `stats` counters plus
     /// every latency histogram (see [`crate::obs`]).
     Metrics,
@@ -196,6 +210,13 @@ impl Request {
                 .map(Some)
                 .ok_or_else(|| anyhow::anyhow!("malformed fingerprint")),
         };
+        let spend = || match v.get("spend_ms") {
+            Some(Json::Null) | None => Ok(None),
+            Some(t) => t
+                .as_u64()
+                .map(Some)
+                .ok_or_else(|| anyhow::anyhow!("spend_ms must be a non-negative int")),
+        };
         match op {
             "ping" => Ok(Request::Ping),
             "lookup" => Ok(Request::Lookup {
@@ -217,6 +238,7 @@ impl Request {
                     entry: Box::new(DbEntry::from_json(entry)?),
                     fingerprint: fp()?,
                     request_id: opt("request_id"),
+                    spend_ms: spend()?,
                 })
             }
             "record-portfolio" => {
@@ -227,9 +249,11 @@ impl Request {
                     platform: opt("platform"),
                     portfolio: Box::new(Portfolio::from_json(p)?),
                     fingerprint: fp()?,
+                    spend_ms: spend()?,
                 })
             }
             "stats" => Ok(Request::Stats),
+            "report" => Ok(Request::Report { platform: opt("platform") }),
             "metrics" => Ok(Request::Metrics),
             "task-lease" => {
                 let kind = match v.get("kind").and_then(Json::as_str) {
@@ -294,6 +318,7 @@ impl Request {
             Request::Record { .. } => "record",
             Request::RecordPortfolio { .. } => "record-portfolio",
             Request::Stats => "stats",
+            Request::Report { .. } => "report",
             Request::Metrics => "metrics",
             Request::TaskLease { .. } => "task-lease",
             Request::TaskHeartbeat { .. } => "task-heartbeat",
@@ -338,7 +363,7 @@ impl Request {
                     fields.push(("fingerprint", fp.to_json()));
                 }
             }
-            Request::Record { entry, fingerprint, request_id } => {
+            Request::Record { entry, fingerprint, request_id, spend_ms } => {
                 fields.push(("op", json::s("record")));
                 fields.push(("entry", entry.to_json()));
                 if let Some(fp) = fingerprint {
@@ -347,8 +372,11 @@ impl Request {
                 if let Some(id) = request_id {
                     fields.push(("request_id", json::s(id)));
                 }
+                if let Some(ms) = spend_ms {
+                    fields.push(("spend_ms", json::int(*ms as i64)));
+                }
             }
-            Request::RecordPortfolio { platform, portfolio, fingerprint } => {
+            Request::RecordPortfolio { platform, portfolio, fingerprint, spend_ms } => {
                 fields.push(("op", json::s("record-portfolio")));
                 if let Some(p) = platform {
                     fields.push(("platform", json::s(p)));
@@ -357,8 +385,17 @@ impl Request {
                 if let Some(fp) = fingerprint {
                     fields.push(("fingerprint", fp.to_json()));
                 }
+                if let Some(ms) = spend_ms {
+                    fields.push(("spend_ms", json::int(*ms as i64)));
+                }
             }
             Request::Stats => fields.push(("op", json::s("stats"))),
+            Request::Report { platform } => {
+                fields.push(("op", json::s("report")));
+                if let Some(p) = platform {
+                    fields.push(("platform", json::s(p)));
+                }
+            }
             Request::Metrics => fields.push(("op", json::s("metrics"))),
             Request::TaskLease { kind, platform, ttl_s } => {
                 fields.push(("op", json::s("task-lease")));
@@ -446,6 +483,8 @@ mod tests {
             },
             Request::Stats,
             Request::Metrics,
+            Request::Report { platform: None },
+            Request::Report { platform: Some("p1".into()) },
             Request::RetuneNext,
             Request::TaskLease { kind: None, platform: None, ttl_s: None },
             Request::TaskLease {
@@ -530,6 +569,10 @@ mod tests {
             "ttl_s must be an int"
         );
         assert!(
+            Request::parse_line(r#"{"op":"record","entry":{},"spend_ms":"lots"}"#).is_err(),
+            "spend_ms must be an int"
+        );
+        assert!(
             Request::parse_line(r#"{"op":"task-heartbeat"}"#).is_err(),
             "lease_id is required"
         );
@@ -601,12 +644,14 @@ mod tests {
             platform: Some("p1".into()),
             portfolio: Box::new(portfolio.clone()),
             fingerprint: None,
+            spend_ms: Some(4200),
         };
         let line = req.to_line();
         match Request::parse_line(&line).unwrap() {
-            Request::RecordPortfolio { platform, portfolio: back, .. } => {
+            Request::RecordPortfolio { platform, portfolio: back, spend_ms, .. } => {
                 assert_eq!(platform.as_deref(), Some("p1"));
                 assert_eq!(*back, portfolio);
+                assert_eq!(spend_ms, Some(4200), "ledger spend must survive the wire");
             }
             other => panic!("parsed {other:?}"),
         }
@@ -645,6 +690,7 @@ mod tests {
             Request::Ping,
             Request::Stats,
             Request::Metrics,
+            Request::Report { platform: None },
             Request::RetuneNext,
             Request::Shutdown,
             Request::TaskHeartbeat { lease_id: 1 },

@@ -146,6 +146,14 @@ pub enum StaleReason {
     /// The platform under this key no longer matches its stored
     /// fingerprint.
     FingerprintDrift,
+    /// The regression sentinel confirmed the served config has gone
+    /// slow on live hardware (see [`crate::service::sentinel`]) — an
+    /// evidence-driven retune, not a clock-driven one.
+    Regression {
+        /// Smoothed observed/stored cost ratio (permille) at
+        /// confirmation.
+        ratio_pm: u64,
+    },
 }
 
 impl StaleReason {
@@ -154,6 +162,7 @@ impl StaleReason {
         match self {
             StaleReason::TtlExpired { .. } => "ttl-expired",
             StaleReason::FingerprintDrift => "fingerprint-drift",
+            StaleReason::Regression { .. } => "regression",
         }
     }
 }
@@ -196,8 +205,14 @@ impl TuningTask {
             fields.push(("workload", json::s(tag)));
         }
         fields.push(("reason", json::s(self.reason.as_str())));
-        if let StaleReason::TtlExpired { age_s } = &self.reason {
-            fields.push(("age_s", json::int(*age_s as i64)));
+        match &self.reason {
+            StaleReason::TtlExpired { age_s } => {
+                fields.push(("age_s", json::int(*age_s as i64)));
+            }
+            StaleReason::Regression { ratio_pm } => {
+                fields.push(("ratio_pm", json::int(*ratio_pm as i64)));
+            }
+            StaleReason::FingerprintDrift => {}
         }
         if self.attempts > 0 {
             fields.push(("attempts", json::int(self.attempts as i64)));
@@ -223,6 +238,11 @@ impl TuningTask {
         };
         let reason = match v.get("reason").and_then(Json::as_str) {
             Some("fingerprint-drift") => StaleReason::FingerprintDrift,
+            Some("regression") => StaleReason::Regression {
+                ratio_pm: v.get("ratio_pm").and_then(Json::as_u64).unwrap_or(0),
+            },
+            // Unknown reasons (a newer daemon) degrade to ttl-expired:
+            // the worker still knows *what* to do, just not why.
             _ => StaleReason::TtlExpired {
                 age_s: v.get("age_s").and_then(Json::as_u64).unwrap_or(0),
             },
@@ -750,6 +770,7 @@ fn key_derived_from(key: &str, fp: &Fingerprint) -> bool {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::ledger::Ledger;
     use crate::coordinator::perfdb::DbEntry;
     use crate::coordinator::portfolio::{Portfolio, PortfolioItem, FEATURE_NAMES};
 
@@ -818,6 +839,7 @@ mod tests {
             fingerprint: Some(host.clone()),
             entries: vec![entry(&key, "axpy", "n4096", 1000)],
             portfolios: Vec::new(),
+            ledger: Ledger::default(),
         };
         let mut q = TaskQueue::new(3600);
         // Within TTL: nothing queued.
@@ -916,6 +938,7 @@ mod tests {
             fingerprint: Some(host.clone()),
             entries: vec![entry(&key, "axpy", "n4096", 1000)],
             portfolios: Vec::new(),
+            ledger: Ledger::default(),
         };
         let mut q = TaskQueue::new(3600);
         assert_eq!(q.scan(std::slice::from_ref(&shard), &host, 10_000), 1);
@@ -940,6 +963,7 @@ mod tests {
             // only the rebuild task queues (it re-records the sweep).
             entries: vec![entry(&key, gemm::KERNEL, "m32n32k32", 1000)],
             portfolios: vec![portfolio(gemm::KERNEL, 1000)],
+            ledger: Ledger::default(),
         };
         let mut q = TaskQueue::new(3600);
         assert_eq!(q.scan(std::slice::from_ref(&shard), &host, 10_000), 1);
@@ -962,6 +986,7 @@ mod tests {
                 entry(&key, "axpy", "n4096", 1000),
             ],
             portfolios: Vec::new(),
+            ledger: Ledger::default(),
         };
         let mut q = TaskQueue::new(3600);
         // Two stale gemm shapes -> ONE sweep task; axpy -> one retune.
@@ -982,6 +1007,7 @@ mod tests {
             fingerprint: Some(drifted_fp),
             entries: vec![entry("x", "axpy", "n4096", u64::MAX / 2)],
             portfolios: vec![portfolio("gemm", u64::MAX / 2)],
+            ledger: Ledger::default(),
         };
         let mut q = TaskQueue::new(u64::MAX);
         assert_eq!(q.scan(std::slice::from_ref(&shard), &host, u64::MAX / 2), 2);
@@ -1008,6 +1034,7 @@ mod tests {
             fingerprint: Some(fp(512)),
             entries: vec![entry("remote-box", "axpy", "n4096", 5000)],
             portfolios: Vec::new(),
+            ledger: Ledger::default(),
         };
         let mut q = TaskQueue::new(u64::MAX);
         assert_eq!(q.scan(&[shard], &host, 6000), 0);
@@ -1029,6 +1056,7 @@ mod tests {
             fingerprint: Some(host.clone()),
             entries: vec![entry(&key, "axpy", "n4096", 5000)],
             portfolios: vec![portfolio("gemm", 5000)],
+            ledger: Ledger::default(),
         };
         let mut q = TaskQueue::new(3600);
         assert_eq!(q.scan(&[shard], &host, 5100), 0);

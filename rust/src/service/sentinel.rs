@@ -1,0 +1,275 @@
+//! The regression sentinel: live drift detection on the record stream.
+//!
+//! The TTL scan re-tunes on a clock; the Kernel Tuning Toolkit line of
+//! work (Petrovič et al.) argues a production tuner must also re-tune
+//! on *evidence* — a served config that got slower on live hardware.
+//! Every `record` carries an observed cost; the sentinel compares it
+//! against the stored best the fleet had been serving via a windowed
+//! EWMA and a threshold test, and confirms a regression only when both
+//! the smoothed ratio and the recent-window mean exceed the firing
+//! threshold with enough samples.  One noisy measurement can never
+//! fire it; a genuine slowdown fires it within a handful of records.
+//!
+//! All state is integer permille arithmetic (ratios ×1000), so
+//! detection is bit-deterministic — the fleet simulation replays a
+//! seeded slowdown and gets the same detection tick every run.
+//!
+//! Confirmation and recovery are *transitions*: [`Sentinel::observe`]
+//! reports `Confirmed` exactly once per episode (the caller audits,
+//! bumps metrics, and enqueues the evidence-driven retune task) and
+//! `Cleared` exactly once when the smoothed ratio falls back under the
+//! clear threshold (hysteresis, so a ratio hovering at the threshold
+//! cannot flap).
+
+use std::collections::{HashMap, VecDeque};
+
+/// Identity the sentinel watches: (platform, kernel, workload).
+pub type SentinelKey = (String, String, String);
+
+/// Detection thresholds.  Defaults fire on a sustained ≥ 1.3× cost
+/// ratio after 5 samples and clear below 1.1× — see
+/// `docs/OBSERVABILITY.md` ("Tuning economics") for how to tune them.
+#[derive(Debug, Clone)]
+pub struct SentinelConfig {
+    /// Recent samples kept per key for the window-mean test (and the
+    /// audit evidence).
+    pub window: usize,
+    /// Minimum samples in the window before a regression can confirm.
+    pub min_samples: usize,
+    /// EWMA weight of the newest sample, permille (300 = 0.3).
+    pub alpha_pm: u64,
+    /// Smoothed AND window-mean ratio (permille) at or above which a
+    /// regression confirms (1300 = observed 1.3× the stored best).
+    pub fire_pm: u64,
+    /// Smoothed ratio (permille) at or below which an active
+    /// regression clears.
+    pub clear_pm: u64,
+}
+
+impl Default for SentinelConfig {
+    fn default() -> SentinelConfig {
+        SentinelConfig { window: 8, min_samples: 5, alpha_pm: 300, fire_pm: 1300, clear_pm: 1100 }
+    }
+}
+
+/// A state transition reported by [`Sentinel::observe`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SentinelEvent {
+    /// The key crossed into regression — fire the alarm exactly once.
+    Confirmed {
+        /// Smoothed observed/stored cost ratio, permille.
+        ratio_pm: u64,
+        /// Samples in the evidence window at confirmation.
+        window_n: u64,
+        /// Mean ratio over the evidence window, permille.
+        window_mean_pm: u64,
+        /// Worst (highest) ratio in the evidence window, permille.
+        window_max_pm: u64,
+    },
+    /// The key recovered — smoothed ratio fell under the clear bar.
+    Cleared {
+        /// Smoothed ratio at recovery, permille.
+        ratio_pm: u64,
+    },
+}
+
+#[derive(Debug, Default)]
+struct Window {
+    /// Smoothed ratio, permille; 0 = no sample yet.
+    ewma_pm: u64,
+    /// Last `window` raw ratios, oldest first.
+    recent: VecDeque<u64>,
+    regressing: bool,
+}
+
+/// Per-key windowed-EWMA regression detector.  Lives server-side (and
+/// inside the fleet sim); nothing here persists — a restarted daemon
+/// re-learns from the live stream within `min_samples` records.
+#[derive(Debug, Default)]
+pub struct Sentinel {
+    cfg: SentinelConfig,
+    windows: HashMap<SentinelKey, Window>,
+}
+
+impl Sentinel {
+    /// A sentinel with the given thresholds.
+    pub fn new(cfg: SentinelConfig) -> Sentinel {
+        Sentinel { cfg, windows: HashMap::new() }
+    }
+
+    /// Feed one observation: the cost a live record reports
+    /// (`observed_s`) against the stored best the snapshot had been
+    /// serving (`stored_best_s`).  Returns the key's regression state
+    /// after the observation plus the transition, if this observation
+    /// caused one.
+    pub fn observe(
+        &mut self,
+        platform: &str,
+        kernel: &str,
+        tag: &str,
+        observed_s: f64,
+        stored_best_s: f64,
+    ) -> (bool, Option<SentinelEvent>) {
+        let usable = |v: f64| v.is_finite() && v > 0.0;
+        if !usable(observed_s) || !usable(stored_best_s) {
+            return (self.is_regressing(platform, kernel, tag), None);
+        }
+        // Rounded once, then integer math only: bit-deterministic.
+        let ratio_pm = ((observed_s / stored_best_s) * 1000.0).round() as u64;
+        let key = (platform.to_string(), kernel.to_string(), tag.to_string());
+        let w = self.windows.entry(key).or_default();
+        w.ewma_pm = if w.ewma_pm == 0 {
+            ratio_pm
+        } else {
+            // alpha·sample + (1−alpha)·ewma, permille weights, rounded.
+            (self.cfg.alpha_pm * ratio_pm + (1000 - self.cfg.alpha_pm) * w.ewma_pm + 500) / 1000
+        };
+        w.recent.push_back(ratio_pm);
+        while w.recent.len() > self.cfg.window {
+            w.recent.pop_front();
+        }
+        let n = w.recent.len() as u64;
+        let mean_pm = w.recent.iter().sum::<u64>() / n;
+        if !w.regressing {
+            if w.recent.len() >= self.cfg.min_samples
+                && w.ewma_pm >= self.cfg.fire_pm
+                && mean_pm >= self.cfg.fire_pm
+            {
+                w.regressing = true;
+                let event = SentinelEvent::Confirmed {
+                    ratio_pm: w.ewma_pm,
+                    window_n: n,
+                    window_mean_pm: mean_pm,
+                    window_max_pm: w.recent.iter().copied().max().unwrap_or(ratio_pm),
+                };
+                return (true, Some(event));
+            }
+            (false, None)
+        } else if w.ewma_pm <= self.cfg.clear_pm {
+            w.regressing = false;
+            let ratio = w.ewma_pm;
+            (false, Some(SentinelEvent::Cleared { ratio_pm: ratio }))
+        } else {
+            (true, None)
+        }
+    }
+
+    /// Whether a key is currently flagged.
+    pub fn is_regressing(&self, platform: &str, kernel: &str, tag: &str) -> bool {
+        self.windows
+            .get(&(platform.to_string(), kernel.to_string(), tag.to_string()))
+            .map(|w| w.regressing)
+            .unwrap_or(false)
+    }
+
+    /// Drop a key's history (a retune landed a new best: the old
+    /// ratios were measured against a dead baseline).  Returns whether
+    /// the key had been flagged.
+    pub fn reset(&mut self, platform: &str, kernel: &str, tag: &str) -> bool {
+        self.windows
+            .remove(&(platform.to_string(), kernel.to_string(), tag.to_string()))
+            .map(|w| w.regressing)
+            .unwrap_or(false)
+    }
+
+    /// Currently flagged keys, sorted (deterministic surfaces: the
+    /// `report` op, snapshot rebuilds, the fleet sim).
+    pub fn regressing_keys(&self) -> Vec<SentinelKey> {
+        let mut keys: Vec<SentinelKey> =
+            self.windows.iter().filter(|(_, w)| w.regressing).map(|(k, _)| k.clone()).collect();
+        keys.sort();
+        keys
+    }
+
+    /// How many keys are currently flagged (the
+    /// `portatune_regressions_active` gauge).
+    pub fn active(&self) -> usize {
+        self.windows.values().filter(|w| w.regressing).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sustained_slowdown_confirms_exactly_once() {
+        let mut s = Sentinel::new(SentinelConfig::default());
+        let mut confirmations = 0;
+        let mut first_regressing = None;
+        for i in 0..10 {
+            let (reg, event) = s.observe("p1", "axpy", "n4096", 2.0e-3, 1.0e-3);
+            if let Some(SentinelEvent::Confirmed { ratio_pm, window_n, .. }) = &event {
+                confirmations += 1;
+                assert!(*ratio_pm >= 1300);
+                assert!(*window_n >= 5);
+            }
+            if reg && first_regressing.is_none() {
+                first_regressing = Some(i);
+            }
+        }
+        assert_eq!(confirmations, 1, "confirmation is a transition, not a level");
+        assert_eq!(first_regressing, Some(4), "fires at min_samples, not before");
+        assert!(s.is_regressing("p1", "axpy", "n4096"));
+        assert_eq!(s.active(), 1);
+        assert_eq!(s.regressing_keys().len(), 1);
+    }
+
+    #[test]
+    fn single_spike_never_fires() {
+        let mut s = Sentinel::new(SentinelConfig::default());
+        // One 5x outlier surrounded by healthy samples.
+        for observed in [1.0e-3, 1.05e-3, 5.0e-3, 0.95e-3, 1.0e-3, 1.0e-3, 1.02e-3, 0.99e-3] {
+            let (reg, event) = s.observe("p1", "axpy", "n4096", observed, 1.0e-3);
+            assert!(!reg, "a lone spike must not confirm");
+            assert!(event.is_none());
+        }
+    }
+
+    #[test]
+    fn recovery_clears_with_hysteresis() {
+        let mut s = Sentinel::new(SentinelConfig::default());
+        for _ in 0..6 {
+            s.observe("p1", "axpy", "n4096", 2.0e-3, 1.0e-3);
+        }
+        assert!(s.is_regressing("p1", "axpy", "n4096"));
+        let mut cleared = 0;
+        for _ in 0..12 {
+            let (_, event) = s.observe("p1", "axpy", "n4096", 1.0e-3, 1.0e-3);
+            if matches!(event, Some(SentinelEvent::Cleared { .. })) {
+                cleared += 1;
+            }
+        }
+        assert_eq!(cleared, 1, "recovery reported exactly once");
+        assert!(!s.is_regressing("p1", "axpy", "n4096"));
+        assert_eq!(s.active(), 0);
+    }
+
+    #[test]
+    fn reset_forgets_the_dead_baseline() {
+        let mut s = Sentinel::new(SentinelConfig::default());
+        for _ in 0..6 {
+            s.observe("p1", "axpy", "n4096", 2.0e-3, 1.0e-3);
+        }
+        assert!(s.reset("p1", "axpy", "n4096"), "reset reports the flag it dropped");
+        assert!(!s.is_regressing("p1", "axpy", "n4096"));
+        assert!(!s.reset("p1", "axpy", "n4096"));
+    }
+
+    #[test]
+    fn keys_are_independent_and_bad_inputs_are_ignored() {
+        let mut s = Sentinel::new(SentinelConfig::default());
+        for _ in 0..6 {
+            s.observe("p1", "axpy", "n4096", 2.0e-3, 1.0e-3);
+            s.observe("p2", "axpy", "n4096", 1.0e-3, 1.0e-3);
+        }
+        assert!(s.is_regressing("p1", "axpy", "n4096"));
+        assert!(!s.is_regressing("p2", "axpy", "n4096"));
+        // Zero/negative costs carry no signal and must not panic.
+        let (reg, event) = s.observe("p3", "axpy", "n4096", 0.0, 1.0e-3);
+        assert!(!reg);
+        assert!(event.is_none());
+        let (_, event) = s.observe("p1", "axpy", "n4096", 1.0e-3, 0.0);
+        assert!(event.is_none());
+    }
+}

@@ -43,7 +43,7 @@
 //! snapshot is immutable, so a panicking writer can at worst leave the
 //! previous generation serving).
 
-use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
 use std::hash::Hash;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpListener;
@@ -53,6 +53,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::coordinator::ledger::LedgerDelta;
 use crate::coordinator::perfdb::{unix_now, DbEntry, Shard, ShardedDb};
 use crate::coordinator::platform::Fingerprint;
 use crate::coordinator::search::Exhaustive;
@@ -63,8 +64,10 @@ use crate::service::audit::{AuditEvent, AuditLog, ServeReason};
 use crate::service::faults::{self, InjectionPoint};
 use crate::service::protocol::{reply_err, reply_ok, Request};
 use crate::service::scheduler::{
-    CompleteOutcome, FailOutcome, TaskKind, TaskQueue, DEFAULT_LEASE_TTL_S,
+    CompleteOutcome, FailOutcome, StaleReason, TaskKind, TaskQueue, TuningTask,
+    DEFAULT_LEASE_TTL_S,
 };
+use crate::service::sentinel::{Sentinel, SentinelEvent};
 use crate::service::snapshot::{ServeSnapshot, ServedFrom};
 use crate::util::json::{self, Json};
 
@@ -236,6 +239,7 @@ struct Counters {
     conns_shed: AtomicU64,
     conns_closed_idle: AtomicU64,
     snapshot_publishes: AtomicU64,
+    regressions: AtomicU64,
 }
 
 /// Point-in-time snapshot of the daemon's counters (the serve-side
@@ -308,6 +312,19 @@ pub struct ServeStats {
     /// a live gauge, not a counter: pruning and operator cleanup lower
     /// it.
     pub shards_quarantined: u64,
+    /// Regressions the sentinel has confirmed since startup (each one
+    /// audited and answered with an evidence-driven retune task).
+    pub regressions: u64,
+    /// (platform, kernel, workload) keys currently flagged as
+    /// regressing — a live gauge; recovery and retunes lower it.
+    pub regressions_active: u64,
+    /// Cumulative tuning spend across the published snapshot's
+    /// ledgers, core-milliseconds (persistent: survives restarts with
+    /// the shards).
+    pub tuning_spend_ms: u64,
+    /// Cumulative realized benefit across the published snapshot's
+    /// ledgers, core-milliseconds.
+    pub tuning_benefit_ms: u64,
 }
 
 /// The daemon: shard store + published snapshot + scheduler +
@@ -340,6 +357,37 @@ pub struct Server {
     /// error counter but never fail the request being served: audit is
     /// evidence, not a write barrier.
     audit: OnceLock<Arc<AuditLog>>,
+    /// The regression sentinel over the live `record` stream (see
+    /// [`crate::service::sentinel`]).  Held only for the observation
+    /// itself — snapshot readers answer `regressing` lock-free from
+    /// the flag set baked into each published generation.
+    sentinel: Mutex<Sentinel>,
+    /// (platform, kernel) ledger cells already past break-even —
+    /// crossing-edge state so the `BreakEven` audit event fires once
+    /// per crossing, not once per record.  Seeded from the shards at
+    /// startup so a restart does not re-announce old crossings.
+    broke_even: Mutex<HashSet<(String, String)>>,
+}
+
+/// The ledger accrual one accepted record contributes: the caller's
+/// measured tuning spend, plus realized benefit — the default-vs-best
+/// gap times the invocation count this record stands for.
+fn ledger_delta(entry: &DbEntry, spend_ms: u64) -> Option<LedgerDelta> {
+    let gap_s = entry.baseline_time_s - entry.best_time_s;
+    let benefit_ms = if gap_s.is_finite() && gap_s > 0.0 {
+        (gap_s * entry.evaluations as f64 * 1000.0).round() as u64
+    } else {
+        0
+    };
+    let at = if entry.recorded_at > 0 { entry.recorded_at } else { unix_now() };
+    let delta = LedgerDelta {
+        kernel: entry.kernel.clone(),
+        spend_ms,
+        benefit_ms,
+        invocations: entry.evaluations,
+        at,
+    };
+    (delta.spend_ms > 0 || delta.benefit_ms > 0 || delta.invocations > 0).then_some(delta)
 }
 
 impl Server {
@@ -347,6 +395,20 @@ impl Server {
     pub fn new(db: ShardedDb, host: Fingerprint, opts: ServeOpts) -> Server {
         let host_key = host.key();
         let initial = ServeSnapshot::build(db.all_shards().unwrap_or_default(), 0);
+        // Ledger cells already past break-even crossed in some earlier
+        // process; announcing them again would duplicate the audit
+        // record of the crossing.
+        let broke_even: HashSet<(String, String)> = initial
+            .shards()
+            .iter()
+            .flat_map(|s| {
+                s.ledger
+                    .cells
+                    .iter()
+                    .filter(|(_, c)| c.break_even())
+                    .map(move |(k, _)| (s.platform_key.clone(), k.clone()))
+            })
+            .collect();
         Server {
             db,
             host,
@@ -359,6 +421,8 @@ impl Server {
             counters: Counters::default(),
             shutdown: AtomicBool::new(false),
             audit: OnceLock::new(),
+            sentinel: Mutex::new(Sentinel::default()),
+            broke_even: Mutex::new(broke_even),
         }
     }
 
@@ -446,7 +510,9 @@ impl Server {
         if let Some(shard) = fresh {
             shards.push(shard);
         }
-        Ok(self.install(ServeSnapshot::build(shards, prev.generation() + 1)))
+        let next = ServeSnapshot::build(shards, prev.generation() + 1)
+            .with_regressions(self.regressing_set());
+        Ok(self.install(next))
     }
 
     /// Rebuild the snapshot from the whole shard directory.  This is
@@ -461,7 +527,45 @@ impl Server {
         let shards = self.db.all_shards()?;
         obs::metrics().shard_read_us.record(read_started.elapsed().as_micros() as u64);
         let generation = self.snapshot().generation() + 1;
-        Ok(self.install(ServeSnapshot::build(shards, generation)))
+        let next =
+            ServeSnapshot::build(shards, generation).with_regressions(self.regressing_set());
+        Ok(self.install(next))
+    }
+
+    /// Currently flagged sentinel keys, as the set baked into every
+    /// published snapshot (readers answer `regressing` from it without
+    /// touching the sentinel lock).
+    fn regressing_set(&self) -> HashSet<(String, String, String)> {
+        lock(&self.sentinel).regressing_keys().into_iter().collect()
+    }
+
+    /// One-shot break-even edge detection: after a write publishes,
+    /// audit a `BreakEven` event iff the (platform, kernel) ledger
+    /// cell is past break-even and was not already known to be.
+    fn note_break_even(&self, platform: &str, kernel: &str) {
+        let snap = self.snapshot();
+        let Some(cell) = snap
+            .shards()
+            .iter()
+            .find(|s| s.platform_key == platform)
+            .and_then(|s| s.ledger.cell(kernel))
+        else {
+            return;
+        };
+        if !cell.break_even() {
+            // A cell can sink back under water (new spend): forget the
+            // crossing so the *next* one is announced again.
+            lock(&self.broke_even).remove(&(platform.to_string(), kernel.to_string()));
+            return;
+        }
+        if lock(&self.broke_even).insert((platform.to_string(), kernel.to_string())) {
+            self.audit(AuditEvent::BreakEven {
+                platform: platform.to_string(),
+                kernel: kernel.to_string(),
+                spend_ms: cell.spend_ms,
+                benefit_ms: cell.benefit_ms,
+            });
+        }
     }
 
     /// Pack the published snapshot into an offline decision bundle
@@ -502,6 +606,16 @@ impl Server {
                     .collect::<BTreeMap<String, u64>>(),
             )
         };
+        // Economics come from the published snapshot's ledgers, not a
+        // process counter — spend and benefit persist with the shards,
+        // so a restarted daemon still reports lifetime totals.
+        let snap = self.snapshot();
+        let (mut tuning_spend_ms, mut tuning_benefit_ms) = (0u64, 0u64);
+        for shard in snap.shards() {
+            let (s, b) = shard.ledger.totals();
+            tuning_spend_ms = tuning_spend_ms.saturating_add(s);
+            tuning_benefit_ms = tuning_benefit_ms.saturating_add(b);
+        }
         ServeStats {
             lookups: self.counters.lookups.load(Ordering::Relaxed),
             deploys: self.counters.deploys.load(Ordering::Relaxed),
@@ -524,11 +638,15 @@ impl Server {
             tasks_pending,
             tasks_inflight,
             queue_depth,
-            lru_len: self.snapshot().index_len() as u64,
-            snapshot_gen: self.snapshot().generation(),
+            lru_len: snap.index_len() as u64,
+            snapshot_gen: snap.generation(),
             snapshot_publishes: self.counters.snapshot_publishes.load(Ordering::Relaxed),
             stale_locks_reaped: crate::coordinator::perfdb::stale_locks_reaped(),
             shards_quarantined: self.db.quarantined_count().unwrap_or(0),
+            regressions: self.counters.regressions.load(Ordering::Relaxed),
+            regressions_active: lock(&self.sentinel).active() as u64,
+            tuning_spend_ms,
+            tuning_benefit_ms,
         }
     }
 
@@ -687,14 +805,39 @@ impl Server {
                 });
                 Ok(reply)
             }
-            Request::Record { entry, fingerprint, request_id } => {
+            Request::Record { entry, fingerprint, request_id, spend_ms } => {
                 self.deduped(request_id, || {
                     self.bump(&self.counters.records);
                     let entry = (**entry).clone();
                     let (platform, kernel, tag) =
                         (entry.platform_key.clone(), entry.kernel.clone(), entry.tag.clone());
                     let config = entry.best_config_id.clone();
-                    self.db.record(fingerprint.as_ref(), entry)?;
+                    // Sentinel: judge the observed cost against the
+                    // best the *previous* generation had been serving
+                    // — before this record can move the bar.  A record
+                    // that improves the frontier instead resets the
+                    // key: its old ratios were measured against a
+                    // baseline that just died.
+                    let prior_best = self
+                        .snapshot()
+                        .lookup(&platform, &kernel, &tag)
+                        .map(|e| e.best_time_s);
+                    let (regressing, transition) = match prior_best {
+                        Some(stored) if entry.best_time_s < stored => {
+                            lock(&self.sentinel).reset(&platform, &kernel, &tag);
+                            (false, None)
+                        }
+                        Some(stored) => lock(&self.sentinel).observe(
+                            &platform,
+                            &kernel,
+                            &tag,
+                            entry.best_time_s,
+                            stored,
+                        ),
+                        None => (false, None),
+                    };
+                    let delta = ledger_delta(&entry, spend_ms.unwrap_or(0));
+                    self.db.record_with_ledger(fingerprint.as_ref(), entry, delta)?;
                     let generation = self.publish_platform(&platform)?;
                     self.audit(AuditEvent::RecordAccepted {
                         platform: platform.clone(),
@@ -702,16 +845,72 @@ impl Server {
                         tag: tag.clone(),
                         config,
                     });
+                    if let Some(SentinelEvent::Confirmed {
+                        ratio_pm,
+                        window_n,
+                        window_mean_pm,
+                        window_max_pm,
+                    }) = transition
+                    {
+                        // Confirmed drift: audit the evidence, count
+                        // it, and answer with an evidence-driven
+                        // retune rather than waiting for the TTL scan.
+                        self.bump(&self.counters.regressions);
+                        self.audit(AuditEvent::Regression {
+                            platform: platform.clone(),
+                            kernel: kernel.clone(),
+                            workload: tag.clone(),
+                            ratio_pm,
+                            window_n,
+                            window_mean_pm,
+                            window_max_pm,
+                        });
+                        let task = TuningTask {
+                            kind: TaskKind::Retune,
+                            platform_key: platform.clone(),
+                            kernel: kernel.clone(),
+                            tag: Some(tag.clone()),
+                            reason: StaleReason::Regression { ratio_pm },
+                            attempts: 0,
+                        };
+                        if lock(&self.scheduler).enqueue(task) {
+                            self.bump(&self.counters.tasks_queued);
+                            self.audit(AuditEvent::TaskEnqueued {
+                                kind: TaskKind::Retune.as_str().to_string(),
+                                platform: platform.clone(),
+                                kernel: kernel.clone(),
+                                tag: Some(tag.clone()),
+                                reason: "regression".into(),
+                            });
+                        }
+                    }
+                    self.note_break_even(&platform, &kernel);
                     Ok(reply_ok(vec![
                         ("recorded", Json::Bool(true)),
+                        ("regressing", Json::Bool(regressing)),
                         ("gen", json::int(generation as i64)),
                     ]))
                 })
             }
-            Request::RecordPortfolio { platform, portfolio, fingerprint } => {
+            Request::RecordPortfolio { platform, portfolio, fingerprint, spend_ms } => {
                 self.bump(&self.counters.records);
                 let platform = platform.as_deref().unwrap_or(&self.host_key);
-                self.db.record_portfolio(platform, fingerprint.as_ref(), (**portfolio).clone())?;
+                // A portfolio rebuild reports pure spend: the sweep's
+                // cost accrues now, its benefit only as live records
+                // arrive against the rebuilt frontier.
+                let delta = spend_ms.filter(|ms| *ms > 0).map(|ms| LedgerDelta {
+                    kernel: portfolio.kernel.clone(),
+                    spend_ms: ms,
+                    benefit_ms: 0,
+                    invocations: 0,
+                    at: unix_now(),
+                });
+                self.db.record_portfolio_with_ledger(
+                    platform,
+                    fingerprint.as_ref(),
+                    (**portfolio).clone(),
+                    delta,
+                )?;
                 let generation = self.publish_platform(platform)?;
                 self.audit(AuditEvent::RecordAccepted {
                     platform: platform.to_string(),
@@ -719,12 +918,16 @@ impl Server {
                     tag: "*".into(),
                     config: format!("portfolio[{}]", portfolio.items.len()),
                 });
+                self.note_break_even(platform, &portfolio.kernel);
                 Ok(reply_ok(vec![
                     ("recorded", Json::Bool(true)),
                     ("platform", json::s(platform)),
                     ("kernel", json::s(&portfolio.kernel)),
                     ("gen", json::int(generation as i64)),
                 ]))
+            }
+            Request::Report { platform } => {
+                Ok(self.snapshot().report_reply(platform.as_deref()))
             }
             Request::Stats => {
                 Ok(reply_ok(vec![(
@@ -1145,16 +1348,35 @@ impl Server {
                 let mut tuner = Tuner::new(&registry);
                 tuner.batch = batch.max(1);
                 let mut strategy = Exhaustive::new();
+                let tune_started = std::time::Instant::now();
                 match tuner.tune(&task.kernel, &tag, &mut strategy, usize::MAX) {
                     Ok(outcome) => {
+                        // Ledger spend: the tuner's own accounting of
+                        // compile + measure time, falling back to wall
+                        // clock when the stub runtime reports none.
+                        let worked_ms = outcome.stats.compile_ms + outcome.stats.measure_ms;
+                        let spend_ms = if worked_ms.is_finite() && worked_ms >= 1.0 {
+                            worked_ms.round() as u64
+                        } else {
+                            (tune_started.elapsed().as_millis() as u64).max(1)
+                        };
                         let entry = tuner.entry_for(&outcome);
                         let (platform, kernel, tag) =
                             (entry.platform_key.clone(), entry.kernel.clone(), entry.tag.clone());
                         let config = entry.best_config_id.clone();
-                        if self.db.record(Some(&outcome.platform), entry).is_ok() {
+                        let delta = ledger_delta(&entry, spend_ms);
+                        if self
+                            .db
+                            .record_with_ledger(Some(&outcome.platform), entry, delta)
+                            .is_ok()
+                        {
+                            // A fresh tune is a new baseline: the
+                            // sentinel's old ratios no longer apply.
+                            lock(&self.sentinel).reset(&platform, &kernel, &tag);
                             if self.publish_platform(&platform).is_err() {
                                 self.bump(&self.counters.errors);
                             }
+                            self.note_break_even(&platform, &kernel);
                             self.bump(&self.counters.retunes);
                             self.audit(AuditEvent::RecordAccepted {
                                 platform: platform.clone(),
@@ -1356,8 +1578,14 @@ impl Server {
     pub fn prometheus_text(&self) -> String {
         // The live-depth fields of `ServeStats`; everything else in the
         // snapshot is a monotonic counter.
-        const GAUGES: &[&str] =
-            &["tasks_pending", "tasks_inflight", "lru_len", "snapshot_gen", "shards_quarantined"];
+        const GAUGES: &[&str] = &[
+            "tasks_pending",
+            "tasks_inflight",
+            "lru_len",
+            "snapshot_gen",
+            "shards_quarantined",
+            "regressions_active",
+        ];
         let stats = crate::report::stats::serve_stats_json(&self.stats());
         let mut out = String::new();
         if let Some(map) = stats.as_obj() {
@@ -1542,6 +1770,7 @@ mod tests {
             request_id: None,
             entry: Box::new(entry("p1", "axpy", "n4096", "b256_u1")),
             fingerprint: Some(fp()),
+            spend_ms: None,
         };
         assert_eq!(srv.handle_request(&rec).get("ok").and_then(Json::as_bool), Some(true));
         let look = Request::Lookup {
@@ -1583,6 +1812,7 @@ mod tests {
             request_id: None,
             entry: Box::new(entry("p1", "axpy", "n4096", "fresh")),
             fingerprint: None,
+            spend_ms: None,
         };
         srv.handle_request(&rec);
         assert_eq!(srv.handle_request(&look).get("found").and_then(Json::as_bool), Some(true));
@@ -1603,11 +1833,13 @@ mod tests {
             request_id: None,
             entry: Box::new(entry("near-p", "axpy", "n4096", "near_cfg")),
             fingerprint: Some(near_fp),
+            spend_ms: None,
         });
         srv.handle_request(&Request::Record {
             request_id: None,
             entry: Box::new(entry("far-p", "axpy", "n4096", "far_cfg")),
             fingerprint: Some(far_fp),
+            spend_ms: None,
         });
         let reply = srv.handle_request(&Request::Deploy {
             platform: Some("fresh-platform".into()),
@@ -1645,6 +1877,7 @@ mod tests {
             request_id: None,
             entry: Box::new(entry("arm-target", "dot", "n4096", "unrelated")),
             fingerprint: Some(arm.clone()),
+            spend_ms: None,
         });
         // Candidate pool: an ARM sibling and an x86 box, both tuned for
         // the requested kernel.
@@ -1654,11 +1887,13 @@ mod tests {
             request_id: None,
             entry: Box::new(entry("arm-sibling", "axpy", "n4096", "arm_cfg")),
             fingerprint: Some(arm_sibling),
+            spend_ms: None,
         });
         srv.handle_request(&Request::Record {
             request_id: None,
             entry: Box::new(entry("x86-box", "axpy", "n4096", "x86_cfg")),
             fingerprint: Some(fp()), // avx2 x86 — matches the *requester*
+            spend_ms: None,
         });
         // Query made on behalf of arm-target from an x86 machine: the
         // requester's fingerprint must NOT drive the ranking.
@@ -1685,6 +1920,7 @@ mod tests {
             request_id: None,
             entry: Box::new(entry("p1", "axpy", "n4096", "mine")),
             fingerprint: None,
+            spend_ms: None,
         });
         let reply = srv.handle_request(&Request::Deploy {
             platform: Some("p1".into()),
@@ -1804,6 +2040,7 @@ mod tests {
             request_id: None,
             entry: Box::new(entry("p1", "axpy", "n4096", "whatever")),
             fingerprint: Some(fp()),
+            spend_ms: None,
         });
         let _ = srv.handle_request(&req);
         assert_eq!(
@@ -2053,6 +2290,7 @@ mod tests {
             platform: Some("p1".into()),
             portfolio: Box::new(fresh),
             fingerprint: Some(fp()),
+            spend_ms: None,
         });
         assert_eq!(reply.get("recorded").and_then(Json::as_bool), Some(true));
         // ...and the very next portfolio op serves the fresh build —
@@ -2088,6 +2326,7 @@ mod tests {
             platform: Some(platform.clone()),
             portfolio: Box::new(test_portfolio("gemm")),
             fingerprint: Some(fp()),
+            spend_ms: None,
         });
         let reply = srv.handle_request(&Request::TaskComplete { lease_id, request_id: None });
         assert_eq!(reply.get("settled").and_then(Json::as_bool), Some(true));
@@ -2103,6 +2342,7 @@ mod tests {
             request_id: Some("cli-1".into()),
             entry: Box::new(entry("p1", "axpy", "n4096", "b256_u1")),
             fingerprint: None,
+            spend_ms: None,
         };
         let first = srv.handle_request(&rec);
         assert_eq!(first.get("ok").and_then(Json::as_bool), Some(true));
@@ -2118,6 +2358,7 @@ mod tests {
             request_id: Some("cli-2".into()),
             entry: Box::new(entry("p1", "axpy", "n8192", "b128_u2")),
             fingerprint: None,
+            spend_ms: None,
         };
         srv.handle_request(&other);
         assert_eq!(srv.stats().records, 2);

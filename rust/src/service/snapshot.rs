@@ -19,7 +19,7 @@
 //! round-trips, so reply shaping lives *here*, shared by both paths —
 //! offline answers are identical to live ones by construction.
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::{BTreeMap, HashMap, HashSet};
 use std::time::Instant;
 
 use crate::coordinator::perfdb::{DbEntry, Shard};
@@ -68,6 +68,10 @@ pub struct ServeSnapshot {
     /// platform → stored fingerprint (drives transfer ranking and
     /// portfolio selection features).
     fingerprints: HashMap<String, Fingerprint>,
+    /// (platform, kernel, workload) keys the regression sentinel has
+    /// flagged as of this publish — the serve-path view of live drift
+    /// (record acks echo it; the `report` op lists it).
+    regressing: HashSet<(String, String, String)>,
 }
 
 impl ServeSnapshot {
@@ -91,7 +95,36 @@ impl ServeSnapshot {
                 fingerprints.insert(shard.platform_key.clone(), fp.clone());
             }
         }
-        ServeSnapshot { generation, shards, frontier, portfolios, fingerprints }
+        ServeSnapshot {
+            generation,
+            shards,
+            frontier,
+            portfolios,
+            fingerprints,
+            regressing: HashSet::new(),
+        }
+    }
+
+    /// The same snapshot with the sentinel's currently flagged keys
+    /// attached (the daemon passes its live set at every publish; a
+    /// plain [`build`](Self::build) — tests, offline bundles — starts
+    /// with none).
+    pub fn with_regressions(
+        mut self,
+        regressing: HashSet<(String, String, String)>,
+    ) -> ServeSnapshot {
+        self.regressing = regressing;
+        self
+    }
+
+    /// Whether the sentinel had flagged (platform, kernel, workload)
+    /// as regressing when this snapshot was published.
+    pub fn is_regressing(&self, platform: &str, kernel: &str, tag: &str) -> bool {
+        self.regressing.contains(&(
+            platform.to_string(),
+            kernel.to_string(),
+            tag.to_string(),
+        ))
     }
 
     /// The monotone publish counter this snapshot was stamped with.
@@ -280,6 +313,93 @@ impl ServeSnapshot {
             ),
         }
     }
+
+    /// Shape a `report` reply: the core-hour ledger (per-platform,
+    /// per-kernel spend / benefit / net / break-even) plus the active
+    /// regressions, all from this snapshot's shards — so a live daemon
+    /// and an offline bundle answer identically by construction.
+    pub fn report_reply(&self, platform: Option<&str>) -> Json {
+        let ms_to_s = |ms: f64| ms / 1000.0;
+        let mut platforms = Vec::new();
+        let (mut spend_ms, mut benefit_ms) = (0u64, 0u64);
+        let (mut kernels_n, mut break_even_n) = (0u64, 0u64);
+        for shard in &self.shards {
+            if platform.is_some_and(|p| p != shard.platform_key) || shard.ledger.is_empty() {
+                continue;
+            }
+            let mut kernels = Vec::new();
+            for (kernel, cell) in &shard.ledger.cells {
+                let regressing = self
+                    .regressing
+                    .iter()
+                    .any(|(p, k, _)| *p == shard.platform_key && k == kernel);
+                spend_ms += cell.spend_ms;
+                benefit_ms += cell.benefit_ms;
+                kernels_n += 1;
+                if cell.break_even() {
+                    break_even_n += 1;
+                }
+                kernels.push(json::obj(vec![
+                    ("kernel", json::s(kernel)),
+                    ("spend_core_seconds", json::num(ms_to_s(cell.spend_ms as f64))),
+                    ("benefit_core_seconds", json::num(ms_to_s(cell.benefit_ms as f64))),
+                    ("net_core_seconds", json::num(ms_to_s(cell.net_ms() as f64))),
+                    ("invocations", json::int(cell.invocations as i64)),
+                    ("tunes", json::int(cell.tunes as i64)),
+                    ("break_even", Json::Bool(cell.break_even())),
+                    (
+                        "break_even_eta_s",
+                        cell.break_even_eta_s().map(|s| json::int(s as i64)).unwrap_or(Json::Null),
+                    ),
+                    ("regressing", Json::Bool(regressing)),
+                ]));
+            }
+            platforms.push(json::obj(vec![
+                ("platform", json::s(&shard.platform_key)),
+                ("kernels", Json::Arr(kernels)),
+            ]));
+        }
+        let mut flagged: Vec<&(String, String, String)> = self
+            .regressing
+            .iter()
+            .filter(|(p, _, _)| platform.is_none_or(|want| want == p))
+            .collect();
+        flagged.sort();
+        let regressions: Vec<Json> = flagged
+            .into_iter()
+            .map(|(p, k, t)| {
+                json::obj(vec![
+                    ("platform", json::s(p)),
+                    ("kernel", json::s(k)),
+                    ("workload", json::s(t)),
+                ])
+            })
+            .collect();
+        reply_ok(vec![
+            (
+                "report",
+                json::obj(vec![
+                    ("platforms", Json::Arr(platforms)),
+                    (
+                        "totals",
+                        json::obj(vec![
+                            ("spend_core_seconds", json::num(ms_to_s(spend_ms as f64))),
+                            ("benefit_core_seconds", json::num(ms_to_s(benefit_ms as f64))),
+                            (
+                                "net_core_seconds",
+                                json::num(ms_to_s(benefit_ms as f64 - spend_ms as f64)),
+                            ),
+                            ("kernels", json::int(kernels_n as i64)),
+                            ("break_even", json::int(break_even_n as i64)),
+                            ("regressions_active", json::int(regressions.len() as i64)),
+                        ]),
+                    ),
+                    ("regressions", Json::Arr(regressions)),
+                ]),
+            ),
+            ("gen", json::int(self.generation as i64)),
+        ])
+    }
 }
 
 /// Compact wire view of a selected portfolio member (the part a deploy
@@ -297,6 +417,7 @@ pub(crate) fn portfolio_item_json(item: &PortfolioItem) -> Json {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::ledger::Ledger;
     use crate::coordinator::perfdb::unix_now;
 
     fn fp(simd: &[&str]) -> Fingerprint {
@@ -328,7 +449,7 @@ mod tests {
     }
 
     fn shard(platform: &str, fingerprint: Option<Fingerprint>, entries: Vec<DbEntry>) -> Shard {
-        Shard { platform_key: platform.into(), fingerprint, entries, portfolios: Vec::new() }
+        Shard { platform_key: platform.into(), fingerprint, entries, portfolios: Vec::new(), ledger: Ledger::default() }
     }
 
     #[test]

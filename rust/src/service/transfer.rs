@@ -182,7 +182,7 @@ mod tests {
     }
 
     fn shard(key: &str, fp: Option<Fingerprint>, entries: Vec<DbEntry>) -> Shard {
-        Shard { platform_key: key.into(), fingerprint: fp, entries, portfolios: Vec::new() }
+        Shard { platform_key: key.into(), fingerprint: fp, entries, portfolios: Vec::new(), ledger: Ledger::default() }
     }
 
     #[test]
@@ -281,6 +281,7 @@ mod tests {
     }
 
     fn portfolio(kernel: &str, retained: f64) -> Portfolio {
+        use crate::coordinator::ledger::Ledger;
         use crate::coordinator::portfolio::{PortfolioItem, FEATURE_NAMES};
         Portfolio {
             kernel: kernel.into(),

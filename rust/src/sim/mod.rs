@@ -29,6 +29,17 @@
 //!   scheme — p50/p95/p99 are bucket upper bounds, ≤25% above the true
 //!   value; a local instance, not the process registry, keeps two runs
 //!   of the same seed bit-identical).
+//! - **regression detection latency**: a seeded subset of platforms
+//!   suffers a mid-run hardware slowdown; periodic telemetry feeds a
+//!   sim-local [`Sentinel`] (same thresholds as the daemon) and the
+//!   report carries sim-seconds from each injected slowdown to its
+//!   confirmed detection — plus a false-positive count the bench gates
+//!   at exactly zero (stationary platforms only ever report ±5% noise,
+//!   which must never fire).
+//! - **tuning economics**: every simulated execution bills its
+//!   core-milliseconds into the real shard [`Ledger`] (write-through,
+//!   like entries), so the run ends with a spend/benefit total the
+//!   bench can assert is non-trivial and consistent with the mirror.
 //!
 //! Every consequential decision goes through a real [`AuditLog`]
 //! stamped with the sim clock, and [`run`] verifies the chain before
@@ -40,6 +51,7 @@ use std::path::PathBuf;
 
 use anyhow::{Context, Result};
 
+use crate::coordinator::ledger::{Ledger, LedgerDelta};
 use crate::coordinator::perfdb::{DbEntry, Shard, ShardedDb};
 use crate::coordinator::platform::Fingerprint;
 use crate::coordinator::portfolio::{Portfolio, PortfolioItem, FEATURE_NAMES};
@@ -47,8 +59,9 @@ use crate::obs::Histogram;
 use crate::service::audit::{verify_log, AuditEvent, AuditLog, ServeReason};
 use crate::service::faults::{FaultPlan, InjectionPoint};
 use crate::service::scheduler::{
-    CompleteOutcome, TaskIdentity, TaskKind, TaskQueue, TuningTask,
+    CompleteOutcome, StaleReason, TaskIdentity, TaskKind, TaskQueue, TuningTask,
 };
+use crate::service::sentinel::{Sentinel, SentinelConfig, SentinelEvent};
 use crate::service::transfer;
 use crate::util::json::{self, Json};
 use crate::util::rng::Rng;
@@ -78,6 +91,15 @@ pub struct SimConfig {
     /// How many platforms drift (fingerprint changes under a stable
     /// key) during the run.
     pub drift_platforms: usize,
+    /// How many platforms suffer a mid-run hardware slowdown (served
+    /// configs genuinely get slower; the sentinel must catch it).
+    pub slow_platforms: usize,
+    /// Slowdown severity, permille (1700 = costs inflate 1.7×) —
+    /// safely past the sentinel's 1300‰ firing bar.
+    pub slow_factor_pm: u64,
+    /// Cadence of the fleet's cost telemetry: every platform reports
+    /// one observed cost per tracked (kernel, workload) this often.
+    pub telemetry_every_s: u64,
     /// Per-lease probability that the leasing worker crashes before
     /// settling (routed through the real [`FaultPlan`]).
     pub crash_prob: f64,
@@ -103,6 +125,9 @@ impl SimConfig {
             scan_every_s: 60,
             traffic_per_s: 2.0,
             drift_platforms: 10,
+            slow_platforms: 10,
+            slow_factor_pm: 1700,
+            telemetry_every_s: 30,
             crash_prob: 0.05,
             db_dir: root.join("shards"),
             audit_path: root.join("audit.log"),
@@ -117,6 +142,7 @@ impl SimConfig {
             workers: 4,
             duration_s: 900,
             drift_platforms: 2,
+            slow_platforms: 5,
             ..SimConfig::fleet(root, seed)
         }
     }
@@ -170,6 +196,27 @@ pub struct SimReport {
     pub staleness_p99_s: u64,
     /// Entries appended to the audit log (verified before reporting).
     pub audit_entries: u64,
+    /// Platforms the run slowed down mid-flight.
+    pub slow_platforms: usize,
+    /// Sentinel confirmations (one per key that crossed the bar).
+    pub regressions_detected: u64,
+    /// Confirmations on platforms that were never slowed — the bench
+    /// gates this at exactly zero.
+    pub regression_false_positives: u64,
+    /// Mean sim-seconds from an injected slowdown to its platform's
+    /// first confirmed detection (0 when nothing was detected).
+    pub detection_latency_mean_s: f64,
+    /// Worst detection latency across slowed platforms, sim-seconds.
+    pub detection_latency_max_s: u64,
+    /// Slowed platforms whose regression was never confirmed (their
+    /// entries were re-tuned on the slow hardware before the sentinel
+    /// accumulated enough evidence — stored best already honest).
+    pub slowdowns_undetected: u64,
+    /// Core-milliseconds of tuning spend accumulated in the on-disk
+    /// ledgers (write-through verified against the mirror).
+    pub ledger_spend_ms: u64,
+    /// Core-milliseconds of realized benefit in the on-disk ledgers.
+    pub ledger_benefit_ms: u64,
 }
 
 impl SimReport {
@@ -199,6 +246,17 @@ impl SimReport {
             ("staleness_p95_s", json::int(self.staleness_p95_s as i64)),
             ("staleness_p99_s", json::int(self.staleness_p99_s as i64)),
             ("audit_entries", json::int(self.audit_entries as i64)),
+            ("slow_platforms", json::int(self.slow_platforms as i64)),
+            ("regressions_detected", json::int(self.regressions_detected as i64)),
+            (
+                "regression_false_positives",
+                json::int(self.regression_false_positives as i64),
+            ),
+            ("detection_latency_mean_s", json::num(self.detection_latency_mean_s)),
+            ("detection_latency_max_s", json::int(self.detection_latency_max_s as i64)),
+            ("slowdowns_undetected", json::int(self.slowdowns_undetected as i64)),
+            ("ledger_spend_ms", json::int(self.ledger_spend_ms as i64)),
+            ("ledger_benefit_ms", json::int(self.ledger_benefit_ms as i64)),
         ])
     }
 }
@@ -206,7 +264,7 @@ impl SimReport {
 /// What one simulated worker is doing.
 enum WorkerState {
     Idle,
-    Busy { lease_id: u64, task: TuningTask, done_at: u64 },
+    Busy { lease_id: u64, task: TuningTask, started: u64, done_at: u64 },
     Crashed { until: u64 },
 }
 
@@ -342,6 +400,18 @@ struct Fleet<'a> {
     workers: Vec<WorkerState>,
     host: Fingerprint,
     drifts: BTreeMap<u64, Vec<usize>>,
+    /// Slowdown schedule: sim-second → platform indexes that get slow.
+    slow_events: BTreeMap<u64, Vec<usize>>,
+    /// Platforms currently slow and when each slowdown began.
+    slow_since: BTreeMap<usize, u64>,
+    /// Slowed platforms whose regression has been confirmed (first
+    /// confirmation per platform is the one that counts for latency).
+    detected: BTreeSet<usize>,
+    detection_latencies: Vec<u64>,
+    /// The daemon's detector, run sim-locally on the telemetry stream
+    /// (same thresholds, so detection ticks match what a live fleet
+    /// would see).
+    sentinel: Sentinel,
     report: SimReport,
     /// Served-entry ages, in the shared telemetry bucket scheme.  A
     /// local instance — recording into the process-global registry
@@ -395,6 +465,7 @@ impl<'a> Fleet<'a> {
                 fingerprint: Some(fp.clone()),
                 entries,
                 portfolios: Vec::new(),
+                ledger: Ledger::default(),
             };
             for (k, t) in &pairs {
                 if k == "gemm" {
@@ -427,11 +498,26 @@ impl<'a> Fleet<'a> {
             drifts.entry(at).or_default().push(rng.gen_range(cfg.platforms));
         }
 
+        // Slowdown schedule: mid-run (after the cold backlog has
+        // mostly refreshed, so most slowed entries were tuned on the
+        // fast hardware), staggered, distinct platforms.
+        let mut slow_events: BTreeMap<u64, Vec<usize>> = BTreeMap::new();
+        let mut slowed = BTreeSet::new();
+        for s in 0..cfg.slow_platforms.min(cfg.platforms) {
+            let at = start + cfg.duration_s / 2 + s as u64;
+            let mut i = rng.gen_range(cfg.platforms);
+            while !slowed.insert(i) {
+                i = (i + 1) % cfg.platforms;
+            }
+            slow_events.entry(at).or_default().push(i);
+        }
+
         let report = SimReport {
             seed: cfg.seed,
             platforms: cfg.platforms,
             workers: cfg.workers,
             duration_s: cfg.duration_s,
+            slow_platforms: slowed.len(),
             ..SimReport::default()
         };
         Ok(Fleet {
@@ -448,6 +534,11 @@ impl<'a> Fleet<'a> {
             workers: (0..cfg.workers).map(|_| WorkerState::Idle).collect(),
             host,
             drifts,
+            slow_events,
+            slow_since: BTreeMap::new(),
+            detected: BTreeSet::new(),
+            detection_latencies: Vec::new(),
+            sentinel: Sentinel::new(SentinelConfig::default()),
             report,
             staleness: Histogram::new(),
             executions_started: 0,
@@ -469,8 +560,16 @@ impl<'a> Fleet<'a> {
         fp.num_cpus *= 2;
         self.meta[i].fp = fp.clone();
         let key = self.mirror[i].platform_key.clone();
-        let marker =
+        let mut marker =
             synth_entry(&key, "axpy", "n4096", &format!("drift_t{now}"), now, &mut self.rng);
+        // A drift marker measured on an already-slowed machine reports
+        // the machine as it is.
+        if self.slow_since.contains_key(&i) {
+            let factor = self.cfg.slow_factor_pm as f64 / 1000.0;
+            marker.best_time_s *= factor;
+            marker.baseline_time_s *= factor;
+            marker.reference_time_s *= factor;
+        }
         self.db.record(Some(&fp), marker.clone())?;
         self.audit(
             now,
@@ -488,8 +587,9 @@ impl<'a> Fleet<'a> {
 
     /// One finished execution reports back: settle the lease and, if
     /// this worker won, refresh the task's data (write-through to the
-    /// mirror and the real store).
-    fn finish(&mut self, task: &TuningTask, lease_id: u64, now: u64) -> Result<()> {
+    /// mirror and the real store) and bill the execution's
+    /// core-milliseconds into the platform's ledger.
+    fn finish(&mut self, task: &TuningTask, lease_id: u64, started: u64, now: u64) -> Result<()> {
         self.report.executions += 1;
         match self.queue.complete(lease_id) {
             CompleteOutcome::Settled => {}
@@ -531,6 +631,19 @@ impl<'a> Fleet<'a> {
                 }
             }
         }
+        // A task executed on slowed hardware produces honestly slower
+        // results — the retuned best reflects the machine as it is
+        // now, which is exactly what stops the sentinel re-firing on
+        // the refreshed entry.
+        if let Some(&slow_at) = self.slow_since.get(&idx) {
+            debug_assert!(now >= slow_at);
+            let factor = self.cfg.slow_factor_pm as f64 / 1000.0;
+            for e in &mut fresh {
+                e.best_time_s *= factor;
+                e.baseline_time_s *= factor;
+                e.reference_time_s *= factor;
+            }
+        }
         if task.kind == TaskKind::PortfolioRebuild {
             let p = synth_portfolio(now, &mut self.rng);
             self.db.record_portfolio(&task.platform_key, Some(&fp), p.clone())?;
@@ -538,9 +651,47 @@ impl<'a> Fleet<'a> {
             shard.portfolios.retain(|q| q.kernel != p.kernel);
             shard.portfolios.push(p);
         }
-        if !fresh.is_empty() {
-            self.db.record_many(&task.platform_key, Some(&fp), fresh.clone())?;
+        // Ledger: the whole execution is spend, split evenly across
+        // the records it produced; each record's benefit is the same
+        // gap × invocations the daemon books (see server::ledger_delta).
+        let spend_total_ms = now.saturating_sub(started).max(1) * 1000;
+        if fresh.is_empty() {
+            let delta = LedgerDelta {
+                kernel: task.kernel.clone(),
+                spend_ms: spend_total_ms,
+                benefit_ms: 0,
+                invocations: 0,
+                at: now,
+            };
+            self.db.apply_ledger(&task.platform_key, vec![delta.clone()])?;
+            self.mirror[idx].ledger.apply(&delta);
+        } else {
+            let deltas: Vec<LedgerDelta> = fresh
+                .iter()
+                .map(|e| LedgerDelta {
+                    kernel: e.kernel.clone(),
+                    spend_ms: (spend_total_ms / fresh.len() as u64).max(1),
+                    benefit_ms: ((e.baseline_time_s - e.best_time_s).max(0.0)
+                        * e.evaluations as f64
+                        * 1000.0)
+                        .round() as u64,
+                    invocations: e.evaluations,
+                    at: now,
+                })
+                .collect();
+            self.db.record_many_with_ledger(
+                &task.platform_key,
+                Some(&fp),
+                fresh.clone(),
+                deltas.clone(),
+            )?;
+            for d in &deltas {
+                self.mirror[idx].ledger.apply(d);
+            }
             for e in &fresh {
+                // The old ratios were measured against a baseline this
+                // record just replaced.
+                self.sentinel.reset(&e.platform_key, &e.kernel, &e.tag);
                 self.audit(
                     now,
                     AuditEvent::RecordAccepted {
@@ -552,6 +703,101 @@ impl<'a> Fleet<'a> {
                 )?;
             }
             self.mirror[idx].entries.extend(fresh);
+        }
+        Ok(())
+    }
+
+    /// The fleet's cost telemetry: every platform reports one observed
+    /// cost per tracked (kernel, workload) against the entry the store
+    /// is serving it.  Healthy platforms observe ±5% noise; a slowed
+    /// platform running a config tuned *before* its slowdown observes
+    /// the injected factor — the signal the sentinel must confirm
+    /// (and stationary noise must never let it).
+    fn telemetry(&mut self, now: u64) -> Result<()> {
+        for i in 0..self.cfg.platforms {
+            let pairs = self.meta[i].pairs.clone();
+            for (kernel, tag) in pairs {
+                let Some((stored_s, recorded_at)) = self.mirror[i]
+                    .latest(&kernel, &tag)
+                    .map(|e| (e.best_time_s, e.recorded_at))
+                else {
+                    continue;
+                };
+                let noise = 0.95 + 0.1 * self.rng.next_f64();
+                let slow_at = self.slow_since.get(&i).copied();
+                // Entries tuned on the fast hardware are the ones that
+                // genuinely regressed; a post-slowdown retune already
+                // reflects the slow machine.
+                let factor = match slow_at {
+                    Some(at) if recorded_at < at => self.cfg.slow_factor_pm as f64 / 1000.0,
+                    _ => 1.0,
+                };
+                let observed_s = stored_s * noise * factor;
+                let key = self.mirror[i].platform_key.clone();
+                let (_, event) =
+                    self.sentinel.observe(&key, &kernel, &tag, observed_s, stored_s);
+                let Some(SentinelEvent::Confirmed {
+                    ratio_pm,
+                    window_n,
+                    window_mean_pm,
+                    window_max_pm,
+                }) = event
+                else {
+                    continue;
+                };
+                self.report.regressions_detected += 1;
+                match slow_at {
+                    Some(at) => {
+                        if self.detected.insert(i) {
+                            self.detection_latencies.push(now - at);
+                        }
+                    }
+                    // Confirmed on a platform that was never slowed:
+                    // the noise floor fired the detector.  The bench
+                    // gates this at exactly zero.
+                    None => self.report.regression_false_positives += 1,
+                }
+                self.audit(
+                    now,
+                    AuditEvent::Regression {
+                        platform: key.clone(),
+                        kernel: kernel.clone(),
+                        workload: tag.clone(),
+                        ratio_pm,
+                        window_n,
+                        window_mean_pm,
+                        window_max_pm,
+                    },
+                )?;
+                let task = TuningTask {
+                    kind: TaskKind::Retune,
+                    platform_key: key,
+                    kernel,
+                    tag: Some(tag),
+                    reason: StaleReason::Regression { ratio_pm },
+                    attempts: 0,
+                };
+                let (kind_s, platform_s, kernel_s, tag_s, reason_s) = (
+                    task.kind.as_str().to_string(),
+                    task.platform_key.clone(),
+                    task.kernel.clone(),
+                    task.tag.clone(),
+                    task.reason.as_str().to_string(),
+                );
+                if self.queue.enqueue_at(task, now) {
+                    self.report.tasks_enqueued += 1;
+                    self.audit(
+                        now,
+                        AuditEvent::TaskEnqueued {
+                            kind: kind_s,
+                            platform: platform_s,
+                            kernel: kernel_s,
+                            tag: tag_s,
+                            reason: reason_s,
+                        },
+                    )?;
+                }
+            }
         }
         Ok(())
     }
@@ -662,6 +908,13 @@ impl<'a> Fleet<'a> {
                 self.drift(i, now)?;
             }
         }
+        if let Some(idxs) = self.slow_events.get(&now).cloned() {
+            for i in idxs {
+                // The hardware is slower from this tick on; the store
+                // still holds bests measured on the fast machine.
+                self.slow_since.insert(i, now);
+            }
+        }
 
         if (now - self.start) % self.cfg.scan_every_s == 0 {
             let host = self.host.clone();
@@ -709,8 +962,8 @@ impl<'a> Fleet<'a> {
         for w in 0..self.cfg.workers {
             let state = std::mem::replace(&mut self.workers[w], WorkerState::Idle);
             self.workers[w] = match state {
-                WorkerState::Busy { lease_id, task, done_at } if now >= done_at => {
-                    self.finish(&task, lease_id, now)?;
+                WorkerState::Busy { lease_id, task, started, done_at } if now >= done_at => {
+                    self.finish(&task, lease_id, started, now)?;
                     WorkerState::Idle
                 }
                 WorkerState::Crashed { until } if now >= until => WorkerState::Idle,
@@ -741,7 +994,7 @@ impl<'a> Fleet<'a> {
                         // and only its TTL recovers the task.
                         WorkerState::Crashed { until: now + 45 }
                     } else {
-                        WorkerState::Busy { lease_id, task, done_at: now + secs }
+                        WorkerState::Busy { lease_id, task, started: now, done_at: now + secs }
                     };
                 }
             }
@@ -749,6 +1002,10 @@ impl<'a> Fleet<'a> {
 
         for _ in 0..poisson(self.cfg.traffic_per_s, &mut self.rng) {
             self.serve_one(now)?;
+        }
+
+        if (now - self.start) % self.cfg.telemetry_every_s.max(1) == 0 {
+            self.telemetry(now)?;
         }
 
         // Convergence: the cold backlog is fully refreshed.  The queue
@@ -771,7 +1028,8 @@ pub fn run(cfg: &SimConfig) -> Result<SimReport> {
         fleet.tick(now)?;
     }
 
-    let Fleet { db, audit, mirror, mut report, staleness, .. } = fleet;
+    let Fleet { db, audit, mirror, mut report, staleness, slow_since, detected, detection_latencies, .. } =
+        fleet;
     if report.executions > 0 {
         report.duplicate_rate = report.duplicates as f64 / report.executions as f64;
     }
@@ -779,6 +1037,13 @@ pub fn run(cfg: &SimConfig) -> Result<SimReport> {
     report.staleness_p95_s = staleness.quantile(0.95);
     report.staleness_p99_s = staleness.quantile(0.99);
     report.audit_entries = audit.appended();
+    report.slowdowns_undetected =
+        slow_since.keys().filter(|i| !detected.contains(i)).count() as u64;
+    if !detection_latencies.is_empty() {
+        report.detection_latency_mean_s = detection_latencies.iter().sum::<u64>() as f64
+            / detection_latencies.len() as f64;
+        report.detection_latency_max_s = detection_latencies.iter().copied().max().unwrap_or(0);
+    }
 
     // The run's own evidence must hold up before we report anything.
     let verified = verify_log(&cfg.audit_path)
@@ -800,6 +1065,24 @@ pub fn run(cfg: &SimConfig) -> Result<SimReport> {
         mirror.len(),
         mirror_entries
     );
+    // The ledger must have survived write-through exactly: the disk
+    // total is the sum of per-shard exact sums, so any lost delta
+    // shows up here as a shortfall against the mirror.
+    let (disk_spend, disk_benefit) = on_disk
+        .iter()
+        .map(|s| s.ledger.totals())
+        .fold((0u64, 0u64), |(a, b), (s, g)| (a + s, b + g));
+    let (mirror_spend, mirror_benefit) = mirror
+        .iter()
+        .map(|s| s.ledger.totals())
+        .fold((0u64, 0u64), |(a, b), (s, g)| (a + s, b + g));
+    anyhow::ensure!(
+        (disk_spend, disk_benefit) == (mirror_spend, mirror_benefit),
+        "ledger write-through mismatch: disk {disk_spend}/{disk_benefit} ms, \
+         mirror {mirror_spend}/{mirror_benefit} ms"
+    );
+    report.ledger_spend_ms = disk_spend;
+    report.ledger_benefit_ms = disk_benefit;
     Ok(report)
 }
 
@@ -860,6 +1143,47 @@ mod tests {
         for d in [ra, rb, rc] {
             std::fs::remove_dir_all(&d).ok();
         }
+    }
+
+    #[test]
+    fn seeded_slowdown_is_detected_with_zero_false_positives() {
+        let root = tmp("slow");
+        let mut cfg = SimConfig::smoke(&root, 23);
+        cfg.slow_platforms = 8;
+        let report = run(&cfg).unwrap();
+        assert_eq!(report.slow_platforms, 8, "{report:?}");
+        assert!(report.regressions_detected >= 1, "no slowdown detected: {report:?}");
+        assert_eq!(
+            report.regression_false_positives, 0,
+            "stationary noise fired the sentinel: {report:?}"
+        );
+        // Telemetry every 30s, 5-sample confirmation: detection lands
+        // within a handful of ticks of the injection.
+        assert!(
+            (1..=300).contains(&report.detection_latency_max_s),
+            "detection latency out of range: {report:?}"
+        );
+        assert!(report.detection_latency_mean_s >= 1.0, "{report:?}");
+        // The executions that refreshed the fleet billed real spend
+        // and booked real benefit into the on-disk ledgers.
+        assert!(report.ledger_spend_ms > 0 && report.ledger_benefit_ms > 0, "{report:?}");
+        // The evidence trail: a verifiable Regression event and an
+        // evidence-reason retune for each confirmation.
+        let entries = crate::service::audit::read_verified(&cfg.audit_path).unwrap();
+        let regressions = entries
+            .iter()
+            .filter(|e| matches!(&e.event, AuditEvent::Regression { .. }))
+            .count() as u64;
+        assert_eq!(regressions, report.regressions_detected, "{report:?}");
+        let evidence_retunes = entries
+            .iter()
+            .filter(|e| {
+                matches!(&e.event, AuditEvent::TaskEnqueued { reason, .. }
+                    if reason == "regression")
+            })
+            .count();
+        assert!(evidence_retunes >= 1, "no regression-reason retune queued: {report:?}");
+        std::fs::remove_dir_all(&root).ok();
     }
 
     #[test]

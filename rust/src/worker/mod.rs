@@ -382,12 +382,18 @@ impl Worker {
     /// `record`.  Returns the sweep and how many shapes were recorded
     /// (shared by the sweep and portfolio-rebuild task kinds).
     fn sweep_and_record(&self, task: &TuningTask) -> Result<(GemmSweep, usize)> {
+        let sweep_started = Instant::now();
         let sweep = sweep_native(&task.kernel, self.opts.quick, self.opts.seed, &self.host)?;
         let entries = sweep.entries(&self.host_key, "worker-sweep");
         let n = entries.len();
+        // Sweep cost is one wall-clock bill split evenly across the
+        // recorded shapes, so the ledger's spend matches what this
+        // machine actually burned regardless of shape count.
+        let spend_each_ms =
+            ((sweep_started.elapsed().as_millis() as u64) / (n.max(1) as u64)).max(1);
         for entry in entries {
             self.client
-                .record(entry, Some(self.host.clone()))
+                .record_with_spend(entry, Some(self.host.clone()), Some(spend_each_ms))
                 .context("recording sweep entry")?;
         }
         Ok((sweep, n))
@@ -402,14 +408,20 @@ impl Worker {
     /// Sweep, rebuild the portfolio, and report both.
     fn execute_rebuild(&self, task: &TuningTask) -> Result<String> {
         let (sweep, shapes) = self.sweep_and_record(task)?;
+        // Selection cost on top of the (already-billed) sweep: the
+        // timer starts after sweep_and_record so the ledger never sees
+        // the same wall clock twice.
+        let select_started = Instant::now();
         let built = sweep.matrix.build_portfolio(self.opts.k_max, self.opts.target)?;
         let k = built.len();
         let retained = built.retained;
+        let spend_ms = (select_started.elapsed().as_millis() as u64).max(1);
         self.client
             .call(&Request::RecordPortfolio {
                 platform: Some(self.host_key.clone()),
                 portfolio: Box::new(built),
                 fingerprint: Some(self.host.clone()),
+                spend_ms: Some(spend_ms),
             })
             .context("recording rebuilt portfolio")?;
         Ok(format!(
@@ -431,12 +443,22 @@ impl Worker {
             tuner.measure_cfg = MeasureConfig::quick();
         }
         let mut strategy = Exhaustive::new();
+        let tune_started = Instant::now();
         let outcome = tuner.tune(&task.kernel, tag, &mut strategy, usize::MAX)?;
+        // Spend = the tuner's own compile+measure accounting, wall
+        // clock as the stub-runtime fallback (TuneStats reports 0 ms
+        // there, but the machine was still busy).
+        let worked_ms = outcome.stats.compile_ms + outcome.stats.measure_ms;
+        let spend_ms = if worked_ms.is_finite() && worked_ms >= 1.0 {
+            worked_ms.round() as u64
+        } else {
+            (tune_started.elapsed().as_millis() as u64).max(1)
+        };
         let entry = tuner.entry_for(&outcome);
         let speedup = entry.speedup();
         let best = entry.best_config_id.clone();
         self.client
-            .record(entry, Some(outcome.platform.clone()))
+            .record_with_spend(entry, Some(outcome.platform.clone()), Some(spend_ms))
             .context("recording retune result")?;
         Ok(format!("retuned {}/{tag}: {best} ({speedup:.2}x)", task.kernel))
     }

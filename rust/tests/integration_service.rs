@@ -143,6 +143,7 @@ fn daemon_record_lookup_deploy_over_tcp() {
             request_id: None,
             entry: Box::new(entry("remote-box", "axpy", "n4096", "b512_u1", unix_now())),
             fingerprint: Some(fp(1024, &["avx2", "fma"])),
+            spend_ms: None,
         })
         .unwrap();
     assert_eq!(reply.get("recorded").and_then(Json::as_bool), Some(true));

@@ -1,0 +1,213 @@
+//! Adversarial properties of the core-hour ledger and the regression
+//! sentinel.
+//!
+//! The unit tests in `coordinator/ledger.rs` and `service/sentinel.rs`
+//! check hand-picked examples; these tests check the *space*: merge
+//! algebra over pseudo-random ledgers, exact integer sums under real
+//! 8-thread contention through the sharded store's locked commits
+//! (the `prop_obs.rs` discipline), break-even monotonicity in served
+//! volume, and the sentinel's no-false-positive contract on stationary
+//! streams across adversarial window boundaries.
+
+use std::collections::BTreeMap;
+
+use portatune::coordinator::ledger::{Ledger, LedgerDelta};
+use portatune::coordinator::perfdb::ShardedDb;
+use portatune::service::sentinel::{Sentinel, SentinelConfig};
+
+/// Deterministic 64-bit LCG (Knuth's MMIX constants) — no external rng
+/// crates, reproducible failures.
+struct Lcg(u64);
+
+impl Lcg {
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        self.0
+    }
+
+    /// Uniform in [0, 1).
+    fn next_f64(&mut self) -> f64 {
+        (self.next() >> 11) as f64 / (1u64 << 53) as f64
+    }
+}
+
+fn delta(kernel: &str, spend: u64, benefit: u64, inv: u64, at: u64) -> LedgerDelta {
+    LedgerDelta { kernel: kernel.into(), spend_ms: spend, benefit_ms: benefit, invocations: inv, at }
+}
+
+/// A pseudo-random ledger: a handful of kernels, bounded magnitudes so
+/// sums can never overflow, timestamps that exercise the 0-sentinel in
+/// `first_at`.
+fn random_ledger(rng: &mut Lcg) -> Ledger {
+    let mut l = Ledger::default();
+    for _ in 0..(1 + rng.next() % 6) {
+        let kernel = format!("k{}", rng.next() % 4);
+        l.apply(&delta(
+            &kernel,
+            rng.next() % 1_000_000,
+            rng.next() % 1_000_000,
+            rng.next() % 1_000,
+            rng.next() % 100, // often 0: the "never accrued" sentinel
+        ));
+    }
+    l
+}
+
+fn join(x: &Ledger, y: &Ledger) -> Ledger {
+    let mut out = x.clone();
+    out.merge(y);
+    out
+}
+
+#[test]
+fn merge_is_commutative_associative_idempotent_and_lossless() {
+    let mut rng = Lcg(0x1ed6_e21a_11_0c);
+    for _ in 0..200 {
+        let (a, b, c) = (random_ledger(&mut rng), random_ledger(&mut rng), random_ledger(&mut rng));
+        assert_eq!(join(&a, &b), join(&b, &a), "commutative");
+        assert_eq!(join(&join(&a, &b), &c), join(&a, &join(&b, &c)), "associative");
+        assert_eq!(join(&a, &a), a, "idempotent");
+        // Lossless: no input claim shrinks through a merge.
+        let m = join(&a, &b);
+        for side in [&a, &b] {
+            for (kernel, cell) in &side.cells {
+                let merged = m.cell(kernel).expect("merge dropped a kernel");
+                assert!(merged.spend_ms >= cell.spend_ms, "merge lost spend");
+                assert!(merged.benefit_ms >= cell.benefit_ms, "merge lost benefit");
+                assert!(merged.invocations >= cell.invocations, "merge lost invocations");
+                assert!(merged.updated_at >= cell.updated_at, "merge lost recency");
+            }
+        }
+        // Same-lineage monotone counters merge exactly: if b extends a
+        // (a's history is a prefix of b's), join(a, b) == b.
+        let mut extended = a.clone();
+        extended.apply(&delta("k0", 17, 5, 1, 500));
+        assert_eq!(
+            join(&a, &extended),
+            extended,
+            "a superset history must absorb its own prefix"
+        );
+    }
+}
+
+#[test]
+fn concurrent_recording_through_the_store_sums_exactly() {
+    const THREADS: u64 = 8;
+    const PER_THREAD: u64 = 24;
+    let dir = std::env::temp_dir()
+        .join(format!("portatune-prop-ledger-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let db = ShardedDb::open(&dir).unwrap();
+    let platform = "prop-ledger-box";
+
+    std::thread::scope(|scope| {
+        for t in 0..THREADS {
+            let db = &db;
+            scope.spawn(move || {
+                for i in 0..PER_THREAD {
+                    // Distinct per-delta magnitudes so a lost commit
+                    // would skew the totals, not just the count; two
+                    // kernels so cells contend too.
+                    let serial = t * PER_THREAD + i;
+                    let d = delta(
+                        if serial % 2 == 0 { "even" } else { "odd" },
+                        serial + 1,
+                        2 * (serial + 1),
+                        1,
+                        1_000 + serial,
+                    );
+                    db.apply_ledger(platform, vec![d]).unwrap();
+                }
+            });
+        }
+    });
+
+    let shard = db.load(platform).unwrap().expect("shard must exist after accrual");
+    let n = THREADS * PER_THREAD;
+    let expected_spend = n * (n + 1) / 2; // 1 + 2 + … + n, exactly
+    let (spend, benefit) = shard.ledger.totals();
+    assert_eq!(spend, expected_spend, "locked commits dropped spend");
+    assert_eq!(benefit, 2 * expected_spend, "locked commits dropped benefit");
+    let cells: BTreeMap<&str, u64> = shard
+        .ledger
+        .cells
+        .iter()
+        .map(|(k, c)| (k.as_str(), c.invocations))
+        .collect();
+    assert_eq!(cells.get("even"), Some(&(n / 2)));
+    assert_eq!(cells.get("odd"), Some(&(n / 2)));
+    // Every spend-carrying delta counted as exactly one tune.
+    let tunes: u64 = shard.ledger.cells.values().map(|c| c.tunes).sum();
+    assert_eq!(tunes, n, "tune count disagrees with the deltas applied");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn break_even_is_monotone_in_served_volume() {
+    let mut rng = Lcg(777);
+    for _ in 0..50 {
+        let mut l = Ledger::default();
+        // A tuning run pays up front (≤ 15_000ms: the 400 serves below
+        // at ≥ 50ms each are guaranteed to cover it) …
+        l.apply(&delta("gemm", 10_000 + rng.next() % 5_000, 0, 0, 100));
+        let mut prev_net = l.cell("gemm").unwrap().net_ms();
+        let mut was_even = false;
+        // … and served volume pays it back, one record at a time.
+        for step in 0..400 {
+            l.apply(&delta("gemm", 0, 50 + rng.next() % 500, 1 + rng.next() % 8, 200 + step));
+            let cell = l.cell("gemm").unwrap();
+            assert!(cell.net_ms() >= prev_net, "net position regressed as volume grew");
+            prev_net = cell.net_ms();
+            if was_even {
+                assert!(cell.break_even(), "break-even must not un-happen under more volume");
+            }
+            was_even = cell.break_even();
+            match cell.break_even_eta_s() {
+                Some(_) => assert!(!was_even, "an even cell must not project an ETA"),
+                None => {
+                    // Once benefit flows, the ETA exists until even.
+                    assert!(was_even || cell.benefit_ms == 0);
+                }
+            }
+        }
+        assert!(was_even, "400 serves at ≥50ms each must cover ≤15000ms spend");
+    }
+}
+
+#[test]
+fn sentinel_never_fires_on_stationary_streams_across_window_boundaries() {
+    let cfg = SentinelConfig::default();
+    let (window, min_samples) = (cfg.window, cfg.min_samples);
+    let mut sentinel = Sentinel::new(cfg);
+    let mut rng = Lcg(0xdead_beef);
+    let base = 1.0e-3;
+    // Stream lengths hugging every boundary the window logic has:
+    // under/at/over min_samples, under/at/over the window size, and a
+    // long soak — each on its own key, all pure ±10% stationary noise.
+    let lengths = [
+        1,
+        min_samples - 1,
+        min_samples,
+        min_samples + 1,
+        window - 1,
+        window,
+        window + 1,
+        2 * window,
+        2 * window + 1,
+        10_000,
+    ];
+    for (k, &len) in lengths.iter().enumerate() {
+        let tag = format!("case{k}");
+        for _ in 0..len {
+            let observed = base * (0.9 + 0.2 * rng.next_f64());
+            let (regressing, event) =
+                sentinel.observe("prop-box", "axpy", &tag, observed, base);
+            assert!(!regressing, "stationary noise flagged {tag}");
+            assert!(event.is_none(), "stationary noise fired an event on {tag}");
+        }
+        assert!(!sentinel.is_regressing("prop-box", "axpy", &tag));
+    }
+    assert_eq!(sentinel.active(), 0);
+    assert!(sentinel.regressing_keys().is_empty());
+}

@@ -157,6 +157,7 @@ fn lookup_storm_over_concurrent_recorders_sees_only_published_snapshots() {
                     entry: Box::new(entry("prop-box", &format!("cfg_t{t}_i{i}"), ts)),
                     fingerprint: None,
                     request_id: None,
+                    spend_ms: None,
                 });
                 assert_eq!(reply.get("recorded").and_then(Json::as_bool), Some(true));
                 let ack_gen = reply
@@ -247,6 +248,7 @@ fn generation_echo_orders_acks_and_reads() {
         entry: Box::new(entry("prop-box", "cfg_t0_i0", 1_700_000_010)),
         fingerprint: None,
         request_id: None,
+        spend_ms: None,
     });
     let g1 = ack1.get("gen").and_then(Json::as_u64).unwrap();
     assert_eq!(g1, 1);
@@ -262,6 +264,7 @@ fn generation_echo_orders_acks_and_reads() {
         entry: Box::new(entry("prop-box", "cfg_t0_i1", 1_700_000_020)),
         fingerprint: None,
         request_id: None,
+        spend_ms: None,
     });
     let g2 = ack2.get("gen").and_then(Json::as_u64).unwrap();
     assert!(g2 > g1);

@@ -120,12 +120,14 @@ fn prop_near_identical_outranks_disjoint_isa() {
                 fingerprint: Some(far),
                 entries: vec![entry("far-box", "axpy", "n4096", "far_cfg", far_speedup)],
                 portfolios: Vec::new(),
+                ledger: Default::default(),
             },
             Shard {
                 platform_key: "near-box".into(),
                 fingerprint: Some(near),
                 entries: vec![entry("near-box", "axpy", "n4096", "near_cfg", near_speedup)],
                 portfolios: Vec::new(),
+                ledger: Default::default(),
             },
         ];
         let ranked = rank_candidates(&shards, &target, "axpy", "n4096", "local-key");
@@ -164,7 +166,13 @@ fn prop_ranking_invariants() {
                 .collect();
             let fingerprint =
                 if rng.gen_range(4) == 0 { None } else { Some(random_fingerprint(&mut rng)) };
-            shards.push(Shard { platform_key: key, fingerprint, entries, portfolios: Vec::new() });
+            shards.push(Shard {
+                platform_key: key,
+                fingerprint,
+                entries,
+                portfolios: Vec::new(),
+                ledger: Default::default(),
+            });
         }
         let ranked = rank_candidates(&shards, &target, "axpy", "n4096", "box-0");
         for w in ranked.windows(2) {

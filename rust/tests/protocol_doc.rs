@@ -77,6 +77,7 @@ fn examples_cover_every_op() {
         "portfolio",
         "record",
         "record-portfolio",
+        "report",
         "retune-next",
         "shutdown",
         "stats",
@@ -125,6 +126,89 @@ fn documented_stats_keys_match_serve_stats_json() {
     assert!(checked >= 2, "spec lost its stats/counters payload examples");
 }
 
+/// The documented `report` payload cannot drift from the implemented
+/// one: a real snapshot (one shard with a ledger cell, one flagged
+/// regression) answers `report_reply`, and every object level — the
+/// report envelope, the per-kernel row, the totals, the regression
+/// listing — must carry exactly the keys the spec's example shows.
+#[test]
+fn documented_report_payload_matches_report_reply() {
+    use portatune::coordinator::ledger::LedgerDelta;
+    use portatune::coordinator::perfdb::Shard;
+    use portatune::service::ServeSnapshot;
+    use std::collections::{BTreeSet, HashSet};
+
+    let mut shard = Shard {
+        platform_key: "doc-box".into(),
+        fingerprint: None,
+        entries: Vec::new(),
+        portfolios: Vec::new(),
+        ledger: Default::default(),
+    };
+    shard.ledger.apply(&LedgerDelta {
+        kernel: "axpy".into(),
+        spend_ms: 1000,
+        benefit_ms: 250,
+        invocations: 5,
+        at: 100,
+    });
+    let flagged: HashSet<_> =
+        [("doc-box".to_string(), "axpy".to_string(), "n4096".to_string())].into();
+    let live = ServeSnapshot::build(vec![shard], 7)
+        .with_regressions(flagged)
+        .report_reply(None);
+
+    let keys = |v: &Json| -> BTreeSet<String> {
+        match v {
+            Json::Obj(map) => map.keys().cloned().collect(),
+            other => panic!("expected an object, got {other:?}"),
+        }
+    };
+    // (mandatory key sets, regression-row keys when the example shows one)
+    let shape = |v: &Json| -> ([BTreeSet<String>; 3], Option<BTreeSet<String>>) {
+        let report = v.get("report").expect("report replies carry a report payload");
+        let platform = report.get("platforms").and_then(Json::as_arr).and_then(|a| a.first())
+            .expect("report payload lists at least one platform");
+        let kernel = platform.get("kernels").and_then(Json::as_arr).and_then(|a| a.first())
+            .expect("platform listing carries at least one kernel row");
+        let regression =
+            report.get("regressions").and_then(Json::as_arr).and_then(|a| a.first()).map(&keys);
+        (
+            [
+                keys(report),
+                keys(kernel),
+                keys(report.get("totals").expect("report payload carries totals")),
+            ],
+            regression,
+        )
+    };
+
+    let (implemented, implemented_regression) = shape(&live);
+    let implemented_regression =
+        implemented_regression.expect("the live snapshot carries a flagged key");
+    let mut checked = 0;
+    let mut regression_rows = 0;
+    for line in example_lines("S: ") {
+        let v = json::parse(&line).expect("example lines are JSON");
+        if v.get("report").is_none() {
+            continue;
+        }
+        let (documented, regression) = shape(&v);
+        assert_eq!(
+            documented, implemented,
+            "the documented report payload has drifted from \
+             ServeSnapshot::report_reply — update docs/PROTOCOL.md or snapshot.rs"
+        );
+        if let Some(regression) = regression {
+            assert_eq!(regression, implemented_regression, "regression row drifted");
+            regression_rows += 1;
+        }
+        checked += 1;
+    }
+    assert!(checked >= 1, "spec lost its report payload example");
+    assert!(regression_rows >= 1, "spec lost its regression-row example");
+}
+
 /// Generation echoes cannot drift out of the spec: every documented
 /// reply on the snapshot path — the three read ops and the two record
 /// acks — must carry the snapshot generation as an unsigned `gen`
@@ -133,8 +217,8 @@ fn documented_stats_keys_match_serve_stats_json() {
 /// `C:` op it answers.
 #[test]
 fn documented_snapshot_replies_echo_a_generation() {
-    const SNAPSHOT_OPS: [&str; 5] =
-        ["lookup", "deploy", "portfolio", "record", "record-portfolio"];
+    const SNAPSHOT_OPS: [&str; 6] =
+        ["lookup", "deploy", "portfolio", "record", "record-portfolio", "report"];
     let mut with_gen = 0;
     let mut last_op = String::new();
     for line in spec_text().lines().map(str::trim) {
